@@ -1,0 +1,122 @@
+//! End-to-end three-layer driver — the system-composition proof.
+//!
+//! Workload: a scale-free (Barabási–Albert) directed graph, the degree
+//! distribution the paper's Section 9 targets. The full VDMC pipeline runs
+//! with the L1/L2 AOT artifacts on the hot path:
+//!
+//!   1. L3 Rust enumerates proper k-BFS instances (each motif once),
+//!      streaming (vertex-tuple, raw-id) batches;
+//!   2. every batch runs through the `pipeline{k}` PJRT artifact —
+//!      the Pallas scatter-count (one-hot matmul) + isomorph-projection
+//!      matmul lowered from JAX;
+//!   3. per-vertex canonical counts accumulate across batches/blocks;
+//!   4. results are cross-checked against the pure-Rust coordinator and
+//!      the Eq. 7.4 theory artifact, and the undirected-3-motif columns
+//!      against the `dense3` matrix-baseline artifact.
+//!
+//! Requires `make artifacts`.
+//!
+//!     cargo run --release --example pjrt_pipeline [n] [m]
+
+use std::time::Instant;
+
+use vdmc::coordinator::{count_motifs, stream_instances, CountConfig};
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::runtime::exec::{padded_classes, ArtifactRunner, CountAggregator, BATCH};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let n: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(400);
+    let m: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(3);
+
+    println!("== end-to-end: BA({n}, {m}) directed, VDMC over PJRT ==");
+    let g = generators::barabasi_albert_directed(n, m, 0.25, 7);
+    let max_deg = (0..g.n() as u32).map(|v| g.und_degree(v)).max().unwrap_or(0);
+    println!("graph: n={} m={} max-degree={} (scale-free)", g.n(), g.m(), max_deg);
+
+    let runner = ArtifactRunner::from_default_dir()?;
+    println!("PJRT platform: {}", runner.platform());
+
+    for (size, k) in [(MotifSize::Three, 3usize), (MotifSize::Four, 4usize)] {
+        println!("\n-- {k}-motifs --");
+
+        // (1)+(2)+(3): stream enumeration through the pipeline artifact
+        let t0 = Instant::now();
+        let mut agg = CountAggregator::new(&runner, k, g.n());
+        let mut enum_secs = 0.0;
+        let mut exec_secs = 0.0;
+        let mut t_enum = Instant::now();
+        let total = stream_instances(&g, size, Direction::Directed, true, BATCH, |verts, slots| {
+            enum_secs += t_enum.elapsed().as_secs_f64();
+            let t_exec = Instant::now();
+            agg.push_batch(verts, slots).expect("pipeline execute");
+            exec_secs += t_exec.elapsed().as_secs_f64();
+            t_enum = Instant::now();
+        })?;
+        let batches = agg.batches();
+        let pjrt_counts = agg.finish();
+        let pjrt_total = t0.elapsed().as_secs_f64();
+        println!(
+            "  PJRT path: {total} instances in {batches} batches -> {:.3}s \
+             (enumerate {enum_secs:.3}s, artifact exec {exec_secs:.3}s)",
+            pjrt_total
+        );
+
+        // (4a) cross-check against the pure-Rust coordinator
+        let t1 = Instant::now();
+        let rust_counts =
+            count_motifs(&g, &CountConfig { size, direction: Direction::Directed, ..Default::default() })?;
+        println!(
+            "  Rust coordinator: {} instances in {:.3}s",
+            rust_counts.total_instances,
+            t1.elapsed().as_secs_f64()
+        );
+        anyhow::ensure!(total == rust_counts.total_instances, "instance totals diverge");
+        let c_pad = padded_classes(k);
+        let nc = rust_counts.n_classes;
+        let mut mismatches = 0usize;
+        for v in 0..g.n() {
+            for s in 0..nc {
+                if pjrt_counts[v * c_pad + s] != rust_counts.per_vertex[v * nc + s] {
+                    mismatches += 1;
+                }
+            }
+        }
+        anyhow::ensure!(mismatches == 0, "{mismatches} per-vertex count mismatches");
+        println!("  cross-check: per-vertex counts IDENTICAL across {} cells", g.n() * nc);
+
+        // (4b) theory artifact sanity on the headline class totals
+        let (dir_row, _) = runner.theory(k, g.n() as f32, (g.m() as f32) / (g.n() as f32 * (g.n() - 1) as f32))?;
+        let theory_total: f32 = dir_row.iter().sum();
+        println!(
+            "  theory artifact (G(n,p̂) reference): Σ E[X] = {theory_total:.1} per vertex \
+             — scale-free graphs exceed this (hubs), observed mean = {:.1}",
+            rust_counts.per_vertex.iter().sum::<u64>() as f64 / g.n() as f64
+        );
+    }
+
+    // (4c) dense matrix baseline artifact vs enumeration (undirected 3-motifs)
+    println!("\n-- dense3 matrix-baseline artifact cross-check --");
+    let nb = 256usize; // artifact's baked size
+    let gb = generators::barabasi_albert(nb, 3, 11);
+    let mut adj = vec![0f32; nb * nb];
+    for (u, v) in gb.und.edges() {
+        adj[u as usize * nb + v as usize] = 1.0;
+    }
+    let dense = runner.dense3(&adj)?;
+    let und = count_motifs(
+        &gb,
+        &CountConfig { size: MotifSize::Three, direction: Direction::Undirected, ..Default::default() },
+    )?;
+    let mut ok = true;
+    for v in 0..nb {
+        ok &= dense[v * 2] as u64 == und.vertex(v as u32)[0];
+        ok &= dense[v * 2 + 1] as u64 == und.vertex(v as u32)[1];
+    }
+    anyhow::ensure!(ok, "dense3 disagrees with enumeration");
+    println!("  dense3 (PJRT) == enumeration for all {nb} vertices: OK");
+
+    println!("\nAll three layers compose: L3 enumeration -> L1/L2 artifacts -> counts verified.");
+    Ok(())
+}

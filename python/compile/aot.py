@@ -1,0 +1,103 @@
+"""AOT export: lower every L2 graph to HLO *text* + dump lookup tables.
+
+HLO text (NOT ``lowered.compile()`` / proto ``.serialize()``) is the
+interchange format: jax >= 0.5 emits HloModuleProto with 64-bit instruction
+ids which xla_extension 0.5.1 (the version behind the rust ``xla`` crate)
+rejects; the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs (all under --out, default ../artifacts):
+  <name>.hlo.txt     one per artifact in model.build_specs()
+  manifest.tsv       name, file, input dtypes/shapes, output dtype/shape
+  iso{3,4}.tsv       raw id -> canonical id, connectivity, class slot
+  classes{3,4}.tsv   class slot -> canonical id, n_iso, n_edges, symmetric,
+                     n_iso_sym  (cross-checked against rust motifs::iso)
+
+Run via ``make artifacts`` (no-op when sources are older than the stamp).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .motif_tables import tables
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    `print_large_constants=True` is load-bearing: the default printer
+    elides big literals as `constant({...})`, and the xla_extension 0.5.1
+    text parser silently reads those back as zeros — which zeroed out every
+    artifact with a baked projection/lookup table.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax 0.8 metadata carries source_end_line/col attributes that the
+    # 0.5.1 text parser rejects — strip metadata entirely.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def _fmt_shape(s) -> str:
+    dt = jax.numpy.dtype(s.dtype).name
+    dims = ",".join(str(d) for d in s.shape)
+    return f"{dt}[{dims}]"
+
+
+def export_all(out_dir: str) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_rows = []
+    for name, (fn, args) in sorted(model.build_specs().items()):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_spec = jax.eval_shape(fn, *args)
+        ins = ";".join(_fmt_shape(a) for a in args)
+        outs = _fmt_shape(out_spec)
+        manifest_rows.append(f"{name}\t{fname}\t{ins}\t{outs}")
+        print(f"  {name:12s} in=({ins}) out={outs} [{len(text)} chars]")
+
+    with open(os.path.join(out_dir, "manifest.tsv"), "w") as f:
+        f.write("# name\tfile\tinputs\toutput\n")
+        f.write("\n".join(manifest_rows) + "\n")
+
+    for k in (3, 4):
+        t = tables(k)
+        with open(os.path.join(out_dir, f"iso{k}.tsv"), "w") as f:
+            f.write("# raw_id\tcanonical_id\tconnected\tclass_slot\n")
+            for m in range(t.n_ids):
+                f.write(
+                    f"{m}\t{int(t.canon[m])}\t{int(t.connected[m])}\t{int(t.class_slot[m])}\n"
+                )
+        with open(os.path.join(out_dir, f"classes{k}.tsv"), "w") as f:
+            f.write("# slot\tcanonical_id\tn_iso\tn_edges\tsymmetric\tn_iso_sym\n")
+            for s in range(t.n_classes):
+                f.write(
+                    f"{s}\t{int(t.class_ids[s])}\t{int(t.n_iso[s])}\t"
+                    f"{int(t.n_edges[s])}\t{int(t.symmetric[s])}\t{int(t.n_iso_sym[s])}\n"
+                )
+    return manifest_rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact output directory")
+    args = ap.parse_args()
+    rows = export_all(args.out)
+    print(f"exported {len(rows)} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""Pallas kernel: isomorph combination as a blocked projection matmul.
+
+The paper combines isomorphic motif ids "only once at the end of the
+counting process" by summing every raw id into the minimal id of its
+isomorphism class. For per-vertex counts that is the matmul
+
+    canonical (R x C) = hist (R x n_ids) @ P (n_ids x C)
+
+with P the 0/1 projection from motif_tables.MotifTables.projection (row r
+one-hot at the class slot of raw id r, all-zero for disconnected ids).
+
+Blocked matmul with a (rows, classes) output grid; each tile contracts the
+FULL n_ids dimension in one MXU pass. n_ids is 64 (k=3) or 4096 (k=4); C is
+13 or 199 (padded to 128/256), so the widest tile set — (128×4096) hist
+slab + (4096×128) P slab + (128×128) out — is ~4.2 MB of VMEM, comfortably
+under a TPU core's ~16 MB.
+
+Note on structure: an earlier revision used a 3-D grid with k-step
+accumulation into the output tile (`@pl.when(kk == 0)` zeroing). That is
+the canonical Pallas matmul shape on real hardware, but the revisited
+output tile does not survive the HLO-text interchange required by
+xla_extension 0.5.1 (the accumulation loop compiles to zeros on the
+re-parsed module). A single-pass contraction per output tile sidesteps the
+construct entirely — see DESIGN.md §Hardware-Adaptation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+__all__ = ["aggregate", "pad_classes", "DEFAULT_BLOCK_R", "DEFAULT_BLOCK_C", "DEFAULT_BLOCK_K"]
+
+DEFAULT_BLOCK_R = 128  # histogram rows (vertices) per tile
+DEFAULT_BLOCK_C = 128  # canonical classes per tile
+
+
+def pad_classes(projection: np.ndarray, multiple: int = DEFAULT_BLOCK_C) -> np.ndarray:
+    """Pad the class dimension of P up to a tile multiple with zero columns."""
+    n_ids, n_classes = projection.shape
+    padded = ((n_classes + multiple - 1) // multiple) * multiple
+    out = np.zeros((n_ids, padded), dtype=np.float32)
+    out[:, :n_classes] = projection
+    return out
+
+
+def _kernel(hist_ref, proj_ref, out_ref):
+    """Single-pass matmul tile: out[i, j] = hist[i, :] @ proj[:, j]."""
+    out_ref[...] = jax.lax.dot_general(
+        hist_ref[...],
+        proj_ref[...],
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+def aggregate(
+    hist: jnp.ndarray,
+    projection: jnp.ndarray,
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    block_c: int = DEFAULT_BLOCK_C,
+    block_k: int | None = None,  # kept for API compat; full-K contraction
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """hist (R, n_ids) @ projection (n_ids, C_pad) -> (R, C_pad), tiled."""
+    del block_k
+    r, n_ids = hist.shape
+    n_ids_p, c_pad = projection.shape
+    if n_ids != n_ids_p:
+        raise ValueError(f"hist ids {n_ids} != projection ids {n_ids_p}")
+    if r % block_r or c_pad % block_c:
+        raise ValueError(
+            f"shapes ({r},{n_ids})x({n_ids_p},{c_pad}) not tileable by ({block_r},{block_c})"
+        )
+
+    grid = (r // block_r, c_pad // block_c)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, n_ids), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_ids, block_c), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_r, block_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c_pad), jnp.float32),
+        interpret=interpret,
+    )(hist.astype(jnp.float32), projection.astype(jnp.float32))

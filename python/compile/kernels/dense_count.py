@@ -1,0 +1,67 @@
+"""Pallas kernel: matrix-based per-vertex undirected 3-motif baseline.
+
+The paper's taxonomy (Section 1) lists "matrix based approaches" that count
+undirected sub-graphs by dense linear algebra; VDMC's enumeration is compared
+against that family. This kernel is our in-repo representative of the family
+(used by rust/src/baselines/matrix.rs through the AOT artifact):
+
+    triangles_v = rowsum((A @ A) * A) / 2
+    paths_v     = C(d_v, 2) - t_v + (A @ (d - 1))_v - 2 t_v
+
+Tiled over row blocks; every tile multiplies its (block_r x n) row slab with
+the full matrix, which for the artifact sizes (n <= 1024) keeps the slab and
+operand comfortably within a TPU core's ~16 MB VMEM (see EXPERIMENTS.md
+§Perf-estimates for the footprint table).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["dense_count3", "DEFAULT_BLOCK_R"]
+
+DEFAULT_BLOCK_R = 128
+
+
+def _kernel(rows_ref, full_ref, out_ref):
+    rows = rows_ref[...]  # (block_r, n) row slab of A
+    full = full_ref[...]  # (n, n) all of A
+
+    a2 = jax.lax.dot_general(
+        rows, full, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (block_r, n)
+    tri = (a2 * rows).sum(axis=1) / 2.0
+    deg_full = full.sum(axis=1)  # (n,)
+    deg_rows = rows.sum(axis=1)  # (block_r,)
+    centre = deg_rows * (deg_rows - 1.0) / 2.0 - tri
+    endpoint = rows @ (deg_full - 1.0) - 2.0 * tri
+    out_ref[...] = jnp.stack([centre + endpoint, tri], axis=1)
+
+
+def dense_count3(
+    adj: jnp.ndarray,
+    *,
+    block_r: int = DEFAULT_BLOCK_R,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-vertex [paths, triangles] counts of a symmetric 0/1 matrix."""
+    n, n2 = adj.shape
+    if n != n2:
+        raise ValueError(f"adjacency must be square, got {adj.shape}")
+    block_r = min(block_r, n)
+    if n % block_r:
+        raise ValueError(f"n={n} not a multiple of block_r={block_r}")
+
+    return pl.pallas_call(
+        _kernel,
+        grid=(n // block_r,),
+        in_specs=[
+            pl.BlockSpec((block_r, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, n), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_r, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 2), jnp.float32),
+        interpret=interpret,
+    )(adj.astype(jnp.float32), adj.astype(jnp.float32))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the L1 Pallas kernels.
+
+Every Pallas kernel in this package has an exact reference here; pytest
+(python/tests/test_kernels.py) asserts allclose between kernel and oracle
+over a hypothesis sweep of shapes/contents. The oracles are also what the
+semantics *mean* — the kernels are only reformulations for the MXU.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["scatter_count_ref", "aggregate_ref", "dense_count3_ref"]
+
+
+def scatter_count_ref(verts: jnp.ndarray, slots: jnp.ndarray, n_block: int, n_ids: int) -> jnp.ndarray:
+    """Histogram of motif instances per (vertex, raw id).
+
+    verts: (B, k) int32 vertex ids in [0, n_block); negative = padding.
+    slots: (B,)   int32 raw motif ids in [0, n_ids); negative = padding.
+    Returns (n_block, n_ids) float32: out[v, m] = number of instances with
+    raw id m that contain vertex v. This is the GPU ``atomicAdd`` of the
+    paper's Appendix I, expressed as V^T @ S (see scatter_count.py).
+    """
+    valid = (slots >= 0)[:, None].astype(jnp.float32)  # (B, 1)
+    # (B, k, n_block) one-hot over vertices, summed over the k positions.
+    v_onehot = (verts[:, :, None] == jnp.arange(n_block)[None, None, :]).astype(jnp.float32)
+    v_mat = v_onehot.sum(axis=1) * valid  # (B, n_block)
+    s_mat = (slots[:, None] == jnp.arange(n_ids)[None, :]).astype(jnp.float32)  # (B, n_ids)
+    return v_mat.T @ s_mat
+
+
+def aggregate_ref(hist: jnp.ndarray, projection: jnp.ndarray) -> jnp.ndarray:
+    """Combine isomorphs: raw-id histogram (R, n_ids) x 0/1 projection
+    (n_ids, n_classes) -> canonical per-vertex counts (R, n_classes)."""
+    return hist @ projection
+
+
+def dense_count3_ref(adj: jnp.ndarray) -> jnp.ndarray:
+    """Matrix-based per-vertex undirected 3-motif counts (baseline).
+
+    adj: (n, n) symmetric 0/1 float32 with zero diagonal.
+    Returns (n, 2) float32: column 0 = open paths (2-edge 3-motifs)
+    containing v, column 1 = triangles containing v.
+
+    triangles_v  = rowsum(A^2 * A) / 2
+    paths_v      = C(d_v, 2) - t_v            (v is the centre)
+                 + A @ (d - 1) - 2 t_v        (v is an endpoint)
+    """
+    a2 = adj @ adj
+    tri = (a2 * adj).sum(axis=1) / 2.0
+    deg = adj.sum(axis=1)
+    centre = deg * (deg - 1.0) / 2.0 - tri
+    endpoint = adj @ (deg - 1.0) - 2.0 * tri
+    return jnp.stack([centre + endpoint, tri], axis=1)

@@ -1,0 +1,99 @@
+"""Pallas kernel: motif-instance stream -> per-vertex raw-id histogram.
+
+Paper Appendix I updates ``count[v][motif]`` with CUDA ``atomicAdd`` from a
+2-D grid of thread blocks. Scattered atomics are the pathological case for a
+TPU, so the update is *re-expressed as a matmul* (DESIGN.md
+§Hardware-Adaptation): for a batch of B enumerated instances build
+
+    V in {0,1}^(B x n_block)   V[b, v] = [vertex v participates in instance b]
+    S in {0,1}^(B x n_ids)     S[b, m] = [instance b has raw motif id m]
+
+and the histogram update is ``V^T @ S`` — a single pass through the MXU
+systolic array instead of B*k scattered writes.
+
+The grid tiles the *output* (vertex-block x id-block); every tile streams the
+full instance batch through VMEM once, building only the one-hot slices it
+needs. Padding rows carry ``slot = -1`` and vanish through the validity mask.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["scatter_count", "DEFAULT_BLOCK_V", "DEFAULT_BLOCK_I"]
+
+# Tile sizes for the (vertex, id) output grid. 128 matches the MXU systolic
+# dimension; the id tile is wider because n_ids (4096 for k=4) dominates and
+# the S one-hot slice is the cheap operand to rebuild.
+DEFAULT_BLOCK_V = 128
+DEFAULT_BLOCK_I = 512
+
+
+def _kernel(verts_ref, slots_ref, out_ref, *, block_v: int, block_i: int, k: int):
+    """One (vertex-tile i, id-tile j) output block: out = V_i^T @ S_j."""
+    vi = pl.program_id(0)
+    ii = pl.program_id(1)
+    verts = verts_ref[...]  # (B, k) int32, full batch
+    slots = slots_ref[...]  # (B,)   int32, full batch
+
+    v_base = vi * block_v
+    i_base = ii * block_i
+
+    valid = (slots >= 0).astype(jnp.float32)[:, None]  # (B, 1)
+
+    # V slice: (B, block_v). Sum of k one-hots; a vertex appearing once per
+    # instance (guaranteed by the enumerator) keeps entries in {0, 1}.
+    v_ids = v_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_v), 1)
+    v_mat = (verts[:, :, None] == v_ids[None, :, :]).astype(jnp.float32).sum(axis=1)
+    v_mat = v_mat * valid
+
+    # S slice: (B, block_i) one-hot of the raw motif id.
+    i_ids = i_base + jax.lax.broadcasted_iota(jnp.int32, (1, block_i), 1)
+    s_mat = (slots[:, None] == i_ids).astype(jnp.float32)
+
+    out_ref[...] = jax.lax.dot_general(
+        v_mat,
+        s_mat,
+        (((0,), (0,)), ((), ())),  # contract over the batch dimension
+        preferred_element_type=jnp.float32,
+    )
+
+
+def scatter_count(
+    verts: jnp.ndarray,
+    slots: jnp.ndarray,
+    *,
+    n_block: int,
+    n_ids: int,
+    block_v: int = DEFAULT_BLOCK_V,
+    block_i: int = DEFAULT_BLOCK_I,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Per-vertex raw-id histogram of a batch of enumerated motif instances.
+
+    verts: (B, k) int32, vertex ids local to this n_block-sized chunk.
+    slots: (B,)   int32, raw motif ids; ``-1`` marks padding rows.
+    Returns (n_block, n_ids) float32 histogram (see ref.scatter_count_ref).
+    """
+    b, k = verts.shape
+    if slots.shape != (b,):
+        raise ValueError(f"slots shape {slots.shape} != ({b},)")
+    if n_block % block_v or n_ids % block_i:
+        raise ValueError("n_block / n_ids must be multiples of the tile sizes")
+
+    grid = (n_block // block_v, n_ids // block_i)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_v=block_v, block_i=block_i, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, k), lambda vi, ii: (0, 0)),
+            pl.BlockSpec((b,), lambda vi, ii: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_v, block_i), lambda vi, ii: (vi, ii)),
+        out_shape=jax.ShapeDtypeStruct((n_block, n_ids), jnp.float32),
+        interpret=interpret,
+    )(verts.astype(jnp.int32), slots.astype(jnp.int32))

@@ -1,0 +1,151 @@
+"""L2: the JAX compute graphs that get AOT-lowered to PJRT artifacts.
+
+Each public function here is a closed jit-able graph over fixed shapes
+(the shapes are part of the artifact contract in artifacts/manifest.tsv).
+They compose the L1 Pallas kernels with the motif tables; nothing here runs
+at serve time — rust/src/runtime/ loads the lowered HLO once and executes it
+from the L3 hot path.
+
+Artifact inventory (built by aot.py):
+
+  pipeline3 / pipeline4   instance stream -> canonical per-vertex counts
+                          (scatter_count -> aggregate, the GPU-appendix path)
+  aggregate3 / aggregate4 raw-id histogram -> canonical per-vertex counts
+                          (isomorph combination for the Rust enumerator)
+  dense3                  adjacency -> per-vertex undirected 3-motif counts
+                          (the "matrix-based methods" baseline)
+  theory3 / theory4       (n, p) -> Eq. 7.4 expected counts per class,
+                          row 0 directed / row 1 undirected (Fig. 3 theory)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .motif_tables import MotifTables, n_bits, tables
+from .kernels.aggregate import aggregate, pad_classes
+from .kernels.dense_count import dense_count3
+from .kernels.scatter_count import scatter_count
+
+__all__ = [
+    "BATCH",
+    "N_VERT_BLOCK",
+    "DENSE_N",
+    "padded_classes",
+    "count_pipeline",
+    "aggregate_hist",
+    "dense3",
+    "theory",
+]
+
+# Artifact shape contract (mirrored in rust/src/runtime/artifacts.rs).
+BATCH = 2048        # instances per pipeline execution
+N_VERT_BLOCK = 512  # vertices per histogram chunk
+DENSE_N = 256       # adjacency size of the dense baseline artifact
+
+
+def padded_classes(k: int) -> int:
+    """Class-dimension padding of the aggregate/pipeline/theory artifacts."""
+    return 128 if k == 3 else 256
+
+
+def _projection(k: int) -> jnp.ndarray:
+    t = tables(k)
+    return jnp.asarray(pad_classes(t.projection, padded_classes(k)))
+
+
+def count_pipeline(verts: jnp.ndarray, slots: jnp.ndarray, *, k: int) -> jnp.ndarray:
+    """Enumerated instance batch -> canonical per-vertex counts.
+
+    verts (BATCH, k) i32 chunk-local vertex ids, slots (BATCH,) i32 raw ids
+    (-1 pads). Returns (N_VERT_BLOCK, padded_classes(k)) f32.
+    """
+    n_ids = 1 << n_bits(k)
+    hist = scatter_count(
+        verts, slots, n_block=N_VERT_BLOCK, n_ids=n_ids, block_i=min(512, n_ids)
+    )
+    return aggregate(hist, _projection(k), block_k=min(512, n_ids))
+
+
+def aggregate_hist(hist: jnp.ndarray, *, k: int) -> jnp.ndarray:
+    """Raw-id histogram (N_VERT_BLOCK, n_ids) -> canonical counts."""
+    n_ids = 1 << n_bits(k)
+    return aggregate(hist, _projection(k), block_k=min(512, n_ids))
+
+
+def dense3(adj: jnp.ndarray) -> jnp.ndarray:
+    """Matrix-based baseline over a (DENSE_N, DENSE_N) symmetric adjacency."""
+    return dense_count3(adj)
+
+
+def _log_choose(n: jnp.ndarray, k: int) -> jnp.ndarray:
+    """log C(n, k) via lgamma, for scalar (traced) n."""
+    lgamma = jax.lax.lgamma
+    return lgamma(n + 1.0) - lgamma(jnp.float32(k + 1.0)) - lgamma(n - k + 1.0)
+
+
+def theory(n: jnp.ndarray, p: jnp.ndarray, *, k: int) -> jnp.ndarray:
+    """Eq. 7.4: E[X_{k,m}(i)] for every canonical class m of size k.
+
+    n, p: f32 scalars (vertex count and edge probability of G(n, p)).
+    Returns (2, padded_classes(k)) f32: row 0 is the directed expectation,
+    row 1 the undirected one (classes that cannot occur in the given
+    direction mode, and padding columns, are 0).
+
+        E[X] = C(n-1, k-1) * N_iso(m) * p^{n_e} * (1-p)^{n_max - n_e}
+    """
+    t: MotifTables = tables(k)
+    c_pad = padded_classes(k)
+
+    log_comb = _log_choose(n - 1.0, k - 1)
+    log_p = jnp.log(p)
+    log_q = jnp.log1p(-p)
+
+    def expectation(n_iso: np.ndarray, n_edges: np.ndarray, n_max: int) -> jnp.ndarray:
+        n_iso = jnp.asarray(n_iso, dtype=jnp.float32)
+        n_edges = jnp.asarray(n_edges, dtype=jnp.float32)
+        log_e = (
+            log_comb
+            + jnp.log(jnp.where(n_iso > 0, n_iso, 1.0))
+            + n_edges * log_p
+            + (n_max - n_edges) * log_q
+        )
+        return jnp.where(n_iso > 0, jnp.exp(log_e), 0.0)
+
+    directed = expectation(t.n_iso, t.n_edges, k * (k - 1))
+    undirected = expectation(t.n_iso_sym, t.n_edges // 2, k * (k - 1) // 2)
+
+    # pad + stack (NOT .at[].set: the scatter it lowers to does not survive
+    # the HLO-text interchange of xla_extension 0.5.1 — see DESIGN.md)
+    pad = c_pad - t.n_classes
+    return jnp.stack(
+        [jnp.pad(directed, (0, pad)), jnp.pad(undirected, (0, pad))], axis=0
+    )
+
+
+def build_specs() -> dict[str, tuple]:
+    """(fn, example_args) for every artifact; consumed by aot.py."""
+    f32 = jnp.float32
+    i32 = jnp.int32
+    s = jax.ShapeDtypeStruct
+    specs: dict[str, tuple] = {}
+    for k in (3, 4):
+        n_ids = 1 << n_bits(k)
+        specs[f"pipeline{k}"] = (
+            functools.partial(count_pipeline, k=k),
+            (s((BATCH, k), i32), s((BATCH,), i32)),
+        )
+        specs[f"aggregate{k}"] = (
+            functools.partial(aggregate_hist, k=k),
+            (s((N_VERT_BLOCK, n_ids), f32),),
+        )
+        specs[f"theory{k}"] = (
+            functools.partial(theory, k=k),
+            (s((), f32), s((), f32)),
+        )
+    specs["dense3"] = (dense3, (s((DENSE_N, DENSE_N), f32),))
+    return specs

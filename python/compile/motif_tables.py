@@ -1,0 +1,221 @@
+"""Motif index / isomorphism tables for VDMC (paper Fig. 1, Section 4.1).
+
+A k-motif over vertices (v_0 .. v_{k-1}) in a fixed order is encoded as the
+bit-string of its k x k adjacency matrix, row-major, skipping the diagonal,
+MSB first (paper Fig. 1: [[-,1,1],[0,-,1],[0,1,-]] -> 110101 -> 53). The
+*canonical* id of a motif is the minimum id over all k! vertex permutations
+(53 -> 30 in the figure).
+
+These tables are the single source of truth for the L1 Pallas kernels (the
+isomorph projection matrix is baked into the aggregate artifact) and are
+dumped to ``artifacts/iso{3,4}.tsv`` so the independent Rust implementation
+in ``rust/src/motifs/iso.rs`` can be cross-checked against them.
+
+Everything here is plain numpy: it runs once at AOT-compile time.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+__all__ = [
+    "n_bits",
+    "id_to_matrix",
+    "matrix_to_id",
+    "permute_id",
+    "canonical_id",
+    "is_weakly_connected",
+    "MotifTables",
+    "tables",
+]
+
+
+def n_bits(k: int) -> int:
+    """Number of off-diagonal bits in a k x k adjacency matrix."""
+    return k * (k - 1)
+
+
+def _bit_positions(k: int) -> list[tuple[int, int]]:
+    """Row-major (i, j) positions skipping the diagonal, MSB first."""
+    return [(i, j) for i in range(k) for j in range(k) if i != j]
+
+
+def id_to_matrix(motif_id: int, k: int) -> np.ndarray:
+    """Decode a motif id into a k x k 0/1 adjacency matrix (A[i,j] = i->j)."""
+    bits = n_bits(k)
+    if not 0 <= motif_id < (1 << bits):
+        raise ValueError(f"motif id {motif_id} out of range for k={k}")
+    mat = np.zeros((k, k), dtype=np.uint8)
+    for pos, (i, j) in enumerate(_bit_positions(k)):
+        if (motif_id >> (bits - 1 - pos)) & 1:
+            mat[i, j] = 1
+    return mat
+
+
+def matrix_to_id(mat: np.ndarray) -> int:
+    """Encode a k x k 0/1 adjacency matrix into its motif id (Fig. 1)."""
+    k = mat.shape[0]
+    bits = n_bits(k)
+    motif_id = 0
+    for pos, (i, j) in enumerate(_bit_positions(k)):
+        if mat[i, j]:
+            motif_id |= 1 << (bits - 1 - pos)
+    return motif_id
+
+
+def permute_id(motif_id: int, perm: tuple[int, ...], k: int) -> int:
+    """Relabel the motif's vertices: new[i, j] = old[perm[i], perm[j]]."""
+    mat = id_to_matrix(motif_id, k)
+    idx = np.asarray(perm)
+    return matrix_to_id(mat[np.ix_(idx, idx)])
+
+
+def canonical_id(motif_id: int, k: int) -> int:
+    """Minimum id over all k! vertex permutations (paper Fig. 1)."""
+    return min(
+        permute_id(motif_id, perm, k) for perm in itertools.permutations(range(k))
+    )
+
+
+def is_weakly_connected(motif_id: int, k: int) -> bool:
+    """Connectivity of the *underlying undirected* graph (paper: a k-motif
+    must be connected in G_U)."""
+    mat = id_to_matrix(motif_id, k)
+    und = (mat | mat.T).astype(bool)
+    seen = {0}
+    stack = [0]
+    while stack:
+        v = stack.pop()
+        for w in range(k):
+            if und[v, w] and w not in seen:
+                seen.add(w)
+                stack.append(w)
+    return len(seen) == k
+
+
+@dataclass(frozen=True)
+class MotifTables:
+    """All per-k lookup tables used by the kernels and dumped for Rust.
+
+    Attributes
+    ----------
+    k: motif size (3 or 4).
+    n_ids: size of the raw id space, 2**(k*(k-1)).
+    canon: (n_ids,) canonical id for every raw id.
+    connected: (n_ids,) bool, weak connectivity of every raw id.
+    class_ids: (n_classes,) sorted canonical ids of *connected* motifs.
+    class_slot: (n_ids,) slot into class_ids for connected ids, -1 otherwise.
+    n_iso: (n_classes,) number of distinct raw ids per class (N_Iso(m), Eq 7.4).
+    n_edges: (n_classes,) directed-edge count of each class (n_e(m), Eq 7.4).
+    symmetric: (n_classes,) bool, True when the class has a symmetric
+        adjacency matrix, i.e. it also occurs in undirected graphs.
+    n_iso_sym: (n_classes,) number of *symmetric* raw ids per class — the
+        undirected N_Iso(m) of Eq. 7.4 (0 for asymmetric classes).
+    projection: (n_ids, n_classes) float32 0/1 matrix; row r has a single 1
+        at the slot of r's class when r is connected, and is all-zero
+        otherwise. Baked into the L1 ``aggregate`` kernel.
+    """
+
+    k: int
+    n_ids: int
+    canon: np.ndarray
+    connected: np.ndarray
+    class_ids: np.ndarray
+    class_slot: np.ndarray
+    n_iso: np.ndarray
+    n_edges: np.ndarray
+    symmetric: np.ndarray
+    n_iso_sym: np.ndarray
+    projection: np.ndarray
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.class_ids.shape[0])
+
+    def undirected_class_slots(self) -> np.ndarray:
+        """Slots of classes that occur in undirected graphs (2 for k=3, 6 for k=4)."""
+        return np.nonzero(self.symmetric)[0]
+
+
+def _build(k: int) -> MotifTables:
+    ids = 1 << n_bits(k)
+    canon = np.zeros(ids, dtype=np.int64)
+    connected = np.zeros(ids, dtype=bool)
+    perms = list(itertools.permutations(range(k)))
+
+    # Precompute, for every permutation, the bit -> bit mapping so the
+    # canonicalisation of the full id space is vectorised.
+    positions = _bit_positions(k)
+    pos_index = {pc: p for p, pc in enumerate(positions)}
+    bits = n_bits(k)
+    perm_maps = []
+    for perm in perms:
+        # new bit p (at (i,j)) takes old bit at (perm[i], perm[j])
+        src = [pos_index[(perm[i], perm[j])] for (i, j) in positions]
+        perm_maps.append(np.asarray(src))
+
+    all_ids = np.arange(ids, dtype=np.int64)
+    bit_planes = (all_ids[None, :] >> (bits - 1 - np.arange(bits)[:, None])) & 1
+    weights = 1 << (bits - 1 - np.arange(bits, dtype=np.int64))
+    canon = np.full(ids, np.iinfo(np.int64).max, dtype=np.int64)
+    for src in perm_maps:
+        permuted = (weights[:, None] * bit_planes[src]).sum(axis=0)
+        np.minimum(canon, permuted, out=canon)
+
+    for m in range(ids):
+        connected[m] = is_weakly_connected(m, k)
+
+    # Connectivity is isomorphism-invariant; classes come from connected ids.
+    class_ids = np.unique(canon[connected])
+    slot_of = {cid: s for s, cid in enumerate(class_ids)}
+    class_slot = np.full(ids, -1, dtype=np.int64)
+    n_iso = np.zeros(len(class_ids), dtype=np.int64)
+    n_iso_sym = np.zeros(len(class_ids), dtype=np.int64)
+    for m in range(ids):
+        if connected[m]:
+            s = slot_of[int(canon[m])]
+            class_slot[m] = s
+            n_iso[s] += 1
+            mat = id_to_matrix(m, k)
+            if (mat == mat.T).all():
+                n_iso_sym[s] += 1
+
+    n_edges = np.array([bin(int(c)).count("1") for c in class_ids], dtype=np.int64)
+    symmetric = np.array(
+        [bool((lambda a: (a == a.T).all())(id_to_matrix(int(c), k))) for c in class_ids]
+    )
+
+    projection = np.zeros((ids, len(class_ids)), dtype=np.float32)
+    valid = class_slot >= 0
+    projection[np.nonzero(valid)[0], class_slot[valid]] = 1.0
+
+    return MotifTables(
+        k=k,
+        n_ids=ids,
+        canon=canon,
+        connected=connected,
+        class_ids=class_ids,
+        class_slot=class_slot,
+        n_iso=n_iso,
+        n_edges=n_edges,
+        symmetric=symmetric,
+        n_iso_sym=n_iso_sym,
+        projection=projection,
+    )
+
+
+@lru_cache(maxsize=None)
+def tables(k: int) -> MotifTables:
+    """Cached motif tables for k in {3, 4}.
+
+    Known invariants (asserted in python/tests/test_tables.py and in the
+    Rust cross-check): 13 connected directed 3-motif classes, 199 connected
+    directed 4-motif classes, 2 resp. 6 symmetric (undirected) classes.
+    """
+    if k not in (3, 4):
+        raise ValueError("VDMC tables are defined for k in {3, 4}")
+    return _build(k)

@@ -1,0 +1,133 @@
+"""L2 model tests: composed pipeline semantics, Eq. 7.4 theory vs Monte
+Carlo brute force, and the artifact shape contract."""
+
+import itertools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+from compile.kernels.aggregate import pad_classes
+from compile.motif_tables import matrix_to_id, tables
+
+
+def brute_force_vertex_counts(adj: np.ndarray, k: int) -> np.ndarray:
+    """Per-vertex canonical-class counts by direct subset enumeration.
+
+    The independent ground truth used across the test suite: O(C(n,k));
+    only for tiny graphs.
+    """
+    t = tables(k)
+    n = adj.shape[0]
+    out = np.zeros((n, t.n_classes), dtype=np.int64)
+    for combo in itertools.combinations(range(n), k):
+        sub = adj[np.ix_(combo, combo)]
+        mid = matrix_to_id(sub)
+        slot = int(t.class_slot[mid])
+        if slot >= 0:
+            for v in combo:
+                out[v, slot] += 1
+    return out
+
+
+def test_pipeline3_equals_refs_composition():
+    rng = np.random.default_rng(5)
+    verts = rng.integers(0, model.N_VERT_BLOCK, size=(model.BATCH, 3)).astype(np.int32)
+    slots = rng.integers(0, 64, size=model.BATCH).astype(np.int32)
+    slots[1500:] = -1
+    out = model.count_pipeline(jnp.asarray(verts), jnp.asarray(slots), k=3)
+    t = tables(3)
+    hist = ref.scatter_count_ref(jnp.asarray(verts), jnp.asarray(slots), model.N_VERT_BLOCK, 64)
+    expect = ref.aggregate_ref(hist, jnp.asarray(pad_classes(t.projection, 128)))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_pipeline4_shapes():
+    verts = jnp.zeros((model.BATCH, 4), jnp.int32)
+    slots = jnp.full((model.BATCH,), -1, jnp.int32)
+    out = model.count_pipeline(verts, slots, k=4)
+    assert out.shape == (model.N_VERT_BLOCK, 256)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_theory_matches_monte_carlo(k):
+    """Eq. 7.4 expectation vs the empirical mean of brute-force per-vertex
+    counts over random G(n, p) draws. E[sum of indicators] is exact, so the
+    Monte Carlo mean must converge to the formula."""
+    rng = np.random.default_rng(42 + k)
+    n, p, samples = 7, 0.3, 1500 if k == 3 else 400
+    t = tables(k)
+    acc = np.zeros(t.n_classes)
+    for _ in range(samples):
+        a = (rng.random((n, n)) < p).astype(np.uint8)
+        np.fill_diagonal(a, 0)
+        acc += brute_force_vertex_counts(a, k).mean(axis=0)
+    empirical = acc / samples
+    theo = np.asarray(model.theory(jnp.float32(n), jnp.float32(p), k=k))[0, : t.n_classes]
+    # statistical tolerance: loose relative + absolute floor for rare motifs
+    np.testing.assert_allclose(empirical, theo, rtol=0.25, atol=0.05)
+
+
+def test_theory_undirected_row():
+    """Undirected expectations: only symmetric classes are populated, and
+    the k=3 values match the closed forms C(n-1,2)p^2(1-p) * 3 (path) and
+    C(n-1,2)p^3 (triangle)."""
+    n, p = 100.0, 0.1
+    t = tables(3)
+    out = np.asarray(model.theory(jnp.float32(n), jnp.float32(p), k=3))
+    und = out[1, : t.n_classes]
+    sym_slots = t.undirected_class_slots()
+    assert (und[[s for s in range(t.n_classes) if s not in sym_slots]] == 0).all()
+    comb = 99 * 98 / 2
+    expected = {2: comb * 3 * p**2 * (1 - p), 3: comb * p**3}
+    for s in sym_slots:
+        ue = int(t.n_edges[s]) // 2
+        np.testing.assert_allclose(und[s], expected[ue], rtol=1e-4)
+
+
+def test_theory_padding_zero():
+    out = np.asarray(model.theory(jnp.float32(50), jnp.float32(0.2), k=4))
+    assert out.shape == (2, 256)
+    assert (out[:, 199:] == 0).all()
+
+
+def test_build_specs_cover_manifest():
+    specs = model.build_specs()
+    assert set(specs) == {
+        "pipeline3", "pipeline4", "aggregate3", "aggregate4",
+        "theory3", "theory4", "dense3",
+    }
+    # every spec lowers (cheap abstract eval only)
+    for name, (fn, args) in specs.items():
+        jax.eval_shape(fn, *args)
+
+
+def test_artifacts_match_specs_when_present():
+    """If `make artifacts` has run, the manifest must agree with the current
+    build_specs shapes (guards against stale artifacts)."""
+    mpath = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.tsv")
+    if not os.path.exists(mpath):
+        pytest.skip("artifacts not built")
+    rows = {}
+    with open(mpath) as f:
+        for line in f:
+            if line.startswith("#"):
+                continue
+            name, fname, ins, outs = line.rstrip("\n").split("\t")
+            rows[name] = (ins, outs)
+    specs = model.build_specs()
+    assert set(rows) == set(specs)
+    for name, (fn, args) in specs.items():
+        out = jax.eval_shape(fn, *args)
+        got_ins, got_out = rows[name]
+        want_ins = ";".join(
+            f"{jnp.dtype(a.dtype).name}[{','.join(str(d) for d in a.shape)}]" for a in args
+        )
+        want_out = f"{jnp.dtype(out.dtype).name}[{','.join(str(d) for d in out.shape)}]"
+        assert got_ins == want_ins, name
+        assert got_out == want_out, name

@@ -1,0 +1,128 @@
+"""Motif-table invariants (paper Fig. 1 / Section 4.1 / Eq. 7.4 inputs)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.motif_tables import (
+    canonical_id,
+    id_to_matrix,
+    is_weakly_connected,
+    matrix_to_id,
+    n_bits,
+    permute_id,
+    tables,
+)
+
+
+def test_fig1_example():
+    """The worked example of paper Fig. 1: 110101 -> 53, canonical 30."""
+    mat = np.array([[0, 1, 1], [0, 0, 1], [0, 1, 0]], dtype=np.uint8)
+    assert matrix_to_id(mat) == 0b110101 == 53
+    assert canonical_id(53, 3) == 30
+
+
+@pytest.mark.parametrize("k,expected", [(3, 13), (4, 199)])
+def test_connected_directed_class_counts(k, expected):
+    """13 weakly-connected digraphs on 3 vertices, 199 on 4 (OEIS A003085)."""
+    assert tables(k).n_classes == expected
+
+
+@pytest.mark.parametrize("k,expected", [(3, 2), (4, 6)])
+def test_connected_undirected_class_counts(k, expected):
+    """2 connected graphs on 3 vertices, 6 on 4 (OEIS A001349)."""
+    t = tables(k)
+    assert int(t.symmetric.sum()) == expected
+    assert (t.n_iso_sym[t.symmetric] > 0).all()
+    assert (t.n_iso_sym[~t.symmetric] == 0).all()
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_canonical_is_idempotent_and_minimal(k):
+    t = tables(k)
+    # canon of canon is canon; canon <= id
+    assert (t.canon[t.canon] == t.canon).all()
+    assert (t.canon <= np.arange(t.n_ids)).all()
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_projection_structure(k):
+    t = tables(k)
+    rows = t.projection.sum(axis=1)
+    # connected ids project to exactly one class, disconnected to none
+    assert (rows[t.connected] == 1).all()
+    assert (rows[~t.connected] == 0).all()
+    assert t.projection.sum() == t.n_iso.sum()
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_n_iso_totals(k):
+    """Sum of class sizes = number of connected raw ids."""
+    t = tables(k)
+    assert int(t.n_iso.sum()) == int(t.connected.sum())
+    # every class representative is its own canonical id
+    assert (t.canon[t.class_ids] == t.class_ids).all()
+
+
+@pytest.mark.parametrize("k", [3, 4])
+def test_edges_constant_within_class(k):
+    t = tables(k)
+    popcount = np.array([bin(m).count("1") for m in range(t.n_ids)])
+    for s, cid in enumerate(t.class_ids):
+        members = np.nonzero(t.class_slot == s)[0]
+        assert (popcount[members] == t.n_edges[s]).all()
+
+
+@given(st.integers(0, 63), st.permutations(list(range(3))))
+@settings(max_examples=200, deadline=None)
+def test_permute_preserves_canonical_k3(motif_id, perm):
+    assert canonical_id(permute_id(motif_id, tuple(perm), 3), 3) == canonical_id(motif_id, 3)
+
+
+@given(st.integers(0, 4095), st.permutations(list(range(4))))
+@settings(max_examples=100, deadline=None)
+def test_permute_preserves_canonical_k4(motif_id, perm):
+    assert canonical_id(permute_id(motif_id, tuple(perm), 4), 4) == canonical_id(motif_id, 4)
+
+
+@given(st.integers(0, 4095))
+@settings(max_examples=200, deadline=None)
+def test_matrix_roundtrip_k4(motif_id):
+    assert matrix_to_id(id_to_matrix(motif_id, 4)) == motif_id
+
+
+@given(st.integers(0, 4095), st.permutations(list(range(4))))
+@settings(max_examples=100, deadline=None)
+def test_connectivity_is_invariant(motif_id, perm):
+    assert is_weakly_connected(motif_id, 4) == is_weakly_connected(
+        permute_id(motif_id, tuple(perm), 4), 4
+    )
+
+
+def test_undirected_triangle_and_path_classes_k3():
+    """The two undirected 3-motifs: path (4 directed edges as sym. pairs = 2
+    und. edges) and triangle (3 und. edges)."""
+    t = tables(3)
+    sym = np.nonzero(t.symmetric)[0]
+    und_edges = sorted(int(t.n_edges[s]) // 2 for s in sym)
+    assert und_edges == [2, 3]
+
+
+def test_undirected_classes_k4():
+    """Undirected 4-motifs have 3,3,4,4,5,6 edges (path, star, cycle,
+    triangle+tail, diamond, K4)."""
+    t = tables(4)
+    sym = np.nonzero(t.symmetric)[0]
+    und_edges = sorted(int(t.n_edges[s]) // 2 for s in sym)
+    assert und_edges == [3, 3, 4, 4, 5, 6]
+
+
+def test_exhaustive_brute_force_match_k3():
+    """Cross-check the vectorised canonicalisation against the direct
+    per-id permutation minimum for the full k=3 space."""
+    t = tables(3)
+    for m in range(64):
+        assert int(t.canon[m]) == canonical_id(m, 3)

@@ -1,0 +1,76 @@
+//! Fig. 4 regeneration: run time as a function of vertex AND edge count,
+//! for undirected (left panel) and directed (right panel) 4-motifs, across
+//! implementations:
+//!
+//!   - `vdmc`       the optimized coordinator (this paper's C++/CUDA analog)
+//!   - `python`     the hash/alloc-heavy "python-parity" baseline
+//!                  (paper Section 8: "C++ ... approximately 10 times more
+//!                  efficient than its parallel in Python")
+//!   - `vdmc-mt`    the coordinator with a full worker pool — the GPU-like
+//!                  configuration whose curve should flatten vs n while
+//!                  the pool is unsaturated (single-core hosts will show
+//!                  queue overhead only; see EXPERIMENTS.md)
+//!
+//! Output: TSV rows  panel, n, edges, impl, secs, instances, inst_per_sec.
+//! VDMC_BENCH_FULL=1 extends the sweep to larger n.
+
+use vdmc::baselines;
+use vdmc::coordinator::{count_motifs, CountConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::util::timer::time_once;
+
+fn bench_graph(panel: &str, g: &Graph, dir: Direction, slow_ok: bool) {
+    let size = MotifSize::Four;
+    let (counts, secs) = time_once(|| {
+        count_motifs(g, &CountConfig { size, direction: dir, workers: 1, ..Default::default() }).unwrap()
+    });
+    let row = |imp: &str, s: f64, inst: u64| {
+        println!(
+            "{panel}\t{}\t{}\t{imp}\t{:.4}\t{inst}\t{:.3e}",
+            g.n(),
+            g.m(),
+            s,
+            inst as f64 / s.max(1e-9)
+        );
+    };
+    row("vdmc", secs.as_secs_f64(), counts.total_instances);
+
+    let (mt, mt_secs) = time_once(|| {
+        count_motifs(g, &CountConfig { size, direction: dir, workers: 4, ..Default::default() }).unwrap()
+    });
+    assert_eq!(mt.per_vertex, counts.per_vertex, "multithreaded counts must match");
+    row("vdmc-mt", mt_secs.as_secs_f64(), mt.total_instances);
+
+    if slow_ok {
+        let (slow, slow_secs) = time_once(|| baselines::slow::count(g, size, dir));
+        assert_eq!(slow.total_instances, counts.total_instances, "python-parity counts must match");
+        row("python", slow_secs.as_secs_f64(), slow.total_instances);
+    }
+}
+
+fn main() {
+    let full = std::env::var("VDMC_BENCH_FULL").is_ok();
+    println!("# Fig 4 — runtime vs (n, E), 4-motifs; implementations: vdmc / vdmc-mt / python");
+    println!("# panel\tn\tedges\timpl\tsecs\tinstances\tinst_per_sec");
+
+    let ns: &[usize] = if full { &[200, 400, 800, 1600, 3200] } else { &[200, 400, 800] };
+    let degrees: &[f64] = &[5.0, 10.0, 20.0];
+
+    for &n in ns {
+        for &d in degrees {
+            // undirected panel: G_U(n, p) with mean degree d
+            let p = d / (n as f64 - 1.0);
+            let gu = generators::gnp_undirected(n, p, 7 + n as u64);
+            bench_graph("undirected", &gu, Direction::Undirected, n <= 800);
+
+            // directed panel: directed G(n, p') with the same undirected density
+            let pd = p / 2.0;
+            let gd = generators::gnp_directed(n, pd, 7 + n as u64);
+            bench_graph("directed", &gd, Direction::Directed, n <= 800);
+        }
+    }
+    println!("# shape expectations: secs grows ~linearly with instance count;");
+    println!("# python/vdmc ratio ~10x (paper Section 8); vdmc-mt tracks vdmc on 1-core hosts.");
+}

@@ -1,0 +1,97 @@
+//! Table 1 + Table 2 regeneration on real-world *analogs*.
+//!
+//! The paper's datasets (web-BerkStan, as-Skitter, soc-LiveJournal,
+//! com-Orkut) are SNAP downloads; this environment has no network, so each
+//! dataset is replaced by a Barabási–Albert scale-free graph matched to its
+//! |V| and |E| at 1/100 scale (DESIGN.md documents the substitution — BA
+//! graphs exercise the same heavy-hub code path that motivates the paper's
+//! (root, neighbor) work splitting). 4-motif runs use a further 1/10
+//! vertex scale-down by default (the paper's own 4-motif column is
+//! hours-of-V100); VDMC_BENCH_FULL=1 lifts that.
+//!
+//! Output TSV: dataset, k, n, edges, secs, instances, inst_per_sec,
+//! paper_secs (the V100 number from Table 2 for shape comparison).
+//!
+//! To run against the real SNAP files instead, download them and point
+//! VDMC_DATASET_DIR at edge lists named wbd.tsv, wb.tsv, as.tsv, ljd.tsv,
+//! lj.tsv, ok.tsv.
+
+use std::path::Path;
+
+use vdmc::coordinator::{count_motifs_with_report, CountConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::{generators, io};
+use vdmc::motifs::{Direction, MotifSize};
+
+struct Dataset {
+    name: &'static str,
+    file: &'static str,
+    directed: bool,
+    /// paper-scale vertex count and BA attachment parameter (m ≈ E/V)
+    v_full: usize,
+    m_attach: usize,
+    /// reciprocal-edge probability for directed analogs
+    recip: f64,
+    /// paper Table 2 elapsed seconds (3-motif, 4-motif); None = not reported
+    paper3: Option<f64>,
+    paper4: Option<f64>,
+    /// default vertex scale-down for the 4-motif run (the densest analogs
+    /// need more than the blanket 1/1000 to stay CPU-friendly)
+    scale4: usize,
+}
+
+const DATASETS: &[Dataset] = &[
+    Dataset { name: "WBD", file: "wbd.tsv", directed: true, v_full: 690_000, m_attach: 11, recip: 0.25, paper3: Some(68.0), paper4: Some(23736.0), scale4: 1000 },
+    Dataset { name: "WB", file: "wb.tsv", directed: false, v_full: 690_000, m_attach: 10, recip: 0.0, paper3: Some(76.0), paper4: Some(30315.0), scale4: 1000 },
+    Dataset { name: "AS", file: "as.tsv", directed: false, v_full: 1_700_000, m_attach: 6, recip: 0.0, paper3: Some(154.0), paper4: Some(6968.0), scale4: 1000 },
+    Dataset { name: "LJD", file: "ljd.tsv", directed: true, v_full: 4_800_000, m_attach: 14, recip: 0.3, paper3: Some(635.0), paper4: Some(10882.0), scale4: 2000 },
+    Dataset { name: "LJ", file: "lj.tsv", directed: false, v_full: 4_800_000, m_attach: 9, recip: 0.0, paper3: Some(574.0), paper4: Some(4645.0), scale4: 2000 },
+    Dataset { name: "OK", file: "ok.tsv", directed: false, v_full: 3_100_000, m_attach: 39, recip: 0.0, paper3: Some(1628.0), paper4: Some(28730.0), scale4: 5000 },
+];
+
+fn load_or_generate(d: &Dataset, scale: usize, seed: u64) -> (Graph, &'static str) {
+    if let Ok(dir) = std::env::var("VDMC_DATASET_DIR") {
+        let path = Path::new(&dir).join(d.file);
+        if path.exists() {
+            return (io::load_edge_list(&path, d.directed).expect("load dataset"), "snap");
+        }
+    }
+    let n = (d.v_full / scale).max(d.m_attach + 2);
+    let g = if d.directed {
+        generators::barabasi_albert_directed(n, d.m_attach, d.recip, seed)
+    } else {
+        generators::barabasi_albert(n, d.m_attach, seed)
+    };
+    (g, "ba-analog")
+}
+
+fn main() {
+    let full = std::env::var("VDMC_BENCH_FULL").is_ok();
+    println!("# Table 1/2 — real-world analogs (1/100 scale BA; 4-motifs 1/1000 unless FULL)");
+    println!("# dataset\tsource\tk\tn\tedges\tsecs\tinstances\tinst_per_sec\tpaper_V100_secs");
+
+    for d in DATASETS {
+        for (size, k, paper) in
+            [(MotifSize::Three, 3usize, d.paper3), (MotifSize::Four, 4usize, d.paper4)]
+        {
+            let scale = if k == 4 && !full { d.scale4 } else { 100 };
+            let (g, source) = load_or_generate(d, scale, 33);
+            let direction = if d.directed { Direction::Directed } else { Direction::Undirected };
+            let cfg = CountConfig { size, direction, ..Default::default() };
+            let (counts, report) = count_motifs_with_report(&g, &cfg).expect("count");
+            println!(
+                "{}\t{source}\t{k}\t{}\t{}\t{:.3}\t{}\t{:.3e}\t{}",
+                d.name,
+                g.n(),
+                g.m(),
+                counts.elapsed_secs,
+                counts.total_instances,
+                report.throughput(),
+                paper.map(|s| s.to_string()).unwrap_or_else(|| "-".into())
+            );
+        }
+    }
+    println!("# shape expectations (paper Table 2): 4-motif time >> 3-motif time on every dataset;");
+    println!("# OK (densest) is the heaviest 3-motif dataset; web graphs have the worst 4-motif blowup");
+    println!("# (high clustering); directed runs cost more than undirected at equal |E|.");
+}

@@ -1,0 +1,14 @@
+//! Baseline counters VDMC is compared against (paper Sections 1 and 8):
+//!
+//! - [`naive`]: direct enumeration over all C(n, k) subsets — exponentially
+//!   slower but unconditionally correct; the ground truth for every test.
+//! - [`slow`]: a deliberately allocation/hash-heavy enumerator modeling the
+//!   paper's Python implementation (the "×10 slower than C++" curve of
+//!   Figs. 4–5).
+//! - [`matrix`]: dense-algebra per-vertex undirected 3-motif counts — the
+//!   "matrix based approaches" family; also available through the L1
+//!   `dense3` PJRT artifact (see `runtime`).
+
+pub mod matrix;
+pub mod naive;
+pub mod slow;

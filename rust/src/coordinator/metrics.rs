@@ -1,0 +1,119 @@
+//! Coordinator observability: per-worker counters rolled into a run report
+//! (instances/sec, load balance, queue stats) — the numbers EXPERIMENTS.md
+//! and the benches print.
+
+use crate::util::json::Json;
+
+/// What one worker did during a counting run.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerMetrics {
+    pub worker_id: usize,
+    pub items: u64,
+    pub units: u64,
+    pub instances: u64,
+    pub busy_secs: f64,
+}
+
+/// Aggregated run report.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workers: Vec<WorkerMetrics>,
+    pub total_instances: u64,
+    pub elapsed_secs: f64,
+    pub queue_items: usize,
+    pub queue_units: usize,
+}
+
+impl RunReport {
+    /// Ratio of the busiest to the average worker busy time — 1.0 is a
+    /// perfectly even split (the paper's "blocks' tasks to be even").
+    pub fn imbalance(&self) -> f64 {
+        if self.workers.is_empty() {
+            return 1.0;
+        }
+        let times: Vec<f64> = self.workers.iter().map(|w| w.busy_secs).collect();
+        let max = times.iter().cloned().fold(0.0, f64::max);
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Motif instances per wall-clock second.
+    pub fn throughput(&self) -> f64 {
+        if self.elapsed_secs <= 0.0 {
+            0.0
+        } else {
+            self.total_instances as f64 / self.elapsed_secs
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("total_instances", self.total_instances)
+            .set("elapsed_secs", self.elapsed_secs)
+            .set("throughput_per_sec", self.throughput())
+            .set("imbalance", self.imbalance())
+            .set("queue_items", self.queue_items)
+            .set("queue_units", self.queue_units);
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .map(|w| {
+                let mut o = Json::obj();
+                o.set("id", w.worker_id)
+                    .set("items", w.items)
+                    .set("units", w.units)
+                    .set("instances", w.instances)
+                    .set("busy_secs", w.busy_secs);
+                o
+            })
+            .collect();
+        j.set("workers", Json::Arr(workers));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report(busy: &[f64]) -> RunReport {
+        RunReport {
+            workers: busy
+                .iter()
+                .enumerate()
+                .map(|(i, &b)| WorkerMetrics { worker_id: i, busy_secs: b, ..Default::default() })
+                .collect(),
+            total_instances: 100,
+            elapsed_secs: 2.0,
+            queue_items: 10,
+            queue_units: 50,
+        }
+    }
+
+    #[test]
+    fn balanced_imbalance_is_one() {
+        assert!((report(&[1.0, 1.0, 1.0]).imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skewed_imbalance_above_one() {
+        let r = report(&[3.0, 1.0, 1.0, 1.0]);
+        assert!(r.imbalance() > 1.5);
+    }
+
+    #[test]
+    fn throughput() {
+        assert_eq!(report(&[1.0]).throughput(), 50.0);
+    }
+
+    #[test]
+    fn json_has_worker_rows() {
+        let s = report(&[1.0, 2.0]).to_json().to_string_compact();
+        assert!(s.contains("\"workers\":["));
+        assert!(s.contains("\"busy_secs\":2"));
+    }
+}

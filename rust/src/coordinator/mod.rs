@@ -1,0 +1,430 @@
+//! L3 coordinator — the paper's distributed counting engine.
+//!
+//! The leader relabels the graph by descending degree (Section 6), builds
+//! the (root, neighbor-range) work queue, and spawns a worker pool that
+//! pulls items lock-free and runs the proper k-BFS enumerators. Counter
+//! updates use either a shared atomic array (the paper's GPU atomicAdd
+//! strategy) or per-worker shards merged at the end (`CounterMode`).
+//! Results are mapped back to original vertex ids.
+
+pub mod metrics;
+pub mod work;
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::graph::csr::Graph;
+use crate::graph::ordering::VertexOrdering;
+use crate::motifs::counter::{AtomicCounter, CounterMode, MotifCounts, ShardCounter, SlotMapper};
+use crate::motifs::iso::NO_SLOT;
+use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
+
+use metrics::{RunReport, WorkerMetrics};
+use work::{build_queue, total_units, WorkQueue};
+
+/// Configuration of a counting run.
+#[derive(Debug, Clone)]
+pub struct CountConfig {
+    pub size: MotifSize,
+    pub direction: Direction,
+    /// Worker threads; 0 = one per available core.
+    pub workers: usize,
+    /// Counter update strategy (atomic vs sharded; ablation bench).
+    pub counter: CounterMode,
+    /// Relabel by descending degree before counting (paper Section 6).
+    /// Disable only for ablation.
+    pub reorder: bool,
+    /// Max (root, neighbor) units per queue item.
+    pub max_units_per_item: usize,
+}
+
+impl Default for CountConfig {
+    fn default() -> Self {
+        CountConfig {
+            size: MotifSize::Three,
+            direction: Direction::Directed,
+            workers: 0,
+            counter: CounterMode::Sharded,
+            reorder: true,
+            max_units_per_item: 64,
+        }
+    }
+}
+
+impl CountConfig {
+    fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        }
+    }
+}
+
+/// Count all k-motifs per vertex. The headline API.
+pub fn count_motifs(graph: &Graph, cfg: &CountConfig) -> Result<MotifCounts> {
+    Ok(count_motifs_with_report(graph, cfg)?.0)
+}
+
+/// As [`count_motifs`], also returning the coordinator run report.
+pub fn count_motifs_with_report(graph: &Graph, cfg: &CountConfig) -> Result<(MotifCounts, RunReport)> {
+    if cfg.direction == Direction::Directed && !graph.directed {
+        bail!("directed motif counting requested on an undirected graph");
+    }
+    let start = Instant::now();
+    let n = graph.n();
+    let k = cfg.size.k();
+    let mapper = SlotMapper::new(k, cfg.direction);
+    let n_classes = mapper.n_classes();
+
+    // Section 6 relabeling: heavy vertices first.
+    let ordering = if cfg.reorder {
+        VertexOrdering::degree_descending(graph)
+    } else {
+        VertexOrdering::identity(n)
+    };
+    let h = ordering.apply(graph);
+
+    let items = build_queue(&h, cfg.max_units_per_item);
+    let queue_items = items.len();
+    let queue_units = total_units(&items);
+    let queue = WorkQueue::new(items);
+    let workers = cfg.resolved_workers().max(1).min(queue_items.max(1));
+
+    let (per_vertex_proc, worker_metrics, instances) = match cfg.counter {
+        CounterMode::Atomic => run_atomic(&h, cfg, &mapper, &queue, workers, n, n_classes),
+        CounterMode::Sharded => run_sharded(&h, cfg, &mapper, &queue, workers, n, n_classes),
+    };
+
+    // map back to original vertex ids
+    let per_vertex = ordering.unapply_rows(&per_vertex_proc, n_classes);
+
+    let elapsed = start.elapsed().as_secs_f64();
+    let counts = MotifCounts {
+        k,
+        direction: cfg.direction,
+        n,
+        n_classes,
+        per_vertex,
+        class_ids: mapper.class_ids(),
+        total_instances: instances,
+        elapsed_secs: elapsed,
+    };
+    let report = RunReport {
+        workers: worker_metrics,
+        total_instances: instances,
+        elapsed_secs: elapsed,
+        queue_items,
+        queue_units,
+    };
+    Ok((counts, report))
+}
+
+/// Worker inner loop shared by both counter modes: drain the queue and feed
+/// every enumerated instance to `record`.
+fn worker_loop(
+    h: &Graph,
+    cfg: &CountConfig,
+    mapper: &SlotMapper,
+    queue: &WorkQueue,
+    worker_id: usize,
+    mut record: impl FnMut(&[u32], u16),
+) -> WorkerMetrics {
+    let mut m = WorkerMetrics { worker_id, ..Default::default() };
+    let t0 = Instant::now();
+    let dir = cfg.direction;
+    let mut ctx = bfs3::EnumCtx::new(h.n());
+    while let Some(item) = queue.pop() {
+        m.items += 1;
+        m.units += item.units() as u64;
+        for j in item.j_start..item.j_end {
+            match cfg.size {
+                MotifSize::Three => {
+                    bfs3::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
+                        let slot = mapper.slot(raw);
+                        debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
+                        m.instances += 1;
+                        record(verts, slot);
+                    });
+                }
+                MotifSize::Four => {
+                    bfs4::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
+                        let slot = mapper.slot(raw);
+                        debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
+                        m.instances += 1;
+                        record(verts, slot);
+                    });
+                }
+            }
+        }
+    }
+    m.busy_secs = t0.elapsed().as_secs_f64();
+    m
+}
+
+fn run_atomic(
+    h: &Graph,
+    cfg: &CountConfig,
+    mapper: &SlotMapper,
+    queue: &WorkQueue,
+    workers: usize,
+    n: usize,
+    n_classes: usize,
+) -> (Vec<u64>, Vec<WorkerMetrics>, u64) {
+    let counter = AtomicCounter::new(n, n_classes);
+    let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let counter = &counter;
+                s.spawn(move || worker_loop(h, cfg, mapper, queue, w, |verts, slot| counter.record(verts, slot)))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let instances = counter.instances();
+    (counter.into_vec(), metrics, instances)
+}
+
+fn run_sharded(
+    h: &Graph,
+    cfg: &CountConfig,
+    mapper: &SlotMapper,
+    queue: &WorkQueue,
+    workers: usize,
+    n: usize,
+    n_classes: usize,
+) -> (Vec<u64>, Vec<WorkerMetrics>, u64) {
+    let results: Vec<(WorkerMetrics, ShardCounter)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut shard = ShardCounter::new(n, n_classes);
+                    let metrics =
+                        worker_loop(h, cfg, mapper, queue, w, |verts, slot| shard.record(verts, slot));
+                    (metrics, shard)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+    let mut merged = ShardCounter::new(n, n_classes);
+    let mut metrics = Vec::with_capacity(results.len());
+    for (m, shard) in results {
+        merged.merge(&shard);
+        metrics.push(m);
+    }
+    (merged.counts, metrics, merged.instances)
+}
+
+/// Stream enumerated instances in fixed-size batches (the L1 `pipeline`
+/// artifact's input format): flattened vertex tuples + raw motif ids.
+/// Used by the PJRT end-to-end path; enumeration order is deterministic
+/// (serial, root-ascending on the relabeled graph).
+pub fn stream_instances(
+    graph: &Graph,
+    size: MotifSize,
+    direction: Direction,
+    reorder: bool,
+    batch: usize,
+    mut on_batch: impl FnMut(&[i32], &[i32]),
+) -> Result<u64> {
+    if direction == Direction::Directed && !graph.directed {
+        bail!("directed motif counting requested on an undirected graph");
+    }
+    let n = graph.n();
+    let k = size.k();
+    let ordering =
+        if reorder { VertexOrdering::degree_descending(graph) } else { VertexOrdering::identity(n) };
+    let h = ordering.apply(graph);
+
+    struct BatchState<'a, F: FnMut(&[i32], &[i32])> {
+        verts: Vec<i32>,
+        raws: Vec<i32>,
+        batch: usize,
+        k: usize,
+        total: u64,
+        on_batch: F,
+        old_of_new: &'a [u32],
+    }
+    impl<F: FnMut(&[i32], &[i32])> BatchState<'_, F> {
+        #[inline]
+        fn push(&mut self, verts: &[u32], raw: u16) {
+            // instances carry ORIGINAL vertex ids so downstream histograms
+            // line up with the un-relabeled graph
+            for &v in verts {
+                self.verts.push(self.old_of_new[v as usize] as i32);
+            }
+            self.raws.push(raw as i32);
+            self.total += 1;
+            if self.raws.len() == self.batch {
+                (self.on_batch)(&self.verts, &self.raws);
+                self.verts.clear();
+                self.raws.clear();
+            }
+        }
+        fn flush(&mut self) {
+            if !self.raws.is_empty() {
+                // pad the tail batch with -1 sentinel rows
+                while self.raws.len() < self.batch {
+                    self.verts.extend(std::iter::repeat(-1).take(self.k));
+                    self.raws.push(-1);
+                }
+                (self.on_batch)(&self.verts, &self.raws);
+                self.verts.clear();
+                self.raws.clear();
+            }
+        }
+    }
+
+    let mut state = BatchState {
+        verts: Vec::with_capacity(batch * k),
+        raws: Vec::with_capacity(batch),
+        batch,
+        k,
+        total: 0,
+        on_batch: &mut on_batch,
+        old_of_new: &ordering.old_of_new,
+    };
+    match size {
+        MotifSize::Three => {
+            bfs3::enumerate_all(&h, direction, &mut |v, raw| state.push(v, raw));
+        }
+        MotifSize::Four => {
+            bfs4::enumerate_all(&h, direction, &mut |v, raw| state.push(v, raw));
+        }
+    }
+    state.flush();
+    Ok(state.total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn triangle_graph_counts() {
+        let g = generators::complete(3, false);
+        let cfg = CountConfig {
+            size: MotifSize::Three,
+            direction: Direction::Undirected,
+            workers: 1,
+            ..Default::default()
+        };
+        let counts = count_motifs(&g, &cfg).unwrap();
+        assert_eq!(counts.total_instances, 1);
+        assert_eq!(counts.n_classes, 2);
+        // every vertex participates in the one triangle
+        for v in 0..3 {
+            assert_eq!(counts.vertex(v), &[0, 1]);
+        }
+    }
+
+    #[test]
+    fn atomic_and_sharded_agree() {
+        let g = generators::gnp_directed(60, 0.1, 17);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let base = CountConfig { size, direction: Direction::Directed, workers: 4, ..Default::default() };
+            let a = count_motifs(&g, &CountConfig { counter: CounterMode::Atomic, ..base.clone() }).unwrap();
+            let s = count_motifs(&g, &CountConfig { counter: CounterMode::Sharded, ..base }).unwrap();
+            assert_eq!(a.per_vertex, s.per_vertex);
+            assert_eq!(a.total_instances, s.total_instances);
+        }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_result() {
+        let g = generators::gnp_undirected(80, 0.08, 23);
+        let mk = |w| CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            workers: w,
+            ..Default::default()
+        };
+        let one = count_motifs(&g, &mk(1)).unwrap();
+        let four = count_motifs(&g, &mk(4)).unwrap();
+        assert_eq!(one.per_vertex, four.per_vertex);
+    }
+
+    #[test]
+    fn reorder_does_not_change_result() {
+        let g = generators::barabasi_albert(70, 3, 5);
+        let mk = |r| CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            reorder: r,
+            workers: 2,
+            ..Default::default()
+        };
+        let with = count_motifs(&g, &mk(true)).unwrap();
+        let without = count_motifs(&g, &mk(false)).unwrap();
+        assert_eq!(with.per_vertex, without.per_vertex);
+        assert_eq!(with.total_instances, without.total_instances);
+    }
+
+    #[test]
+    fn directed_on_undirected_graph_is_error() {
+        let g = generators::star(5);
+        let cfg = CountConfig { direction: Direction::Directed, ..Default::default() };
+        assert!(count_motifs(&g, &cfg).is_err());
+    }
+
+    #[test]
+    fn sum_rule_holds() {
+        // Σ_v counts(v) = k × instances
+        let g = generators::gnp_directed(50, 0.12, 9);
+        for (size, k) in [(MotifSize::Three, 3u64), (MotifSize::Four, 4u64)] {
+            let counts = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Directed, workers: 3, ..Default::default() },
+            )
+            .unwrap();
+            let total: u64 = counts.per_vertex.iter().sum();
+            assert_eq!(total, k * counts.total_instances);
+        }
+    }
+
+    #[test]
+    fn report_accounts_for_all_units() {
+        let g = generators::barabasi_albert(60, 2, 8);
+        let cfg = CountConfig {
+            size: MotifSize::Three,
+            direction: Direction::Undirected,
+            workers: 3,
+            ..Default::default()
+        };
+        let (_, report) = count_motifs_with_report(&g, &cfg).unwrap();
+        let worker_units: u64 = report.workers.iter().map(|w| w.units).sum();
+        assert_eq!(worker_units as usize, report.queue_units);
+        let worker_instances: u64 = report.workers.iter().map(|w| w.instances).sum();
+        assert_eq!(worker_instances, report.total_instances);
+    }
+
+    #[test]
+    fn stream_matches_counts() {
+        let g = generators::gnp_directed(40, 0.15, 31);
+        let counts = count_motifs(
+            &g,
+            &CountConfig {
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                workers: 1,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut streamed = 0u64;
+        let mut batches = 0usize;
+        let total = stream_instances(&g, MotifSize::Three, Direction::Directed, true, 128, |verts, raws| {
+            batches += 1;
+            assert_eq!(verts.len(), 128 * 3);
+            assert_eq!(raws.len(), 128);
+            streamed += raws.iter().filter(|&&r| r >= 0).count() as u64;
+        })
+        .unwrap();
+        assert_eq!(total, counts.total_instances);
+        assert_eq!(streamed, counts.total_instances);
+        assert!(batches >= 1);
+    }
+}

@@ -1,0 +1,155 @@
+//! Work decomposition (paper Section 6).
+//!
+//! The unit of parallel work is a (root, first-neighbor) pair — the same
+//! decomposition the paper uses for its CUDA grid ("each pair of a vertex
+//! and one of its neighbors is computed separately ... prevents waiting
+//! for a small number of vertices with a very high degree"). Units are
+//! batched into [`WorkItem`] ranges so queue traffic stays low on small
+//! graphs, and roots are scheduled in ascending processing index =
+//! *descending degree*, so the heavy hubs start first and stragglers are
+//! cheap tails.
+
+use crate::graph::csr::Graph;
+
+/// A contiguous range of first-neighbor units for one root.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub root: u32,
+    /// First-neighbor index range [j_start, j_end) into the root's proper
+    /// neighbor list.
+    pub j_start: u32,
+    pub j_end: u32,
+}
+
+impl WorkItem {
+    pub fn units(&self) -> usize {
+        (self.j_end - self.j_start) as usize
+    }
+}
+
+/// Build the work queue for a (relabeled) graph.
+///
+/// `max_units_per_item` bounds item granularity: hubs are split into many
+/// items (the paper's high-degree division), while degree-1 tails stay one
+/// item each.
+pub fn build_queue(graph: &Graph, max_units_per_item: usize) -> Vec<WorkItem> {
+    assert!(max_units_per_item >= 1);
+    let mut items = Vec::new();
+    for root in 0..graph.n() as u32 {
+        let units = graph.und.neighbors_above(root, root).len() as u32;
+        let mut j = 0u32;
+        while j < units {
+            let end = (j + max_units_per_item as u32).min(units);
+            items.push(WorkItem { root, j_start: j, j_end: end });
+            j = end;
+        }
+    }
+    items
+}
+
+/// Total units across a queue (= number of proper (root, neighbor) pairs =
+/// |E| of the undirected view).
+pub fn total_units(items: &[WorkItem]) -> usize {
+    items.iter().map(|i| i.units()).sum()
+}
+
+/// Shared pull-cursor over the queue: workers claim the next item with a
+/// single relaxed-fetch-add — lock-free dynamic load balancing.
+pub struct WorkQueue {
+    items: Vec<WorkItem>,
+    cursor: std::sync::atomic::AtomicUsize,
+}
+
+impl WorkQueue {
+    pub fn new(items: Vec<WorkItem>) -> WorkQueue {
+        WorkQueue { items, cursor: std::sync::atomic::AtomicUsize::new(0) }
+    }
+
+    /// Claim the next item; None when drained.
+    #[inline]
+    pub fn pop(&self) -> Option<WorkItem> {
+        let i = self.cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.items.get(i).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn queue_covers_all_units() {
+        let g = generators::gnp_undirected(50, 0.2, 1);
+        let items = build_queue(&g, 4);
+        assert_eq!(total_units(&items), g.und.m() / 2);
+    }
+
+    #[test]
+    fn hub_is_split() {
+        let g = generators::star(100); // hub 0 has 99 proper neighbors
+        let items = build_queue(&g, 16);
+        let hub_items: Vec<_> = items.iter().filter(|i| i.root == 0).collect();
+        assert_eq!(hub_items.len(), (99 + 15) / 16);
+        assert!(hub_items.iter().all(|i| i.units() <= 16));
+        // leaves have no proper neighbors (their only neighbor is 0 < leaf)
+        assert_eq!(items.iter().filter(|i| i.root != 0).count(), 0);
+    }
+
+    #[test]
+    fn ranges_are_contiguous_per_root() {
+        let g = generators::gnp_undirected(30, 0.3, 2);
+        let items = build_queue(&g, 3);
+        let mut expected_start = std::collections::HashMap::new();
+        for it in &items {
+            let e = expected_start.entry(it.root).or_insert(0u32);
+            assert_eq!(it.j_start, *e, "gap in root {} ranges", it.root);
+            *e = it.j_end;
+        }
+    }
+
+    #[test]
+    fn pop_drains_exactly_once() {
+        let g = generators::gnp_undirected(20, 0.4, 3);
+        let items = build_queue(&g, 2);
+        let total = items.len();
+        let q = WorkQueue::new(items);
+        let mut seen = 0;
+        while q.pop().is_some() {
+            seen += 1;
+        }
+        assert_eq!(seen, total);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn concurrent_pop_is_disjoint() {
+        let g = generators::gnp_undirected(60, 0.3, 4);
+        let items = build_queue(&g, 2);
+        let total = items.len();
+        let q = WorkQueue::new(items);
+        let counted: usize = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4)
+                .map(|_| {
+                    s.spawn(|| {
+                        let mut c = 0usize;
+                        while q.pop().is_some() {
+                            c += 1;
+                        }
+                        c
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).sum()
+        });
+        assert_eq!(counted, total);
+    }
+}

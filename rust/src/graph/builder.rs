@@ -1,0 +1,92 @@
+//! Incremental graph construction with automatic vertex-count growth,
+//! used by the IO loader and the generators.
+
+use super::csr::Graph;
+
+/// Collects edges, tracks the max vertex id, and finalizes into a [`Graph`].
+#[derive(Debug, Default, Clone)]
+pub struct GraphBuilder {
+    edges: Vec<(u32, u32)>,
+    n: usize,
+}
+
+impl GraphBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-declare a vertex count (ids 0..n-1 exist even if isolated).
+    pub fn with_n(n: usize) -> Self {
+        GraphBuilder { edges: Vec::new(), n }
+    }
+
+    pub fn reserve(&mut self, additional: usize) {
+        self.edges.reserve(additional);
+    }
+
+    /// Add an edge; grows the vertex count to cover both endpoints.
+    #[inline]
+    pub fn add_edge(&mut self, u: u32, v: u32) {
+        self.n = self.n.max(u as usize + 1).max(v as usize + 1);
+        self.edges.push((u, v));
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Finalize. Deduplication and self-loop removal happen in the CSR.
+    pub fn build(self, directed: bool) -> Graph {
+        Graph::from_edges(self.n, &self.edges, directed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grows_vertex_count() {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 5);
+        b.add_edge(2, 1);
+        assert_eq!(b.n(), 6);
+        let g = b.build(true);
+        assert_eq!(g.n(), 6);
+        assert!(g.has_directed_edge(0, 5));
+    }
+
+    #[test]
+    fn with_n_keeps_isolated_vertices() {
+        let mut b = GraphBuilder::with_n(10);
+        b.add_edge(0, 1);
+        let g = b.build(false);
+        assert_eq!(g.n(), 10);
+        assert_eq!(g.und_degree(9), 0);
+    }
+
+    #[test]
+    fn duplicate_edges_collapse_in_build() {
+        let mut b = GraphBuilder::new();
+        b.add_edge(0, 1);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0);
+        let g = b.build(true);
+        assert_eq!(g.m(), 2); // 0->1 and 1->0 are distinct directed edges
+        let g2 = {
+            let mut b = GraphBuilder::new();
+            b.add_edge(0, 1);
+            b.add_edge(1, 0);
+            b.build(false)
+        };
+        assert_eq!(g2.m(), 1); // but one undirected edge
+    }
+}

@@ -1,0 +1,259 @@
+//! Compressed Sparse Row graph — the paper's core data structure.
+//!
+//! Two arrays (Section 4.2): `offsets` (the paper's *Indices*: where each
+//! vertex's neighbor list starts) and `neighbors` (all neighbor lists
+//! concatenated). Neighbor lists are sorted ascending, which gives
+//! O(log d) membership probes and cache-linear scans during the BFS —
+//! "pulling the entire list of neighbors of a certain vertex into the
+//! cache" is exactly a contiguous slice read here.
+
+/// CSR adjacency over `u32` vertex ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    /// `offsets[v]..offsets[v+1]` indexes `neighbors`; len = n + 1.
+    offsets: Vec<u64>,
+    /// Concatenated sorted neighbor lists; len = number of (directed) edges.
+    neighbors: Vec<u32>,
+}
+
+impl Csr {
+    /// Build from an edge list. Edges are deduplicated; self-loops removed.
+    /// When `symmetrize` is set, each (u,v) also inserts (v,u) — the paper's
+    /// undirected G_U view.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], symmetrize: bool) -> Csr {
+        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * if symmetrize { 2 } else { 1 });
+        for &(u, v) in edges {
+            debug_assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
+            if u == v {
+                continue; // simple graphs only (paper assumes no self edges)
+            }
+            pairs.push((u, v));
+            if symmetrize {
+                pairs.push((v, u));
+            }
+        }
+        pairs.sort_unstable();
+        pairs.dedup();
+
+        let mut offsets = vec![0u64; n + 1];
+        for &(u, _) in &pairs {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let neighbors = pairs.into_iter().map(|(_, v)| v).collect();
+        Csr { offsets, neighbors }
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of stored (directed) edges.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.neighbors.len()
+    }
+
+    /// Out-degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// Sorted neighbor slice of `v` — one contiguous cache-friendly read.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        &self.neighbors[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Membership probe via binary search: O(log d).
+    #[inline]
+    pub fn has_edge(&self, u: u32, v: u32) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Neighbors of `v` strictly greater than `after` (the proper-BFS
+    /// candidate set of Section 4.1: only higher-index vertices).
+    #[inline]
+    pub fn neighbors_above(&self, v: u32, after: u32) -> &[u32] {
+        let nbrs = self.neighbors(v);
+        let start = nbrs.partition_point(|&w| w <= after);
+        &nbrs[start..]
+    }
+
+    /// Iterate all edges (u, v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n() as u32).flat_map(move |u| self.neighbors(u).iter().map(move |&v| (u, v)))
+    }
+
+    /// Total bytes of the two arrays — the paper's "memory cost is simply
+    /// the number of edges" claim, measurable.
+    pub fn memory_bytes(&self) -> usize {
+        self.offsets.len() * std::mem::size_of::<u64>()
+            + self.neighbors.len() * std::mem::size_of::<u32>()
+    }
+
+    /// Reverse (transpose) of this CSR.
+    pub fn transpose(&self) -> Csr {
+        let rev: Vec<(u32, u32)> = self.edges().map(|(u, v)| (v, u)).collect();
+        Csr::from_edges(self.n(), &rev, false)
+    }
+}
+
+/// A graph as VDMC sees it: the directed adjacency plus the undirected
+/// underlying view G_U (identical for undirected graphs).
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// Directed out-adjacency. For undirected graphs this equals `und`.
+    pub out: Csr,
+    /// Directed in-adjacency (transpose of `out`) — lets the enumerator
+    /// read both direction bits of every (center, neighbor) pair with
+    /// sorted merges instead of per-instance binary searches. Equals `und`
+    /// for undirected graphs.
+    pub inn: Csr,
+    /// Underlying undirected (symmetrized) adjacency — BFS runs on this.
+    pub und: Csr,
+    /// Whether edge direction is meaningful.
+    pub directed: bool,
+}
+
+impl Graph {
+    /// Build from an edge list.
+    pub fn from_edges(n: usize, edges: &[(u32, u32)], directed: bool) -> Graph {
+        let und = Csr::from_edges(n, edges, true);
+        let (out, inn) = if directed {
+            let out = Csr::from_edges(n, edges, false);
+            let inn = out.transpose();
+            (out, inn)
+        } else {
+            (und.clone(), und.clone())
+        };
+        Graph { out, inn, und, directed }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.und.n()
+    }
+
+    /// Number of edges in the semantic graph: directed edge count, or
+    /// undirected edge count (symmetrized pairs / 2).
+    pub fn m(&self) -> usize {
+        if self.directed {
+            self.out.m()
+        } else {
+            self.und.m() / 2
+        }
+    }
+
+    /// Directed edge probe u -> v (undirected probe when !directed).
+    #[inline]
+    pub fn has_directed_edge(&self, u: u32, v: u32) -> bool {
+        self.out.has_edge(u, v)
+    }
+
+    /// Undirected-degree of `v` (the ordering key of Section 6).
+    #[inline]
+    pub fn und_degree(&self, v: u32) -> usize {
+        self.und.degree(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The CSR example worked in the paper (Section 4.2):
+    /// edges 0->1, 0->2, 0->3, 2->0, 3->1, 3->2.
+    fn paper_edges() -> Vec<(u32, u32)> {
+        vec![(0, 1), (0, 2), (0, 3), (2, 0), (3, 1), (3, 2)]
+    }
+
+    #[test]
+    fn paper_directed_example() {
+        let csr = Csr::from_edges(4, &paper_edges(), false);
+        assert_eq!(csr.n(), 4);
+        // paper: Indices = [0, 3, 3, 4, 6], Neighbors = [1,2,3, 0, 1,2]
+        assert_eq!(csr.offsets, vec![0, 3, 3, 4, 6]);
+        assert_eq!(csr.neighbors, vec![1, 2, 3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn paper_undirected_example() {
+        let csr = Csr::from_edges(4, &paper_edges(), true);
+        // paper: Indices = [0, 3, 5, 7, 10], Neighbors = [1,2,3, 0,3, 0,3, 0,1,2]
+        assert_eq!(csr.offsets, vec![0, 3, 5, 7, 10]);
+        assert_eq!(csr.neighbors, vec![1, 2, 3, 0, 3, 0, 3, 0, 1, 2]);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let csr = Csr::from_edges(3, &[(0, 1), (0, 1), (1, 1), (2, 0)], false);
+        assert_eq!(csr.m(), 2);
+        assert!(csr.has_edge(0, 1));
+        assert!(!csr.has_edge(1, 1));
+    }
+
+    #[test]
+    fn has_edge_probes() {
+        let csr = Csr::from_edges(4, &paper_edges(), false);
+        assert!(csr.has_edge(0, 3));
+        assert!(!csr.has_edge(3, 0));
+        assert!(!csr.has_edge(1, 0));
+    }
+
+    #[test]
+    fn neighbors_above_partition() {
+        let csr = Csr::from_edges(4, &paper_edges(), true);
+        assert_eq!(csr.neighbors_above(0, 0), &[1, 2, 3]);
+        assert_eq!(csr.neighbors_above(0, 1), &[2, 3]);
+        assert_eq!(csr.neighbors_above(0, 3), &[] as &[u32]);
+        assert_eq!(csr.neighbors_above(2, 0), &[3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let csr = Csr::from_edges(4, &paper_edges(), false);
+        let t = csr.transpose();
+        assert!(t.has_edge(1, 0) && t.has_edge(0, 2));
+        assert_eq!(csr.m(), t.m());
+        assert_eq!(t.transpose(), csr);
+    }
+
+    #[test]
+    fn graph_semantic_edge_count() {
+        let g = Graph::from_edges(4, &paper_edges(), true);
+        assert_eq!(g.m(), 6);
+        let gu = Graph::from_edges(4, &paper_edges(), false);
+        // undirected: {0-1, 0-2, 0-3, 3-1, 3-2} — (2,0) duplicates 0-2
+        assert_eq!(gu.m(), 5);
+    }
+
+    #[test]
+    fn und_view_is_symmetric() {
+        let g = Graph::from_edges(4, &paper_edges(), true);
+        for (u, v) in g.und.edges().collect::<Vec<_>>() {
+            assert!(g.und.has_edge(v, u));
+        }
+    }
+
+    #[test]
+    fn empty_and_single_vertex() {
+        let csr = Csr::from_edges(0, &[], false);
+        assert_eq!(csr.n(), 0);
+        let csr = Csr::from_edges(1, &[], true);
+        assert_eq!(csr.n(), 1);
+        assert_eq!(csr.degree(0), 0);
+    }
+
+    #[test]
+    fn memory_is_linear_in_edges() {
+        let edges: Vec<(u32, u32)> = (0..100u32).map(|i| (i, (i + 1) % 100)).collect();
+        let csr = Csr::from_edges(100, &edges, false);
+        assert_eq!(csr.memory_bytes(), 101 * 8 + 100 * 4);
+    }
+}

@@ -1,0 +1,284 @@
+//! Random and deterministic graph generators.
+//!
+//! - `gnp_*`: Erdős–Rényi G(n, p) via Batagelj–Brandes geometric skipping,
+//!   O(n + E) — the paper's Section 7/8 workload.
+//! - `barabasi_albert`: preferential attachment, the scale-free stand-in
+//!   for the paper's real-world datasets (Section 9 / Table 1 substitution,
+//!   see DESIGN.md).
+//! - deterministic families (complete, star, ring, path, layered DAG,
+//!   total-order DAG) whose motif counts have closed forms — the paper's
+//!   "extensive validations on small toy-graphs".
+
+use super::csr::Graph;
+use crate::util::rng::Pcg32;
+
+/// Directed G(n, p): every ordered pair (u ≠ v) independently with prob p.
+pub fn gnp_directed(n: usize, p: f64, seed: u64) -> Graph {
+    let edges = sample_pairs(n as u64 * (n as u64 - 1), p, seed, |idx| {
+        // enumerate ordered pairs row-major, skipping the diagonal
+        let u = (idx / (n as u64 - 1)) as u32;
+        let mut v = (idx % (n as u64 - 1)) as u32;
+        if v >= u {
+            v += 1;
+        }
+        (u, v)
+    });
+    Graph::from_edges(n, &edges, true)
+}
+
+/// Undirected G(n, p): every unordered pair independently with prob p.
+pub fn gnp_undirected(n: usize, p: f64, seed: u64) -> Graph {
+    let total = n as u64 * (n as u64 - 1) / 2;
+    let edges = sample_pairs(total, p, seed, |idx| unrank_unordered(idx, n));
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Map a linear index to the (u, v) pair with u < v (row-major upper
+/// triangle): index = C(u-offset)... solved incrementally.
+fn unrank_unordered(idx: u64, n: usize) -> (u32, u32) {
+    // row u holds (n - 1 - u) pairs; find u by walking triangular numbers.
+    // Closed form via quadratic: u = n - 2 - floor((sqrt(8*(T-idx-1)+1)-1)/2)
+    // where T = n(n-1)/2; incremental walk is simpler and still O(1) amortized
+    // for the geometric-skip access pattern, but we need random access: use
+    // the closed form.
+    let t = n as u64 * (n as u64 - 1) / 2;
+    debug_assert!(idx < t);
+    let r = t - 1 - idx; // reverse index
+    let row_rev = (((8.0 * r as f64 + 1.0).sqrt() - 1.0) / 2.0).floor() as u64;
+    // guard float error
+    let row_rev = [row_rev.saturating_sub(1), row_rev, row_rev + 1]
+        .into_iter()
+        .find(|&k| k * (k + 1) / 2 <= r && r < (k + 1) * (k + 2) / 2)
+        .unwrap();
+    let u = n as u64 - 2 - row_rev;
+    let offset = idx - (t - (row_rev + 1) * (row_rev + 2) / 2);
+    let v = u + 1 + offset;
+    (u as u32, v as u32)
+}
+
+/// Batagelj–Brandes: skip sampling over a linearized pair space.
+fn sample_pairs(total: u64, p: f64, seed: u64, unrank: impl Fn(u64) -> (u32, u32)) -> Vec<(u32, u32)> {
+    let mut edges = Vec::with_capacity((total as f64 * p * 1.1) as usize + 16);
+    if p <= 0.0 || total == 0 {
+        return edges;
+    }
+    if p >= 1.0 {
+        for idx in 0..total {
+            edges.push(unrank(idx));
+        }
+        return edges;
+    }
+    let mut rng = Pcg32::seeded(seed);
+    let mut idx = rng.geometric(p);
+    while idx < total {
+        edges.push(unrank(idx));
+        idx += 1 + rng.geometric(p);
+    }
+    edges
+}
+
+/// Undirected Barabási–Albert preferential attachment: start from a clique
+/// of `m0 = m` vertices, attach each new vertex to `m` existing vertices
+/// chosen proportionally to degree (repeated-endpoint list method).
+pub fn barabasi_albert(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(m >= 1 && n > m, "need n > m >= 1");
+    let mut rng = Pcg32::seeded(seed);
+    let mut targets: Vec<u32> = Vec::with_capacity(2 * n * m);
+    let mut edges: Vec<(u32, u32)> = Vec::with_capacity(n * m);
+    // seed clique on m+1 vertices
+    for u in 0..=(m as u32) {
+        for v in (u + 1)..=(m as u32) {
+            edges.push((u, v));
+            targets.push(u);
+            targets.push(v);
+        }
+    }
+    for v in (m + 1)..n {
+        let v = v as u32;
+        let mut chosen: Vec<u32> = Vec::with_capacity(m);
+        while chosen.len() < m {
+            let t = targets[rng.below_usize(targets.len())];
+            if !chosen.contains(&t) {
+                chosen.push(t);
+            }
+        }
+        for &t in &chosen {
+            edges.push((v, t));
+            targets.push(v);
+            targets.push(t);
+        }
+    }
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Directed scale-free analog: BA skeleton with each edge oriented
+/// uniformly at random, plus a reciprocal back-edge with prob `recip` —
+/// used for the directed versions of the Table 1 datasets (WBD, LJD).
+pub fn barabasi_albert_directed(n: usize, m: usize, recip: f64, seed: u64) -> Graph {
+    let skeleton = barabasi_albert(n, m, seed);
+    let mut rng = Pcg32::seeded(seed ^ 0xD1CE);
+    let mut edges = Vec::with_capacity(skeleton.m() * 2);
+    for (u, v) in skeleton.und.edges() {
+        if u < v {
+            let (a, b) = if rng.bernoulli(0.5) { (u, v) } else { (v, u) };
+            edges.push((a, b));
+            if rng.bernoulli(recip) {
+                edges.push((b, a));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// Complete graph K_n (undirected), or complete digraph with both arcs.
+pub fn complete(n: usize, directed: bool) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1));
+    for u in 0..n as u32 {
+        for v in 0..n as u32 {
+            if u < v || (directed && u != v) {
+                edges.push((u, v));
+            }
+        }
+    }
+    Graph::from_edges(n, &edges, directed)
+}
+
+/// Star K_{1,n-1}: vertex 0 is the hub.
+pub fn star(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (1..n as u32).map(|v| (0, v)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Simple cycle 0-1-..-n-1-0.
+pub fn ring(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (0..n as u32).map(|v| (v, (v + 1) % n as u32)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Simple path 0-1-..-n-1.
+pub fn path(n: usize) -> Graph {
+    let edges: Vec<(u32, u32)> = (0..n as u32 - 1).map(|v| (v, v + 1)).collect();
+    Graph::from_edges(n, &edges, false)
+}
+
+/// Total-order DAG: edge i -> j for every i < j (a "regular DAG" with
+/// closed-form motif counts — every k-subset induces the transitive
+/// tournament).
+pub fn total_order_dag(n: usize) -> Graph {
+    let mut edges = Vec::with_capacity(n * (n - 1) / 2);
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            edges.push((u, v));
+        }
+    }
+    Graph::from_edges(n, &edges, true)
+}
+
+/// Layered DAG: `layers` layers of `width` vertices, all edges from each
+/// layer to the next.
+pub fn layered_dag(layers: usize, width: usize) -> Graph {
+    let mut edges = Vec::new();
+    for l in 0..layers - 1 {
+        for a in 0..width {
+            for b in 0..width {
+                edges.push(((l * width + a) as u32, ((l + 1) * width + b) as u32));
+            }
+        }
+    }
+    Graph::from_edges(layers * width, &edges, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gnp_directed_edge_count_near_expectation() {
+        let n = 300;
+        let p = 0.05;
+        let g = gnp_directed(n, p, 1);
+        let expect = (n * (n - 1)) as f64 * p;
+        let m = g.m() as f64;
+        assert!((m - expect).abs() < 4.0 * expect.sqrt(), "m={m} expect={expect}");
+        assert!(g.directed);
+    }
+
+    #[test]
+    fn gnp_undirected_edge_count_near_expectation() {
+        let n = 300;
+        let p = 0.05;
+        let g = gnp_undirected(n, p, 2);
+        let expect = (n * (n - 1) / 2) as f64 * p;
+        let m = g.m() as f64;
+        assert!((m - expect).abs() < 4.0 * expect.sqrt(), "m={m} expect={expect}");
+    }
+
+    #[test]
+    fn gnp_deterministic_per_seed() {
+        let a = gnp_directed(100, 0.1, 7);
+        let b = gnp_directed(100, 0.1, 7);
+        assert_eq!(a.out, b.out);
+        let c = gnp_directed(100, 0.1, 8);
+        assert_ne!(a.out, c.out);
+    }
+
+    #[test]
+    fn gnp_extremes() {
+        assert_eq!(gnp_directed(50, 0.0, 1).m(), 0);
+        assert_eq!(gnp_directed(20, 1.0, 1).m(), 380);
+        assert_eq!(gnp_undirected(20, 1.0, 1).m(), 190);
+    }
+
+    #[test]
+    fn unrank_unordered_is_bijective() {
+        let n = 9;
+        let total = n * (n - 1) / 2;
+        let mut seen = std::collections::HashSet::new();
+        for idx in 0..total as u64 {
+            let (u, v) = unrank_unordered(idx, n);
+            assert!(u < v && (v as usize) < n, "idx {idx} -> ({u},{v})");
+            assert!(seen.insert((u, v)));
+        }
+        assert_eq!(seen.len(), total);
+    }
+
+    #[test]
+    fn ba_edge_count_and_connectivity() {
+        let n = 200;
+        let m = 3;
+        let g = barabasi_albert(n, m, 3);
+        // clique(m+1) + m per additional vertex
+        let expect = (m + 1) * m / 2 + (n - m - 1) * m;
+        assert_eq!(g.m(), expect);
+        // hub-heavy: max degree far above m
+        let max_deg = (0..n as u32).map(|v| g.und_degree(v)).max().unwrap();
+        assert!(max_deg > 3 * m, "max degree {max_deg}");
+    }
+
+    #[test]
+    fn ba_directed_respects_reciprocity_bounds() {
+        let g0 = barabasi_albert_directed(300, 2, 0.0, 5);
+        let g1 = barabasi_albert_directed(300, 2, 1.0, 5);
+        assert!(g1.m() > g0.m());
+        assert_eq!(g1.m(), 2 * g0.m()); // every edge reciprocated
+    }
+
+    #[test]
+    fn deterministic_families() {
+        assert_eq!(complete(5, false).m(), 10);
+        assert_eq!(complete(5, true).m(), 20);
+        assert_eq!(star(6).m(), 5);
+        assert_eq!(ring(6).m(), 6);
+        assert_eq!(path(6).m(), 5);
+        assert_eq!(total_order_dag(5).m(), 10);
+        assert_eq!(layered_dag(3, 4).m(), 2 * 16);
+    }
+
+    #[test]
+    fn total_order_dag_is_acyclic() {
+        let g = total_order_dag(8);
+        for (u, v) in g.out.edges() {
+            assert!(u < v);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! Edge-list text IO.
+//!
+//! Format: one `u v` pair per line (whitespace separated, `#` comments and
+//! blank lines ignored) — the format SNAP distributes the paper's datasets
+//! in, so real downloads drop in directly when network is available.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::builder::GraphBuilder;
+use super::csr::Graph;
+
+/// Load an edge list file into a graph.
+pub fn load_edge_list(path: &Path, directed: bool) -> Result<Graph> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut b = GraphBuilder::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("{}:{}: expected `u v`, got {trimmed:?}", path.display(), lineno + 1),
+        };
+        let u: u32 = u
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {u:?}", path.display(), lineno + 1))?;
+        let v: u32 = v
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {v:?}", path.display(), lineno + 1))?;
+        b.add_edge(u, v);
+    }
+    Ok(b.build(directed))
+}
+
+/// Write a graph as an edge list (directed edges, or each undirected edge
+/// once with u < v).
+pub fn write_edge_list(graph: &Graph, path: &Path) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# vdmc edge list: n={} m={} directed={}", graph.n(), graph.m(), graph.directed)?;
+    if graph.directed {
+        for (u, v) in graph.out.edges() {
+            writeln!(w, "{u}\t{v}")?;
+        }
+    } else {
+        for (u, v) in graph.und.edges() {
+            if u < v {
+                writeln!(w, "{u}\t{v}")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write per-vertex motif counts as TSV: vertex, then one column per class.
+pub fn write_counts_tsv(
+    path: &Path,
+    class_ids: &[u16],
+    per_vertex: &[u64],
+    n_classes: usize,
+) -> Result<()> {
+    let file = File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    write!(w, "# vertex")?;
+    for c in class_ids {
+        write!(w, "\tm{c}")?;
+    }
+    writeln!(w)?;
+    for (v, row) in per_vertex.chunks(n_classes).enumerate() {
+        write!(w, "{v}")?;
+        for c in row {
+            write!(w, "\t{c}")?;
+        }
+        writeln!(w)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as IoWrite;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("vdmc_io_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_directed() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (3, 0)], true);
+        let p = tmp("rt.tsv");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, true).unwrap();
+        assert_eq!(g2.n(), 4);
+        assert_eq!(g2.m(), 3);
+        assert!(g2.has_directed_edge(3, 0));
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn roundtrip_undirected_halves_edges() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2)], false);
+        let p = tmp("rtu.tsv");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = load_edge_list(&p, false).unwrap();
+        assert_eq!(g2.m(), 2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let p = tmp("cmt.tsv");
+        let mut f = File::create(&p).unwrap();
+        writeln!(f, "# a comment\n\n% another\n0 1\n1\t2").unwrap();
+        drop(f);
+        let g = load_edge_list(&p, true).unwrap();
+        assert_eq!(g.m(), 2);
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn malformed_line_is_error() {
+        let p = tmp("bad.tsv");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_edge_list(&p, true).is_err());
+        std::fs::write(&p, "0\n").unwrap();
+        assert!(load_edge_list(&p, true).is_err());
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn missing_file_is_error() {
+        assert!(load_edge_list(Path::new("/nonexistent/g.tsv"), true).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: the paper's cache-aware CSR structure (Section 4.2),
+//! builders, text IO, random-graph generators and the degree-descending
+//! vertex ordering of Section 6.
+
+pub mod builder;
+pub mod csr;
+pub mod generators;
+pub mod io;
+pub mod ordering;
+
+pub use builder::GraphBuilder;
+pub use csr::{Csr, Graph};
+pub use ordering::VertexOrdering;

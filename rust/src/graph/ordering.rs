@@ -1,0 +1,147 @@
+//! Vertex ordering (paper Section 6): vertices sorted by *descending*
+//! undirected degree, so the heaviest vertices get the lowest indices, are
+//! processed first, and are de-facto removed from the graph for everyone
+//! else ("no re-passing on these heavy vertices").
+
+use super::csr::Graph;
+
+/// A relabeling between original ids and VDMC processing ids.
+#[derive(Debug, Clone, PartialEq)]
+pub struct VertexOrdering {
+    /// `new_of_old[orig] = processing index`.
+    pub new_of_old: Vec<u32>,
+    /// `old_of_new[processing index] = orig`.
+    pub old_of_new: Vec<u32>,
+}
+
+impl VertexOrdering {
+    /// Identity ordering.
+    pub fn identity(n: usize) -> Self {
+        let ids: Vec<u32> = (0..n as u32).collect();
+        VertexOrdering { new_of_old: ids.clone(), old_of_new: ids }
+    }
+
+    /// Descending undirected degree; ties broken by ascending original id
+    /// (the paper allows an arbitrary order between equal degrees; fixing
+    /// it makes runs deterministic).
+    pub fn degree_descending(graph: &Graph) -> Self {
+        let n = graph.n();
+        let mut order: Vec<u32> = (0..n as u32).collect();
+        order.sort_by_key(|&v| (std::cmp::Reverse(graph.und_degree(v)), v));
+        let mut new_of_old = vec![0u32; n];
+        for (new, &old) in order.iter().enumerate() {
+            new_of_old[old as usize] = new as u32;
+        }
+        VertexOrdering { new_of_old, old_of_new: order }
+    }
+
+    /// Relabel a graph into processing ids.
+    pub fn apply(&self, graph: &Graph) -> Graph {
+        let edges: Vec<(u32, u32)> = if graph.directed {
+            graph
+                .out
+                .edges()
+                .map(|(u, v)| (self.new_of_old[u as usize], self.new_of_old[v as usize]))
+                .collect()
+        } else {
+            graph
+                .und
+                .edges()
+                .filter(|&(u, v)| u < v)
+                .map(|(u, v)| (self.new_of_old[u as usize], self.new_of_old[v as usize]))
+                .collect()
+        };
+        Graph::from_edges(graph.n(), &edges, graph.directed)
+    }
+
+    /// Map a row-major per-vertex matrix (processing order) back to
+    /// original vertex order.
+    pub fn unapply_rows<T: Copy + Default>(&self, rows: &[T], width: usize) -> Vec<T> {
+        let n = self.old_of_new.len();
+        assert_eq!(rows.len(), n * width, "row matrix shape mismatch");
+        let mut out = vec![T::default(); rows.len()];
+        for (new, &old) in self.old_of_new.iter().enumerate() {
+            out[old as usize * width..(old as usize + 1) * width]
+                .copy_from_slice(&rows[new * width..(new + 1) * width]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// star: vertex 3 is the hub (degree 3), others degree 1.
+    fn star() -> Graph {
+        Graph::from_edges(4, &[(3, 0), (3, 1), (3, 2)], false)
+    }
+
+    #[test]
+    fn hub_gets_index_zero() {
+        let g = star();
+        let ord = VertexOrdering::degree_descending(&g);
+        assert_eq!(ord.new_of_old[3], 0);
+        assert_eq!(ord.old_of_new[0], 3);
+    }
+
+    #[test]
+    fn ties_broken_by_original_id() {
+        let g = star();
+        let ord = VertexOrdering::degree_descending(&g);
+        // leaves 0,1,2 have equal degree; ascending orig id order
+        assert_eq!(&ord.old_of_new[1..], &[0, 1, 2]);
+    }
+
+    #[test]
+    fn inverse_consistency() {
+        let g = Graph::from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (0, 5), (1, 3)], false);
+        let ord = VertexOrdering::degree_descending(&g);
+        for old in 0..6u32 {
+            assert_eq!(ord.old_of_new[ord.new_of_old[old as usize] as usize], old);
+        }
+    }
+
+    #[test]
+    fn apply_preserves_structure() {
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3), (3, 0)], true);
+        let ord = VertexOrdering::degree_descending(&g);
+        let h = ord.apply(&g);
+        assert_eq!(h.n(), g.n());
+        assert_eq!(h.m(), g.m());
+        // degrees sorted descending in processing order
+        let degs: Vec<usize> = (0..h.n() as u32).map(|v| h.und_degree(v)).collect();
+        for w in degs.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // edge relabel correctness: relabeled edge exists iff original did
+        for u in 0..4u32 {
+            for v in 0..4u32 {
+                assert_eq!(
+                    g.has_directed_edge(u, v),
+                    h.has_directed_edge(ord.new_of_old[u as usize], ord.new_of_old[v as usize])
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn unapply_rows_roundtrip() {
+        let g = star();
+        let ord = VertexOrdering::degree_descending(&g);
+        // rows in processing order: vertex new-id i has row [i, i]
+        let rows: Vec<u32> = (0..4u32).flat_map(|i| [i, i]).collect();
+        let orig = ord.unapply_rows(&rows, 2);
+        // original vertex 3 was processing index 0
+        assert_eq!(&orig[6..8], &[0, 0]);
+        assert_eq!(&orig[0..2], &[1, 1]);
+    }
+
+    #[test]
+    fn identity_is_noop() {
+        let g = star();
+        let ord = VertexOrdering::identity(4);
+        let h = ord.apply(&g);
+        assert_eq!(h.und, g.und);
+    }
+}

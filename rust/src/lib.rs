@@ -1,0 +1,44 @@
+//! # VDMC — Vertex-specific Distributed Motif Counting
+//!
+//! A full reproduction of *"BFS based distributed algorithm for parallel
+//! local directed sub-graph enumeration"* (Levinas, Scherz & Louzoun, IMA
+//! J. Complex Networks 2022) as a three-layer Rust + JAX/Pallas system:
+//!
+//! - **L3 (this crate)**: the cache-aware CSR graph substrate, the proper
+//!   k-BFS enumeration engine (each 3-/4-motif counted once and only
+//!   once — Section 5 lemmas), the leader/worker coordinator distributing
+//!   (root, neighbor) work units (Section 6), baselines, the Eq. 7.4
+//!   theory, and the Section 10 toolbox.
+//! - **L2/L1 (python/compile, build-time only)**: JAX graphs composing
+//!   Pallas kernels (instance-histogram matmul, isomorph-projection
+//!   matmul, dense matrix baseline), AOT-lowered to HLO text by
+//!   `make artifacts`.
+//! - **runtime**: loads those artifacts through the PJRT CPU client (the
+//!   `xla` crate) and executes them from the Rust hot path — Python never
+//!   runs at serve time.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use vdmc::coordinator::{count_motifs, CountConfig};
+//! use vdmc::graph::generators;
+//! use vdmc::motifs::{Direction, MotifSize};
+//!
+//! let g = generators::gnp_directed(1000, 0.01, 42);
+//! let counts = count_motifs(&g, &CountConfig {
+//!     size: MotifSize::Four,
+//!     direction: Direction::Directed,
+//!     ..Default::default()
+//! }).unwrap();
+//! println!("4-motif instances: {}", counts.total_instances);
+//! println!("vertex 0 counts: {:?}", counts.vertex(0));
+//! ```
+
+pub mod baselines;
+pub mod coordinator;
+pub mod graph;
+pub mod motifs;
+pub mod runtime;
+pub mod theory;
+pub mod toolbox;
+pub mod util;

@@ -1,0 +1,349 @@
+//! Proper 4-BFS enumeration (paper Lemma 2: exactly four structures,
+//! ordered by average depth 0.75, 1, 1.25, 1.5 — Fig. 2).
+//!
+//! For root i with first-level set N(i) (indices > i only — Lemma 1), a
+//! 4-set X = {i, x1, x2, x3} connected in G_U decomposes uniquely by
+//! |X ∩ N(i)| (every vertex takes its *minimal* depth, Lemma 3):
+//!
+//! - S1 (depth 0.75): three first-level vertices a < b < c.
+//! - S2 (depth 1.00): two first-level a < b, one second-level c
+//!   (c ∉ N(i), reached through a or b — deduplicated: via-b only when
+//!   c ∉ N(a)).
+//! - S3 (depth 1.25): one first-level a, two second-level c < d ∈ N(a).
+//! - S4 (depth 1.50): the path i—a—c—d with d ∉ N(i) ∪ N(a).
+//!
+//! Lemma 4 correction: in the paper's BFS-marking formulation a depth-1.5
+//! motif can be missed when its last vertex was marked depth-2 through a
+//! vertex *outside* the set (the 5-loop case). Our membership checks are
+//! set-local (d is tested directly against N(i) and N(a), never against a
+//! global depth mark), which is precisely the corrected rule the paper
+//! describes — so no special case is needed. `tests::lemma4_five_cycle`
+//! pins this.
+//!
+//! Hot path: of the six vertex pairs, five touch root or `a` and read
+//! O(1) mark bits; only the (y, z) pair between the last two vertices
+//! needs an adjacency probe — and for S4 even its undirected membership
+//! is already known (EXPERIMENTS.md §Perf).
+
+use crate::graph::csr::Graph;
+
+use super::bfs3::EnumCtx;
+use super::ids::MotifId;
+use super::probe::{pair_bits, DirBits, MergedNeighbors};
+use super::Direction;
+
+/// Backwards-compatible alias: the per-worker scratch is the shared
+/// [`EnumCtx`].
+pub use super::bfs3::EnumCtx as Scratch;
+
+/// Raw id of (root, a, y, z) from mark bits + one probed pair.
+/// Bit layout (MSB first): (0,1)(0,2)(0,3)(1,0)(1,2)(1,3)(2,0)(2,1)(2,3)(3,0)(3,1)(3,2).
+#[inline]
+fn raw4(
+    ctx: &EnumCtx,
+    g: &Graph,
+    dir: Direction,
+    a: u32,
+    y: u32,
+    z: u32,
+    yz_known_und: Option<bool>,
+) -> MotifId {
+    raw4_with_yz(ctx, a, y, z, pair_bits(g, dir, y, z, yz_known_und))
+}
+
+/// As [`raw4`] when the caller already holds the (y, z) direction bits
+/// (the merged-iterator loops).
+#[inline]
+fn raw4_with_yz(ctx: &EnumCtx, a: u32, y: u32, z: u32, yz: DirBits) -> MotifId {
+    let ra = ctx.root_marks.dir_bits(a) as u16;
+    let ry = ctx.root_marks.dir_bits(y) as u16;
+    let rz = ctx.root_marks.dir_bits(z) as u16;
+    let ay = ctx.a_marks.dir_bits(y) as u16;
+    let az = ctx.a_marks.dir_bits(z) as u16;
+    let yz = yz as u16;
+    ((ra & 1) << 11)
+        | ((ry & 1) << 10)
+        | ((rz & 1) << 9)
+        | ((ra >> 1) << 8)
+        | ((ay & 1) << 7)
+        | ((az & 1) << 6)
+        | ((ry >> 1) << 5)
+        | ((ay >> 1) << 4)
+        | ((yz & 1) << 3)
+        | ((rz >> 1) << 2)
+        | ((az >> 1) << 1)
+        | (yz >> 1)
+}
+
+/// Enumerate all proper 4-motifs of `root` whose lowest-index first-level
+/// vertex is the `j`-th proper neighbor (the paper's (vertex, neighbor)
+/// GPU block).
+pub fn enumerate_unit(
+    g: &Graph,
+    dir: Direction,
+    root: u32,
+    j: usize,
+    ctx: &mut EnumCtx,
+    emit: &mut impl FnMut(&[u32; 4], MotifId),
+) {
+    ctx.root_marks.mark(g, dir, root);
+    let und = &g.und;
+    let proper = und.neighbors_above(root, root);
+    let a = proper[j];
+    ctx.a_marks.mark(g, dir, a);
+    let later = &proper[j + 1..];
+
+    // ---- S1 (avg depth 0.75): a < b < c all first-level. Per-pair
+    // probes beat a N(b)-merge here at real-world degrees (measured —
+    // EXPERIMENTS.md §Perf iteration 3).
+    for (bi, &b) in later.iter().enumerate() {
+        for &c in &later[bi + 1..] {
+            emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
+        }
+    }
+
+    // Second level through a: c ∈ N(a), c > root, c ∉ N(i) (minimal depth).
+    // Take the buffer out of ctx so ctx stays borrowable for raw4.
+    let mut d2a = std::mem::take(&mut ctx.d2a);
+    d2a.clear();
+    for &c in und.neighbors_above(a, root) {
+        if !ctx.root_marks.contains(c) {
+            d2a.push(c);
+        }
+    }
+
+    // ---- S2 (avg depth 1.0): pair (a, b), second-level c.
+    for &b in later {
+        // c through a (c ∈ N(a): the (b, c) pair is the unknown one)
+        for &c in &d2a {
+            emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
+        }
+        // c through b only (c ∉ N(a) avoids double counting the set);
+        // the merged iterator hands us the (b, c) bits for free
+        for (c, bc) in MergedNeighbors::above(g, dir, b, root) {
+            if ctx.root_marks.contains(c) || ctx.a_marks.contains(c) {
+                continue;
+            }
+            emit(&[root, a, b, c], raw4_with_yz(ctx, a, b, c, bc));
+        }
+    }
+
+    // ---- S3 (avg depth 1.25): two second-level vertices through a.
+    // d2a is sorted (filtered from a sorted slice), giving c < d.
+    for (ci, &c) in d2a.iter().enumerate() {
+        for &d in &d2a[ci + 1..] {
+            emit(&[root, a, c, d], raw4(ctx, g, dir, a, c, d, None));
+        }
+    }
+
+    // ---- S4 (avg depth 1.5): path i—a—c—d. Set-local checks implement
+    // the Lemma 4 correction (see module docs); the merged iterator
+    // carries the (c, d) bits.
+    for &c in &d2a {
+        for (d, cd) in MergedNeighbors::above(g, dir, c, root) {
+            if d == a || ctx.root_marks.contains(d) || ctx.a_marks.contains(d) {
+                continue;
+            }
+            emit(&[root, a, c, d], raw4_with_yz(ctx, a, c, d, cd));
+        }
+    }
+
+    ctx.d2a = d2a;
+}
+
+/// All proper 4-motifs rooted at `root`.
+pub fn enumerate_root(
+    g: &Graph,
+    dir: Direction,
+    root: u32,
+    ctx: &mut EnumCtx,
+    emit: &mut impl FnMut(&[u32; 4], MotifId),
+) {
+    let units = g.und.neighbors_above(root, root).len();
+    for j in 0..units {
+        enumerate_unit(g, dir, root, j, ctx, emit);
+    }
+}
+
+/// Serial full enumeration (tests/baseline).
+pub fn enumerate_all(g: &Graph, dir: Direction, emit: &mut impl FnMut(&[u32; 4], MotifId)) {
+    let mut ctx = EnumCtx::new(g.n());
+    for root in 0..g.n() as u32 {
+        enumerate_root(g, dir, root, &mut ctx, emit);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use std::collections::HashSet;
+
+    fn brute_force_4sets(g: &Graph) -> usize {
+        // count connected induced 4-subsets of G_U
+        let n = g.n() as u32;
+        let mut count = 0;
+        for w in 0..n {
+            for x in (w + 1)..n {
+                for y in (x + 1)..n {
+                    for z in (y + 1)..n {
+                        let vs = [w, x, y, z];
+                        let mut adj = [[false; 4]; 4];
+                        for i in 0..4 {
+                            for jj in 0..4 {
+                                if i != jj {
+                                    adj[i][jj] = g.und.has_edge(vs[i], vs[jj]);
+                                }
+                            }
+                        }
+                        let mut seen = [false; 4];
+                        let mut stack = vec![0usize];
+                        seen[0] = true;
+                        let mut cnt = 1;
+                        while let Some(v) = stack.pop() {
+                            for u in 0..4 {
+                                if !seen[u] && adj[v][u] {
+                                    seen[u] = true;
+                                    cnt += 1;
+                                    stack.push(u);
+                                }
+                            }
+                        }
+                        if cnt == 4 {
+                            count += 1;
+                        }
+                    }
+                }
+            }
+        }
+        count
+    }
+
+    fn enumerated_sets(g: &Graph) -> Vec<[u32; 4]> {
+        let mut out = Vec::new();
+        enumerate_all(g, Direction::Undirected, &mut |v, _| {
+            let mut s = *v;
+            s.sort_unstable();
+            out.push(s);
+        });
+        out
+    }
+
+    #[test]
+    fn every_4set_exactly_once_random() {
+        for seed in [1u64, 2, 3] {
+            let g = generators::gnp_undirected(14, 0.3, seed);
+            let sets = enumerated_sets(&g);
+            let unique: HashSet<_> = sets.iter().collect();
+            assert_eq!(unique.len(), sets.len(), "duplicates (seed {seed})");
+            assert_eq!(sets.len(), brute_force_4sets(&g), "coverage (seed {seed})");
+        }
+    }
+
+    #[test]
+    fn every_4set_exactly_once_dense() {
+        let g = generators::gnp_undirected(10, 0.7, 9);
+        let sets = enumerated_sets(&g);
+        let unique: HashSet<_> = sets.iter().collect();
+        assert_eq!(unique.len(), sets.len());
+        assert_eq!(sets.len(), brute_force_4sets(&g));
+    }
+
+    #[test]
+    fn lemma4_five_cycle() {
+        // The paper's Lemma 4 pathology: a 4-path inside a 5-cycle. The
+        // motif {0,1,2,3} of the cycle 0-1-2-3-4-0 has depth-1.5 shape from
+        // root 0 via 1, but vertex 3 is also depth-2 through the external
+        // vertex 4. A naive global-depth implementation misses it.
+        let g = generators::ring(5);
+        let sets = enumerated_sets(&g);
+        let unique: HashSet<_> = sets.iter().collect();
+        assert_eq!(unique.len(), sets.len());
+        assert_eq!(sets.len(), 5); // C(5,4) induced paths
+        assert_eq!(sets.len(), brute_force_4sets(&g));
+    }
+
+    #[test]
+    fn k4_emitted_once_with_full_id() {
+        let g = generators::complete(4, false);
+        let mut got = Vec::new();
+        enumerate_all(&g, Direction::Undirected, &mut |v, id| got.push((*v, id)));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].0, [0, 1, 2, 3]);
+        assert_eq!(got[0].1, 0xFFF);
+    }
+
+    #[test]
+    fn directed_path_id() {
+        // 0 -> 1 -> 2 -> 3 chain: S4 structure, verts (0,1,2,3)
+        // bits: (0,1)=1, (1,2)=1, (2,3)=1 -> 100010001000
+        let g = Graph::from_edges(4, &[(0, 1), (1, 2), (2, 3)], true);
+        let mut got = Vec::new();
+        enumerate_all(&g, Direction::Directed, &mut |v, id| got.push((*v, id)));
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].1, 0b100010001000);
+    }
+
+    #[test]
+    fn raw_ids_match_direct_encoding_on_random_digraph() {
+        use crate::motifs::ids::encode_adjacency;
+        for seed in [4u64, 17] {
+            let g = generators::gnp_directed(16, 0.3, seed);
+            enumerate_all(&g, Direction::Directed, &mut |v, id| {
+                let direct = encode_adjacency(4, |i, j| g.out.has_edge(v[i], v[j]));
+                assert_eq!(id, direct, "tuple {v:?} seed {seed}");
+            });
+            enumerate_all(&g, Direction::Undirected, &mut |v, id| {
+                let direct = encode_adjacency(4, |i, j| g.und.has_edge(v[i], v[j]));
+                assert_eq!(id, direct, "tuple {v:?} seed {seed}");
+            });
+        }
+    }
+
+    #[test]
+    fn root_is_always_minimal() {
+        let g = generators::gnp_undirected(12, 0.4, 8);
+        enumerate_all(&g, Direction::Undirected, &mut |v, _| {
+            assert!(v[1] > v[0] && v[2] > v[0] && v[3] > v[0]);
+        });
+    }
+
+    #[test]
+    fn star_counts() {
+        let g = generators::star(6);
+        let sets = enumerated_sets(&g);
+        assert_eq!(sets.len(), 10); // C(5,3)
+        assert_eq!(sets.len(), brute_force_4sets(&g));
+    }
+
+    #[test]
+    fn units_partition_root_work() {
+        let g = generators::gnp_undirected(12, 0.45, 21);
+        let mut ctx = EnumCtx::new(g.n());
+        for root in 0..g.n() as u32 {
+            let mut whole = Vec::new();
+            enumerate_root(&g, Direction::Undirected, root, &mut ctx, &mut |v, _| {
+                whole.push(*v)
+            });
+            let units = g.und.neighbors_above(root, root).len();
+            let mut by_units = Vec::new();
+            for j in 0..units {
+                enumerate_unit(&g, Direction::Undirected, root, j, &mut ctx, &mut |v, _| {
+                    by_units.push(*v)
+                });
+            }
+            whole.sort_unstable();
+            by_units.sort_unstable();
+            assert_eq!(whole, by_units);
+        }
+    }
+
+    #[test]
+    fn layered_dag_structures() {
+        // 2x2 layered DAG: K_{2,2} underlying; one connected 4-set
+        let g = generators::layered_dag(2, 2);
+        let sets = enumerated_sets(&g);
+        assert_eq!(sets.len(), 1);
+        assert_eq!(sets.len(), brute_force_4sets(&g));
+    }
+}

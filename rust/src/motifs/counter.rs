@@ -1,0 +1,296 @@
+//! Per-vertex motif counters.
+//!
+//! During enumeration each instance increments `count[v][class]` for every
+//! vertex v it contains. Two update strategies are provided (the paper's
+//! GPU uses atomicAdd; a sharded merge is the classic CPU alternative —
+//! `benches/ablations.rs` compares them):
+//!
+//! - [`AtomicCounter`]: one shared array of `AtomicU64`, relaxed fetch-add —
+//!   the direct analog of the paper's Appendix I "atomic add" update.
+//! - plain per-worker `Vec<u64>` shards merged by the coordinator.
+//!
+//! [`SlotMapper`] compacts raw ids into the direction-appropriate class
+//! space (13/199 directed, 2/6 undirected) so undirected runs don't pay the
+//! directed class width.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::ids::MotifId;
+use super::iso::{iso_table, ClassInfo, IsoTable, NO_SLOT};
+use super::Direction;
+
+/// Maps raw motif ids to compact class slots for a (k, direction) pair.
+#[derive(Debug)]
+pub struct SlotMapper {
+    /// raw id -> compact slot (NO_SLOT when the id can't occur).
+    slot_of_raw: Vec<u16>,
+    /// compact slot -> ClassInfo (borrowed from the static iso table).
+    classes: Vec<&'static ClassInfo>,
+    pub k: usize,
+    pub direction: Direction,
+}
+
+impl SlotMapper {
+    pub fn new(k: usize, direction: Direction) -> SlotMapper {
+        let table: &'static IsoTable = iso_table(k);
+        match direction {
+            Direction::Directed => SlotMapper {
+                slot_of_raw: table.class_slot.clone(),
+                classes: table.classes.iter().collect(),
+                k,
+                direction,
+            },
+            Direction::Undirected => {
+                // compact the symmetric classes
+                let mut classes = Vec::new();
+                let mut compact_of_full = vec![NO_SLOT; table.classes.len()];
+                for (full, c) in table.classes.iter().enumerate() {
+                    if c.symmetric {
+                        compact_of_full[full] = classes.len() as u16;
+                        classes.push(c);
+                    }
+                }
+                let slot_of_raw = table
+                    .class_slot
+                    .iter()
+                    .map(|&s| if s == NO_SLOT { NO_SLOT } else { compact_of_full[s as usize] })
+                    .collect();
+                SlotMapper { slot_of_raw, classes, k, direction }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Compact slot for a raw id (NO_SLOT for disconnected ids, or
+    /// asymmetric ids in undirected mode).
+    #[inline]
+    pub fn slot(&self, raw: MotifId) -> u16 {
+        self.slot_of_raw[raw as usize]
+    }
+
+    pub fn classes(&self) -> &[&'static ClassInfo] {
+        &self.classes
+    }
+
+    /// Canonical ids in slot order (column labels for outputs).
+    pub fn class_ids(&self) -> Vec<u16> {
+        self.classes.iter().map(|c| c.canonical_id).collect()
+    }
+}
+
+/// Shared atomic per-vertex counter (paper Appendix I update strategy).
+pub struct AtomicCounter {
+    counts: Vec<AtomicU64>,
+    n_classes: usize,
+    instances: AtomicU64,
+}
+
+impl AtomicCounter {
+    pub fn new(n: usize, n_classes: usize) -> AtomicCounter {
+        let mut counts = Vec::with_capacity(n * n_classes);
+        counts.resize_with(n * n_classes, || AtomicU64::new(0));
+        AtomicCounter { counts, n_classes, instances: AtomicU64::new(0) }
+    }
+
+    /// Record one instance: +1 for every member vertex in `slot`.
+    #[inline]
+    pub fn record(&self, verts: &[u32], slot: u16) {
+        self.instances.fetch_add(1, Ordering::Relaxed);
+        for &v in verts {
+            self.counts[v as usize * self.n_classes + slot as usize]
+                .fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn instances(&self) -> u64 {
+        self.instances.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot into a plain vec.
+    pub fn into_vec(self) -> Vec<u64> {
+        self.counts.into_iter().map(|a| a.into_inner()).collect()
+    }
+}
+
+/// Per-worker shard for the merge strategy.
+#[derive(Debug, Clone)]
+pub struct ShardCounter {
+    pub counts: Vec<u64>,
+    n_classes: usize,
+    pub instances: u64,
+}
+
+impl ShardCounter {
+    pub fn new(n: usize, n_classes: usize) -> ShardCounter {
+        ShardCounter { counts: vec![0; n * n_classes], n_classes, instances: 0 }
+    }
+
+    #[inline]
+    pub fn record(&mut self, verts: &[u32], slot: u16) {
+        self.instances += 1;
+        for &v in verts {
+            let idx = v as usize * self.n_classes + slot as usize;
+            debug_assert!(idx < self.counts.len());
+            // SAFETY: v < n (enumerator invariant) and slot < n_classes
+            // (SlotMapper invariant); checked in debug builds above.
+            unsafe { *self.counts.get_unchecked_mut(idx) += 1 };
+        }
+    }
+
+    /// Merge another shard into this one.
+    pub fn merge(&mut self, other: &ShardCounter) {
+        assert_eq!(self.counts.len(), other.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.instances += other.instances;
+    }
+}
+
+/// Which update strategy the coordinator uses (ablation in benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CounterMode {
+    /// Shared AtomicU64 array, relaxed fetch_add (paper's GPU strategy).
+    Atomic,
+    /// Per-worker shards merged at the end (higher memory, no contention).
+    Sharded,
+}
+
+/// Final result of a counting run: per-vertex canonical-class counts.
+#[derive(Debug, Clone)]
+pub struct MotifCounts {
+    pub k: usize,
+    pub direction: Direction,
+    pub n: usize,
+    pub n_classes: usize,
+    /// Row-major (n × n_classes), in ORIGINAL vertex ids.
+    pub per_vertex: Vec<u64>,
+    /// Canonical id per slot (column labels).
+    pub class_ids: Vec<u16>,
+    /// Total motif instances counted (each once and only once).
+    pub total_instances: u64,
+    /// Wall-clock seconds of the counting phase.
+    pub elapsed_secs: f64,
+}
+
+impl MotifCounts {
+    /// Counts row of one vertex.
+    pub fn vertex(&self, v: u32) -> &[u64] {
+        &self.per_vertex[v as usize * self.n_classes..(v as usize + 1) * self.n_classes]
+    }
+
+    /// Per-class totals over all vertices (= k × instances per class).
+    pub fn class_totals(&self) -> Vec<u64> {
+        let mut out = vec![0u64; self.n_classes];
+        for row in self.per_vertex.chunks(self.n_classes) {
+            for (t, c) in out.iter_mut().zip(row) {
+                *t += c;
+            }
+        }
+        out
+    }
+
+    /// Per-class instance counts (class totals / k).
+    pub fn class_instances(&self) -> Vec<u64> {
+        self.class_totals()
+            .into_iter()
+            .map(|t| {
+                debug_assert_eq!(t % self.k as u64, 0, "class total must divide by k");
+                t / self.k as u64
+            })
+            .collect()
+    }
+
+    /// Mean per-vertex count per class — what Fig. 3 plots against Eq. 7.4.
+    pub fn mean_per_vertex(&self) -> Vec<f64> {
+        self.class_totals()
+            .into_iter()
+            .map(|t| t as f64 / self.n as f64)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn directed_mapper_is_identity_on_table() {
+        let m = SlotMapper::new(3, Direction::Directed);
+        assert_eq!(m.n_classes(), 13);
+        let t = iso_table(3);
+        for id in 0..64u16 {
+            assert_eq!(m.slot(id), t.class_slot[id as usize]);
+        }
+    }
+
+    #[test]
+    fn undirected_mapper_compacts() {
+        let m = SlotMapper::new(3, Direction::Undirected);
+        assert_eq!(m.n_classes(), 2);
+        // path (sym, 4 directed edges) and triangle (6 edges)
+        assert_eq!(m.classes()[0].n_edges, 4);
+        assert_eq!(m.classes()[1].n_edges, 6);
+        // triangle raw id: all 6 bits set = 63
+        assert_eq!(m.slot(63), 1);
+        // asymmetric id maps to NO_SLOT
+        let one_way = 0b100000u16; // single directed edge — disconnected anyway
+        assert_eq!(m.slot(one_way), NO_SLOT);
+    }
+
+    #[test]
+    fn undirected_mapper_k4() {
+        let m = SlotMapper::new(4, Direction::Undirected);
+        assert_eq!(m.n_classes(), 6);
+        // K4: all 12 bits
+        assert_eq!(m.slot(0xFFF), 5);
+    }
+
+    #[test]
+    fn atomic_counter_records() {
+        let c = AtomicCounter::new(4, 2);
+        c.record(&[0, 1, 2], 1);
+        c.record(&[0, 2, 3], 0);
+        assert_eq!(c.instances(), 2);
+        let v = c.into_vec();
+        assert_eq!(v[0 * 2 + 1], 1);
+        assert_eq!(v[0 * 2 + 0], 1);
+        assert_eq!(v[1 * 2 + 1], 1);
+        assert_eq!(v[3 * 2 + 0], 1);
+        assert_eq!(v.iter().sum::<u64>(), 6);
+    }
+
+    #[test]
+    fn shard_merge_equals_combined() {
+        let mut a = ShardCounter::new(3, 2);
+        let mut b = ShardCounter::new(3, 2);
+        a.record(&[0, 1, 2], 0);
+        b.record(&[0, 1, 2], 1);
+        b.record(&[1, 2, 0], 1);
+        a.merge(&b);
+        assert_eq!(a.instances, 3);
+        assert_eq!(a.counts[1], 2); // vertex 0 slot 1
+    }
+
+    #[test]
+    fn motif_counts_accessors() {
+        let mc = MotifCounts {
+            k: 3,
+            direction: Direction::Undirected,
+            n: 2,
+            n_classes: 2,
+            per_vertex: vec![3, 6, 3, 0],
+            class_ids: vec![30, 63],
+            total_instances: 4,
+            elapsed_secs: 0.0,
+        };
+        assert_eq!(mc.vertex(0), &[3, 6]);
+        assert_eq!(mc.class_totals(), vec![6, 6]);
+        assert_eq!(mc.class_instances(), vec![2, 2]);
+        assert_eq!(mc.mean_per_vertex(), vec![3.0, 3.0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Motif indexing (paper Fig. 1): the induced k×k adjacency matrix, read
+//! row-major with the diagonal skipped, MSB first, as a base-2 number.
+//!
+//! For k=4 the id fits in 12 bits, so `u16` everywhere.
+
+/// Raw (isomorph-specific) motif id. 6 bits for k=3, 12 bits for k=4.
+pub type MotifId = u16;
+
+/// Number of off-diagonal bits for a k-motif.
+#[inline]
+pub const fn n_bits(k: usize) -> usize {
+    k * (k - 1)
+}
+
+/// Size of the raw id space for a k-motif.
+#[inline]
+pub const fn n_ids(k: usize) -> usize {
+    1 << n_bits(k)
+}
+
+/// Encode the adjacency of an ordered vertex tuple via an edge probe.
+///
+/// `probe(i, j)` must answer "is there an edge from tuple position i to
+/// tuple position j" — directed or undirected depending on the caller.
+#[inline]
+pub fn encode_adjacency(k: usize, mut probe: impl FnMut(usize, usize) -> bool) -> MotifId {
+    let bits = n_bits(k);
+    let mut id: MotifId = 0;
+    let mut pos = 0;
+    for i in 0..k {
+        for j in 0..k {
+            if i == j {
+                continue;
+            }
+            if probe(i, j) {
+                id |= 1 << (bits - 1 - pos);
+            }
+            pos += 1;
+        }
+    }
+    id
+}
+
+/// Decode a motif id into a k×k boolean adjacency matrix.
+pub fn decode_adjacency(id: MotifId, k: usize) -> [[bool; 4]; 4] {
+    let bits = n_bits(k);
+    let mut mat = [[false; 4]; 4];
+    let mut pos = 0;
+    for i in 0..k {
+        for j in 0..k {
+            if i == j {
+                continue;
+            }
+            if (id >> (bits - 1 - pos)) & 1 == 1 {
+                mat[i][j] = true;
+            }
+            pos += 1;
+        }
+    }
+    mat
+}
+
+/// Apply a vertex permutation: `new[i][j] = old[perm[i]][perm[j]]`.
+pub fn permute_id(id: MotifId, perm: &[usize], k: usize) -> MotifId {
+    let mat = decode_adjacency(id, k);
+    encode_adjacency(k, |i, j| mat[perm[i]][perm[j]])
+}
+
+/// Number of directed edges in the motif.
+#[inline]
+pub fn edge_count(id: MotifId) -> u32 {
+    id.count_ones()
+}
+
+/// Is the underlying undirected graph of this motif connected?
+pub fn is_weakly_connected(id: MotifId, k: usize) -> bool {
+    let mat = decode_adjacency(id, k);
+    let mut seen = [false; 4];
+    let mut stack = [0usize; 4];
+    let mut sp = 0;
+    seen[0] = true;
+    stack[sp] = 0;
+    sp += 1;
+    let mut count = 1;
+    while sp > 0 {
+        sp -= 1;
+        let v = stack[sp];
+        for w in 0..k {
+            if !seen[w] && (mat[v][w] || mat[w][v]) {
+                seen[w] = true;
+                stack[sp] = w;
+                sp += 1;
+                count += 1;
+            }
+        }
+    }
+    count == k
+}
+
+/// Is the adjacency matrix symmetric (motif realizable undirected)?
+pub fn is_symmetric(id: MotifId, k: usize) -> bool {
+    let mat = decode_adjacency(id, k);
+    for i in 0..k {
+        for j in (i + 1)..k {
+            if mat[i][j] != mat[j][i] {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig1_example_encodes_to_53() {
+        // matrix [[-,1,1],[0,-,1],[0,1,-]] -> 110101 -> 53
+        let mat = [
+            [false, true, true],
+            [false, false, true],
+            [false, true, false],
+        ];
+        let id = encode_adjacency(3, |i, j| mat[i][j]);
+        assert_eq!(id, 53);
+        assert_eq!(id, 0b110101);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_k3() {
+        for id in 0..n_ids(3) as MotifId {
+            let mat = decode_adjacency(id, 3);
+            assert_eq!(encode_adjacency(3, |i, j| mat[i][j]), id);
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_k4() {
+        for id in 0..n_ids(4) as MotifId {
+            let mat = decode_adjacency(id, 4);
+            assert_eq!(encode_adjacency(4, |i, j| mat[i][j]), id);
+        }
+    }
+
+    #[test]
+    fn permute_identity_is_noop() {
+        for id in [0u16, 53, 30, 63] {
+            assert_eq!(permute_id(id, &[0, 1, 2], 3), id);
+        }
+    }
+
+    #[test]
+    fn fig1_permutation_reaches_30() {
+        // the paper: min isomorph of 53 is 30 (011110)
+        let mut min = u16::MAX;
+        let perms = [[0, 1, 2], [0, 2, 1], [1, 0, 2], [1, 2, 0], [2, 0, 1], [2, 1, 0]];
+        for p in perms {
+            min = min.min(permute_id(53, &p, 3));
+        }
+        assert_eq!(min, 30);
+        assert_eq!(min, 0b011110);
+    }
+
+    #[test]
+    fn connectivity_examples() {
+        // 0 edges: disconnected
+        assert!(!is_weakly_connected(0, 3));
+        // single edge 0->1, vertex 2 isolated: disconnected
+        let single = encode_adjacency(3, |i, j| i == 0 && j == 1);
+        assert!(!is_weakly_connected(single, 3));
+        // path 0->1->2: connected
+        let path = encode_adjacency(3, |i, j| (i == 0 && j == 1) || (i == 1 && j == 2));
+        assert!(is_weakly_connected(path, 3));
+        assert_eq!(edge_count(path), 2);
+    }
+
+    #[test]
+    fn symmetry_examples() {
+        let mutual = encode_adjacency(3, |i, j| (i == 0 && j == 1) || (i == 1 && j == 0));
+        assert!(is_symmetric(mutual, 3));
+        let one_way = encode_adjacency(3, |i, j| i == 0 && j == 1);
+        assert!(!is_symmetric(one_way, 3));
+    }
+}

@@ -1,0 +1,254 @@
+//! Isomorphism tables: canonical (minimal) id per raw id, computed once per
+//! k by closing the id space under all k! vertex permutations — the paper's
+//! "removing isomorphisms only once for the entire graph".
+//!
+//! Computed independently from the Python tables in
+//! python/compile/motif_tables.py; `artifacts/iso{3,4}.tsv` cross-checks the
+//! two implementations (rust/tests/integration_runtime.rs).
+
+use once_cell::sync::Lazy;
+
+use super::ids::{edge_count, is_symmetric, is_weakly_connected, n_ids, permute_id, MotifId};
+
+/// Per-class metadata (one row per connected isomorphism class).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ClassInfo {
+    /// Canonical (minimal) raw id of the class.
+    pub canonical_id: MotifId,
+    /// Number of raw ids in the class — N_Iso(m) of Eq. 7.4.
+    pub n_iso: u32,
+    /// Directed edge count n_e(m).
+    pub n_edges: u32,
+    /// True when the class occurs in undirected graphs.
+    pub symmetric: bool,
+    /// Number of symmetric raw ids in the class (undirected N_Iso).
+    pub n_iso_sym: u32,
+}
+
+/// Full lookup tables for one motif size.
+#[derive(Debug)]
+pub struct IsoTable {
+    pub k: usize,
+    /// canonical id per raw id, len = 2^(k(k-1)).
+    pub canon: Vec<MotifId>,
+    /// weak connectivity per raw id.
+    pub connected: Vec<bool>,
+    /// class slot per raw id (u16::MAX for disconnected ids).
+    pub class_slot: Vec<u16>,
+    /// slot-indexed class metadata, sorted by canonical id.
+    pub classes: Vec<ClassInfo>,
+}
+
+/// Sentinel slot for disconnected ids.
+pub const NO_SLOT: u16 = u16::MAX;
+
+impl IsoTable {
+    fn build(k: usize) -> IsoTable {
+        let ids = n_ids(k);
+        let perms = permutations(k);
+
+        let mut canon: Vec<MotifId> = (0..ids as u16).collect();
+        for id in 0..ids as u16 {
+            let mut min = id;
+            for p in &perms {
+                min = min.min(permute_id(id, p, k));
+            }
+            canon[id as usize] = min;
+        }
+
+        let connected: Vec<bool> = (0..ids as u16).map(|id| is_weakly_connected(id, k)).collect();
+
+        // class representatives: connected ids that are their own canon
+        let mut reps: Vec<MotifId> = (0..ids as u16)
+            .filter(|&id| connected[id as usize] && canon[id as usize] == id)
+            .collect();
+        reps.sort_unstable();
+
+        let mut class_slot = vec![NO_SLOT; ids];
+        let mut classes: Vec<ClassInfo> = reps
+            .iter()
+            .map(|&rep| ClassInfo {
+                canonical_id: rep,
+                n_iso: 0,
+                n_edges: edge_count(rep),
+                symmetric: false,
+                n_iso_sym: 0,
+            })
+            .collect();
+        for id in 0..ids as u16 {
+            if !connected[id as usize] {
+                continue;
+            }
+            let slot = reps.binary_search(&canon[id as usize]).expect("canon must be a rep") as u16;
+            class_slot[id as usize] = slot;
+            classes[slot as usize].n_iso += 1;
+            if is_symmetric(id, k) {
+                classes[slot as usize].n_iso_sym += 1;
+                classes[slot as usize].symmetric = true;
+            }
+        }
+
+        IsoTable { k, canon, connected, class_slot, classes }
+    }
+
+    /// Number of connected isomorphism classes (13 for k=3, 199 for k=4).
+    pub fn n_classes(&self) -> usize {
+        self.classes.len()
+    }
+
+    /// Class slot of a raw id; NO_SLOT when disconnected.
+    #[inline]
+    pub fn slot(&self, id: MotifId) -> u16 {
+        self.class_slot[id as usize]
+    }
+
+    /// Slots of classes that occur in undirected graphs, in slot order.
+    pub fn undirected_slots(&self) -> Vec<u16> {
+        self.classes
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.symmetric)
+            .map(|(s, _)| s as u16)
+            .collect()
+    }
+}
+
+/// All permutations of 0..k (Heap's algorithm), k ≤ 4.
+fn permutations(k: usize) -> Vec<Vec<usize>> {
+    let mut out = Vec::new();
+    let mut xs: Vec<usize> = (0..k).collect();
+    heap(&mut xs, k, &mut out);
+    out
+}
+
+fn heap(xs: &mut Vec<usize>, k: usize, out: &mut Vec<Vec<usize>>) {
+    if k == 1 {
+        out.push(xs.clone());
+        return;
+    }
+    for i in 0..k {
+        heap(xs, k - 1, out);
+        if k % 2 == 0 {
+            xs.swap(i, k - 1);
+        } else {
+            xs.swap(0, k - 1);
+        }
+    }
+}
+
+static TABLE3: Lazy<IsoTable> = Lazy::new(|| IsoTable::build(3));
+static TABLE4: Lazy<IsoTable> = Lazy::new(|| IsoTable::build(4));
+
+/// The (memoized) isomorphism table for k ∈ {3, 4}.
+pub fn iso_table(k: usize) -> &'static IsoTable {
+    match k {
+        3 => &TABLE3,
+        4 => &TABLE4,
+        _ => panic!("iso_table: k must be 3 or 4, got {k}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_counts_match_oeis() {
+        // A003085: weakly-connected digraphs on 3 / 4 nodes
+        assert_eq!(iso_table(3).n_classes(), 13);
+        assert_eq!(iso_table(4).n_classes(), 199);
+    }
+
+    #[test]
+    fn undirected_class_counts() {
+        // A001349: connected graphs on 3 / 4 nodes
+        assert_eq!(iso_table(3).undirected_slots().len(), 2);
+        assert_eq!(iso_table(4).undirected_slots().len(), 6);
+    }
+
+    #[test]
+    fn fig1_canonicalization() {
+        assert_eq!(iso_table(3).canon[53], 30);
+    }
+
+    #[test]
+    fn canon_is_idempotent_and_minimal() {
+        for k in [3usize, 4] {
+            let t = iso_table(k);
+            for id in 0..t.canon.len() as u16 {
+                let c = t.canon[id as usize];
+                assert_eq!(t.canon[c as usize], c);
+                assert!(c <= id);
+            }
+        }
+    }
+
+    #[test]
+    fn n_iso_totals_match_connected_counts() {
+        for k in [3usize, 4] {
+            let t = iso_table(k);
+            let total: u32 = t.classes.iter().map(|c| c.n_iso).sum();
+            let connected = t.connected.iter().filter(|&&c| c).count() as u32;
+            assert_eq!(total, connected);
+        }
+        // known values (match the python tables)
+        assert_eq!(iso_table(3).classes.iter().map(|c| c.n_iso).sum::<u32>(), 54);
+        assert_eq!(iso_table(4).classes.iter().map(|c| c.n_iso).sum::<u32>(), 3834);
+    }
+
+    #[test]
+    fn connectivity_is_class_invariant() {
+        let t = iso_table(4);
+        for id in 0..t.canon.len() {
+            assert_eq!(t.connected[id], t.connected[t.canon[id] as usize]);
+        }
+    }
+
+    #[test]
+    fn slots_dense_and_sorted() {
+        for k in [3usize, 4] {
+            let t = iso_table(k);
+            for (s, c) in t.classes.iter().enumerate() {
+                assert_eq!(t.class_slot[c.canonical_id as usize] as usize, s);
+            }
+            for w in t.classes.windows(2) {
+                assert!(w[0].canonical_id < w[1].canonical_id);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_counts_constant_within_class() {
+        let t = iso_table(4);
+        for id in 0..t.canon.len() as u16 {
+            if t.connected[id as usize] {
+                let slot = t.class_slot[id as usize] as usize;
+                assert_eq!(edge_count(id), t.classes[slot].n_edges);
+            }
+        }
+    }
+
+    #[test]
+    fn undirected_edge_structure() {
+        // k=3: symmetric classes have 4 and 6 directed edges (path, triangle)
+        let t = iso_table(3);
+        let mut es: Vec<u32> = t.classes.iter().filter(|c| c.symmetric).map(|c| c.n_edges).collect();
+        es.sort_unstable();
+        assert_eq!(es, vec![4, 6]);
+        // k=4: 6,6,8,8,10,12
+        let t = iso_table(4);
+        let mut es: Vec<u32> = t.classes.iter().filter(|c| c.symmetric).map(|c| c.n_edges).collect();
+        es.sort_unstable();
+        assert_eq!(es, vec![6, 6, 8, 8, 10, 12]);
+    }
+
+    #[test]
+    fn permutations_generate_k_factorial() {
+        assert_eq!(permutations(3).len(), 6);
+        assert_eq!(permutations(4).len(), 24);
+        let mut ps = permutations(4);
+        ps.sort();
+        ps.dedup();
+        assert_eq!(ps.len(), 24);
+    }
+}

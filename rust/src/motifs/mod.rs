@@ -1,0 +1,47 @@
+//! VDMC motif counting: bit-string motif ids (Fig. 1), isomorphism tables,
+//! the proper k-BFS enumerators (Section 5 lemmas) and per-vertex counters.
+
+pub mod bfs3;
+pub mod bfs4;
+pub mod counter;
+pub mod ids;
+pub mod iso;
+pub mod probe;
+
+pub use counter::{CounterMode, MotifCounts};
+pub use ids::{encode_adjacency, MotifId};
+pub use iso::{iso_table, ClassInfo, IsoTable};
+
+/// Motif size supported by VDMC (the paper covers 3 and 4; the data
+/// structure extends to 5, see Discussion).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MotifSize {
+    Three,
+    Four,
+}
+
+impl MotifSize {
+    #[inline]
+    pub fn k(self) -> usize {
+        match self {
+            MotifSize::Three => 3,
+            MotifSize::Four => 4,
+        }
+    }
+
+    pub fn from_k(k: usize) -> Option<MotifSize> {
+        match k {
+            3 => Some(MotifSize::Three),
+            4 => Some(MotifSize::Four),
+            _ => None,
+        }
+    }
+}
+
+/// Whether motifs are classified on the directed graph or its undirected
+/// underlying view.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Directed,
+    Undirected,
+}

@@ -1,0 +1,334 @@
+//! Hot-path adjacency probes: epoch-stamped neighbor marks.
+//!
+//! The enumerators test membership in N(root) / N(a) and read direction
+//! bits of (root, v) / (a, v) pairs for *every* instance — the dominant
+//! cost. [`NeighborMarks`] turns those into O(1) array reads: marking a
+//! center walks its undirected/out/in neighbor lists once (three sorted
+//! merges, no binary searches) and stamps each neighbor with an epoch plus
+//! a 2-bit direction code. Re-marking is an epoch bump — no clearing.
+//!
+//! Memory: 5 bytes per vertex per mark set (u32 stamp + u8 bits), two sets
+//! per worker. EXPERIMENTS.md §Perf records the before/after.
+
+use crate::graph::csr::Graph;
+
+use super::Direction;
+
+/// Direction bits of a (center, v) pair: bit0 = center→v, bit1 = v→center.
+/// Undirected graphs/mode always get 0b11 for present edges.
+pub type DirBits = u8;
+
+/// Epoch-stamped neighborhood of one "center" vertex.
+#[derive(Debug)]
+pub struct NeighborMarks {
+    stamp: Vec<u32>,
+    bits: Vec<u8>,
+    epoch: u32,
+    center: u32,
+}
+
+impl NeighborMarks {
+    pub fn new(n: usize) -> NeighborMarks {
+        NeighborMarks { stamp: vec![0; n], bits: vec![0; n], epoch: 0, center: u32::MAX }
+    }
+
+    pub fn center(&self) -> u32 {
+        self.center
+    }
+
+    /// Stamp N(center): one pass over the undirected row, with the out/in
+    /// rows merged alongside to fill direction bits.
+    pub fn mark(&mut self, g: &Graph, dir: Direction, center: u32) {
+        if self.center == center && self.epoch != 0 {
+            return;
+        }
+        self.center = center;
+        self.epoch = self.epoch.wrapping_add(1);
+        if self.epoch == 0 {
+            // epoch wrapped: stamps may alias — reset
+            self.stamp.fill(0);
+            self.epoch = 1;
+        }
+        let und = g.und.neighbors(center);
+        match dir {
+            Direction::Undirected => {
+                for &v in und {
+                    self.stamp[v as usize] = self.epoch;
+                    self.bits[v as usize] = 0b11;
+                }
+            }
+            Direction::Directed => {
+                // merge the sorted out/in rows against the und row
+                let out = g.out.neighbors(center);
+                let inn = g.inn.neighbors(center);
+                let (mut oi, mut ii) = (0usize, 0usize);
+                for &v in und {
+                    let mut b = 0u8;
+                    while oi < out.len() && out[oi] < v {
+                        oi += 1;
+                    }
+                    if oi < out.len() && out[oi] == v {
+                        b |= 0b01;
+                    }
+                    while ii < inn.len() && inn[ii] < v {
+                        ii += 1;
+                    }
+                    if ii < inn.len() && inn[ii] == v {
+                        b |= 0b10;
+                    }
+                    debug_assert_ne!(b, 0, "und neighbor without any directed edge");
+                    self.stamp[v as usize] = self.epoch;
+                    self.bits[v as usize] = b;
+                }
+            }
+        }
+    }
+
+    /// Is v a neighbor of the current center?
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        self.stamp[v as usize] == self.epoch
+    }
+
+    /// Direction bits of (center, v); 0 when not adjacent.
+    #[inline]
+    pub fn dir_bits(&self, v: u32) -> DirBits {
+        if self.contains(v) {
+            self.bits[v as usize]
+        } else {
+            0
+        }
+    }
+}
+
+/// Probe an arbitrary (y, z) pair's direction bits. `known_und` short-cuts
+/// the undirected membership test when the caller already knows it.
+#[inline]
+pub fn pair_bits(g: &Graph, dir: Direction, y: u32, z: u32, known_und: Option<bool>) -> DirBits {
+    let present = match known_und {
+        Some(p) => p,
+        None => g.und.has_edge(y, z),
+    };
+    if !present {
+        return 0;
+    }
+    match dir {
+        Direction::Undirected => 0b11,
+        Direction::Directed => {
+            (g.out.has_edge(y, z) as u8) | ((g.out.has_edge(z, y) as u8) << 1)
+        }
+    }
+}
+
+/// Iterate a center's undirected neighbors strictly above `after`,
+/// yielding each with its (center, v) direction bits — a three-way sorted
+/// merge over the und/out/in rows, so a loop over N(c) gets every pair's
+/// bits without any per-element binary search. Used by the S2-via-b and
+/// S4 inner loops where the probed pair's center is the loop's own
+/// iteration source.
+pub struct MergedNeighbors<'a> {
+    und: &'a [u32],
+    out: &'a [u32],
+    inn: &'a [u32],
+    ui: usize,
+    oi: usize,
+    ii: usize,
+    undirected: bool,
+}
+
+impl<'a> MergedNeighbors<'a> {
+    pub fn above(g: &'a Graph, dir: Direction, center: u32, after: u32) -> MergedNeighbors<'a> {
+        let und = g.und.neighbors_above(center, after);
+        match dir {
+            Direction::Undirected => {
+                MergedNeighbors { und, out: &[], inn: &[], ui: 0, oi: 0, ii: 0, undirected: true }
+            }
+            Direction::Directed => {
+                let out = g.out.neighbors(center);
+                let inn = g.inn.neighbors(center);
+                // advance out/in cursors to the first candidate once
+                let oi = out.partition_point(|&w| w <= after);
+                let ii = inn.partition_point(|&w| w <= after);
+                MergedNeighbors { und, out, inn, ui: 0, oi, ii, undirected: false }
+            }
+        }
+    }
+}
+
+impl Iterator for MergedNeighbors<'_> {
+    type Item = (u32, DirBits);
+
+    #[inline]
+    fn next(&mut self) -> Option<(u32, DirBits)> {
+        let v = *self.und.get(self.ui)?;
+        self.ui += 1;
+        if self.undirected {
+            return Some((v, 0b11));
+        }
+        let mut b = 0u8;
+        while self.oi < self.out.len() && self.out[self.oi] < v {
+            self.oi += 1;
+        }
+        if self.oi < self.out.len() && self.out[self.oi] == v {
+            b |= 0b01;
+        }
+        while self.ii < self.inn.len() && self.inn[self.ii] < v {
+            self.ii += 1;
+        }
+        if self.ii < self.inn.len() && self.inn[self.ii] == v {
+            b |= 0b10;
+        }
+        debug_assert_ne!(b, 0);
+        Some((v, b))
+    }
+}
+
+/// For every `target` (sorted ascending), report the (center, target)
+/// direction bits — 0 when non-adjacent — by merging the center's rows
+/// against the target list. Replaces one binary search per pair with a
+/// two-pointer walk: O(d_center + |targets|) total.
+#[inline]
+pub fn bits_against(
+    g: &Graph,
+    dir: Direction,
+    center: u32,
+    after: u32,
+    targets: &[u32],
+    mut f: impl FnMut(u32, DirBits),
+) {
+    let mut it = MergedNeighbors::above(g, dir, center, after);
+    let mut cur = it.next();
+    for &t in targets {
+        debug_assert!(t > after);
+        while let Some((v, _)) = cur {
+            if v >= t {
+                break;
+            }
+            cur = it.next();
+        }
+        match cur {
+            Some((v, b)) if v == t => f(t, b),
+            _ => f(t, 0),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Graph;
+
+    fn g() -> Graph {
+        // 0->1, 1->0 (mutual), 0->2, 3->0
+        Graph::from_edges(4, &[(0, 1), (1, 0), (0, 2), (3, 0)], true)
+    }
+
+    #[test]
+    fn directed_bits() {
+        let g = g();
+        let mut m = NeighborMarks::new(4);
+        m.mark(&g, Direction::Directed, 0);
+        assert_eq!(m.dir_bits(1), 0b11); // mutual
+        assert_eq!(m.dir_bits(2), 0b01); // 0->2 only
+        assert_eq!(m.dir_bits(3), 0b10); // 3->0 only
+        assert!(!m.contains(0));
+    }
+
+    #[test]
+    fn remark_resets() {
+        let g = g();
+        let mut m = NeighborMarks::new(4);
+        m.mark(&g, Direction::Directed, 0);
+        assert!(m.contains(1));
+        m.mark(&g, Direction::Directed, 2);
+        assert!(m.contains(0));
+        assert!(!m.contains(1)); // stale stamp from previous epoch
+        assert_eq!(m.dir_bits(0), 0b10); // 0->2 seen from 2: v->center
+    }
+
+    #[test]
+    fn idempotent_same_center() {
+        let g = g();
+        let mut m = NeighborMarks::new(4);
+        m.mark(&g, Direction::Directed, 0);
+        let e = m.epoch;
+        m.mark(&g, Direction::Directed, 0);
+        assert_eq!(m.epoch, e, "re-marking same center must be free");
+    }
+
+    #[test]
+    fn undirected_mode_bits() {
+        let g = g();
+        let mut m = NeighborMarks::new(4);
+        m.mark(&g, Direction::Undirected, 0);
+        for v in [1u32, 2, 3] {
+            assert_eq!(m.dir_bits(v), 0b11);
+        }
+    }
+
+    #[test]
+    fn merged_neighbors_match_marks() {
+        use crate::graph::generators;
+        let g = generators::gnp_directed(40, 0.2, 3);
+        let mut marks = NeighborMarks::new(40);
+        for center in 0..40u32 {
+            marks.mark(&g, Direction::Directed, center);
+            for after in [0u32, 5, 20] {
+                let merged: Vec<(u32, u8)> =
+                    MergedNeighbors::above(&g, Direction::Directed, center, after).collect();
+                let direct: Vec<(u32, u8)> = g
+                    .und
+                    .neighbors_above(center, after)
+                    .iter()
+                    .map(|&v| (v, marks.dir_bits(v)))
+                    .collect();
+                assert_eq!(merged, direct, "center {center} after {after}");
+            }
+        }
+    }
+
+    #[test]
+    fn bits_against_matches_pair_bits() {
+        use crate::graph::generators;
+        let g = generators::gnp_directed(30, 0.25, 9);
+        for center in 0..30u32 {
+            for after in [0u32, 3, 10] {
+                let targets: Vec<u32> = (after + 1..30).step_by(2).collect();
+                let mut got = Vec::new();
+                bits_against(&g, Direction::Directed, center, after, &targets, |t, b| {
+                    got.push((t, b));
+                });
+                let want: Vec<(u32, u8)> = targets
+                    .iter()
+                    .map(|&t| (t, if t == center { 0 } else { pair_bits(&g, Direction::Directed, center, t, None) }))
+                    .collect();
+                // center itself can appear among targets; bits_against
+                // reports 0 there (no self loops)
+                assert_eq!(got, want, "center {center} after {after}");
+            }
+        }
+    }
+
+    #[test]
+    fn merged_neighbors_undirected_mode() {
+        use crate::graph::generators;
+        let g = generators::gnp_undirected(20, 0.3, 4);
+        for center in 0..20u32 {
+            for (v, b) in MergedNeighbors::above(&g, Direction::Undirected, center, center) {
+                assert!(v > center);
+                assert_eq!(b, 0b11);
+            }
+        }
+    }
+
+    #[test]
+    fn pair_bits_matches_adjacency() {
+        let g = g();
+        assert_eq!(pair_bits(&g, Direction::Directed, 0, 1, None), 0b11);
+        assert_eq!(pair_bits(&g, Direction::Directed, 0, 2, None), 0b01);
+        assert_eq!(pair_bits(&g, Direction::Directed, 2, 0, None), 0b10);
+        assert_eq!(pair_bits(&g, Direction::Directed, 1, 2, None), 0);
+        assert_eq!(pair_bits(&g, Direction::Directed, 0, 2, Some(true)), 0b01);
+        assert_eq!(pair_bits(&g, Direction::Undirected, 0, 2, None), 0b11);
+    }
+}

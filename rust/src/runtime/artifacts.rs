@@ -1,0 +1,184 @@
+//! Artifact manifest: the shape contract between `python/compile/aot.py`
+//! and the Rust runtime. Parses `artifacts/manifest.tsv` plus the
+//! iso/classes TSV tables used to cross-check the Rust isomorphism code
+//! against the Python build.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Dtype/shape of one tensor, e.g. `f32[512,256]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn parse(s: &str) -> Result<TensorSpec> {
+        let (dtype, rest) = s
+            .split_once('[')
+            .with_context(|| format!("tensor spec {s:?} missing '['"))?;
+        let dims_str = rest.strip_suffix(']').with_context(|| format!("tensor spec {s:?} missing ']'"))?;
+        let dims = if dims_str.is_empty() {
+            Vec::new()
+        } else {
+            dims_str
+                .split(',')
+                .map(|d| d.parse::<usize>().with_context(|| format!("bad dim {d:?} in {s:?}")))
+                .collect::<Result<Vec<_>>>()?
+        };
+        Ok(TensorSpec { dtype: dtype.to_string(), dims })
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One artifact row of the manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub output: TensorSpec,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub specs: HashMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.tsv`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} — run `make artifacts` first", path.display()))?;
+        let mut specs = HashMap::new();
+        for line in text.lines() {
+            if line.starts_with('#') || line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line has {} columns, expected 4: {line:?}", cols.len());
+            }
+            let inputs = if cols[2].is_empty() {
+                Vec::new()
+            } else {
+                cols[2].split(';').map(TensorSpec::parse).collect::<Result<Vec<_>>>()?
+            };
+            let spec = ArtifactSpec {
+                name: cols[0].to_string(),
+                file: dir.join(cols[1]),
+                inputs,
+                output: TensorSpec::parse(cols[3])?,
+            };
+            specs.insert(spec.name.clone(), spec);
+        }
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), specs })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.specs
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest (have: {:?})", {
+                let mut names: Vec<_> = self.specs.keys().collect();
+                names.sort();
+                names
+            }))
+    }
+
+    /// Default artifact directory: $VDMC_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("VDMC_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+}
+
+/// One row of `iso{3,4}.tsv`: the Python-side isomorphism table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IsoRow {
+    pub raw_id: u16,
+    pub canonical_id: u16,
+    pub connected: bool,
+    pub class_slot: i32,
+}
+
+/// Parse `<dir>/iso<k>.tsv` (cross-check fixture for rust motifs::iso).
+pub fn load_iso_table(dir: &Path, k: usize) -> Result<Vec<IsoRow>> {
+    let path = dir.join(format!("iso{k}.tsv"));
+    let text = std::fs::read_to_string(&path).with_context(|| format!("reading {}", path.display()))?;
+    let mut rows = Vec::new();
+    for line in text.lines() {
+        if line.starts_with('#') || line.trim().is_empty() {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        if cols.len() != 4 {
+            bail!("iso{k}.tsv: bad line {line:?}");
+        }
+        rows.push(IsoRow {
+            raw_id: cols[0].parse()?,
+            canonical_id: cols[1].parse()?,
+            connected: cols[2] == "1",
+            class_slot: cols[3].parse()?,
+        });
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let t = TensorSpec::parse("f32[512,256]").unwrap();
+        assert_eq!(t.dtype, "f32");
+        assert_eq!(t.dims, vec![512, 256]);
+        assert_eq!(t.element_count(), 512 * 256);
+    }
+
+    #[test]
+    fn scalar_spec() {
+        let t = TensorSpec::parse("float32[]").unwrap();
+        assert!(t.dims.is_empty());
+        assert_eq!(t.element_count(), 1);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(TensorSpec::parse("f32").is_err());
+        assert!(TensorSpec::parse("f32[a,b]").is_err());
+    }
+
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("vdmc_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.tsv"),
+            "# name\tfile\tinputs\toutput\nagg\tagg.hlo.txt\tfloat32[8,64]\tfloat32[8,128]\n",
+        )
+        .unwrap();
+        let m = ArtifactManifest::load(&dir).unwrap();
+        let s = m.get("agg").unwrap();
+        assert_eq!(s.inputs.len(), 1);
+        assert_eq!(s.output.dims, vec![8, 128]);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make_artifacts() {
+        let err = ArtifactManifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

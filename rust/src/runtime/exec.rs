@@ -1,0 +1,268 @@
+//! Typed execution of AOT artifacts over the PJRT CPU client.
+//!
+//! [`ArtifactRunner`] owns one `PjRtClient` and a per-artifact compiled
+//! executable cache (compile once, execute many — the serve-time hot
+//! path). [`CountAggregator`] is the high-level bridge used by the
+//! end-to-end driver: it feeds enumerated instance batches through the L1
+//! `pipeline{3,4}` artifact, chunked over 512-vertex blocks, and
+//! accumulates per-vertex canonical counts.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+
+/// Shape constants baked into the artifacts (mirror python/compile/model.py).
+pub const BATCH: usize = 2048;
+pub const N_VERT_BLOCK: usize = 512;
+pub const DENSE_N: usize = 256;
+
+/// Padded class dimension per k.
+pub fn padded_classes(k: usize) -> usize {
+    match k {
+        3 => 128,
+        4 => 256,
+        _ => panic!("k must be 3 or 4"),
+    }
+}
+
+/// Input tensor data for one execute call.
+pub enum TensorData<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+impl TensorData<'_> {
+    fn len(&self) -> usize {
+        match self {
+            TensorData::F32(x) => x.len(),
+            TensorData::I32(x) => x.len(),
+        }
+    }
+
+    fn dtype(&self) -> &'static str {
+        match self {
+            TensorData::F32(_) => "float32",
+            TensorData::I32(_) => "int32",
+        }
+    }
+
+    fn bytes(&self) -> &[u8] {
+        match self {
+            TensorData::F32(x) => bytemuck_cast(x),
+            TensorData::I32(x) => bytemuck_cast(x),
+        }
+    }
+}
+
+fn bytemuck_cast<T>(xs: &[T]) -> &[u8] {
+    // safe for plain-old-data numeric slices
+    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+}
+
+/// Compiled-artifact cache over one PJRT client.
+pub struct ArtifactRunner {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    compiled: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+impl ArtifactRunner {
+    /// Create a runner over `<dir>/manifest.tsv` with a fresh CPU client.
+    pub fn new(dir: &Path) -> Result<ArtifactRunner> {
+        let manifest = ArtifactManifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(anyhow_xla)?;
+        Ok(ArtifactRunner { client, manifest, compiled: Mutex::new(HashMap::new()) })
+    }
+
+    /// Runner over the default artifact directory ($VDMC_ARTIFACTS or ./artifacts).
+    pub fn from_default_dir() -> Result<ArtifactRunner> {
+        Self::new(&ArtifactManifest::default_dir())
+    }
+
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, spec: &ArtifactSpec) -> Result<()> {
+        let mut cache = self.compiled.lock().unwrap();
+        if cache.contains_key(&spec.name) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("parsing HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(anyhow_xla)
+            .with_context(|| format!("compiling artifact {}", spec.name))?;
+        cache.insert(spec.name.clone(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with validated inputs; returns the flattened f32
+    /// output (all our artifacts produce a single f32 tensor).
+    pub fn run(&self, name: &str, inputs: &[TensorData<'_>]) -> Result<Vec<f32>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!("artifact {name}: {} inputs given, {} expected", inputs.len(), spec.inputs.len());
+        }
+        for (i, (data, ispec)) in inputs.iter().zip(&spec.inputs).enumerate() {
+            if data.len() != ispec.element_count() {
+                bail!(
+                    "artifact {name} input {i}: {} elements given, {:?} = {} expected",
+                    data.len(),
+                    ispec.dims,
+                    ispec.element_count()
+                );
+            }
+            if data.dtype() != ispec.dtype {
+                bail!("artifact {name} input {i}: dtype {} given, {} expected", data.dtype(), ispec.dtype);
+            }
+        }
+        self.compile(&spec)?;
+
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .zip(&spec.inputs)
+            .map(|(data, ispec)| {
+                let ty = match ispec.dtype.as_str() {
+                    "float32" => xla::ElementType::F32,
+                    "int32" => xla::ElementType::S32,
+                    other => bail!("unsupported artifact dtype {other}"),
+                };
+                xla::Literal::create_from_shape_and_untyped_data(ty, &ispec.dims, data.bytes())
+                    .map_err(anyhow_xla)
+            })
+            .collect::<Result<_>>()?;
+
+        let cache = self.compiled.lock().unwrap();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals).map_err(anyhow_xla)?;
+        let literal = result[0][0].to_literal_sync().map_err(anyhow_xla)?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple
+        let out = literal.to_tuple1().map_err(anyhow_xla)?;
+        out.to_vec::<f32>().map_err(anyhow_xla)
+    }
+
+    /// `aggregate{k}`: raw-id histogram rows -> canonical counts rows.
+    pub fn aggregate(&self, k: usize, hist: &[f32]) -> Result<Vec<f32>> {
+        self.run(&format!("aggregate{k}"), &[TensorData::F32(hist)])
+    }
+
+    /// `pipeline{k}`: one instance batch -> canonical counts for a
+    /// 512-vertex block (verts must already be block-local).
+    pub fn pipeline(&self, k: usize, verts: &[i32], slots: &[i32]) -> Result<Vec<f32>> {
+        self.run(&format!("pipeline{k}"), &[TensorData::I32(verts), TensorData::I32(slots)])
+    }
+
+    /// `theory{k}`: Eq. 7.4 expectations; returns (directed, undirected)
+    /// rows of length padded_classes(k).
+    pub fn theory(&self, k: usize, n: f32, p: f32) -> Result<(Vec<f32>, Vec<f32>)> {
+        let out = self.run(&format!("theory{k}"), &[TensorData::F32(&[n]), TensorData::F32(&[p])])?;
+        let c = padded_classes(k);
+        Ok((out[..c].to_vec(), out[c..].to_vec()))
+    }
+
+    /// `dense3`: matrix-based undirected 3-motif baseline over a dense
+    /// adjacency (DENSE_N × DENSE_N) -> per-vertex [paths, triangles].
+    pub fn dense3(&self, adj: &[f32]) -> Result<Vec<f32>> {
+        self.run("dense3", &[TensorData::F32(adj)])
+    }
+}
+
+fn anyhow_xla(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e}")
+}
+
+/// Accumulates per-vertex canonical counts for a whole graph by running
+/// every instance batch through the `pipeline{k}` artifact once per
+/// 512-vertex block. Instances carry global vertex ids; each block pass
+/// shifts them so out-of-block vertices fall outside [0, 512) and vanish
+/// in the kernel's one-hot (the scatter-count masking contract).
+pub struct CountAggregator<'r> {
+    runner: &'r ArtifactRunner,
+    k: usize,
+    n: usize,
+    /// per-vertex canonical counts, row-major n × padded_classes(k), f64
+    /// accumulation to stay exact past f32 24-bit integers.
+    acc: Vec<f64>,
+    batches: usize,
+}
+
+impl<'r> CountAggregator<'r> {
+    pub fn new(runner: &'r ArtifactRunner, k: usize, n: usize) -> CountAggregator<'r> {
+        CountAggregator { runner, k, n, acc: vec![0.0; n * padded_classes(k)], batches: 0 }
+    }
+
+    /// Feed one full batch (BATCH instances; verts len BATCH*k, global ids,
+    /// -1 padding).
+    pub fn push_batch(&mut self, verts: &[i32], slots: &[i32]) -> Result<()> {
+        let c = padded_classes(self.k);
+        if verts.len() != BATCH * self.k || slots.len() != BATCH {
+            bail!("bad batch shape: verts {} slots {}", verts.len(), slots.len());
+        }
+        let blocks = self.n.div_ceil(N_VERT_BLOCK);
+        let mut shifted = vec![0i32; verts.len()];
+        for block in 0..blocks {
+            let base = (block * N_VERT_BLOCK) as i32;
+            for (dst, &v) in shifted.iter_mut().zip(verts) {
+                // out-of-block ids (incl. -1 padding) fall outside [0, 512)
+                *dst = if v < 0 { -1 } else { v - base };
+            }
+            let out = self.runner.pipeline(self.k, &shifted, slots)?;
+            let rows = N_VERT_BLOCK.min(self.n - block * N_VERT_BLOCK);
+            for r in 0..rows {
+                let v = block * N_VERT_BLOCK + r;
+                for s in 0..c {
+                    self.acc[v * c + s] += out[r * c + s] as f64;
+                }
+            }
+        }
+        self.batches += 1;
+        Ok(())
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches
+    }
+
+    /// Final per-vertex counts as u64 (n × padded_classes(k) row-major).
+    pub fn finish(self) -> Vec<u64> {
+        self.acc.into_iter().map(|x| x.round() as u64).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn padded_classes_contract() {
+        assert_eq!(padded_classes(3), 128);
+        assert_eq!(padded_classes(4), 256);
+    }
+
+    #[test]
+    fn tensor_data_bytes() {
+        let xs = [1.0f32, 2.0];
+        let t = TensorData::F32(&xs);
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.bytes().len(), 8);
+        assert_eq!(t.dtype(), "float32");
+        let ys = [1i32, -1];
+        assert_eq!(TensorData::I32(&ys).bytes(), &[1, 0, 0, 0, 255, 255, 255, 255]);
+    }
+
+    // PJRT-backed tests live in rust/tests/integration_runtime.rs (they
+    // need `make artifacts` to have run).
+}

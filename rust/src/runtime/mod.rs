@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT artifacts produced by `make artifacts` and
+//! execute them from the Rust hot path.
+//!
+//! `python/compile/aot.py` lowers each L2 graph to HLO *text* (the
+//! interchange format that survives the jax≥0.5 / xla_extension 0.5.1
+//! version gap — see DESIGN.md); this module wraps the `xla` crate:
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` → `compile` →
+//! `execute`. Each artifact is compiled once and cached; Python never runs
+//! at serve time.
+
+pub mod artifacts;
+pub mod exec;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use exec::{ArtifactRunner, CountAggregator};

@@ -1,0 +1,276 @@
+//! Analytic expectations (paper Section 7) and closed-form toy-graph
+//! counts — what Fig. 3 and the "extensive validations" compare VDMC to.
+
+pub mod closed_form;
+
+use crate::motifs::counter::SlotMapper;
+use crate::motifs::Direction;
+use crate::util::stats::{chi_square_fit, ln_choose, ChiSquare};
+
+/// Eq. 7.4: expected number of k-motifs of each class containing a fixed
+/// vertex of G(n, p):
+///
+///   E[X_{k,m}(i)] = C(n−1, k−1) · N_iso(m) · p^{n_e(m)} · (1−p)^{n_max − n_e(m)}
+///
+/// Directed: n_e counts arcs, n_max = k(k−1). Undirected: n_e counts
+/// edges (= arcs/2 of the symmetric class), n_max = k(k−1)/2, and N_iso is
+/// the symmetric-isomorph count. Slot order matches
+/// `SlotMapper::new(k, direction)` and therefore `MotifCounts` columns.
+pub fn expected_per_vertex(k: usize, direction: Direction, n: usize, p: f64) -> Vec<f64> {
+    let mapper = SlotMapper::new(k, direction);
+    let log_comb = ln_choose((n - 1) as f64, (k - 1) as f64);
+    let (n_max, log_p, log_q) = match direction {
+        Direction::Directed => ((k * (k - 1)) as f64, p.ln(), (1.0 - p).ln()),
+        Direction::Undirected => ((k * (k - 1) / 2) as f64, p.ln(), (1.0 - p).ln()),
+    };
+    mapper
+        .classes()
+        .iter()
+        .map(|c| {
+            let (n_iso, n_e) = match direction {
+                Direction::Directed => (c.n_iso as f64, c.n_edges as f64),
+                Direction::Undirected => (c.n_iso_sym as f64, (c.n_edges / 2) as f64),
+            };
+            if n_iso == 0.0 {
+                return 0.0;
+            }
+            (log_comb + n_iso.ln() + n_e * log_p + (n_max - n_e) * log_q).exp()
+        })
+        .collect()
+}
+
+/// Expected *total instances* of each class in G(n, p):
+/// E = C(n, k) · N_iso · p^{n_e} (1−p)^{n_max−n_e} (per-vertex × n / k).
+pub fn expected_instances(k: usize, direction: Direction, n: usize, p: f64) -> Vec<f64> {
+    expected_per_vertex(k, direction, n, p)
+        .into_iter()
+        .map(|e| e * n as f64 / k as f64)
+        .collect()
+}
+
+/// The paper's Fig. 3 acceptance criterion: chi-square between observed
+/// mean per-vertex counts and Eq. 7.4, non-significant at 5%.
+///
+/// Observed values are per-vertex means over all n vertices; we compare
+/// total class instances (scaled) so cells are large where theory says
+/// they should be.
+pub fn fig3_chi_square(observed_totals: &[f64], expected_totals: &[f64]) -> ChiSquare {
+    chi_square_fit(observed_totals, expected_totals, 5.0)
+}
+
+/// Realized edge density of a sampled graph — conditioning Eq. 7.4 on the
+/// actual edge count removes the dominant (global-density) fluctuation,
+/// which otherwise swamps a chi-square on large-count classes. Standard
+/// practice for G(n, p) goodness-of-fit.
+pub fn realized_p(graph: &crate::graph::csr::Graph, direction: Direction) -> f64 {
+    let n = graph.n() as f64;
+    match direction {
+        Direction::Directed => graph.out.m() as f64 / (n * (n - 1.0)),
+        Direction::Undirected => (graph.und.m() / 2) as f64 / (n * (n - 1.0) / 2.0),
+    }
+}
+
+/// Calibrated Fig. 3 test: motif instance counts across a G(n, p) ensemble
+/// are *correlated* sums (shared edges), so Poisson variance under-states
+/// the sampling noise and a textbook Pearson chi-square over-rejects.
+/// This version estimates the per-class variance by parametric bootstrap
+/// (R replicate graphs) and forms chi² = Σ z², z = (obs − E)/σ̂.
+pub struct CalibratedFit {
+    pub z_scores: Vec<f64>,
+    pub chi: ChiSquare,
+    /// bootstrap mean per class (diagnostic: should track Eq. 7.4)
+    pub boot_mean: Vec<f64>,
+    pub boot_std: Vec<f64>,
+}
+
+pub fn calibrated_fig3_fit(
+    k: usize,
+    direction: Direction,
+    n: usize,
+    p: f64,
+    observed: &[f64],
+    replicates: usize,
+    seed: u64,
+    count_fn: impl Fn(&crate::graph::csr::Graph) -> Vec<f64>,
+) -> CalibratedFit {
+    use crate::graph::generators;
+    let classes = observed.len();
+    let mut samples: Vec<Vec<f64>> = Vec::with_capacity(replicates);
+    for r in 0..replicates {
+        let g = match direction {
+            Direction::Directed => generators::gnp_directed(n, p, seed.wrapping_add(1000 + r as u64)),
+            Direction::Undirected => {
+                generators::gnp_undirected(n, p, seed.wrapping_add(1000 + r as u64))
+            }
+        };
+        samples.push(count_fn(&g));
+    }
+    let mut boot_mean = vec![0.0; classes];
+    let mut boot_std = vec![0.0; classes];
+    for c in 0..classes {
+        let xs: Vec<f64> = samples.iter().map(|s| s[c]).collect();
+        let m = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1).max(1) as f64;
+        boot_mean[c] = m;
+        boot_std[c] = var.sqrt();
+    }
+    let expected = expected_instances(k, direction, n, p);
+    let mut stat = 0.0;
+    let mut kept = 0usize;
+    let mut dropped = 0usize;
+    let mut z_scores = vec![0.0; classes];
+    for c in 0..classes {
+        if expected[c] < 5.0 || boot_std[c] <= 0.0 {
+            dropped += 1;
+            continue;
+        }
+        let z = (observed[c] - expected[c]) / boot_std[c];
+        z_scores[c] = z;
+        stat += z * z;
+        kept += 1;
+    }
+    let df = kept.max(1);
+    let p_value = crate::util::stats::chi_square_sf(stat, df as f64);
+    CalibratedFit {
+        z_scores,
+        chi: ChiSquare { statistic: stat, df, dropped, p_value },
+        boot_mean,
+        boot_std,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{count_motifs, CountConfig};
+    use crate::graph::generators;
+    use crate::motifs::MotifSize;
+
+    #[test]
+    fn undirected_k3_closed_forms() {
+        // path: C(n-1,2)·3·p²(1−p); triangle: C(n-1,2)·p³
+        let n = 100;
+        let p = 0.1;
+        let e = expected_per_vertex(3, Direction::Undirected, n, p);
+        let comb = 99.0 * 98.0 / 2.0;
+        assert!((e[0] - comb * 3.0 * p * p * (1.0 - p)).abs() / e[0] < 1e-10);
+        assert!((e[1] - comb * p * p * p).abs() / e[1] < 1e-10);
+    }
+
+    #[test]
+    fn directed_k3_sums_match_connected_probability() {
+        // Σ_m E[X] over all classes = C(n−1,2) · P(connected on 3 vertices)
+        let n = 50;
+        let p = 0.2;
+        let e = expected_per_vertex(3, Direction::Directed, n, p);
+        let total: f64 = e.iter().sum();
+        // P(weakly connected directed triple): 1 − P(disconnected).
+        // count over the 64-id space with independent arcs:
+        let mut p_conn = 0.0;
+        for id in 0u16..64 {
+            if crate::motifs::ids::is_weakly_connected(id, 3) {
+                let ones = id.count_ones() as f64;
+                p_conn += p.powf(ones) * (1.0 - p).powf(6.0 - ones);
+            }
+        }
+        let expect = ln_choose(49.0, 2.0).exp() * p_conn;
+        assert!((total - expect).abs() / expect < 1e-9, "{total} vs {expect}");
+    }
+
+    #[test]
+    fn expectation_matches_measurement_gnp() {
+        // statistical validation (the Fig. 3 experiment in miniature)
+        let n = 400;
+        let p = 0.05;
+        let g = generators::gnp_undirected(n, p, 99);
+        let counts = count_motifs(
+            &g,
+            &CountConfig {
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let observed = counts.mean_per_vertex();
+        let expected = expected_per_vertex(3, Direction::Undirected, n, p);
+        for (o, e) in observed.iter().zip(&expected) {
+            let rel = (o - e).abs() / e.max(1.0);
+            assert!(rel < 0.15, "observed {o} expected {e}");
+        }
+    }
+
+    #[test]
+    fn fig3_fit_conditioned_on_realized_density() {
+        // conditioning on p̂ removes the dominant global-density noise;
+        // classes built on mutual dyads keep an independent ~1/√(#dyads)
+        // fluctuation (≈6% here), so the tolerance is 10%
+        let n = 500;
+        let p = 0.05;
+        let g = generators::gnp_directed(n, p, 7);
+        let counts = count_motifs(
+            &g,
+            &CountConfig {
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let p_hat = realized_p(&g, Direction::Directed);
+        let observed: Vec<f64> = counts.class_instances().iter().map(|&x| x as f64).collect();
+        let expected = expected_instances(3, Direction::Directed, n, p_hat);
+        for (o, e) in observed.iter().zip(&expected) {
+            if *e > 1000.0 {
+                let rel = (o - e).abs() / e;
+                assert!(rel < 0.10, "obs {o} exp {e} rel {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn fig3_calibrated_chi_square_accepts() {
+        // full Fig. 3 criterion with bootstrap-calibrated variance
+        let n = 200;
+        let p = 0.05;
+        let dir = Direction::Directed;
+        let count_fn = |g: &crate::graph::csr::Graph| -> Vec<f64> {
+            count_motifs(
+                g,
+                &CountConfig { size: MotifSize::Three, direction: dir, workers: 1, ..Default::default() },
+            )
+            .unwrap()
+            .class_instances()
+            .iter()
+            .map(|&x| x as f64)
+            .collect()
+        };
+        let g = generators::gnp_directed(n, p, 12345);
+        let observed = count_fn(&g);
+        let fit = calibrated_fig3_fit(3, dir, n, p, &observed, 12, 7, count_fn);
+        assert!(
+            fit.chi.accepts_at_5pct(),
+            "chi² = {:.1} (df {}) p = {:.4}, z = {:?}",
+            fit.chi.statistic,
+            fit.chi.df,
+            fit.chi.p_value,
+            fit.z_scores
+        );
+        // bootstrap mean must itself track the formula
+        let expected = expected_instances(3, dir, n, p);
+        for (b, e) in fit.boot_mean.iter().zip(&expected) {
+            if *e > 100.0 {
+                assert!((b - e).abs() / e < 0.05, "boot {b} theory {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn expected_instances_scaling() {
+        let per_v = expected_per_vertex(3, Direction::Undirected, 60, 0.1);
+        let inst = expected_instances(3, Direction::Undirected, 60, 0.1);
+        for (a, b) in per_v.iter().zip(&inst) {
+            assert!((b - a * 20.0).abs() < 1e-9);
+        }
+    }
+}

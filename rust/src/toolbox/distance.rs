@@ -1,0 +1,118 @@
+//! Normalized distance distribution (paper Section 10): for each vertex,
+//! the fraction of reachable vertices at distance 1, 2, ... — one BFS per
+//! vertex over the CSR.
+
+use crate::graph::csr::Graph;
+
+/// Per-vertex distance histogram, truncated/padded to `max_dist` bins;
+/// bin d-1 = fraction of the *other* n-1 vertices at distance exactly d.
+pub fn distance_distribution(graph: &Graph, max_dist: usize) -> Vec<Vec<f64>> {
+    let n = graph.n();
+    let mut out = vec![vec![0.0; max_dist]; n];
+    if n <= 1 {
+        return out;
+    }
+    let mut dist = vec![u32::MAX; n];
+    let mut queue = std::collections::VecDeque::new();
+    for src in 0..n as u32 {
+        dist.fill(u32::MAX);
+        dist[src as usize] = 0;
+        queue.clear();
+        queue.push_back(src);
+        while let Some(v) = queue.pop_front() {
+            let dv = dist[v as usize];
+            if dv as usize >= max_dist {
+                continue;
+            }
+            for &u in graph.und.neighbors(v) {
+                if dist[u as usize] == u32::MAX {
+                    dist[u as usize] = dv + 1;
+                    queue.push_back(u);
+                }
+            }
+        }
+        let denom = (n - 1) as f64;
+        for v in 0..n {
+            let d = dist[v];
+            if d >= 1 && (d as usize) <= max_dist {
+                out[src as usize][d as usize - 1] += 1.0 / denom;
+            }
+        }
+    }
+    out
+}
+
+/// BFS eccentricity-limited single-source distances (helper shared with
+/// the attraction-basin measure).
+pub fn bfs_distances(graph: &Graph, src: u32, use_directed_out: bool) -> Vec<u32> {
+    let n = graph.n();
+    let csr = if use_directed_out { &graph.out } else { &graph.und };
+    let mut dist = vec![u32::MAX; n];
+    dist[src as usize] = 0;
+    let mut queue = std::collections::VecDeque::new();
+    queue.push_back(src);
+    while let Some(v) = queue.pop_front() {
+        for &u in csr.neighbors(v) {
+            if dist[u as usize] == u32::MAX {
+                dist[u as usize] = dist[v as usize] + 1;
+                queue.push_back(u);
+            }
+        }
+    }
+    dist
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn path_graph_distribution() {
+        // path 0-1-2-3: from 0, one vertex at d=1,2,3 each, denom 3
+        let g = generators::path(4);
+        let dd = distance_distribution(&g, 4);
+        let third = 1.0 / 3.0;
+        for (i, &x) in dd[0][..3].iter().enumerate() {
+            assert!((x - third).abs() < 1e-12, "bin {i}");
+        }
+        assert_eq!(dd[0][3], 0.0);
+        // middle vertex 1: two at d=1, one at d=2
+        assert!((dd[1][0] - 2.0 * third).abs() < 1e-12);
+        assert!((dd[1][1] - third).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rows_sum_to_reachable_fraction() {
+        let g = generators::gnp_undirected(50, 0.08, 6);
+        let dd = distance_distribution(&g, 50);
+        for src in 0..50u32 {
+            let reach = bfs_distances(&g, src, false)
+                .iter()
+                .filter(|&&d| d != u32::MAX && d > 0)
+                .count() as f64
+                / 49.0;
+            let s: f64 = dd[src as usize].iter().sum();
+            assert!((s - reach).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn complete_graph_all_at_distance_one() {
+        let g = generators::complete(5, false);
+        let dd = distance_distribution(&g, 3);
+        for row in dd {
+            assert!((row[0] - 1.0).abs() < 1e-12);
+            assert_eq!(row[1], 0.0);
+        }
+    }
+
+    #[test]
+    fn bfs_directed_respects_direction() {
+        let g = crate::graph::csr::Graph::from_edges(3, &[(0, 1), (1, 2)], true);
+        let d = bfs_distances(&g, 0, true);
+        assert_eq!(d, vec![0, 1, 2]);
+        let d_rev = bfs_distances(&g, 2, true);
+        assert_eq!(d_rev[0], u32::MAX);
+    }
+}

@@ -1,0 +1,86 @@
+//! Flow hierarchy (Rosen & Louzoun 2014, paper Section 10): an
+//! approximate topological ordering for graphs with cycles. Each vertex
+//! gets a level; the measure is driven by the fraction of edges pointing
+//! "up" the ordering. We implement the iterative relaxation variant:
+//! levels start at 0 and repeatedly move toward (mean predecessor level
+//! + 1), which converges to exact topological depth on DAGs.
+
+use crate::graph::csr::Graph;
+
+/// Per-vertex flow level. `iters` relaxation sweeps (20 is plenty for the
+/// graphs the toolbox targets).
+pub fn flow_levels(graph: &Graph, iters: usize) -> Vec<f64> {
+    let n = graph.n();
+    let rev = graph.out.transpose();
+    let mut level = vec![0.0f64; n];
+    for _ in 0..iters {
+        let mut next = vec![0.0f64; n];
+        for v in 0..n {
+            let preds = rev.neighbors(v as u32);
+            if preds.is_empty() {
+                next[v] = 0.0;
+            } else {
+                let mean: f64 =
+                    preds.iter().map(|&p| level[p as usize]).sum::<f64>() / preds.len() as f64;
+                next[v] = mean + 1.0;
+            }
+        }
+        level = next;
+    }
+    level
+}
+
+/// Fraction of edges that increase the flow level — 1.0 for a DAG
+/// (hierarchy), lower when cycles force back-edges.
+pub fn flow_hierarchy(graph: &Graph, iters: usize) -> f64 {
+    let level = flow_levels(graph, iters);
+    let mut up = 0usize;
+    let mut total = 0usize;
+    for (u, v) in graph.out.edges() {
+        total += 1;
+        if level[v as usize] > level[u as usize] {
+            up += 1;
+        }
+    }
+    if total == 0 {
+        1.0
+    } else {
+        up as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Graph;
+    use crate::graph::generators;
+
+    #[test]
+    fn dag_levels_are_topological_depth() {
+        let g = generators::layered_dag(4, 3);
+        let l = flow_levels(&g, 20);
+        for (v, &lev) in l.iter().enumerate() {
+            assert!((lev - (v / 3) as f64).abs() < 1e-9, "vertex {v} level {lev}");
+        }
+        assert_eq!(flow_hierarchy(&g, 20), 1.0);
+    }
+
+    #[test]
+    fn chain_is_perfect_hierarchy() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 2), (2, 3), (3, 4)], true);
+        assert_eq!(flow_hierarchy(&g, 30), 1.0);
+    }
+
+    #[test]
+    fn cycle_is_not_a_hierarchy() {
+        let g = Graph::from_edges(3, &[(0, 1), (1, 2), (2, 0)], true);
+        let h = flow_hierarchy(&g, 30);
+        assert!(h < 1.0, "cycle hierarchy {h}");
+    }
+
+    #[test]
+    fn total_order_dag_full_hierarchy() {
+        let g = generators::total_order_dag(8);
+        assert_eq!(flow_hierarchy(&g, 30), 1.0);
+    }
+}

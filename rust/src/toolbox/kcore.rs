@@ -1,0 +1,123 @@
+//! K-core decomposition (Dorogovtsev et al. 2006): the core number of a
+//! vertex is the largest k such that it belongs to a maximal sub-graph
+//! with minimum degree ≥ k. Matula–Beck peeling, O(V + E).
+
+use crate::graph::csr::Graph;
+
+/// Core number per vertex (undirected view).
+pub fn core_numbers(graph: &Graph) -> Vec<u32> {
+    let n = graph.n();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut degree: Vec<usize> = (0..n).map(|v| graph.und.degree(v as u32)).collect();
+    let max_deg = degree.iter().cloned().max().unwrap_or(0);
+
+    // bucket sort vertices by degree
+    let mut bin = vec![0usize; max_deg + 2];
+    for &d in &degree {
+        bin[d] += 1;
+    }
+    let mut start = 0;
+    for b in bin.iter_mut() {
+        let count = *b;
+        *b = start;
+        start += count;
+    }
+    let mut pos = vec![0usize; n];
+    let mut vert = vec![0u32; n];
+    for v in 0..n {
+        pos[v] = bin[degree[v]];
+        vert[pos[v]] = v as u32;
+        bin[degree[v]] += 1;
+    }
+    // restore bin starts
+    for d in (1..bin.len()).rev() {
+        bin[d] = bin[d - 1];
+    }
+    bin[0] = 0;
+
+    let mut core: Vec<u32> = degree.iter().map(|&d| d as u32).collect();
+    for i in 0..n {
+        let v = vert[i];
+        core[v as usize] = degree[v as usize] as u32;
+        for &u in graph.und.neighbors(v) {
+            let u = u as usize;
+            if degree[u] > degree[v as usize] {
+                // move u one bucket down
+                let du = degree[u];
+                let pu = pos[u];
+                let pw = bin[du];
+                let w = vert[pw];
+                if u as u32 != w {
+                    vert.swap(pu, pw);
+                    pos[u] = pw;
+                    pos[w as usize] = pu;
+                }
+                bin[du] += 1;
+                degree[u] -= 1;
+            }
+        }
+    }
+    core
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::graph::csr::Graph;
+
+    #[test]
+    fn clique_core_is_n_minus_1() {
+        let g = generators::complete(6, false);
+        assert_eq!(core_numbers(&g), vec![5; 6]);
+    }
+
+    #[test]
+    fn star_core_is_1() {
+        let g = generators::star(8);
+        assert_eq!(core_numbers(&g), vec![1; 8]);
+    }
+
+    #[test]
+    fn ring_core_is_2() {
+        let g = generators::ring(9);
+        assert_eq!(core_numbers(&g), vec![2; 9]);
+    }
+
+    #[test]
+    fn clique_with_tail() {
+        // K4 (0..3) plus a path 3-4-5: tail has core 1
+        let g = Graph::from_edges(
+            6,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3), (3, 4), (4, 5)],
+            false,
+        );
+        let c = core_numbers(&g);
+        assert_eq!(&c[0..4], &[3, 3, 3, 3]);
+        assert_eq!(&c[4..], &[1, 1]);
+    }
+
+    #[test]
+    fn core_invariant_on_random_graph() {
+        // every vertex with core k has >= k neighbors of core >= k
+        let g = generators::gnp_undirected(60, 0.1, 4);
+        let c = core_numbers(&g);
+        for v in 0..g.n() as u32 {
+            let k = c[v as usize];
+            let strong = graph_neighbors_with_core(&g, &c, v, k);
+            assert!(strong >= k as usize, "vertex {v}: core {k}, strong nbrs {strong}");
+        }
+    }
+
+    fn graph_neighbors_with_core(g: &Graph, core: &[u32], v: u32, k: u32) -> usize {
+        g.und.neighbors(v).iter().filter(|&&u| core[u as usize] >= k).count()
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = Graph::from_edges(0, &[], false);
+        assert!(core_numbers(&g).is_empty());
+    }
+}

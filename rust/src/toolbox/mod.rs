@@ -1,0 +1,11 @@
+//! The "other tools available in the current toolbox" (paper Section 10):
+//! additional per-vertex measures built on the same CSR formalism —
+//! k-cores, normalized distance distribution, attraction-basin hierarchy,
+//! average neighbor degree, PageRank, and the flow hierarchy measure.
+
+pub mod attraction;
+pub mod distance;
+pub mod flow;
+pub mod kcore;
+pub mod neighbor_degree;
+pub mod pagerank;

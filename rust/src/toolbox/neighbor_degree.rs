@@ -1,0 +1,49 @@
+//! Average neighbor degree (paper Section 10) — assortativity building
+//! block: mean undirected degree over each vertex's neighbors.
+
+use crate::graph::csr::Graph;
+
+/// Mean neighbor degree per vertex; 0.0 for isolated vertices.
+pub fn average_neighbor_degree(graph: &Graph) -> Vec<f64> {
+    (0..graph.n() as u32)
+        .map(|v| {
+            let nbrs = graph.und.neighbors(v);
+            if nbrs.is_empty() {
+                0.0
+            } else {
+                nbrs.iter().map(|&u| graph.und.degree(u) as f64).sum::<f64>() / nbrs.len() as f64
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn star_values() {
+        let g = generators::star(5); // hub degree 4, leaves degree 1
+        let a = average_neighbor_degree(&g);
+        assert_eq!(a[0], 1.0); // hub's neighbors are all leaves
+        for v in 1..5 {
+            assert_eq!(a[v], 4.0); // leaf's only neighbor is the hub
+        }
+    }
+
+    #[test]
+    fn regular_graph_constant() {
+        let g = generators::ring(8);
+        for x in average_neighbor_degree(&g) {
+            assert_eq!(x, 2.0);
+        }
+    }
+
+    #[test]
+    fn isolated_vertices_zero() {
+        let g = crate::graph::csr::Graph::from_edges(3, &[(0, 1)], false);
+        let a = average_neighbor_degree(&g);
+        assert_eq!(a[2], 0.0);
+    }
+}

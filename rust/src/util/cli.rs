@@ -1,0 +1,243 @@
+//! Minimal CLI argument parser (no `clap` in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands; produces the usage text from registered options. Only what
+//! the `vdmc` binary and the bench harnesses need.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// Declarative description of one option.
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+/// Parsed arguments: option map + positionals.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    values: HashMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_parse<T: std::str::FromStr>(&self, name: &str) -> Result<Option<T>, String> {
+        match self.values.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| format!("invalid value for --{name}: {v:?}")),
+        }
+    }
+
+    /// Value with a required default already applied by the parser.
+    pub fn req<T: std::str::FromStr>(&self, name: &str) -> Result<T, String> {
+        self.get_parse::<T>(name)?
+            .ok_or_else(|| format!("missing required option --{name}"))
+    }
+}
+
+/// One subcommand with its option specs.
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Command { name, about, opts: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: true, default });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, takes_value: false, default: None });
+        self
+    }
+
+    /// Parse this command's argument slice.
+    pub fn parse(&self, argv: &[String]) -> Result<Args, String> {
+        let mut out = Args::default();
+        for spec in &self.opts {
+            if let Some(d) = spec.default {
+                out.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| format!("unknown option --{key} for `{}`\n{}", self.name, self.usage()))?;
+                if spec.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("option --{key} expects a value"))?
+                        }
+                    };
+                    out.values.insert(key.to_string(), value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("flag --{key} does not take a value"));
+                    }
+                    out.flags.push(key.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "usage: vdmc {} [options]", self.name);
+        let _ = writeln!(s, "  {}", self.about);
+        for o in &self.opts {
+            let v = if o.takes_value { " <value>" } else { "" };
+            let d = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
+            let _ = writeln!(s, "    --{}{v}\t{}{d}", o.name, o.help);
+        }
+        s
+    }
+}
+
+/// Top-level dispatcher over subcommands.
+pub struct App {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+impl App {
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "subcommands:");
+        for c in &self.commands {
+            let _ = writeln!(s, "  {:12} {}", c.name, c.about);
+        }
+        let _ = writeln!(s, "run `{} <subcommand> --help` for options", self.name);
+        s
+    }
+
+    /// Split argv into (command, parsed args). `--help` handling is left to
+    /// the caller (returned as a flag).
+    pub fn dispatch(&self, argv: &[String]) -> Result<(&Command, Args), String> {
+        let cmd_name = argv.first().ok_or_else(|| self.usage())?;
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| format!("unknown subcommand {cmd_name:?}\n{}", self.usage()))?;
+        let mut rest = argv[1..].to_vec();
+        if rest.iter().any(|a| a == "--help" || a == "-h") {
+            rest.retain(|a| a != "--help" && a != "-h");
+            let mut args = cmd.parse(&rest)?;
+            args.flags.push("help".to_string());
+            return Ok((cmd, args));
+        }
+        Ok((cmd, cmd.parse(&rest)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("count", "count motifs")
+            .opt("input", "edge list path", None)
+            .opt("k", "motif size", Some("3"))
+            .flag("directed", "treat graph as directed")
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_key_value_and_flags() {
+        let a = cmd().parse(&argv(&["--input", "g.tsv", "--directed"])).unwrap();
+        assert_eq!(a.get("input"), Some("g.tsv"));
+        assert_eq!(a.get("k"), Some("3")); // default
+        assert!(a.flag("directed"));
+    }
+
+    #[test]
+    fn parses_equals_form() {
+        let a = cmd().parse(&argv(&["--k=4"])).unwrap();
+        assert_eq!(a.req::<usize>("k").unwrap(), 4);
+    }
+
+    #[test]
+    fn rejects_unknown_option() {
+        assert!(cmd().parse(&argv(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_value() {
+        assert!(cmd().parse(&argv(&["--input"])).is_err());
+    }
+
+    #[test]
+    fn rejects_value_on_flag() {
+        assert!(cmd().parse(&argv(&["--directed=yes"])).is_err());
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = cmd().parse(&argv(&["a.tsv", "--k", "4", "b.tsv"])).unwrap();
+        assert_eq!(a.positional, vec!["a.tsv", "b.tsv"]);
+    }
+
+    #[test]
+    fn dispatch_finds_subcommand() {
+        let app = App { name: "vdmc", about: "test", commands: vec![cmd()] };
+        let (c, a) = app.dispatch(&argv(&["count", "--k", "4"])).unwrap();
+        assert_eq!(c.name, "count");
+        assert_eq!(a.req::<usize>("k").unwrap(), 4);
+    }
+
+    #[test]
+    fn dispatch_help_flag() {
+        let app = App { name: "vdmc", about: "test", commands: vec![cmd()] };
+        let (_, a) = app.dispatch(&argv(&["count", "--help"])).unwrap();
+        assert!(a.flag("help"));
+    }
+
+    #[test]
+    fn bad_parse_type_reported() {
+        let a = cmd().parse(&argv(&["--k", "many"])).unwrap();
+        assert!(a.req::<usize>("k").is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! From-scratch substrates that would normally come from crates.
+//!
+//! The offline vendor registry of this environment ships no `rand`, `clap`,
+//! `serde`, `criterion` or `proptest`, so the pieces VDMC needs are built
+//! here (documented as a substitution in DESIGN.md): a PCG PRNG, a small
+//! CLI argument parser, a JSON writer for metrics/results, statistics
+//! helpers (chi-square), a wall-clock bench timer, and a shrinking
+//! property-test harness.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod timer;

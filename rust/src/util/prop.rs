@@ -1,0 +1,220 @@
+//! Minimal shrinking property-test harness (proptest is not in the offline
+//! vendor set; DESIGN.md documents the substitution).
+//!
+//! A property is a closure over a generated value; on failure the harness
+//! greedily shrinks through the generator's `shrink` candidates and reports
+//! the minimal counterexample together with the seed that reproduces it.
+
+use super::rng::Pcg32;
+
+/// A value generator with optional shrinking.
+pub trait Gen {
+    type Value: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Pcg32) -> Self::Value;
+    /// Candidate smaller values, tried in order during shrinking.
+    fn shrink(&self, _value: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Configuration for a property run.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // Seed from the env so CI can reproduce failures: VDMC_PROP_SEED.
+        let seed = std::env::var("VDMC_PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Config { cases: 64, seed, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated values; panics with the minimal
+/// counterexample on failure.
+pub fn check<G: Gen>(name: &str, cfg: Config, gen: &G, prop: impl Fn(&G::Value) -> Result<(), String>) {
+    let mut rng = Pcg32::new(cfg.seed, 0x9e37);
+    for case in 0..cfg.cases {
+        let value = gen.generate(&mut rng);
+        if let Err(msg) = prop(&value) {
+            let (min_value, min_msg, steps) = shrink_loop(gen, &prop, value, msg, cfg.max_shrink_steps);
+            panic!(
+                "property `{name}` failed (case {case}/{}, seed {}, shrunk {steps} steps)\n\
+                 counterexample: {min_value:?}\nerror: {min_msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+fn shrink_loop<G: Gen>(
+    gen: &G,
+    prop: &impl Fn(&G::Value) -> Result<(), String>,
+    mut value: G::Value,
+    mut msg: String,
+    max_steps: usize,
+) -> (G::Value, String, usize) {
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for cand in gen.shrink(&value) {
+            if let Err(m) = prop(&cand) {
+                value = cand;
+                msg = m;
+                steps += 1;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    (value, msg, steps)
+}
+
+// ---------------------------------------------------------------- generators
+
+/// Uniform usize in [lo, hi], shrinking toward lo.
+pub struct UsizeIn(pub usize, pub usize);
+
+impl Gen for UsizeIn {
+    type Value = usize;
+    fn generate(&self, rng: &mut Pcg32) -> usize {
+        self.0 + rng.below_usize(self.1 - self.0 + 1)
+    }
+    fn shrink(&self, v: &usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *v > self.0 {
+            out.push(self.0);
+            out.push(self.0 + (v - self.0) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Random edge list on `n ∈ [n_lo, n_hi]` vertices with edge prob `p`;
+/// shrinks by dropping edges then vertices.
+pub struct EdgeListGen {
+    pub n_lo: usize,
+    pub n_hi: usize,
+    pub p: f64,
+    pub directed: bool,
+}
+
+/// Generated graph description: vertex count + edge pairs.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RandomEdges {
+    pub n: usize,
+    pub edges: Vec<(u32, u32)>,
+    pub directed: bool,
+}
+
+impl Gen for EdgeListGen {
+    type Value = RandomEdges;
+
+    fn generate(&self, rng: &mut Pcg32) -> RandomEdges {
+        let n = self.n_lo + rng.below_usize(self.n_hi - self.n_lo + 1);
+        let mut edges = Vec::new();
+        for u in 0..n as u32 {
+            for v in 0..n as u32 {
+                if u == v {
+                    continue;
+                }
+                if !self.directed && v < u {
+                    continue;
+                }
+                if rng.bernoulli(self.p) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        RandomEdges { n, edges, directed: self.directed }
+    }
+
+    fn shrink(&self, v: &RandomEdges) -> Vec<RandomEdges> {
+        let mut out = Vec::new();
+        // remove one edge (first / middle / last)
+        if !v.edges.is_empty() {
+            for idx in [0, v.edges.len() / 2, v.edges.len() - 1] {
+                let mut e = v.edges.clone();
+                e.remove(idx);
+                out.push(RandomEdges { n: v.n, edges: e, directed: v.directed });
+            }
+        }
+        // drop the highest vertex (and incident edges)
+        if v.n > self.n_lo {
+            let last = (v.n - 1) as u32;
+            let e: Vec<_> = v.edges.iter().copied().filter(|&(a, b)| a != last && b != last).collect();
+            out.push(RandomEdges { n: v.n - 1, edges: e, directed: v.directed });
+        }
+        out.dedup();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let count = std::cell::Cell::new(0usize);
+        let gen = UsizeIn(0, 100);
+        check("nonneg", Config { cases: 32, ..Default::default() }, &gen, |_v| {
+            count.set(count.get() + 1);
+            Ok(())
+        });
+        assert_eq!(count.get(), 32);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics() {
+        check("always-fails", Config::default(), &UsizeIn(0, 10), |_| Err("no".into()));
+    }
+
+    #[test]
+    fn shrinks_to_minimal_usize() {
+        // property: v < 7. Minimal counterexample is 7.
+        let gen = UsizeIn(0, 100);
+        let result = std::panic::catch_unwind(|| {
+            check("lt7", Config { cases: 200, ..Default::default() }, &gen, |v| {
+                if *v < 7 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 7"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("counterexample: 7"), "got: {msg}");
+    }
+
+    #[test]
+    fn edge_list_gen_respects_bounds() {
+        let gen = EdgeListGen { n_lo: 2, n_hi: 6, p: 0.5, directed: true };
+        let mut rng = Pcg32::seeded(1);
+        for _ in 0..50 {
+            let g = gen.generate(&mut rng);
+            assert!((2..=6).contains(&g.n));
+            for &(u, v) in &g.edges {
+                assert!(u != v && (u as usize) < g.n && (v as usize) < g.n);
+            }
+        }
+    }
+
+    #[test]
+    fn edge_list_shrink_reduces() {
+        let gen = EdgeListGen { n_lo: 2, n_hi: 6, p: 0.8, directed: false };
+        let mut rng = Pcg32::seeded(2);
+        let g = gen.generate(&mut rng);
+        for s in gen.shrink(&g) {
+            assert!(s.edges.len() < g.edges.len() || s.n < g.n);
+        }
+    }
+}

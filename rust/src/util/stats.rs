@@ -1,0 +1,209 @@
+//! Statistics helpers: chi-square goodness-of-fit (paper Section 7 uses a
+//! chi-square test at p = 0.05 between observed and expected motif counts),
+//! plus simple summary statistics for the bench harness.
+
+/// Summary of a sample: mean / std-dev / min / max.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+/// Compute a summary; empty input yields NaNs with n = 0.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { n: 0, mean: f64::NAN, std: f64::NAN, min: f64::NAN, max: f64::NAN };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary { n: xs.len(), mean, std: var.sqrt(), min, max }
+}
+
+/// Result of a chi-square goodness-of-fit test.
+#[derive(Debug, Clone, Copy)]
+pub struct ChiSquare {
+    /// The statistic Σ (obs − exp)² / exp over the retained categories.
+    pub statistic: f64,
+    /// Degrees of freedom = retained categories − 1 (or the raw category
+    /// count when `reduce_df` is false).
+    pub df: usize,
+    /// Number of categories dropped for exp < min_expected.
+    pub dropped: usize,
+    /// Approximate upper-tail p-value (Wilson–Hilferty).
+    pub p_value: f64,
+}
+
+impl ChiSquare {
+    /// Non-significant at the 5% level — the paper's acceptance criterion.
+    pub fn accepts_at_5pct(&self) -> bool {
+        self.p_value > 0.05
+    }
+}
+
+/// Chi-square goodness-of-fit between observed and expected category counts.
+///
+/// Categories with expected count below `min_expected` (conventionally 5)
+/// are dropped, mirroring standard practice for sparse cells; `df` is the
+/// retained-category count minus one.
+pub fn chi_square_fit(observed: &[f64], expected: &[f64], min_expected: f64) -> ChiSquare {
+    assert_eq!(observed.len(), expected.len(), "category count mismatch");
+    let mut stat = 0.0;
+    let mut kept = 0usize;
+    let mut dropped = 0usize;
+    for (&o, &e) in observed.iter().zip(expected) {
+        if e < min_expected {
+            dropped += 1;
+            continue;
+        }
+        stat += (o - e) * (o - e) / e;
+        kept += 1;
+    }
+    let df = kept.saturating_sub(1);
+    let p = if df == 0 { 1.0 } else { chi_square_sf(stat, df as f64) };
+    ChiSquare { statistic: stat, df, dropped, p_value: p }
+}
+
+/// Upper-tail probability of the chi-square distribution via the
+/// Wilson–Hilferty cube-root normal approximation — accurate to a few 1e-3
+/// for df ≥ 3 and entirely adequate for a 5% accept/reject decision.
+pub fn chi_square_sf(x: f64, df: f64) -> f64 {
+    if x <= 0.0 {
+        return 1.0;
+    }
+    let t = (x / df).powf(1.0 / 3.0);
+    let mu = 1.0 - 2.0 / (9.0 * df);
+    let sigma = (2.0 / (9.0 * df)).sqrt();
+    normal_sf((t - mu) / sigma)
+}
+
+/// Standard-normal upper tail via erfc (Abramowitz–Stegun 7.1.26 polynomial).
+pub fn normal_sf(z: f64) -> f64 {
+    0.5 * erfc(z / std::f64::consts::SQRT_2)
+}
+
+/// Complementary error function, |err| < 1.5e-7.
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * ax);
+    let poly = t
+        * (0.254829592 + t * (-0.284496736 + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    let y = poly * (-ax * ax).exp();
+    if x >= 0.0 {
+        y
+    } else {
+        2.0 - y
+    }
+}
+
+/// ln Γ(x) (Lanczos, g = 7, n = 9); needed for binomial coefficients in the
+/// Eq. 7.4 theory module.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEF: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // reflection
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// ln C(n, k) via lgamma.
+pub fn ln_choose(n: f64, k: f64) -> f64 {
+    if k < 0.0 || k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_gamma(n + 1.0) - ln_gamma(k + 1.0) - ln_gamma(n - k + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(5) = 24, Γ(0.5) = sqrt(pi)
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn ln_choose_matches_direct() {
+        // C(10, 3) = 120
+        assert!((ln_choose(10.0, 3.0).exp() - 120.0).abs() < 1e-8);
+        // C(999, 2) = 498501
+        assert!((ln_choose(999.0, 2.0).exp() - 498501.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn erfc_reference_points() {
+        assert!((erfc(0.0) - 1.0).abs() < 1e-7);
+        assert!((erfc(1.0) - 0.15729920705).abs() < 1e-6);
+        assert!((erfc(-1.0) - 1.84270079295).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chi_square_sf_reference_points() {
+        // df=10: P(X > 18.307) = 0.05 (critical value table)
+        let p = chi_square_sf(18.307, 10.0);
+        assert!((p - 0.05).abs() < 0.004, "p = {p}");
+        // df=4: P(X > 9.488) = 0.05
+        let p = chi_square_sf(9.488, 4.0);
+        assert!((p - 0.05).abs() < 0.006, "p = {p}");
+    }
+
+    #[test]
+    fn chi_square_fit_accepts_identical() {
+        let e = [100.0, 200.0, 300.0];
+        let c = chi_square_fit(&e, &e, 5.0);
+        assert_eq!(c.statistic, 0.0);
+        assert!(c.accepts_at_5pct());
+    }
+
+    #[test]
+    fn chi_square_fit_rejects_gross_mismatch() {
+        let o = [100.0, 200.0, 700.0];
+        let e = [300.0, 300.0, 400.0];
+        let c = chi_square_fit(&o, &e, 5.0);
+        assert!(!c.accepts_at_5pct(), "stat {}", c.statistic);
+    }
+
+    #[test]
+    fn chi_square_fit_drops_sparse_cells() {
+        let o = [10.0, 20.0, 1.0];
+        let e = [10.0, 20.0, 0.5];
+        let c = chi_square_fit(&o, &e, 5.0);
+        assert_eq!(c.dropped, 1);
+        assert_eq!(c.df, 1);
+    }
+}

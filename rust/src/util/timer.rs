@@ -1,0 +1,110 @@
+//! Wall-clock measurement helpers for the bench harness (no `criterion` in
+//! the offline vendor set). Median-of-runs with warmup, reporting a
+//! [`stats::Summary`], plus a scoped stopwatch for coordinator metrics.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{summarize, Summary};
+
+/// A scoped stopwatch; `elapsed_ms` at any point, `lap` resets.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Result of a benchmark: per-iteration seconds summary.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub secs: Summary,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:40} {:>10.4} s/iter (±{:.4}, n={}, min {:.4}, max {:.4})",
+            self.name, self.secs.mean, self.secs.std, self.iters, self.secs.min, self.secs.max
+        )
+    }
+}
+
+/// Run `f` for `warmup` unrecorded + `iters` recorded iterations.
+/// The closure's return value is black-boxed to keep the optimizer honest.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult { name: name.to_string(), secs: summarize(&samples), iters }
+}
+
+/// Time a single run (for workloads too slow to repeat).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Instant::now();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Optimization barrier (std::hint::black_box re-export point so bench code
+/// does not depend on the unstable-history of the hint API).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_monotonic() {
+        let mut sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        let l1 = sw.lap();
+        assert!(l1 >= Duration::from_millis(1));
+        let l2 = sw.elapsed();
+        assert!(l2 < l1 + Duration::from_secs(1));
+    }
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut calls = 0usize;
+        let r = bench("noop", 2, 5, || calls += 1);
+        assert_eq!(calls, 7);
+        assert_eq!(r.iters, 5);
+        assert!(r.secs.mean >= 0.0);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,177 @@
+//! Coordinator-focused integration tests: queue accounting, determinism
+//! under contention, failure handling, and the CLI surface.
+
+use std::process::Command;
+
+use vdmc::coordinator::work::{build_queue, total_units, WorkQueue};
+use vdmc::coordinator::{count_motifs, count_motifs_with_report, CountConfig};
+use vdmc::graph::generators;
+use vdmc::motifs::counter::CounterMode;
+use vdmc::motifs::{Direction, MotifSize};
+
+#[test]
+fn determinism_across_repeat_runs_under_contention() {
+    let g = generators::barabasi_albert(800, 4, 13);
+    let cfg = CountConfig {
+        size: MotifSize::Four,
+        direction: Direction::Undirected,
+        workers: 8,
+        counter: CounterMode::Atomic,
+        ..Default::default()
+    };
+    let first = count_motifs(&g, &cfg).unwrap();
+    for _ in 0..3 {
+        let again = count_motifs(&g, &cfg).unwrap();
+        assert_eq!(first.per_vertex, again.per_vertex);
+        assert_eq!(first.total_instances, again.total_instances);
+    }
+}
+
+#[test]
+fn queue_units_equal_undirected_edges_for_many_graphs() {
+    for seed in 0..10u64 {
+        let g = generators::gnp_undirected(200, 0.05, seed);
+        let items = build_queue(&g, 16);
+        assert_eq!(total_units(&items), g.und.m() / 2, "seed {seed}");
+    }
+}
+
+#[test]
+fn heavy_hub_split_across_items() {
+    // one massive hub: its units must spread over many queue items so a
+    // worker pool can share it (the paper's GPU-blocks argument)
+    let g = generators::star(5000);
+    let items = build_queue(&g, 32);
+    let hub_items = items.iter().filter(|i| i.root == 0).count();
+    assert!(hub_items >= 4999 / 32, "hub not split: {hub_items} items");
+    let q = WorkQueue::new(items);
+    // drain from several threads and count
+    let drained: usize = std::thread::scope(|s| {
+        (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut n = 0;
+                    while q.pop().is_some() {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect::<Vec<_>>()
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .sum()
+    });
+    assert_eq!(drained, 5000usize.div_ceil(32).max(4999 / 32 + 1));
+}
+
+#[test]
+fn report_throughput_and_imbalance_are_sane() {
+    let g = generators::gnp_undirected(400, 0.05, 3);
+    let (c, report) = count_motifs_with_report(
+        &g,
+        &CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert!(report.throughput() > 0.0);
+    assert!(report.imbalance() >= 1.0);
+    assert_eq!(report.total_instances, c.total_instances);
+    let json = report.to_json().to_string_compact();
+    assert!(json.contains("\"throughput_per_sec\""));
+}
+
+#[test]
+fn error_paths() {
+    // directed counting on an undirected graph must fail cleanly
+    let g = generators::star(10);
+    let err = count_motifs(
+        &g,
+        &CountConfig { direction: Direction::Directed, ..Default::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("undirected"));
+}
+
+fn vdmc_bin() -> Option<std::path::PathBuf> {
+    // target/release/vdmc relative to the test binary
+    let exe = std::env::current_exe().ok()?;
+    let dir = exe.parent()?.parent()?; // target/release
+    let bin = dir.join("vdmc");
+    bin.exists().then_some(bin)
+}
+
+#[test]
+fn cli_generate_count_roundtrip() {
+    let Some(bin) = vdmc_bin() else {
+        eprintln!("skipping: vdmc binary not built (run cargo build --release first)");
+        return;
+    };
+    let dir = std::env::temp_dir().join(format!("vdmc_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let graph_path = dir.join("g.tsv");
+
+    let out = Command::new(&bin)
+        .args(["generate", "--model", "gnp", "--n", "200", "--p", "0.05", "--directed", "--seed", "9"])
+        .arg("--out")
+        .arg(&graph_path)
+        .output()
+        .expect("run generate");
+    assert!(out.status.success(), "generate failed: {}", String::from_utf8_lossy(&out.stderr));
+
+    let out = Command::new(&bin)
+        .args(["count", "--k", "3", "--directed"])
+        .arg("--input")
+        .arg(&graph_path)
+        .output()
+        .expect("run count");
+    assert!(out.status.success(), "count failed: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.lines().any(|l| l.starts_with('m')), "no class totals printed: {stdout}");
+
+    // baseline flag agrees with the default path on the same file
+    let naive = Command::new(&bin)
+        .args(["count", "--k", "3", "--directed", "--baseline-naive"])
+        .arg("--input")
+        .arg(&graph_path)
+        .output()
+        .expect("run naive count");
+    assert!(naive.status.success());
+    assert_eq!(String::from_utf8_lossy(&naive.stdout), stdout, "baseline disagrees with vdmc");
+
+    // info subcommand emits JSON
+    let info = Command::new(&bin)
+        .args(["info", "--directed"])
+        .arg("--input")
+        .arg(&graph_path)
+        .output()
+        .expect("run info");
+    assert!(info.status.success());
+    assert!(String::from_utf8_lossy(&info.stdout).contains("\"mean_degree\""));
+
+    // unknown subcommand fails with usage
+    let bad = Command::new(&bin).arg("bogus").output().expect("run bogus");
+    assert!(!bad.status.success());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_validate_smoke() {
+    let Some(bin) = vdmc_bin() else {
+        eprintln!("skipping: vdmc binary not built");
+        return;
+    };
+    let out = Command::new(&bin)
+        .args(["validate", "--n", "300", "--p", "0.05", "--k", "3", "--directed", "--json"])
+        .output()
+        .expect("run validate");
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("\"chi2\""));
+    assert!(stdout.contains("\"observed\""));
+}

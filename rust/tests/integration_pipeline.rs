@@ -1,0 +1,154 @@
+//! Cross-module integration: generators -> ordering -> coordinator ->
+//! theory/closed forms, on workloads big enough to exercise the work
+//! queue and small enough for CI.
+
+use vdmc::baselines;
+use vdmc::coordinator::{count_motifs, count_motifs_with_report, CountConfig};
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::theory;
+use vdmc::theory::closed_form;
+
+#[test]
+fn scale_free_graph_full_pipeline() {
+    // BA graphs are the paper's real-world stand-in: heavy hubs stress the
+    // (root, neighbor) splitting
+    let g = generators::barabasi_albert(500, 4, 77);
+    for (size, k) in [(MotifSize::Three, 3u64), (MotifSize::Four, 4u64)] {
+        let (c, report) = count_motifs_with_report(
+            &g,
+            &CountConfig { size, direction: Direction::Undirected, workers: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert!(c.total_instances > 0);
+        assert_eq!(c.per_vertex.iter().sum::<u64>(), k * c.total_instances);
+        assert_eq!(report.queue_units, g.und.m() / 2);
+        // the hub participates in the most motifs
+        let hub = (0..g.n() as u32).max_by_key(|&v| g.und_degree(v)).unwrap();
+        let hub_total: u64 = c.vertex(hub).iter().sum();
+        let median_v = g.n() as u32 / 2;
+        let median_total: u64 = c.vertex(median_v).iter().sum();
+        assert!(hub_total > median_total, "hub {hub_total} <= median {median_total}");
+    }
+}
+
+#[test]
+fn directed_triad_census_against_naive_medium() {
+    // a denser directed graph than the property tests use
+    let g = generators::gnp_directed(60, 0.15, 3);
+    let brute = baselines::naive::count(&g, MotifSize::Three, Direction::Directed);
+    let fast = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Three, direction: Direction::Directed, workers: 3, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(brute.per_vertex, fast.per_vertex);
+    // all 13 directed triad classes appear at this density
+    let inst = fast.class_instances();
+    let populated = inst.iter().filter(|&&x| x > 0).count();
+    assert!(populated >= 12, "only {populated}/13 triad classes populated");
+}
+
+#[test]
+fn ring_and_clique_closed_forms_at_scale() {
+    let n = 1000u64;
+    let g = generators::ring(n as usize);
+    let c = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Four, direction: Direction::Undirected, ..Default::default() },
+    )
+    .unwrap();
+    // n consecutive-quadruple motifs, each vertex in 4
+    assert_eq!(c.total_instances, n);
+    for v in 0..n as u32 {
+        assert_eq!(c.vertex(v).iter().sum::<u64>(), closed_form::ring_4paths_per_vertex(n));
+    }
+
+    let g = generators::complete(12, false);
+    let c = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Four, direction: Direction::Undirected, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(c.vertex(0)[c.n_classes - 1], closed_form::clique_k4_per_vertex(12));
+}
+
+#[test]
+fn gnp_expectation_at_bench_scale() {
+    // the Fig 3 fit at the size the bench uses, as a regression gate
+    let (n, p) = (600usize, 0.04);
+    let g = generators::gnp_directed(n, p, 11);
+    let c = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Three, direction: Direction::Directed, ..Default::default() },
+    )
+    .unwrap();
+    let p_hat = theory::realized_p(&g, Direction::Directed);
+    let expected = theory::expected_instances(3, Direction::Directed, n, p_hat);
+    let observed: Vec<f64> = c.class_instances().iter().map(|&x| x as f64).collect();
+    for (o, e) in observed.iter().zip(&expected) {
+        if *e > 2000.0 {
+            assert!((o - e).abs() / e < 0.10, "obs {o} exp {e}");
+        }
+    }
+}
+
+#[test]
+fn stream_batches_respect_contract() {
+    use vdmc::coordinator::stream_instances;
+    let g = generators::gnp_directed(50, 0.1, 5);
+    let batch = 256usize;
+    let mut total_valid = 0u64;
+    let mut saw_padding_only_at_tail = true;
+    let mut last_batch_padding = false;
+    stream_instances(&g, MotifSize::Four, Direction::Directed, true, batch, |verts, slots| {
+        assert_eq!(verts.len(), batch * 4);
+        assert_eq!(slots.len(), batch);
+        if last_batch_padding {
+            saw_padding_only_at_tail = false; // a batch followed a padded one
+        }
+        let mut in_padding = false;
+        for (i, &s) in slots.iter().enumerate() {
+            if s < 0 {
+                in_padding = true;
+                // padded rows have sentinel vertices
+                for t in 0..4 {
+                    assert_eq!(verts[i * 4 + t], -1);
+                }
+            } else {
+                assert!(!in_padding, "valid instance after padding within a batch");
+                total_valid += 1;
+                let raw = s as usize;
+                assert!(raw < 4096);
+                for t in 0..4 {
+                    let v = verts[i * 4 + t];
+                    assert!(v >= 0 && (v as usize) < g.n());
+                }
+            }
+        }
+        last_batch_padding = in_padding;
+    })
+    .unwrap();
+    assert!(saw_padding_only_at_tail);
+    let reference = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Four, direction: Direction::Directed, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(total_valid, reference.total_instances);
+}
+
+#[test]
+fn matrix_baseline_agrees_at_scale() {
+    let g = generators::barabasi_albert(300, 5, 9);
+    let dense = baselines::matrix::dense_count3(&g);
+    let c = count_motifs(
+        &g,
+        &CountConfig { size: MotifSize::Three, direction: Direction::Undirected, ..Default::default() },
+    )
+    .unwrap();
+    for v in 0..g.n() {
+        assert_eq!(dense[v][0] as u64, c.vertex(v as u32)[0]);
+        assert_eq!(dense[v][1] as u64, c.vertex(v as u32)[1]);
+    }
+}

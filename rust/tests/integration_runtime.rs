@@ -1,0 +1,194 @@
+//! PJRT runtime integration tests — require `make artifacts` to have run
+//! (skipped with a message otherwise).
+//!
+//! These are the tests that prove the three layers compose: the Python
+//! AOT path produced HLO the Rust PJRT client can execute, with numerics
+//! matching the in-Rust implementations bit-for-bit (integer counts) or to
+//! f32 tolerance (theory).
+
+use vdmc::coordinator::{count_motifs, stream_instances, CountConfig};
+use vdmc::graph::generators;
+use vdmc::motifs::counter::SlotMapper;
+use vdmc::motifs::iso::{iso_table, NO_SLOT};
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::runtime::artifacts::{load_iso_table, ArtifactManifest};
+use vdmc::runtime::exec::{padded_classes, ArtifactRunner, CountAggregator, TensorData, BATCH, N_VERT_BLOCK};
+use vdmc::theory;
+
+fn runner() -> Option<ArtifactRunner> {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("manifest.tsv").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(ArtifactRunner::new(&dir).expect("runner"))
+}
+
+#[test]
+fn iso_tables_cross_check_python_vs_rust() {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("iso3.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for k in [3usize, 4] {
+        let rows = load_iso_table(&dir, k).expect("load iso table");
+        let table = iso_table(k);
+        assert_eq!(rows.len(), table.canon.len());
+        for row in rows {
+            let id = row.raw_id as usize;
+            assert_eq!(row.canonical_id, table.canon[id], "k={k} id={id} canon");
+            assert_eq!(row.connected, table.connected[id], "k={k} id={id} conn");
+            let rust_slot =
+                if table.class_slot[id] == NO_SLOT { -1 } else { table.class_slot[id] as i32 };
+            assert_eq!(row.class_slot, rust_slot, "k={k} id={id} slot");
+        }
+    }
+}
+
+#[test]
+fn aggregate_artifact_matches_rust_tables() {
+    let Some(r) = runner() else { return };
+    for k in [3usize, 4] {
+        let n_ids = 1usize << (k * (k - 1));
+        let c_pad = padded_classes(k);
+        let table = iso_table(k);
+        // histogram: row v has count v+1 at raw id (v * 7) % n_ids
+        let mut hist = vec![0f32; N_VERT_BLOCK * n_ids];
+        for v in 0..N_VERT_BLOCK {
+            hist[v * n_ids + (v * 7) % n_ids] = (v + 1) as f32;
+        }
+        let out = r.aggregate(k, &hist).expect("aggregate");
+        assert_eq!(out.len(), N_VERT_BLOCK * c_pad);
+        for v in 0..N_VERT_BLOCK {
+            let raw = (v * 7) % n_ids;
+            let slot = table.class_slot[raw];
+            for s in 0..c_pad {
+                let expect = if slot != NO_SLOT && s == slot as usize { (v + 1) as f32 } else { 0.0 };
+                assert_eq!(out[v * c_pad + s], expect, "k={k} v={v} s={s}");
+            }
+        }
+    }
+}
+
+#[test]
+fn theory_artifact_matches_rust_eq74() {
+    let Some(r) = runner() else { return };
+    for k in [3usize, 4] {
+        let (n, p) = (300usize, 0.07f64);
+        let (dir_row, und_row) = r.theory(k, n as f32, p as f32).expect("theory");
+        let rust_dir = theory::expected_per_vertex(k, Direction::Directed, n, p);
+        for (s, e) in rust_dir.iter().enumerate() {
+            let got = dir_row[s] as f64;
+            let tol = e.max(1e-3) * 5e-3 + 1e-4;
+            assert!((got - e).abs() < tol, "k={k} directed slot {s}: pjrt {got} rust {e}");
+        }
+        // undirected expectations live at the full-table slots of symmetric classes
+        let table = iso_table(k);
+        let rust_und = theory::expected_per_vertex(k, Direction::Undirected, n, p);
+        for (compact, &full_slot) in table.undirected_slots().iter().enumerate() {
+            let got = und_row[full_slot as usize] as f64;
+            let e = rust_und[compact];
+            let tol = e.max(1e-3) * 5e-3 + 1e-4;
+            assert!((got - e).abs() < tol, "k={k} undirected slot {compact}: pjrt {got} rust {e}");
+        }
+    }
+}
+
+#[test]
+fn pipeline_artifact_reproduces_enumeration_counts() {
+    let Some(r) = runner() else { return };
+    // graph small enough that (a) counts are exact in f32 and (b) the
+    // interpret-mode pipeline stays fast on one core
+    let g = generators::gnp_directed(180, 0.035, 77);
+    for (size, k) in [(MotifSize::Three, 3usize), (MotifSize::Four, 4usize)] {
+        let direction = Direction::Directed;
+        let rust_counts = count_motifs(
+            &g,
+            &CountConfig { size, direction, workers: 1, ..Default::default() },
+        )
+        .unwrap();
+
+        let mut agg = CountAggregator::new(&r, k, g.n());
+        stream_instances(&g, size, direction, true, BATCH, |verts, slots| {
+            agg.push_batch(verts, slots).expect("push");
+        })
+        .unwrap();
+        let pjrt = agg.finish();
+
+        // compare: pjrt rows are padded_classes wide; slots use the FULL
+        // (directed) table order, same as rust_counts
+        let c_pad = padded_classes(k);
+        let nc = rust_counts.n_classes;
+        for v in 0..g.n() {
+            for s in 0..nc {
+                assert_eq!(
+                    pjrt[v * c_pad + s],
+                    rust_counts.per_vertex[v * nc + s],
+                    "k={k} vertex {v} slot {s}"
+                );
+            }
+            for s in nc..c_pad {
+                assert_eq!(pjrt[v * c_pad + s], 0, "padding column {s} must be empty");
+            }
+        }
+    }
+}
+
+#[test]
+fn dense3_artifact_matches_matrix_baseline() {
+    let Some(r) = runner() else { return };
+    let n = 256; // the artifact's baked adjacency size
+    let g = generators::gnp_undirected(n, 0.08, 5);
+    let mut adj = vec![0f32; n * n];
+    for (u, v) in g.und.edges() {
+        adj[u as usize * n + v as usize] = 1.0;
+    }
+    let out = r.dense3(&adj).expect("dense3");
+    let rust = vdmc::baselines::matrix::dense_count3(&g);
+    for v in 0..n {
+        assert_eq!(out[v * 2] as f64, rust[v][0], "paths at {v}");
+        assert_eq!(out[v * 2 + 1] as f64, rust[v][1], "triangles at {v}");
+    }
+}
+
+#[test]
+fn run_rejects_bad_inputs() {
+    let Some(r) = runner() else { return };
+    // wrong input count
+    assert!(r.run("aggregate3", &[]).is_err());
+    // wrong element count
+    let small = vec![0f32; 8];
+    assert!(r.run("aggregate3", &[TensorData::F32(&small)]).is_err());
+    // wrong dtype
+    let ints = vec![0i32; N_VERT_BLOCK * 64];
+    assert!(r.run("aggregate3", &[TensorData::I32(&ints)]).is_err());
+    // unknown artifact
+    assert!(r.run("nope", &[]).is_err());
+}
+
+#[test]
+fn slot_mapper_matches_python_classes_tsv() {
+    let dir = ArtifactManifest::default_dir();
+    if !dir.join("classes3.tsv").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    for k in [3usize, 4] {
+        let text = std::fs::read_to_string(dir.join(format!("classes{k}.tsv"))).unwrap();
+        let mapper = SlotMapper::new(k, Direction::Directed);
+        let mut rows = 0;
+        for line in text.lines().filter(|l| !l.starts_with('#') && !l.trim().is_empty()) {
+            let cols: Vec<&str> = line.split('\t').collect();
+            let slot: usize = cols[0].parse().unwrap();
+            let class = mapper.classes()[slot];
+            assert_eq!(class.canonical_id, cols[1].parse::<u16>().unwrap());
+            assert_eq!(class.n_iso, cols[2].parse::<u32>().unwrap());
+            assert_eq!(class.n_edges, cols[3].parse::<u32>().unwrap());
+            assert_eq!(class.symmetric, cols[4] == "1");
+            assert_eq!(class.n_iso_sym, cols[5].parse::<u32>().unwrap());
+            rows += 1;
+        }
+        assert_eq!(rows, mapper.n_classes());
+    }
+}

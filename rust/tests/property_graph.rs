@@ -1,0 +1,170 @@
+//! Property tests for the graph substrate (CSR, ordering, IO, generators)
+//! and the toolbox measures.
+
+use vdmc::graph::csr::{Csr, Graph};
+use vdmc::graph::ordering::VertexOrdering;
+use vdmc::graph::{generators, io};
+use vdmc::toolbox::{distance, kcore, pagerank};
+use vdmc::util::prop::{check, Config, EdgeListGen, RandomEdges};
+
+fn graph_of(re: &RandomEdges) -> Graph {
+    Graph::from_edges(re.n, &re.edges, re.directed)
+}
+
+fn gen() -> EdgeListGen {
+    EdgeListGen { n_lo: 2, n_hi: 24, p: 0.2, directed: true }
+}
+
+#[test]
+fn csr_has_edge_matches_edge_list() {
+    check("csr membership", Config::default(), &gen(), |re| {
+        let csr = Csr::from_edges(re.n, &re.edges, false);
+        let set: std::collections::HashSet<(u32, u32)> =
+            re.edges.iter().cloned().filter(|&(u, v)| u != v).collect();
+        for u in 0..re.n as u32 {
+            for v in 0..re.n as u32 {
+                if csr.has_edge(u, v) != set.contains(&(u, v)) {
+                    return Err(format!("membership mismatch at ({u},{v})"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn csr_neighbors_sorted_and_degrees_consistent() {
+    check("csr sorted", Config::default(), &gen(), |re| {
+        let csr = Csr::from_edges(re.n, &re.edges, true);
+        let mut total = 0;
+        for v in 0..re.n as u32 {
+            let nbrs = csr.neighbors(v);
+            if !nbrs.windows(2).all(|w| w[0] < w[1]) {
+                return Err(format!("neighbors of {v} not strictly sorted: {nbrs:?}"));
+            }
+            // symmetrized: v in N(u) <=> u in N(v)
+            for &u in nbrs {
+                if !csr.neighbors(u).contains(&v) {
+                    return Err(format!("asymmetry: {v} -> {u}"));
+                }
+            }
+            total += nbrs.len();
+        }
+        if total != csr.m() {
+            return Err("degree sum != m".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn ordering_roundtrip_and_degree_monotonicity() {
+    check("ordering", Config::default(), &gen(), |re| {
+        let g = graph_of(re);
+        let ord = VertexOrdering::degree_descending(&g);
+        for v in 0..re.n as u32 {
+            if ord.old_of_new[ord.new_of_old[v as usize] as usize] != v {
+                return Err(format!("perm not a bijection at {v}"));
+            }
+        }
+        let h = ord.apply(&g);
+        for v in 1..re.n as u32 {
+            if h.und_degree(v - 1) < h.und_degree(v) {
+                return Err(format!("degrees not descending at {v}"));
+            }
+        }
+        if h.m() != g.m() {
+            return Err("edge count changed by relabel".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn io_roundtrip_preserves_graph() {
+    let cfg = Config { cases: 16, ..Default::default() };
+    check("io roundtrip", cfg, &gen(), |re| {
+        let g = graph_of(re);
+        let path = std::env::temp_dir().join(format!("vdmc_prop_{}_{}.tsv", std::process::id(), re.n));
+        io::write_edge_list(&g, &path).map_err(|e| e.to_string())?;
+        let h = io::load_edge_list(&path, re.directed).map_err(|e| e.to_string())?;
+        std::fs::remove_file(&path).ok();
+        // vertex count can shrink when trailing vertices are isolated —
+        // compare edges only
+        if g.directed {
+            let a: Vec<_> = g.out.edges().collect();
+            let b: Vec<_> = h.out.edges().collect();
+            if a != b {
+                return Err("directed edge lists differ after roundtrip".into());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn kcore_peeling_invariant() {
+    check("kcore", Config { cases: 24, ..Default::default() }, &gen(), |re| {
+        let g = graph_of(re);
+        let core = kcore::core_numbers(&g);
+        for v in 0..re.n as u32 {
+            let k = core[v as usize];
+            let strong =
+                g.und.neighbors(v).iter().filter(|&&u| core[u as usize] >= k).count() as u32;
+            if strong < k {
+                return Err(format!("vertex {v}: core {k} but only {strong} strong neighbors"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn pagerank_is_a_distribution() {
+    check("pagerank sum", Config { cases: 16, ..Default::default() }, &gen(), |re| {
+        if re.n == 0 {
+            return Ok(());
+        }
+        let g = graph_of(re);
+        let r = pagerank::pagerank(&g, 0.85, 1e-12, 300);
+        let sum: f64 = r.iter().sum();
+        if (sum - 1.0).abs() > 1e-6 {
+            return Err(format!("pagerank sums to {sum}"));
+        }
+        if r.iter().any(|&x| x < 0.0) {
+            return Err("negative rank".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn distance_distribution_bounded() {
+    check("distance rows", Config { cases: 12, ..Default::default() }, &gen(), |re| {
+        if re.n < 2 {
+            return Ok(());
+        }
+        let g = graph_of(re);
+        let dd = distance::distance_distribution(&g, re.n);
+        for (v, row) in dd.iter().enumerate() {
+            let s: f64 = row.iter().sum();
+            if !(0.0..=1.0 + 1e-9).contains(&s) {
+                return Err(format!("row {v} sums to {s}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn generators_deterministic_and_in_range() {
+    for seed in [1u64, 2, 3] {
+        let a = generators::barabasi_albert(120, 3, seed);
+        let b = generators::barabasi_albert(120, 3, seed);
+        assert_eq!(a.und, b.und, "BA not deterministic for seed {seed}");
+        let c = generators::gnp_directed(80, 0.1, seed);
+        for (u, v) in c.out.edges() {
+            assert!(u != v && (u as usize) < 80 && (v as usize) < 80);
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Property tests over the enumeration core, using the in-repo shrinking
+//! harness (util::prop — proptest is not in the offline vendor set).
+//!
+//! The central invariants of the paper's Section 5 proof:
+//!   P1  every connected k-subset is counted once and only once;
+//!   P2  per-vertex counts sum to k x instance count;
+//!   P3  the parallel coordinator equals the serial baseline for every
+//!       worker count / counter mode / ordering;
+//!   P4  undirected counts are invariant under vertex relabeling;
+//!   P5  erasing edge directions preserves instance totals and per-vertex
+//!       participation.
+
+use vdmc::baselines;
+use vdmc::coordinator::{count_motifs, CountConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::motifs::counter::CounterMode;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::util::prop::{check, Config, EdgeListGen, RandomEdges};
+use vdmc::util::rng::Pcg32;
+
+fn graph_of(re: &RandomEdges) -> Graph {
+    Graph::from_edges(re.n, &re.edges, re.directed)
+}
+
+fn directed_gen() -> EdgeListGen {
+    EdgeListGen { n_lo: 4, n_hi: 16, p: 0.25, directed: true }
+}
+
+fn cases() -> Config {
+    Config { cases: 40, ..Default::default() }
+}
+
+#[test]
+fn p1_p3_vdmc_equals_naive_ground_truth() {
+    check("vdmc == naive", cases(), &directed_gen(), |re| {
+        let g = graph_of(re);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in [Direction::Directed, Direction::Undirected] {
+                let brute = baselines::naive::count(&g, size, dir);
+                let fast = count_motifs(
+                    &g,
+                    &CountConfig { size, direction: dir, workers: 3, ..Default::default() },
+                )
+                .map_err(|e| e.to_string())?;
+                if brute.per_vertex != fast.per_vertex {
+                    return Err(format!(
+                        "{size:?} {dir:?}: naive {:?} != vdmc {:?}",
+                        brute.class_instances(),
+                        fast.class_instances()
+                    ));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p2_sum_rule() {
+    check("sum rule", cases(), &directed_gen(), |re| {
+        let g = graph_of(re);
+        for (size, k) in [(MotifSize::Three, 3u64), (MotifSize::Four, 4u64)] {
+            let c = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Directed, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let total: u64 = c.per_vertex.iter().sum();
+            if total != k * c.total_instances {
+                return Err(format!("sum {total} != {k} * {}", c.total_instances));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p3_counter_modes_and_workers_agree() {
+    check("modes agree", cases(), &directed_gen(), |re| {
+        let g = graph_of(re);
+        let mk = |workers, counter, reorder| CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Directed,
+            workers,
+            counter,
+            reorder,
+            ..Default::default()
+        };
+        let reference = count_motifs(&g, &mk(1, CounterMode::Sharded, true)).map_err(|e| e.to_string())?;
+        for workers in [2usize, 5] {
+            for counter in [CounterMode::Atomic, CounterMode::Sharded] {
+                for reorder in [true, false] {
+                    let c = count_motifs(&g, &mk(workers, counter, reorder)).map_err(|e| e.to_string())?;
+                    if c.per_vertex != reference.per_vertex {
+                        return Err(format!("mismatch at workers={workers} {counter:?} reorder={reorder}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p4_relabeling_invariance() {
+    check("relabel invariance", cases(), &directed_gen(), |re| {
+        let g = graph_of(re);
+        let cfg = CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            ..Default::default()
+        };
+        let base = count_motifs(&g, &cfg).map_err(|e| e.to_string())?;
+
+        // random permutation of vertex ids
+        let mut rng = Pcg32::seeded(re.edges.len() as u64 + re.n as u64);
+        let mut perm: Vec<u32> = (0..re.n as u32).collect();
+        rng.shuffle(&mut perm);
+        let edges: Vec<(u32, u32)> = re
+            .edges
+            .iter()
+            .map(|&(u, v)| (perm[u as usize], perm[v as usize]))
+            .collect();
+        let h = Graph::from_edges(re.n, &edges, re.directed);
+        let relabeled = count_motifs(&h, &cfg).map_err(|e| e.to_string())?;
+
+        if base.total_instances != relabeled.total_instances {
+            return Err(format!(
+                "instances changed under relabeling: {} -> {}",
+                base.total_instances, relabeled.total_instances
+            ));
+        }
+        for v in 0..re.n as u32 {
+            if base.vertex(v) != relabeled.vertex(perm[v as usize]) {
+                return Err(format!("vertex {v} counts changed under relabeling"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn p5_direction_erasure_consistency() {
+    check("direction erasure", cases(), &directed_gen(), |re| {
+        let g = graph_of(re);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let directed = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Directed, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let undirected = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Undirected, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            // same vertex subsets are enumerated either way
+            if directed.total_instances != undirected.total_instances {
+                return Err(format!(
+                    "{size:?}: directed {} vs undirected {} instances",
+                    directed.total_instances, undirected.total_instances
+                ));
+            }
+            for v in 0..g.n() as u32 {
+                let d: u64 = directed.vertex(v).iter().sum();
+                let u: u64 = undirected.vertex(v).iter().sum();
+                if d != u {
+                    return Err(format!("vertex {v}: directed {d} vs undirected {u}"));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn slow_baseline_matches_on_random_graphs() {
+    let gen = EdgeListGen { n_lo: 5, n_hi: 14, p: 0.3, directed: true };
+    check("slow == vdmc", Config { cases: 20, ..Default::default() }, &gen, |re| {
+        let g = graph_of(re);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let slow = baselines::slow::count(&g, size, Direction::Directed);
+            let fast = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Directed, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            if slow.per_vertex != fast.per_vertex {
+                return Err(format!("{size:?}: slow baseline diverges"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn empty_and_tiny_graphs() {
+    for n in 0..4usize {
+        let g = Graph::from_edges(n, &[], true);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let c = count_motifs(
+                &g,
+                &CountConfig { size, direction: Direction::Directed, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(c.total_instances, 0, "n={n} {size:?}");
+            assert!(c.per_vertex.iter().all(|&x| x == 0));
+        }
+    }
+}
