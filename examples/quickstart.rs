@@ -1,9 +1,11 @@
-//! Quickstart: generate a directed G(n, p), count all 3- and 4-motifs per
-//! vertex, and print class totals plus the busiest vertices.
+//! Quickstart: generate a directed G(n, p), load it into an engine
+//! Session once, then count all 3- and 4-motifs per vertex from the
+//! cached state — the serving pattern. Prints class totals, the busiest
+//! vertices, and how much setup the session reuse saved.
 //!
 //!     cargo run --release --example quickstart [n] [p]
 
-use vdmc::coordinator::{count_motifs_with_report, CountConfig};
+use vdmc::engine::{CountQuery, Session};
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
 
@@ -16,16 +18,29 @@ fn main() -> anyhow::Result<()> {
     let g = generators::gnp_directed(n, p, 42);
     println!("graph: n={} m={} (CSR bytes: {})", g.n(), g.m(), g.und.memory_bytes());
 
+    // ordering + relabeled CSR + degree-balanced partitions, computed once
+    let session = Session::load(&g);
+    println!(
+        "session: {} workers over {} shards, {} work items, setup {:.4}s",
+        session.workers(),
+        session.partitions().n_shards(),
+        session.partitions().total_items,
+        session.setup_secs(),
+    );
+
     for (size, label) in [(MotifSize::Three, "3-motifs"), (MotifSize::Four, "4-motifs")] {
-        let cfg = CountConfig { size, direction: Direction::Directed, ..Default::default() };
-        let (counts, report) = count_motifs_with_report(&g, &cfg)?;
+        let query = CountQuery { size, direction: Direction::Directed, ..Default::default() };
+        let (counts, report) = session.count_with_report(&query)?;
         println!(
-            "\n{label}: {} instances across {} classes in {:.3}s ({:.2e} instances/s, imbalance {:.2})",
+            "\n{label}: {} instances across {} classes in {:.3}s ({:.2e} instances/s, \
+             imbalance {:.2}, {} steals{})",
             counts.total_instances,
             counts.n_classes,
             counts.elapsed_secs,
             report.throughput(),
             report.imbalance(),
+            report.total_steals(),
+            if report.setup_reused { ", setup cached" } else { "" },
         );
 
         // class totals, descending

@@ -1,17 +1,33 @@
 //! Ablations over the design choices DESIGN.md calls out:
 //!
 //!   A. counter strategy: shared atomics (the paper's GPU atomicAdd) vs
-//!      per-worker shards merged at the end;
+//!      per-worker shards merged at the end vs partition-local writes;
 //!   B. degree-descending reorder (paper Section 6) on vs off;
 //!   C. work-item granularity (max (root, neighbor) units per queue item);
-//!   D. worker-count scaling on a heavy-hub graph.
+//!   D. worker-count scaling on a heavy-hub graph;
+//!   E. scheduler × sink grid (shared cursor vs work stealing, all three
+//!      sinks) — one JSON row per combination so the engine refactor's
+//!      wins are measured, not asserted;
+//!   F. session reuse: first query (pays setup) vs Nth query (cached).
 //!
-//! Output TSV: ablation, config, secs, instances, imbalance.
+//! Sections A–D print the historical TSV (ablation, config, secs,
+//! instances, imbalance); sections E–F emit one compact JSON object per
+//! line, machine-readable for dashboards.
 
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
+use vdmc::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
 use vdmc::graph::generators;
 use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
+use vdmc::util::json::Json;
+
+const SCHEDULERS: [(&str, SchedulerMode); 2] =
+    [("cursor", SchedulerMode::SharedCursor), ("stealing", SchedulerMode::WorkStealing)];
+const SINKS: [(&str, CounterMode); 3] = [
+    ("atomic", CounterMode::Atomic),
+    ("sharded", CounterMode::Sharded),
+    ("partition", CounterMode::PartitionLocal),
+];
 
 fn main() {
     println!("# ablations on BA(4000, 6) undirected 4-motifs (heavy hubs)");
@@ -25,7 +41,7 @@ fn main() {
     };
 
     // A: counter strategy
-    for (label, mode) in [("atomic", CounterMode::Atomic), ("sharded", CounterMode::Sharded)] {
+    for (label, mode) in SINKS {
         let cfg = CountConfig { counter: mode, ..base.clone() };
         let (c, r) = count_motifs_with_report(&g, &cfg).unwrap();
         println!("counter\t{label}\t{:.4}\t{}\t{:.3}", c.elapsed_secs, c.total_instances, r.imbalance());
@@ -52,7 +68,57 @@ fn main() {
         println!("workers\t{workers}\t{:.4}\t{}\t{:.3}", c.elapsed_secs, c.total_instances, r.imbalance());
     }
 
-    println!("# all configs must report identical instance totals (asserted in tests);");
-    println!("# on multi-core hosts vdmc expects: sharded <= atomic, degree-desc <= identity,");
-    println!("# granularity sweet spot mid-range, near-linear worker scaling until core count.");
+    // E: scheduler × sink grid, served from one cached session so every
+    // combination counts the same partitioned work. One JSON row each.
+    println!("# scheduler x sink grid (JSON rows)");
+    let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+    let mut expected_instances = None;
+    for (sched_label, scheduler) in SCHEDULERS {
+        for (sink_label, sink) in SINKS {
+            let query = CountQuery {
+                size: MotifSize::Four,
+                direction: Direction::Undirected,
+                scheduler,
+                sink,
+            };
+            let (c, r) = session.count_with_report(&query).unwrap();
+            let expected = *expected_instances.get_or_insert(c.total_instances);
+            assert_eq!(c.total_instances, expected, "{sched_label}/{sink_label} diverged");
+            let mut j = Json::obj();
+            j.set("ablation", "scheduler_x_sink")
+                .set("scheduler", sched_label)
+                .set("sink", sink_label)
+                .set("workers", session.workers())
+                .set("secs", r.elapsed_secs)
+                .set("instances", c.total_instances)
+                .set("throughput_per_sec", r.throughput())
+                .set("imbalance", r.imbalance())
+                .set("steals", r.total_steals());
+            println!("{}", j.to_string_compact());
+        }
+    }
+
+    // F: session reuse — setup amortization across repeated queries.
+    println!("# session reuse (JSON rows)");
+    let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+    let query = CountQuery {
+        size: MotifSize::Three,
+        direction: Direction::Undirected,
+        ..Default::default()
+    };
+    for call in 0..3u64 {
+        let (_, r) = session.count_with_report(&query).unwrap();
+        let mut j = Json::obj();
+        j.set("ablation", "session_reuse")
+            .set("call", call)
+            .set("secs", r.elapsed_secs)
+            .set("setup_secs", r.setup_secs)
+            .set("setup_reused", r.setup_reused);
+        println!("{}", j.to_string_compact());
+    }
+
+    println!("# all configs must report identical instance totals (asserted above and in tests);");
+    println!("# on multi-core hosts vdmc expects: sharded/partition <= atomic, degree-desc <= identity,");
+    println!("# granularity sweet spot mid-range, near-linear worker scaling until core count,");
+    println!("# stealing <= cursor on hub-heavy graphs, and call>=1 session rows with setup_secs=0.");
 }

@@ -11,6 +11,9 @@ pub struct WorkerMetrics {
     pub items: u64,
     pub units: u64,
     pub instances: u64,
+    /// Items claimed from another worker's deque (work-stealing scheduler
+    /// only; always 0 under the shared cursor).
+    pub steals: u64,
     pub busy_secs: f64,
 }
 
@@ -22,6 +25,11 @@ pub struct RunReport {
     pub elapsed_secs: f64,
     pub queue_items: usize,
     pub queue_units: usize,
+    /// Seconds spent on ordering/relabel/partition setup for this call
+    /// (0.0 when a session served the query from cache).
+    pub setup_secs: f64,
+    /// True when the query reused a session's cached setup.
+    pub setup_reused: bool,
 }
 
 impl RunReport {
@@ -50,6 +58,11 @@ impl RunReport {
         }
     }
 
+    /// Total items claimed via stealing across all workers.
+    pub fn total_steals(&self) -> u64 {
+        self.workers.iter().map(|w| w.steals).sum()
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("total_instances", self.total_instances)
@@ -57,7 +70,10 @@ impl RunReport {
             .set("throughput_per_sec", self.throughput())
             .set("imbalance", self.imbalance())
             .set("queue_items", self.queue_items)
-            .set("queue_units", self.queue_units);
+            .set("queue_units", self.queue_units)
+            .set("setup_secs", self.setup_secs)
+            .set("setup_reused", self.setup_reused)
+            .set("steals", self.total_steals());
         let workers: Vec<Json> = self
             .workers
             .iter()
@@ -67,6 +83,7 @@ impl RunReport {
                     .set("items", w.items)
                     .set("units", w.units)
                     .set("instances", w.instances)
+                    .set("steals", w.steals)
                     .set("busy_secs", w.busy_secs);
                 o
             })
@@ -91,6 +108,8 @@ mod tests {
             elapsed_secs: 2.0,
             queue_items: 10,
             queue_units: 50,
+            setup_secs: 0.1,
+            setup_reused: false,
         }
     }
 

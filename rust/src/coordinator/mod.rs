@@ -1,37 +1,39 @@
-//! L3 coordinator — the paper's distributed counting engine.
+//! L3 coordinator — compatibility wrapper over [`crate::engine`].
 //!
-//! The leader relabels the graph by descending degree (Section 6), builds
-//! the (root, neighbor-range) work queue, and spawns a worker pool that
-//! pulls items lock-free and runs the proper k-BFS enumerators. Counter
-//! updates use either a shared atomic array (the paper's GPU atomicAdd
-//! strategy) or per-worker shards merged at the end (`CounterMode`).
-//! Results are mapped back to original vertex ids.
+//! Historically this module owned the whole counting path (leader relabel,
+//! shared-cursor work queue, worker pool, counter merge). That machinery
+//! now lives in the layered engine (`engine::{partition, scheduler, sink,
+//! session}`); [`count_motifs`] remains the one-shot API and builds a
+//! throwaway [`Session`] per call, paying setup each time. Serving
+//! workloads that query one graph repeatedly should hold a
+//! [`crate::engine::Session`] instead.
 
 pub mod metrics;
 pub mod work;
 
-use std::time::Instant;
+use anyhow::Result;
 
-use anyhow::{bail, Result};
-
+use crate::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
 use crate::graph::csr::Graph;
 use crate::graph::ordering::VertexOrdering;
-use crate::motifs::counter::{AtomicCounter, CounterMode, MotifCounts, ShardCounter, SlotMapper};
-use crate::motifs::iso::NO_SLOT;
+use crate::motifs::counter::{CounterMode, MotifCounts};
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
 
-use metrics::{RunReport, WorkerMetrics};
-use work::{build_queue, total_units, WorkQueue};
+use metrics::RunReport;
 
-/// Configuration of a counting run.
+/// Configuration of a one-shot counting run.
 #[derive(Debug, Clone)]
 pub struct CountConfig {
     pub size: MotifSize,
     pub direction: Direction,
     /// Worker threads; 0 = one per available core.
     pub workers: usize,
-    /// Counter update strategy (atomic vs sharded; ablation bench).
+    /// Counter update strategy (atomic / sharded / partition-local;
+    /// ablation bench).
     pub counter: CounterMode,
+    /// Work claim strategy (shared cursor vs work stealing; ablation
+    /// bench).
+    pub scheduler: SchedulerMode,
     /// Relabel by descending degree before counting (paper Section 6).
     /// Disable only for ablation.
     pub reorder: bool,
@@ -46,6 +48,7 @@ impl Default for CountConfig {
             direction: Direction::Directed,
             workers: 0,
             counter: CounterMode::Sharded,
+            scheduler: SchedulerMode::WorkStealing,
             reorder: true,
             max_units_per_item: 64,
         }
@@ -53,168 +56,42 @@ impl Default for CountConfig {
 }
 
 impl CountConfig {
-    fn resolved_workers(&self) -> usize {
-        if self.workers > 0 {
-            self.workers
-        } else {
-            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    fn session_config(&self) -> SessionConfig {
+        SessionConfig {
+            workers: self.workers,
+            reorder: self.reorder,
+            max_units_per_item: self.max_units_per_item,
+        }
+    }
+
+    fn query(&self) -> CountQuery {
+        CountQuery {
+            size: self.size,
+            direction: self.direction,
+            scheduler: self.scheduler,
+            sink: self.counter,
         }
     }
 }
 
-/// Count all k-motifs per vertex. The headline API.
+/// Count all k-motifs per vertex. The headline one-shot API.
 pub fn count_motifs(graph: &Graph, cfg: &CountConfig) -> Result<MotifCounts> {
     Ok(count_motifs_with_report(graph, cfg)?.0)
 }
 
 /// As [`count_motifs`], also returning the coordinator run report.
+///
+/// `elapsed_secs` covers the whole call including setup (the seed
+/// behavior); [`Session::count_with_report`] reports the count phase alone
+/// plus explicit `setup_secs`.
 pub fn count_motifs_with_report(graph: &Graph, cfg: &CountConfig) -> Result<(MotifCounts, RunReport)> {
-    if cfg.direction == Direction::Directed && !graph.directed {
-        bail!("directed motif counting requested on an undirected graph");
-    }
-    let start = Instant::now();
-    let n = graph.n();
-    let k = cfg.size.k();
-    let mapper = SlotMapper::new(k, cfg.direction);
-    let n_classes = mapper.n_classes();
-
-    // Section 6 relabeling: heavy vertices first.
-    let ordering = if cfg.reorder {
-        VertexOrdering::degree_descending(graph)
-    } else {
-        VertexOrdering::identity(n)
-    };
-    let h = ordering.apply(graph);
-
-    let items = build_queue(&h, cfg.max_units_per_item);
-    let queue_items = items.len();
-    let queue_units = total_units(&items);
-    let queue = WorkQueue::new(items);
-    let workers = cfg.resolved_workers().max(1).min(queue_items.max(1));
-
-    let (per_vertex_proc, worker_metrics, instances) = match cfg.counter {
-        CounterMode::Atomic => run_atomic(&h, cfg, &mapper, &queue, workers, n, n_classes),
-        CounterMode::Sharded => run_sharded(&h, cfg, &mapper, &queue, workers, n, n_classes),
-    };
-
-    // map back to original vertex ids
-    let per_vertex = ordering.unapply_rows(&per_vertex_proc, n_classes);
-
+    let start = std::time::Instant::now();
+    let session = Session::load_with(graph, &cfg.session_config());
+    let (mut counts, mut report) = session.count_with_report(&cfg.query())?;
     let elapsed = start.elapsed().as_secs_f64();
-    let counts = MotifCounts {
-        k,
-        direction: cfg.direction,
-        n,
-        n_classes,
-        per_vertex,
-        class_ids: mapper.class_ids(),
-        total_instances: instances,
-        elapsed_secs: elapsed,
-    };
-    let report = RunReport {
-        workers: worker_metrics,
-        total_instances: instances,
-        elapsed_secs: elapsed,
-        queue_items,
-        queue_units,
-    };
+    counts.elapsed_secs = elapsed;
+    report.elapsed_secs = elapsed;
     Ok((counts, report))
-}
-
-/// Worker inner loop shared by both counter modes: drain the queue and feed
-/// every enumerated instance to `record`.
-fn worker_loop(
-    h: &Graph,
-    cfg: &CountConfig,
-    mapper: &SlotMapper,
-    queue: &WorkQueue,
-    worker_id: usize,
-    mut record: impl FnMut(&[u32], u16),
-) -> WorkerMetrics {
-    let mut m = WorkerMetrics { worker_id, ..Default::default() };
-    let t0 = Instant::now();
-    let dir = cfg.direction;
-    let mut ctx = bfs3::EnumCtx::new(h.n());
-    while let Some(item) = queue.pop() {
-        m.items += 1;
-        m.units += item.units() as u64;
-        for j in item.j_start..item.j_end {
-            match cfg.size {
-                MotifSize::Three => {
-                    bfs3::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
-                        let slot = mapper.slot(raw);
-                        debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
-                        m.instances += 1;
-                        record(verts, slot);
-                    });
-                }
-                MotifSize::Four => {
-                    bfs4::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
-                        let slot = mapper.slot(raw);
-                        debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
-                        m.instances += 1;
-                        record(verts, slot);
-                    });
-                }
-            }
-        }
-    }
-    m.busy_secs = t0.elapsed().as_secs_f64();
-    m
-}
-
-fn run_atomic(
-    h: &Graph,
-    cfg: &CountConfig,
-    mapper: &SlotMapper,
-    queue: &WorkQueue,
-    workers: usize,
-    n: usize,
-    n_classes: usize,
-) -> (Vec<u64>, Vec<WorkerMetrics>, u64) {
-    let counter = AtomicCounter::new(n, n_classes);
-    let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                let counter = &counter;
-                s.spawn(move || worker_loop(h, cfg, mapper, queue, w, |verts, slot| counter.record(verts, slot)))
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-    let instances = counter.instances();
-    (counter.into_vec(), metrics, instances)
-}
-
-fn run_sharded(
-    h: &Graph,
-    cfg: &CountConfig,
-    mapper: &SlotMapper,
-    queue: &WorkQueue,
-    workers: usize,
-    n: usize,
-    n_classes: usize,
-) -> (Vec<u64>, Vec<WorkerMetrics>, u64) {
-    let results: Vec<(WorkerMetrics, ShardCounter)> = std::thread::scope(|s| {
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                s.spawn(move || {
-                    let mut shard = ShardCounter::new(n, n_classes);
-                    let metrics =
-                        worker_loop(h, cfg, mapper, queue, w, |verts, slot| shard.record(verts, slot));
-                    (metrics, shard)
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
-    let mut merged = ShardCounter::new(n, n_classes);
-    let mut metrics = Vec::with_capacity(results.len());
-    for (m, shard) in results {
-        merged.merge(&shard);
-        metrics.push(m);
-    }
-    (merged.counts, metrics, merged.instances)
 }
 
 /// Stream enumerated instances in fixed-size batches (the L1 `pipeline`
@@ -230,7 +107,7 @@ pub fn stream_instances(
     mut on_batch: impl FnMut(&[i32], &[i32]),
 ) -> Result<u64> {
     if direction == Direction::Directed && !graph.directed {
-        bail!("directed motif counting requested on an undirected graph");
+        anyhow::bail!("directed motif counting requested on an undirected graph");
     }
     let n = graph.n();
     let k = size.k();
@@ -334,6 +211,45 @@ mod tests {
     }
 
     #[test]
+    fn partition_local_agrees_with_sharded() {
+        let g = generators::barabasi_albert(120, 4, 9);
+        let base = CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            workers: 4,
+            ..Default::default()
+        };
+        let s = count_motifs(&g, &CountConfig { counter: CounterMode::Sharded, ..base.clone() }).unwrap();
+        let p =
+            count_motifs(&g, &CountConfig { counter: CounterMode::PartitionLocal, ..base }).unwrap();
+        assert_eq!(s.per_vertex, p.per_vertex);
+        assert_eq!(s.total_instances, p.total_instances);
+    }
+
+    #[test]
+    fn scheduler_modes_agree() {
+        let g = generators::barabasi_albert(120, 4, 31);
+        let base = CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            workers: 4,
+            ..Default::default()
+        };
+        let cursor = count_motifs(
+            &g,
+            &CountConfig { scheduler: SchedulerMode::SharedCursor, ..base.clone() },
+        )
+        .unwrap();
+        let stealing = count_motifs(
+            &g,
+            &CountConfig { scheduler: SchedulerMode::WorkStealing, ..base },
+        )
+        .unwrap();
+        assert_eq!(cursor.per_vertex, stealing.per_vertex);
+        assert_eq!(cursor.total_instances, stealing.total_instances);
+    }
+
+    #[test]
     fn worker_count_does_not_change_result() {
         let g = generators::gnp_undirected(80, 0.08, 23);
         let mk = |w| CountConfig {
@@ -399,6 +315,20 @@ mod tests {
         assert_eq!(worker_units as usize, report.queue_units);
         let worker_instances: u64 = report.workers.iter().map(|w| w.instances).sum();
         assert_eq!(worker_instances, report.total_instances);
+    }
+
+    #[test]
+    fn one_shot_report_is_never_setup_reused() {
+        let g = generators::gnp_undirected(50, 0.1, 2);
+        let cfg = CountConfig {
+            size: MotifSize::Three,
+            direction: Direction::Undirected,
+            ..Default::default()
+        };
+        let (_, r1) = count_motifs_with_report(&g, &cfg).unwrap();
+        let (_, r2) = count_motifs_with_report(&g, &cfg).unwrap();
+        assert!(!r1.setup_reused);
+        assert!(!r2.setup_reused, "one-shot path must pay setup every call");
     }
 
     #[test]

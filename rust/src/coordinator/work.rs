@@ -1,83 +1,54 @@
-//! Work decomposition (paper Section 6).
+//! Work decomposition (paper Section 6) — compatibility surface.
 //!
 //! The unit of parallel work is a (root, first-neighbor) pair — the same
 //! decomposition the paper uses for its CUDA grid ("each pair of a vertex
 //! and one of its neighbors is computed separately ... prevents waiting
-//! for a small number of vertices with a very high degree"). Units are
-//! batched into [`WorkItem`] ranges so queue traffic stays low on small
-//! graphs, and roots are scheduled in ascending processing index =
-//! *descending degree*, so the heavy hubs start first and stragglers are
-//! cheap tails.
+//! for a small number of vertices with a very high degree").
+//!
+//! [`WorkItem`] and the item builders now live in
+//! [`crate::engine::partition`] (which also adds degree-mass-balanced
+//! shards); this module re-exports them and keeps the original
+//! shared-cursor [`WorkQueue`] for callers of the seed API. New code
+//! should use [`crate::engine::scheduler`].
 
+pub use crate::engine::partition::{total_units, WorkItem};
+
+use crate::engine::scheduler::{Scheduler, SharedCursorScheduler};
 use crate::graph::csr::Graph;
 
-/// A contiguous range of first-neighbor units for one root.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct WorkItem {
-    pub root: u32,
-    /// First-neighbor index range [j_start, j_end) into the root's proper
-    /// neighbor list.
-    pub j_start: u32,
-    pub j_end: u32,
-}
-
-impl WorkItem {
-    pub fn units(&self) -> usize {
-        (self.j_end - self.j_start) as usize
-    }
-}
-
-/// Build the work queue for a (relabeled) graph.
+/// Build the flat work queue for a (relabeled) graph.
 ///
 /// `max_units_per_item` bounds item granularity: hubs are split into many
 /// items (the paper's high-degree division), while degree-1 tails stay one
 /// item each.
 pub fn build_queue(graph: &Graph, max_units_per_item: usize) -> Vec<WorkItem> {
-    assert!(max_units_per_item >= 1);
-    let mut items = Vec::new();
-    for root in 0..graph.n() as u32 {
-        let units = graph.und.neighbors_above(root, root).len() as u32;
-        let mut j = 0u32;
-        while j < units {
-            let end = (j + max_units_per_item as u32).min(units);
-            items.push(WorkItem { root, j_start: j, j_end: end });
-            j = end;
-        }
-    }
-    items
-}
-
-/// Total units across a queue (= number of proper (root, neighbor) pairs =
-/// |E| of the undirected view).
-pub fn total_units(items: &[WorkItem]) -> usize {
-    items.iter().map(|i| i.units()).sum()
+    crate::engine::partition::build_items(graph, max_units_per_item)
 }
 
 /// Shared pull-cursor over the queue: workers claim the next item with a
-/// single relaxed-fetch-add — lock-free dynamic load balancing.
+/// single relaxed-fetch-add — lock-free dynamic load balancing. Thin
+/// facade over [`SharedCursorScheduler`] (one implementation, two names).
 pub struct WorkQueue {
-    items: Vec<WorkItem>,
-    cursor: std::sync::atomic::AtomicUsize,
+    inner: SharedCursorScheduler,
 }
 
 impl WorkQueue {
     pub fn new(items: Vec<WorkItem>) -> WorkQueue {
-        WorkQueue { items, cursor: std::sync::atomic::AtomicUsize::new(0) }
+        WorkQueue { inner: SharedCursorScheduler::new(items) }
     }
 
     /// Claim the next item; None when drained.
     #[inline]
     pub fn pop(&self) -> Option<WorkItem> {
-        let i = self.cursor.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        self.items.get(i).copied()
+        self.inner.pop(0).map(|claim| claim.item)
     }
 
     pub fn len(&self) -> usize {
-        self.items.len()
+        self.inner.n_items()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.items.is_empty()
+        self.len() == 0
     }
 }
 

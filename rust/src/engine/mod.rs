@@ -1,0 +1,30 @@
+//! Execution engine: partitioned, work-stealing, reusable-session motif
+//! counting.
+//!
+//! Four layers, each mapping onto the paper's design (Sections 4–6):
+//!
+//! 1. [`partition`] — the Section 6 (root, first-neighbor) unit
+//!    decomposition, plus contiguous vertex-range shards whose *unit
+//!    budgets* (degree mass) are balanced, so one hub-heavy shard can be a
+//!    single vertex.
+//! 2. [`scheduler`] — how workers claim items: the seed's shared fetch-add
+//!    cursor, or per-worker deques seeded with the home shard and
+//!    randomized FIFO stealing once a deque runs dry.
+//! 3. [`sink`] — where counts land: shared atomics (the paper's GPU
+//!    atomicAdd), per-worker shards merged at the end, or partition-local
+//!    plain writes with an atomic cross-shard fallback.
+//! 4. [`session`] — [`Session::load`] computes ordering, relabeled CSR and
+//!    partitions once and serves repeated [`CountQuery`]s from the cache.
+//!
+//! `crate::coordinator` remains as a thin compatibility wrapper: its
+//! `count_motifs` builds a one-shot [`Session`] per call.
+
+pub mod partition;
+pub mod scheduler;
+pub mod session;
+pub mod sink;
+
+pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
+pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
+pub use session::{CountQuery, Session, SessionConfig};
+pub use sink::{make_sink, CounterSink, WorkerHandle};

@@ -1,0 +1,286 @@
+//! Partition layer: contiguous vertex-range shards balanced by degree mass.
+//!
+//! The unit of parallel work is a (root, first-neighbor) pair — the same
+//! decomposition the paper uses for its CUDA grid (Section 6: "each pair
+//! of a vertex and one of its neighbors is computed separately ... prevents
+//! waiting for a small number of vertices with a very high degree"). Units
+//! are batched into [`WorkItem`] ranges so queue traffic stays low.
+//!
+//! On top of the flat item list this module adds [`PartitionSet`]: the
+//! relabeled (degree-descending) vertex space is split into contiguous
+//! ranges whose *unit budgets* — not vertex counts — are even. On a
+//! heavy-tailed graph the first shard may be a single hub vertex while the
+//! last holds thousands of degree-1 tails; each worker's home shard then
+//! seeds its local deque ([`super::scheduler`]) and defines the vertex
+//! range its partition-local counter writes without synchronization
+//! ([`super::sink`]).
+
+use crate::graph::csr::Graph;
+
+/// A contiguous range of first-neighbor units for one root.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkItem {
+    pub root: u32,
+    /// First-neighbor index range [j_start, j_end) into the root's proper
+    /// neighbor list.
+    pub j_start: u32,
+    pub j_end: u32,
+}
+
+impl WorkItem {
+    pub fn units(&self) -> usize {
+        (self.j_end - self.j_start) as usize
+    }
+}
+
+/// Number of (root, first-neighbor) units a root contributes = its
+/// proper-neighbor count in the (relabeled) undirected view.
+#[inline]
+pub fn root_units(graph: &Graph, root: u32) -> usize {
+    graph.und.neighbors_above(root, root).len()
+}
+
+/// Append the items of one root, chunked to `max_units_per_item`.
+fn push_root_items(items: &mut Vec<WorkItem>, root: u32, units: usize, max_units_per_item: usize) {
+    let units = units as u32;
+    let max = max_units_per_item as u32;
+    let mut j = 0u32;
+    while j < units {
+        let end = (j + max).min(units);
+        items.push(WorkItem { root, j_start: j, j_end: end });
+        j = end;
+    }
+}
+
+/// Build the flat work-item list for a (relabeled) graph, roots ascending.
+///
+/// `max_units_per_item` bounds item granularity: hubs are split into many
+/// items (the paper's high-degree division), while degree-1 tails stay one
+/// item each.
+pub fn build_items(graph: &Graph, max_units_per_item: usize) -> Vec<WorkItem> {
+    assert!(max_units_per_item >= 1);
+    let mut items = Vec::new();
+    for root in 0..graph.n() as u32 {
+        push_root_items(&mut items, root, root_units(graph, root), max_units_per_item);
+    }
+    items
+}
+
+/// Total units across an item list (= number of proper (root, neighbor)
+/// pairs = |E| of the undirected view).
+pub fn total_units(items: &[WorkItem]) -> usize {
+    items.iter().map(|i| i.units()).sum()
+}
+
+/// One shard: a contiguous processing-id range plus its work items.
+#[derive(Debug, Clone)]
+pub struct Shard {
+    pub index: usize,
+    /// Home vertex range [v_start, v_end) in processing (relabeled) ids.
+    pub v_start: u32,
+    pub v_end: u32,
+    /// Unit budget of this shard (sum of its roots' proper degrees).
+    pub units: usize,
+    /// Work items whose root lies in the home range, roots ascending.
+    pub items: Vec<WorkItem>,
+}
+
+/// The vertex space split into degree-mass-balanced contiguous shards.
+#[derive(Debug, Clone)]
+pub struct PartitionSet {
+    pub shards: Vec<Shard>,
+    pub total_units: usize,
+    pub total_items: usize,
+    pub max_units_per_item: usize,
+}
+
+impl PartitionSet {
+    /// Split `graph` into at most `max_shards` contiguous vertex ranges
+    /// whose unit budgets are proportional (shard s ends once the running
+    /// unit total reaches `(s+1)/n_shards` of the whole). The shard count
+    /// is clamped to the item count so no worker is spawned with nothing
+    /// to do; the last shard always extends to `n` so every vertex has a
+    /// home range.
+    pub fn build(graph: &Graph, max_shards: usize, max_units_per_item: usize) -> PartitionSet {
+        assert!(max_shards >= 1);
+        assert!(max_units_per_item >= 1);
+        let n = graph.n();
+        let unit_of: Vec<usize> = (0..n as u32).map(|v| root_units(graph, v)).collect();
+        let total_units: usize = unit_of.iter().sum();
+        let total_items: usize = unit_of.iter().map(|&u| u.div_ceil(max_units_per_item)).sum();
+        let n_shards = max_shards.min(total_items.max(1));
+
+        let mut shards = Vec::with_capacity(n_shards);
+        let mut v = 0usize;
+        let mut cum = 0usize;
+        for s in 0..n_shards {
+            let v_start = v as u32;
+            let target = (s + 1) * total_units / n_shards;
+            let last = s + 1 == n_shards;
+            let mut items = Vec::new();
+            let mut units = 0usize;
+            while v < n && (last || cum < target) {
+                push_root_items(&mut items, v as u32, unit_of[v], max_units_per_item);
+                units += unit_of[v];
+                cum += unit_of[v];
+                v += 1;
+            }
+            shards.push(Shard { index: s, v_start, v_end: v as u32, units, items });
+        }
+        PartitionSet { shards, total_units, total_items, max_units_per_item }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Home vertex range per shard, in shard order.
+    pub fn ranges(&self) -> Vec<(u32, u32)> {
+        self.shards.iter().map(|s| (s.v_start, s.v_end)).collect()
+    }
+
+    /// All items concatenated in root-ascending order (the shared-cursor
+    /// scheduler's queue).
+    pub fn all_items(&self) -> Vec<WorkItem> {
+        let mut out = Vec::with_capacity(self.total_items);
+        for s in &self.shards {
+            out.extend_from_slice(&s.items);
+        }
+        out
+    }
+
+    /// Per-shard item lists (the work-stealing scheduler's seed), cloned so
+    /// a session can serve repeated queries from the cached partition.
+    pub fn item_lists(&self) -> Vec<Vec<WorkItem>> {
+        self.shards.iter().map(|s| s.items.clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn items_cover_all_units() {
+        let g = generators::gnp_undirected(50, 0.2, 1);
+        let items = build_items(&g, 4);
+        assert_eq!(total_units(&items), g.und.m() / 2);
+    }
+
+    // -- work decomposition edge cases ------------------------------------
+
+    #[test]
+    fn unit_granularity_one() {
+        let g = generators::gnp_undirected(40, 0.15, 7);
+        let items = build_items(&g, 1);
+        assert!(items.iter().all(|i| i.units() == 1));
+        assert_eq!(total_units(&items), g.und.m() / 2);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = crate::graph::csr::Graph::from_edges(0, &[], false);
+        let items = build_items(&g, 64);
+        assert!(items.is_empty());
+        assert_eq!(total_units(&items), 0);
+        let p = PartitionSet::build(&g, 8, 64);
+        assert_eq!(p.n_shards(), 1);
+        assert_eq!(p.total_units, 0);
+        assert_eq!(p.shards[0].items.len(), 0);
+    }
+
+    #[test]
+    fn isolated_vertices_contribute_no_items() {
+        // only 0-1 connected; vertices 2..9 isolated
+        let g = crate::graph::csr::Graph::from_edges(10, &[(0, 1)], false);
+        let items = build_items(&g, 64);
+        assert_eq!(items.len(), 1);
+        assert_eq!(total_units(&items), 1);
+        assert_eq!(total_units(&items), g.und.m() / 2);
+        // every vertex still gets a home range
+        let p = PartitionSet::build(&g, 4, 64);
+        assert_eq!(p.shards.last().unwrap().v_end, 10);
+    }
+
+    #[test]
+    fn hub_degree_not_multiple_of_chunk() {
+        // star(100): hub has 99 proper neighbors; 99 = 6*16 + 3
+        let g = generators::star(100);
+        let items = build_items(&g, 16);
+        let hub_items: Vec<_> = items.iter().filter(|i| i.root == 0).collect();
+        assert_eq!(hub_items.len(), 99usize.div_ceil(16));
+        assert_eq!(hub_items.last().unwrap().units(), 99 % 16);
+        assert!(hub_items.iter().all(|i| i.units() <= 16));
+        assert_eq!(total_units(&items), g.und.m() / 2);
+        // leaves have no proper neighbors (their only neighbor is 0 < leaf)
+        assert_eq!(items.iter().filter(|i| i.root != 0).count(), 0);
+    }
+
+    // -- partition balance ------------------------------------------------
+
+    #[test]
+    fn ranges_are_contiguous_and_cover_vertex_space() {
+        let g = generators::gnp_undirected(123, 0.1, 9);
+        let p = PartitionSet::build(&g, 5, 8);
+        let mut expect = 0u32;
+        for s in &p.shards {
+            assert_eq!(s.v_start, expect);
+            assert!(s.v_end >= s.v_start);
+            expect = s.v_end;
+        }
+        assert_eq!(expect, g.n() as u32);
+        let sum_units: usize = p.shards.iter().map(|s| s.units).sum();
+        assert_eq!(sum_units, p.total_units);
+        assert_eq!(p.total_units, g.und.m() / 2);
+        let sum_items: usize = p.shards.iter().map(|s| s.items.len()).sum();
+        assert_eq!(sum_items, p.total_items);
+    }
+
+    #[test]
+    fn hub_gets_its_own_shard_under_degree_mass_balance() {
+        // star(1000) relabeled or not: all 999 units sit on vertex 0, so
+        // shard 0 is exactly {hub} and later shards hold only leaf ranges.
+        let g = generators::star(1000);
+        let p = PartitionSet::build(&g, 4, 16);
+        assert_eq!(p.shards[0].v_start, 0);
+        assert_eq!(p.shards[0].v_end, 1);
+        assert_eq!(p.shards[0].units, 999);
+        for s in &p.shards[1..] {
+            assert_eq!(s.units, 0);
+        }
+    }
+
+    #[test]
+    fn unit_mass_roughly_balanced_on_random_graph() {
+        let g = generators::gnp_undirected(400, 0.05, 21);
+        let p = PartitionSet::build(&g, 8, 4);
+        let total = p.total_units as f64;
+        for s in &p.shards {
+            // each shard within a factor of the ideal share plus one vertex
+            // worth of slack (the boundary vertex can overshoot)
+            let ideal = total / p.n_shards() as f64;
+            assert!(
+                (s.units as f64) < ideal + 400.0,
+                "shard {} units {} vs ideal {ideal}",
+                s.index,
+                s.units
+            );
+        }
+    }
+
+    #[test]
+    fn shard_count_clamped_to_item_count() {
+        let g = crate::graph::csr::Graph::from_edges(3, &[(0, 1)], false);
+        let p = PartitionSet::build(&g, 16, 64);
+        assert_eq!(p.n_shards(), 1);
+        assert_eq!(p.all_items().len(), 1);
+    }
+
+    #[test]
+    fn all_items_matches_flat_build() {
+        let g = generators::barabasi_albert(200, 3, 5);
+        let p = PartitionSet::build(&g, 6, 8);
+        assert_eq!(p.all_items(), build_items(&g, 8));
+    }
+}

@@ -1,0 +1,301 @@
+//! Sink layer: where enumerated instances are counted.
+//!
+//! [`CounterSink`] unifies the counter-update strategies behind one
+//! object-safe interface: the run loop asks the sink for a per-worker
+//! [`WorkerHandle`], records every instance through it, and flushes once
+//! at the end. Three implementations (the ablation bench compares them):
+//!
+//! - [`AtomicSink`] — one shared `AtomicU64` array, relaxed fetch-add per
+//!   touch (the paper's GPU atomicAdd strategy, Appendix I).
+//! - [`ShardedSink`] — a private full-width count array per worker, merged
+//!   under a mutex at flush (no contention, `workers × n × classes` memory).
+//! - [`PartitionLocalSink`] — the engine's partition-aware strategy: each
+//!   worker owns a plain (unsynchronized) array covering only its home
+//!   shard's vertex range and falls back to a shared atomic array for
+//!   cross-shard vertices. Under degree-descending relabeling most of an
+//!   instance's vertices are near its root, so the common case is a plain
+//!   add with ~`n × classes` total extra memory instead of per-worker
+//!   copies.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::motifs::counter::{AtomicCounter, CounterMode, ShardCounter};
+
+/// Object-safe counting strategy shared by all workers of a run.
+pub trait CounterSink: Sync {
+    /// Per-worker recording handle; created inside the worker's thread.
+    fn worker(&self, worker_id: usize) -> Box<dyn WorkerHandle + '_>;
+
+    /// Collapse into `(per-vertex counts, total instances)` after every
+    /// worker handle has flushed.
+    fn finish(self: Box<Self>) -> (Vec<u64>, u64);
+}
+
+/// A worker's private recording endpoint.
+pub trait WorkerHandle {
+    /// Record one instance: +1 for every member vertex in `slot`.
+    fn record(&mut self, verts: &[u32], slot: u16);
+
+    /// Push worker-private state into the shared sink (end of the worker
+    /// loop). Idempotent: a second flush contributes nothing.
+    fn flush(&mut self);
+}
+
+/// Build the sink for a counter mode. `home_ranges[w]` is worker w's home
+/// vertex range (used by [`CounterMode::PartitionLocal`]; ignored by the
+/// other modes).
+pub fn make_sink(
+    mode: CounterMode,
+    n: usize,
+    n_classes: usize,
+    home_ranges: &[(u32, u32)],
+) -> Box<dyn CounterSink> {
+    match mode {
+        CounterMode::Atomic => Box::new(AtomicSink::new(n, n_classes)),
+        CounterMode::Sharded => Box::new(ShardedSink::new(n, n_classes)),
+        CounterMode::PartitionLocal => {
+            Box::new(PartitionLocalSink::new(n, n_classes, home_ranges.to_vec()))
+        }
+    }
+}
+
+// ---------------------------------------------------------------- atomic
+
+/// Shared atomic array (paper Appendix I).
+pub struct AtomicSink {
+    counter: AtomicCounter,
+}
+
+impl AtomicSink {
+    pub fn new(n: usize, n_classes: usize) -> AtomicSink {
+        AtomicSink { counter: AtomicCounter::new(n, n_classes) }
+    }
+}
+
+struct AtomicHandle<'a> {
+    counter: &'a AtomicCounter,
+}
+
+impl WorkerHandle for AtomicHandle<'_> {
+    #[inline]
+    fn record(&mut self, verts: &[u32], slot: u16) {
+        self.counter.record(verts, slot);
+    }
+
+    fn flush(&mut self) {}
+}
+
+impl CounterSink for AtomicSink {
+    fn worker(&self, _worker_id: usize) -> Box<dyn WorkerHandle + '_> {
+        Box::new(AtomicHandle { counter: &self.counter })
+    }
+
+    fn finish(self: Box<Self>) -> (Vec<u64>, u64) {
+        let AtomicSink { counter } = *self;
+        let instances = counter.instances();
+        (counter.into_vec(), instances)
+    }
+}
+
+// --------------------------------------------------------------- sharded
+
+/// Per-worker full-width shards merged at flush.
+pub struct ShardedSink {
+    n: usize,
+    n_classes: usize,
+    merged: Mutex<ShardCounter>,
+}
+
+impl ShardedSink {
+    pub fn new(n: usize, n_classes: usize) -> ShardedSink {
+        ShardedSink { n, n_classes, merged: Mutex::new(ShardCounter::new(n, n_classes)) }
+    }
+}
+
+struct ShardedHandle<'a> {
+    local: ShardCounter,
+    flushed: bool,
+    sink: &'a ShardedSink,
+}
+
+impl WorkerHandle for ShardedHandle<'_> {
+    #[inline]
+    fn record(&mut self, verts: &[u32], slot: u16) {
+        self.local.record(verts, slot);
+    }
+
+    fn flush(&mut self) {
+        if !self.flushed {
+            self.sink.merged.lock().unwrap().merge(&self.local);
+            self.flushed = true;
+        }
+    }
+}
+
+impl CounterSink for ShardedSink {
+    fn worker(&self, _worker_id: usize) -> Box<dyn WorkerHandle + '_> {
+        Box::new(ShardedHandle {
+            local: ShardCounter::new(self.n, self.n_classes),
+            flushed: false,
+            sink: self,
+        })
+    }
+
+    fn finish(self: Box<Self>) -> (Vec<u64>, u64) {
+        let ShardedSink { merged, .. } = *self;
+        let merged = merged.into_inner().unwrap();
+        (merged.counts, merged.instances)
+    }
+}
+
+// ------------------------------------------------------- partition-local
+
+/// Unsynchronized writes inside the worker's home vertex range, atomic
+/// fallback for cross-shard vertices.
+pub struct PartitionLocalSink {
+    n_classes: usize,
+    /// Home range per worker id; workers beyond the list get an empty
+    /// range (all their writes take the atomic path).
+    ranges: Vec<(u32, u32)>,
+    /// Shared fallback + merge target, row-major n × n_classes.
+    global: Vec<AtomicU64>,
+    instances: AtomicU64,
+}
+
+impl PartitionLocalSink {
+    pub fn new(n: usize, n_classes: usize, ranges: Vec<(u32, u32)>) -> PartitionLocalSink {
+        let mut global = Vec::with_capacity(n * n_classes);
+        global.resize_with(n * n_classes, || AtomicU64::new(0));
+        PartitionLocalSink { n_classes, ranges, global, instances: AtomicU64::new(0) }
+    }
+}
+
+struct PartitionLocalHandle<'a> {
+    lo: u32,
+    hi: u32,
+    /// Plain counts for the home range, rows `[lo, hi)`.
+    local: Vec<u64>,
+    instances: u64,
+    sink: &'a PartitionLocalSink,
+}
+
+impl WorkerHandle for PartitionLocalHandle<'_> {
+    #[inline]
+    fn record(&mut self, verts: &[u32], slot: u16) {
+        self.instances += 1;
+        let c = self.sink.n_classes;
+        for &v in verts {
+            if v >= self.lo && v < self.hi {
+                let idx = (v - self.lo) as usize * c + slot as usize;
+                debug_assert!(idx < self.local.len());
+                self.local[idx] += 1;
+            } else {
+                self.sink.global[v as usize * c + slot as usize].fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn flush(&mut self) {
+        let c = self.sink.n_classes;
+        let base = self.lo as usize * c;
+        for (i, x) in self.local.iter_mut().enumerate() {
+            if *x != 0 {
+                self.sink.global[base + i].fetch_add(*x, Ordering::Relaxed);
+                *x = 0;
+            }
+        }
+        self.sink.instances.fetch_add(self.instances, Ordering::Relaxed);
+        self.instances = 0;
+    }
+}
+
+impl CounterSink for PartitionLocalSink {
+    fn worker(&self, worker_id: usize) -> Box<dyn WorkerHandle + '_> {
+        let (lo, hi) = self.ranges.get(worker_id).copied().unwrap_or((0, 0));
+        Box::new(PartitionLocalHandle {
+            lo,
+            hi,
+            local: vec![0u64; (hi - lo) as usize * self.n_classes],
+            instances: 0,
+            sink: self,
+        })
+    }
+
+    fn finish(self: Box<Self>) -> (Vec<u64>, u64) {
+        let PartitionLocalSink { global, instances, .. } = *self;
+        let instances = instances.into_inner();
+        (global.into_iter().map(AtomicU64::into_inner).collect(), instances)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Drive a sink through a fixed instance stream from several workers
+    /// and return its final (counts, instances).
+    fn drive(mode: CounterMode, workers: usize) -> (Vec<u64>, u64) {
+        let n = 8;
+        let c = 2;
+        let ranges: Vec<(u32, u32)> = vec![(0, 2), (2, 5), (5, 8)];
+        let sink = make_sink(mode, n, c, &ranges[..workers.min(3)]);
+        let sink_ref: &dyn CounterSink = sink.as_ref();
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                s.spawn(move || {
+                    let mut h = sink_ref.worker(w);
+                    // every worker records the same deterministic stream
+                    h.record(&[0, 1, 2], 0);
+                    h.record(&[2, 5, 7], 1);
+                    h.record(&[6, 7, 0], (w % 2) as u16);
+                    h.flush();
+                });
+            }
+        });
+        sink.finish()
+    }
+
+    #[test]
+    fn all_sinks_agree() {
+        for workers in [1usize, 2, 3] {
+            let a = drive(CounterMode::Atomic, workers);
+            let s = drive(CounterMode::Sharded, workers);
+            let p = drive(CounterMode::PartitionLocal, workers);
+            assert_eq!(a, s, "atomic vs sharded, {workers} workers");
+            assert_eq!(a, p, "atomic vs partition-local, {workers} workers");
+            assert_eq!(a.1, 3 * workers as u64);
+        }
+    }
+
+    #[test]
+    fn partition_local_handles_out_of_range_worker() {
+        let sink = PartitionLocalSink::new(4, 1, vec![(0, 4)]);
+        let boxed: Box<dyn CounterSink> = Box::new(sink);
+        {
+            // worker 5 has no home range: everything goes through atomics
+            let mut h = boxed.worker(5);
+            h.record(&[0, 3], 0);
+            h.flush();
+        }
+        let (counts, instances) = boxed.finish();
+        assert_eq!(instances, 1);
+        assert_eq!(counts, vec![1, 0, 0, 1]);
+    }
+
+    #[test]
+    fn flush_is_idempotent() {
+        for mode in [CounterMode::Atomic, CounterMode::Sharded, CounterMode::PartitionLocal] {
+            let sink = make_sink(mode, 2, 1, &[(0, 2)]);
+            {
+                let mut h = sink.worker(0);
+                h.record(&[0, 1], 0);
+                h.flush();
+                h.flush();
+            }
+            let (counts, instances) = sink.finish();
+            assert_eq!(counts, vec![1, 1], "{mode:?}");
+            assert_eq!(instances, 1, "{mode:?}");
+        }
+    }
+}

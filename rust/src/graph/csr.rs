@@ -20,29 +20,71 @@ impl Csr {
     /// Build from an edge list. Edges are deduplicated; self-loops removed.
     /// When `symmetrize` is set, each (u,v) also inserts (v,u) — the paper's
     /// undirected G_U view.
+    ///
+    /// Counting-sort bucket build: one pass counts per-source degrees, a
+    /// prefix sum places the buckets, a scatter pass fills them, and each
+    /// bucket is sorted + deduplicated independently. Replaces the old
+    /// global `sort_unstable + dedup` over all pairs: per-bucket sorts are
+    /// short (degree-sized), cache-resident and O(m · log d_max) instead of
+    /// O(m · log m), which is the difference that shows on
+    /// multi-million-edge graphs.
     pub fn from_edges(n: usize, edges: &[(u32, u32)], symmetrize: bool) -> Csr {
-        let mut pairs: Vec<(u32, u32)> = Vec::with_capacity(edges.len() * if symmetrize { 2 } else { 1 });
+        // Pass 1: per-source counts (self-loops dropped — paper assumes
+        // simple graphs).
+        let mut starts = vec![0u64; n + 1];
         for &(u, v) in edges {
             debug_assert!((u as usize) < n && (v as usize) < n, "edge ({u},{v}) out of range");
             if u == v {
-                continue; // simple graphs only (paper assumes no self edges)
+                continue;
             }
-            pairs.push((u, v));
+            starts[u as usize + 1] += 1;
             if symmetrize {
-                pairs.push((v, u));
+                starts[v as usize + 1] += 1;
             }
         }
-        pairs.sort_unstable();
-        pairs.dedup();
-
-        let mut offsets = vec![0u64; n + 1];
-        for &(u, _) in &pairs {
-            offsets[u as usize + 1] += 1;
-        }
+        // Prefix sum: starts[v] = first slot of v's (still duplicated) bucket.
         for i in 0..n {
-            offsets[i + 1] += offsets[i];
+            starts[i + 1] += starts[i];
         }
-        let neighbors = pairs.into_iter().map(|(_, v)| v).collect();
+        let m_raw = starts[n] as usize;
+
+        // Pass 2: scatter into buckets.
+        let mut neighbors = vec![0u32; m_raw];
+        let mut cursor: Vec<u64> = starts[..n].to_vec();
+        for &(u, v) in edges {
+            if u == v {
+                continue;
+            }
+            neighbors[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            if symmetrize {
+                neighbors[cursor[v as usize] as usize] = u;
+                cursor[v as usize] += 1;
+            }
+        }
+
+        // Pass 3: sort + dedup each bucket, compacting in place (the write
+        // head never passes the read head because buckets only shrink).
+        let mut offsets = vec![0u64; n + 1];
+        let mut write = 0usize;
+        for u in 0..n {
+            let start = starts[u] as usize;
+            let end = starts[u + 1] as usize;
+            neighbors[start..end].sort_unstable();
+            offsets[u] = write as u64;
+            let mut last: Option<u32> = None;
+            for i in start..end {
+                let v = neighbors[i];
+                if last != Some(v) {
+                    neighbors[write] = v;
+                    write += 1;
+                    last = Some(v);
+                }
+            }
+        }
+        offsets[n] = write as u64;
+        neighbors.truncate(write);
+        neighbors.shrink_to_fit();
         Csr { offsets, neighbors }
     }
 
@@ -248,6 +290,45 @@ mod tests {
         let csr = Csr::from_edges(1, &[], true);
         assert_eq!(csr.n(), 1);
         assert_eq!(csr.degree(0), 0);
+    }
+
+    #[test]
+    fn bucket_build_matches_global_sort_reference() {
+        // reference implementation: the seed's global sort + dedup
+        fn reference(n: usize, edges: &[(u32, u32)], symmetrize: bool) -> (Vec<u64>, Vec<u32>) {
+            let mut pairs: Vec<(u32, u32)> = Vec::new();
+            for &(u, v) in edges {
+                if u == v {
+                    continue;
+                }
+                pairs.push((u, v));
+                if symmetrize {
+                    pairs.push((v, u));
+                }
+            }
+            pairs.sort_unstable();
+            pairs.dedup();
+            let mut offsets = vec![0u64; n + 1];
+            for &(u, _) in &pairs {
+                offsets[u as usize + 1] += 1;
+            }
+            for i in 0..n {
+                offsets[i + 1] += offsets[i];
+            }
+            (offsets, pairs.into_iter().map(|(_, v)| v).collect())
+        }
+
+        let mut rng = crate::util::rng::Pcg32::seeded(77);
+        for &sym in &[false, true] {
+            let n = 40;
+            // duplicates and self-loops on purpose
+            let edges: Vec<(u32, u32)> =
+                (0..600).map(|_| (rng.below(n as u32), rng.below(n as u32))).collect();
+            let csr = Csr::from_edges(n, &edges, sym);
+            let (ref_offsets, ref_neighbors) = reference(n, &edges, sym);
+            assert_eq!(csr.offsets, ref_offsets, "symmetrize={sym}");
+            assert_eq!(csr.neighbors, ref_neighbors, "symmetrize={sym}");
+        }
     }
 
     #[test]

@@ -5,10 +5,12 @@
 //! J. Complex Networks 2022) as a three-layer Rust + JAX/Pallas system:
 //!
 //! - **L3 (this crate)**: the cache-aware CSR graph substrate, the proper
-//!   k-BFS enumeration engine (each 3-/4-motif counted once and only
-//!   once — Section 5 lemmas), the leader/worker coordinator distributing
+//!   k-BFS enumeration core (each 3-/4-motif counted once and only
+//!   once — Section 5 lemmas), the layered execution engine
+//!   ([`engine`]: partition → scheduler → sink → session) distributing
 //!   (root, neighbor) work units (Section 6), baselines, the Eq. 7.4
-//!   theory, and the Section 10 toolbox.
+//!   theory, and the Section 10 toolbox. `coordinator` is the one-shot
+//!   compatibility wrapper over the engine.
 //! - **L2/L1 (python/compile, build-time only)**: JAX graphs composing
 //!   Pallas kernels (instance-histogram matmul, isomorph-projection
 //!   matmul, dense matrix baseline), AOT-lowered to HLO text by
@@ -18,6 +20,8 @@
 //!   runs at serve time.
 //!
 //! ## Quick start
+//!
+//! One-shot counting through the compatibility wrapper:
 //!
 //! ```no_run
 //! use vdmc::coordinator::{count_motifs, CountConfig};
@@ -33,9 +37,28 @@
 //! println!("4-motif instances: {}", counts.total_instances);
 //! println!("vertex 0 counts: {:?}", counts.vertex(0));
 //! ```
+//!
+//! Repeated queries against one graph should load a [`engine::Session`]
+//! once (ordering, relabeled CSR and partitions are cached) and query it:
+//!
+//! ```no_run
+//! use vdmc::engine::{CountQuery, Session};
+//! use vdmc::graph::generators;
+//! use vdmc::motifs::{Direction, MotifSize};
+//!
+//! let g = generators::gnp_directed(1000, 0.01, 42);
+//! let session = Session::load(&g); // setup happens once, here
+//! for size in [MotifSize::Three, MotifSize::Four] {
+//!     let counts = session
+//!         .count(&CountQuery { size, direction: Direction::Directed, ..Default::default() })
+//!         .unwrap();
+//!     println!("{size:?}: {} instances", counts.total_instances);
+//! }
+//! ```
 
 pub mod baselines;
 pub mod coordinator;
+pub mod engine;
 pub mod graph;
 pub mod motifs;
 pub mod runtime;

@@ -151,13 +151,17 @@ impl ShardCounter {
     }
 }
 
-/// Which update strategy the coordinator uses (ablation in benches).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which update strategy the engine's sink uses (ablation in benches).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CounterMode {
     /// Shared AtomicU64 array, relaxed fetch_add (paper's GPU strategy).
     Atomic,
     /// Per-worker shards merged at the end (higher memory, no contention).
     Sharded,
+    /// Plain unsynchronized writes inside each worker's home shard vertex
+    /// range, atomic fallback for cross-shard vertices
+    /// (`engine::sink::PartitionLocalSink`).
+    PartitionLocal,
 }
 
 /// Final result of a counting run: per-vertex canonical-class counts.

@@ -48,6 +48,22 @@ impl Args {
         self.get_parse::<T>(name)?
             .ok_or_else(|| format!("missing required option --{name}"))
     }
+
+    /// Value of an enumerated option, validated against `allowed`.
+    pub fn one_of(&self, name: &str, allowed: &[&str]) -> Result<String, String> {
+        let v = self
+            .values
+            .get(name)
+            .ok_or_else(|| format!("missing required option --{name}"))?;
+        if allowed.contains(&v.as_str()) {
+            Ok(v.clone())
+        } else {
+            Err(format!(
+                "invalid value {v:?} for --{name} (expected one of: {})",
+                allowed.join(" | ")
+            ))
+        }
+    }
 }
 
 /// One subcommand with its option specs.
@@ -239,5 +255,16 @@ mod tests {
     fn bad_parse_type_reported() {
         let a = cmd().parse(&argv(&["--k", "many"])).unwrap();
         assert!(a.req::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn one_of_validates_enumerated_values() {
+        let c = Command::new("count", "count").opt("mode", "a | b", Some("a"));
+        let args = c.parse(&argv(&["--mode", "b"])).unwrap();
+        assert_eq!(args.one_of("mode", &["a", "b"]).unwrap(), "b");
+        let args = c.parse(&argv(&["--mode", "zzz"])).unwrap();
+        let err = args.one_of("mode", &["a", "b"]).unwrap_err();
+        assert!(err.contains("a | b"), "{err}");
+        assert!(args.one_of("nope", &["a"]).is_err());
     }
 }

@@ -1,0 +1,59 @@
+//! Minimal offline stand-in for the `once_cell` crate: `sync::Lazy`
+//! implemented over `std::sync::OnceLock` (the std feature that obsoleted
+//! it). Only the surface VDMC uses.
+
+pub mod sync {
+    use std::ops::Deref;
+    use std::sync::OnceLock;
+
+    /// A value initialized on first access, usable in `static`s.
+    pub struct Lazy<T, F = fn() -> T> {
+        cell: OnceLock<T>,
+        init: F,
+    }
+
+    impl<T, F> Lazy<T, F> {
+        pub const fn new(init: F) -> Lazy<T, F> {
+            Lazy { cell: OnceLock::new(), init }
+        }
+    }
+
+    impl<T, F: Fn() -> T> Lazy<T, F> {
+        pub fn force(this: &Lazy<T, F>) -> &T {
+            this.cell.get_or_init(|| (this.init)())
+        }
+    }
+
+    impl<T, F: Fn() -> T> Deref for Lazy<T, F> {
+        type Target = T;
+
+        fn deref(&self) -> &T {
+            Lazy::force(self)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::Lazy;
+
+    static COUNTER: Lazy<u32> = Lazy::new(|| 40 + 2);
+
+    #[test]
+    fn static_lazy_initializes_once() {
+        assert_eq!(*COUNTER, 42);
+        assert_eq!(*COUNTER, 42);
+    }
+
+    #[test]
+    fn local_lazy() {
+        let calls = std::sync::atomic::AtomicU32::new(0);
+        let l = Lazy::new(|| {
+            calls.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            7u32
+        });
+        assert_eq!(*l, 7);
+        assert_eq!(*l, 7);
+        assert_eq!(calls.load(std::sync::atomic::Ordering::SeqCst), 1);
+    }
+}
