@@ -1,13 +1,16 @@
 //! Quickstart: generate a directed G(n, p), load it into an engine
 //! Session once, then count all 3- and 4-motifs per vertex from the
 //! cached state — the serving pattern. Prints class totals, the busiest
-//! vertices, and how much setup the session reuse saved.
+//! vertices, and how much setup the session reuse saved. Finishes with
+//! the streaming pattern: maintain counts incrementally while applying a
+//! live edge batch through `Session::apply_edges`.
 //!
 //!     cargo run --release --example quickstart [n] [p]
 
 use vdmc::engine::{CountQuery, Session};
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
+use vdmc::stream::EdgeDelta;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -63,5 +66,43 @@ fn main() -> anyhow::Result<()> {
             println!("    v{v:<6} {t}  (degree {})", g.und_degree(*v));
         }
     }
+
+    // -- streaming: maintain counts under live edge batches ---------------
+    println!("\n== streaming: apply_edges on the live session ==");
+    let mut session = session;
+    session.maintain(MotifSize::Three, Direction::Directed)?;
+    let before = session
+        .maintained_counts(MotifSize::Three, Direction::Directed)
+        .expect("registered above")
+        .total_instances;
+    let m = n as u32;
+    let batch: Vec<EdgeDelta> = (0..20u32)
+        .flat_map(|i| {
+            [
+                EdgeDelta::insert((i * 13) % m, (i * 29 + 1) % m),
+                EdgeDelta::delete((i * 7) % m, (i * 3 + 2) % m),
+            ]
+        })
+        .collect();
+    let report = session.apply_edges(&batch)?;
+    let after = session
+        .maintained_counts(MotifSize::Three, Direction::Directed)
+        .expect("still registered")
+        .total_instances;
+    println!(
+        "applied {} / skipped {} of {} ops in {:.4}s: re-enumerated {} units / {} sets \
+         (touched {} vertices), 3-motif instances {before} -> {after}",
+        report.applied(),
+        report.skipped(),
+        batch.len(),
+        report.elapsed_secs,
+        report.reenumerated_units,
+        report.reenumerated_sets,
+        report.touched_vertices,
+    );
+    println!(
+        "overlay: {} entries (ratio {:.4}), {} compaction(s)",
+        report.overlay_entries, report.overlay_ratio, report.compactions
+    );
     Ok(())
 }

@@ -5,9 +5,10 @@
 //!   B. degree-descending reorder (paper Section 6) on vs off;
 //!   C. work-item granularity (max (root, neighbor) units per queue item);
 //!   D. worker-count scaling on a heavy-hub graph;
-//!   E. scheduler × sink grid (shared cursor vs work stealing, all three
-//!      sinks) — one JSON row per combination so the engine refactor's
-//!      wins are measured, not asserted;
+//!   E. scheduler × sink grid (shared cursor vs single-item work stealing
+//!      vs half-deque batch stealing, all three sinks) — one JSON row per
+//!      combination, including steal_batch totals/averages, so the engine
+//!      refactor's wins are measured, not asserted;
 //!   F. session reuse: first query (pays setup) vs Nth query (cached).
 //!
 //! Sections A–D print the historical TSV (ablation, config, secs,
@@ -21,8 +22,11 @@ use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::util::json::Json;
 
-const SCHEDULERS: [(&str, SchedulerMode); 2] =
-    [("cursor", SchedulerMode::SharedCursor), ("stealing", SchedulerMode::WorkStealing)];
+const SCHEDULERS: [(&str, SchedulerMode); 3] = [
+    ("cursor", SchedulerMode::SharedCursor),
+    ("stealing", SchedulerMode::WorkStealing),
+    ("stealing-batch", SchedulerMode::WorkStealingBatch),
+];
 const SINKS: [(&str, CounterMode); 3] = [
     ("atomic", CounterMode::Atomic),
     ("sharded", CounterMode::Sharded),
@@ -93,7 +97,9 @@ fn main() {
                 .set("instances", c.total_instances)
                 .set("throughput_per_sec", r.throughput())
                 .set("imbalance", r.imbalance())
-                .set("steals", r.total_steals());
+                .set("steals", r.total_steals())
+                .set("steal_batch_total", r.total_steal_batch())
+                .set("steal_batch_avg", r.avg_steal_batch());
             println!("{}", j.to_string_compact());
         }
     }

@@ -14,6 +14,10 @@ pub struct WorkerMetrics {
     /// Items claimed from another worker's deque (work-stealing scheduler
     /// only; always 0 under the shared cursor).
     pub steals: u64,
+    /// Items transferred by this worker's steal operations (equals
+    /// `steals` under single-item stealing; larger under half-deque batch
+    /// stealing, where one steal moves several items).
+    pub steal_batch: u64,
     pub busy_secs: f64,
 }
 
@@ -63,6 +67,23 @@ impl RunReport {
         self.workers.iter().map(|w| w.steals).sum()
     }
 
+    /// Total items transferred by steal operations (the steal-batch mass).
+    pub fn total_steal_batch(&self) -> u64 {
+        self.workers.iter().map(|w| w.steal_batch).sum()
+    }
+
+    /// Mean items moved per steal operation — 1.0 for single-item
+    /// stealing, > 1 under half-deque batching (the ROADMAP's steal-batch
+    /// tuning metric).
+    pub fn avg_steal_batch(&self) -> f64 {
+        let steals = self.total_steals();
+        if steals == 0 {
+            0.0
+        } else {
+            self.total_steal_batch() as f64 / steals as f64
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("total_instances", self.total_instances)
@@ -73,7 +94,9 @@ impl RunReport {
             .set("queue_units", self.queue_units)
             .set("setup_secs", self.setup_secs)
             .set("setup_reused", self.setup_reused)
-            .set("steals", self.total_steals());
+            .set("steals", self.total_steals())
+            .set("steal_batch_total", self.total_steal_batch())
+            .set("steal_batch_avg", self.avg_steal_batch());
         let workers: Vec<Json> = self
             .workers
             .iter()
@@ -84,6 +107,7 @@ impl RunReport {
                     .set("units", w.units)
                     .set("instances", w.instances)
                     .set("steals", w.steals)
+                    .set("steal_batch", w.steal_batch)
                     .set("busy_secs", w.busy_secs);
                 o
             })
@@ -127,6 +151,18 @@ mod tests {
     #[test]
     fn throughput() {
         assert_eq!(report(&[1.0]).throughput(), 50.0);
+    }
+
+    #[test]
+    fn steal_batch_averages() {
+        let mut r = report(&[1.0, 1.0]);
+        assert_eq!(r.avg_steal_batch(), 0.0, "no steals -> 0 average");
+        r.workers[0].steals = 2;
+        r.workers[0].steal_batch = 7;
+        r.workers[1].steals = 1;
+        r.workers[1].steal_batch = 5;
+        assert_eq!(r.total_steal_batch(), 12);
+        assert_eq!(r.avg_steal_batch(), 4.0);
     }
 
     #[test]

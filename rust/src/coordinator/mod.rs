@@ -61,6 +61,7 @@ impl CountConfig {
             workers: self.workers,
             reorder: self.reorder,
             max_units_per_item: self.max_units_per_item,
+            ..SessionConfig::default()
         }
     }
 

@@ -8,13 +8,16 @@
 //!    budgets* (degree mass) are balanced, so one hub-heavy shard can be a
 //!    single vertex.
 //! 2. [`scheduler`] — how workers claim items: the seed's shared fetch-add
-//!    cursor, or per-worker deques seeded with the home shard and
-//!    randomized FIFO stealing once a deque runs dry.
+//!    cursor, per-worker deques with randomized single-item FIFO stealing,
+//!    or half-deque batch stealing (`SchedulerMode::WorkStealingBatch`).
 //! 3. [`sink`] — where counts land: shared atomics (the paper's GPU
 //!    atomicAdd), per-worker shards merged at the end, or partition-local
 //!    plain writes with an atomic cross-shard fallback.
 //! 4. [`session`] — [`Session::load`] computes ordering, relabeled CSR and
 //!    partitions once and serves repeated [`CountQuery`]s from the cache.
+//!    Sessions are also live: `Session::apply_edges` maintains per-vertex
+//!    counts under edge deltas via the fifth layer, [`crate::stream`]
+//!    (delta overlay + edge-local re-enumeration).
 //!
 //! `crate::coordinator` remains as a thin compatibility wrapper: its
 //! `count_motifs` builds a one-shot [`Session`] per call.

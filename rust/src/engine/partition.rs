@@ -15,7 +15,7 @@
 //! range its partition-local counter writes without synchronization
 //! ([`super::sink`]).
 
-use crate::graph::csr::Graph;
+use crate::graph::GraphProbe;
 
 /// A contiguous range of first-neighbor units for one root.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -34,10 +34,12 @@ impl WorkItem {
 }
 
 /// Number of (root, first-neighbor) units a root contributes = its
-/// proper-neighbor count in the (relabeled) undirected view.
+/// proper-neighbor count in the (relabeled) undirected view. Generic over
+/// [`GraphProbe`] so the stream layer can budget work items for a delta
+/// overlay without materializing it.
 #[inline]
-pub fn root_units(graph: &Graph, root: u32) -> usize {
-    graph.und.neighbors_above(root, root).len()
+pub fn root_units<G: GraphProbe>(graph: &G, root: u32) -> usize {
+    graph.und_degree_above(root, root)
 }
 
 /// Append the items of one root, chunked to `max_units_per_item`.
@@ -57,7 +59,7 @@ fn push_root_items(items: &mut Vec<WorkItem>, root: u32, units: usize, max_units
 /// `max_units_per_item` bounds item granularity: hubs are split into many
 /// items (the paper's high-degree division), while degree-1 tails stay one
 /// item each.
-pub fn build_items(graph: &Graph, max_units_per_item: usize) -> Vec<WorkItem> {
+pub fn build_items<G: GraphProbe>(graph: &G, max_units_per_item: usize) -> Vec<WorkItem> {
     assert!(max_units_per_item >= 1);
     let mut items = Vec::new();
     for root in 0..graph.n() as u32 {
@@ -101,7 +103,7 @@ impl PartitionSet {
     /// is clamped to the item count so no worker is spawned with nothing
     /// to do; the last shard always extends to `n` so every vertex has a
     /// home range.
-    pub fn build(graph: &Graph, max_shards: usize, max_units_per_item: usize) -> PartitionSet {
+    pub fn build<G: GraphProbe>(graph: &G, max_shards: usize, max_units_per_item: usize) -> PartitionSet {
         assert!(max_shards >= 1);
         assert!(max_units_per_item >= 1);
         let n = graph.n();

@@ -1,22 +1,30 @@
 //! Scheduler layer: how workers claim work items.
 //!
-//! Two strategies, selectable per query (ablations compare them):
+//! Three strategies, selectable per query (ablations compare them):
 //!
 //! - [`SharedCursorScheduler`] — the seed coordinator's design: one flat
 //!   item list, workers claim the next item with a single relaxed
 //!   fetch-add. Zero-overhead on small graphs, but every claim bounces the
 //!   cursor cache line between all cores and ignores shard locality.
-//! - [`WorkStealingScheduler`] — per-worker deques seeded with the home
-//!   shard's items (see [`super::partition`]). Local pops are LIFO from
-//!   the back (the heavy low-index roots first, cache-warm), and a worker
-//!   whose deque runs dry steals FIFO from the front of victims swept
-//!   circularly from a random start, taking the cheap high-index tails.
+//! - [`WorkStealingScheduler`] (single-item steals) — per-worker deques
+//!   seeded with the home shard's items (see [`super::partition`]). Local
+//!   pops are LIFO from the back (the heavy low-index roots first,
+//!   cache-warm), and a worker whose deque runs dry steals FIFO from the
+//!   front of victims swept circularly from a random start, taking the
+//!   cheap high-index tails.
+//! - Half-deque steals ([`WorkStealingScheduler::half_deque`], the
+//!   ROADMAP's steal-batch tuning): a successful steal transfers half of
+//!   the victim's deque to the thief's own deque in one lock acquisition,
+//!   so a starving worker pays the steal sweep once per ~log(items)
+//!   claims instead of once per claim. [`Claim::batch`] records the
+//!   transfer size for the `RunReport` steal-batch metrics.
 //!
-//! Queues are seeded once and only drain, so "a full sweep found every
-//! queue empty" is a sound termination signal: an empty queue can never
-//! refill, and an item absent from all queues has been claimed by some
-//! worker. Counter updates commute, so results are identical under any
-//! claim order — the schedulers differ only in throughput.
+//! Termination stays sound under batching: items only ever move from a
+//! victim's deque into the thief's hands and deque, so the total item
+//! count across queues is non-increasing and every item is claimed by
+//! exactly one worker. A worker that sweeps every queue empty may exit
+//! while a thief still drains its own transferred batch — that costs tail
+//! parallelism, never correctness, because counter updates commute.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -31,8 +39,10 @@ use super::partition::WorkItem;
 pub enum SchedulerMode {
     /// Single shared fetch-add cursor over a flat item list (seed design).
     SharedCursor,
-    /// Per-worker deques with randomized stealing (engine default).
+    /// Per-worker deques with randomized single-item stealing.
     WorkStealing,
+    /// Per-worker deques; a steal transfers half the victim's deque.
+    WorkStealingBatch,
 }
 
 /// One claimed item plus where it came from (for worker metrics).
@@ -41,6 +51,10 @@ pub struct Claim {
     pub item: WorkItem,
     /// True when the item came from another worker's deque.
     pub stolen: bool,
+    /// Items transferred by the steal operation that produced this claim
+    /// (1 for single-item steals, half the victim's deque for batch
+    /// steals, 0 for local pops).
+    pub batch: u32,
 }
 
 /// Object-safe claim source shared by all workers of a run.
@@ -70,7 +84,7 @@ impl Scheduler for SharedCursorScheduler {
     #[inline]
     fn pop(&self, _worker_id: usize) -> Option<Claim> {
         let i = self.cursor.fetch_add(1, Ordering::Relaxed);
-        self.items.get(i).map(|&item| Claim { item, stolen: false })
+        self.items.get(i).map(|&item| Claim { item, stolen: false, batch: 0 })
     }
 
     fn n_items(&self) -> usize {
@@ -78,7 +92,8 @@ impl Scheduler for SharedCursorScheduler {
     }
 }
 
-/// Per-worker deques with randomized FIFO stealing.
+/// Per-worker deques with randomized FIFO stealing (single-item or
+/// half-deque batches).
 pub struct WorkStealingScheduler {
     /// One deque per worker. Stored reversed so `pop_back` (the LIFO local
     /// pop) serves items in root-ascending order — heaviest hubs first —
@@ -88,12 +103,25 @@ pub struct WorkStealingScheduler {
     /// keep runs reproducible; results don't depend on steal order anyway).
     rngs: Vec<Mutex<Pcg32>>,
     n_items: usize,
+    /// Steal half of the victim's deque instead of one item.
+    steal_half: bool,
 }
 
 impl WorkStealingScheduler {
     /// `per_worker[w]` seeds worker w's deque; items must be in scheduling
     /// order (root-ascending = descending degree after relabeling).
+    /// Single-item steals.
     pub fn new(per_worker: Vec<Vec<WorkItem>>) -> WorkStealingScheduler {
+        WorkStealingScheduler::build(per_worker, false)
+    }
+
+    /// As [`WorkStealingScheduler::new`], but a steal takes half of the
+    /// victim's deque (rounded up) in one lock acquisition.
+    pub fn half_deque(per_worker: Vec<Vec<WorkItem>>) -> WorkStealingScheduler {
+        WorkStealingScheduler::build(per_worker, true)
+    }
+
+    fn build(per_worker: Vec<Vec<WorkItem>>, steal_half: bool) -> WorkStealingScheduler {
         let n_items = per_worker.iter().map(|q| q.len()).sum();
         let n_workers = per_worker.len();
         let queues = per_worker
@@ -106,7 +134,7 @@ impl WorkStealingScheduler {
         let rngs = (0..n_workers)
             .map(|w| Mutex::new(Pcg32::new(0x5EED ^ w as u64, w as u64)))
             .collect();
-        WorkStealingScheduler { queues, rngs, n_items }
+        WorkStealingScheduler { queues, rngs, n_items, steal_half }
     }
 }
 
@@ -118,7 +146,7 @@ impl Scheduler for WorkStealingScheduler {
         }
         let home = worker_id % nq;
         if let Some(item) = self.queues[home].lock().unwrap().pop_back() {
-            return Some(Claim { item, stolen: false });
+            return Some(Claim { item, stolen: false, batch: 0 });
         }
         // Home deque dry: circular sweep over the victims from a random
         // start (randomizes contention without allocating per pop).
@@ -128,9 +156,28 @@ impl Scheduler for WorkStealingScheduler {
             if q == home {
                 continue;
             }
-            if let Some(item) = self.queues[q].lock().unwrap().pop_front() {
-                return Some(Claim { item, stolen: true });
+            let mut victim = self.queues[q].lock().unwrap();
+            if victim.is_empty() {
+                continue;
             }
+            if !self.steal_half {
+                let item = victim.pop_front().unwrap();
+                return Some(Claim { item, stolen: true, batch: 1 });
+            }
+            // Batch steal: drain the front half (the victim's cheap
+            // high-root tail) in one go, then release the victim before
+            // touching the home deque — no two locks held at once.
+            let take = victim.len().div_ceil(2);
+            let mut taken: Vec<WorkItem> = victim.drain(..take).collect();
+            drop(victim);
+            let first = taken.remove(0);
+            if !taken.is_empty() {
+                // Front-of-victim order is root-descending; pushing it
+                // back-to-back keeps the home pop_back yielding the
+                // lowest-root (heaviest) item of the batch first.
+                self.queues[home].lock().unwrap().extend(taken);
+            }
+            return Some(Claim { item: first, stolen: true, batch: take as u32 });
         }
         None
     }
@@ -187,31 +234,81 @@ mod tests {
     }
 
     #[test]
+    fn batch_stealing_drains_every_item_exactly_once() {
+        let sched = WorkStealingScheduler::half_deque(seed_queues(&[100, 0, 37, 5]));
+        assert_eq!(sched.n_items(), 142);
+        let mut claimed: Vec<WorkItem> = Vec::new();
+        for w in 0..4 {
+            while let Some(c) = sched.pop(w) {
+                claimed.push(c.item);
+            }
+        }
+        assert_eq!(claimed.len(), 142);
+        claimed.sort_unstable_by_key(|i| (i.root, i.j_start));
+        claimed.dedup();
+        assert_eq!(claimed.len(), 142, "duplicate claims");
+    }
+
+    #[test]
+    fn batch_steal_transfers_half_the_victim_deque() {
+        let sched = WorkStealingScheduler::half_deque(seed_queues(&[8, 0]));
+        // worker 1's home deque is empty: first pop is a steal of 8/2 = 4
+        let c = sched.pop(1).unwrap();
+        assert!(c.stolen);
+        assert_eq!(c.batch, 4);
+        // the surplus landed in worker 1's own deque: next pops are local
+        for _ in 0..3 {
+            let c = sched.pop(1).unwrap();
+            assert!(!c.stolen);
+            assert_eq!(c.batch, 0);
+        }
+        // then it must steal again (victim has the remaining 4)
+        let c = sched.pop(1).unwrap();
+        assert!(c.stolen);
+        assert_eq!(c.batch, 2);
+    }
+
+    #[test]
+    fn single_item_steal_reports_batch_of_one() {
+        let sched = WorkStealingScheduler::new(seed_queues(&[3, 0]));
+        let c = sched.pop(1).unwrap();
+        assert!(c.stolen);
+        assert_eq!(c.batch, 1);
+    }
+
+    #[test]
     fn concurrent_stealing_is_disjoint_and_complete() {
-        let sched = WorkStealingScheduler::new(seed_queues(&[500, 1, 0, 250]));
-        let total = sched.n_items();
-        let all: Vec<Vec<WorkItem>> = std::thread::scope(|s| {
-            (0..4)
-                .map(|w| {
-                    let sched = &sched;
-                    s.spawn(move || {
-                        let mut mine = Vec::new();
-                        while let Some(c) = sched.pop(w) {
-                            mine.push(c.item);
-                        }
-                        mine
+        for steal_half in [false, true] {
+            let queues = seed_queues(&[500, 1, 0, 250]);
+            let sched = if steal_half {
+                WorkStealingScheduler::half_deque(queues)
+            } else {
+                WorkStealingScheduler::new(queues)
+            };
+            let total = sched.n_items();
+            let all: Vec<Vec<WorkItem>> = std::thread::scope(|s| {
+                (0..4)
+                    .map(|w| {
+                        let sched = &sched;
+                        s.spawn(move || {
+                            let mut mine = Vec::new();
+                            while let Some(c) = sched.pop(w) {
+                                mine.push(c.item);
+                            }
+                            mine
+                        })
                     })
-                })
-                .collect::<Vec<_>>()
-                .into_iter()
-                .map(|h| h.join().unwrap())
-                .collect()
-        });
-        let mut flat: Vec<WorkItem> = all.into_iter().flatten().collect();
-        assert_eq!(flat.len(), total);
-        flat.sort_unstable_by_key(|i| (i.root, i.j_start));
-        flat.dedup();
-        assert_eq!(flat.len(), total, "item claimed twice");
+                    .collect::<Vec<_>>()
+                    .into_iter()
+                    .map(|h| h.join().unwrap())
+                    .collect()
+            });
+            let mut flat: Vec<WorkItem> = all.into_iter().flatten().collect();
+            assert_eq!(flat.len(), total, "steal_half={steal_half}");
+            flat.sort_unstable_by_key(|i| (i.root, i.j_start));
+            flat.dedup();
+            assert_eq!(flat.len(), total, "item claimed twice (steal_half={steal_half})");
+        }
     }
 
     #[test]
@@ -237,7 +334,7 @@ mod tests {
     fn empty_scheduler_terminates() {
         let sched = WorkStealingScheduler::new(vec![]);
         assert!(sched.pop(0).is_none());
-        let sched = WorkStealingScheduler::new(seed_queues(&[0, 0]));
+        let sched = WorkStealingScheduler::half_deque(seed_queues(&[0, 0]));
         assert!(sched.pop(1).is_none());
     }
 }

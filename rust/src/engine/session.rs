@@ -1,4 +1,4 @@
-//! Session layer: load once, query many times.
+//! Session layer: load once, query many times, mutate in place.
 //!
 //! [`Session::load`] performs every input-only computation once — the
 //! Section 6 degree-descending relabeling, the relabeled CSR (with its
@@ -8,10 +8,23 @@
 //! coordinator rebuilt ordering, queue and counters on every call, so a
 //! serving deployment paid full setup cost per request.
 //!
+//! Since the stream layer landed, a session is also *live*:
+//! [`Session::maintain`] registers a (size, direction) counter,
+//! [`Session::apply_edges`] applies a batch of edge insertions/deletions
+//! by patching the delta overlay and re-enumerating only the instances
+//! containing each changed edge, and [`Session::maintained_counts`] reads
+//! the incrementally maintained per-vertex counts back. Full counts keep
+//! working while deltas are pending: the enumerators run over the overlay
+//! view (same code path, see [`crate::graph::GraphProbe`]) with a freshly
+//! budgeted partition, and once the overlay outgrows
+//! `SessionConfig::compact_ratio` the CSR is rebuilt (counting-sort
+//! bucket build) and the cached partitions refreshed.
+//!
 //! Every query picks its own motif size, direction, scheduler and sink;
 //! the per-query state (scheduler queues, counter arrays) is rebuilt from
 //! the cached partition in O(items + n·classes), with no graph passes.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
@@ -20,9 +33,13 @@ use anyhow::{bail, Result};
 use crate::coordinator::metrics::{RunReport, WorkerMetrics};
 use crate::graph::csr::Graph;
 use crate::graph::ordering::VertexOrdering;
+use crate::graph::GraphProbe;
 use crate::motifs::counter::{CounterMode, MotifCounts, SlotMapper};
 use crate::motifs::iso::NO_SLOT;
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
+use crate::stream::delta::{reenumerate_edge, EdgeChange, MaintainedCounts};
+use crate::stream::overlay::{DeltaOverlay, OverlayView};
+use crate::stream::{DeltaOp, DeltaReport, EdgeDelta};
 
 use super::partition::PartitionSet;
 use super::scheduler::{Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
@@ -38,11 +55,15 @@ pub struct SessionConfig {
     pub reorder: bool,
     /// Max (root, neighbor) units per work item.
     pub max_units_per_item: usize,
+    /// Rebuild the CSR once the delta overlay's side-list occupancy
+    /// exceeds this fraction of the base adjacency (checked per
+    /// `apply_edges` batch). 0.0 compacts after every dirty batch.
+    pub compact_ratio: f64,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { workers: 0, reorder: true, max_units_per_item: 64 }
+        SessionConfig { workers: 0, reorder: true, max_units_per_item: 64, compact_ratio: 0.25 }
     }
 }
 
@@ -66,15 +87,26 @@ impl Default for CountQuery {
     }
 }
 
-/// A graph loaded for repeated motif counting: cached ordering, relabeled
-/// CSR and partition set.
+/// A graph loaded for repeated motif counting and live edge updates:
+/// cached ordering, relabeled CSR, partition set, delta overlay and
+/// incrementally maintained counters.
 pub struct Session {
     directed: bool,
     n: usize,
     ordering: VertexOrdering,
-    /// Relabeled graph (processing ids).
+    /// Relabeled base graph (processing ids); patched by `overlay`.
     h: Graph,
     partitions: PartitionSet,
+    /// Pending edge patches over `h` (empty when no deltas applied since
+    /// the last compaction).
+    overlay: DeltaOverlay,
+    /// Incrementally maintained per-vertex counters (processing ids).
+    maintained: Vec<MaintainedCounts>,
+    /// Requested worker count (pre-clamping), reused on compaction.
+    workers: usize,
+    max_units_per_item: usize,
+    compact_ratio: f64,
+    compactions: usize,
     setup_secs: f64,
     served: AtomicUsize,
 }
@@ -97,13 +129,20 @@ impl Session {
         };
         let h = ordering.apply(graph);
         let workers = resolve_workers(cfg.workers);
-        let partitions = PartitionSet::build(&h, workers, cfg.max_units_per_item.max(1));
+        let max_units_per_item = cfg.max_units_per_item.max(1);
+        let partitions = PartitionSet::build(&h, workers, max_units_per_item);
         Session {
             directed: graph.directed,
             n,
             ordering,
             h,
             partitions,
+            overlay: DeltaOverlay::new(),
+            maintained: Vec::new(),
+            workers,
+            max_units_per_item,
+            compact_ratio: cfg.compact_ratio.max(0.0),
+            compactions: 0,
             setup_secs: t0.elapsed().as_secs_f64(),
             served: AtomicUsize::new(0),
         }
@@ -128,6 +167,26 @@ impl Session {
         &self.partitions
     }
 
+    /// Pending overlay side-list entries (0 when fully compacted).
+    pub fn overlay_entries(&self) -> usize {
+        self.overlay.entries()
+    }
+
+    /// Overlay occupancy relative to the base CSR.
+    pub fn overlay_ratio(&self) -> f64 {
+        self.overlay.ratio(&self.h)
+    }
+
+    /// CSR rebuilds performed by `apply_edges` so far.
+    pub fn compactions(&self) -> usize {
+        self.compactions
+    }
+
+    /// The incrementally maintained counters.
+    pub fn maintained(&self) -> &[MaintainedCounts] {
+        &self.maintained
+    }
+
     /// Count all k-motifs per vertex for one query.
     pub fn count(&self, query: &CountQuery) -> Result<MotifCounts> {
         Ok(self.count_with_report(query)?.0)
@@ -135,7 +194,9 @@ impl Session {
 
     /// As [`Session::count`], also returning the run report. The report's
     /// `setup_secs`/`setup_reused` show whether this call paid for setup
-    /// (first query) or served from cache.
+    /// (first query) or served from cache. While deltas are pending the
+    /// enumeration runs over the overlay view with a freshly budgeted
+    /// partition (the cached one has stale unit counts).
     pub fn count_with_report(&self, query: &CountQuery) -> Result<(MotifCounts, RunReport)> {
         if query.direction == Direction::Directed && !self.directed {
             bail!("directed motif counting requested on an undirected graph");
@@ -145,35 +206,16 @@ impl Session {
         let k = query.size.k();
         let mapper = SlotMapper::new(k, query.direction);
         let n_classes = mapper.n_classes();
-        let workers = self.partitions.n_shards();
 
-        let scheduler: Box<dyn Scheduler> = match query.scheduler {
-            SchedulerMode::SharedCursor => {
-                Box::new(SharedCursorScheduler::new(self.partitions.all_items()))
-            }
-            SchedulerMode::WorkStealing => {
-                Box::new(WorkStealingScheduler::new(self.partitions.item_lists()))
-            }
-        };
-        let ranges = self.partitions.ranges();
-        let sink = make_sink(query.sink, self.n, n_classes, &ranges);
+        let (per_vertex_proc, instances, metrics, queue_items, queue_units) =
+            if self.overlay.is_empty() {
+                self.run_query(&self.h, &self.partitions, query, &mapper)
+            } else {
+                let view = OverlayView::new(&self.h, &self.overlay);
+                let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
+                self.run_query(&view, &partitions, query, &mapper)
+            };
 
-        let sched_ref: &dyn Scheduler = scheduler.as_ref();
-        let sink_ref: &dyn CounterSink = sink.as_ref();
-        let h = &self.h;
-        let size = query.size;
-        let dir = query.direction;
-        let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    let mapper = &mapper;
-                    s.spawn(move || worker_loop(h, size, dir, mapper, sched_ref, sink_ref, w))
-                })
-                .collect();
-            handles.into_iter().map(|t| t.join().expect("worker panicked")).collect()
-        });
-
-        let (per_vertex_proc, instances) = sink.finish();
         // map back to original vertex ids
         let per_vertex = self.ordering.unapply_rows(&per_vertex_proc, n_classes);
         let elapsed = start.elapsed().as_secs_f64();
@@ -192,12 +234,233 @@ impl Session {
             workers: metrics,
             total_instances: instances,
             elapsed_secs: elapsed,
-            queue_items: self.partitions.total_items,
-            queue_units: self.partitions.total_units,
+            queue_items,
+            queue_units,
             setup_secs: if reused { 0.0 } else { self.setup_secs },
             setup_reused: reused,
         };
         Ok((counts, report))
+    }
+
+    /// Run one query over any probe surface (the cached CSR or the
+    /// overlay view), returning processing-order rows.
+    fn run_query<G: GraphProbe + Sync>(
+        &self,
+        h: &G,
+        partitions: &PartitionSet,
+        query: &CountQuery,
+        mapper: &SlotMapper,
+    ) -> (Vec<u64>, u64, Vec<WorkerMetrics>, usize, usize) {
+        let workers = partitions.n_shards();
+        let scheduler: Box<dyn Scheduler> = match query.scheduler {
+            SchedulerMode::SharedCursor => {
+                Box::new(SharedCursorScheduler::new(partitions.all_items()))
+            }
+            SchedulerMode::WorkStealing => {
+                Box::new(WorkStealingScheduler::new(partitions.item_lists()))
+            }
+            SchedulerMode::WorkStealingBatch => {
+                Box::new(WorkStealingScheduler::half_deque(partitions.item_lists()))
+            }
+        };
+        let ranges = partitions.ranges();
+        let sink = make_sink(query.sink, self.n, mapper.n_classes(), &ranges);
+
+        let sched_ref: &dyn Scheduler = scheduler.as_ref();
+        let sink_ref: &dyn CounterSink = sink.as_ref();
+        let size = query.size;
+        let dir = query.direction;
+        let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    s.spawn(move || worker_loop(h, size, dir, mapper, sched_ref, sink_ref, w))
+                })
+                .collect();
+            handles.into_iter().map(|t| t.join().expect("worker panicked")).collect()
+        });
+
+        let (per_vertex_proc, instances) = sink.finish();
+        (per_vertex_proc, instances, metrics, partitions.total_items, partitions.total_units)
+    }
+
+    // ----------------------------------------------------------- streaming
+
+    /// Register an incrementally maintained per-vertex counter for (size,
+    /// direction): one full count now, per-edge deltas afterwards.
+    /// Idempotent for an already-maintained pair.
+    pub fn maintain(&mut self, size: MotifSize, direction: Direction) -> Result<()> {
+        if direction == Direction::Directed && !self.directed {
+            bail!("directed motif maintenance requested on an undirected graph");
+        }
+        if self.maintained.iter().any(|m| m.size() == size && m.direction() == direction) {
+            return Ok(());
+        }
+        let mapper = SlotMapper::new(size.k(), direction);
+        let query = CountQuery { size, direction, ..Default::default() };
+        let (rows, instances, _, _, _) = if self.overlay.is_empty() {
+            self.run_query(&self.h, &self.partitions, &query, &mapper)
+        } else {
+            let view = OverlayView::new(&self.h, &self.overlay);
+            let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
+            self.run_query(&view, &partitions, &query, &mapper)
+        };
+        self.maintained.push(MaintainedCounts::new(size, direction, rows, instances));
+        Ok(())
+    }
+
+    /// Read a maintained counter back as [`MotifCounts`] (original vertex
+    /// ids). `None` when (size, direction) was never [`Session::maintain`]ed.
+    pub fn maintained_counts(&self, size: MotifSize, direction: Direction) -> Option<MotifCounts> {
+        let m = self.maintained.iter().find(|m| m.size() == size && m.direction() == direction)?;
+        let rows = self.ordering.unapply_rows(m.per_vertex(), m.n_classes());
+        Some(m.to_counts(self.n, rows, 0.0))
+    }
+
+    /// Apply a batch of edge insertions/deletions (original vertex ids)
+    /// without reloading: patch the overlay, re-enumerate only the motif
+    /// instances containing each changed edge, and fold the deltas into
+    /// every maintained counter. Ops on self-loops, out-of-range vertices,
+    /// already-present inserts and absent deletes are counted as skipped.
+    /// Compaction (CSR rebuild + partition refresh) triggers at the end of
+    /// a batch that pushed the overlay past `compact_ratio`.
+    pub fn apply_edges(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaReport> {
+        let t0 = Instant::now();
+        let mut report = DeltaReport::default();
+        let mut touched: HashSet<u32> = HashSet::new();
+        let n = self.n as u32;
+        for d in deltas {
+            if d.u == d.v || d.u >= n || d.v >= n {
+                report.skipped_invalid += 1;
+                continue;
+            }
+            let pu = self.ordering.new_of_old[d.u as usize];
+            let pv = self.ordering.new_of_old[d.v as usize];
+            let bits_pre = {
+                let view = OverlayView::new(&self.h, &self.overlay);
+                if self.directed {
+                    (view.out_has_edge(pu, pv) as u8) | ((view.out_has_edge(pv, pu) as u8) << 1)
+                } else if view.und_has_edge(pu, pv) {
+                    0b11
+                } else {
+                    0
+                }
+            };
+            match d.op {
+                DeltaOp::Insert => {
+                    if self.directed {
+                        if bits_pre & 0b01 != 0 {
+                            report.skipped_duplicate += 1;
+                            continue;
+                        }
+                        // patch first: the union state (und pair present)
+                        // is the post state for insertions
+                        self.overlay.insert_directed(&self.h, pu, pv, bits_pre == 0);
+                        let ch =
+                            EdgeChange { u: pu, v: pv, bits_pre, bits_post: bits_pre | 0b01 };
+                        self.reenumerate(&ch, &mut report, &mut touched);
+                    } else {
+                        if bits_pre != 0 {
+                            report.skipped_duplicate += 1;
+                            continue;
+                        }
+                        self.overlay.insert_undirected(&self.h, pu, pv);
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0, bits_post: 0b11 };
+                        self.reenumerate(&ch, &mut report, &mut touched);
+                    }
+                    report.inserted += 1;
+                }
+                DeltaOp::Delete => {
+                    if self.directed {
+                        if bits_pre & 0b01 == 0 {
+                            report.skipped_missing += 1;
+                            continue;
+                        }
+                        let bits_post = bits_pre & 0b10;
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre, bits_post };
+                        if bits_post == 0 {
+                            // the pair's last direction goes away: the pre
+                            // state is the union state — enumerate, THEN patch
+                            self.reenumerate(&ch, &mut report, &mut touched);
+                            self.overlay.delete_directed(&self.h, pu, pv, true);
+                        } else {
+                            // reciprocal edge remains: und structure intact
+                            self.overlay.delete_directed(&self.h, pu, pv, false);
+                            self.reenumerate(&ch, &mut report, &mut touched);
+                        }
+                    } else {
+                        if bits_pre == 0 {
+                            report.skipped_missing += 1;
+                            continue;
+                        }
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0b11, bits_post: 0 };
+                        self.reenumerate(&ch, &mut report, &mut touched);
+                        self.overlay.delete_undirected(&self.h, pu, pv);
+                    }
+                    report.deleted += 1;
+                }
+            }
+        }
+
+        if !self.overlay.is_empty() && self.overlay.ratio(&self.h) > self.compact_ratio {
+            self.h = self.overlay.compact(&self.h);
+            self.partitions = PartitionSet::build(&self.h, self.workers, self.max_units_per_item);
+            self.compactions += 1;
+            report.compactions += 1;
+        }
+        report.touched_vertices = touched.len();
+        report.overlay_entries = self.overlay.entries();
+        report.overlay_ratio = self.overlay.ratio(&self.h);
+        report.elapsed_secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+
+    fn reenumerate(
+        &mut self,
+        ch: &EdgeChange,
+        report: &mut DeltaReport,
+        touched: &mut HashSet<u32>,
+    ) {
+        if self.maintained.is_empty() {
+            return;
+        }
+        let view = OverlayView::new(&self.h, &self.overlay);
+        let stats = reenumerate_edge(
+            &view,
+            self.directed,
+            ch,
+            &mut self.maintained,
+            self.workers,
+            self.max_units_per_item,
+            touched,
+        );
+        report.reenumerated_units += stats.units;
+        report.reenumerated_sets += stats.sets;
+    }
+
+    /// Materialize the session's current graph (base + overlay) back into
+    /// ORIGINAL vertex ids — the reload-and-recount oracle used by tests
+    /// and `vdmc stream --verify`.
+    pub fn snapshot_graph(&self) -> Graph {
+        let proc = self.overlay.materialize(&self.h);
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        if self.directed {
+            for (u, v) in proc.out.edges() {
+                edges.push((
+                    self.ordering.old_of_new[u as usize],
+                    self.ordering.old_of_new[v as usize],
+                ));
+            }
+        } else {
+            for (u, v) in proc.und.edges() {
+                if u < v {
+                    edges.push((
+                        self.ordering.old_of_new[u as usize],
+                        self.ordering.old_of_new[v as usize],
+                    ));
+                }
+            }
+        }
+        Graph::from_edges(self.n, &edges, self.directed)
     }
 }
 
@@ -209,10 +472,11 @@ fn resolve_workers(requested: usize) -> usize {
     }
 }
 
-/// Worker inner loop shared by every scheduler × sink combination: claim
-/// items until drained, feed every enumerated instance to the sink handle.
-fn worker_loop(
-    h: &Graph,
+/// Worker inner loop shared by every scheduler × sink combination and
+/// every probe surface (static CSR or delta overlay): claim items until
+/// drained, feed every enumerated instance to the sink handle.
+fn worker_loop<G: GraphProbe + Sync>(
+    h: &G,
     size: MotifSize,
     dir: Direction,
     mapper: &SlotMapper,
@@ -230,6 +494,7 @@ fn worker_loop(
         m.units += item.units() as u64;
         if claim.stolen {
             m.steals += 1;
+            m.steal_batch += claim.batch as u64;
         }
         for j in item.j_start..item.j_end {
             match size {
@@ -318,7 +583,11 @@ mod tests {
                 sink: CounterMode::Atomic,
             })
             .unwrap();
-        for scheduler in [SchedulerMode::SharedCursor, SchedulerMode::WorkStealing] {
+        for scheduler in [
+            SchedulerMode::SharedCursor,
+            SchedulerMode::WorkStealing,
+            SchedulerMode::WorkStealingBatch,
+        ] {
             for sink in [CounterMode::Atomic, CounterMode::Sharded, CounterMode::PartitionLocal] {
                 let got = session
                     .count(&CountQuery {
@@ -340,13 +609,20 @@ mod tests {
         let session = Session::load(&g);
         let err = session.count(&CountQuery::default()).unwrap_err();
         assert!(err.to_string().contains("undirected"));
+        let mut session = session;
+        let err = session.maintain(MotifSize::Three, Direction::Directed).unwrap_err();
+        assert!(err.to_string().contains("undirected"));
     }
 
     #[test]
     fn report_units_cover_graph_for_all_schedulers() {
         let g = generators::barabasi_albert(300, 3, 17);
         let session = Session::load_with(&g, &SessionConfig { workers: 3, ..Default::default() });
-        for scheduler in [SchedulerMode::SharedCursor, SchedulerMode::WorkStealing] {
+        for scheduler in [
+            SchedulerMode::SharedCursor,
+            SchedulerMode::WorkStealing,
+            SchedulerMode::WorkStealingBatch,
+        ] {
             let (_, report) = session
                 .count_with_report(&CountQuery {
                     size: MotifSize::Three,
@@ -361,5 +637,135 @@ mod tests {
             let worker_instances: u64 = report.workers.iter().map(|w| w.instances).sum();
             assert_eq!(worker_instances, report.total_instances);
         }
+    }
+
+    #[test]
+    fn batch_stealing_records_batch_mass() {
+        // star graph: all units on the hub shard, every other worker steals
+        let g = generators::star(600);
+        let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+        let (_, report) = session
+            .count_with_report(&CountQuery {
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                scheduler: SchedulerMode::WorkStealingBatch,
+                ..Default::default()
+            })
+            .unwrap();
+        // steal-batch mass >= steal count whenever any steal happened
+        assert!(report.total_steal_batch() >= report.total_steals());
+    }
+
+    // -------------------------------------------------------- streaming
+
+    #[test]
+    fn apply_edges_matches_reload_small() {
+        let g = generators::gnp_directed(40, 0.1, 13);
+        let mut session =
+            Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        session.maintain(MotifSize::Four, Direction::Undirected).unwrap();
+
+        let deltas = vec![
+            EdgeDelta::insert(0, 5),
+            EdgeDelta::insert(5, 0),
+            EdgeDelta::delete(0, 5),
+            EdgeDelta::insert(7, 8),
+            EdgeDelta::delete(1, 2),
+            EdgeDelta::insert(3, 3),    // self loop: invalid
+            EdgeDelta::insert(0, 1000), // out of range: invalid
+        ];
+        let report = session.apply_edges(&deltas).unwrap();
+        assert!(report.skipped_invalid >= 2);
+
+        let snapshot = session.snapshot_graph();
+        let fresh = Session::load_with(&snapshot, &SessionConfig::default());
+        for (size, dir) in
+            [(MotifSize::Three, Direction::Directed), (MotifSize::Four, Direction::Undirected)]
+        {
+            let maintained = session.maintained_counts(size, dir).unwrap();
+            let want = fresh.count(&CountQuery { size, direction: dir, ..Default::default() }).unwrap();
+            assert_eq!(maintained.per_vertex, want.per_vertex, "{size:?} {dir:?}");
+            assert_eq!(maintained.total_instances, want.total_instances);
+        }
+    }
+
+    #[test]
+    fn dirty_count_equals_compacted_count() {
+        let g = generators::gnp_directed(50, 0.08, 21);
+        // never compact automatically
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, compact_ratio: f64::INFINITY, ..Default::default() },
+        );
+        let deltas: Vec<EdgeDelta> =
+            (0..20).map(|i| EdgeDelta::insert(i, (i * 7 + 3) % 50)).collect();
+        session.apply_edges(&deltas).unwrap();
+        assert!(session.overlay_entries() > 0, "overlay should be dirty");
+
+        let q = CountQuery { size: MotifSize::Four, direction: Direction::Directed, ..Default::default() };
+        let dirty = session.count(&q).unwrap();
+
+        let snapshot = session.snapshot_graph();
+        let fresh = Session::load(&snapshot);
+        let want = fresh.count(&q).unwrap();
+        assert_eq!(dirty.per_vertex, want.per_vertex);
+        assert_eq!(dirty.total_instances, want.total_instances);
+    }
+
+    #[test]
+    fn compaction_triggers_and_preserves_counts() {
+        let g = generators::gnp_undirected(40, 0.1, 9);
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, compact_ratio: 0.0, ..Default::default() },
+        );
+        session.maintain(MotifSize::Three, Direction::Undirected).unwrap();
+        let deltas: Vec<EdgeDelta> =
+            (0..10u32).map(|i| EdgeDelta::insert(i, (i + 13) % 40)).collect();
+        let report = session.apply_edges(&deltas).unwrap();
+        if report.applied() > 0 {
+            assert_eq!(report.compactions, 1, "ratio 0.0 must compact every dirty batch");
+            assert_eq!(session.overlay_entries(), 0);
+        }
+        let snapshot = session.snapshot_graph();
+        let fresh = Session::load(&snapshot);
+        let q = CountQuery {
+            size: MotifSize::Three,
+            direction: Direction::Undirected,
+            ..Default::default()
+        };
+        assert_eq!(
+            session.maintained_counts(MotifSize::Three, Direction::Undirected).unwrap().per_vertex,
+            fresh.count(&q).unwrap().per_vertex
+        );
+    }
+
+    #[test]
+    fn maintain_is_idempotent_and_listed() {
+        let g = generators::gnp_directed(30, 0.1, 2);
+        let mut session = Session::load(&g);
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        assert_eq!(session.maintained().len(), 1);
+        assert!(session.maintained_counts(MotifSize::Four, Direction::Directed).is_none());
+        let c = session.maintained_counts(MotifSize::Three, Direction::Directed).unwrap();
+        let want = session
+            .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
+            .unwrap();
+        assert_eq!(c.per_vertex, want.per_vertex);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let g = generators::star(8);
+        let mut session = Session::load(&g);
+        session.maintain(MotifSize::Three, Direction::Undirected).unwrap();
+        let before = session.maintained_counts(MotifSize::Three, Direction::Undirected).unwrap();
+        let report = session.apply_edges(&[]).unwrap();
+        assert_eq!(report.applied(), 0);
+        assert_eq!(report.reenumerated_units, 0);
+        let after = session.maintained_counts(MotifSize::Three, Direction::Undirected).unwrap();
+        assert_eq!(before.per_vertex, after.per_vertex);
     }
 }

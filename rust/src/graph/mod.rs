@@ -1,6 +1,12 @@
 //! Graph substrate: the paper's cache-aware CSR structure (Section 4.2),
 //! builders, text IO, random-graph generators and the degree-descending
 //! vertex ordering of Section 6.
+//!
+//! [`GraphProbe`] is the abstract probe surface the k-BFS enumerators run
+//! against: the static [`Graph`] (three CSR views) implements it with
+//! zero-cost slice iterators, and the stream layer's
+//! `stream::OverlayView` implements it by merging per-vertex delta
+//! side-lists over the same CSR — one enumeration code path for both.
 
 pub mod builder;
 pub mod csr;
@@ -11,3 +17,143 @@ pub mod ordering;
 pub use builder::GraphBuilder;
 pub use csr::{Csr, Graph};
 pub use ordering::VertexOrdering;
+
+/// Abstract adjacency probe surface of a VDMC graph: the undirected view
+/// G_U the BFS walks, plus the directed out/in views the motif-id bits are
+/// read from. All neighbor iterators yield strictly ascending vertex ids
+/// (the CSR sort invariant the proper-BFS candidate sets rely on) and are
+/// `Clone` so the enumerators can replay suffixes without re-probing.
+pub trait GraphProbe {
+    /// Neighbor iterator: ascending vertex ids, cheap to clone.
+    type Nbrs<'a>: Iterator<Item = u32> + Clone
+    where
+        Self: 'a;
+
+    /// Number of vertices.
+    fn n(&self) -> usize;
+
+    /// All undirected neighbors of `v`, ascending.
+    fn und_neighbors(&self, v: u32) -> Self::Nbrs<'_>;
+
+    /// Undirected neighbors of `v` strictly greater than `after` (the
+    /// proper-BFS candidate set of Section 4.1).
+    fn und_above(&self, v: u32, after: u32) -> Self::Nbrs<'_>;
+
+    /// All out-neighbors of `v`, ascending.
+    fn out_neighbors(&self, v: u32) -> Self::Nbrs<'_>;
+
+    /// All in-neighbors of `v`, ascending.
+    fn in_neighbors(&self, v: u32) -> Self::Nbrs<'_>;
+
+    /// Out-neighbors of `v` strictly greater than `after`.
+    fn out_above(&self, v: u32, after: u32) -> Self::Nbrs<'_>;
+
+    /// In-neighbors of `v` strictly greater than `after`.
+    fn in_above(&self, v: u32, after: u32) -> Self::Nbrs<'_>;
+
+    /// Undirected membership probe.
+    fn und_has_edge(&self, u: u32, v: u32) -> bool;
+
+    /// Directed membership probe u -> v.
+    fn out_has_edge(&self, u: u32, v: u32) -> bool;
+
+    /// Undirected degree of `v`.
+    fn und_degree(&self, v: u32) -> usize {
+        self.und_neighbors(v).count()
+    }
+
+    /// Number of undirected neighbors of `v` strictly greater than `after`
+    /// (= the proper work-unit count when `after == v`).
+    fn und_degree_above(&self, v: u32, after: u32) -> usize {
+        self.und_above(v, after).count()
+    }
+}
+
+impl GraphProbe for Graph {
+    type Nbrs<'a>
+        = std::iter::Copied<std::slice::Iter<'a, u32>>
+    where
+        Self: 'a;
+
+    #[inline]
+    fn n(&self) -> usize {
+        self.und.n()
+    }
+
+    #[inline]
+    fn und_neighbors(&self, v: u32) -> Self::Nbrs<'_> {
+        self.und.neighbors(v).iter().copied()
+    }
+
+    #[inline]
+    fn und_above(&self, v: u32, after: u32) -> Self::Nbrs<'_> {
+        self.und.neighbors_above(v, after).iter().copied()
+    }
+
+    #[inline]
+    fn out_neighbors(&self, v: u32) -> Self::Nbrs<'_> {
+        self.out.neighbors(v).iter().copied()
+    }
+
+    #[inline]
+    fn in_neighbors(&self, v: u32) -> Self::Nbrs<'_> {
+        self.inn.neighbors(v).iter().copied()
+    }
+
+    #[inline]
+    fn out_above(&self, v: u32, after: u32) -> Self::Nbrs<'_> {
+        self.out.neighbors_above(v, after).iter().copied()
+    }
+
+    #[inline]
+    fn in_above(&self, v: u32, after: u32) -> Self::Nbrs<'_> {
+        self.inn.neighbors_above(v, after).iter().copied()
+    }
+
+    #[inline]
+    fn und_has_edge(&self, u: u32, v: u32) -> bool {
+        self.und.has_edge(u, v)
+    }
+
+    #[inline]
+    fn out_has_edge(&self, u: u32, v: u32) -> bool {
+        self.out.has_edge(u, v)
+    }
+
+    #[inline]
+    fn und_degree(&self, v: u32) -> usize {
+        self.und.degree(v)
+    }
+
+    #[inline]
+    fn und_degree_above(&self, v: u32, after: u32) -> usize {
+        self.und.neighbors_above(v, after).len()
+    }
+}
+
+#[cfg(test)]
+mod probe_trait_tests {
+    use super::*;
+
+    #[test]
+    fn graph_probe_matches_csr_views() {
+        let g = Graph::from_edges(5, &[(0, 1), (1, 0), (0, 2), (3, 0), (2, 4)], true);
+        for v in 0..5u32 {
+            let und: Vec<u32> = GraphProbe::und_neighbors(&g, v).collect();
+            assert_eq!(und, g.und.neighbors(v));
+            let out: Vec<u32> = g.out_neighbors(v).collect();
+            assert_eq!(out, g.out.neighbors(v));
+            let inn: Vec<u32> = g.in_neighbors(v).collect();
+            assert_eq!(inn, g.inn.neighbors(v));
+            for after in 0..5u32 {
+                let above: Vec<u32> = g.und_above(v, after).collect();
+                assert_eq!(above, g.und.neighbors_above(v, after));
+                assert_eq!(g.und_degree_above(v, after), above.len());
+            }
+            assert_eq!(GraphProbe::und_degree(&g, v), g.und.degree(v));
+        }
+        assert!(GraphProbe::und_has_edge(&g, 0, 3));
+        assert!(GraphProbe::out_has_edge(&g, 3, 0));
+        assert!(!GraphProbe::out_has_edge(&g, 0, 3));
+    }
+}

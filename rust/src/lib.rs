@@ -10,7 +10,10 @@
 //!   ([`engine`]: partition → scheduler → sink → session) distributing
 //!   (root, neighbor) work units (Section 6), baselines, the Eq. 7.4
 //!   theory, and the Section 10 toolbox. `coordinator` is the one-shot
-//!   compatibility wrapper over the engine.
+//!   compatibility wrapper over the engine. The [`stream`] layer keeps a
+//!   loaded session live: `Session::apply_edges` maintains per-vertex
+//!   motif counts under edge insert/delete batches by re-enumerating only
+//!   the instances containing each changed edge over a delta overlay.
 //! - **L2/L1 (python/compile, build-time only)**: JAX graphs composing
 //!   Pallas kernels (instance-histogram matmul, isomorph-projection
 //!   matmul, dense matrix baseline), AOT-lowered to HLO text by
@@ -62,6 +65,7 @@ pub mod engine;
 pub mod graph;
 pub mod motifs;
 pub mod runtime;
+pub mod stream;
 pub mod theory;
 pub mod toolbox;
 pub mod util;

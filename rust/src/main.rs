@@ -3,11 +3,14 @@
 //! Subcommands:
 //!   generate   write a random graph to an edge-list file
 //!   count      count per-vertex 3-/4-motifs of a graph file
+//!   stream     replay an edge timeline incrementally over a live session
 //!   validate   Fig. 3 experiment: G(n,p) counts vs Eq. 7.4 theory
 //!   toolbox    Section 10 measures (k-core, pagerank, ...)
 //!   info       graph statistics
 //!   artifacts  check/compile the PJRT artifacts and print the manifest
 
+use std::fs::File;
+use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
@@ -18,6 +21,7 @@ use vdmc::graph::{generators, io};
 use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
+use vdmc::stream;
 use vdmc::theory;
 use vdmc::toolbox;
 use vdmc::util::cli::{App, Args, Command};
@@ -42,7 +46,7 @@ fn app() -> App {
                 .opt("k", "motif size (3 or 4)", Some("3"))
                 .opt("workers", "worker threads (0 = all cores)", Some("0"))
                 .opt("counter", "atomic | sharded | partition", Some("sharded"))
-                .opt("scheduler", "cursor | stealing", Some("stealing"))
+                .opt("scheduler", "cursor | stealing | stealing-batch", Some("stealing"))
                 .opt("repeat", "serve the query N times from one session", Some("1"))
                 .opt("out", "write per-vertex counts TSV here", None)
                 .flag("directed", "interpret the file as a directed graph")
@@ -51,6 +55,17 @@ fn app() -> App {
                 .flag("baseline-naive", "use the brute-force baseline instead")
                 .flag("baseline-slow", "use the python-parity baseline instead")
                 .flag("json", "emit a JSON report to stdout"),
+            Command::new("stream", "replay an edge timeline incrementally over a live session")
+                .opt("input", "base edge list path", None)
+                .opt("timeline", "timeline file: `+ u v` / `- u v` per line", None)
+                .opt("batch", "edge ops per apply_edges batch", Some("100"))
+                .opt("k", "maintained motif sizes: 3 | 4 | both", Some("both"))
+                .opt("workers", "worker threads (0 = all cores)", Some("0"))
+                .opt("compact-ratio", "overlay/base occupancy triggering compaction", Some("0.25"))
+                .opt("out", "write JSON report rows here instead of stdout", None)
+                .flag("directed", "interpret the graph and timeline as directed")
+                .flag("undirected-motifs", "classify on the undirected view")
+                .flag("verify", "recount from scratch at the end and compare"),
             Command::new("validate", "Fig. 3: G(n,p) measurement vs Eq. 7.4 theory")
                 .opt("n", "vertex count", Some("1000"))
                 .opt("p", "edge probability", Some("0.1"))
@@ -90,6 +105,7 @@ fn main() -> ExitCode {
     let run = match cmd.name {
         "generate" => cmd_generate(&args),
         "count" => cmd_count(&args),
+        "stream" => cmd_stream(&args),
         "validate" => cmd_validate(&args),
         "toolbox" => cmd_toolbox(&args),
         "info" => cmd_info(&args),
@@ -174,11 +190,12 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
             _ => CounterMode::Sharded,
         };
         let scheduler = match args
-            .one_of("scheduler", &["cursor", "stealing"])
+            .one_of("scheduler", &["cursor", "stealing", "stealing-batch"])
             .map_err(anyhow::Error::msg)?
             .as_str()
         {
             "cursor" => SchedulerMode::SharedCursor,
+            "stealing-batch" => SchedulerMode::WorkStealingBatch,
             _ => SchedulerMode::WorkStealing,
         };
         let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
@@ -234,6 +251,99 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         let totals = counts.class_instances();
         for (c, t) in counts.class_ids.iter().zip(&totals) {
             println!("m{c}\t{t}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_stream(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let timeline_path =
+        args.get("timeline").ok_or_else(|| anyhow::anyhow!("--timeline is required"))?;
+    let deltas = stream::load_timeline(Path::new(timeline_path))?;
+    let batch: usize = args.req("batch").map_err(anyhow::Error::msg)?;
+    let direction = parse_direction(args);
+    let sizes: Vec<MotifSize> =
+        match args.one_of("k", &["3", "4", "both"]).map_err(anyhow::Error::msg)?.as_str() {
+            "3" => vec![MotifSize::Three],
+            "4" => vec![MotifSize::Four],
+            _ => vec![MotifSize::Three, MotifSize::Four],
+        };
+
+    let mut session = Session::load_with(
+        &g,
+        &SessionConfig {
+            workers: args.req("workers").map_err(anyhow::Error::msg)?,
+            compact_ratio: args.req("compact-ratio").map_err(anyhow::Error::msg)?,
+            ..Default::default()
+        },
+    );
+    for &size in &sizes {
+        session.maintain(size, direction)?;
+    }
+    eprintln!(
+        "loaded {} (n={}, m={}), maintaining {:?} {:?} motifs; replaying {} ops in batches of {batch}",
+        args.get("input").unwrap_or("-"),
+        g.n(),
+        g.m(),
+        sizes.iter().map(|s| s.k()).collect::<Vec<_>>(),
+        direction,
+        deltas.len(),
+    );
+
+    let mut out: Box<dyn std::io::Write> = match args.get("out") {
+        Some(p) => Box::new(BufWriter::new(File::create(p)?)),
+        None => Box::new(std::io::stdout().lock()),
+    };
+    let mut write_err: Option<std::io::Error> = None;
+    let summary = stream::replay(&mut session, &deltas, batch, |i, report, s| {
+        if write_err.is_some() {
+            return; // sink is gone (e.g. EPIPE); keep replaying, stop writing
+        }
+        let mut j = report.to_json();
+        j.set("batch", i);
+        let mut totals = Json::obj();
+        for m in s.maintained() {
+            let dir = match m.direction() {
+                Direction::Directed => "directed",
+                Direction::Undirected => "undirected",
+            };
+            totals.set(&format!("k{}_{dir}", m.size().k()), m.instances());
+        }
+        j.set("instances", totals);
+        if let Err(e) = writeln!(out, "{}", j.to_string_compact()) {
+            write_err = Some(e);
+        }
+    })?;
+    if let Some(e) = write_err {
+        return Err(anyhow::Error::msg(e).context("writing report row"));
+    }
+    out.flush()?;
+    eprintln!(
+        "replayed {} ops in {} batches: {} inserted, {} deleted, {} skipped, \
+         {} re-enumerated units / {} sets, {} compactions, {:.3}s",
+        deltas.len(),
+        summary.batches,
+        summary.inserted,
+        summary.deleted,
+        summary.skipped,
+        summary.reenumerated_units,
+        summary.reenumerated_sets,
+        summary.compactions,
+        summary.elapsed_secs,
+    );
+
+    if args.flag("verify") {
+        let fresh = Session::load(&session.snapshot_graph());
+        for &size in &sizes {
+            let want = fresh.count(&CountQuery { size, direction, ..Default::default() })?;
+            let got = session.maintained_counts(size, direction).expect("maintained");
+            anyhow::ensure!(
+                got.per_vertex == want.per_vertex && got.total_instances == want.total_instances,
+                "verification FAILED for k={}: maintained counts diverge from reload-and-recount",
+                size.k()
+            );
+            eprintln!("verify k={}: OK ({} instances match a full recount)", size.k(), want.total_instances);
         }
     }
     Ok(())

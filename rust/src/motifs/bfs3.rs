@@ -13,12 +13,15 @@
 //! proper neighbor — mirroring the paper's GPU grid decomposition
 //! (Section 6) so block loads stay even for heavy-tailed graphs.
 //!
+//! The enumerators are generic over [`GraphProbe`]: the same code runs on
+//! the static CSR and, unmodified, on the stream layer's delta overlay.
+//!
 //! Hot path: every pair of the emitted tuple touches the root or the
 //! first-level vertex `a`, so the raw motif id is assembled entirely from
 //! the O(1) epoch-marked direction bits of [`EnumCtx`] — zero per-instance
 //! binary searches (EXPERIMENTS.md §Perf).
 
-use crate::graph::csr::Graph;
+use crate::graph::GraphProbe;
 
 use super::ids::MotifId;
 use super::probe::NeighborMarks;
@@ -60,14 +63,14 @@ fn raw3(ctx: &EnumCtx, a: u32, b: u32) -> MotifId {
 
 /// Number of proper work units for a root = its proper-neighbor count.
 #[inline]
-pub fn unit_count(g: &Graph, root: u32) -> usize {
-    g.und.neighbors_above(root, root).len()
+pub fn unit_count<G: GraphProbe>(g: &G, root: u32) -> usize {
+    g.und_degree_above(root, root)
 }
 
 /// Enumerate all proper 3-motifs of `root` whose first (lowest-index)
 /// depth-1 vertex is the `j`-th proper neighbor.
-pub fn enumerate_unit(
-    g: &Graph,
+pub fn enumerate_unit<G: GraphProbe>(
+    g: &G,
     dir: Direction,
     root: u32,
     j: usize,
@@ -75,19 +78,20 @@ pub fn enumerate_unit(
     emit: &mut impl FnMut(&[u32; 3], MotifId),
 ) {
     ctx.root_marks.mark(g, dir, root);
-    let proper = g.und.neighbors_above(root, root);
-    let a = proper[j];
+    let mut proper = g.und_above(root, root);
+    let a = proper.nth(j).expect("unit index beyond proper-neighbor count");
     ctx.a_marks.mark(g, dir, a);
 
     // Structure A (avg depth 2/3): both at depth 1, within-level index
-    // order (Lemma 3) makes a < b.
-    for &b in &proper[j + 1..] {
+    // order (Lemma 3) makes a < b — `proper` now iterates exactly the
+    // neighbors after a.
+    for b in proper {
         emit(&[root, a, b], raw3(ctx, a, b));
     }
 
     // Structure B (avg depth 1): b at depth 2 through a. Minimal-depth
     // assignment (Lemma 3): b must not also be a first-level neighbor.
-    for &b in g.und.neighbors_above(a, root) {
+    for b in g.und_above(a, root) {
         if ctx.root_marks.contains(b) {
             continue; // depth(b) = 1: belongs to structure A
         }
@@ -96,8 +100,8 @@ pub fn enumerate_unit(
 }
 
 /// Enumerate all proper 3-motifs rooted at `root` (all units).
-pub fn enumerate_root(
-    g: &Graph,
+pub fn enumerate_root<G: GraphProbe>(
+    g: &G,
     dir: Direction,
     root: u32,
     ctx: &mut EnumCtx,
@@ -110,7 +114,11 @@ pub fn enumerate_root(
 
 /// Serial full enumeration over all roots (tests/baseline; the coordinator
 /// parallelizes the same unit loop).
-pub fn enumerate_all(g: &Graph, dir: Direction, emit: &mut impl FnMut(&[u32; 3], MotifId)) {
+pub fn enumerate_all<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    emit: &mut impl FnMut(&[u32; 3], MotifId),
+) {
     let mut ctx = EnumCtx::new(g.n());
     for root in 0..g.n() as u32 {
         enumerate_root(g, dir, root, &mut ctx, emit);
@@ -120,6 +128,7 @@ pub fn enumerate_all(g: &Graph, dir: Direction, emit: &mut impl FnMut(&[u32; 3],
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::Graph;
     use crate::graph::generators;
     use std::collections::HashSet;
 

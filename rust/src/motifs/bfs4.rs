@@ -20,16 +20,19 @@
 //! describes — so no special case is needed. `tests::lemma4_five_cycle`
 //! pins this.
 //!
+//! Like `bfs3`, everything is generic over [`GraphProbe`] so the stream
+//! overlay reuses this exact code path.
+//!
 //! Hot path: of the six vertex pairs, five touch root or `a` and read
 //! O(1) mark bits; only the (y, z) pair between the last two vertices
 //! needs an adjacency probe — and for S4 even its undirected membership
 //! is already known (EXPERIMENTS.md §Perf).
 
-use crate::graph::csr::Graph;
+use crate::graph::GraphProbe;
 
 use super::bfs3::EnumCtx;
 use super::ids::MotifId;
-use super::probe::{pair_bits, DirBits, MergedNeighbors};
+use super::probe::{merged_above, pair_bits, DirBits};
 use super::Direction;
 
 /// Backwards-compatible alias: the per-worker scratch is the shared
@@ -39,9 +42,9 @@ pub use super::bfs3::EnumCtx as Scratch;
 /// Raw id of (root, a, y, z) from mark bits + one probed pair.
 /// Bit layout (MSB first): (0,1)(0,2)(0,3)(1,0)(1,2)(1,3)(2,0)(2,1)(2,3)(3,0)(3,1)(3,2).
 #[inline]
-fn raw4(
+fn raw4<G: GraphProbe>(
     ctx: &EnumCtx,
-    g: &Graph,
+    g: &G,
     dir: Direction,
     a: u32,
     y: u32,
@@ -78,8 +81,8 @@ fn raw4_with_yz(ctx: &EnumCtx, a: u32, y: u32, z: u32, yz: DirBits) -> MotifId {
 /// Enumerate all proper 4-motifs of `root` whose lowest-index first-level
 /// vertex is the `j`-th proper neighbor (the paper's (vertex, neighbor)
 /// GPU block).
-pub fn enumerate_unit(
-    g: &Graph,
+pub fn enumerate_unit<G: GraphProbe>(
+    g: &G,
     dir: Direction,
     root: u32,
     j: usize,
@@ -87,17 +90,18 @@ pub fn enumerate_unit(
     emit: &mut impl FnMut(&[u32; 4], MotifId),
 ) {
     ctx.root_marks.mark(g, dir, root);
-    let und = &g.und;
-    let proper = und.neighbors_above(root, root);
-    let a = proper[j];
+    let mut proper = g.und_above(root, root);
+    let a = proper.nth(j).expect("unit index beyond proper-neighbor count");
     ctx.a_marks.mark(g, dir, a);
-    let later = &proper[j + 1..];
+    // `proper` now iterates the neighbors after a; clones replay it.
+    let later = proper;
 
     // ---- S1 (avg depth 0.75): a < b < c all first-level. Per-pair
     // probes beat a N(b)-merge here at real-world degrees (measured —
     // EXPERIMENTS.md §Perf iteration 3).
-    for (bi, &b) in later.iter().enumerate() {
-        for &c in &later[bi + 1..] {
+    let mut bs = later.clone();
+    while let Some(b) = bs.next() {
+        for c in bs.clone() {
             emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
         }
     }
@@ -106,21 +110,21 @@ pub fn enumerate_unit(
     // Take the buffer out of ctx so ctx stays borrowable for raw4.
     let mut d2a = std::mem::take(&mut ctx.d2a);
     d2a.clear();
-    for &c in und.neighbors_above(a, root) {
+    for c in g.und_above(a, root) {
         if !ctx.root_marks.contains(c) {
             d2a.push(c);
         }
     }
 
     // ---- S2 (avg depth 1.0): pair (a, b), second-level c.
-    for &b in later {
+    for b in later {
         // c through a (c ∈ N(a): the (b, c) pair is the unknown one)
         for &c in &d2a {
             emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
         }
         // c through b only (c ∉ N(a) avoids double counting the set);
         // the merged iterator hands us the (b, c) bits for free
-        for (c, bc) in MergedNeighbors::above(g, dir, b, root) {
+        for (c, bc) in merged_above(g, dir, b, root) {
             if ctx.root_marks.contains(c) || ctx.a_marks.contains(c) {
                 continue;
             }
@@ -129,7 +133,7 @@ pub fn enumerate_unit(
     }
 
     // ---- S3 (avg depth 1.25): two second-level vertices through a.
-    // d2a is sorted (filtered from a sorted slice), giving c < d.
+    // d2a is sorted (filtered from a sorted iterator), giving c < d.
     for (ci, &c) in d2a.iter().enumerate() {
         for &d in &d2a[ci + 1..] {
             emit(&[root, a, c, d], raw4(ctx, g, dir, a, c, d, None));
@@ -140,7 +144,7 @@ pub fn enumerate_unit(
     // the Lemma 4 correction (see module docs); the merged iterator
     // carries the (c, d) bits.
     for &c in &d2a {
-        for (d, cd) in MergedNeighbors::above(g, dir, c, root) {
+        for (d, cd) in merged_above(g, dir, c, root) {
             if d == a || ctx.root_marks.contains(d) || ctx.a_marks.contains(d) {
                 continue;
             }
@@ -152,21 +156,25 @@ pub fn enumerate_unit(
 }
 
 /// All proper 4-motifs rooted at `root`.
-pub fn enumerate_root(
-    g: &Graph,
+pub fn enumerate_root<G: GraphProbe>(
+    g: &G,
     dir: Direction,
     root: u32,
     ctx: &mut EnumCtx,
     emit: &mut impl FnMut(&[u32; 4], MotifId),
 ) {
-    let units = g.und.neighbors_above(root, root).len();
+    let units = g.und_degree_above(root, root);
     for j in 0..units {
         enumerate_unit(g, dir, root, j, ctx, emit);
     }
 }
 
 /// Serial full enumeration (tests/baseline).
-pub fn enumerate_all(g: &Graph, dir: Direction, emit: &mut impl FnMut(&[u32; 4], MotifId)) {
+pub fn enumerate_all<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    emit: &mut impl FnMut(&[u32; 4], MotifId),
+) {
     let mut ctx = EnumCtx::new(g.n());
     for root in 0..g.n() as u32 {
         enumerate_root(g, dir, root, &mut ctx, emit);
@@ -176,6 +184,7 @@ pub fn enumerate_all(g: &Graph, dir: Direction, emit: &mut impl FnMut(&[u32; 4],
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::csr::Graph;
     use crate::graph::generators;
     use std::collections::HashSet;
 

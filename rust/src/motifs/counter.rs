@@ -20,7 +20,7 @@ use super::iso::{iso_table, ClassInfo, IsoTable, NO_SLOT};
 use super::Direction;
 
 /// Maps raw motif ids to compact class slots for a (k, direction) pair.
-#[derive(Debug)]
+#[derive(Debug, Clone)]
 pub struct SlotMapper {
     /// raw id -> compact slot (NO_SLOT when the id can't occur).
     slot_of_raw: Vec<u16>,

@@ -7,10 +7,16 @@
 //! merges, no binary searches) and stamps each neighbor with an epoch plus
 //! a 2-bit direction code. Re-marking is an epoch bump — no clearing.
 //!
+//! Everything here is generic over [`GraphProbe`], so the same merge
+//! machinery runs over the static CSR ([`crate::graph::Graph`]) and the
+//! stream layer's delta overlay without duplicated probe helpers.
+//!
 //! Memory: 5 bytes per vertex per mark set (u32 stamp + u8 bits), two sets
 //! per worker. EXPERIMENTS.md §Perf records the before/after.
 
-use crate::graph::csr::Graph;
+use std::iter::Peekable;
+
+use crate::graph::GraphProbe;
 
 use super::Direction;
 
@@ -38,7 +44,7 @@ impl NeighborMarks {
 
     /// Stamp N(center): one pass over the undirected row, with the out/in
     /// rows merged alongside to fill direction bits.
-    pub fn mark(&mut self, g: &Graph, dir: Direction, center: u32) {
+    pub fn mark<G: GraphProbe>(&mut self, g: &G, dir: Direction, center: u32) {
         if self.center == center && self.epoch != 0 {
             return;
         }
@@ -49,31 +55,29 @@ impl NeighborMarks {
             self.stamp.fill(0);
             self.epoch = 1;
         }
-        let und = g.und.neighbors(center);
         match dir {
             Direction::Undirected => {
-                for &v in und {
+                for v in g.und_neighbors(center) {
                     self.stamp[v as usize] = self.epoch;
                     self.bits[v as usize] = 0b11;
                 }
             }
             Direction::Directed => {
                 // merge the sorted out/in rows against the und row
-                let out = g.out.neighbors(center);
-                let inn = g.inn.neighbors(center);
-                let (mut oi, mut ii) = (0usize, 0usize);
-                for &v in und {
+                let mut out = g.out_neighbors(center).peekable();
+                let mut inn = g.in_neighbors(center).peekable();
+                for v in g.und_neighbors(center) {
                     let mut b = 0u8;
-                    while oi < out.len() && out[oi] < v {
-                        oi += 1;
+                    while out.peek().is_some_and(|&x| x < v) {
+                        out.next();
                     }
-                    if oi < out.len() && out[oi] == v {
+                    if out.peek() == Some(&v) {
                         b |= 0b01;
                     }
-                    while ii < inn.len() && inn[ii] < v {
-                        ii += 1;
+                    while inn.peek().is_some_and(|&x| x < v) {
+                        inn.next();
                     }
-                    if ii < inn.len() && inn[ii] == v {
+                    if inn.peek() == Some(&v) {
                         b |= 0b10;
                     }
                     debug_assert_ne!(b, 0, "und neighbor without any directed edge");
@@ -104,10 +108,16 @@ impl NeighborMarks {
 /// Probe an arbitrary (y, z) pair's direction bits. `known_und` short-cuts
 /// the undirected membership test when the caller already knows it.
 #[inline]
-pub fn pair_bits(g: &Graph, dir: Direction, y: u32, z: u32, known_und: Option<bool>) -> DirBits {
+pub fn pair_bits<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    y: u32,
+    z: u32,
+    known_und: Option<bool>,
+) -> DirBits {
     let present = match known_und {
         Some(p) => p,
-        None => g.und.has_edge(y, z),
+        None => g.und_has_edge(y, z),
     };
     if !present {
         return 0;
@@ -115,7 +125,7 @@ pub fn pair_bits(g: &Graph, dir: Direction, y: u32, z: u32, known_und: Option<bo
     match dir {
         Direction::Undirected => 0b11,
         Direction::Directed => {
-            (g.out.has_edge(y, z) as u8) | ((g.out.has_edge(z, y) as u8) << 1)
+            (g.out_has_edge(y, z) as u8) | ((g.out_has_edge(z, y) as u8) << 1)
         }
     }
 }
@@ -125,57 +135,54 @@ pub fn pair_bits(g: &Graph, dir: Direction, y: u32, z: u32, known_und: Option<bo
 /// merge over the und/out/in rows, so a loop over N(c) gets every pair's
 /// bits without any per-element binary search. Used by the S2-via-b and
 /// S4 inner loops where the probed pair's center is the loop's own
-/// iteration source.
-pub struct MergedNeighbors<'a> {
-    und: &'a [u32],
-    out: &'a [u32],
-    inn: &'a [u32],
-    ui: usize,
-    oi: usize,
-    ii: usize,
+/// iteration source. Build one with [`merged_above`].
+#[derive(Debug, Clone)]
+pub struct MergedNeighbors<I: Iterator<Item = u32>> {
+    und: I,
+    out: Peekable<I>,
+    inn: Peekable<I>,
     undirected: bool,
 }
 
-impl<'a> MergedNeighbors<'a> {
-    pub fn above(g: &'a Graph, dir: Direction, center: u32, after: u32) -> MergedNeighbors<'a> {
-        let und = g.und.neighbors_above(center, after);
-        match dir {
-            Direction::Undirected => {
-                MergedNeighbors { und, out: &[], inn: &[], ui: 0, oi: 0, ii: 0, undirected: true }
-            }
-            Direction::Directed => {
-                let out = g.out.neighbors(center);
-                let inn = g.inn.neighbors(center);
-                // advance out/in cursors to the first candidate once
-                let oi = out.partition_point(|&w| w <= after);
-                let ii = inn.partition_point(|&w| w <= after);
-                MergedNeighbors { und, out, inn, ui: 0, oi, ii, undirected: false }
-            }
-        }
+/// The merged (neighbor, bits) iterator of `center`'s neighbors above
+/// `after`, for any [`GraphProbe`] implementation.
+pub fn merged_above<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    center: u32,
+    after: u32,
+) -> MergedNeighbors<G::Nbrs<'_>> {
+    let undirected = dir == Direction::Undirected;
+    // undirected mode never consults the directed rows; gate them empty
+    let gate = if undirected { u32::MAX } else { after };
+    MergedNeighbors {
+        und: g.und_above(center, after),
+        out: g.out_above(center, gate).peekable(),
+        inn: g.in_above(center, gate).peekable(),
+        undirected,
     }
 }
 
-impl Iterator for MergedNeighbors<'_> {
+impl<I: Iterator<Item = u32>> Iterator for MergedNeighbors<I> {
     type Item = (u32, DirBits);
 
     #[inline]
     fn next(&mut self) -> Option<(u32, DirBits)> {
-        let v = *self.und.get(self.ui)?;
-        self.ui += 1;
+        let v = self.und.next()?;
         if self.undirected {
             return Some((v, 0b11));
         }
         let mut b = 0u8;
-        while self.oi < self.out.len() && self.out[self.oi] < v {
-            self.oi += 1;
+        while self.out.peek().is_some_and(|&x| x < v) {
+            self.out.next();
         }
-        if self.oi < self.out.len() && self.out[self.oi] == v {
+        if self.out.peek() == Some(&v) {
             b |= 0b01;
         }
-        while self.ii < self.inn.len() && self.inn[self.ii] < v {
-            self.ii += 1;
+        while self.inn.peek().is_some_and(|&x| x < v) {
+            self.inn.next();
         }
-        if self.ii < self.inn.len() && self.inn[self.ii] == v {
+        if self.inn.peek() == Some(&v) {
             b |= 0b10;
         }
         debug_assert_ne!(b, 0);
@@ -188,15 +195,15 @@ impl Iterator for MergedNeighbors<'_> {
 /// against the target list. Replaces one binary search per pair with a
 /// two-pointer walk: O(d_center + |targets|) total.
 #[inline]
-pub fn bits_against(
-    g: &Graph,
+pub fn bits_against<G: GraphProbe>(
+    g: &G,
     dir: Direction,
     center: u32,
     after: u32,
     targets: &[u32],
     mut f: impl FnMut(u32, DirBits),
 ) {
-    let mut it = MergedNeighbors::above(g, dir, center, after);
+    let mut it = merged_above(g, dir, center, after);
     let mut cur = it.next();
     for &t in targets {
         debug_assert!(t > after);
@@ -275,7 +282,7 @@ mod tests {
             marks.mark(&g, Direction::Directed, center);
             for after in [0u32, 5, 20] {
                 let merged: Vec<(u32, u8)> =
-                    MergedNeighbors::above(&g, Direction::Directed, center, after).collect();
+                    merged_above(&g, Direction::Directed, center, after).collect();
                 let direct: Vec<(u32, u8)> = g
                     .und
                     .neighbors_above(center, after)
@@ -300,7 +307,9 @@ mod tests {
                 });
                 let want: Vec<(u32, u8)> = targets
                     .iter()
-                    .map(|&t| (t, if t == center { 0 } else { pair_bits(&g, Direction::Directed, center, t, None) }))
+                    .map(|&t| {
+                        (t, if t == center { 0 } else { pair_bits(&g, Direction::Directed, center, t, None) })
+                    })
                     .collect();
                 // center itself can appear among targets; bits_against
                 // reports 0 there (no self loops)
@@ -314,7 +323,7 @@ mod tests {
         use crate::graph::generators;
         let g = generators::gnp_undirected(20, 0.3, 4);
         for center in 0..20u32 {
-            for (v, b) in MergedNeighbors::above(&g, Direction::Undirected, center, center) {
+            for (v, b) in merged_above(&g, Direction::Undirected, center, center) {
                 assert!(v > center);
                 assert_eq!(b, 0b11);
             }

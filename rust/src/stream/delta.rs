@@ -1,0 +1,734 @@
+//! Delta enumerator: re-enumerate only the motif instances containing a
+//! changed edge.
+//!
+//! Per-vertex motif counts have a provably local footprint under single
+//! edge changes: a k-set's class can only change if the set contains both
+//! endpoints of the changed pair (u,v), and any such set connected in the
+//! pre- or post-state is connected in the state where the undirected edge
+//! {u,v} is present (the union state G↑, a superset of both). So for each
+//! sequentially applied delta the enumerator walks the ≤2-hop closed
+//! neighborhood of {u,v} in G↑:
+//!
+//! - the **frontier** B = (N(u) ∪ N(v)) \ {u,v} — every 3-set is
+//!   {u,v,w} with w ∈ B;
+//! - 4-sets {u,v,x,y} split like the paper's minimal-depth structures:
+//!   both x,y ∈ B (pairs from the frontier, enumerated triangularly from
+//!   the lower index — the minimum-order ownership rule that makes each
+//!   unordered set appear exactly once), or x ∈ B with y ∈ N(x) \ B
+//!   reached only through x (owner = x, again unique).
+//!
+//! Only the (u,v) pair differs between pre and post state, so each
+//! candidate set is probed once in G↑ and its pre/post raw ids are
+//! composed from the known pre/post (u,v) direction bits. Sets connected
+//! pre are subtracted, sets connected post are added, into every
+//! maintained per-vertex counter.
+//!
+//! Work is split into the engine's `WorkItem` units (one per frontier
+//! entry, chunked) and, for hub edges whose frontier exceeds
+//! [`PARALLEL_UNITS`], scheduled through the engine scheduler with a pair
+//! of [`CounterSink`]s (subtractions / additions) per maintained counter.
+
+use std::collections::HashSet;
+
+use crate::engine::partition::WorkItem;
+use crate::engine::scheduler::{Scheduler, SharedCursorScheduler};
+use crate::engine::sink::{make_sink, CounterSink, WorkerHandle};
+use crate::graph::GraphProbe;
+use crate::motifs::counter::{CounterMode, MotifCounts, SlotMapper};
+use crate::motifs::iso::NO_SLOT;
+use crate::motifs::{Direction, MotifSize};
+
+/// Frontier size beyond which an edge's re-enumeration is scheduled over
+/// worker threads instead of run inline.
+pub(crate) const PARALLEL_UNITS: usize = 512;
+
+/// One applied edge change in processing ids: the (u,v) direction bits
+/// before and after (bit0 = u→v, bit1 = v→u; undirected graphs use
+/// 0b11/0). Everything else about the graph is identical pre/post.
+#[derive(Debug, Clone, Copy)]
+pub struct EdgeChange {
+    pub u: u32,
+    pub v: u32,
+    pub bits_pre: u8,
+    pub bits_post: u8,
+}
+
+impl EdgeChange {
+    /// Was the undirected pair present before the change?
+    pub fn und_pre(&self) -> bool {
+        self.bits_pre != 0
+    }
+
+    /// Is the undirected pair present after the change?
+    pub fn und_post(&self) -> bool {
+        self.bits_post != 0
+    }
+}
+
+/// An incrementally maintained per-vertex counter for one (size,
+/// direction) pair. Rows are in processing ids; the session unapplies the
+/// ordering when exposing them.
+#[derive(Debug, Clone)]
+pub struct MaintainedCounts {
+    size: MotifSize,
+    direction: Direction,
+    mapper: SlotMapper,
+    per_vertex: Vec<u64>,
+    instances: u64,
+}
+
+impl MaintainedCounts {
+    pub(crate) fn new(
+        size: MotifSize,
+        direction: Direction,
+        per_vertex: Vec<u64>,
+        instances: u64,
+    ) -> MaintainedCounts {
+        let mapper = SlotMapper::new(size.k(), direction);
+        debug_assert_eq!(per_vertex.len() % mapper.n_classes().max(1), 0);
+        MaintainedCounts { size, direction, mapper, per_vertex, instances }
+    }
+
+    pub fn size(&self) -> MotifSize {
+        self.size
+    }
+
+    pub fn direction(&self) -> Direction {
+        self.direction
+    }
+
+    pub fn instances(&self) -> u64 {
+        self.instances
+    }
+
+    pub(crate) fn per_vertex(&self) -> &[u64] {
+        &self.per_vertex
+    }
+
+    pub(crate) fn n_classes(&self) -> usize {
+        self.mapper.n_classes()
+    }
+
+    /// Build a [`MotifCounts`] from rows already mapped to original ids.
+    pub(crate) fn to_counts(&self, n: usize, per_vertex_orig: Vec<u64>, secs: f64) -> MotifCounts {
+        MotifCounts {
+            k: self.size.k(),
+            direction: self.direction,
+            n,
+            n_classes: self.mapper.n_classes(),
+            per_vertex: per_vertex_orig,
+            class_ids: self.mapper.class_ids(),
+            total_instances: self.instances,
+            elapsed_secs: secs,
+        }
+    }
+
+    fn apply_set(&mut self, sc: &SetChange<'_>) {
+        if self.size.k() != sc.verts.len() {
+            return;
+        }
+        let (pre, post) = sc.raws_for(self.direction);
+        if sc.pre_connected {
+            self.adjust(sc.verts, pre, false);
+        }
+        if sc.post_connected {
+            self.adjust(sc.verts, post, true);
+        }
+    }
+
+    fn adjust(&mut self, verts: &[u32], raw: u16, add: bool) {
+        let slot = self.mapper.slot(raw);
+        debug_assert_ne!(slot, NO_SLOT, "delta produced invalid raw id {raw}");
+        let c = self.mapper.n_classes();
+        for &v in verts {
+            let idx = v as usize * c + slot as usize;
+            if add {
+                self.per_vertex[idx] += 1;
+            } else {
+                debug_assert!(self.per_vertex[idx] > 0, "count underflow at v={v} slot={slot}");
+                self.per_vertex[idx] -= 1;
+            }
+        }
+        if add {
+            self.instances += 1;
+        } else {
+            debug_assert!(self.instances > 0);
+            self.instances -= 1;
+        }
+    }
+}
+
+/// One frontier vertex with its (u,w) / (v,w) direction bits in G↑.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct FrontierEntry {
+    pub w: u32,
+    pub buw: u8,
+    pub bvw: u8,
+}
+
+/// One candidate set with its pre/post raw ids and connectivity.
+struct SetChange<'a> {
+    verts: &'a [u32],
+    raw_dir_pre: u16,
+    raw_dir_post: u16,
+    raw_und_pre: u16,
+    raw_und_post: u16,
+    pre_connected: bool,
+    post_connected: bool,
+}
+
+impl SetChange<'_> {
+    /// The (pre, post) raw ids a counter of `direction` must use — the one
+    /// selection shared by the serial and parallel consumers.
+    fn raws_for(&self, direction: Direction) -> (u16, u16) {
+        match direction {
+            Direction::Directed => (self.raw_dir_pre, self.raw_dir_post),
+            Direction::Undirected => (self.raw_und_pre, self.raw_und_post),
+        }
+    }
+}
+
+/// Presence mask of a directed bit pair.
+#[inline]
+fn p(b: u8) -> u8 {
+    if b != 0 {
+        0b11
+    } else {
+        0
+    }
+}
+
+/// Direction bits of a pair known to be und-adjacent.
+#[inline]
+fn dir_bits_present<G: GraphProbe>(g: &G, directed: bool, y: u32, z: u32) -> u8 {
+    if !directed {
+        0b11
+    } else {
+        (g.out_has_edge(y, z) as u8) | ((g.out_has_edge(z, y) as u8) << 1)
+    }
+}
+
+/// Direction bits of an arbitrary pair (0 when not adjacent).
+#[inline]
+fn pair_dir_bits<G: GraphProbe>(g: &G, directed: bool, y: u32, z: u32) -> u8 {
+    if !g.und_has_edge(y, z) {
+        0
+    } else {
+        dir_bits_present(g, directed, y, z)
+    }
+}
+
+/// Raw 3-motif id of tuple (t0,t1,t2) from its pair bits (b01, b02, b12).
+/// Layout (MSB first): (0,1)(0,2)(1,0)(1,2)(2,0)(2,1).
+#[inline]
+fn raw3_of(b01: u8, b02: u8, b12: u8) -> u16 {
+    (((b01 & 1) as u16) << 5)
+        | (((b02 & 1) as u16) << 4)
+        | (((b01 >> 1) as u16) << 3)
+        | (((b12 & 1) as u16) << 2)
+        | (((b02 >> 1) as u16) << 1)
+        | ((b12 >> 1) as u16)
+}
+
+/// Raw 4-motif id of tuple (t0,t1,t2,t3) from its six pair bits. Layout
+/// (MSB first): (0,1)(0,2)(0,3)(1,0)(1,2)(1,3)(2,0)(2,1)(2,3)(3,0)(3,1)(3,2).
+#[inline]
+fn raw4_of(b01: u8, b02: u8, b03: u8, b12: u8, b13: u8, b23: u8) -> u16 {
+    (((b01 & 1) as u16) << 11)
+        | (((b02 & 1) as u16) << 10)
+        | (((b03 & 1) as u16) << 9)
+        | (((b01 >> 1) as u16) << 8)
+        | (((b12 & 1) as u16) << 7)
+        | (((b13 & 1) as u16) << 6)
+        | (((b02 >> 1) as u16) << 5)
+        | (((b12 >> 1) as u16) << 4)
+        | (((b23 & 1) as u16) << 3)
+        | (((b03 >> 1) as u16) << 2)
+        | (((b13 >> 1) as u16) << 1)
+        | ((b23 >> 1) as u16)
+}
+
+#[inline]
+fn connected3(uv: bool, uw: bool, vw: bool) -> bool {
+    (uv as u8 + uw as u8 + vw as u8) >= 2
+}
+
+fn connected4(uv: bool, ux: bool, uy: bool, vx: bool, vy: bool, xy: bool) -> bool {
+    let mut rows = [0u8; 4];
+    for (i, j, e) in [(0, 1, uv), (0, 2, ux), (0, 3, uy), (1, 2, vx), (1, 3, vy), (2, 3, xy)] {
+        if e {
+            rows[i] |= 1 << j;
+            rows[j] |= 1 << i;
+        }
+    }
+    let mut seen = 1u8;
+    let mut frontier = 1u8;
+    while frontier != 0 {
+        let mut next = 0u8;
+        for (i, r) in rows.iter().enumerate() {
+            if frontier & (1 << i) != 0 {
+                next |= r;
+            }
+        }
+        frontier = next & !seen;
+        seen |= frontier;
+    }
+    seen == 0b1111
+}
+
+/// Sorted frontier B = (N(u) ∪ N(v)) \ {u,v} in G↑, with each entry's
+/// (u,w) and (v,w) direction bits.
+pub(crate) fn frontier<G: GraphProbe>(
+    g: &G,
+    directed: bool,
+    u: u32,
+    v: u32,
+) -> Vec<FrontierEntry> {
+    let mut iu = g.und_neighbors(u).peekable();
+    let mut iv = g.und_neighbors(v).peekable();
+    let mut out = Vec::new();
+    loop {
+        let w = match (iu.peek().copied(), iv.peek().copied()) {
+            (None, None) => break,
+            (Some(a), None) => {
+                iu.next();
+                a
+            }
+            (None, Some(b)) => {
+                iv.next();
+                b
+            }
+            (Some(a), Some(b)) => {
+                if a <= b {
+                    iu.next();
+                }
+                if b <= a {
+                    iv.next();
+                }
+                a.min(b)
+            }
+        };
+        if w == u || w == v {
+            continue;
+        }
+        let buw = pair_dir_bits(g, directed, u, w);
+        let bvw = pair_dir_bits(g, directed, v, w);
+        debug_assert!(buw != 0 || bvw != 0, "frontier vertex adjacent to neither endpoint");
+        out.push(FrontierEntry { w, buw, bvw });
+    }
+    out
+}
+
+#[allow(clippy::too_many_arguments)]
+fn set4_change(
+    ch: &EdgeChange,
+    x: u32,
+    y: u32,
+    bux: u8,
+    bvx: u8,
+    buy: u8,
+    bvy: u8,
+    bxy: u8,
+    emit: &mut impl FnMut(&SetChange<'_>),
+) {
+    let (uxp, uyp, vxp, vyp, xyp) = (bux != 0, buy != 0, bvx != 0, bvy != 0, bxy != 0);
+    let pre_c = connected4(ch.und_pre(), uxp, uyp, vxp, vyp, xyp);
+    let post_c = connected4(ch.und_post(), uxp, uyp, vxp, vyp, xyp);
+    if !pre_c && !post_c {
+        return;
+    }
+    let verts = [ch.u, ch.v, x, y];
+    emit(&SetChange {
+        verts: &verts,
+        raw_dir_pre: raw4_of(ch.bits_pre, bux, buy, bvx, bvy, bxy),
+        raw_dir_post: raw4_of(ch.bits_post, bux, buy, bvx, bvy, bxy),
+        raw_und_pre: raw4_of(p(ch.bits_pre), p(bux), p(buy), p(bvx), p(bvy), p(bxy)),
+        raw_und_post: raw4_of(p(ch.bits_post), p(bux), p(buy), p(bvx), p(bvy), p(bxy)),
+        pre_connected: pre_c,
+        post_connected: post_c,
+    });
+}
+
+/// Enumerate every candidate set owned by the `j`-th frontier entry,
+/// returning the number of sets examined. All probes run against G↑.
+#[allow(clippy::too_many_arguments)]
+fn enumerate_unit_sets<G: GraphProbe>(
+    g: &G,
+    directed: bool,
+    ch: &EdgeChange,
+    blist: &[FrontierEntry],
+    j: usize,
+    need3: bool,
+    need4: bool,
+    emit: &mut impl FnMut(&SetChange<'_>),
+) -> u64 {
+    let x = blist[j];
+    let mut sets = 0u64;
+
+    if need3 {
+        sets += 1;
+        let (uxp, vxp) = (x.buw != 0, x.bvw != 0);
+        let pre_c = connected3(ch.und_pre(), uxp, vxp);
+        let post_c = connected3(ch.und_post(), uxp, vxp);
+        if pre_c || post_c {
+            let verts = [ch.u, ch.v, x.w];
+            emit(&SetChange {
+                verts: &verts,
+                raw_dir_pre: raw3_of(ch.bits_pre, x.buw, x.bvw),
+                raw_dir_post: raw3_of(ch.bits_post, x.buw, x.bvw),
+                raw_und_pre: raw3_of(p(ch.bits_pre), p(x.buw), p(x.bvw)),
+                raw_und_post: raw3_of(p(ch.bits_post), p(x.buw), p(x.bvw)),
+                pre_connected: pre_c,
+                post_connected: post_c,
+            });
+        }
+    }
+
+    if need4 {
+        // both in the frontier: owner is the lower index (triangular)
+        for y in &blist[j + 1..] {
+            sets += 1;
+            let bxy = pair_dir_bits(g, directed, x.w, y.w);
+            set4_change(ch, x.w, y.w, x.buw, x.bvw, y.buw, y.bvw, bxy, emit);
+        }
+        // second hop: y reached only through x (y ∉ B ∪ {u,v}), so its
+        // (u,y)/(v,y) bits are zero by construction
+        for y in g.und_neighbors(x.w) {
+            if y == ch.u || y == ch.v {
+                continue;
+            }
+            if blist.binary_search_by_key(&y, |e| e.w).is_ok() {
+                continue;
+            }
+            sets += 1;
+            let bxy = dir_bits_present(g, directed, x.w, y);
+            set4_change(ch, x.w, y, x.buw, x.bvw, 0, 0, bxy, emit);
+        }
+    }
+    sets
+}
+
+/// Per-edge re-enumeration stats.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct EdgeStats {
+    /// Frontier entries = (edge, candidate) work units.
+    pub units: u64,
+    /// Candidate sets examined.
+    pub sets: u64,
+}
+
+/// Re-enumerate the instances containing one changed edge and fold the
+/// subtractions/additions into every maintained counter. `g` must be the
+/// union state G↑ (und edge {u,v} present unless the change removed the
+/// pair's last direction — then the pre state, which equals G↑).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reenumerate_edge<G: GraphProbe + Sync>(
+    g: &G,
+    directed: bool,
+    ch: &EdgeChange,
+    maintained: &mut [MaintainedCounts],
+    workers: usize,
+    max_units_per_item: usize,
+    touched: &mut HashSet<u32>,
+) -> EdgeStats {
+    if maintained.is_empty() {
+        return EdgeStats::default();
+    }
+    let need3 = maintained.iter().any(|m| m.size == MotifSize::Three);
+    let need4 = maintained.iter().any(|m| m.size == MotifSize::Four);
+    let blist = frontier(g, directed, ch.u, ch.v);
+    touched.insert(ch.u);
+    touched.insert(ch.v);
+    for e in &blist {
+        touched.insert(e.w);
+    }
+    let units = blist.len() as u64;
+    if blist.is_empty() {
+        return EdgeStats { units, sets: 0 };
+    }
+
+    let sets = if workers > 1 && blist.len() >= PARALLEL_UNITS {
+        reenumerate_parallel(
+            g,
+            directed,
+            ch,
+            maintained,
+            &blist,
+            need3,
+            need4,
+            workers,
+            max_units_per_item,
+        )
+    } else {
+        let mut sets = 0u64;
+        for j in 0..blist.len() {
+            sets += enumerate_unit_sets(g, directed, ch, &blist, j, need3, need4, &mut |sc| {
+                for m in maintained.iter_mut() {
+                    m.apply_set(sc);
+                }
+            });
+        }
+        sets
+    };
+    EdgeStats { units, sets }
+}
+
+/// Hub-edge path: the frontier is chunked into engine [`WorkItem`]s,
+/// claimed through a scheduler, and every maintained counter accumulates
+/// into a (subtract, add) pair of sharded [`CounterSink`]s merged at the
+/// end — the same partition → scheduler → sink layering as full counts.
+///
+/// The sinks are sized to the delta's **domain** — the ≤2-hop closed
+/// neighborhood {u,v} ∪ B (∪ ⋃ N(x) when 4-motifs are maintained), the
+/// only vertices a candidate set can contain — not to the whole graph, so
+/// a hub edge on a multi-million-vertex graph allocates memory
+/// proportional to its locality, not to n.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn reenumerate_parallel<G: GraphProbe + Sync>(
+    g: &G,
+    directed: bool,
+    ch: &EdgeChange,
+    maintained: &mut [MaintainedCounts],
+    blist: &[FrontierEntry],
+    need3: bool,
+    need4: bool,
+    workers: usize,
+    max_units_per_item: usize,
+) -> u64 {
+    let max = max_units_per_item.max(1) as u32;
+    let total = blist.len() as u32;
+    let mut items = Vec::with_capacity(blist.len().div_ceil(max as usize));
+    let mut j = 0u32;
+    while j < total {
+        let end = (j + max).min(total);
+        items.push(WorkItem { root: ch.u, j_start: j, j_end: end });
+        j = end;
+    }
+    let sched = SharedCursorScheduler::new(items);
+
+    // compact vertex domain: every vertex any candidate set can touch
+    let mut domain: Vec<u32> = Vec::with_capacity(blist.len() + 2);
+    domain.push(ch.u);
+    domain.push(ch.v);
+    domain.extend(blist.iter().map(|e| e.w));
+    if need4 {
+        for e in blist {
+            domain.extend(g.und_neighbors(e.w));
+        }
+    }
+    domain.sort_unstable();
+    domain.dedup();
+    let dn = domain.len();
+
+    let sinks: Vec<(Box<dyn CounterSink>, Box<dyn CounterSink>)> = maintained
+        .iter()
+        .map(|m| {
+            let c = m.mapper.n_classes();
+            (
+                make_sink(CounterMode::Sharded, dn, c, &[]),
+                make_sink(CounterMode::Sharded, dn, c, &[]),
+            )
+        })
+        .collect();
+    let specs: Vec<(usize, Direction, &SlotMapper)> =
+        maintained.iter().map(|m| (m.size.k(), m.direction, &m.mapper)).collect();
+
+    let sets_total: u64 = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let sched = &sched;
+                let sinks = &sinks;
+                let specs = &specs;
+                let domain = &domain;
+                s.spawn(move || {
+                    let mut subs: Vec<Box<dyn WorkerHandle + '_>> =
+                        sinks.iter().map(|(sub, _)| sub.worker(w)).collect();
+                    let mut adds: Vec<Box<dyn WorkerHandle + '_>> =
+                        sinks.iter().map(|(_, add)| add.worker(w)).collect();
+                    let mut local_sets = 0u64;
+                    while let Some(claim) = sched.pop(w) {
+                        for j in claim.item.j_start..claim.item.j_end {
+                            local_sets += enumerate_unit_sets(
+                                g,
+                                directed,
+                                ch,
+                                blist,
+                                j as usize,
+                                need3,
+                                need4,
+                                &mut |sc| {
+                                    // translate to compact domain ids
+                                    let mut cv = [0u32; 4];
+                                    for (i, &pv) in sc.verts.iter().enumerate() {
+                                        cv[i] = domain
+                                            .binary_search(&pv)
+                                            .expect("candidate vertex outside delta domain")
+                                            as u32;
+                                    }
+                                    let cverts = &cv[..sc.verts.len()];
+                                    for (i, &(k, dir, mapper)) in specs.iter().enumerate() {
+                                        if k != sc.verts.len() {
+                                            continue;
+                                        }
+                                        let (pre, post) = sc.raws_for(dir);
+                                        if sc.pre_connected {
+                                            subs[i].record(cverts, mapper.slot(pre));
+                                        }
+                                        if sc.post_connected {
+                                            adds[i].record(cverts, mapper.slot(post));
+                                        }
+                                    }
+                                },
+                            );
+                        }
+                    }
+                    for h in &mut subs {
+                        h.flush();
+                    }
+                    for h in &mut adds {
+                        h.flush();
+                    }
+                    local_sets
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("delta worker panicked")).sum()
+    });
+    drop(specs); // release the shared borrow of `maintained` before merging
+
+    for (m, (sub_sink, add_sink)) in maintained.iter_mut().zip(sinks) {
+        let c = m.mapper.n_classes();
+        let (sub, sub_instances) = sub_sink.finish();
+        let (add, add_instances) = add_sink.finish();
+        debug_assert_eq!(sub.len(), dn * c);
+        // scatter the compact-domain rows back into the full counter
+        for (ci, &pv) in domain.iter().enumerate() {
+            let src = ci * c;
+            let dst = pv as usize * c;
+            for s in 0..c {
+                m.per_vertex[dst + s] = m.per_vertex[dst + s] + add[src + s] - sub[src + s];
+            }
+        }
+        m.instances = m.instances + add_instances - sub_instances;
+    }
+    sets_total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Graph;
+    use crate::graph::generators;
+
+    #[test]
+    fn connected4_cases() {
+        // path u-v, v-x, x-y
+        assert!(connected4(true, false, false, true, false, true));
+        // uv + xy only: two disconnected pairs
+        assert!(!connected4(true, false, false, false, false, true));
+        // star at u without uv edge but v adjacent to x
+        assert!(connected4(false, true, true, true, false, false));
+        assert!(!connected4(false, false, false, false, false, false));
+        // K4
+        assert!(connected4(true, true, true, true, true, true));
+    }
+
+    #[test]
+    fn connected3_cases() {
+        assert!(connected3(true, true, false));
+        assert!(connected3(false, true, true));
+        assert!(!connected3(true, false, false));
+        assert!(!connected3(false, true, false));
+    }
+
+    #[test]
+    fn raw_builders_match_bfs_encoders() {
+        use crate::motifs::ids::encode_adjacency;
+        let g = generators::gnp_directed(12, 0.4, 8);
+        let bits = |y: u32, z: u32| pair_dir_bits(&g, true, y, z);
+        for t in [[0u32, 3, 7], [1, 5, 9], [2, 4, 11]] {
+            let want = encode_adjacency(3, |i, j| g.out.has_edge(t[i], t[j]));
+            assert_eq!(raw3_of(bits(t[0], t[1]), bits(t[0], t[2]), bits(t[1], t[2])), want);
+        }
+        for t in [[0u32, 3, 7, 10], [1, 2, 5, 9]] {
+            let want = encode_adjacency(4, |i, j| g.out.has_edge(t[i], t[j]));
+            let got = raw4_of(
+                bits(t[0], t[1]),
+                bits(t[0], t[2]),
+                bits(t[0], t[3]),
+                bits(t[1], t[2]),
+                bits(t[1], t[3]),
+                bits(t[2], t[3]),
+            );
+            assert_eq!(got, want, "{t:?}");
+        }
+    }
+
+    #[test]
+    fn frontier_is_sorted_union_without_endpoints() {
+        let g = Graph::from_edges(6, &[(0, 1), (0, 2), (1, 3), (2, 1), (4, 0), (5, 1)], true);
+        let b = frontier(&g, true, 0, 1);
+        let ws: Vec<u32> = b.iter().map(|e| e.w).collect();
+        assert_eq!(ws, vec![2, 3, 4, 5]);
+        for e in &b {
+            assert!(e.buw != 0 || e.bvw != 0);
+        }
+        // entry 2: u=0 has 0->2 (bit0), v=1 has 2->1 (bit1 from v's view)
+        assert_eq!(b[0].buw, 0b01);
+        assert_eq!(b[0].bvw, 0b10);
+    }
+
+    #[test]
+    fn parallel_path_matches_serial() {
+        // a hub edge with a frontier large enough to matter
+        let g = generators::barabasi_albert(300, 5, 7);
+        // pick the hubbiest adjacent pair
+        let (u, v) = g
+            .und
+            .edges()
+            .max_by_key(|&(a, b)| g.und.degree(a) + g.und.degree(b))
+            .unwrap();
+        let ch = EdgeChange { u, v, bits_pre: 0b11, bits_post: 0 };
+        // large fake baselines so subtractions never underflow: u and v sit
+        // in every candidate set, so their cells take thousands of hits
+        let mk = || {
+            vec![
+                MaintainedCounts::new(
+                    MotifSize::Three,
+                    Direction::Undirected,
+                    vec![1_000_000u64; g.n() * 2],
+                    1_000_000_000,
+                ),
+                MaintainedCounts::new(
+                    MotifSize::Four,
+                    Direction::Undirected,
+                    vec![1_000_000u64; g.n() * 6],
+                    1_000_000_000,
+                ),
+            ]
+        };
+        let blist = frontier(&g, false, u, v);
+        assert!(!blist.is_empty());
+
+        let mut serial = mk();
+        let mut serial_sets = 0u64;
+        for j in 0..blist.len() {
+            serial_sets +=
+                enumerate_unit_sets(&g, false, &ch, &blist, j, true, true, &mut |sc| {
+                    for m in serial.iter_mut() {
+                        m.apply_set(sc);
+                    }
+                });
+        }
+
+        let mut parallel = mk();
+        let parallel_sets =
+            reenumerate_parallel(&g, false, &ch, &mut parallel, &blist, true, true, 4, 16);
+
+        assert_eq!(serial_sets, parallel_sets);
+        for (s, p) in serial.iter().zip(&parallel) {
+            assert_eq!(s.per_vertex, p.per_vertex, "{:?}", s.size);
+            assert_eq!(s.instances, p.instances);
+        }
+    }
+}

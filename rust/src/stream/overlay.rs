@@ -1,0 +1,588 @@
+//! Delta overlay: the immutable relabeled CSR plus sorted per-vertex
+//! insert/delete side-lists.
+//!
+//! [`DeltaOverlay`] holds only the patches (sparse: one [`Patch`] per
+//! touched vertex per view); [`OverlayView`] pairs the patches with the
+//! base [`Graph`] and implements [`GraphProbe`], so the `bfs3`/`bfs4`
+//! enumerators and the partition builder run unmodified over the patched
+//! graph. Every probe merges the base CSR row (a sorted slice) with the
+//! vertex's add-list minus its delete-list — strictly ascending output,
+//! the invariant the proper-BFS candidate sets rely on.
+//!
+//! Invariants kept by the mutation ops (`insert_*` / `delete_*`):
+//! `add ∩ base = ∅`, `del ⊆ base`, `add ∩ del = ∅` per row, and the three
+//! views stay mutually consistent (und = symmetrized out ∪ in). Rows whose
+//! patch empties are pruned, so `is_empty()` is exact and O(1).
+//!
+//! [`DeltaOverlay::compact`] materializes base + patches into a fresh CSR
+//! through [`Graph::from_edges`] — the counting-sort bucket build — and
+//! clears the patches; the session triggers it once the overlay-to-base
+//! occupancy [`DeltaOverlay::ratio`] exceeds its configured threshold.
+
+use std::collections::HashMap;
+
+use crate::graph::csr::{Csr, Graph};
+use crate::graph::GraphProbe;
+
+const NONE: &[u32] = &[];
+
+/// Sorted insert/delete side-lists of one adjacency row.
+#[derive(Debug, Clone, Default)]
+pub struct Patch {
+    add: Vec<u32>,
+    del: Vec<u32>,
+}
+
+impl Patch {
+    fn is_empty(&self) -> bool {
+        self.add.is_empty() && self.del.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.add.len() + self.del.len()
+    }
+
+    /// Make `x` present in the patched row. `in_base`: the base row
+    /// already contains `x` (so its absence must come from `del`).
+    fn insert(&mut self, x: u32, in_base: bool) {
+        if in_base {
+            if let Ok(i) = self.del.binary_search(&x) {
+                self.del.remove(i);
+            }
+        } else if let Err(i) = self.add.binary_search(&x) {
+            self.add.insert(i, x);
+        }
+    }
+
+    /// Make `x` absent from the patched row.
+    fn remove(&mut self, x: u32, in_base: bool) {
+        if in_base {
+            if let Err(i) = self.del.binary_search(&x) {
+                self.del.insert(i, x);
+            }
+        } else if let Ok(i) = self.add.binary_search(&x) {
+            self.add.remove(i);
+        }
+    }
+}
+
+type PatchMap = HashMap<u32, Patch>;
+
+fn patch_row(map: &mut PatchMap, key: u32, f: impl FnOnce(&mut Patch)) {
+    let p = map.entry(key).or_default();
+    f(p);
+    let empty = p.is_empty();
+    if empty {
+        map.remove(&key);
+    }
+}
+
+/// Sparse edge patches over a base graph (patches only — pair with the
+/// base via [`OverlayView`] to probe).
+#[derive(Debug, Default)]
+pub struct DeltaOverlay {
+    out: PatchMap,
+    inn: PatchMap,
+    und: PatchMap,
+}
+
+impl DeltaOverlay {
+    pub fn new() -> DeltaOverlay {
+        DeltaOverlay::default()
+    }
+
+    /// True when no patches are pending (probes equal the base graph).
+    pub fn is_empty(&self) -> bool {
+        self.out.is_empty() && self.inn.is_empty() && self.und.is_empty()
+    }
+
+    /// Total side-list entries across all views — the overlay occupancy.
+    pub fn entries(&self) -> usize {
+        let rows = |m: &PatchMap| m.values().map(Patch::len).sum::<usize>();
+        rows(&self.out) + rows(&self.inn) + rows(&self.und)
+    }
+
+    /// Overlay occupancy relative to the base adjacency size (und rows).
+    pub fn ratio(&self, base: &Graph) -> f64 {
+        self.entries() as f64 / base.und.m().max(1) as f64
+    }
+
+    /// Record directed edge u→v as present. Caller guarantees it is
+    /// currently absent; `creates_und` = the undirected pair {u,v} was
+    /// absent too (no reciprocal edge).
+    pub fn insert_directed(&mut self, base: &Graph, u: u32, v: u32, creates_und: bool) {
+        debug_assert!(base.directed);
+        let in_base = base.out.has_edge(u, v);
+        patch_row(&mut self.out, u, |p| p.insert(v, in_base));
+        patch_row(&mut self.inn, v, |p| p.insert(u, in_base));
+        if creates_und {
+            let in_base_und = base.und.has_edge(u, v);
+            patch_row(&mut self.und, u, |p| p.insert(v, in_base_und));
+            patch_row(&mut self.und, v, |p| p.insert(u, in_base_und));
+        }
+    }
+
+    /// Record directed edge u→v as absent. Caller guarantees it is
+    /// currently present; `removes_und` = no reciprocal edge remains.
+    pub fn delete_directed(&mut self, base: &Graph, u: u32, v: u32, removes_und: bool) {
+        debug_assert!(base.directed);
+        let in_base = base.out.has_edge(u, v);
+        patch_row(&mut self.out, u, |p| p.remove(v, in_base));
+        patch_row(&mut self.inn, v, |p| p.remove(u, in_base));
+        if removes_und {
+            let in_base_und = base.und.has_edge(u, v);
+            patch_row(&mut self.und, u, |p| p.remove(v, in_base_und));
+            patch_row(&mut self.und, v, |p| p.remove(u, in_base_und));
+        }
+    }
+
+    /// Record undirected edge {u,v} as present (undirected base graphs).
+    pub fn insert_undirected(&mut self, base: &Graph, u: u32, v: u32) {
+        debug_assert!(!base.directed);
+        let in_base = base.und.has_edge(u, v);
+        patch_row(&mut self.und, u, |p| p.insert(v, in_base));
+        patch_row(&mut self.und, v, |p| p.insert(u, in_base));
+    }
+
+    /// Record undirected edge {u,v} as absent (undirected base graphs).
+    pub fn delete_undirected(&mut self, base: &Graph, u: u32, v: u32) {
+        debug_assert!(!base.directed);
+        let in_base = base.und.has_edge(u, v);
+        patch_row(&mut self.und, u, |p| p.remove(v, in_base));
+        patch_row(&mut self.und, v, |p| p.remove(u, in_base));
+    }
+
+    /// Materialize base + patches into a fresh [`Graph`] (same vertex
+    /// space) via the counting-sort CSR build.
+    pub fn materialize(&self, base: &Graph) -> Graph {
+        let view = OverlayView { base, overlay: self };
+        let n = base.n();
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        if base.directed {
+            for u in 0..n as u32 {
+                for v in view.out_neighbors(u) {
+                    edges.push((u, v));
+                }
+            }
+        } else {
+            for u in 0..n as u32 {
+                for v in view.und_above(u, u) {
+                    edges.push((u, v));
+                }
+            }
+        }
+        Graph::from_edges(n, &edges, base.directed)
+    }
+
+    /// [`DeltaOverlay::materialize`], then drop every patch — the caller
+    /// replaces its base graph with the returned one.
+    pub fn compact(&mut self, base: &Graph) -> Graph {
+        let g = self.materialize(base);
+        self.out.clear();
+        self.inn.clear();
+        self.und.clear();
+        g
+    }
+}
+
+/// A base graph with its overlay: the [`GraphProbe`] the enumerators run
+/// against while deltas are pending.
+#[derive(Clone, Copy)]
+pub struct OverlayView<'a> {
+    pub base: &'a Graph,
+    pub overlay: &'a DeltaOverlay,
+}
+
+impl<'a> OverlayView<'a> {
+    pub fn new(base: &'a Graph, overlay: &'a DeltaOverlay) -> OverlayView<'a> {
+        OverlayView { base, overlay }
+    }
+
+    /// Directed rows alias the undirected view on undirected base graphs
+    /// (whose patches live only in the und map).
+    fn out_parts(&self) -> (&'a Csr, &'a PatchMap) {
+        if self.base.directed {
+            (&self.base.out, &self.overlay.out)
+        } else {
+            (&self.base.und, &self.overlay.und)
+        }
+    }
+
+    fn in_parts(&self) -> (&'a Csr, &'a PatchMap) {
+        if self.base.directed {
+            (&self.base.inn, &self.overlay.inn)
+        } else {
+            (&self.base.und, &self.overlay.und)
+        }
+    }
+}
+
+fn patch_slices<'a>(map: &'a PatchMap, v: u32) -> (&'a [u32], &'a [u32]) {
+    map.get(&v).map_or((NONE, NONE), |p| (p.add.as_slice(), p.del.as_slice()))
+}
+
+fn above(xs: &[u32], after: u32) -> &[u32] {
+    &xs[xs.partition_point(|&w| w <= after)..]
+}
+
+fn row_iter<'a>(csr: &'a Csr, map: &'a PatchMap, v: u32) -> OverlayIter<'a> {
+    let (add, del) = patch_slices(map, v);
+    OverlayIter::new(csr.neighbors(v), add, del)
+}
+
+fn row_iter_above<'a>(csr: &'a Csr, map: &'a PatchMap, v: u32, after: u32) -> OverlayIter<'a> {
+    let (add, del) = patch_slices(map, v);
+    OverlayIter::new(csr.neighbors_above(v, after), above(add, after), above(del, after))
+}
+
+fn row_has(csr: &Csr, map: &PatchMap, u: u32, v: u32) -> bool {
+    if let Some(p) = map.get(&u) {
+        if p.del.binary_search(&v).is_ok() {
+            return false;
+        }
+        if p.add.binary_search(&v).is_ok() {
+            return true;
+        }
+    }
+    csr.has_edge(u, v)
+}
+
+impl GraphProbe for OverlayView<'_> {
+    type Nbrs<'b>
+        = OverlayIter<'b>
+    where
+        Self: 'b;
+
+    #[inline]
+    fn n(&self) -> usize {
+        self.base.n()
+    }
+
+    fn und_neighbors(&self, v: u32) -> OverlayIter<'_> {
+        row_iter(&self.base.und, &self.overlay.und, v)
+    }
+
+    fn und_above(&self, v: u32, after: u32) -> OverlayIter<'_> {
+        row_iter_above(&self.base.und, &self.overlay.und, v, after)
+    }
+
+    fn out_neighbors(&self, v: u32) -> OverlayIter<'_> {
+        let (csr, map) = self.out_parts();
+        row_iter(csr, map, v)
+    }
+
+    fn in_neighbors(&self, v: u32) -> OverlayIter<'_> {
+        let (csr, map) = self.in_parts();
+        row_iter(csr, map, v)
+    }
+
+    fn out_above(&self, v: u32, after: u32) -> OverlayIter<'_> {
+        let (csr, map) = self.out_parts();
+        row_iter_above(csr, map, v, after)
+    }
+
+    fn in_above(&self, v: u32, after: u32) -> OverlayIter<'_> {
+        let (csr, map) = self.in_parts();
+        row_iter_above(csr, map, v, after)
+    }
+
+    fn und_has_edge(&self, u: u32, v: u32) -> bool {
+        row_has(&self.base.und, &self.overlay.und, u, v)
+    }
+
+    fn out_has_edge(&self, u: u32, v: u32) -> bool {
+        let (csr, map) = self.out_parts();
+        row_has(csr, map, u, v)
+    }
+
+    fn und_degree(&self, v: u32) -> usize {
+        let (add, del) = patch_slices(&self.overlay.und, v);
+        self.base.und.degree(v) + add.len() - del.len()
+    }
+
+    fn und_degree_above(&self, v: u32, after: u32) -> usize {
+        let (add, del) = patch_slices(&self.overlay.und, v);
+        self.base.und.neighbors_above(v, after).len() + above(add, after).len()
+            - above(del, after).len()
+    }
+}
+
+/// Ascending merge of (base row ∪ add-list) \ del-list. Holds raw slices
+/// plus cursors (rather than wrapped iterators) so that the common
+/// unpatched-row case keeps O(1) random skips — see [`Iterator::nth`].
+#[derive(Debug, Clone)]
+pub struct OverlayIter<'a> {
+    base: &'a [u32],
+    add: &'a [u32],
+    del: &'a [u32],
+    bi: usize,
+    ai: usize,
+    di: usize,
+}
+
+impl<'a> OverlayIter<'a> {
+    fn new(base: &'a [u32], add: &'a [u32], del: &'a [u32]) -> OverlayIter<'a> {
+        OverlayIter { base, add, del, bi: 0, ai: 0, di: 0 }
+    }
+}
+
+impl Iterator for OverlayIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        loop {
+            // add ∩ base = ∅, so a strict comparison picks a unique side
+            let take_base = match (self.base.get(self.bi), self.add.get(self.ai)) {
+                (None, None) => return None,
+                (Some(_), None) => true,
+                (None, Some(_)) => false,
+                (Some(&b), Some(&a)) => b < a,
+            };
+            if !take_base {
+                let a = self.add[self.ai];
+                self.ai += 1;
+                return Some(a);
+            }
+            let b = self.base[self.bi];
+            self.bi += 1;
+            while self.del.get(self.di).is_some_and(|&d| d < b) {
+                self.di += 1;
+            }
+            if self.del.get(self.di) == Some(&b) {
+                self.di += 1;
+                continue; // deleted base entry
+            }
+            return Some(b);
+        }
+    }
+
+    /// The enumerators seek to the j-th proper neighbor once per work
+    /// unit (`nth(j)`); rows without pending patches — the vast majority,
+    /// since patches are sparse — skip in O(1) like the slice iterator of
+    /// the static CSR, avoiding an O(d²) re-stepping regression on hub
+    /// roots during dirty counts.
+    fn nth(&mut self, n: usize) -> Option<u32> {
+        if self.ai == self.add.len() && self.di == self.del.len() {
+            let idx = self.bi + n;
+            if idx >= self.base.len() {
+                self.bi = self.base.len();
+                return None;
+            }
+            self.bi = idx + 1;
+            return Some(self.base[idx]);
+        }
+        for _ in 0..n {
+            self.next()?;
+        }
+        self.next()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::util::rng::Pcg32;
+    use std::collections::HashSet;
+
+    /// Apply random inserts/deletes to both an overlay and a reference
+    /// edge set, then check every probe against the reference graph.
+    fn check_against_reference(directed: bool, seed: u64) {
+        let n = 30usize;
+        let base = if directed {
+            generators::gnp_directed(n, 0.12, seed)
+        } else {
+            generators::gnp_undirected(n, 0.12, seed)
+        };
+        let mut reference: HashSet<(u32, u32)> = if directed {
+            base.out.edges().collect()
+        } else {
+            base.und.edges().filter(|&(u, v)| u < v).collect()
+        };
+        let mut ov = DeltaOverlay::new();
+        let mut rng = Pcg32::seeded(seed ^ 0xABCD);
+        for _ in 0..200 {
+            let u = rng.below(n as u32);
+            let v = rng.below(n as u32);
+            if u == v {
+                continue;
+            }
+            let key = if directed || u < v { (u, v) } else { (v, u) };
+            let view = OverlayView::new(&base, &ov);
+            if rng.bernoulli(0.5) {
+                // insert
+                if directed {
+                    if !view.out_has_edge(u, v) {
+                        let creates = !view.und_has_edge(u, v);
+                        ov.insert_directed(&base, u, v, creates);
+                        reference.insert(key);
+                    }
+                } else if !view.und_has_edge(u, v) {
+                    ov.insert_undirected(&base, u, v);
+                    reference.insert(key);
+                }
+            } else {
+                // delete
+                if directed {
+                    if view.out_has_edge(u, v) {
+                        let removes = !view.out_has_edge(v, u);
+                        ov.delete_directed(&base, u, v, removes);
+                        reference.remove(&key);
+                    }
+                } else if view.und_has_edge(u, v) {
+                    ov.delete_undirected(&base, u, v);
+                    reference.remove(&key);
+                }
+            }
+        }
+
+        let edges: Vec<(u32, u32)> = reference.iter().copied().collect();
+        let want = Graph::from_edges(n, &edges, directed);
+        let view = OverlayView::new(&base, &ov);
+
+        for v in 0..n as u32 {
+            let und: Vec<u32> = view.und_neighbors(v).collect();
+            assert_eq!(und, want.und.neighbors(v), "und row {v} (directed={directed})");
+            let out: Vec<u32> = view.out_neighbors(v).collect();
+            assert_eq!(out, want.out.neighbors(v), "out row {v}");
+            let inn: Vec<u32> = view.in_neighbors(v).collect();
+            assert_eq!(inn, want.inn.neighbors(v), "in row {v}");
+            assert_eq!(GraphProbe::und_degree(&view, v), want.und.degree(v));
+            for after in [0u32, 7, 15, n as u32 - 1] {
+                let above: Vec<u32> = view.und_above(v, after).collect();
+                assert_eq!(above, want.und.neighbors_above(v, after), "und above {v}/{after}");
+                assert_eq!(view.und_degree_above(v, after), above.len());
+                let oa: Vec<u32> = view.out_above(v, after).collect();
+                assert_eq!(oa, want.out.neighbors_above(v, after));
+                let ia: Vec<u32> = view.in_above(v, after).collect();
+                assert_eq!(ia, want.inn.neighbors_above(v, after));
+            }
+            for w in 0..n as u32 {
+                assert_eq!(view.und_has_edge(v, w), want.und.has_edge(v, w));
+                assert_eq!(view.out_has_edge(v, w), want.out.has_edge(v, w));
+            }
+        }
+
+        // materialize equals the reference, and compact resets patches
+        let mat = ov.materialize(&base);
+        assert_eq!(mat.und, want.und);
+        assert_eq!(mat.out, want.out);
+        assert_eq!(mat.inn, want.inn);
+        let compacted = ov.compact(&base);
+        assert!(ov.is_empty());
+        assert_eq!(ov.entries(), 0);
+        assert_eq!(compacted.und, want.und);
+    }
+
+    #[test]
+    fn random_patches_match_reference_directed() {
+        for seed in [1u64, 9, 23] {
+            check_against_reference(true, seed);
+        }
+    }
+
+    #[test]
+    fn random_patches_match_reference_undirected() {
+        for seed in [2u64, 14] {
+            check_against_reference(false, seed);
+        }
+    }
+
+    #[test]
+    fn iter_nth_matches_stepping() {
+        let base = generators::gnp_directed(25, 0.25, 8);
+        let mut ov = DeltaOverlay::new();
+        // patch a few rows so both the fast path (unpatched rows) and the
+        // fallback (patched rows) are exercised
+        for (u, v) in [(0u32, 7u32), (3, 9), (7, 0)] {
+            let view = OverlayView::new(&base, &ov);
+            if view.out_has_edge(u, v) {
+                let removes = !view.out_has_edge(v, u);
+                ov.delete_directed(&base, u, v, removes);
+            } else {
+                let creates = !view.und_has_edge(u, v);
+                ov.insert_directed(&base, u, v, creates);
+            }
+        }
+        let view = OverlayView::new(&base, &ov);
+        for v in 0..25u32 {
+            let stepped: Vec<u32> = view.und_neighbors(v).collect();
+            for j in 0..=stepped.len() {
+                let mut it = view.und_neighbors(v);
+                assert_eq!(it.nth(j), stepped.get(j).copied(), "row {v} nth({j})");
+                // cursor must land right after the consumed element
+                let rest: Vec<u32> = it.collect();
+                assert_eq!(rest, stepped[(j + 1).min(stepped.len())..], "row {v} tail after nth({j})");
+            }
+        }
+    }
+
+    #[test]
+    fn insert_then_delete_prunes_patches() {
+        let base = generators::gnp_directed(10, 0.1, 3);
+        let mut ov = DeltaOverlay::new();
+        let view_has = |ov: &DeltaOverlay, u, v| OverlayView::new(&base, ov).out_has_edge(u, v);
+        // pick a pair absent from the base
+        let (u, v) = (0u32, 5u32);
+        if !view_has(&ov, u, v) {
+            let creates = !OverlayView::new(&base, &ov).und_has_edge(u, v);
+            ov.insert_directed(&base, u, v, creates);
+            assert!(view_has(&ov, u, v));
+            assert!(!ov.is_empty());
+            let removes = !view_has(&ov, v, u);
+            ov.delete_directed(&base, u, v, removes);
+            assert!(!view_has(&ov, u, v));
+            assert!(ov.is_empty(), "insert+delete must cancel to an empty overlay");
+        }
+    }
+
+    #[test]
+    fn delete_base_edge_then_reinsert_cancels() {
+        let base = Graph::from_edges(4, &[(0, 1), (2, 3)], true);
+        let mut ov = DeltaOverlay::new();
+        ov.delete_directed(&base, 0, 1, true);
+        assert!(!OverlayView::new(&base, &ov).out_has_edge(0, 1));
+        assert!(!OverlayView::new(&base, &ov).und_has_edge(1, 0));
+        ov.insert_directed(&base, 0, 1, true);
+        assert!(OverlayView::new(&base, &ov).out_has_edge(0, 1));
+        assert!(ov.is_empty());
+    }
+
+    #[test]
+    fn reciprocal_edges_keep_und_row() {
+        // base has 0->1; adding 1->0 then deleting 0->1 keeps und {0,1}
+        let base = Graph::from_edges(3, &[(0, 1)], true);
+        let mut ov = DeltaOverlay::new();
+        ov.insert_directed(&base, 1, 0, false); // und pair already present
+        let view = OverlayView::new(&base, &ov);
+        assert!(view.out_has_edge(1, 0));
+        assert!(view.und_has_edge(0, 1));
+        ov.delete_directed(&base, 0, 1, false); // reciprocal remains
+        let view = OverlayView::new(&base, &ov);
+        assert!(!view.out_has_edge(0, 1));
+        assert!(view.out_has_edge(1, 0));
+        assert!(view.und_has_edge(0, 1));
+        assert!(view.und_has_edge(1, 0));
+    }
+
+    #[test]
+    fn ratio_tracks_occupancy() {
+        let base = generators::gnp_undirected(20, 0.2, 5);
+        let mut ov = DeltaOverlay::new();
+        assert_eq!(ov.ratio(&base), 0.0);
+        // insert a fresh edge: two und patch entries
+        let view = OverlayView::new(&base, &ov);
+        let (mut u, mut v) = (0u32, 1u32);
+        'outer: for a in 0..20u32 {
+            for b in (a + 1)..20u32 {
+                if !view.und_has_edge(a, b) {
+                    (u, v) = (a, b);
+                    break 'outer;
+                }
+            }
+        }
+        ov.insert_undirected(&base, u, v);
+        assert_eq!(ov.entries(), 2);
+        assert!(ov.ratio(&base) > 0.0);
+    }
+}

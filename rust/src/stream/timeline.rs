@@ -1,0 +1,172 @@
+//! Edge-timeline files and the batch replay driver.
+//!
+//! A timeline is a text file with one edge op per line:
+//!
+//! ```text
+//! # comments and blank lines are ignored
+//! + 17 42     insert edge 17 -> 42
+//! - 3 9       delete edge 3 -> 9
+//! ```
+//!
+//! [`replay`] feeds the ops through `Session::apply_edges` in fixed-size
+//! batches, invoking a callback with each batch's [`DeltaReport`] — the
+//! `vdmc stream` subcommand turns those into one JSON row per batch.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::Session;
+
+use super::{DeltaOp, DeltaReport, EdgeDelta};
+
+/// Parse a timeline file into edge deltas (original vertex ids).
+pub fn load_timeline(path: &Path) -> Result<Vec<EdgeDelta>> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut out = Vec::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let (op, u, v) = match (it.next(), it.next(), it.next()) {
+            (Some(op), Some(u), Some(v)) => (op, u, v),
+            _ => bail!("{}:{}: expected `+|- u v`, got {trimmed:?}", path.display(), lineno + 1),
+        };
+        let op = match op {
+            "+" => DeltaOp::Insert,
+            "-" => DeltaOp::Delete,
+            other => bail!("{}:{}: unknown op {other:?} (expected + or -)", path.display(), lineno + 1),
+        };
+        let u: u32 = u
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {u:?}", path.display(), lineno + 1))?;
+        let v: u32 = v
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {v:?}", path.display(), lineno + 1))?;
+        out.push(EdgeDelta { u, v, op });
+    }
+    Ok(out)
+}
+
+/// Cumulative totals of a timeline replay.
+#[derive(Debug, Clone, Default)]
+pub struct ReplaySummary {
+    pub batches: usize,
+    pub inserted: usize,
+    pub deleted: usize,
+    pub skipped: usize,
+    pub reenumerated_units: u64,
+    pub reenumerated_sets: u64,
+    pub compactions: usize,
+    pub elapsed_secs: f64,
+}
+
+/// Replay `deltas` through the session in batches of `batch` ops,
+/// invoking `on_batch(batch_index, report, session)` after each batch.
+pub fn replay(
+    session: &mut Session,
+    deltas: &[EdgeDelta],
+    batch: usize,
+    mut on_batch: impl FnMut(usize, &DeltaReport, &Session),
+) -> Result<ReplaySummary> {
+    let batch = batch.max(1);
+    let mut summary = ReplaySummary::default();
+    for (i, chunk) in deltas.chunks(batch).enumerate() {
+        let report = session.apply_edges(chunk)?;
+        summary.batches += 1;
+        summary.inserted += report.inserted;
+        summary.deleted += report.deleted;
+        summary.skipped += report.skipped();
+        summary.reenumerated_units += report.reenumerated_units;
+        summary.reenumerated_sets += report.reenumerated_sets;
+        summary.compactions += report.compactions;
+        summary.elapsed_secs += report.elapsed_secs;
+        on_batch(i, &report, session);
+    }
+    Ok(summary)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{CountQuery, SessionConfig};
+    use crate::graph::generators;
+    use crate::motifs::{Direction, MotifSize};
+    use std::io::Write as _;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("vdmc_timeline_test_{}_{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let p = tmp("parse.tsv");
+        let mut f = File::create(&p).unwrap();
+        writeln!(f, "# header\n+ 1 2\n\n- 3 4\n+ 5\t6").unwrap();
+        drop(f);
+        let tl = load_timeline(&p).unwrap();
+        assert_eq!(
+            tl,
+            vec![EdgeDelta::insert(1, 2), EdgeDelta::delete(3, 4), EdgeDelta::insert(5, 6)]
+        );
+        std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn parse_errors() {
+        let p = tmp("bad.tsv");
+        std::fs::write(&p, "* 1 2\n").unwrap();
+        assert!(load_timeline(&p).is_err());
+        std::fs::write(&p, "+ 1\n").unwrap();
+        assert!(load_timeline(&p).is_err());
+        std::fs::write(&p, "+ x 2\n").unwrap();
+        assert!(load_timeline(&p).is_err());
+        std::fs::remove_file(p).ok();
+        assert!(load_timeline(Path::new("/nonexistent/timeline.tsv")).is_err());
+    }
+
+    #[test]
+    fn replay_batches_and_matches_reload() {
+        let g = generators::gnp_directed(30, 0.1, 6);
+        let mut session =
+            Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+
+        let deltas: Vec<EdgeDelta> = (0..25u32)
+            .map(|i| {
+                if i % 3 == 0 {
+                    EdgeDelta::delete(i % 30, (i * 11 + 1) % 30)
+                } else {
+                    EdgeDelta::insert(i % 30, (i * 7 + 2) % 30)
+                }
+            })
+            .collect();
+        let mut rows = 0usize;
+        let summary = replay(&mut session, &deltas, 10, |i, report, s| {
+            rows += 1;
+            assert_eq!(i + 1, rows);
+            assert!(report.applied() + report.skipped() <= 10);
+            assert!(s.maintained_counts(MotifSize::Three, Direction::Directed).is_some());
+        })
+        .unwrap();
+        assert_eq!(summary.batches, 3); // 10 + 10 + 5
+        assert_eq!(rows, 3);
+        assert_eq!(summary.inserted + summary.deleted + summary.skipped, 25);
+
+        let fresh = Session::load(&session.snapshot_graph());
+        let want = fresh
+            .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
+            .unwrap();
+        let got = session.maintained_counts(MotifSize::Three, Direction::Directed).unwrap();
+        assert_eq!(got.per_vertex, want.per_vertex);
+        assert_eq!(got.total_instances, want.total_instances);
+    }
+}

@@ -1,0 +1,228 @@
+//! Property tests for the stream subsystem: random insert/delete batches
+//! replayed on G(n,p) graphs, asserting after EVERY batch that the
+//! incrementally maintained counts equal a from-scratch `Session::load` +
+//! count of the mutated graph — with `baselines::slow` as a second oracle
+//! on tiny graphs. Batches deliberately include self-loops, duplicate
+//! inserts, deletes of nonexistent edges and out-of-range vertex ids.
+
+use std::collections::HashSet;
+
+use vdmc::baselines;
+use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::stream::{DeltaOp, EdgeDelta};
+use vdmc::util::rng::Pcg32;
+
+/// Mirror of `apply_edges` semantics over a plain edge set (original ids).
+fn apply_reference(
+    reference: &mut HashSet<(u32, u32)>,
+    n: u32,
+    directed: bool,
+    d: &EdgeDelta,
+) {
+    if d.u == d.v || d.u >= n || d.v >= n {
+        return;
+    }
+    let key = if directed || d.u < d.v { (d.u, d.v) } else { (d.v, d.u) };
+    match d.op {
+        DeltaOp::Insert => {
+            reference.insert(key);
+        }
+        DeltaOp::Delete => {
+            reference.remove(&key);
+        }
+    }
+}
+
+fn reference_graph(reference: &HashSet<(u32, u32)>, n: usize, directed: bool) -> Graph {
+    let edges: Vec<(u32, u32)> = reference.iter().copied().collect();
+    Graph::from_edges(n, &edges, directed)
+}
+
+/// One adversarial batch: mostly random ops, plus guaranteed self-loops,
+/// out-of-range ids, duplicate inserts and missing deletes.
+fn adversarial_batch(
+    rng: &mut Pcg32,
+    n: u32,
+    reference: &HashSet<(u32, u32)>,
+) -> Vec<EdgeDelta> {
+    let mut batch = Vec::new();
+    for _ in 0..12 {
+        let (u, v) = (rng.below(n), rng.below(n));
+        if rng.bernoulli(0.55) {
+            batch.push(EdgeDelta::insert(u, v));
+        } else {
+            batch.push(EdgeDelta::delete(u, v));
+        }
+    }
+    batch.push(EdgeDelta::insert(3, 3)); // self loop
+    batch.push(EdgeDelta::delete(0, 0)); // self loop
+    batch.push(EdgeDelta::insert(n + 5, 1)); // out of range
+    batch.push(EdgeDelta::delete(1, n + 9)); // out of range
+    if let Some(&(u, v)) = reference.iter().next() {
+        batch.push(EdgeDelta::insert(u, v)); // duplicate insert
+    }
+    batch.push(EdgeDelta::delete(n - 1, n - 2)); // likely-missing delete
+    batch
+}
+
+fn check_replay(directed: bool, seed: u64, compact_ratio: f64) {
+    let n = 24usize;
+    let g = if directed {
+        generators::gnp_directed(n, 0.12, seed)
+    } else {
+        generators::gnp_undirected(n, 0.12, seed)
+    };
+    let mut reference: HashSet<(u32, u32)> = if directed {
+        g.out.edges().collect()
+    } else {
+        g.und.edges().filter(|&(u, v)| u < v).collect()
+    };
+
+    let mut session = Session::load_with(
+        &g,
+        &SessionConfig { workers: 2, compact_ratio, ..Default::default() },
+    );
+    let mut pairs = vec![
+        (MotifSize::Three, Direction::Undirected),
+        (MotifSize::Four, Direction::Undirected),
+    ];
+    if directed {
+        pairs.push((MotifSize::Three, Direction::Directed));
+        pairs.push((MotifSize::Four, Direction::Directed));
+    }
+    for &(size, dir) in &pairs {
+        session.maintain(size, dir).unwrap();
+    }
+
+    let mut rng = Pcg32::seeded(seed ^ 0xFEED);
+    for round in 0..6 {
+        let batch = adversarial_batch(&mut rng, n as u32, &reference);
+        for d in &batch {
+            // semantics check below compares against this reference replay
+            apply_reference(&mut reference, n as u32, directed, d);
+        }
+        let report = session.apply_edges(&batch).unwrap();
+        assert_eq!(
+            report.applied() + report.skipped(),
+            batch.len(),
+            "every op must be applied or skipped (round {round})"
+        );
+        assert!(report.skipped_invalid >= 4, "the planted invalid ops must be skipped");
+
+        let want_graph = reference_graph(&reference, n, directed);
+        let fresh = Session::load(&want_graph);
+        for &(size, dir) in &pairs {
+            let got = session.maintained_counts(size, dir).unwrap();
+            let want = fresh
+                .count(&CountQuery { size, direction: dir, ..Default::default() })
+                .unwrap();
+            assert_eq!(
+                got.per_vertex, want.per_vertex,
+                "maintained != reload ({size:?} {dir:?}, directed={directed}, seed={seed}, \
+                 compact_ratio={compact_ratio}, round={round})"
+            );
+            assert_eq!(got.total_instances, want.total_instances);
+
+            // second oracle: the deliberately-slow python-parity baseline
+            let slow = baselines::slow::count(&want_graph, size, dir);
+            assert_eq!(got.per_vertex, slow.per_vertex, "slow oracle ({size:?} {dir:?})");
+        }
+        // snapshot must equal the reference graph too
+        let snap = session.snapshot_graph();
+        assert_eq!(snap.und, want_graph.und, "snapshot und mismatch (round {round})");
+        assert_eq!(snap.out, want_graph.out, "snapshot out mismatch (round {round})");
+    }
+}
+
+#[test]
+fn random_batches_match_reload_directed() {
+    check_replay(true, 11, 0.25);
+}
+
+#[test]
+fn random_batches_match_reload_undirected() {
+    check_replay(false, 7, 0.25);
+}
+
+#[test]
+fn always_compacting_matches_reload() {
+    // ratio 0.0: every dirty batch rebuilds the CSR + partitions
+    check_replay(true, 29, 0.0);
+}
+
+#[test]
+fn never_compacting_matches_reload() {
+    // the overlay absorbs every delta; counts must still be exact
+    check_replay(false, 31, f64::INFINITY);
+}
+
+#[test]
+fn direction_flips_on_reciprocal_edges() {
+    // dense digraph so inserts frequently create reciprocal pairs and
+    // deletes frequently leave one direction behind (und row survives)
+    let n = 16usize;
+    let g = generators::gnp_directed(n, 0.3, 5);
+    let mut reference: HashSet<(u32, u32)> = g.out.edges().collect();
+    let mut session =
+        Session::load_with(&g, &SessionConfig { workers: 1, ..Default::default() });
+    session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+    session.maintain(MotifSize::Four, Direction::Directed).unwrap();
+
+    let mut rng = Pcg32::seeded(99);
+    for _ in 0..5 {
+        // bias toward reversing existing edges
+        let mut batch = Vec::new();
+        let existing: Vec<(u32, u32)> = reference.iter().copied().collect();
+        for _ in 0..8 {
+            let &(u, v) = &existing[rng.below_usize(existing.len())];
+            if rng.bernoulli(0.5) {
+                batch.push(EdgeDelta::insert(v, u)); // add the reverse
+            } else {
+                batch.push(EdgeDelta::delete(u, v)); // drop one direction
+            }
+        }
+        for d in &batch {
+            apply_reference(&mut reference, n as u32, true, d);
+        }
+        session.apply_edges(&batch).unwrap();
+        let want_graph = reference_graph(&reference, n, true);
+        let fresh = Session::load(&want_graph);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let got = session.maintained_counts(size, Direction::Directed).unwrap();
+            let want = fresh
+                .count(&CountQuery { size, direction: Direction::Directed, ..Default::default() })
+                .unwrap();
+            assert_eq!(got.per_vertex, want.per_vertex, "k={}", size.k());
+        }
+    }
+}
+
+#[test]
+fn delta_locality_stays_sublinear() {
+    // a sparse graph at test scale: a 100-op batch must re-enumerate far
+    // fewer units than the whole graph holds (the bench pins the 5% bound
+    // at the 50k-edge acceptance scale)
+    let n = 2000usize;
+    let g = generators::gnp_directed(n, 2.0e-3, 17);
+    let mut session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+    session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+    let full_units = session.partitions().total_units;
+    let mut rng = Pcg32::seeded(3);
+    let batch: Vec<EdgeDelta> = (0..100)
+        .map(|_| {
+            let (u, v) = (rng.below(n as u32), rng.below(n as u32));
+            if rng.bernoulli(0.5) {
+                EdgeDelta::insert(u, v)
+            } else {
+                EdgeDelta::delete(u, v)
+            }
+        })
+        .collect();
+    let report = session.apply_edges(&batch).unwrap();
+    assert!(report.applied() > 0);
+    let frac = report.reenumerated_units as f64 / full_units.max(1) as f64;
+    assert!(frac < 0.25, "100-op batch re-enumerated {:.1}% of a {}-unit graph", frac * 100.0, full_units);
+}
