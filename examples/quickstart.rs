@@ -21,7 +21,10 @@ fn main() -> anyhow::Result<()> {
     let g = generators::gnp_directed(n, p, 42);
     println!("graph: n={} m={} (CSR bytes: {})", g.n(), g.m(), g.und.memory_bytes());
 
-    // ordering + relabeled CSR + degree-balanced partitions, computed once
+    // ordering + relabeled CSR + degree-balanced partitions + the hybrid
+    // adjacency tier (bitmap hub rows — the default; `--adjacency csr` /
+    // SessionConfig { adjacency: AdjacencyMode::Csr, .. } opts out),
+    // computed once
     let session = Session::load(&g);
     println!(
         "session: {} workers over {} shards, {} work items, setup {:.4}s",
@@ -29,6 +32,12 @@ fn main() -> anyhow::Result<()> {
         session.partitions().n_shards(),
         session.partitions().total_items,
         session.setup_secs(),
+    );
+    println!(
+        "adjacency tier: {} ({} hub rows, {} KiB of bitmaps)",
+        session.adjacency().label(),
+        session.hub_rows(),
+        session.tier_memory_bytes() / 1024,
     );
 
     for (size, label) in [(MotifSize::Three, "3-motifs"), (MotifSize::Four, "4-motifs")] {

@@ -9,14 +9,17 @@
 //!      vs half-deque batch stealing, all three sinks) — one JSON row per
 //!      combination, including steal_batch totals/averages, so the engine
 //!      refactor's wins are measured, not asserted;
-//!   F. session reuse: first query (pays setup) vs Nth query (cached).
+//!   F. session reuse: first query (pays setup) vs Nth query (cached);
+//!   G. adjacency tier: pure-CSR binary-search probes vs the hybrid
+//!      bitmap hub rows, one JSON row per (tier, k) with tier memory —
+//!      `benches/hotpath.rs` is the companion microbenchmark.
 //!
 //! Sections A–D print the historical TSV (ablation, config, secs,
 //! instances, imbalance); sections E–F emit one compact JSON object per
 //! line, machine-readable for dashboards.
 
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
-use vdmc::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
+use vdmc::engine::{AdjacencyMode, CountQuery, SchedulerMode, Session, SessionConfig};
 use vdmc::graph::generators;
 use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
@@ -123,8 +126,36 @@ fn main() {
         println!("{}", j.to_string_compact());
     }
 
+    // G: adjacency tier — csr vs hybrid, both motif sizes, cached sessions
+    // so only the probe tier differs between the rows.
+    println!("# adjacency tier (JSON rows)");
+    for (label, adjacency) in
+        [("csr", AdjacencyMode::Csr), ("hybrid", AdjacencyMode::Hybrid)]
+    {
+        let session =
+            Session::load_with(&g, &SessionConfig { workers: 4, adjacency, ..Default::default() });
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let query =
+                CountQuery { size, direction: Direction::Undirected, ..Default::default() };
+            let _ = session.count(&query).unwrap(); // warm-up
+            let (c, r) = session.count_with_report(&query).unwrap();
+            let mut j = Json::obj();
+            j.set("ablation", "adjacency")
+                .set("adjacency", label)
+                .set("k", size.k())
+                .set("workers", session.workers())
+                .set("secs", r.elapsed_secs)
+                .set("instances", c.total_instances)
+                .set("throughput_per_sec", r.throughput())
+                .set("tier_memory_bytes", r.tier_memory_bytes)
+                .set("hub_rows", session.hub_rows());
+            println!("{}", j.to_string_compact());
+        }
+    }
+
     println!("# all configs must report identical instance totals (asserted above and in tests);");
     println!("# on multi-core hosts vdmc expects: sharded/partition <= atomic, degree-desc <= identity,");
     println!("# granularity sweet spot mid-range, near-linear worker scaling until core count,");
-    println!("# stealing <= cursor on hub-heavy graphs, and call>=1 session rows with setup_secs=0.");
+    println!("# stealing <= cursor on hub-heavy graphs, call>=1 session rows with setup_secs=0,");
+    println!("# and adjacency hybrid <= csr (bitmap hub rows beat binary searches on hubs).");
 }

@@ -1,0 +1,171 @@
+//! Hot-path probe microbenchmark + adjacency-tier ablation.
+//!
+//! Two measurements, one JSON row per line on stdout (lines starting with
+//! `{`; everything else is commentary):
+//!
+//! 1. `bench: "probe"` — raw membership-probe latency against the hub
+//!    rows of a hub-heavy (power-law) graph: the CSR binary search vs the
+//!    hybrid tier's single word test, same pair stream, checksum-guarded
+//!    so neither loop can be optimized away.
+//! 2. `bench: "count"` — end-to-end counting wall-clock of `--adjacency
+//!    csr` vs `--adjacency hybrid` sessions on the same graph, plus a
+//!    `speedup` row per k. Both k = 3 and k = 4 run by default
+//!    (`--k3-only` to skip the slower k = 4): the 3-BFS assembles ids
+//!    from mark bits alone (no pair probes — its rows are the no-effect
+//!    control), while the 4-BFS is the probe-bound path the tier
+//!    accelerates, so the **k = 4 speedup row is the acceptance
+//!    measurement** for the tiered-adjacency PR: on ≥50k-edge hub-heavy
+//!    graphs the hybrid rows are expected to win there.
+//!
+//! Defaults build a Barabási–Albert graph with n = 20_000, m = 3
+//! (≈ 60k undirected edges). CI's bench-smoke job shrinks it with
+//! `cargo bench --bench hotpath -- --n 4000` and archives the rows as
+//! `BENCH_hotpath.json` so the perf trajectory is tracked per commit.
+
+use std::time::Instant;
+
+use vdmc::engine::{AdjacencyMode, CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::{generators, GraphProbe};
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::util::json::Json;
+use vdmc::util::rng::Pcg32;
+
+struct Opts {
+    n: usize,
+    ba_m: usize,
+    seed: u64,
+    workers: usize,
+    k3_only: bool,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { n: 20_000, ba_m: 3, seed: 42, workers: 4, k3_only: false };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> String {
+            *i += 1;
+            args.get(*i).unwrap_or_else(|| panic!("{} needs a value", args[*i - 1])).clone()
+        };
+        match args[i].as_str() {
+            "--n" => opts.n = take(&mut i).parse().expect("--n"),
+            "--ba" => opts.ba_m = take(&mut i).parse().expect("--ba"),
+            "--seed" => opts.seed = take(&mut i).parse().expect("--seed"),
+            "--workers" => opts.workers = take(&mut i).parse().expect("--workers"),
+            "--k3-only" => opts.k3_only = true,
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg {other:?}"),
+        }
+        i += 1;
+    }
+    opts
+}
+
+/// Probe-pair stream biased the way the enumerator's probes are: one
+/// endpoint drawn from the heaviest rows, the other uniform.
+fn probe_pairs(g: &Graph, count: usize, seed: u64) -> Vec<(u32, u32)> {
+    let n = g.n() as u32;
+    let mut heavy: Vec<u32> = (0..n).collect();
+    heavy.sort_by_key(|&v| std::cmp::Reverse(g.und_degree(v)));
+    heavy.truncate((n as usize / 50).max(1));
+    let mut rng = Pcg32::seeded(seed);
+    (0..count)
+        .map(|_| (heavy[rng.below(heavy.len() as u32) as usize], rng.below(n)))
+        .collect()
+}
+
+fn probe_row(mode: &str, probes: usize, secs: f64, hits: u64) -> Json {
+    let mut j = Json::obj();
+    j.set("bench", "probe")
+        .set("mode", mode)
+        .set("probes", probes)
+        .set("secs", secs)
+        .set("ns_per_probe", secs * 1e9 / probes as f64)
+        .set("hits", hits);
+    j
+}
+
+fn main() {
+    let opts = parse_opts();
+    let g = generators::barabasi_albert(opts.n, opts.ba_m, opts.seed);
+    println!(
+        "# hotpath on BA({}, {}) seed {}: n={} m={} (undirected)",
+        opts.n,
+        opts.ba_m,
+        opts.seed,
+        g.n(),
+        g.m()
+    );
+
+    // ---- 1. probe microbenchmark: binary search vs bitmap word test
+    let mut hybrid_graph = g.clone();
+    let threshold = hybrid_graph.enable_hybrid(None);
+    let pairs = probe_pairs(&g, 2_000_000, opts.seed ^ 0x5EED);
+    println!(
+        "# hybrid tier: threshold {} -> {} hub rows, {} KiB",
+        threshold,
+        hybrid_graph.hub_rows(),
+        hybrid_graph.tier_memory_bytes() / 1024
+    );
+
+    let t0 = Instant::now();
+    let mut hits_csr = 0u64;
+    for &(u, v) in &pairs {
+        hits_csr += g.und.has_edge(u, v) as u64;
+    }
+    let csr_secs = t0.elapsed().as_secs_f64();
+    println!("{}", probe_row("binary-search", pairs.len(), csr_secs, hits_csr).to_string_compact());
+
+    let t0 = Instant::now();
+    let mut hits_hub = 0u64;
+    for &(u, v) in &pairs {
+        hits_hub += hybrid_graph.has_und_fast(u, v) as u64;
+    }
+    let hub_secs = t0.elapsed().as_secs_f64();
+    println!("{}", probe_row("bitmap", pairs.len(), hub_secs, hits_hub).to_string_compact());
+    assert_eq!(hits_csr, hits_hub, "probe parity violated");
+
+    // ---- 2. counting wall-clock: csr vs hybrid sessions
+    let sizes: &[MotifSize] =
+        if opts.k3_only { &[MotifSize::Three] } else { &[MotifSize::Three, MotifSize::Four] };
+    for &size in sizes {
+        let mut secs_by_mode = [0.0f64; 2];
+        let mut expected = None;
+        for (mi, mode) in [AdjacencyMode::Csr, AdjacencyMode::Hybrid].into_iter().enumerate() {
+            let session = Session::load_with(
+                &g,
+                &SessionConfig { workers: opts.workers, adjacency: mode, ..Default::default() },
+            );
+            // warm-up query, then the measured one (cached setup for both)
+            let q = CountQuery { size, direction: Direction::Undirected, ..Default::default() };
+            let _ = session.count(&q).unwrap();
+            let (c, r) = session.count_with_report(&q).unwrap();
+            let want = *expected.get_or_insert(c.total_instances);
+            assert_eq!(c.total_instances, want, "tier changed the counts");
+            secs_by_mode[mi] = r.elapsed_secs;
+            let mut j = Json::obj();
+            j.set("bench", "count")
+                .set("adjacency", mode.label())
+                .set("k", size.k())
+                .set("workers", session.workers())
+                .set("n", g.n())
+                .set("m", g.m())
+                .set("secs", r.elapsed_secs)
+                .set("instances", c.total_instances)
+                .set("throughput_per_sec", r.throughput())
+                .set("tier_memory_bytes", r.tier_memory_bytes)
+                .set("hub_rows", session.hub_rows());
+            println!("{}", j.to_string_compact());
+        }
+        let mut j = Json::obj();
+        j.set("bench", "speedup")
+            .set("k", size.k())
+            .set("csr_secs", secs_by_mode[0])
+            .set("hybrid_secs", secs_by_mode[1])
+            .set("hybrid_speedup", secs_by_mode[0] / secs_by_mode[1].max(1e-12));
+        println!("{}", j.to_string_compact());
+    }
+    println!("# expectation: k=4 hybrid_speedup > 1 on hub-heavy graphs (bitmap rows beat binary");
+    println!("# search on the probe-bound 4-BFS); k=3 rows are the no-effect control (~1.0).");
+}

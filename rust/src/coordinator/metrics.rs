@@ -34,6 +34,9 @@ pub struct RunReport {
     pub setup_secs: f64,
     /// True when the query reused a session's cached setup.
     pub setup_reused: bool,
+    /// Bytes held by the hybrid adjacency tier's bitmap hub rows (0 when
+    /// the session runs pure CSR) — the memory the probe speedup costs.
+    pub tier_memory_bytes: usize,
 }
 
 impl RunReport {
@@ -94,6 +97,7 @@ impl RunReport {
             .set("queue_units", self.queue_units)
             .set("setup_secs", self.setup_secs)
             .set("setup_reused", self.setup_reused)
+            .set("tier_memory_bytes", self.tier_memory_bytes)
             .set("steals", self.total_steals())
             .set("steal_batch_total", self.total_steal_batch())
             .set("steal_batch_avg", self.avg_steal_batch());
@@ -134,6 +138,7 @@ mod tests {
             queue_units: 50,
             setup_secs: 0.1,
             setup_reused: false,
+            tier_memory_bytes: 0,
         }
     }
 

@@ -15,6 +15,7 @@ use anyhow::Result;
 
 use crate::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
 use crate::graph::csr::Graph;
+use crate::graph::AdjacencyMode;
 use crate::graph::ordering::VertexOrdering;
 use crate::motifs::counter::{CounterMode, MotifCounts};
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
@@ -39,6 +40,10 @@ pub struct CountConfig {
     pub reorder: bool,
     /// Max (root, neighbor) units per queue item.
     pub max_units_per_item: usize,
+    /// Adjacency tier (pure CSR vs bitmap hub rows; ablation bench).
+    pub adjacency: AdjacencyMode,
+    /// Hub degree threshold for the hybrid tier; `None` = ≈ √m.
+    pub hub_threshold: Option<usize>,
 }
 
 impl Default for CountConfig {
@@ -51,6 +56,8 @@ impl Default for CountConfig {
             scheduler: SchedulerMode::WorkStealing,
             reorder: true,
             max_units_per_item: 64,
+            adjacency: AdjacencyMode::Hybrid,
+            hub_threshold: None,
         }
     }
 }
@@ -61,6 +68,8 @@ impl CountConfig {
             workers: self.workers,
             reorder: self.reorder,
             max_units_per_item: self.max_units_per_item,
+            adjacency: self.adjacency,
+            hub_threshold: self.hub_threshold,
             ..SessionConfig::default()
         }
     }
@@ -262,6 +271,23 @@ mod tests {
         let one = count_motifs(&g, &mk(1)).unwrap();
         let four = count_motifs(&g, &mk(4)).unwrap();
         assert_eq!(one.per_vertex, four.per_vertex);
+    }
+
+    #[test]
+    fn adjacency_tiers_do_not_change_result() {
+        let g = generators::barabasi_albert(150, 4, 19);
+        let mk = |adjacency| CountConfig {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            workers: 2,
+            adjacency,
+            hub_threshold: Some(3),
+            ..Default::default()
+        };
+        let csr = count_motifs(&g, &mk(AdjacencyMode::Csr)).unwrap();
+        let hybrid = count_motifs(&g, &mk(AdjacencyMode::Hybrid)).unwrap();
+        assert_eq!(csr.per_vertex, hybrid.per_vertex);
+        assert_eq!(csr.total_instances, hybrid.total_instances);
     }
 
     #[test]

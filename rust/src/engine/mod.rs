@@ -27,6 +27,7 @@ pub mod scheduler;
 pub mod session;
 pub mod sink;
 
+pub use crate::graph::AdjacencyMode;
 pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
 pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
 pub use session::{CountQuery, Session, SessionConfig};

@@ -33,7 +33,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::metrics::{RunReport, WorkerMetrics};
 use crate::graph::csr::Graph;
 use crate::graph::ordering::VertexOrdering;
-use crate::graph::GraphProbe;
+use crate::graph::{AdjacencyMode, GraphProbe};
 use crate::motifs::counter::{CounterMode, MotifCounts, SlotMapper};
 use crate::motifs::iso::NO_SLOT;
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
@@ -59,11 +59,24 @@ pub struct SessionConfig {
     /// exceeds this fraction of the base adjacency (checked per
     /// `apply_edges` batch). 0.0 compacts after every dirty batch.
     pub compact_ratio: f64,
+    /// Adjacency tier the probes answer through: pure CSR, or CSR plus
+    /// bitmap hub rows (the hybrid hot path). Rebuilt after compaction.
+    pub adjacency: AdjacencyMode,
+    /// Hub degree threshold for the hybrid tier; `None` picks
+    /// [`crate::graph::Csr::default_hub_threshold`] (≈ √m).
+    pub hub_threshold: Option<usize>,
 }
 
 impl Default for SessionConfig {
     fn default() -> Self {
-        SessionConfig { workers: 0, reorder: true, max_units_per_item: 64, compact_ratio: 0.25 }
+        SessionConfig {
+            workers: 0,
+            reorder: true,
+            max_units_per_item: 64,
+            compact_ratio: 0.25,
+            adjacency: AdjacencyMode::Hybrid,
+            hub_threshold: None,
+        }
     }
 }
 
@@ -106,6 +119,9 @@ pub struct Session {
     workers: usize,
     max_units_per_item: usize,
     compact_ratio: f64,
+    /// Adjacency tier; the hybrid bitmap rows are rebuilt on compaction.
+    adjacency: AdjacencyMode,
+    hub_threshold: Option<usize>,
     compactions: usize,
     setup_secs: f64,
     served: AtomicUsize,
@@ -127,7 +143,10 @@ impl Session {
         } else {
             VertexOrdering::identity(n)
         };
-        let h = ordering.apply(graph);
+        let mut h = ordering.apply(graph);
+        if cfg.adjacency == AdjacencyMode::Hybrid {
+            h.enable_hybrid(cfg.hub_threshold);
+        }
         let workers = resolve_workers(cfg.workers);
         let max_units_per_item = cfg.max_units_per_item.max(1);
         let partitions = PartitionSet::build(&h, workers, max_units_per_item);
@@ -142,6 +161,8 @@ impl Session {
             workers,
             max_units_per_item,
             compact_ratio: cfg.compact_ratio.max(0.0),
+            adjacency: cfg.adjacency,
+            hub_threshold: cfg.hub_threshold,
             compactions: 0,
             setup_secs: t0.elapsed().as_secs_f64(),
             served: AtomicUsize::new(0),
@@ -180,6 +201,21 @@ impl Session {
     /// CSR rebuilds performed by `apply_edges` so far.
     pub fn compactions(&self) -> usize {
         self.compactions
+    }
+
+    /// Adjacency tier this session's probes answer through.
+    pub fn adjacency(&self) -> AdjacencyMode {
+        self.adjacency
+    }
+
+    /// Bytes held by the hybrid bitmap tier (0 under [`AdjacencyMode::Csr`]).
+    pub fn tier_memory_bytes(&self) -> usize {
+        self.h.tier_memory_bytes()
+    }
+
+    /// Bitmap hub rows of the relabeled undirected view.
+    pub fn hub_rows(&self) -> usize {
+        self.h.hub_rows()
     }
 
     /// The incrementally maintained counters.
@@ -238,6 +274,7 @@ impl Session {
             queue_units,
             setup_secs: if reused { 0.0 } else { self.setup_secs },
             setup_reused: reused,
+            tier_memory_bytes: self.h.tier_memory_bytes(),
         };
         Ok((counts, report))
     }
@@ -403,6 +440,10 @@ impl Session {
 
         if !self.overlay.is_empty() && self.overlay.ratio(&self.h) > self.compact_ratio {
             self.h = self.overlay.compact(&self.h);
+            if self.adjacency == AdjacencyMode::Hybrid {
+                // the rebuilt CSR ships without bitmaps; re-tier it
+                self.h.enable_hybrid(self.hub_threshold);
+            }
             self.partitions = PartitionSet::build(&self.h, self.workers, self.max_units_per_item);
             self.compactions += 1;
             report.compactions += 1;
@@ -754,6 +795,69 @@ mod tests {
             .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
             .unwrap();
         assert_eq!(c.per_vertex, want.per_vertex);
+    }
+
+    #[test]
+    fn adjacency_tiers_agree_and_report_memory() {
+        let g = generators::barabasi_albert_directed(200, 4, 0.3, 12);
+        let csr = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, adjacency: AdjacencyMode::Csr, ..Default::default() },
+        );
+        let hybrid = Session::load_with(
+            &g,
+            &SessionConfig {
+                workers: 2,
+                adjacency: AdjacencyMode::Hybrid,
+                hub_threshold: Some(4),
+                ..Default::default()
+            },
+        );
+        assert_eq!(csr.tier_memory_bytes(), 0);
+        assert!(hybrid.tier_memory_bytes() > 0);
+        assert!(hybrid.hub_rows() > 0);
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in [Direction::Directed, Direction::Undirected] {
+                let q = CountQuery { size, direction: dir, ..Default::default() };
+                let (a, ra) = csr.count_with_report(&q).unwrap();
+                let (b, rb) = hybrid.count_with_report(&q).unwrap();
+                assert_eq!(a.per_vertex, b.per_vertex, "{size:?} {dir:?}");
+                assert_eq!(a.total_instances, b.total_instances);
+                assert_eq!(ra.tier_memory_bytes, 0);
+                assert_eq!(rb.tier_memory_bytes, hybrid.tier_memory_bytes());
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_rebuilds_hybrid_tier() {
+        let g = generators::gnp_directed(40, 0.1, 33);
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig {
+                workers: 2,
+                compact_ratio: 0.0, // compact every dirty batch
+                hub_threshold: Some(2),
+                ..Default::default()
+            },
+        );
+        let before = session.tier_memory_bytes();
+        assert!(before > 0);
+        let deltas: Vec<EdgeDelta> =
+            (0..12u32).map(|i| EdgeDelta::insert(i, (i + 17) % 40)).collect();
+        let report = session.apply_edges(&deltas).unwrap();
+        assert!(report.compactions >= 1);
+        assert!(
+            session.tier_memory_bytes() > 0,
+            "compaction must re-tier the rebuilt CSR"
+        );
+        // counts over the re-tiered CSR still match a fresh reload
+        let q = CountQuery { size: MotifSize::Three, direction: Direction::Directed, ..Default::default() };
+        let fresh = Session::load(&session.snapshot_graph());
+        assert_eq!(
+            session.count(&q).unwrap().per_vertex,
+            fresh.count(&q).unwrap().per_vertex
+        );
     }
 
     #[test]

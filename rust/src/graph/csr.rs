@@ -6,14 +6,47 @@
 //! O(log d) membership probes and cache-linear scans during the BFS —
 //! "pulling the entire list of neighbors of a certain vertex into the
 //! cache" is exactly a contiguous slice read here.
+//!
+//! On top of the arrays sits an optional **bitmap hub tier** ([`HubBits`],
+//! built by [`Csr::build_hub_bits`]): vertices whose degree reaches a
+//! threshold get a packed `u64` bitmap row, so membership probes against a
+//! hub are a single word test instead of an O(log d) binary search. After
+//! degree-descending relabeling the per-instance probes of the k-BFS hot
+//! path land disproportionately on exactly those rows — the hybrid
+//! bitmap-for-hubs / CSR-for-tails layout the subgraph-counting literature
+//! recommends. Memory: `rows × ⌈n/64⌉ × 8` bytes; with the default
+//! threshold ≈ √m there are at most ~√m hub rows.
+
+/// Packed bitmap rows for hub vertices: `row_of[v]` indexes a
+/// `⌈n/64⌉`-word slice of `words` whose bit `w` is set iff (v, w) is an
+/// edge of the owning CSR. Derived data — rebuilt, never patched.
+#[derive(Debug, Clone)]
+struct HubBits {
+    threshold: usize,
+    words_per_row: usize,
+    /// `row_of[v]` = bitmap row index, or `u32::MAX` for non-hub rows.
+    row_of: Vec<u32>,
+    words: Vec<u64>,
+}
 
 /// CSR adjacency over `u32` vertex ids.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone)]
 pub struct Csr {
     /// `offsets[v]..offsets[v+1]` indexes `neighbors`; len = n + 1.
     offsets: Vec<u64>,
     /// Concatenated sorted neighbor lists; len = number of (directed) edges.
     neighbors: Vec<u32>,
+    /// Bitmap hub tier; `None` until [`Csr::build_hub_bits`] runs.
+    hub: Option<HubBits>,
+}
+
+/// Equality ignores the hub tier: the bitmaps are derived from the two
+/// arrays and two CSRs with the same adjacency are the same graph whether
+/// or not a tier has been built over them.
+impl PartialEq for Csr {
+    fn eq(&self, other: &Self) -> bool {
+        self.offsets == other.offsets && self.neighbors == other.neighbors
+    }
 }
 
 impl Csr {
@@ -85,7 +118,15 @@ impl Csr {
         offsets[n] = write as u64;
         neighbors.truncate(write);
         neighbors.shrink_to_fit();
-        Csr { offsets, neighbors }
+        Csr { offsets, neighbors, hub: None }
+    }
+
+    /// Hub degree threshold the hybrid tier defaults to: ≈ √m (the
+    /// standard bitmap/CSR crossover — at most ~√m rows qualify, bounding
+    /// tier memory at ~√m·n/8 bytes), floored at 16 so near-empty graphs
+    /// don't turn every vertex into a "hub".
+    pub fn default_hub_threshold(m: usize) -> usize {
+        ((m as f64).sqrt().round() as usize).max(16)
     }
 
     /// Number of vertices.
@@ -133,16 +174,114 @@ impl Csr {
     }
 
     /// Total bytes of the two arrays — the paper's "memory cost is simply
-    /// the number of edges" claim, measurable.
+    /// the number of edges" claim, measurable. The hub tier is accounted
+    /// separately ([`Csr::hub_memory_bytes`]).
     pub fn memory_bytes(&self) -> usize {
         self.offsets.len() * std::mem::size_of::<u64>()
             + self.neighbors.len() * std::mem::size_of::<u32>()
     }
 
-    /// Reverse (transpose) of this CSR.
+    /// Build (or rebuild) the bitmap hub tier: every vertex with degree
+    /// ≥ `threshold` gets a packed `⌈n/64⌉`-word row.
+    pub fn build_hub_bits(&mut self, threshold: usize) {
+        let n = self.n();
+        let words_per_row = n.div_ceil(64);
+        let mut row_of = vec![u32::MAX; n];
+        let mut rows = 0u32;
+        for (v, slot) in row_of.iter_mut().enumerate() {
+            if self.degree(v as u32) >= threshold {
+                *slot = rows;
+                rows += 1;
+            }
+        }
+        let mut words = vec![0u64; rows as usize * words_per_row];
+        for (v, &row) in row_of.iter().enumerate() {
+            if row == u32::MAX {
+                continue;
+            }
+            let base = row as usize * words_per_row;
+            for &w in self.neighbors(v as u32) {
+                words[base + (w as usize >> 6)] |= 1u64 << (w & 63);
+            }
+        }
+        self.hub = Some(HubBits { threshold, words_per_row, row_of, words });
+    }
+
+    /// Drop the hub tier (back to pure CSR probes).
+    pub fn clear_hub_bits(&mut self) {
+        self.hub = None;
+    }
+
+    /// The tier's degree threshold, when one is built.
+    pub fn hub_threshold(&self) -> Option<usize> {
+        self.hub.as_ref().map(|h| h.threshold)
+    }
+
+    /// Number of bitmap rows in the tier (0 without one).
+    pub fn hub_rows(&self) -> usize {
+        self.hub.as_ref().map_or(0, |h| h.row_of.iter().filter(|&&r| r != u32::MAX).count())
+    }
+
+    /// Is `v` a hub row (O(1) bitmap probes available)?
+    #[inline]
+    pub fn is_hub(&self, v: u32) -> bool {
+        self.hub.as_ref().is_some_and(|h| h.row_of[v as usize] != u32::MAX)
+    }
+
+    /// Tier-resolved membership: `Some(present)` via a single word test
+    /// when `u` is a hub row, `None` when the tier can't answer.
+    #[inline]
+    pub fn hub_bit(&self, u: u32, v: u32) -> Option<bool> {
+        let h = self.hub.as_ref()?;
+        let row = h.row_of[u as usize];
+        if row == u32::MAX {
+            return None;
+        }
+        let word = h.words[row as usize * h.words_per_row + (v as usize >> 6)];
+        Some((word >> (v & 63)) & 1 == 1)
+    }
+
+    /// Membership probe through the fastest tier available: one word test
+    /// on hub rows, binary search on the tail.
+    #[inline]
+    pub fn has_edge_fast(&self, u: u32, v: u32) -> bool {
+        match self.hub_bit(u, v) {
+            Some(b) => b,
+            None => self.has_edge(u, v),
+        }
+    }
+
+    /// Bytes held by the hub tier (0 without one): the `rows × ⌈n/64⌉`
+    /// word matrix plus the n-entry row index.
+    pub fn hub_memory_bytes(&self) -> usize {
+        self.hub.as_ref().map_or(0, |h| {
+            h.words.len() * std::mem::size_of::<u64>()
+                + h.row_of.len() * std::mem::size_of::<u32>()
+        })
+    }
+
+    /// Reverse (transpose) of this CSR: a direct counting scatter over the
+    /// stored arrays. The source is already deduplicated and loop-free, so
+    /// no cleanup passes are needed, and scanning sources in ascending
+    /// order fills every target bucket pre-sorted.
     pub fn transpose(&self) -> Csr {
-        let rev: Vec<(u32, u32)> = self.edges().map(|(u, v)| (v, u)).collect();
-        Csr::from_edges(self.n(), &rev, false)
+        let n = self.n();
+        let mut offsets = vec![0u64; n + 1];
+        for &v in &self.neighbors {
+            offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut neighbors = vec![0u32; self.neighbors.len()];
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        for u in 0..n as u32 {
+            for &v in self.neighbors(u) {
+                neighbors[cursor[v as usize] as usize] = u;
+                cursor[v as usize] += 1;
+            }
+        }
+        Csr { offsets, neighbors, hub: None }
     }
 }
 
@@ -202,6 +341,41 @@ impl Graph {
     #[inline]
     pub fn und_degree(&self, v: u32) -> usize {
         self.und.degree(v)
+    }
+
+    /// Build the hybrid adjacency tier: bitmap rows for every vertex whose
+    /// per-view degree reaches `threshold` (default
+    /// [`Csr::default_hub_threshold`] of the semantic edge count
+    /// [`Graph::m`]).
+    /// Undirected graphs tier only `und` — their `out`/`inn` views alias
+    /// it semantically and every directed probe reduces to an undirected
+    /// one. Returns the threshold used.
+    pub fn enable_hybrid(&mut self, threshold: Option<usize>) -> usize {
+        // semantic edge count (und.m() would double-count each pair)
+        let t = threshold.unwrap_or_else(|| Csr::default_hub_threshold(self.m()));
+        self.und.build_hub_bits(t);
+        if self.directed {
+            self.out.build_hub_bits(t);
+            self.inn.build_hub_bits(t);
+        }
+        t
+    }
+
+    /// Whether the hybrid tier is built.
+    pub fn is_hybrid(&self) -> bool {
+        self.und.hub_threshold().is_some()
+    }
+
+    /// Total bytes held by the bitmap tier across all views (0 when the
+    /// graph runs pure CSR).
+    pub fn tier_memory_bytes(&self) -> usize {
+        self.und.hub_memory_bytes() + self.out.hub_memory_bytes() + self.inn.hub_memory_bytes()
+    }
+
+    /// Bitmap rows across all tiers (the undirected count is what load
+    /// reports care about; directed graphs also tier out/inn).
+    pub fn hub_rows(&self) -> usize {
+        self.und.hub_rows()
     }
 }
 
@@ -264,6 +438,100 @@ mod tests {
         assert!(t.has_edge(1, 0) && t.has_edge(0, 2));
         assert_eq!(csr.m(), t.m());
         assert_eq!(t.transpose(), csr);
+    }
+
+    #[test]
+    fn transpose_matches_edge_list_rebuild() {
+        // the counting-scatter transpose must equal the old reference
+        // (reverse every edge, re-run the general builder), row for row
+        let mut rng = crate::util::rng::Pcg32::seeded(19);
+        let n = 50;
+        let edges: Vec<(u32, u32)> =
+            (0..900).map(|_| (rng.below(n as u32), rng.below(n as u32))).collect();
+        let csr = Csr::from_edges(n, &edges, false);
+        let rev: Vec<(u32, u32)> = csr.edges().map(|(u, v)| (v, u)).collect();
+        let want = Csr::from_edges(n, &rev, false);
+        let got = csr.transpose();
+        assert_eq!(got.offsets, want.offsets);
+        assert_eq!(got.neighbors, want.neighbors);
+    }
+
+    #[test]
+    fn hub_bits_answer_every_pair() {
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        let n = 40;
+        let edges: Vec<(u32, u32)> =
+            (0..500).map(|_| (rng.below(n as u32), rng.below(n as u32))).collect();
+        for &sym in &[false, true] {
+            let mut csr = Csr::from_edges(n, &edges, sym);
+            assert_eq!(csr.hub_memory_bytes(), 0);
+            csr.build_hub_bits(1); // every non-isolated row becomes a hub
+            assert!(csr.hub_rows() > 0);
+            assert!(csr.hub_memory_bytes() > 0);
+            assert_eq!(csr.hub_threshold(), Some(1));
+            for u in 0..n as u32 {
+                for v in 0..n as u32 {
+                    let want = csr.has_edge(u, v);
+                    assert_eq!(csr.has_edge_fast(u, v), want, "({u},{v}) sym={sym}");
+                    if csr.is_hub(u) {
+                        assert_eq!(csr.hub_bit(u, v), Some(want));
+                    } else {
+                        assert_eq!(csr.hub_bit(u, v), None);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hub_threshold_selects_heavy_rows_only() {
+        // star: hub 0 has degree 9, leaves degree 1
+        let edges: Vec<(u32, u32)> = (1..10u32).map(|v| (0, v)).collect();
+        let mut csr = Csr::from_edges(10, &edges, true);
+        csr.build_hub_bits(5);
+        assert_eq!(csr.hub_rows(), 1);
+        assert!(csr.is_hub(0));
+        assert!(!csr.is_hub(1));
+        assert_eq!(csr.hub_bit(0, 7), Some(true));
+        assert_eq!(csr.hub_bit(0, 0), Some(false));
+        assert_eq!(csr.hub_bit(3, 0), None);
+        csr.clear_hub_bits();
+        assert_eq!(csr.hub_rows(), 0);
+        assert_eq!(csr.hub_memory_bytes(), 0);
+    }
+
+    #[test]
+    fn tier_is_invisible_to_equality() {
+        let a = Csr::from_edges(4, &paper_edges(), false);
+        let mut b = a.clone();
+        b.build_hub_bits(1);
+        assert_eq!(a, b, "hub tier is derived data, not graph identity");
+    }
+
+    #[test]
+    fn default_threshold_tracks_sqrt_m() {
+        assert_eq!(Csr::default_hub_threshold(0), 16);
+        assert_eq!(Csr::default_hub_threshold(100), 16);
+        assert_eq!(Csr::default_hub_threshold(10_000), 100);
+        assert_eq!(Csr::default_hub_threshold(1_000_000), 1000);
+    }
+
+    #[test]
+    fn graph_hybrid_tier_memory() {
+        let g0 = Graph::from_edges(4, &paper_edges(), true);
+        assert!(!g0.is_hybrid());
+        assert_eq!(g0.tier_memory_bytes(), 0);
+        let mut g = g0.clone();
+        let t = g.enable_hybrid(Some(1));
+        assert_eq!(t, 1);
+        assert!(g.is_hybrid());
+        assert!(g.hub_rows() > 0);
+        // und + out + inn tiers all counted
+        assert_eq!(
+            g.tier_memory_bytes(),
+            g.und.hub_memory_bytes() + g.out.hub_memory_bytes() + g.inn.hub_memory_bytes()
+        );
+        assert!(g.tier_memory_bytes() > 0);
     }
 
     #[test]

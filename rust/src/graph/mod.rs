@@ -18,6 +18,41 @@ pub use builder::GraphBuilder;
 pub use csr::{Csr, Graph};
 pub use ordering::VertexOrdering;
 
+/// Direction bits of a (y, z) pair: bit0 = y→z, bit1 = z→y. Undirected
+/// graphs/mode always carry 0b11 for present edges. (Historically defined
+/// in `motifs::probe`, which re-exports it.)
+pub type DirBits = u8;
+
+/// Which adjacency tier the probes answer through.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum AdjacencyMode {
+    /// Pure CSR: binary-search membership, the seed's probe layout (the
+    /// enumerator's frontier-local probe cache applies in both modes).
+    Csr,
+    /// CSR + packed `u64` bitmap rows for hub vertices
+    /// ([`Csr::build_hub_bits`]): O(1) word-test probes on the rows the
+    /// degree-descending relabeling concentrates the hot path on.
+    #[default]
+    Hybrid,
+}
+
+impl AdjacencyMode {
+    pub fn parse(s: &str) -> Option<AdjacencyMode> {
+        match s {
+            "csr" => Some(AdjacencyMode::Csr),
+            "hybrid" => Some(AdjacencyMode::Hybrid),
+            _ => None,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AdjacencyMode::Csr => "csr",
+            AdjacencyMode::Hybrid => "hybrid",
+        }
+    }
+}
+
 /// Abstract adjacency probe surface of a VDMC graph: the undirected view
 /// G_U the BFS walks, plus the directed out/in views the motif-id bits are
 /// read from. All neighbor iterators yield strictly ascending vertex ids
@@ -66,6 +101,36 @@ pub trait GraphProbe {
     /// (= the proper work-unit count when `after == v`).
     fn und_degree_above(&self, v: u32, after: u32) -> usize {
         self.und_above(v, after).count()
+    }
+
+    // ------------------------------------------------------ tiered probes
+    //
+    // The three methods below are the hot-path escape hatch of the hybrid
+    // adjacency tier: surfaces with bitmap hub rows override them to
+    // answer in O(1); the defaults reduce to the plain probes, so every
+    // implementation stays correct with zero extra code.
+
+    /// True when `v`'s undirected row can answer membership in O(1)
+    /// (a bitmap hub row). Callers use this to pick a probe-per-pair
+    /// strategy over a sorted merge; it never affects results.
+    #[inline]
+    fn is_und_hub(&self, _v: u32) -> bool {
+        false
+    }
+
+    /// Undirected membership probe through the fastest tier available.
+    #[inline]
+    fn has_und_fast(&self, u: u32, v: u32) -> bool {
+        self.und_has_edge(u, v)
+    }
+
+    /// Direction bits of the pair (center, v) — bit0 = center→v, bit1 =
+    /// v→center — through the fastest tier available. Only meaningful on
+    /// directed surfaces; callers gate on direction (undirected mode
+    /// derives 0b11/0 from [`GraphProbe::has_und_fast`]).
+    #[inline]
+    fn fast_bits(&self, center: u32, v: u32) -> DirBits {
+        (self.out_has_edge(center, v) as u8) | ((self.out_has_edge(v, center) as u8) << 1)
     }
 }
 
@@ -129,6 +194,41 @@ impl GraphProbe for Graph {
     fn und_degree_above(&self, v: u32, after: u32) -> usize {
         self.und.neighbors_above(v, after).len()
     }
+
+    #[inline]
+    fn is_und_hub(&self, v: u32) -> bool {
+        self.und.is_hub(v)
+    }
+
+    #[inline]
+    fn has_und_fast(&self, u: u32, v: u32) -> bool {
+        // the und view is symmetric, so either endpoint's hub row decides
+        match self.und.hub_bit(u, v).or_else(|| self.und.hub_bit(v, u)) {
+            Some(b) => b,
+            None => self.und.has_edge(u, v),
+        }
+    }
+
+    #[inline]
+    fn fast_bits(&self, center: u32, v: u32) -> DirBits {
+        if !self.directed {
+            // out aliases und: both direction bits follow membership
+            return if self.has_und_fast(center, v) { 0b11 } else { 0 };
+        }
+        // center→v lives in out[center] and in inn[v]; either hub row is
+        // an O(1) answer, the CSR binary search is the tail fallback
+        let fwd = self
+            .out
+            .hub_bit(center, v)
+            .or_else(|| self.inn.hub_bit(v, center))
+            .unwrap_or_else(|| self.out.has_edge(center, v));
+        let rev = self
+            .out
+            .hub_bit(v, center)
+            .or_else(|| self.inn.hub_bit(center, v))
+            .unwrap_or_else(|| self.out.has_edge(v, center));
+        (fwd as u8) | ((rev as u8) << 1)
+    }
 }
 
 #[cfg(test)]
@@ -155,5 +255,63 @@ mod probe_trait_tests {
         assert!(GraphProbe::und_has_edge(&g, 0, 3));
         assert!(GraphProbe::out_has_edge(&g, 3, 0));
         assert!(!GraphProbe::out_has_edge(&g, 0, 3));
+    }
+
+    #[test]
+    fn fast_probes_default_to_plain_probes() {
+        // no tier built: the defaulted methods must equal the base probes
+        let g = Graph::from_edges(5, &[(0, 1), (1, 0), (0, 2), (3, 0), (2, 4)], true);
+        assert!(!g.is_hybrid());
+        for u in 0..5u32 {
+            assert!(!g.is_und_hub(u));
+            for v in 0..5u32 {
+                assert_eq!(g.has_und_fast(u, v), g.und.has_edge(u, v));
+                let want = (g.out.has_edge(u, v) as u8) | ((g.out.has_edge(v, u) as u8) << 1);
+                assert_eq!(g.fast_bits(u, v), want);
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_fast_probes_match_plain_probes() {
+        for &threshold in &[1usize, 3, 1000] {
+            let mut g = Graph::from_edges(5, &[(0, 1), (1, 0), (0, 2), (3, 0), (2, 4)], true);
+            g.enable_hybrid(Some(threshold));
+            for u in 0..5u32 {
+                for v in 0..5u32 {
+                    assert_eq!(
+                        g.has_und_fast(u, v),
+                        g.und.has_edge(u, v),
+                        "und ({u},{v}) t={threshold}"
+                    );
+                    let want =
+                        (g.out.has_edge(u, v) as u8) | ((g.out.has_edge(v, u) as u8) << 1);
+                    assert_eq!(g.fast_bits(u, v), want, "bits ({u},{v}) t={threshold}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hybrid_fast_probes_undirected_graph() {
+        let mut g = Graph::from_edges(5, &[(0, 1), (0, 2), (0, 3), (2, 4)], false);
+        g.enable_hybrid(Some(2));
+        assert!(g.is_und_hub(0));
+        for u in 0..5u32 {
+            for v in 0..5u32 {
+                assert_eq!(g.has_und_fast(u, v), g.und.has_edge(u, v));
+                let want = if g.und.has_edge(u, v) { 0b11 } else { 0 };
+                assert_eq!(g.fast_bits(u, v), want);
+            }
+        }
+    }
+
+    #[test]
+    fn adjacency_mode_parse_roundtrip() {
+        for mode in [AdjacencyMode::Csr, AdjacencyMode::Hybrid] {
+            assert_eq!(AdjacencyMode::parse(mode.label()), Some(mode));
+        }
+        assert_eq!(AdjacencyMode::parse("bitmap"), None);
+        assert_eq!(AdjacencyMode::default(), AdjacencyMode::Hybrid);
     }
 }

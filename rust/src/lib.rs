@@ -58,6 +58,14 @@
 //!     println!("{size:?}: {} instances", counts.total_instances);
 //! }
 //! ```
+//!
+//! Sessions default to the **hybrid adjacency tier** (`--adjacency
+//! hybrid` on the CLI): hub vertices get packed bitmap rows so the hot
+//! path's membership probes are one word test instead of a binary
+//! search. Pass `SessionConfig { adjacency: AdjacencyMode::Csr, .. }`
+//! (or `--adjacency csr`) to disable the bitmap tier — counts are
+//! bit-identical either way (`tests/property_tiers.rs`), only the
+//! wall-clock and `RunReport::tier_memory_bytes` differ.
 
 pub mod baselines;
 pub mod coordinator;

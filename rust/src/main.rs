@@ -16,7 +16,7 @@ use std::process::ExitCode;
 
 use vdmc::baselines;
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
-use vdmc::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
+use vdmc::engine::{AdjacencyMode, CountQuery, SchedulerMode, Session, SessionConfig};
 use vdmc::graph::{generators, io};
 use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
@@ -47,6 +47,8 @@ fn app() -> App {
                 .opt("workers", "worker threads (0 = all cores)", Some("0"))
                 .opt("counter", "atomic | sharded | partition", Some("sharded"))
                 .opt("scheduler", "cursor | stealing | stealing-batch", Some("stealing"))
+                .opt("adjacency", "adjacency tier: csr | hybrid (bitmap hub rows)", Some("hybrid"))
+                .opt("hub-threshold", "hybrid hub degree threshold (0 = auto, ~sqrt(m))", Some("0"))
                 .opt("repeat", "serve the query N times from one session", Some("1"))
                 .opt("out", "write per-vertex counts TSV here", None)
                 .flag("directed", "interpret the file as a directed graph")
@@ -62,6 +64,8 @@ fn app() -> App {
                 .opt("k", "maintained motif sizes: 3 | 4 | both", Some("both"))
                 .opt("workers", "worker threads (0 = all cores)", Some("0"))
                 .opt("compact-ratio", "overlay/base occupancy triggering compaction", Some("0.25"))
+                .opt("adjacency", "adjacency tier: csr | hybrid (bitmap hub rows)", Some("hybrid"))
+                .opt("hub-threshold", "hybrid hub degree threshold (0 = auto, ~sqrt(m))", Some("0"))
                 .opt("out", "write JSON report rows here instead of stdout", None)
                 .flag("directed", "interpret the graph and timeline as directed")
                 .flag("undirected-motifs", "classify on the undirected view")
@@ -127,6 +131,15 @@ fn parse_direction(args: &Args) -> Direction {
     } else {
         Direction::Directed
     }
+}
+
+/// The `--adjacency` / `--hub-threshold` pair shared by `count` and
+/// `stream` (0 threshold = pick the ~√m default at load time).
+fn parse_adjacency(args: &Args) -> anyhow::Result<(AdjacencyMode, Option<usize>)> {
+    let mode = args.one_of("adjacency", &["csr", "hybrid"]).map_err(anyhow::Error::msg)?;
+    let mode = AdjacencyMode::parse(&mode).expect("one_of pins the value set");
+    let threshold: usize = args.req("hub-threshold").map_err(anyhow::Error::msg)?;
+    Ok((mode, if threshold == 0 { None } else { Some(threshold) }))
 }
 
 fn load(args: &Args) -> anyhow::Result<vdmc::graph::Graph> {
@@ -200,6 +213,7 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         };
         let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
         let repeat = repeat.max(1);
+        let (adjacency, hub_threshold) = parse_adjacency(args)?;
 
         // load once, serve N identical queries from the cached session —
         // the serving-path hot loop
@@ -208,9 +222,18 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
             &SessionConfig {
                 workers: args.req("workers").map_err(anyhow::Error::msg)?,
                 reorder: !args.flag("no-reorder"),
+                adjacency,
+                hub_threshold,
                 ..Default::default()
             },
         );
+        if adjacency == AdjacencyMode::Hybrid {
+            eprintln!(
+                "hybrid adjacency tier: {} hub rows, {} KiB",
+                session.hub_rows(),
+                session.tier_memory_bytes() / 1024,
+            );
+        }
         let query = CountQuery { size, direction, scheduler, sink: counter };
         let mut last = None;
         for i in 0..repeat {
@@ -270,11 +293,14 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
             _ => vec![MotifSize::Three, MotifSize::Four],
         };
 
+    let (adjacency, hub_threshold) = parse_adjacency(args)?;
     let mut session = Session::load_with(
         &g,
         &SessionConfig {
             workers: args.req("workers").map_err(anyhow::Error::msg)?,
             compact_ratio: args.req("compact-ratio").map_err(anyhow::Error::msg)?,
+            adjacency,
+            hub_threshold,
             ..Default::default()
         },
     );

@@ -24,16 +24,27 @@
 use crate::graph::GraphProbe;
 
 use super::ids::MotifId;
-use super::probe::NeighborMarks;
+use super::probe::{DirBits, NeighborMarks};
 use super::Direction;
 
-/// Reusable per-worker enumeration state: marks for N(root) and N(a),
-/// plus the second-level scratch list used by the 4-motif structures.
+/// Reusable per-worker enumeration state: marks for N(root) and N(a), the
+/// second-level scratch list used by the 4-motif structures, and the
+/// **frontier-local probe cache** — per work unit, the pairwise direction
+/// bits of the first-level suffix (`lvl1`) and of the
+/// second-level-through-a list (`d2a`) are resolved one row at a time
+/// into `row_bits` (a single reusable array, so per-worker memory stays
+/// O(max degree) even on hub units), turning the S1 triple loop, the
+/// S2-via-a loop and S3's d2a×d2a loop into pure array reads with zero
+/// per-instance graph probes.
 #[derive(Debug)]
 pub struct EnumCtx {
     pub(super) root_marks: NeighborMarks,
     pub(super) a_marks: NeighborMarks,
     pub(super) d2a: Vec<u32>,
+    /// First-level proper neighbors after `a` (the S1/S2 `b` range).
+    pub(super) lvl1: Vec<u32>,
+    /// One row of cached pair bits, refilled per S1/S2/S3 center.
+    pub(super) row_bits: Vec<DirBits>,
 }
 
 impl EnumCtx {
@@ -42,6 +53,8 @@ impl EnumCtx {
             root_marks: NeighborMarks::new(n),
             a_marks: NeighborMarks::new(n),
             d2a: Vec::with_capacity(256),
+            lvl1: Vec::with_capacity(256),
+            row_bits: Vec::with_capacity(256),
         }
     }
 }

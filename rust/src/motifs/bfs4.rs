@@ -24,38 +24,29 @@
 //! overlay reuses this exact code path.
 //!
 //! Hot path: of the six vertex pairs, five touch root or `a` and read
-//! O(1) mark bits; only the (y, z) pair between the last two vertices
-//! needs an adjacency probe — and for S4 even its undirected membership
-//! is already known (EXPERIMENTS.md §Perf).
+//! O(1) mark bits; the remaining (y, z) pair never costs a per-instance
+//! probe either — S2-via-b and S4 take it from the merged row iterator,
+//! while S1, S2-via-a and S3 read it from the frontier-local probe cache
+//! of [`EnumCtx`]: each center's pair bits against its target list are
+//! resolved row-by-row up front (bitmap-tier probes on hub rows and
+//! short lists, `bits_against` merges otherwise) into one reusable
+//! array, so per-worker cache memory stays O(max degree)
+//! (EXPERIMENTS.md §Perf).
 
 use crate::graph::GraphProbe;
 
 use super::bfs3::EnumCtx;
 use super::ids::MotifId;
-use super::probe::{merged_above, pair_bits, DirBits};
+use super::probe::{fill_pair_bits, merged_above, DirBits};
 use super::Direction;
 
 /// Backwards-compatible alias: the per-worker scratch is the shared
 /// [`EnumCtx`].
 pub use super::bfs3::EnumCtx as Scratch;
 
-/// Raw id of (root, a, y, z) from mark bits + one probed pair.
+/// Raw id of (root, a, y, z) from the mark bits and the caller-held
+/// (y, z) direction bits (cache array or merged iterator).
 /// Bit layout (MSB first): (0,1)(0,2)(0,3)(1,0)(1,2)(1,3)(2,0)(2,1)(2,3)(3,0)(3,1)(3,2).
-#[inline]
-fn raw4<G: GraphProbe>(
-    ctx: &EnumCtx,
-    g: &G,
-    dir: Direction,
-    a: u32,
-    y: u32,
-    z: u32,
-    yz_known_und: Option<bool>,
-) -> MotifId {
-    raw4_with_yz(ctx, a, y, z, pair_bits(g, dir, y, z, yz_known_und))
-}
-
-/// As [`raw4`] when the caller already holds the (y, z) direction bits
-/// (the merged-iterator loops).
 #[inline]
 fn raw4_with_yz(ctx: &EnumCtx, a: u32, y: u32, z: u32, yz: DirBits) -> MotifId {
     let ra = ctx.root_marks.dir_bits(a) as u16;
@@ -93,21 +84,34 @@ pub fn enumerate_unit<G: GraphProbe>(
     let mut proper = g.und_above(root, root);
     let a = proper.nth(j).expect("unit index beyond proper-neighbor count");
     ctx.a_marks.mark(g, dir, a);
-    // `proper` now iterates the neighbors after a; clones replay it.
-    let later = proper;
 
-    // ---- S1 (avg depth 0.75): a < b < c all first-level. Per-pair
-    // probes beat a N(b)-merge here at real-world degrees (measured —
-    // EXPERIMENTS.md §Perf iteration 3).
-    let mut bs = later.clone();
-    while let Some(b) = bs.next() {
-        for c in bs.clone() {
-            emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
+    // Frontier-local probe cache: collect the first-level suffix (the
+    // S1/S2 `b` range); each S1/S2/S3 inner loop below resolves one
+    // center's pair bits into the reusable `row_bits` row up front
+    // (fill_pair_bits: O(1) bitmap probes on hub rows / short target
+    // lists, a bits_against merge otherwise) and then emits from pure
+    // array reads. The buffers are taken out of ctx so it stays
+    // borrowable for the mark-bit reads of raw4_with_yz.
+    let mut lvl1 = std::mem::take(&mut ctx.lvl1);
+    let mut row_bits = std::mem::take(&mut ctx.row_bits);
+    lvl1.clear();
+    lvl1.extend(proper);
+
+    // ---- S1 (avg depth 0.75): a < b < c all first-level. Targets all
+    // exceed b, so the cache row merges only N(b) above b.
+    for (i, &b) in lvl1.iter().enumerate() {
+        let rest = &lvl1[i + 1..];
+        if rest.is_empty() {
+            break; // suffixes only shrink
+        }
+        row_bits.clear();
+        fill_pair_bits(g, dir, b, b, rest, &mut row_bits);
+        for (jj, &c) in rest.iter().enumerate() {
+            emit(&[root, a, b, c], raw4_with_yz(ctx, a, b, c, row_bits[jj]));
         }
     }
 
     // Second level through a: c ∈ N(a), c > root, c ∉ N(i) (minimal depth).
-    // Take the buffer out of ctx so ctx stays borrowable for raw4.
     let mut d2a = std::mem::take(&mut ctx.d2a);
     d2a.clear();
     for c in g.und_above(a, root) {
@@ -117,10 +121,15 @@ pub fn enumerate_unit<G: GraphProbe>(
     }
 
     // ---- S2 (avg depth 1.0): pair (a, b), second-level c.
-    for b in later {
-        // c through a (c ∈ N(a): the (b, c) pair is the unknown one)
-        for &c in &d2a {
-            emit(&[root, a, b, c], raw4(ctx, g, dir, a, b, c, None));
+    for &b in &lvl1 {
+        // c through a (c ∈ N(a)): the (b, c) bits are resolved once per b
+        // against the whole d2a list, then the loop reads the row
+        if !d2a.is_empty() {
+            row_bits.clear();
+            fill_pair_bits(g, dir, b, root, &d2a, &mut row_bits);
+            for (ci, &c) in d2a.iter().enumerate() {
+                emit(&[root, a, b, c], raw4_with_yz(ctx, a, b, c, row_bits[ci]));
+            }
         }
         // c through b only (c ∉ N(a) avoids double counting the set);
         // the merged iterator hands us the (b, c) bits for free
@@ -133,10 +142,18 @@ pub fn enumerate_unit<G: GraphProbe>(
     }
 
     // ---- S3 (avg depth 1.25): two second-level vertices through a.
-    // d2a is sorted (filtered from a sorted iterator), giving c < d.
+    // d2a is sorted (filtered from a sorted iterator), giving c < d; its
+    // pairwise bits get the same row-cached treatment as S1 (targets all
+    // exceed c, so the merge window is N(c) above c).
     for (ci, &c) in d2a.iter().enumerate() {
-        for &d in &d2a[ci + 1..] {
-            emit(&[root, a, c, d], raw4(ctx, g, dir, a, c, d, None));
+        let rest = &d2a[ci + 1..];
+        if rest.is_empty() {
+            break;
+        }
+        row_bits.clear();
+        fill_pair_bits(g, dir, c, c, rest, &mut row_bits);
+        for (di, &d) in rest.iter().enumerate() {
+            emit(&[root, a, c, d], raw4_with_yz(ctx, a, c, d, row_bits[di]));
         }
     }
 
@@ -152,7 +169,9 @@ pub fn enumerate_unit<G: GraphProbe>(
         }
     }
 
+    ctx.lvl1 = lvl1;
     ctx.d2a = d2a;
+    ctx.row_bits = row_bits;
 }
 
 /// All proper 4-motifs rooted at `root`.
@@ -315,6 +334,24 @@ mod tests {
         enumerate_all(&g, Direction::Undirected, &mut |v, _| {
             assert!(v[1] > v[0] && v[2] > v[0] && v[3] > v[0]);
         });
+    }
+
+    #[test]
+    fn hybrid_tier_enumeration_is_bit_identical() {
+        // the cache fill switches to O(1) bitmap probes on hub rows; the
+        // emitted (tuple, id) stream must not change in any way
+        for seed in [6u64, 29] {
+            let plain = generators::gnp_directed(18, 0.3, seed);
+            let mut hybrid = plain.clone();
+            hybrid.enable_hybrid(Some(2));
+            for dir in [Direction::Directed, Direction::Undirected] {
+                let mut want = Vec::new();
+                enumerate_all(&plain, dir, &mut |v, id| want.push((*v, id)));
+                let mut got = Vec::new();
+                enumerate_all(&hybrid, dir, &mut |v, id| got.push((*v, id)));
+                assert_eq!(got, want, "seed {seed} {dir:?}");
+            }
+        }
     }
 
     #[test]

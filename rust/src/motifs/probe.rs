@@ -22,7 +22,9 @@ use super::Direction;
 
 /// Direction bits of a (center, v) pair: bit0 = center→v, bit1 = v→center.
 /// Undirected graphs/mode always get 0b11 for present edges.
-pub type DirBits = u8;
+/// (Now defined on the graph layer so [`GraphProbe::fast_bits`] can speak
+/// it; re-exported here for every historical `probe::DirBits` import.)
+pub use crate::graph::DirBits;
 
 /// Epoch-stamped neighborhood of one "center" vertex.
 #[derive(Debug)]
@@ -31,11 +33,21 @@ pub struct NeighborMarks {
     bits: Vec<u8>,
     epoch: u32,
     center: u32,
+    /// Direction the current stamps were filled for — part of the cache
+    /// key: the same center marked Directed then Undirected must re-stamp,
+    /// or dir_bits would serve the stale directed codes.
+    dir: Direction,
 }
 
 impl NeighborMarks {
     pub fn new(n: usize) -> NeighborMarks {
-        NeighborMarks { stamp: vec![0; n], bits: vec![0; n], epoch: 0, center: u32::MAX }
+        NeighborMarks {
+            stamp: vec![0; n],
+            bits: vec![0; n],
+            epoch: 0,
+            center: u32::MAX,
+            dir: Direction::Undirected,
+        }
     }
 
     pub fn center(&self) -> u32 {
@@ -43,12 +55,14 @@ impl NeighborMarks {
     }
 
     /// Stamp N(center): one pass over the undirected row, with the out/in
-    /// rows merged alongside to fill direction bits.
+    /// rows merged alongside to fill direction bits. Re-marking the same
+    /// (center, dir) is free; epoch 0 means "never marked".
     pub fn mark<G: GraphProbe>(&mut self, g: &G, dir: Direction, center: u32) {
-        if self.center == center && self.epoch != 0 {
+        if self.center == center && self.dir == dir && self.epoch != 0 {
             return;
         }
         self.center = center;
+        self.dir = dir;
         self.epoch = self.epoch.wrapping_add(1);
         if self.epoch == 0 {
             // epoch wrapped: stamps may alias — reset
@@ -106,7 +120,10 @@ impl NeighborMarks {
 }
 
 /// Probe an arbitrary (y, z) pair's direction bits. `known_und` short-cuts
-/// the undirected membership test when the caller already knows it.
+/// the undirected membership test when the caller already knows it. Every
+/// probe goes through the tiered fast path ([`GraphProbe::has_und_fast`] /
+/// [`GraphProbe::fast_bits`]): a single word test when either row is a
+/// bitmap hub, the seed's binary searches otherwise.
 #[inline]
 pub fn pair_bits<G: GraphProbe>(
     g: &G,
@@ -117,16 +134,14 @@ pub fn pair_bits<G: GraphProbe>(
 ) -> DirBits {
     let present = match known_und {
         Some(p) => p,
-        None => g.und_has_edge(y, z),
+        None => g.has_und_fast(y, z),
     };
     if !present {
         return 0;
     }
     match dir {
         Direction::Undirected => 0b11,
-        Direction::Directed => {
-            (g.out_has_edge(y, z) as u8) | ((g.out_has_edge(z, y) as u8) << 1)
-        }
+        Direction::Directed => g.fast_bits(y, z),
     }
 }
 
@@ -220,6 +235,34 @@ pub fn bits_against<G: GraphProbe>(
     }
 }
 
+/// Append the (center, t) direction bits of every `t` in `targets`
+/// (sorted ascending, all > `after`) to `out` — the frontier-local cache
+/// filler of [`super::bfs3::EnumCtx`]. Picks the cheapest strategy the
+/// probe surface offers per center: per-target probes when `center` is a
+/// bitmap hub row (O(1) word tests) or when the target list is much
+/// shorter than the row a merge would walk (the regime where per-pair
+/// probes measurably beat merges — EXPERIMENTS.md §Perf iteration 3);
+/// one [`bits_against`] two-pointer merge otherwise. All strategies
+/// produce bit-identical results; `out` is appended to, not cleared.
+#[inline]
+pub fn fill_pair_bits<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    center: u32,
+    after: u32,
+    targets: &[u32],
+    out: &mut Vec<DirBits>,
+) {
+    out.reserve(targets.len());
+    if g.is_und_hub(center) || targets.len() * 8 <= g.und_degree(center) {
+        for &t in targets {
+            out.push(pair_bits(g, dir, center, t, None));
+        }
+    } else {
+        bits_against(g, dir, center, after, targets, |_, b| out.push(b));
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +304,22 @@ mod tests {
         let e = m.epoch;
         m.mark(&g, Direction::Directed, 0);
         assert_eq!(m.epoch, e, "re-marking same center must be free");
+    }
+
+    #[test]
+    fn remark_same_center_new_direction_restamps() {
+        // regression: the early-return used to key on center alone, so a
+        // direction flip served the stale bits of the previous mode
+        let g = g();
+        let mut m = NeighborMarks::new(4);
+        m.mark(&g, Direction::Directed, 0);
+        assert_eq!(m.dir_bits(2), 0b01); // 0->2 only
+        m.mark(&g, Direction::Undirected, 0);
+        assert_eq!(m.dir_bits(2), 0b11, "undirected re-mark must override directed bits");
+        assert_eq!(m.dir_bits(3), 0b11);
+        m.mark(&g, Direction::Directed, 0);
+        assert_eq!(m.dir_bits(2), 0b01, "directed re-mark must override undirected bits");
+        assert_eq!(m.dir_bits(3), 0b10); // 3->0 only
     }
 
     #[test]
@@ -339,5 +398,57 @@ mod tests {
         assert_eq!(pair_bits(&g, Direction::Directed, 1, 2, None), 0);
         assert_eq!(pair_bits(&g, Direction::Directed, 0, 2, Some(true)), 0b01);
         assert_eq!(pair_bits(&g, Direction::Undirected, 0, 2, None), 0b11);
+    }
+
+    #[test]
+    fn pair_bits_identical_across_adjacency_tiers() {
+        use crate::graph::generators;
+        let plain = generators::gnp_directed(35, 0.2, 13);
+        let mut hybrid = plain.clone();
+        hybrid.enable_hybrid(Some(2)); // most rows become hubs
+        for dir in [Direction::Directed, Direction::Undirected] {
+            for y in 0..35u32 {
+                for z in 0..35u32 {
+                    assert_eq!(
+                        pair_bits(&plain, dir, y, z, None),
+                        pair_bits(&hybrid, dir, y, z, None),
+                        "({y},{z}) {dir:?}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_pair_bits_matches_pair_probes_both_strategies() {
+        use crate::graph::generators;
+        let plain = generators::gnp_directed(30, 0.25, 21);
+        let mut hybrid = plain.clone();
+        hybrid.enable_hybrid(Some(1)); // hub strategy everywhere
+        for dir in [Direction::Directed, Direction::Undirected] {
+            for center in 0..30u32 {
+                for after in [0u32, 4, 12] {
+                    let targets: Vec<u32> = (after + 1..30).filter(|&t| t != center).collect();
+                    let want: Vec<DirBits> =
+                        targets.iter().map(|&t| pair_bits(&plain, dir, center, t, None)).collect();
+                    let mut merged = Vec::new();
+                    fill_pair_bits(&plain, dir, center, after, &targets, &mut merged);
+                    assert_eq!(merged, want, "merge strategy c={center} a={after} {dir:?}");
+                    let mut probed = Vec::new();
+                    fill_pair_bits(&hybrid, dir, center, after, &targets, &mut probed);
+                    assert_eq!(probed, want, "hub strategy c={center} a={after} {dir:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fill_pair_bits_appends() {
+        let g = g();
+        let mut out = vec![0xAA];
+        fill_pair_bits(&g, Direction::Directed, 0, 0, &[1, 2, 3], &mut out);
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0], 0xAA, "existing rows must be preserved");
+        assert_eq!(&out[1..], &[0b11, 0b01, 0b10]);
     }
 }

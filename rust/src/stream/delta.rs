@@ -198,20 +198,21 @@ fn p(b: u8) -> u8 {
     }
 }
 
-/// Direction bits of a pair known to be und-adjacent.
+/// Direction bits of a pair known to be und-adjacent. Routed through the
+/// tiered fast path — hub rows of the overlay's base CSR answer in O(1).
 #[inline]
 fn dir_bits_present<G: GraphProbe>(g: &G, directed: bool, y: u32, z: u32) -> u8 {
     if !directed {
         0b11
     } else {
-        (g.out_has_edge(y, z) as u8) | ((g.out_has_edge(z, y) as u8) << 1)
+        g.fast_bits(y, z)
     }
 }
 
 /// Direction bits of an arbitrary pair (0 when not adjacent).
 #[inline]
 fn pair_dir_bits<G: GraphProbe>(g: &G, directed: bool, y: u32, z: u32) -> u8 {
-    if !g.und_has_edge(y, z) {
+    if !g.has_und_fast(y, z) {
         0
     } else {
         dir_bits_present(g, directed, y, z)

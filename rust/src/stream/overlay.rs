@@ -22,7 +22,7 @@
 use std::collections::HashMap;
 
 use crate::graph::csr::{Csr, Graph};
-use crate::graph::GraphProbe;
+use crate::graph::{DirBits, GraphProbe};
 
 const NONE: &[u32] = &[];
 
@@ -236,15 +236,24 @@ fn row_iter_above<'a>(csr: &'a Csr, map: &'a PatchMap, v: u32, after: u32) -> Ov
 }
 
 fn row_has(csr: &Csr, map: &PatchMap, u: u32, v: u32) -> bool {
-    if let Some(p) = map.get(&u) {
-        if p.del.binary_search(&v).is_ok() {
-            return false;
-        }
-        if p.add.binary_search(&v).is_ok() {
-            return true;
-        }
+    match row_bit_patched(map, u, v) {
+        Some(b) => b,
+        None => csr.has_edge(u, v),
     }
-    csr.has_edge(u, v)
+}
+
+/// The ±side-list verdict on (u, v): `Some(present)` when u's patch pins
+/// it, `None` when the base row (CSR or bitmap tier) must answer.
+#[inline]
+fn row_bit_patched(map: &PatchMap, u: u32, v: u32) -> Option<bool> {
+    let p = map.get(&u)?;
+    if p.del.binary_search(&v).is_ok() {
+        return Some(false);
+    }
+    if p.add.binary_search(&v).is_ok() {
+        return Some(true);
+    }
+    None
 }
 
 impl GraphProbe for OverlayView<'_> {
@@ -304,6 +313,55 @@ impl GraphProbe for OverlayView<'_> {
         let (add, del) = patch_slices(&self.overlay.und, v);
         self.base.und.neighbors_above(v, after).len() + above(add, after).len()
             - above(del, after).len()
+    }
+
+    // Tiered probes: the ±side-lists are consulted first (a patched pair's
+    // truth lives there, and the base bitmap would be stale for it); only
+    // unpatched pairs fall through to the base hub rows / binary search.
+    // Und patches are symmetric and out/inn patches mutually consistent
+    // (see the mutation-op invariants above), so checking one endpoint's
+    // patch row fully decides whether the base may answer.
+
+    #[inline]
+    fn is_und_hub(&self, v: u32) -> bool {
+        self.base.und.is_hub(v)
+    }
+
+    #[inline]
+    fn has_und_fast(&self, u: u32, v: u32) -> bool {
+        match row_bit_patched(&self.overlay.und, u, v) {
+            Some(b) => b,
+            None => match self.base.und.hub_bit(u, v).or_else(|| self.base.und.hub_bit(v, u)) {
+                Some(b) => b,
+                None => self.base.und.has_edge(u, v),
+            },
+        }
+    }
+
+    #[inline]
+    fn fast_bits(&self, center: u32, v: u32) -> DirBits {
+        if !self.base.directed {
+            return if self.has_und_fast(center, v) { 0b11 } else { 0 };
+        }
+        let fwd = match row_bit_patched(&self.overlay.out, center, v) {
+            Some(b) => b,
+            None => self
+                .base
+                .out
+                .hub_bit(center, v)
+                .or_else(|| self.base.inn.hub_bit(v, center))
+                .unwrap_or_else(|| self.base.out.has_edge(center, v)),
+        };
+        let rev = match row_bit_patched(&self.overlay.out, v, center) {
+            Some(b) => b,
+            None => self
+                .base
+                .out
+                .hub_bit(v, center)
+                .or_else(|| self.base.inn.hub_bit(center, v))
+                .unwrap_or_else(|| self.base.out.has_edge(v, center)),
+        };
+        (fwd as u8) | ((rev as u8) << 1)
     }
 }
 
@@ -563,6 +621,58 @@ mod tests {
         assert!(view.out_has_edge(1, 0));
         assert!(view.und_has_edge(0, 1));
         assert!(view.und_has_edge(1, 0));
+    }
+
+    #[test]
+    fn fast_probes_consult_patches_before_base_tier() {
+        // a hybrid base whose bitmap rows are stale for every patched
+        // pair: the overlay's fast probes must still answer from the
+        // ±side-lists first
+        for &directed in &[true, false] {
+            let mut base = if directed {
+                generators::gnp_directed(30, 0.15, 11)
+            } else {
+                generators::gnp_undirected(30, 0.15, 11)
+            };
+            base.enable_hybrid(Some(1)); // every non-isolated row is a hub
+            let mut ov = DeltaOverlay::new();
+            let mut rng = Pcg32::seeded(77);
+            for _ in 0..120 {
+                let u = rng.below(30);
+                let v = rng.below(30);
+                if u == v {
+                    continue;
+                }
+                let view = OverlayView::new(&base, &ov);
+                if directed {
+                    if view.out_has_edge(u, v) {
+                        let removes = !view.out_has_edge(v, u);
+                        ov.delete_directed(&base, u, v, removes);
+                    } else {
+                        let creates = !view.und_has_edge(u, v);
+                        ov.insert_directed(&base, u, v, creates);
+                    }
+                } else if view.und_has_edge(u, v) {
+                    ov.delete_undirected(&base, u, v);
+                } else {
+                    ov.insert_undirected(&base, u, v);
+                }
+            }
+            assert!(!ov.is_empty());
+            let view = OverlayView::new(&base, &ov);
+            for u in 0..30u32 {
+                for v in 0..30u32 {
+                    assert_eq!(
+                        view.has_und_fast(u, v),
+                        view.und_has_edge(u, v),
+                        "und ({u},{v}) directed={directed}"
+                    );
+                    let want = (view.out_has_edge(u, v) as u8)
+                        | ((view.out_has_edge(v, u) as u8) << 1);
+                    assert_eq!(view.fast_bits(u, v), want, "bits ({u},{v}) directed={directed}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,197 @@
+//! Probe-parity property tests for the hybrid adjacency tier: over random
+//! G(n,p) digraphs and hub-heavy star / power-law (Barabási–Albert)
+//! generators, `--adjacency hybrid` and `--adjacency csr` sessions must
+//! produce **bit-identical** `MotifCounts` — 3- and 4-motifs, directed and
+//! undirected classification — and keep doing so over an `OverlayView`
+//! with pending inserts/deletes (the dirty-count path) and across
+//! maintained incremental counters. The bitmap rows are a pure probe
+//! accelerator; any divergence anywhere is a correctness bug.
+
+use vdmc::engine::{AdjacencyMode, CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::counter::MotifCounts;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::stream::EdgeDelta;
+use vdmc::util::rng::Pcg32;
+
+/// Sessions over the same graph in both adjacency modes. Thresholds are
+/// deliberately aggressive (`Some(2)`: almost every row becomes a hub) or
+/// automatic (`None`: ≈ √m, few hubs) so both the bitmap and the CSR
+/// fallback paths run.
+fn session_pair(g: &Graph, threshold: Option<usize>) -> (Session, Session) {
+    let csr = Session::load_with(
+        g,
+        &SessionConfig { workers: 2, adjacency: AdjacencyMode::Csr, ..Default::default() },
+    );
+    let hybrid = Session::load_with(
+        g,
+        &SessionConfig {
+            workers: 2,
+            adjacency: AdjacencyMode::Hybrid,
+            hub_threshold: threshold,
+            ..Default::default()
+        },
+    );
+    (csr, hybrid)
+}
+
+fn directions(g: &Graph) -> Vec<Direction> {
+    if g.directed {
+        vec![Direction::Directed, Direction::Undirected]
+    } else {
+        vec![Direction::Undirected]
+    }
+}
+
+fn assert_identical(a: &MotifCounts, b: &MotifCounts, ctx: &str) {
+    assert_eq!(a.total_instances, b.total_instances, "instances diverge: {ctx}");
+    assert_eq!(a.per_vertex, b.per_vertex, "per-vertex rows diverge: {ctx}");
+    assert_eq!(a.class_ids, b.class_ids, "class ids diverge: {ctx}");
+}
+
+fn check_static_parity(name: &str, g: &Graph, threshold: Option<usize>) {
+    let (csr, hybrid) = session_pair(g, threshold);
+    for size in [MotifSize::Three, MotifSize::Four] {
+        for dir in directions(g) {
+            let q = CountQuery { size, direction: dir, ..Default::default() };
+            let a = csr.count(&q).unwrap();
+            let b = hybrid.count(&q).unwrap();
+            assert_identical(&a, &b, &format!("{name} {size:?} {dir:?} t={threshold:?}"));
+        }
+    }
+}
+
+#[test]
+fn static_parity_gnp_digraphs() {
+    for seed in [1u64, 7, 23] {
+        let g = generators::gnp_directed(60, 0.08, seed);
+        check_static_parity("gnp", &g, Some(2));
+        check_static_parity("gnp", &g, None);
+    }
+}
+
+#[test]
+fn static_parity_star() {
+    // one extreme hub: every probe against it hits the bitmap row
+    // (star(120) keeps the C(119,3) 4-set volume test-sized)
+    let g = generators::star(120);
+    check_static_parity("star", &g, Some(8));
+    check_static_parity("star", &g, None);
+}
+
+#[test]
+fn static_parity_power_law() {
+    let und = generators::barabasi_albert(200, 3, 5);
+    check_static_parity("ba", &und, Some(4));
+    check_static_parity("ba", &und, None);
+    let dir = generators::barabasi_albert_directed(200, 3, 0.3, 9);
+    check_static_parity("ba-directed", &dir, Some(4));
+    check_static_parity("ba-directed", &dir, None);
+}
+
+/// A delta batch that both inserts fresh edges and deletes existing ones,
+/// in original vertex ids.
+fn mixed_batch(g: &Graph, seed: u64, ops: usize) -> Vec<EdgeDelta> {
+    let n = g.n() as u32;
+    let mut rng = Pcg32::seeded(seed);
+    let mut batch = Vec::with_capacity(ops);
+    for _ in 0..ops {
+        let (u, v) = (rng.below(n), rng.below(n));
+        if u == v {
+            continue;
+        }
+        let present =
+            if g.directed { g.out.has_edge(u, v) } else { g.und.has_edge(u, v) };
+        // flip whatever state we see in the base — the session dedups
+        // duplicate inserts / missing deletes on its own
+        if present {
+            batch.push(EdgeDelta::delete(u, v));
+        } else {
+            batch.push(EdgeDelta::insert(u, v));
+        }
+    }
+    batch
+}
+
+#[test]
+fn overlay_parity_with_pending_deltas() {
+    // compact_ratio = ∞ keeps the overlay dirty, so counts go through
+    // OverlayView's patched fast probes over the (stale) base bitmaps
+    for &(directed, seed) in &[(true, 11u64), (false, 12u64)] {
+        let g = if directed {
+            generators::barabasi_albert_directed(150, 3, 0.25, seed)
+        } else {
+            generators::barabasi_albert(150, 3, seed)
+        };
+        let mk = |adjacency| {
+            Session::load_with(
+                &g,
+                &SessionConfig {
+                    workers: 2,
+                    adjacency,
+                    hub_threshold: Some(3),
+                    compact_ratio: f64::INFINITY,
+                    ..Default::default()
+                },
+            )
+        };
+        let mut csr = mk(AdjacencyMode::Csr);
+        let mut hybrid = mk(AdjacencyMode::Hybrid);
+        let batch = mixed_batch(&g, seed ^ 0xBEEF, 60);
+        csr.apply_edges(&batch).unwrap();
+        hybrid.apply_edges(&batch).unwrap();
+        assert!(hybrid.overlay_entries() > 0, "overlay must stay dirty for this test");
+        assert_eq!(csr.overlay_entries(), hybrid.overlay_entries());
+
+        // reload oracle: the mutated graph, loaded fresh
+        let fresh = Session::load(&csr.snapshot_graph());
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in directions(&g) {
+                let q = CountQuery { size, direction: dir, ..Default::default() };
+                let a = csr.count(&q).unwrap();
+                let b = hybrid.count(&q).unwrap();
+                assert_identical(&a, &b, &format!("overlay {size:?} {dir:?} directed={directed}"));
+                let want = fresh.count(&q).unwrap();
+                assert_identical(&b, &want, &format!("overlay-vs-reload {size:?} {dir:?}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn maintained_counters_parity_across_tiers() {
+    let g = generators::barabasi_albert_directed(120, 3, 0.2, 31);
+    let mk = |adjacency| {
+        Session::load_with(
+            &g,
+            &SessionConfig {
+                workers: 2,
+                adjacency,
+                hub_threshold: Some(3),
+                ..Default::default()
+            },
+        )
+    };
+    let mut csr = mk(AdjacencyMode::Csr);
+    let mut hybrid = mk(AdjacencyMode::Hybrid);
+    for s in [&mut csr, &mut hybrid] {
+        s.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        s.maintain(MotifSize::Four, Direction::Undirected).unwrap();
+    }
+    for round in 0..3u64 {
+        let batch = mixed_batch(&csr.snapshot_graph(), 100 + round, 30);
+        let ra = csr.apply_edges(&batch).unwrap();
+        let rb = hybrid.apply_edges(&batch).unwrap();
+        assert_eq!(ra.inserted, rb.inserted, "round {round}");
+        assert_eq!(ra.deleted, rb.deleted, "round {round}");
+        assert_eq!(ra.reenumerated_sets, rb.reenumerated_sets, "round {round}");
+        for (size, dir) in
+            [(MotifSize::Three, Direction::Directed), (MotifSize::Four, Direction::Undirected)]
+        {
+            let a = csr.maintained_counts(size, dir).unwrap();
+            let b = hybrid.maintained_counts(size, dir).unwrap();
+            assert_identical(&a, &b, &format!("maintained {size:?} {dir:?} round {round}"));
+        }
+    }
+}
