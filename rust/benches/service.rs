@@ -1,0 +1,214 @@
+//! Service-layer benchmark: pool hit/miss behavior and per-request
+//! latency of the `VdmcService` façade under interleaved multi-graph
+//! traffic — the serving-path numbers `BENCH_service.json` tracks.
+//!
+//! One JSON row per line on stdout (lines starting with `{`; everything
+//! else is commentary):
+//!
+//! - `bench: "request"` — per-op latency aggregate (count, vertex_counts,
+//!   apply_edges) over the traffic mix: requests, total/mean/max secs.
+//! - `bench: "pool"` — the final [`PoolStats`]: hits, misses, hit rate,
+//!   evictions by cause, resident bytes. The run drives a byte budget
+//!   sized for ~2 of its 3 graphs, so nonzero `evictions_byte_budget`
+//!   with a high hit rate is the expected (asserted) shape.
+//! - `bench: "amortize"` — pooled vs throwaway: the same query stream
+//!   served by the pool vs paying `Session::load` per request, the
+//!   multi-graph analogue of the session-reuse ablation.
+//!
+//! Defaults: 3 G(n, 0.01) directed graphs, n = 2000, 6 traffic rounds.
+//! CI shrinks it with `--n 600`.
+
+use std::time::Instant;
+
+use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::service::{GraphSource, Request, Response, ServiceConfig, VdmcService};
+use vdmc::stream::EdgeDelta;
+use vdmc::util::json::Json;
+
+struct Opts {
+    n: usize,
+    rounds: usize,
+    seed: u64,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { n: 2000, rounds: 6, seed: 42 };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> String {
+            *i += 1;
+            args.get(*i).unwrap_or_else(|| panic!("{} needs a value", args[*i - 1])).clone()
+        };
+        match args[i].as_str() {
+            "--n" => opts.n = take(&mut i).parse().expect("--n"),
+            "--rounds" => opts.rounds = take(&mut i).parse().expect("--rounds"),
+            "--seed" => opts.seed = take(&mut i).parse().expect("--seed"),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg {other:?}"),
+        }
+        i += 1;
+    }
+    opts
+}
+
+#[derive(Default)]
+struct Lat {
+    requests: usize,
+    total: f64,
+    max: f64,
+}
+
+impl Lat {
+    fn push(&mut self, secs: f64) {
+        self.requests += 1;
+        self.total += secs;
+        self.max = self.max.max(secs);
+    }
+
+    fn row(&self, op: &str) -> Json {
+        let mut j = Json::obj();
+        j.set("bench", "request")
+            .set("op", op)
+            .set("requests", self.requests)
+            .set("total_secs", self.total)
+            .set("mean_secs", if self.requests == 0 { 0.0 } else { self.total / self.requests as f64 })
+            .set("max_secs", self.max);
+        j
+    }
+}
+
+fn load_req(id: &str, g: &Graph) -> Request {
+    Request::LoadGraph {
+        graph: id.to_string(),
+        source: GraphSource::Edges { n: g.n(), edges: g.out.edges().collect() },
+        directed: true,
+    }
+}
+
+fn main() {
+    let opts = parse_opts();
+    println!("# service bench: 3 × G({}, 0.01) directed, {} rounds", opts.n, opts.rounds);
+
+    let graphs: Vec<(String, Graph)> = (0..3u64)
+        .map(|s| (format!("g{s}"), generators::gnp_directed(opts.n, 0.01, opts.seed + s)))
+        .collect();
+
+    // budget sized for ~2 resident sessions: real traffic sees evictions
+    let per = Session::load_with(&graphs[0].1, &SessionConfig::default()).memory_bytes();
+    let mut svc = VdmcService::new(ServiceConfig {
+        max_graphs: 0,
+        byte_budget: per * 2 + per / 2,
+        ..Default::default()
+    });
+
+    // the query mix, built through the shared validating builder
+    let q3 = CountQuery::builder()
+        .size_k(3)
+        .direction_name("directed")
+        .scheduler_name("stealing")
+        .sink_name("sharded")
+        .build()
+        .expect("valid names");
+
+    let mut load = Lat::default();
+    let mut count = Lat::default();
+    let mut vertex = Lat::default();
+    let mut apply = Lat::default();
+    let t_all = Instant::now();
+    for (id, g) in &graphs {
+        let (r, secs) = svc.handle_timed(load_req(id, g));
+        r.expect("load");
+        load.push(secs);
+    }
+    for round in 0..opts.rounds {
+        for (id, g) in &graphs {
+            // a miss (evicted graph) is reloaded — that is the serving story
+            if !svc.pool().contains(id) {
+                let (r, secs) = svc.handle_timed(load_req(id, g));
+                r.expect("reload");
+                load.push(secs);
+            }
+            let (r, secs) = svc.handle_timed(Request::Count { graph: id.clone(), query: q3 });
+            r.expect("count");
+            count.push(secs);
+
+            let probe: Vec<u32> = (0..g.n() as u32).step_by((g.n() / 8).max(1)).collect();
+            let (r, secs) = svc.handle_timed(Request::VertexCounts {
+                graph: id.clone(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                vertices: probe,
+            });
+            r.expect("vertex_counts");
+            vertex.push(secs);
+
+            let n = g.n() as u32;
+            let deltas: Vec<EdgeDelta> = (0..10u32)
+                .map(|i| {
+                    let a = (i * 19 + round as u32 * 7 + 1) % n;
+                    let b = (i * 31 + round as u32 * 3 + 2) % n;
+                    if a == b {
+                        EdgeDelta::insert(a, (b + 1) % n)
+                    } else {
+                        EdgeDelta::insert(a, b)
+                    }
+                })
+                .collect();
+            let (r, secs) = svc.handle_timed(Request::ApplyEdges { graph: id.clone(), deltas });
+            r.expect("apply_edges");
+            apply.push(secs);
+        }
+    }
+    let pooled_secs = t_all.elapsed().as_secs_f64();
+
+    for (op, lat) in
+        [("load_graph", &load), ("count", &count), ("vertex_counts", &vertex), ("apply_edges", &apply)]
+    {
+        println!("{}", lat.row(op).to_string_compact());
+    }
+
+    let stats = match svc.handle(Request::Stats).expect("stats") {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    let mut j = Json::obj();
+    j.set("bench", "pool").set("rounds", opts.rounds).set("pooled_secs", pooled_secs);
+    if let Json::Obj(m) = stats.to_json() {
+        for (k, v) in m {
+            j.set(&k, v);
+        }
+    }
+    println!("{}", j.to_string_compact());
+    assert!(stats.hits > 0, "traffic mix must produce pool hits");
+    assert!(
+        stats.evictions_byte_budget > 0,
+        "a 2.5-session budget over 3 graphs must evict at least once"
+    );
+
+    // amortization: the same count stream without a pool (throwaway
+    // sessions, the seed coordinator's behavior)
+    let t0 = Instant::now();
+    let mut sink = 0u64;
+    for _ in 0..opts.rounds {
+        for (_, g) in &graphs {
+            let session = Session::load_with(g, &SessionConfig::default());
+            sink = sink.wrapping_add(session.count(&q3).expect("count").total_instances);
+        }
+    }
+    let throwaway_secs = t0.elapsed().as_secs_f64();
+    // pooled cost of the same count stream: loads (incl. eviction
+    // reloads) + count requests — the deltas/lookups aren't part of the
+    // throwaway baseline and are excluded
+    let pooled_counts_secs = load.total + count.total;
+    let mut j = Json::obj();
+    j.set("bench", "amortize")
+        .set("pooled_secs", pooled_counts_secs)
+        .set("throwaway_secs", throwaway_secs)
+        .set("pooled_speedup", throwaway_secs / pooled_counts_secs.max(1e-9))
+        .set("checksum", sink);
+    println!("{}", j.to_string_compact());
+}

@@ -75,12 +75,13 @@ impl CountConfig {
     }
 
     fn query(&self) -> CountQuery {
-        CountQuery {
-            size: self.size,
-            direction: self.direction,
-            scheduler: self.scheduler,
-            sink: self.counter,
-        }
+        CountQuery::builder()
+            .size(self.size)
+            .direction(self.direction)
+            .scheduler(self.scheduler)
+            .sink(self.counter)
+            .build()
+            .expect("typed setters cannot fail")
     }
 }
 

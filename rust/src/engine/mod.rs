@@ -30,5 +30,5 @@ pub mod sink;
 pub use crate::graph::AdjacencyMode;
 pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
 pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
-pub use session::{CountQuery, Session, SessionConfig};
+pub use session::{CountQuery, CountQueryBuilder, Session, SessionConfig};
 pub use sink::{make_sink, CounterSink, WorkerHandle};

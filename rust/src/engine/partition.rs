@@ -156,6 +156,13 @@ impl PartitionSet {
     pub fn item_lists(&self) -> Vec<Vec<WorkItem>> {
         self.shards.iter().map(|s| s.items.clone()).collect()
     }
+
+    /// Resident bytes of the cached work items across all shards — the
+    /// partition term of the pool byte budget.
+    pub fn memory_bytes(&self) -> usize {
+        self.total_items * std::mem::size_of::<WorkItem>()
+            + self.shards.len() * std::mem::size_of::<Shard>()
+    }
 }
 
 #[cfg(test)]

@@ -81,7 +81,7 @@ impl Default for SessionConfig {
 }
 
 /// One counting request against a loaded session.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct CountQuery {
     pub size: MotifSize,
     pub direction: Direction,
@@ -96,6 +96,105 @@ impl Default for CountQuery {
             direction: Direction::Directed,
             scheduler: SchedulerMode::WorkStealing,
             sink: CounterMode::Sharded,
+        }
+    }
+}
+
+impl CountQuery {
+    /// Validating builder — the one construction path shared by the CLI,
+    /// the service wire codec and the benches, so the accepted knob names
+    /// (`stealing-batch`, `partition`, ...) can't drift between surfaces.
+    pub fn builder() -> CountQueryBuilder {
+        CountQueryBuilder::default()
+    }
+}
+
+/// Builder behind [`CountQuery::builder`]. Typed setters are infallible;
+/// the `*_name` setters parse the CLI/wire spellings and defer their
+/// error to [`CountQueryBuilder::build`], so call sites chain without
+/// intermediate `?`s.
+#[derive(Debug, Clone, Default)]
+pub struct CountQueryBuilder {
+    query: CountQuery,
+    err: Option<String>,
+}
+
+impl CountQueryBuilder {
+    pub fn size(mut self, size: MotifSize) -> Self {
+        self.query.size = size;
+        self
+    }
+
+    /// Motif size from its integer spelling (3 or 4).
+    pub fn size_k(mut self, k: usize) -> Self {
+        match MotifSize::from_k(k) {
+            Some(s) => self.query.size = s,
+            None => self.fail(format!("motif size must be 3 or 4, got {k}")),
+        }
+        self
+    }
+
+    pub fn direction(mut self, direction: Direction) -> Self {
+        self.query.direction = direction;
+        self
+    }
+
+    /// Direction from its wire spelling: `directed` | `undirected`.
+    pub fn direction_name(mut self, name: &str) -> Self {
+        match Direction::parse(name) {
+            Some(d) => self.query.direction = d,
+            None => self.fail(format!("unknown direction {name:?} (directed | undirected)")),
+        }
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerMode) -> Self {
+        self.query.scheduler = scheduler;
+        self
+    }
+
+    /// Scheduler from its CLI spelling: `cursor` | `stealing` |
+    /// `stealing-batch`.
+    pub fn scheduler_name(mut self, name: &str) -> Self {
+        match name {
+            "cursor" => self.query.scheduler = SchedulerMode::SharedCursor,
+            "stealing" => self.query.scheduler = SchedulerMode::WorkStealing,
+            "stealing-batch" => self.query.scheduler = SchedulerMode::WorkStealingBatch,
+            _ => self.fail(format!(
+                "unknown scheduler {name:?} (cursor | stealing | stealing-batch)"
+            )),
+        }
+        self
+    }
+
+    pub fn sink(mut self, sink: CounterMode) -> Self {
+        self.query.sink = sink;
+        self
+    }
+
+    /// Counter sink from its CLI spelling: `atomic` | `sharded` |
+    /// `partition`.
+    pub fn sink_name(mut self, name: &str) -> Self {
+        match name {
+            "atomic" => self.query.sink = CounterMode::Atomic,
+            "sharded" => self.query.sink = CounterMode::Sharded,
+            "partition" => self.query.sink = CounterMode::PartitionLocal,
+            _ => self.fail(format!("unknown sink {name:?} (atomic | sharded | partition)")),
+        }
+        self
+    }
+
+    fn fail(&mut self, msg: String) {
+        // first error wins: it names the knob the caller got wrong
+        if self.err.is_none() {
+            self.err = Some(msg);
+        }
+    }
+
+    pub fn build(self) -> Result<CountQuery> {
+        match self.err {
+            Some(msg) => bail!("{msg}"),
+            None => Ok(self.query),
         }
     }
 }
@@ -125,6 +224,9 @@ pub struct Session {
     compactions: usize,
     setup_secs: f64,
     served: AtomicUsize,
+    /// Pool identity: which graph this session serves. `None` for
+    /// hand-built sessions outside a [`crate::service::SessionPool`].
+    graph_id: Option<String>,
 }
 
 impl Session {
@@ -166,7 +268,23 @@ impl Session {
             compactions: 0,
             setup_secs: t0.elapsed().as_secs_f64(),
             served: AtomicUsize::new(0),
+            graph_id: None,
         }
+    }
+
+    /// Tag this session with the graph id it serves (pool identity).
+    pub fn set_graph_id(&mut self, id: impl Into<String>) {
+        self.graph_id = Some(id.into());
+    }
+
+    /// The graph id this session serves, when pooled.
+    pub fn graph_id(&self) -> Option<&str> {
+        self.graph_id.as_deref()
+    }
+
+    /// Vertex count of the loaded graph.
+    pub fn n(&self) -> usize {
+        self.n
     }
 
     /// Worker threads (= shard count) queries run with.
@@ -216,6 +334,20 @@ impl Session {
     /// Bitmap hub rows of the relabeled undirected view.
     pub fn hub_rows(&self) -> usize {
         self.h.hub_rows()
+    }
+
+    /// Total resident bytes of this session: the relabeled CSR views and
+    /// hub-tier bitmaps, the pending delta overlay, the cached partition
+    /// items, and every maintained per-vertex counter. This is the number
+    /// the [`crate::service::SessionPool`] byte budget meters — it grows
+    /// as deltas accumulate and counters are registered, and shrinks on
+    /// compaction.
+    pub fn memory_bytes(&self) -> usize {
+        self.h.memory_bytes()
+            + self.overlay.memory_bytes()
+            + self.partitions.memory_bytes()
+            + self.maintained.iter().map(|m| m.memory_bytes()).sum::<usize>()
+            + self.ordering.memory_bytes()
     }
 
     /// The incrementally maintained counters.
@@ -347,10 +479,31 @@ impl Session {
 
     /// Read a maintained counter back as [`MotifCounts`] (original vertex
     /// ids). `None` when (size, direction) was never [`Session::maintain`]ed.
+    /// This materializes all n × classes rows; point lookups should use
+    /// [`Session::maintained_vertex`] instead.
     pub fn maintained_counts(&self, size: MotifSize, direction: Direction) -> Option<MotifCounts> {
         let m = self.maintained.iter().find(|m| m.size() == size && m.direction() == direction)?;
         let rows = self.ordering.unapply_rows(m.per_vertex(), m.n_classes());
         Some(m.to_counts(self.n, rows, 0.0))
+    }
+
+    /// One maintained counter row for one ORIGINAL vertex id — the
+    /// O(classes) lookup the service's `VertexCounts` request serves
+    /// from, with no n-sized materialization. `None` when (size,
+    /// direction) is not maintained or `v` is out of range.
+    pub fn maintained_vertex(
+        &self,
+        size: MotifSize,
+        direction: Direction,
+        v: u32,
+    ) -> Option<&[u64]> {
+        let m = self.maintained.iter().find(|m| m.size() == size && m.direction() == direction)?;
+        if v as usize >= self.n {
+            return None;
+        }
+        let pv = self.ordering.new_of_old[v as usize] as usize;
+        let nc = m.n_classes();
+        Some(&m.per_vertex()[pv * nc..(pv + 1) * nc])
     }
 
     /// Apply a batch of edge insertions/deletions (original vertex ids)
@@ -858,6 +1011,88 @@ mod tests {
             session.count(&q).unwrap().per_vertex,
             fresh.count(&q).unwrap().per_vertex
         );
+    }
+
+    #[test]
+    fn maintained_vertex_matches_materialized_rows() {
+        let g = generators::gnp_directed(35, 0.1, 29);
+        let mut session = Session::load(&g);
+        let (size, dir) = (MotifSize::Three, Direction::Directed);
+        assert!(session.maintained_vertex(size, dir, 0).is_none(), "nothing maintained yet");
+        session.maintain(size, dir).unwrap();
+        session.apply_edges(&[EdgeDelta::insert(0, 9), EdgeDelta::delete(1, 2)]).unwrap();
+        let full = session.maintained_counts(size, dir).unwrap();
+        for v in 0..g.n() as u32 {
+            assert_eq!(session.maintained_vertex(size, dir, v).unwrap(), full.vertex(v), "v{v}");
+        }
+        assert!(session.maintained_vertex(size, dir, g.n() as u32).is_none(), "out of range");
+        assert_eq!(session.n(), g.n());
+    }
+
+    #[test]
+    fn builder_parses_cli_spellings_and_rejects_bad_ones() {
+        let q = CountQuery::builder()
+            .size_k(4)
+            .direction_name("undirected")
+            .scheduler_name("stealing-batch")
+            .sink_name("partition")
+            .build()
+            .unwrap();
+        assert_eq!(q.size, MotifSize::Four);
+        assert_eq!(q.direction, Direction::Undirected);
+        assert_eq!(q.scheduler, SchedulerMode::WorkStealingBatch);
+        assert_eq!(q.sink, CounterMode::PartitionLocal);
+
+        // defaults match CountQuery::default()
+        let d = CountQuery::builder().build().unwrap();
+        assert_eq!(d.size, CountQuery::default().size);
+        assert_eq!(d.scheduler, CountQuery::default().scheduler);
+
+        assert!(CountQuery::builder().size_k(5).build().is_err());
+        assert!(CountQuery::builder().direction_name("sideways").build().is_err());
+        assert!(CountQuery::builder().scheduler_name("fifo").build().is_err());
+        assert!(CountQuery::builder().sink_name("tree").build().is_err());
+        // first error wins and names the bad knob
+        let err = CountQuery::builder()
+            .size_k(9)
+            .scheduler_name("fifo")
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("3 or 4"), "{err}");
+    }
+
+    #[test]
+    fn memory_bytes_tracks_session_state() {
+        let g = generators::gnp_directed(60, 0.1, 7);
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, compact_ratio: f64::INFINITY, ..Default::default() },
+        );
+        let base = session.memory_bytes();
+        assert!(base >= g.und.memory_bytes(), "must cover at least the und CSR");
+
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        let with_counter = session.memory_bytes();
+        assert!(with_counter > base, "maintained counters must be accounted");
+
+        let deltas: Vec<EdgeDelta> =
+            (0..15u32).map(|i| EdgeDelta::insert(i, (i + 23) % 60)).collect();
+        session.apply_edges(&deltas).unwrap();
+        assert!(session.overlay_entries() > 0);
+        assert!(
+            session.memory_bytes() > with_counter,
+            "a dirty overlay must grow the accounted bytes"
+        );
+    }
+
+    #[test]
+    fn graph_id_identity() {
+        let g = generators::star(6);
+        let mut session = Session::load(&g);
+        assert_eq!(session.graph_id(), None);
+        session.set_graph_id("stars/6");
+        assert_eq!(session.graph_id(), Some("stars/6"));
     }
 
     #[test]

@@ -377,6 +377,17 @@ impl Graph {
     pub fn hub_rows(&self) -> usize {
         self.und.hub_rows()
     }
+
+    /// Total resident bytes of this graph: all three CSR views (for
+    /// undirected graphs `out`/`inn` are clones of `und` and genuinely
+    /// occupy memory) plus the hybrid bitmap tier. This is the per-graph
+    /// term of the `SessionPool` byte budget.
+    pub fn memory_bytes(&self) -> usize {
+        self.und.memory_bytes()
+            + self.out.memory_bytes()
+            + self.inn.memory_bytes()
+            + self.tier_memory_bytes()
+    }
 }
 
 #[cfg(test)]

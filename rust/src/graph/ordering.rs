@@ -21,6 +21,11 @@ impl VertexOrdering {
         VertexOrdering { new_of_old: ids.clone(), old_of_new: ids }
     }
 
+    /// Resident bytes of the two permutation arrays.
+    pub fn memory_bytes(&self) -> usize {
+        (self.new_of_old.len() + self.old_of_new.len()) * std::mem::size_of::<u32>()
+    }
+
     /// Descending undirected degree; ties broken by ascending original id
     /// (the paper allows an arbitrary order between equal degrees; fixing
     /// it makes runs deterministic).

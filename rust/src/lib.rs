@@ -66,6 +66,29 @@
 //! (or `--adjacency csr`) to disable the bitmap tier — counts are
 //! bit-identical either way (`tests/property_tiers.rs`), only the
 //! wall-clock and `RunReport::tier_memory_bytes` differ.
+//!
+//! Serving **many graphs from one process** goes through the [`service`]
+//! layer instead of hand-held sessions: a [`service::VdmcService`] owns
+//! an LRU [`service::SessionPool`] (entry cap + byte budget over
+//! `Session::memory_bytes`) and answers the unified typed
+//! [`service::Request`]s — `LoadGraph`, `Count`, `VertexCounts` (the
+//! paper's per-vertex motif vectors as O(classes) row reads), `ApplyEdges`,
+//! `Maintain`, `Evict`, `Stats`. `vdmc serve` exposes exactly this API
+//! as a JSON-lines daemon on stdin/stdout:
+//!
+//! ```no_run
+//! use vdmc::service::{GraphSource, Request, Response, VdmcService};
+//!
+//! let mut svc = VdmcService::with_defaults();
+//! svc.handle(Request::LoadGraph {
+//!     graph: "toy".into(),
+//!     source: GraphSource::Edges { n: 3, edges: vec![(0, 1), (1, 2), (2, 0)] },
+//!     directed: false,
+//! }).unwrap();
+//! if let Response::Stats(stats) = svc.handle(Request::Stats).unwrap() {
+//!     println!("pool: {} resident, {} bytes", stats.entries, stats.resident_bytes);
+//! }
+//! ```
 
 pub mod baselines;
 pub mod coordinator;
@@ -73,6 +96,7 @@ pub mod engine;
 pub mod graph;
 pub mod motifs;
 pub mod runtime;
+pub mod service;
 pub mod stream;
 pub mod theory;
 pub mod toolbox;

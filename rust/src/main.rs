@@ -4,28 +4,54 @@
 //!   generate   write a random graph to an edge-list file
 //!   count      count per-vertex 3-/4-motifs of a graph file
 //!   stream     replay an edge timeline incrementally over a live session
+//!   serve      resident multi-graph daemon: JSONL requests on stdin
 //!   validate   Fig. 3 experiment: G(n,p) counts vs Eq. 7.4 theory
 //!   toolbox    Section 10 measures (k-core, pagerank, ...)
 //!   info       graph statistics
 //!   artifacts  check/compile the PJRT artifacts and print the manifest
 
 use std::fs::File;
-use std::io::{BufWriter, Write as _};
+use std::io::{BufRead as _, BufWriter, Write as _};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
 use vdmc::baselines;
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
-use vdmc::engine::{AdjacencyMode, CountQuery, SchedulerMode, Session, SessionConfig};
+use vdmc::engine::{AdjacencyMode, CountQuery, Session, SessionConfig};
 use vdmc::graph::{generators, io};
-use vdmc::motifs::counter::CounterMode;
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
+use vdmc::service::{wire, ServiceConfig, VdmcService};
 use vdmc::stream;
 use vdmc::theory;
 use vdmc::toolbox;
 use vdmc::util::cli::{App, Args, Command};
 use vdmc::util::json::Json;
+
+/// The engine knobs every session-building subcommand (`count`, `stream`,
+/// `serve`) shares; parsed back by [`parse_engine_config`] so the flag
+/// set and the config assembly can't drift between subcommands.
+fn engine_opts(cmd: Command) -> Command {
+    cmd.opt("workers", "worker threads (0 = all cores)", Some("0"))
+        .opt("adjacency", "adjacency tier: csr | hybrid (bitmap hub rows)", Some("hybrid"))
+        .opt("hub-threshold", "hybrid hub degree threshold (0 = auto, ~sqrt(m))", Some("0"))
+        .opt("compact-ratio", "overlay/base occupancy triggering compaction", Some("0.25"))
+        .flag("no-reorder", "disable degree-descending relabeling")
+}
+
+/// Wire-protocol examples shown by `vdmc serve --help`.
+const SERVE_EXAMPLES: &str = r#"
+wire protocol: one JSON request per stdin line, one JSON response per
+stdout line (blank lines and #-comments skipped; "id" is echoed back):
+    {"op":"load_graph","id":1,"graph":"web","path":"web.tsv","directed":true}
+    {"op":"load_graph","graph":"toy","n":4,"edges":[[0,1],[1,2],[2,0]]}
+    {"op":"count","graph":"web","k":3,"direction":"directed"}
+    {"op":"vertex_counts","graph":"web","k":3,"direction":"directed","vertices":[0,5,7]}
+    {"op":"apply_edges","graph":"web","deltas":[["+",0,5],["-",1,2]]}
+    {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
+    {"op":"evict","graph":"toy"}
+    {"op":"stats"}
+a failed request answers {"ok":false,...} and the daemon keeps serving."#;
 
 fn app() -> App {
     App {
@@ -41,35 +67,41 @@ fn app() -> App {
                 .opt("seed", "random seed", Some("42"))
                 .opt("out", "output path", None)
                 .flag("directed", "generate a directed graph (gnp)"),
-            Command::new("count", "count per-vertex motifs of an edge-list file")
+            engine_opts(Command::new("count", "count per-vertex motifs of an edge-list file"))
                 .opt("input", "edge list path", None)
                 .opt("k", "motif size (3 or 4)", Some("3"))
-                .opt("workers", "worker threads (0 = all cores)", Some("0"))
                 .opt("counter", "atomic | sharded | partition", Some("sharded"))
                 .opt("scheduler", "cursor | stealing | stealing-batch", Some("stealing"))
-                .opt("adjacency", "adjacency tier: csr | hybrid (bitmap hub rows)", Some("hybrid"))
-                .opt("hub-threshold", "hybrid hub degree threshold (0 = auto, ~sqrt(m))", Some("0"))
                 .opt("repeat", "serve the query N times from one session", Some("1"))
                 .opt("out", "write per-vertex counts TSV here", None)
                 .flag("directed", "interpret the file as a directed graph")
                 .flag("undirected-motifs", "classify on the undirected view")
-                .flag("no-reorder", "disable degree-descending relabeling")
                 .flag("baseline-naive", "use the brute-force baseline instead")
                 .flag("baseline-slow", "use the python-parity baseline instead")
                 .flag("json", "emit a JSON report to stdout"),
-            Command::new("stream", "replay an edge timeline incrementally over a live session")
-                .opt("input", "base edge list path", None)
-                .opt("timeline", "timeline file: `+ u v` / `- u v` per line", None)
-                .opt("batch", "edge ops per apply_edges batch", Some("100"))
-                .opt("k", "maintained motif sizes: 3 | 4 | both", Some("both"))
-                .opt("workers", "worker threads (0 = all cores)", Some("0"))
-                .opt("compact-ratio", "overlay/base occupancy triggering compaction", Some("0.25"))
-                .opt("adjacency", "adjacency tier: csr | hybrid (bitmap hub rows)", Some("hybrid"))
-                .opt("hub-threshold", "hybrid hub degree threshold (0 = auto, ~sqrt(m))", Some("0"))
-                .opt("out", "write JSON report rows here instead of stdout", None)
-                .flag("directed", "interpret the graph and timeline as directed")
-                .flag("undirected-motifs", "classify on the undirected view")
-                .flag("verify", "recount from scratch at the end and compare"),
+            engine_opts(Command::new(
+                "stream",
+                "replay an edge timeline incrementally over a live session",
+            ))
+            .opt("input", "base edge list path", None)
+            .opt("timeline", "timeline file: `+ u v` / `- u v` per line", None)
+            .opt("batch", "edge ops per apply_edges batch", Some("100"))
+            .opt("k", "maintained motif sizes: 3 | 4 | both", Some("both"))
+            .opt("out", "write JSON report rows here instead of stdout", None)
+            .flag("directed", "interpret the graph and timeline as directed")
+            .flag("undirected-motifs", "classify on the undirected view")
+            .flag("verify", "recount from scratch at the end and compare"),
+            engine_opts(Command::new(
+                "serve",
+                "resident multi-graph daemon: JSONL requests on stdin, responses on stdout",
+            ))
+            .opt("max-graphs", "session pool entry cap (0 = unbounded)", Some("8"))
+            .opt(
+                "byte-budget-mb",
+                "session pool byte budget in MiB over resident session memory (0 = unbounded)",
+                Some("0"),
+            )
+            .extra(SERVE_EXAMPLES),
             Command::new("validate", "Fig. 3: G(n,p) measurement vs Eq. 7.4 theory")
                 .opt("n", "vertex count", Some("1000"))
                 .opt("p", "edge probability", Some("0.1"))
@@ -110,6 +142,7 @@ fn main() -> ExitCode {
         "generate" => cmd_generate(&args),
         "count" => cmd_count(&args),
         "stream" => cmd_stream(&args),
+        "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
         "toolbox" => cmd_toolbox(&args),
         "info" => cmd_info(&args),
@@ -133,13 +166,86 @@ fn parse_direction(args: &Args) -> Direction {
     }
 }
 
-/// The `--adjacency` / `--hub-threshold` pair shared by `count` and
-/// `stream` (0 threshold = pick the ~√m default at load time).
+/// The `--adjacency` / `--hub-threshold` pair shared by `count`,
+/// `stream` and `serve` (0 threshold = pick the ~√m default at load time).
 fn parse_adjacency(args: &Args) -> anyhow::Result<(AdjacencyMode, Option<usize>)> {
     let mode = args.one_of("adjacency", &["csr", "hybrid"]).map_err(anyhow::Error::msg)?;
     let mode = AdjacencyMode::parse(&mode).expect("one_of pins the value set");
     let threshold: usize = args.req("hub-threshold").map_err(anyhow::Error::msg)?;
     Ok((mode, if threshold == 0 { None } else { Some(threshold) }))
+}
+
+/// Assemble the [`SessionConfig`] from the shared [`engine_opts`] flag
+/// set — the one config-assembly path for `count`, `stream` and `serve`.
+/// Options a command did not register fall back to the session defaults.
+fn parse_engine_config(args: &Args) -> anyhow::Result<SessionConfig> {
+    let defaults = SessionConfig::default();
+    let (adjacency, hub_threshold) = if args.get("adjacency").is_some() {
+        parse_adjacency(args)?
+    } else {
+        (defaults.adjacency, defaults.hub_threshold)
+    };
+    Ok(SessionConfig {
+        workers: args
+            .get_parse("workers")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.workers),
+        reorder: !args.flag("no-reorder"),
+        compact_ratio: args
+            .get_parse("compact-ratio")
+            .map_err(anyhow::Error::msg)?
+            .unwrap_or(defaults.compact_ratio),
+        adjacency,
+        hub_threshold,
+        ..defaults
+    })
+}
+
+/// The one JSON emission path of every subcommand: pretty objects for
+/// human-facing `--json` reports, compact JSONL rows for files and
+/// daemon streams — so field sets and formatting can't drift between
+/// `count`, `stream` and `serve`. A dead sink (e.g. EPIPE on a closed
+/// pager) is remembered and surfaced once by [`ReportSink::finish`].
+struct ReportSink {
+    out: Box<dyn std::io::Write>,
+    pretty: bool,
+    err: Option<std::io::Error>,
+}
+
+impl ReportSink {
+    /// Pretty-printed objects to stdout (`--json` reports).
+    fn stdout_pretty() -> ReportSink {
+        ReportSink { out: Box::new(std::io::stdout().lock()), pretty: true, err: None }
+    }
+
+    /// Compact one-object-per-line rows to `path`, or stdout when `None`.
+    fn lines(path: Option<&str>) -> anyhow::Result<ReportSink> {
+        let out: Box<dyn std::io::Write> = match path {
+            Some(p) => Box::new(BufWriter::new(File::create(p)?)),
+            None => Box::new(std::io::stdout().lock()),
+        };
+        Ok(ReportSink { out, pretty: false, err: None })
+    }
+
+    /// Emit one report. After a write error the sink goes quiet (the
+    /// caller's computation continues) and `finish` reports it.
+    fn emit(&mut self, j: &Json) {
+        if self.err.is_some() {
+            return;
+        }
+        let text = if self.pretty { j.to_string_pretty() } else { j.to_string_compact() };
+        if let Err(e) = writeln!(self.out, "{text}") {
+            self.err = Some(e);
+        }
+    }
+
+    fn finish(mut self) -> anyhow::Result<()> {
+        if let Some(e) = self.err {
+            return Err(anyhow::Error::msg(e).context("writing report row"));
+        }
+        self.out.flush()?;
+        Ok(())
+    }
 }
 
 fn load(args: &Args) -> anyhow::Result<vdmc::graph::Graph> {
@@ -193,48 +299,28 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
     } else if args.flag("baseline-slow") {
         baselines::slow::count(&g, size, direction)
     } else {
-        let counter = match args
-            .one_of("counter", &["atomic", "sharded", "partition"])
-            .map_err(anyhow::Error::msg)?
-            .as_str()
-        {
-            "atomic" => CounterMode::Atomic,
-            "partition" => CounterMode::PartitionLocal,
-            _ => CounterMode::Sharded,
-        };
-        let scheduler = match args
-            .one_of("scheduler", &["cursor", "stealing", "stealing-batch"])
-            .map_err(anyhow::Error::msg)?
-            .as_str()
-        {
-            "cursor" => SchedulerMode::SharedCursor,
-            "stealing-batch" => SchedulerMode::WorkStealingBatch,
-            _ => SchedulerMode::WorkStealing,
-        };
+        // the one validating construction path shared with the service
+        // wire codec and the benches
+        let query = CountQuery::builder()
+            .size(size)
+            .direction(direction)
+            .scheduler_name(args.get("scheduler").unwrap_or("stealing"))
+            .sink_name(args.get("counter").unwrap_or("sharded"))
+            .build()?;
         let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
         let repeat = repeat.max(1);
-        let (adjacency, hub_threshold) = parse_adjacency(args)?;
+        let cfg = parse_engine_config(args)?;
 
         // load once, serve N identical queries from the cached session —
         // the serving-path hot loop
-        let session = Session::load_with(
-            &g,
-            &SessionConfig {
-                workers: args.req("workers").map_err(anyhow::Error::msg)?,
-                reorder: !args.flag("no-reorder"),
-                adjacency,
-                hub_threshold,
-                ..Default::default()
-            },
-        );
-        if adjacency == AdjacencyMode::Hybrid {
+        let session = Session::load_with(&g, &cfg);
+        if cfg.adjacency == AdjacencyMode::Hybrid {
             eprintln!(
                 "hybrid adjacency tier: {} hub rows, {} KiB",
                 session.hub_rows(),
                 session.tier_memory_bytes() / 1024,
             );
         }
-        let query = CountQuery { size, direction, scheduler, sink: counter };
         let mut last = None;
         for i in 0..repeat {
             let (counts, report) = session.count_with_report(&query)?;
@@ -252,7 +338,9 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         let (counts, report) = last.expect("repeat >= 1");
         setup_secs = session.setup_secs();
         if args.flag("json") {
-            println!("{}", report.to_json().to_string_pretty());
+            let mut sink = ReportSink::stdout_pretty();
+            sink.emit(&report.to_json());
+            sink.finish()?;
         }
         counts
     };
@@ -293,17 +381,7 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
             _ => vec![MotifSize::Three, MotifSize::Four],
         };
 
-    let (adjacency, hub_threshold) = parse_adjacency(args)?;
-    let mut session = Session::load_with(
-        &g,
-        &SessionConfig {
-            workers: args.req("workers").map_err(anyhow::Error::msg)?,
-            compact_ratio: args.req("compact-ratio").map_err(anyhow::Error::msg)?,
-            adjacency,
-            hub_threshold,
-            ..Default::default()
-        },
-    );
+    let mut session = Session::load_with(&g, &parse_engine_config(args)?);
     for &size in &sizes {
         session.maintain(size, direction)?;
     }
@@ -317,34 +395,19 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         deltas.len(),
     );
 
-    let mut out: Box<dyn std::io::Write> = match args.get("out") {
-        Some(p) => Box::new(BufWriter::new(File::create(p)?)),
-        None => Box::new(std::io::stdout().lock()),
-    };
-    let mut write_err: Option<std::io::Error> = None;
+    let mut sink = ReportSink::lines(args.get("out"))?;
     let summary = stream::replay(&mut session, &deltas, batch, |i, report, s| {
-        if write_err.is_some() {
-            return; // sink is gone (e.g. EPIPE); keep replaying, stop writing
-        }
         let mut j = report.to_json();
         j.set("batch", i);
         let mut totals = Json::obj();
         for m in s.maintained() {
-            let dir = match m.direction() {
-                Direction::Directed => "directed",
-                Direction::Undirected => "undirected",
-            };
+            let dir = m.direction().label();
             totals.set(&format!("k{}_{dir}", m.size().k()), m.instances());
         }
         j.set("instances", totals);
-        if let Err(e) = writeln!(out, "{}", j.to_string_compact()) {
-            write_err = Some(e);
-        }
+        sink.emit(&j);
     })?;
-    if let Some(e) = write_err {
-        return Err(anyhow::Error::msg(e).context("writing report row"));
-    }
-    out.flush()?;
+    sink.finish()?;
     eprintln!(
         "replayed {} ops in {} batches: {} inserted, {} deleted, {} skipped, \
          {} re-enumerated units / {} sets, {} compactions, {:.3}s",
@@ -372,6 +435,65 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
             eprintln!("verify k={}: OK ({} instances match a full recount)", size.k(), want.total_instances);
         }
     }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let session = parse_engine_config(args)?;
+    let max_graphs: usize = args.req("max-graphs").map_err(anyhow::Error::msg)?;
+    let budget_mb: usize = args.req("byte-budget-mb").map_err(anyhow::Error::msg)?;
+    let mut svc = VdmcService::new(ServiceConfig {
+        session,
+        max_graphs,
+        byte_budget: budget_mb << 20,
+    });
+    eprintln!(
+        "vdmc serve: pool caps {} graphs / {} MiB (0 = unbounded); one JSON request per line",
+        max_graphs, budget_mb,
+    );
+
+    let stdin = std::io::stdin();
+    let mut out = std::io::stdout().lock();
+    let mut served = 0u64;
+    for line in stdin.lock().lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let reply = match wire::decode_request(line) {
+            Ok((req, id)) => {
+                let op = req.op();
+                let (result, secs) = svc.handle_timed(req);
+                match result {
+                    Ok(resp) => wire::encode_response(&resp, id, secs),
+                    Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+                }
+            }
+            // best-effort id/op echo so the client can correlate the
+            // failure even when the request never decoded
+            Err(e) => {
+                let j = Json::parse(line).ok();
+                let id = j.as_ref().and_then(|j| j.get("id")).and_then(Json::as_u64);
+                let op = j.as_ref().and_then(|j| j.get("op")).and_then(Json::as_str).map(String::from);
+                wire::encode_error(op.as_deref(), id, &e)
+            }
+        };
+        // one response per request, flushed immediately: clients pipeline
+        writeln!(out, "{reply}")?;
+        out.flush()?;
+        served += 1;
+    }
+    let stats = svc.pool().stats();
+    eprintln!(
+        "vdmc serve: stdin closed after {served} request(s); pool {} resident / {} bytes, \
+         {} hits / {} misses, {} evictions",
+        stats.entries,
+        stats.resident_bytes,
+        stats.hits,
+        stats.misses,
+        stats.evictions(),
+    );
     Ok(())
 }
 
@@ -430,7 +552,9 @@ fn cmd_validate(args: &Args) -> anyhow::Result<()> {
             .set("accepts_at_5pct", chi.accepts_at_5pct())
             .set("observed", observed.clone())
             .set("expected", expected.clone());
-        println!("{}", j.to_string_pretty());
+        let mut sink = ReportSink::stdout_pretty();
+        sink.emit(&j);
+        sink.finish()?;
     } else {
         println!("# class\tobserved\texpected\tlog10(obs)\tlog10(exp)");
         for ((cid, o), e) in counts.class_ids.iter().zip(&observed).zip(&expected) {
@@ -503,7 +627,9 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
         .set("mean_degree", s.mean)
         .set("max_degree", s.max)
         .set("csr_bytes", g.und.memory_bytes() + if g.directed { g.out.memory_bytes() } else { 0 });
-    println!("{}", j.to_string_pretty());
+    let mut sink = ReportSink::stdout_pretty();
+    sink.emit(&j);
+    sink.finish()?;
     Ok(())
 }
 

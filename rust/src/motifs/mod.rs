@@ -45,3 +45,23 @@ pub enum Direction {
     Directed,
     Undirected,
 }
+
+impl Direction {
+    /// Parse the one CLI/wire spelling (`directed` | `undirected`) —
+    /// every surface shares this so the accepted names can't drift.
+    pub fn parse(s: &str) -> Option<Direction> {
+        match s {
+            "directed" => Some(Direction::Directed),
+            "undirected" => Some(Direction::Undirected),
+            _ => None,
+        }
+    }
+
+    /// The spelling [`Direction::parse`] accepts.
+    pub fn label(self) -> &'static str {
+        match self {
+            Direction::Directed => "directed",
+            Direction::Undirected => "undirected",
+        }
+    }
+}

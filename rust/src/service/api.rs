@@ -1,0 +1,147 @@
+//! The unified typed request/response surface of [`crate::service`].
+//!
+//! Every way of driving the engine — load a graph, run a count, look up
+//! per-vertex motif vectors, apply edge deltas, register maintenance,
+//! evict, read pool stats — is one [`Request`] variant routed through
+//! [`crate::service::VdmcService::handle`] to a pooled session, answered
+//! by one [`Response`] variant. The CLI's `vdmc serve` speaks exactly
+//! this surface over JSON lines ([`crate::service::wire`]); in-process
+//! callers (tests, benches, embedding applications) construct the typed
+//! values directly and get full-fidelity results back (e.g.
+//! [`Response::Counted`] carries the complete [`MotifCounts`], not the
+//! wire's class-total digest).
+
+use std::path::PathBuf;
+
+use crate::coordinator::metrics::RunReport;
+use crate::engine::CountQuery;
+use crate::motifs::counter::MotifCounts;
+use crate::motifs::{Direction, MotifSize};
+use crate::stream::{DeltaReport, EdgeDelta};
+
+use super::pool::PoolStats;
+
+/// Where a [`Request::LoadGraph`] gets its edges.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphSource {
+    /// An edge-list file (`u<TAB>v` per line), loaded server-side.
+    Path(PathBuf),
+    /// Inline edges — small graphs shipped over the wire.
+    Edges { n: usize, edges: Vec<(u32, u32)> },
+}
+
+/// One request against the service. `graph` is the pool key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Load (or reload) a graph into the pool under `graph`.
+    LoadGraph { graph: String, source: GraphSource, directed: bool },
+    /// Full per-vertex count with an explicit [`CountQuery`].
+    Count { graph: String, query: CountQuery },
+    /// Per-vertex motif vector lookup for a vertex set — the paper's
+    /// headline deliverable served interactively. The first lookup for a
+    /// (size, direction) pair registers a maintained counter (one full
+    /// enumeration); afterwards lookups are O(|vertices| × classes) array
+    /// reads and stay fresh across [`Request::ApplyEdges`].
+    VertexCounts { graph: String, size: MotifSize, direction: Direction, vertices: Vec<u32> },
+    /// Apply an edge insert/delete batch to the live session.
+    ApplyEdges { graph: String, deltas: Vec<EdgeDelta> },
+    /// Register incremental maintenance for (size, direction).
+    Maintain { graph: String, size: MotifSize, direction: Direction },
+    /// Drop a graph from the pool.
+    Evict { graph: String },
+    /// Pool metrics snapshot.
+    Stats,
+}
+
+impl Request {
+    /// Wire discriminator (the `"op"` field).
+    pub fn op(&self) -> &'static str {
+        match self {
+            Request::LoadGraph { .. } => "load_graph",
+            Request::Count { .. } => "count",
+            Request::VertexCounts { .. } => "vertex_counts",
+            Request::ApplyEdges { .. } => "apply_edges",
+            Request::Maintain { .. } => "maintain",
+            Request::Evict { .. } => "evict",
+            Request::Stats => "stats",
+        }
+    }
+
+    /// The pool key this request targets, when it targets one.
+    pub fn graph(&self) -> Option<&str> {
+        match self {
+            Request::LoadGraph { graph, .. }
+            | Request::Count { graph, .. }
+            | Request::VertexCounts { graph, .. }
+            | Request::ApplyEdges { graph, .. }
+            | Request::Maintain { graph, .. }
+            | Request::Evict { graph } => Some(graph),
+            Request::Stats => None,
+        }
+    }
+}
+
+/// One per-vertex row of a [`Response::VertexRows`] answer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VertexRow {
+    /// Original vertex id.
+    pub vertex: u32,
+    /// Class counts, indexed like `class_ids`.
+    pub counts: Vec<u64>,
+}
+
+/// The typed answer to one [`Request`].
+#[derive(Debug, Clone)]
+pub enum Response {
+    /// Graph resident under `graph`.
+    Loaded {
+        graph: String,
+        n: usize,
+        m: usize,
+        directed: bool,
+        /// Accounted bytes of the new session.
+        memory_bytes: usize,
+        /// An older session under the same id was replaced.
+        replaced: bool,
+        /// LRU evictions this load forced.
+        evicted: u64,
+    },
+    /// Full count result (complete per-vertex matrix in-process; the wire
+    /// digests it to class totals — use `vertex_counts` for exact rows).
+    Counted { graph: String, counts: MotifCounts, report: RunReport },
+    /// Per-vertex motif vectors for the requested set.
+    VertexRows {
+        graph: String,
+        size: MotifSize,
+        direction: Direction,
+        /// Canonical class id per column.
+        class_ids: Vec<u16>,
+        rows: Vec<VertexRow>,
+        /// Maintained instance total of the whole graph.
+        total_instances: u64,
+    },
+    /// Edge batch applied.
+    Applied { graph: String, report: DeltaReport },
+    /// Maintenance registered (idempotent).
+    Maintained { graph: String, size: MotifSize, direction: Direction, instances: u64 },
+    /// Eviction outcome.
+    Evicted { graph: String, found: bool },
+    /// Pool metrics.
+    Stats(PoolStats),
+}
+
+impl Response {
+    /// Wire discriminator, mirroring [`Request::op`].
+    pub fn op(&self) -> &'static str {
+        match self {
+            Response::Loaded { .. } => "load_graph",
+            Response::Counted { .. } => "count",
+            Response::VertexRows { .. } => "vertex_counts",
+            Response::Applied { .. } => "apply_edges",
+            Response::Maintained { .. } => "maintain",
+            Response::Evicted { .. } => "evict",
+            Response::Stats(_) => "stats",
+        }
+    }
+}
+

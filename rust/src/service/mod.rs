@@ -1,0 +1,399 @@
+//! Service layer: one resident process, many graphs, one typed API.
+//!
+//! The engine below this layer answers one graph per [`Session`]; the
+//! ROADMAP's north star is a deployment serving per-vertex motif queries
+//! for *many* graphs under heavy traffic. [`VdmcService`] is that
+//! façade:
+//!
+//! ```text
+//!            Request (typed / JSONL)                Response
+//!                 │                                     ▲
+//!                 ▼                                     │
+//!  VdmcService::handle ── routes by graph id ── per-request timing
+//!                 │
+//!                 ▼
+//!        SessionPool (LRU: entry cap + byte budget, PoolStats)
+//!                 │
+//!                 ▼
+//!   Session (cached ordering/CSR/hub tier/partitions + overlay)
+//! ```
+//!
+//! - [`api`] — the [`Request`]/[`Response`] enums: `LoadGraph`, `Count`,
+//!   `VertexCounts` (the paper's per-vertex motif vectors, served as
+//!   array lookups from maintained counters), `ApplyEdges`, `Maintain`,
+//!   `Evict`, `Stats`.
+//! - [`pool`] — [`SessionPool`]: LRU keyed by graph id, bounded by entry
+//!   count and a byte budget computed from CSR + hub-tier + overlay +
+//!   counter memory ([`Session::memory_bytes`]), metered by
+//!   [`PoolStats`].
+//! - [`wire`] — the JSON-lines codec `vdmc serve` speaks on
+//!   stdin/stdout.
+//!
+//! Every later ROADMAP item (GPU sink, NUMA pinning, real-world
+//! datasets) plugs in *below* this API: clients keep sending the same
+//! requests.
+
+pub mod api;
+pub mod pool;
+pub mod wire;
+
+pub use api::{GraphSource, Request, Response, VertexRow};
+pub use pool::{PoolStats, SessionPool};
+
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::{Session, SessionConfig};
+use crate::graph::csr::Graph;
+use crate::graph::io;
+
+/// Service sizing: how sessions are built and how many stay resident.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Load-time configuration applied to every pooled session.
+    pub session: SessionConfig,
+    /// Pool entry cap (0 = unbounded).
+    pub max_graphs: usize,
+    /// Pool byte budget over [`Session::memory_bytes`] (0 = unbounded).
+    pub byte_budget: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig { session: SessionConfig::default(), max_graphs: 8, byte_budget: 0 }
+    }
+}
+
+/// The multi-graph façade: owns a [`SessionPool`] and routes every
+/// [`Request`] to the right pooled session.
+pub struct VdmcService {
+    session_cfg: SessionConfig,
+    pool: SessionPool,
+}
+
+impl VdmcService {
+    pub fn new(cfg: ServiceConfig) -> VdmcService {
+        VdmcService {
+            session_cfg: cfg.session,
+            pool: SessionPool::new(cfg.max_graphs, cfg.byte_budget),
+        }
+    }
+
+    /// Default sizing (8 resident graphs, no byte budget).
+    pub fn with_defaults() -> VdmcService {
+        VdmcService::new(ServiceConfig::default())
+    }
+
+    /// The pool, for metrics inspection.
+    pub fn pool(&self) -> &SessionPool {
+        &self.pool
+    }
+
+    fn session(&mut self, id: &str) -> Result<&mut Session> {
+        self.pool
+            .get(id)
+            .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+    }
+
+    /// Handle one request. Errors are per-request: the service stays
+    /// usable after a failure.
+    pub fn handle(&mut self, req: Request) -> Result<Response> {
+        match req {
+            Request::LoadGraph { graph, source, directed } => {
+                let g = match source {
+                    GraphSource::Path(path) => io::load_edge_list(&path, directed)?,
+                    GraphSource::Edges { n, edges } => {
+                        for &(u, v) in &edges {
+                            if u as usize >= n || v as usize >= n {
+                                bail!("edge ({u},{v}) out of range for n={n}");
+                            }
+                        }
+                        Graph::from_edges(n, &edges, directed)
+                    }
+                };
+                let session = Session::load_with(&g, &self.session_cfg);
+                let memory_bytes = session.memory_bytes();
+                let replaced = self.pool.contains(&graph);
+                let evicted = self.pool.insert(&graph, session);
+                Ok(Response::Loaded {
+                    graph,
+                    n: g.n(),
+                    m: g.m(),
+                    directed: g.directed,
+                    memory_bytes,
+                    replaced,
+                    evicted,
+                })
+            }
+            Request::Count { graph, query } => {
+                let session = self.session(&graph)?;
+                let (counts, report) = session.count_with_report(&query)?;
+                Ok(Response::Counted { graph, counts, report })
+            }
+            Request::VertexCounts { graph, size, direction, vertices } => {
+                let session = self.session(&graph)?;
+                // validate the vertex set BEFORE maintain(): a bad
+                // request must not grow the session (and dodge the
+                // byte re-metering below)
+                let n = session.n();
+                if let Some(&v) = vertices.iter().find(|&&v| v as usize >= n) {
+                    bail!("vertex {v} out of range for graph {graph:?} (n={n})");
+                }
+                // first lookup for this (size, direction) pays one full
+                // enumeration; afterwards maintain() is a no-op and the
+                // counters stay fresh across apply_edges
+                session.maintain(size, direction)?;
+                // O(classes) point reads from the maintained counter —
+                // no n-sized materialization on the lookup path
+                let mut rows = Vec::with_capacity(vertices.len());
+                for v in vertices {
+                    let row =
+                        session.maintained_vertex(size, direction, v).expect("validated above");
+                    rows.push(VertexRow { vertex: v, counts: row.to_vec() });
+                }
+                let m = session
+                    .maintained()
+                    .iter()
+                    .find(|m| m.size() == size && m.direction() == direction)
+                    .expect("maintained just above");
+                let class_ids = m.class_ids();
+                let total_instances = m.instances();
+                self.pool.update_bytes(&graph);
+                Ok(Response::VertexRows {
+                    graph,
+                    size,
+                    direction,
+                    class_ids,
+                    rows,
+                    total_instances,
+                })
+            }
+            Request::ApplyEdges { graph, deltas } => {
+                let session = self.session(&graph)?;
+                let report = session.apply_edges(&deltas)?;
+                // the overlay grew (or a compaction shrank it): re-meter
+                self.pool.update_bytes(&graph);
+                Ok(Response::Applied { graph, report })
+            }
+            Request::Maintain { graph, size, direction } => {
+                let session = self.session(&graph)?;
+                session.maintain(size, direction)?;
+                let instances = session
+                    .maintained()
+                    .iter()
+                    .find(|m| m.size() == size && m.direction() == direction)
+                    .map(|m| m.instances())
+                    .expect("maintained just above");
+                self.pool.update_bytes(&graph);
+                Ok(Response::Maintained { graph, size, direction, instances })
+            }
+            Request::Evict { graph } => {
+                let found = self.pool.evict(&graph);
+                Ok(Response::Evicted { graph, found })
+            }
+            Request::Stats => Ok(Response::Stats(self.pool.stats())),
+        }
+    }
+
+    /// As [`VdmcService::handle`], returning the wall-clock seconds the
+    /// request took — the per-request timing the wire reports.
+    pub fn handle_timed(&mut self, req: Request) -> (Result<Response>, f64) {
+        let t0 = Instant::now();
+        let out = self.handle(req);
+        (out, t0.elapsed().as_secs_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{CountQuery, Session};
+    use crate::graph::generators;
+    use crate::motifs::{Direction, MotifSize};
+    use crate::stream::EdgeDelta;
+
+    fn edges_of(g: &Graph) -> Vec<(u32, u32)> {
+        g.out.edges().collect()
+    }
+
+    #[test]
+    fn service_count_matches_dedicated_session() {
+        let g = generators::gnp_directed(50, 0.08, 3);
+        let mut svc = VdmcService::with_defaults();
+        let resp = svc
+            .handle(Request::LoadGraph {
+                graph: "g".into(),
+                source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+                directed: true,
+            })
+            .unwrap();
+        match resp {
+            Response::Loaded { n, m, directed, replaced, .. } => {
+                assert_eq!((n, m, directed, replaced), (g.n(), g.m(), true, false));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let query = CountQuery::default();
+        let got = match svc.handle(Request::Count { graph: "g".into(), query }).unwrap() {
+            Response::Counted { counts, .. } => counts,
+            other => panic!("{other:?}"),
+        };
+        let want = Session::load(&g).count(&query).unwrap();
+        assert_eq!(got.per_vertex, want.per_vertex);
+        assert_eq!(got.total_instances, want.total_instances);
+    }
+
+    #[test]
+    fn vertex_counts_serves_rows_and_survives_deltas() {
+        let g = generators::gnp_directed(40, 0.1, 11);
+        let mut svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: true,
+        })
+        .unwrap();
+
+        let rows = |svc: &mut VdmcService, vs: Vec<u32>| match svc
+            .handle(Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                vertices: vs,
+            })
+            .unwrap()
+        {
+            Response::VertexRows { rows, .. } => rows,
+            other => panic!("{other:?}"),
+        };
+
+        let before = rows(&mut svc, vec![0, 7, 13]);
+        let want = Session::load(&g)
+            .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
+            .unwrap();
+        for r in &before {
+            assert_eq!(r.counts, want.vertex(r.vertex), "v{}", r.vertex);
+        }
+
+        // apply a batch, expect rows to track the patched graph
+        let deltas = vec![EdgeDelta::insert(0, 7), EdgeDelta::insert(7, 13), EdgeDelta::delete(0, 1)];
+        match svc.handle(Request::ApplyEdges { graph: "g".into(), deltas: deltas.clone() }).unwrap()
+        {
+            Response::Applied { report, .. } => assert!(report.applied() > 0),
+            other => panic!("{other:?}"),
+        }
+        let after = rows(&mut svc, vec![0, 7, 13]);
+
+        let mut oracle = Session::load(&g);
+        oracle.apply_edges(&deltas).unwrap();
+        let fresh = Session::load(&oracle.snapshot_graph());
+        let want =
+            fresh.count(&CountQuery { size: MotifSize::Three, ..Default::default() }).unwrap();
+        for r in &after {
+            assert_eq!(r.counts, want.vertex(r.vertex), "v{} after deltas", r.vertex);
+        }
+    }
+
+    #[test]
+    fn unknown_graph_and_bad_vertices_are_request_errors() {
+        let mut svc = VdmcService::with_defaults();
+        let err = svc
+            .handle(Request::Count { graph: "nope".into(), query: CountQuery::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("not loaded"), "{err}");
+
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: 5, edges: vec![(0, 1), (1, 2)] },
+            directed: false,
+        })
+        .unwrap();
+        let err = svc
+            .handle(Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                vertices: vec![99],
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+
+        // out-of-range inline edge is rejected at load
+        let err = svc
+            .handle(Request::LoadGraph {
+                graph: "bad".into(),
+                source: GraphSource::Edges { n: 2, edges: vec![(0, 9)] },
+                directed: false,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        // ... and the service keeps serving
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats(s) => assert_eq!(s.entries, 1),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn maintain_evict_stats_lifecycle() {
+        let mut svc = VdmcService::new(ServiceConfig { max_graphs: 2, ..Default::default() });
+        for (id, seed) in [("a", 1u64), ("b", 2), ("c", 3)] {
+            let g = generators::gnp_undirected(30, 0.1, seed);
+            svc.handle(Request::LoadGraph {
+                graph: id.into(),
+                source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+                directed: false,
+            })
+            .unwrap();
+        }
+        // entry cap 2: the LRU load ("a") was evicted
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats(s) => {
+                assert_eq!(s.entries, 2);
+                assert_eq!(s.evictions_entry_cap, 1);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        match svc
+            .handle(Request::Maintain {
+                graph: "c".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+            })
+            .unwrap()
+        {
+            Response::Maintained { instances, .. } => {
+                let g = generators::gnp_undirected(30, 0.1, 3);
+                let want = Session::load(&g)
+                    .count(&CountQuery {
+                        size: MotifSize::Three,
+                        direction: Direction::Undirected,
+                        ..Default::default()
+                    })
+                    .unwrap();
+                assert_eq!(instances, want.total_instances);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        match svc.handle(Request::Evict { graph: "b".into() }).unwrap() {
+            Response::Evicted { found, .. } => assert!(found),
+            other => panic!("{other:?}"),
+        }
+        match svc.handle(Request::Evict { graph: "b".into() }).unwrap() {
+            Response::Evicted { found, .. } => assert!(!found, "double evict finds nothing"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_timed_reports_elapsed() {
+        let mut svc = VdmcService::with_defaults();
+        let (resp, secs) = svc.handle_timed(Request::Stats);
+        assert!(resp.is_ok());
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,353 @@
+//! [`SessionPool`] — the multi-graph residency layer.
+//!
+//! One process serves many loaded graphs: each graph id maps to a cached
+//! [`Session`] (relabeled CSR, hub-tier bitmaps, partitions, overlay,
+//! maintained counters). The pool is an LRU bounded two ways:
+//!
+//! - **entry cap** (`max_entries`): at most this many resident sessions;
+//! - **byte budget** (`byte_budget`): the sum of
+//!   [`Session::memory_bytes`] across residents may not exceed it.
+//!
+//! Either bound at 0 means unbounded. When an insert or an in-place
+//! growth (delta overlay, newly maintained counter) pushes the pool over
+//! a bound, least-recently-used sessions are evicted until it fits —
+//! except the session that triggered enforcement, which always stays:
+//! one over-budget graph runs alone rather than thrashing.
+//!
+//! Every access is metered ([`PoolStats`]): hits, misses, loads and
+//! evictions split by cause, plus resident bytes — the serving-layer
+//! numbers `vdmc serve`'s `stats` request and `benches/service.rs`
+//! report.
+
+use crate::engine::Session;
+use crate::util::json::Json;
+
+/// Counter snapshot of one pool: sizing, traffic and eviction causes.
+#[derive(Debug, Clone, Default)]
+pub struct PoolStats {
+    /// Resident sessions right now.
+    pub entries: usize,
+    /// Sum of [`Session::memory_bytes`] over residents.
+    pub resident_bytes: usize,
+    /// Entry cap (0 = unbounded).
+    pub max_entries: usize,
+    /// Byte budget (0 = unbounded).
+    pub byte_budget: usize,
+    /// `get` calls that found the graph resident.
+    pub hits: u64,
+    /// `get` calls that missed.
+    pub misses: u64,
+    /// Sessions inserted over the pool's lifetime.
+    pub loads: u64,
+    /// LRU evictions forced by the entry cap.
+    pub evictions_entry_cap: u64,
+    /// LRU evictions forced by the byte budget.
+    pub evictions_byte_budget: u64,
+    /// Explicit evictions (`evict` requests / replaced loads).
+    pub evictions_explicit: u64,
+}
+
+impl PoolStats {
+    /// All evictions regardless of cause.
+    pub fn evictions(&self) -> u64 {
+        self.evictions_entry_cap + self.evictions_byte_budget + self.evictions_explicit
+    }
+
+    /// Fraction of `get` calls served from a resident session.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("entries", self.entries)
+            .set("resident_bytes", self.resident_bytes)
+            .set("max_entries", self.max_entries)
+            .set("byte_budget", self.byte_budget)
+            .set("hits", self.hits)
+            .set("misses", self.misses)
+            .set("hit_rate", self.hit_rate())
+            .set("loads", self.loads)
+            .set("evictions", self.evictions())
+            .set("evictions_entry_cap", self.evictions_entry_cap)
+            .set("evictions_byte_budget", self.evictions_byte_budget)
+            .set("evictions_explicit", self.evictions_explicit);
+        j
+    }
+}
+
+struct Entry {
+    id: String,
+    session: Session,
+    /// Recency stamp: larger = used more recently.
+    last_used: u64,
+    /// Cached [`Session::memory_bytes`] as of the last touch/update.
+    bytes: usize,
+}
+
+/// LRU session cache keyed by graph id. See the module docs for the
+/// two-bound eviction policy.
+pub struct SessionPool {
+    max_entries: usize,
+    byte_budget: usize,
+    entries: Vec<Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    loads: u64,
+    evictions_entry_cap: u64,
+    evictions_byte_budget: u64,
+    evictions_explicit: u64,
+}
+
+impl SessionPool {
+    /// `max_entries` / `byte_budget` of 0 mean unbounded.
+    pub fn new(max_entries: usize, byte_budget: usize) -> SessionPool {
+        SessionPool {
+            max_entries,
+            byte_budget,
+            entries: Vec::new(),
+            tick: 0,
+            hits: 0,
+            misses: 0,
+            loads: 0,
+            evictions_entry_cap: 0,
+            evictions_byte_budget: 0,
+            evictions_explicit: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Sum of accounted bytes over resident sessions.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// Is this graph resident? (No stats side effects.)
+    pub fn contains(&self, id: &str) -> bool {
+        self.entries.iter().any(|e| e.id == id)
+    }
+
+    /// Resident graph ids, least-recently-used first (the eviction order).
+    pub fn ids_lru(&self) -> Vec<String> {
+        let mut ids: Vec<(u64, &str)> =
+            self.entries.iter().map(|e| (e.last_used, e.id.as_str())).collect();
+        ids.sort_unstable();
+        ids.into_iter().map(|(_, id)| id.to_string()).collect()
+    }
+
+    fn next_tick(&mut self) -> u64 {
+        self.tick += 1;
+        self.tick
+    }
+
+    /// Insert (or replace) the session for `id`, then enforce both bounds
+    /// against every *other* resident. Returns how many sessions were
+    /// evicted to make room.
+    pub fn insert(&mut self, id: &str, mut session: Session) -> u64 {
+        session.set_graph_id(id);
+        let bytes = session.memory_bytes();
+        if let Some(i) = self.entries.iter().position(|e| e.id == id) {
+            // reload of a resident graph: swap in place, not an LRU event
+            self.entries.remove(i);
+            self.evictions_explicit += 1;
+        }
+        let last_used = self.next_tick();
+        self.entries.push(Entry { id: id.to_string(), session, last_used, bytes });
+        self.loads += 1;
+        self.enforce(id)
+    }
+
+    /// Fetch a resident session, bumping recency. Counts a hit or a miss.
+    pub fn get(&mut self, id: &str) -> Option<&mut Session> {
+        let tick = self.tick + 1;
+        match self.entries.iter_mut().find(|e| e.id == id) {
+            Some(e) => {
+                e.last_used = tick;
+                self.tick = tick;
+                self.hits += 1;
+                Some(&mut e.session)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Drop one graph. Returns whether it was resident.
+    pub fn evict(&mut self, id: &str) -> bool {
+        match self.entries.iter().position(|e| e.id == id) {
+            Some(i) => {
+                self.entries.remove(i);
+                self.evictions_explicit += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Re-account `id`'s bytes after an in-place mutation (delta overlay
+    /// growth, new maintained counter, compaction) and re-enforce the
+    /// byte budget against the other residents.
+    pub fn update_bytes(&mut self, id: &str) -> u64 {
+        if let Some(e) = self.entries.iter_mut().find(|x| x.id == id) {
+            e.bytes = e.session.memory_bytes();
+            self.enforce(id)
+        } else {
+            0
+        }
+    }
+
+    /// Evict least-recently-used entries (never `protect`) until both
+    /// bounds hold. Returns the number of evictions performed.
+    fn enforce(&mut self, protect: &str) -> u64 {
+        let mut evicted = 0u64;
+        loop {
+            let over_entries = self.max_entries > 0 && self.entries.len() > self.max_entries;
+            let over_bytes = self.byte_budget > 0 && self.resident_bytes() > self.byte_budget;
+            if !over_entries && !over_bytes {
+                return evicted;
+            }
+            let victim = self
+                .entries
+                .iter()
+                .enumerate()
+                .filter(|(_, e)| e.id != protect)
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i);
+            match victim {
+                Some(i) => {
+                    self.entries.remove(i);
+                    if over_entries {
+                        self.evictions_entry_cap += 1;
+                    } else {
+                        self.evictions_byte_budget += 1;
+                    }
+                    evicted += 1;
+                }
+                // only the protected session remains: an over-budget
+                // graph runs alone rather than evicting itself
+                None => return evicted,
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            entries: self.entries.len(),
+            resident_bytes: self.resident_bytes(),
+            max_entries: self.max_entries,
+            byte_budget: self.byte_budget,
+            hits: self.hits,
+            misses: self.misses,
+            loads: self.loads,
+            evictions_entry_cap: self.evictions_entry_cap,
+            evictions_byte_budget: self.evictions_byte_budget,
+            evictions_explicit: self.evictions_explicit,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn session(n: usize, seed: u64) -> Session {
+        Session::load(&generators::gnp_directed(n, 0.05, seed))
+    }
+
+    #[test]
+    fn lru_eviction_order_under_entry_cap() {
+        let mut pool = SessionPool::new(2, 0);
+        pool.insert("a", session(30, 1));
+        pool.insert("b", session(30, 2));
+        assert!(pool.get("a").is_some(), "touch a: b becomes LRU");
+        pool.insert("c", session(30, 3));
+        assert!(pool.contains("a") && pool.contains("c"));
+        assert!(!pool.contains("b"), "LRU entry b must be the victim");
+        assert_eq!(pool.stats().evictions_entry_cap, 1);
+        assert_eq!(pool.ids_lru(), vec!["a".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn byte_budget_evicts_and_protects_the_newcomer() {
+        let one = session(200, 1);
+        let budget = one.memory_bytes() + one.memory_bytes() / 2; // fits ~1.5 sessions
+        let mut pool = SessionPool::new(0, budget);
+        pool.insert("a", session(200, 1));
+        pool.insert("b", session(200, 2));
+        assert_eq!(pool.len(), 1, "budget fits only one of two equal sessions");
+        assert!(pool.contains("b"), "the newcomer is protected");
+        assert_eq!(pool.stats().evictions_byte_budget, 1);
+        assert!(pool.resident_bytes() <= budget);
+
+        // an over-budget single graph still runs alone
+        let mut tiny = SessionPool::new(0, 16);
+        tiny.insert("huge", session(200, 3));
+        assert_eq!(tiny.len(), 1);
+        assert!(tiny.resident_bytes() > 16);
+    }
+
+    #[test]
+    fn hit_miss_and_load_counters() {
+        let mut pool = SessionPool::new(0, 0);
+        assert!(pool.get("a").is_none());
+        pool.insert("a", session(30, 1));
+        assert!(pool.get("a").is_some());
+        assert!(pool.get("a").is_some());
+        assert!(pool.get("zzz").is_none());
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.loads), (2, 2, 1));
+        assert!((s.hit_rate() - 0.5).abs() < 1e-12);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"hits\":2"), "{j}");
+        assert!(j.contains("\"evictions\":0"), "{j}");
+    }
+
+    #[test]
+    fn replace_and_explicit_evict() {
+        let mut pool = SessionPool::new(0, 0);
+        pool.insert("a", session(30, 1));
+        pool.insert("a", session(40, 2));
+        assert_eq!(pool.len(), 1);
+        assert_eq!(pool.get("a").unwrap().graph_id(), Some("a"));
+        assert!(pool.evict("a"));
+        assert!(!pool.evict("a"), "second evict finds nothing");
+        let s = pool.stats();
+        assert_eq!(s.evictions_explicit, 2, "replace + explicit evict");
+        assert_eq!(s.loads, 2);
+    }
+
+    #[test]
+    fn update_bytes_reenforces_budget() {
+        let probe = session(100, 1);
+        let per = probe.memory_bytes();
+        // generous budget: both fit while clean
+        let mut pool = SessionPool::new(0, 2 * per + per / 4);
+        pool.insert("a", session(100, 1));
+        pool.insert("b", session(100, 2));
+        assert_eq!(pool.len(), 2);
+        // grow b in place past the slack: maintaining a 4-motif counter
+        // adds n × classes × 8 bytes
+        let b = pool.get("b").unwrap();
+        b.maintain(crate::motifs::MotifSize::Four, crate::motifs::Direction::Directed).unwrap();
+        let evicted = pool.update_bytes("b");
+        assert_eq!(evicted, 1, "growth must push a out");
+        assert!(pool.contains("b") && !pool.contains("a"));
+        assert_eq!(pool.stats().evictions_byte_budget, 1);
+    }
+}

@@ -1,0 +1,441 @@
+//! JSON-lines wire codec: one [`Request`] per input line, one response
+//! object per output line, over [`crate::util::json::Json`].
+//!
+//! ## Requests
+//!
+//! Every request is a JSON object with an `"op"` discriminator and an
+//! optional numeric `"id"` echoed back in the response:
+//!
+//! ```text
+//! {"op":"load_graph","id":1,"graph":"web","path":"web.tsv","directed":true}
+//! {"op":"load_graph","graph":"toy","directed":false,"n":4,"edges":[[0,1],[1,2],[2,0]]}
+//! {"op":"count","graph":"web","k":3,"direction":"directed","scheduler":"stealing","sink":"sharded"}
+//! {"op":"vertex_counts","graph":"web","k":3,"direction":"directed","vertices":[0,5,7]}
+//! {"op":"apply_edges","graph":"web","deltas":[["+",0,5],["-",1,2]]}
+//! {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
+//! {"op":"evict","graph":"toy"}
+//! {"op":"stats"}
+//! ```
+//!
+//! `count` defaults: `k` 3, `direction` `"directed"`, `scheduler`
+//! `"stealing"`, `sink` `"sharded"` — the same spellings and defaults as
+//! the `vdmc count` flags, because both go through
+//! [`CountQuery::builder`].
+//!
+//! ## Responses
+//!
+//! Success: `{"ok":true,"op":...,"id":...,"elapsed_secs":...,` payload
+//! `}`. Failure: `{"ok":false,"op":...,"id":...,"error":"..."}` — the
+//! stream keeps going; one bad request never kills the daemon. `count`
+//! answers carry the class-total digest (`"classes":{"m6":123,...}`);
+//! exact per-vertex rows go through `vertex_counts`, whose `"counts"`
+//! maps each requested vertex to its class vector.
+
+use crate::engine::CountQuery;
+use crate::motifs::{Direction, MotifSize};
+use crate::stream::EdgeDelta;
+use crate::util::json::Json;
+
+use super::api::{GraphSource, Request, Response};
+
+/// Optional string field: absent -> `default`; present non-string ->
+/// error (a mistyped field must never silently become a default).
+fn field_str<'a>(j: &'a Json, key: &str, default: &'a str) -> Result<&'a str, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_str().ok_or_else(|| format!("\"{key}\" must be a string, got {v:?}")),
+    }
+}
+
+/// Optional boolean field, strict like [`field_str`].
+fn field_bool(j: &Json, key: &str, default: bool) -> Result<bool, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_bool().ok_or_else(|| format!("\"{key}\" must be a boolean, got {v:?}")),
+    }
+}
+
+/// Decode one request line. Returns the request plus the echo id.
+pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
+    let j = Json::parse(line)?;
+    let id = j.get("id").and_then(Json::as_u64);
+    let op = j
+        .get("op")
+        .and_then(Json::as_str)
+        .ok_or_else(|| "request needs a string \"op\" field".to_string())?;
+    let graph = || -> Result<String, String> {
+        j.get("graph")
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("{op:?} needs a string \"graph\" field"))
+    };
+    let size = || -> Result<MotifSize, String> {
+        match j.get("k") {
+            None => Ok(MotifSize::Three),
+            Some(v) => v
+                .as_usize()
+                .and_then(MotifSize::from_k)
+                .ok_or_else(|| format!("\"k\" must be 3 or 4, got {v:?}")),
+        }
+    };
+    let direction = || -> Result<Direction, String> {
+        let name = field_str(&j, "direction", "directed")?;
+        Direction::parse(name)
+            .ok_or_else(|| format!("unknown direction {name:?} (directed | undirected)"))
+    };
+
+    let req = match op {
+        "load_graph" => {
+            let directed = field_bool(&j, "directed", false)?;
+            let path = match j.get("path") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| format!("\"path\" must be a string, got {v:?}"))?,
+                ),
+            };
+            let source = match (path, j.get("edges")) {
+                (Some(path), None) => GraphSource::Path(path.into()),
+                (None, Some(edges)) => {
+                    let pairs = decode_pairs(edges)?;
+                    let n = match j.get("n") {
+                        // default: tight bound over the inline edges
+                        None => {
+                            pairs.iter().map(|&(u, v)| u.max(v) as usize + 1).max().unwrap_or(0)
+                        }
+                        Some(v) => v
+                            .as_usize()
+                            .ok_or_else(|| format!("\"n\" must be an integer, got {v:?}"))?,
+                    };
+                    GraphSource::Edges { n, edges: pairs }
+                }
+                (Some(_), Some(_)) => {
+                    return Err("load_graph takes \"path\" or \"edges\", not both".to_string())
+                }
+                (None, None) => {
+                    return Err("load_graph needs a \"path\" or an \"edges\" array".to_string())
+                }
+            };
+            Request::LoadGraph { graph: graph()?, source, directed }
+        }
+        "count" => {
+            let query = CountQuery::builder()
+                .size(size()?)
+                .direction(direction()?)
+                .scheduler_name(field_str(&j, "scheduler", "stealing")?)
+                .sink_name(field_str(&j, "sink", "sharded")?)
+                .build()
+                .map_err(|e| e.to_string())?;
+            Request::Count { graph: graph()?, query }
+        }
+        "vertex_counts" => {
+            let vs = j
+                .get("vertices")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "vertex_counts needs a \"vertices\" array".to_string())?;
+            let vertices = vs
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .filter(|&x| x <= u32::MAX as u64)
+                        .map(|x| x as u32)
+                        .ok_or_else(|| format!("bad vertex id {v:?}"))
+                })
+                .collect::<Result<Vec<u32>, String>>()?;
+            Request::VertexCounts { graph: graph()?, size: size()?, direction: direction()?, vertices }
+        }
+        "apply_edges" => {
+            let ds = j
+                .get("deltas")
+                .and_then(Json::as_arr)
+                .ok_or_else(|| "apply_edges needs a \"deltas\" array".to_string())?;
+            let deltas = ds.iter().map(decode_delta).collect::<Result<Vec<_>, String>>()?;
+            Request::ApplyEdges { graph: graph()?, deltas }
+        }
+        "maintain" => Request::Maintain { graph: graph()?, size: size()?, direction: direction()? },
+        "evict" => Request::Evict { graph: graph()? },
+        "stats" => Request::Stats,
+        other => return Err(format!("unknown op {other:?}")),
+    };
+    Ok((req, id))
+}
+
+/// `[u, v]` pairs.
+fn decode_pairs(v: &Json) -> Result<Vec<(u32, u32)>, String> {
+    v.as_arr()
+        .ok_or_else(|| "\"edges\" must be an array of [u,v] pairs".to_string())?
+        .iter()
+        .map(|pair| match pair.as_arr() {
+            Some([u, v]) => match (u.as_u64(), v.as_u64()) {
+                (Some(u), Some(v)) if u <= u32::MAX as u64 && v <= u32::MAX as u64 => {
+                    Ok((u as u32, v as u32))
+                }
+                _ => Err(format!("bad edge {pair:?}")),
+            },
+            _ => Err(format!("bad edge {pair:?} (want [u,v])")),
+        })
+        .collect()
+}
+
+/// `["+", u, v]` / `["-", u, v]` delta triples.
+fn decode_delta(d: &Json) -> Result<EdgeDelta, String> {
+    let bad = || format!("bad delta {d:?} (want [\"+\"|\"-\", u, v])");
+    match d.as_arr() {
+        Some([op, u, v]) => {
+            let u = u.as_u64().filter(|&x| x <= u32::MAX as u64).ok_or_else(bad)? as u32;
+            let v = v.as_u64().filter(|&x| x <= u32::MAX as u64).ok_or_else(bad)? as u32;
+            match op.as_str() {
+                Some("+") => Ok(EdgeDelta::insert(u, v)),
+                Some("-") => Ok(EdgeDelta::delete(u, v)),
+                _ => Err(bad()),
+            }
+        }
+        _ => Err(bad()),
+    }
+}
+
+/// Encode one successful response as a compact JSON line (no trailing
+/// newline). `elapsed_secs` is the service-side handling time of this
+/// request.
+pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> String {
+    let mut j = Json::obj();
+    j.set("ok", true).set("op", resp.op()).set("elapsed_secs", elapsed_secs);
+    if let Some(id) = id {
+        j.set("id", id);
+    }
+    match resp {
+        Response::Loaded { graph, n, m, directed, memory_bytes, replaced, evicted } => {
+            j.set("graph", graph.as_str())
+                .set("n", *n)
+                .set("m", *m)
+                .set("directed", *directed)
+                .set("memory_bytes", *memory_bytes)
+                .set("replaced", *replaced)
+                .set("evicted", *evicted);
+        }
+        Response::Counted { graph, counts, report } => {
+            let mut classes = Json::obj();
+            for (cid, t) in counts.class_ids.iter().zip(counts.class_instances()) {
+                classes.set(&format!("m{cid}"), t);
+            }
+            j.set("graph", graph.as_str())
+                .set("k", counts.k)
+                .set("direction", counts.direction.label())
+                .set("total_instances", counts.total_instances)
+                .set("n_classes", counts.n_classes)
+                .set("classes", classes)
+                .set("count_secs", counts.elapsed_secs)
+                .set("setup_reused", report.setup_reused);
+        }
+        Response::VertexRows { graph, size, direction, class_ids, rows, total_instances } => {
+            let mut counts = Json::obj();
+            for row in rows {
+                counts.set(&row.vertex.to_string(), row.counts.clone());
+            }
+            j.set("graph", graph.as_str())
+                .set("k", size.k())
+                .set("direction", direction.label())
+                .set("class_ids", class_ids.iter().map(|&c| c as u64).collect::<Vec<u64>>())
+                .set("counts", counts)
+                .set("total_instances", *total_instances);
+        }
+        Response::Applied { graph, report } => {
+            j.set("graph", graph.as_str());
+            // fold the delta report fields in flat, like `vdmc stream`
+            // rows — except its elapsed_secs, which would clobber the
+            // envelope's per-request timing; it lands as batch_secs
+            if let Json::Obj(m) = report.to_json() {
+                for (k, v) in m {
+                    let key = if k == "elapsed_secs" { "batch_secs" } else { k.as_str() };
+                    j.set(key, v);
+                }
+            }
+        }
+        Response::Maintained { graph, size, direction, instances } => {
+            j.set("graph", graph.as_str())
+                .set("k", size.k())
+                .set("direction", direction.label())
+                .set("instances", *instances);
+        }
+        Response::Evicted { graph, found } => {
+            j.set("graph", graph.as_str()).set("found", *found);
+        }
+        Response::Stats(stats) => {
+            j.set("pool", stats.to_json());
+        }
+    }
+    j.to_string_compact()
+}
+
+/// Encode a failure line. The daemon answers malformed or failed requests
+/// with these and keeps reading.
+pub fn encode_error(op: Option<&str>, id: Option<u64>, error: &str) -> String {
+    let mut j = Json::obj();
+    j.set("ok", false).set("op", op.unwrap_or("?")).set("error", error);
+    if let Some(id) = id {
+        j.set("id", id);
+    }
+    j.to_string_compact()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SchedulerMode;
+    use crate::motifs::counter::CounterMode;
+
+    #[test]
+    fn decode_every_op() {
+        let (r, id) = decode_request(
+            r#"{"op":"load_graph","id":7,"graph":"g","path":"g.tsv","directed":true}"#,
+        )
+        .unwrap();
+        assert_eq!(id, Some(7));
+        assert_eq!(
+            r,
+            Request::LoadGraph {
+                graph: "g".into(),
+                source: GraphSource::Path("g.tsv".into()),
+                directed: true
+            }
+        );
+
+        let (r, id) = decode_request(
+            r#"{"op":"load_graph","graph":"t","edges":[[0,1],[1,2]],"directed":false}"#,
+        )
+        .unwrap();
+        assert_eq!(id, None);
+        assert_eq!(
+            r,
+            Request::LoadGraph {
+                graph: "t".into(),
+                source: GraphSource::Edges { n: 3, edges: vec![(0, 1), (1, 2)] },
+                directed: false
+            }
+        );
+
+        let (r, _) = decode_request(
+            r#"{"op":"count","graph":"g","k":4,"direction":"undirected","scheduler":"cursor","sink":"atomic"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Count { graph, query } => {
+                assert_eq!(graph, "g");
+                assert_eq!(query.size, MotifSize::Four);
+                assert_eq!(query.direction, Direction::Undirected);
+                assert_eq!(query.scheduler, SchedulerMode::SharedCursor);
+                assert_eq!(query.sink, CounterMode::Atomic);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // count defaults mirror the CLI
+        let (r, _) = decode_request(r#"{"op":"count","graph":"g"}"#).unwrap();
+        match r {
+            Request::Count { query, .. } => {
+                assert_eq!(query, CountQuery::default());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let (r, _) = decode_request(
+            r#"{"op":"vertex_counts","graph":"g","k":3,"direction":"directed","vertices":[0,5]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                vertices: vec![0, 5]
+            }
+        );
+
+        let (r, _) = decode_request(
+            r#"{"op":"apply_edges","graph":"g","deltas":[["+",0,5],["-",1,2]]}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::ApplyEdges {
+                graph: "g".into(),
+                deltas: vec![EdgeDelta::insert(0, 5), EdgeDelta::delete(1, 2)]
+            }
+        );
+
+        let (r, _) =
+            decode_request(r#"{"op":"maintain","graph":"g","k":4,"direction":"undirected"}"#)
+                .unwrap();
+        assert_eq!(
+            r,
+            Request::Maintain {
+                graph: "g".into(),
+                size: MotifSize::Four,
+                direction: Direction::Undirected
+            }
+        );
+
+        assert_eq!(
+            decode_request(r#"{"op":"evict","graph":"g"}"#).unwrap().0,
+            Request::Evict { graph: "g".into() }
+        );
+        assert_eq!(decode_request(r#"{"op":"stats"}"#).unwrap().0, Request::Stats);
+    }
+
+    #[test]
+    fn decode_rejects_malformed() {
+        for bad in [
+            "not json",
+            r#"{"graph":"g"}"#,                                      // no op
+            r#"{"op":"warp"}"#,                                      // unknown op
+            r#"{"op":"count"}"#,                                     // no graph
+            r#"{"op":"count","graph":"g","k":5}"#,                   // bad k
+            r#"{"op":"count","graph":"g","scheduler":"fifo"}"#,      // bad scheduler
+            r#"{"op":"load_graph","graph":"g"}"#,                    // no source
+            r#"{"op":"load_graph","graph":"g","path":"p","edges":[]}"#, // both sources
+            r#"{"op":"apply_edges","graph":"g","deltas":[["*",1,2]]}"#, // bad delta op
+            r#"{"op":"vertex_counts","graph":"g"}"#,                 // no vertices
+            // mistyped fields must error, never silently default
+            r#"{"op":"load_graph","graph":"g","path":"p","directed":"true"}"#,
+            r#"{"op":"load_graph","graph":"g","edges":[[0,1]],"n":"4"}"#,
+            r#"{"op":"load_graph","graph":"g","path":7}"#,
+            r#"{"op":"count","graph":"g","k":"4"}"#,
+            r#"{"op":"count","graph":"g","direction":3}"#,
+            r#"{"op":"count","graph":"g","scheduler":1}"#,
+        ] {
+            assert!(decode_request(bad).is_err(), "{bad:?} must not decode");
+        }
+    }
+
+    #[test]
+    fn encode_lines_parse_back() {
+        let resp = Response::Evicted { graph: "g".into(), found: true };
+        let line = encode_response(&resp, Some(3), 0.25);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("evict"));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(3));
+        assert_eq!(j.get("found").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("elapsed_secs").and_then(Json::as_f64), Some(0.25));
+
+        let line = encode_error(Some("count"), None, "graph \"x\" not loaded");
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(j.get("error").and_then(Json::as_str).unwrap().contains("not loaded"));
+    }
+
+    #[test]
+    fn applied_report_cannot_clobber_envelope_timing() {
+        let report = crate::stream::DeltaReport {
+            inserted: 2,
+            elapsed_secs: 9.0, // the batch-internal timing
+            ..Default::default()
+        };
+        let line = encode_response(&Response::Applied { graph: "g".into(), report }, None, 0.5);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("elapsed_secs").and_then(Json::as_f64), Some(0.5), "request timing");
+        assert_eq!(j.get("batch_secs").and_then(Json::as_f64), Some(9.0), "report timing");
+        assert_eq!(j.get("inserted").and_then(Json::as_u64), Some(2));
+    }
+}

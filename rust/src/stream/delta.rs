@@ -101,6 +101,17 @@ impl MaintainedCounts {
         self.instances
     }
 
+    /// Resident bytes of the maintained per-vertex rows (n × classes
+    /// u64 counters) — the per-counter term of the pool byte budget.
+    pub fn memory_bytes(&self) -> usize {
+        self.per_vertex.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Canonical class id per column (the counter's column labels).
+    pub fn class_ids(&self) -> Vec<u16> {
+        self.mapper.class_ids()
+    }
+
     pub(crate) fn per_vertex(&self) -> &[u64] {
         &self.per_vertex
     }

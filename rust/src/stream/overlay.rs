@@ -107,6 +107,18 @@ impl DeltaOverlay {
         self.entries() as f64 / base.und.m().max(1) as f64
     }
 
+    /// Approximate resident bytes of the pending patches: side-list
+    /// entries plus per-patched-row map overhead. Feeds the session's
+    /// [`crate::engine::Session::memory_bytes`] pool accounting.
+    pub fn memory_bytes(&self) -> usize {
+        let row_overhead = std::mem::size_of::<u32>() + std::mem::size_of::<Patch>();
+        let map = |m: &PatchMap| {
+            m.len() * row_overhead
+                + m.values().map(Patch::len).sum::<usize>() * std::mem::size_of::<u32>()
+        };
+        map(&self.out) + map(&self.inn) + map(&self.und)
+    }
+
     /// Record directed edge u→v as present. Caller guarantees it is
     /// currently absent; `creates_und` = the undirected pair {u,v} was
     /// absent too (no reciprocal edge).

@@ -71,11 +71,20 @@ pub struct Command {
     pub name: &'static str,
     pub about: &'static str,
     pub opts: Vec<OptSpec>,
+    /// Free-form text appended to the usage output (protocol examples,
+    /// file formats — whatever one line of `about` can't carry).
+    pub after_help: &'static str,
 }
 
 impl Command {
     pub fn new(name: &'static str, about: &'static str) -> Self {
-        Command { name, about, opts: Vec::new() }
+        Command { name, about, opts: Vec::new(), after_help: "" }
+    }
+
+    /// Append extended help text (shown after the option list).
+    pub fn extra(mut self, after_help: &'static str) -> Self {
+        self.after_help = after_help;
+        self
     }
 
     pub fn opt(mut self, name: &'static str, help: &'static str, default: Option<&'static str>) -> Self {
@@ -142,6 +151,9 @@ impl Command {
             let v = if o.takes_value { " <value>" } else { "" };
             let d = o.default.map(|d| format!(" (default: {d})")).unwrap_or_default();
             let _ = writeln!(s, "    --{}{v}\t{}{d}", o.name, o.help);
+        }
+        if !self.after_help.is_empty() {
+            let _ = writeln!(s, "{}", self.after_help);
         }
         s
     }
@@ -255,6 +267,15 @@ mod tests {
     fn bad_parse_type_reported() {
         let a = cmd().parse(&argv(&["--k", "many"])).unwrap();
         assert!(a.req::<usize>("k").is_err());
+    }
+
+    #[test]
+    fn after_help_appears_in_usage() {
+        let c = Command::new("serve", "daemon").extra("examples:\n  {\"op\":\"stats\"}");
+        let u = c.usage();
+        assert!(u.contains("examples:"), "{u}");
+        assert!(u.contains("{\"op\":\"stats\"}"), "{u}");
+        assert!(!cmd().usage().contains("examples:"), "empty after_help adds nothing");
     }
 
     #[test]

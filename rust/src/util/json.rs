@@ -1,7 +1,11 @@
-//! Tiny JSON value tree + writer (no `serde` in the offline vendor set).
+//! Tiny JSON value tree, writer and parser (no `serde` in the offline
+//! vendor set).
 //!
 //! Used to emit machine-readable results from the bench harness and the
-//! CLI (`--json` outputs). Writer only — nothing in the repo parses JSON.
+//! CLI (`--json` outputs), and — since the service layer landed — to
+//! decode the `vdmc serve` wire protocol: [`Json::parse`] turns one
+//! request line into a value tree and the accessor helpers ([`Json::get`],
+//! [`Json::as_str`], [`Json::as_f64`], ...) pick it apart.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -31,6 +35,75 @@ impl Json {
             _ => panic!("Json::set on non-object"),
         }
         self
+    }
+
+    /// Parse one JSON document (the whole string must be consumed apart
+    /// from trailing whitespace). Numbers become `f64`; `u64` counts
+    /// survive exactly up to 2^53, far beyond any per-vertex motif count
+    /// the wire carries. Nesting is capped ([`MAX_DEPTH`]) so one
+    /// hostile deeply-nested line errors instead of overflowing the
+    /// stack of a resident `vdmc serve` daemon.
+    pub fn parse(s: &str) -> Result<Json, String> {
+        let bytes = s.as_bytes();
+        let mut p = Parser { bytes, pos: 0 };
+        p.skip_ws();
+        let v = p.value(0)?;
+        p.skip_ws();
+        if p.pos != bytes.len() {
+            return Err(format!("trailing content at byte {}", p.pos));
+        }
+        Ok(v)
+    }
+
+    // ------------------------------------------------------- accessors
+
+    /// Object field lookup; `None` for missing keys or non-objects.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// Numeric field as an exact non-negative integer (rejects fractions
+    /// and negatives — the wire's vertex ids and counts).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && *x == x.trunc() && *x < 9.0e15 => Some(*x as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_u64().map(|x| x as usize)
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(xs) => Some(xs),
+            _ => None,
+        }
     }
 
     pub fn to_string_pretty(&self) -> String {
@@ -124,6 +197,215 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Maximum container nesting [`Json::parse`] accepts. The wire protocol
+/// nests 3 deep; 128 leaves room for any sane payload while keeping the
+/// recursive descent far from the thread's stack limit.
+const MAX_DEPTH: usize = 128;
+
+/// Recursive-descent JSON parser over raw bytes (strings are re-validated
+/// as UTF-8 when sliced back out).
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn skip_ws(&mut self) {
+        while let Some(&b) = self.bytes.get(self.pos) {
+            if b == b' ' || b == b'\t' || b == b'\n' || b == b'\r' {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), String> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(format!("expected {:?} at byte {}", b as char, self.pos))
+        }
+    }
+
+    fn value(&mut self, depth: usize) -> Result<Json, String> {
+        if depth > MAX_DEPTH {
+            return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.pos));
+        }
+        match self.peek() {
+            Some(b'{') => self.object(depth),
+            Some(b'[') => self.array(depth),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(b'-') | Some(b'0'..=b'9') => self.number(),
+            Some(c) => Err(format!("unexpected {:?} at byte {}", c as char, self.pos)),
+            None => Err("unexpected end of input".to_string()),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(format!("invalid literal at byte {}", self.pos))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')) {
+            self.pos += 1;
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?;
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| format!("invalid number {text:?} at byte {start}"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            let start = self.pos;
+            // bulk-copy the unescaped run
+            while let Some(&b) = self.bytes.get(self.pos) {
+                if b == b'"' || b == b'\\' {
+                    break;
+                }
+                self.pos += 1;
+            }
+            out.push_str(
+                std::str::from_utf8(&self.bytes[start..self.pos]).map_err(|e| e.to_string())?,
+            );
+            match self.peek() {
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or("unterminated escape")?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b'r' => out.push('\r'),
+                        b't' => out.push('\t'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => out.push(self.unicode_escape()?),
+                        c => return Err(format!("invalid escape \\{}", c as char)),
+                    }
+                }
+                _ => return Err("unterminated string".to_string()),
+            }
+        }
+    }
+
+    /// One `\uXXXX` escape (called with `pos` just past the `u`),
+    /// including UTF-16 surrogate pairs: a high half must be followed by
+    /// an escaped low half and the two combine into one scalar — lone or
+    /// mismatched surrogates are errors, never replacement characters
+    /// (a corrupted graph id would silently miss the pool on lookup).
+    fn unicode_escape(&mut self) -> Result<char, String> {
+        let code = self.hex4()?;
+        let code = match code {
+            0xD800..=0xDBFF => {
+                if self.bytes.get(self.pos..self.pos + 2) != Some(br"\u".as_slice()) {
+                    return Err(format!(
+                        "high surrogate \\u{code:04x} without a following \\u escape"
+                    ));
+                }
+                self.pos += 2;
+                let low = self.hex4()?;
+                if !(0xDC00..=0xDFFF).contains(&low) {
+                    return Err(format!(
+                        "high surrogate \\u{code:04x} followed by non-low-surrogate \\u{low:04x}"
+                    ));
+                }
+                0x10000 + ((code - 0xD800) << 10) + (low - 0xDC00)
+            }
+            0xDC00..=0xDFFF => return Err(format!("lone low surrogate \\u{code:04x}")),
+            c => c,
+        };
+        char::from_u32(code).ok_or_else(|| format!("invalid code point {code:#x}"))
+    }
+
+    /// The 4 hex digits of a `\u` escape (called with `pos` just past the
+    /// `u`).
+    fn hex4(&mut self) -> Result<u32, String> {
+        let hex = self.bytes.get(self.pos..self.pos + 4).ok_or("truncated \\u escape")?;
+        let code =
+            u32::from_str_radix(std::str::from_utf8(hex).map_err(|e| e.to_string())?, 16)
+                .map_err(|e| e.to_string())?;
+        self.pos += 4;
+        Ok(code)
+    }
+
+    fn array(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'[')?;
+        let mut xs = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(xs));
+        }
+        loop {
+            self.skip_ws();
+            xs.push(self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(xs));
+                }
+                _ => return Err(format!("expected ',' or ']' at byte {}", self.pos)),
+            }
+        }
+    }
+
+    fn object(&mut self, depth: usize) -> Result<Json, String> {
+        self.expect(b'{')?;
+        let mut m = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            m.insert(key, self.value(depth + 1)?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(m));
+                }
+                _ => return Err(format!("expected ',' or '}}' at byte {}", self.pos)),
+            }
+        }
+    }
+}
+
 impl From<bool> for Json {
     fn from(b: bool) -> Json {
         Json::Bool(b)
@@ -196,6 +478,66 @@ mod tests {
     #[test]
     fn non_finite_becomes_null() {
         assert_eq!(Json::Num(f64::NAN).to_string_compact(), "null");
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut inner = Json::obj();
+        inner.set("xs", vec![1u64, 2, 3]).set("s", "a\"b\\c\nd");
+        let mut j = Json::obj();
+        j.set("inner", inner).set("flag", true).set("x", 2.5).set("none", Json::Null);
+        for text in [j.to_string_compact(), j.to_string_pretty()] {
+            assert_eq!(Json::parse(&text).unwrap(), j, "{text}");
+        }
+    }
+
+    #[test]
+    fn parse_accessors() {
+        let j = Json::parse(r#"{"op":"count","k":3,"deep":{"v":[0,5]},"on":true}"#).unwrap();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("count"));
+        assert_eq!(j.get("k").and_then(Json::as_usize), Some(3));
+        assert_eq!(j.get("on").and_then(Json::as_bool), Some(true));
+        let v = j.get("deep").and_then(|d| d.get("v")).and_then(Json::as_arr).unwrap();
+        assert_eq!(v.iter().filter_map(Json::as_u64).collect::<Vec<_>>(), vec![0, 5]);
+        assert!(j.get("missing").is_none());
+        assert!(Json::Num(2.5).as_u64().is_none(), "fractions are not integers");
+        assert!(Json::Num(-1.0).as_u64().is_none(), "negatives are not counts");
+    }
+
+    #[test]
+    fn parse_numbers_and_whitespace() {
+        assert_eq!(Json::parse(" -12.5e2 ").unwrap(), Json::Num(-1250.0));
+        assert_eq!(Json::parse("[ ]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(Json::parse("{ }").unwrap(), Json::obj());
+        assert_eq!(Json::parse("\"\\u0041\"").unwrap(), Json::Str("A".into()));
+    }
+
+    #[test]
+    fn parse_surrogate_pairs() {
+        // json.dumps(ensure_ascii=True) ships non-BMP chars as pairs
+        assert_eq!(Json::parse(r#""\ud83d\udcc8""#).unwrap(), Json::Str("\u{1F4C8}".into()));
+        for bad in [r#""\ud83d""#, r#""\ud83dx""#, r#""\ud83d\u0041""#, r#""\udcc8""#] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn parse_depth_is_bounded() {
+        // deep but legal
+        let depth = 100;
+        let ok = "[".repeat(depth) + "1" + &"]".repeat(depth);
+        assert!(Json::parse(&ok).is_ok());
+        // hostile nesting errors instead of blowing the stack
+        let bomb = "[".repeat(100_000);
+        let err = Json::parse(&bomb).unwrap_err();
+        assert!(err.contains("nesting"), "{err}");
+    }
+
+    #[test]
+    fn parse_rejects_malformed() {
+        for bad in ["", "{", "[1,", "{\"a\":}", "tru", "1 2", "{\"a\" 1}", "\"open"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} must not parse");
+        }
     }
 
     #[test]

@@ -1,0 +1,293 @@
+//! Service-layer acceptance: pooled multi-graph traffic must be
+//! bit-identical to dedicated per-graph sessions — across interleaved
+//! queries, live edge deltas, byte-budget evictions and the JSONL wire.
+
+use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::service::{wire, GraphSource, Request, Response, ServiceConfig, VdmcService};
+use vdmc::stream::EdgeDelta;
+use vdmc::util::json::Json;
+
+fn edges_of(g: &Graph) -> Vec<(u32, u32)> {
+    g.out.edges().collect()
+}
+
+fn graphs() -> Vec<(String, Graph)> {
+    (0..3u64)
+        .map(|s| (format!("g{s}"), generators::gnp_directed(40 + 5 * s as usize, 0.08, s + 11)))
+        .collect()
+}
+
+fn load_req(id: &str, g: &Graph) -> Request {
+    Request::LoadGraph {
+        graph: id.to_string(),
+        source: GraphSource::Edges { n: g.n(), edges: edges_of(g) },
+        directed: true,
+    }
+}
+
+/// Deterministic per-(graph, round) delta batch, valid vertex range `n`.
+fn delta_batch(n: usize, round: u64) -> Vec<EdgeDelta> {
+    let n = n as u32;
+    (0..8u32)
+        .flat_map(|i| {
+            let a = (i * 7 + round as u32 * 13 + 1) % n;
+            let b = (i * 11 + round as u32 * 5 + 2) % n;
+            [EdgeDelta::insert(a, b), EdgeDelta::delete((a + 3) % n, (b + 1) % n)]
+        })
+        .filter(|d| d.u != d.v)
+        .collect()
+}
+
+/// The acceptance property: interleaved traffic over 3 pooled graphs,
+/// including apply_edges batches, stays bit-identical to 3 dedicated
+/// sessions fed the same queries and deltas — and the pool reports the
+/// reuse as hits.
+#[test]
+fn interleaved_pooled_traffic_matches_dedicated_sessions() {
+    let graphs = graphs();
+    let mut svc = VdmcService::with_defaults();
+    let mut oracles: Vec<Session> = Vec::new();
+    for (id, g) in &graphs {
+        svc.handle(load_req(id, g)).unwrap();
+        oracles.push(Session::load_with(g, &SessionConfig::default()));
+    }
+
+    let q3 = CountQuery::default();
+    let q4 = CountQuery { size: MotifSize::Four, ..Default::default() };
+    for round in 0..3u64 {
+        for (gi, (id, g)) in graphs.iter().enumerate() {
+            // full counts, both sizes, straight against the dedicated oracle
+            for q in [q3, q4] {
+                let got = match svc
+                    .handle(Request::Count { graph: id.clone(), query: q })
+                    .unwrap()
+                {
+                    Response::Counted { counts, .. } => counts,
+                    other => panic!("{other:?}"),
+                };
+                let want = oracles[gi].count(&q).unwrap();
+                assert_eq!(got.per_vertex, want.per_vertex, "{id} round {round} {:?}", q.size);
+                assert_eq!(got.total_instances, want.total_instances);
+            }
+
+            // per-vertex lookups (maintained counters) for a fixed probe set
+            let probe: Vec<u32> = vec![0, 1, (g.n() as u32) - 1];
+            match svc
+                .handle(Request::VertexCounts {
+                    graph: id.clone(),
+                    size: MotifSize::Three,
+                    direction: Direction::Directed,
+                    vertices: probe.clone(),
+                })
+                .unwrap()
+            {
+                Response::VertexRows { rows, total_instances, .. } => {
+                    let want = oracles[gi].count(&q3).unwrap();
+                    assert_eq!(total_instances, want.total_instances, "{id} round {round}");
+                    for r in rows {
+                        assert_eq!(
+                            r.counts,
+                            want.vertex(r.vertex),
+                            "{id} round {round} v{}",
+                            r.vertex
+                        );
+                    }
+                }
+                other => panic!("{other:?}"),
+            }
+
+            // mutate both sides identically before the next round
+            let deltas = delta_batch(g.n(), round);
+            let got = match svc
+                .handle(Request::ApplyEdges { graph: id.clone(), deltas: deltas.clone() })
+                .unwrap()
+            {
+                Response::Applied { report, .. } => report,
+                other => panic!("{other:?}"),
+            };
+            let want = oracles[gi].apply_edges(&deltas).unwrap();
+            assert_eq!(got.applied(), want.applied(), "{id} round {round}");
+            assert_eq!(got.skipped(), want.skipped());
+        }
+    }
+
+    match svc.handle(Request::Stats).unwrap() {
+        Response::Stats(s) => {
+            assert_eq!(s.entries, 3);
+            assert!(s.hits > 0, "interleaved traffic must be served from pooled sessions");
+            assert_eq!(s.misses, 0);
+            assert!(s.resident_bytes > 0);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Byte-budget evictions under traffic: a budget that fits ~2 of 3
+/// sessions must evict, report the cause, and reloading the victim must
+/// still produce bit-identical counts.
+#[test]
+fn byte_budget_eviction_is_reported_and_recoverable() {
+    let graphs = graphs();
+    let per: usize = graphs
+        .iter()
+        .map(|(_, g)| Session::load_with(g, &SessionConfig::default()).memory_bytes())
+        .max()
+        .unwrap();
+    // two largest-session budget: the three graphs (n = 40/45/50) sum
+    // well past it, so the third load must evict
+    let mut svc = VdmcService::new(ServiceConfig {
+        max_graphs: 0,
+        byte_budget: per * 2,
+        ..Default::default()
+    });
+    for (id, g) in &graphs {
+        svc.handle(load_req(id, g)).unwrap();
+    }
+    let stats = match svc.handle(Request::Stats).unwrap() {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        stats.evictions_byte_budget >= 1,
+        "3 sessions into a 2.5-session budget must evict: {stats:?}"
+    );
+    assert!(stats.entries < 3);
+
+    // the evicted graph is simply a miss: reload and serve, bit-identical
+    let victim = graphs
+        .iter()
+        .find(|(id, _)| {
+            svc.handle(Request::Count { graph: id.clone(), query: CountQuery::default() })
+                .is_err()
+        })
+        .expect("some graph was evicted");
+    svc.handle(load_req(&victim.0, &victim.1)).unwrap();
+    let got = match svc
+        .handle(Request::Count { graph: victim.0.clone(), query: CountQuery::default() })
+        .unwrap()
+    {
+        Response::Counted { counts, .. } => counts,
+        other => panic!("{other:?}"),
+    };
+    let want = Session::load(&victim.1).count(&CountQuery::default()).unwrap();
+    assert_eq!(got.per_vertex, want.per_vertex);
+
+    let stats = match svc.handle(Request::Stats).unwrap() {
+        Response::Stats(s) => s,
+        other => panic!("{other:?}"),
+    };
+    assert!(stats.misses >= 1, "the evicted graph's query must count as a miss");
+    assert!(stats.hits >= 1);
+}
+
+/// End-to-end wire exercise of the `vdmc serve` loop body: an
+/// interleaved JSONL stream over 3 graphs, every response line parses,
+/// and counts match dedicated sessions exactly.
+#[test]
+fn wire_jsonl_stream_matches_dedicated_sessions() {
+    let graphs = graphs();
+    let mut svc = VdmcService::with_defaults();
+
+    // the serve loop body, minus stdin plumbing
+    let mut roundtrip = |line: String| -> Json {
+        let (req, id) = wire::decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        let op = req.op();
+        let (result, secs) = svc.handle_timed(req);
+        let reply = match result {
+            Ok(resp) => wire::encode_response(&resp, id, secs),
+            Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+        };
+        Json::parse(&reply).unwrap_or_else(|e| panic!("unparseable response {reply}: {e}"))
+    };
+
+    // load all three graphs over the wire (inline edges)
+    for (i, (id, g)) in graphs.iter().enumerate() {
+        let edges: Vec<String> =
+            edges_of(g).iter().map(|(u, v)| format!("[{u},{v}]")).collect();
+        let line = format!(
+            r#"{{"op":"load_graph","id":{i},"graph":"{id}","directed":true,"n":{},"edges":[{}]}}"#,
+            g.n(),
+            edges.join(",")
+        );
+        let j = roundtrip(line);
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(i as u64));
+        assert_eq!(j.get("m").and_then(Json::as_usize), Some(g.m()));
+    }
+
+    for (id, g) in &graphs {
+        let oracle = Session::load(g);
+        let want = oracle.count(&CountQuery::default()).unwrap();
+
+        // class-total digest over the wire
+        let j = roundtrip(format!(
+            r#"{{"op":"count","graph":"{id}","k":3,"direction":"directed"}}"#
+        ));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+        assert_eq!(
+            j.get("total_instances").and_then(Json::as_u64),
+            Some(want.total_instances),
+            "{id}"
+        );
+        let classes = j.get("classes").expect("classes digest");
+        for (cid, t) in want.class_ids.iter().zip(want.class_instances()) {
+            assert_eq!(
+                classes.get(&format!("m{cid}")).and_then(Json::as_u64),
+                Some(t),
+                "{id} class m{cid}"
+            );
+        }
+
+        // exact per-vertex rows over the wire
+        let probe: Vec<u32> = (0..g.n() as u32).step_by(7).collect();
+        let vs: Vec<String> = probe.iter().map(u32::to_string).collect();
+        let j = roundtrip(format!(
+            r#"{{"op":"vertex_counts","graph":"{id}","k":3,"direction":"directed","vertices":[{}]}}"#,
+            vs.join(",")
+        ));
+        let counts = j.get("counts").expect("counts map");
+        for v in &probe {
+            let row: Vec<u64> = counts
+                .get(&v.to_string())
+                .and_then(Json::as_arr)
+                .unwrap_or_else(|| panic!("{id}: no row for v{v}"))
+                .iter()
+                .map(|x| x.as_u64().unwrap())
+                .collect();
+            assert_eq!(row, want.vertex(*v), "{id} v{v}");
+        }
+
+        // mutate over the wire, then verify against a patched oracle
+        let j = roundtrip(format!(
+            r#"{{"op":"apply_edges","graph":"{id}","deltas":[["+",0,3],["+",3,5],["-",1,2]]}}"#
+        ));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        let mut oracle = Session::load(g);
+        oracle
+            .apply_edges(&[EdgeDelta::insert(0, 3), EdgeDelta::insert(3, 5), EdgeDelta::delete(1, 2)])
+            .unwrap();
+        let want = oracle.count(&CountQuery::default()).unwrap();
+        let j = roundtrip(format!(
+            r#"{{"op":"count","graph":"{id}","k":3,"direction":"directed"}}"#
+        ));
+        assert_eq!(
+            j.get("total_instances").and_then(Json::as_u64),
+            Some(want.total_instances),
+            "{id} after deltas"
+        );
+    }
+
+    // errors come back as ok:false lines and the daemon keeps serving
+    let j = roundtrip(r#"{"op":"count","graph":"ghost","id":99}"#.to_string());
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+    assert_eq!(j.get("id").and_then(Json::as_u64), Some(99));
+    assert!(j.get("error").and_then(Json::as_str).unwrap().contains("not loaded"));
+
+    let j = roundtrip(r#"{"op":"stats"}"#.to_string());
+    let pool = j.get("pool").expect("pool stats");
+    assert!(pool.get("hits").and_then(Json::as_u64).unwrap() > 0);
+    assert_eq!(pool.get("entries").and_then(Json::as_usize), Some(3));
+}
