@@ -1,8 +1,11 @@
 //! Quickstart: generate a directed G(n, p), load it into an engine
 //! Session once, then count all 3- and 4-motifs per vertex from the
 //! cached state — the serving pattern. Prints class totals, the busiest
-//! vertices, and how much setup the session reuse saved. Finishes with
-//! the streaming pattern: maintain counts incrementally while applying a
+//! vertices, and how much setup the session reuse saved. Then the
+//! emission pipeline beyond counts: sample triangle instances around a
+//! seed set (`Output::Sample` + `Scope::Neighborhood` — the query does
+//! neighborhood-local work, not a full pass). Continues with the
+//! streaming pattern: maintain counts incrementally while applying a
 //! live edge batch through `Session::apply_edges`. Closes with the
 //! serving pattern: a `VdmcService` multiplexing several graphs through
 //! the pooled request/response API (`vdmc serve` speaks exactly this
@@ -10,7 +13,7 @@
 //!
 //!     cargo run --release --example quickstart [n] [p]
 
-use vdmc::engine::{CountQuery, Session};
+use vdmc::engine::{CountQuery, MotifQuery, Output, QueryOutput, Scope, Session};
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::service::{GraphSource, Request, Response, VdmcService};
@@ -80,6 +83,39 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // -- sampling: triangle instances around a seed set -------------------
+    // Output::Sample keeps a uniform per-class reservoir (reproducible
+    // for a fixed seed under any scheduler); Scope::Neighborhood filters
+    // at the work-unit level, so only the seeds' 2-hop ball is enumerated.
+    println!("\n== sampling: triangles around a seed set ==");
+    let seeds = vec![0u32, 1, 2];
+    let query = MotifQuery {
+        size: MotifSize::Three,
+        direction: Direction::Undirected,
+        output: Output::Sample { per_class: 5, seed: 7 },
+        scope: Scope::Neighborhood { seeds: seeds.clone(), radius: 1 },
+        ..Default::default()
+    };
+    let (result, report) = session.query_with_report(&query)?;
+    if let QueryOutput::Sample(sample) = result {
+        println!(
+            "  scoped enumeration touched {} of {} work units ({} instances seen, {:.4}s)",
+            report.queue_units,
+            session.partitions().total_units,
+            sample.total_seen,
+            report.elapsed_secs,
+        );
+        // the triangle class is the densest undirected 3-class (6 bits)
+        if let Some(tri) = sample.classes.iter().find(|c| c.seen > 0 && c.class_id == 63) {
+            println!("  triangles touching N({seeds:?}): {} seen; sampled:", tri.seen);
+            for inst in &tri.instances {
+                println!("    {:?}", inst.verts);
+            }
+        } else {
+            println!("  no triangles in this neighborhood — rerun with a denser graph");
+        }
+    }
+
     // -- streaming: maintain counts under live edge batches ---------------
     println!("\n== streaming: apply_edges on the live session ==");
     let mut session = session;
@@ -143,7 +179,7 @@ fn main() -> anyhow::Result<()> {
                 graph: id.into(),
                 size: MotifSize::Three,
                 direction: Direction::Directed,
-                vertices: vec![0, 1, 2],
+                scope: Scope::Vertices(vec![0, 1, 2]),
             },
         )? {
             let participations: u64 =

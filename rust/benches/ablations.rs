@@ -87,10 +87,19 @@ fn main() {
                 direction: Direction::Undirected,
                 scheduler,
                 sink,
+                ..Default::default()
             };
             let (c, r) = session.count_with_report(&query).unwrap();
             let expected = *expected_instances.get_or_insert(c.total_instances);
             assert_eq!(c.total_instances, expected, "{sched_label}/{sink_label} diverged");
+            // the report's class histogram must sum to the instance total
+            // and agree with the count matrix on every grid row
+            assert_eq!(
+                r.per_class_totals.iter().sum::<u64>(),
+                c.total_instances,
+                "{sched_label}/{sink_label} per_class_totals"
+            );
+            assert_eq!(r.per_class_totals, c.class_instances(), "{sched_label}/{sink_label}");
             let mut j = Json::obj();
             j.set("ablation", "scheduler_x_sink")
                 .set("scheduler", sched_label)

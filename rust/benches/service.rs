@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
@@ -132,7 +132,8 @@ fn main() {
                 r.expect("reload");
                 load.push(secs);
             }
-            let (r, secs) = svc.handle_timed(Request::Count { graph: id.clone(), query: q3 });
+            let (r, secs) =
+                svc.handle_timed(Request::Count { graph: id.clone(), query: q3.clone() });
             r.expect("count");
             count.push(secs);
 
@@ -141,7 +142,7 @@ fn main() {
                 graph: id.clone(),
                 size: MotifSize::Three,
                 direction: Direction::Directed,
-                vertices: probe,
+                scope: Scope::Vertices(probe),
             });
             r.expect("vertex_counts");
             vertex.push(secs);

@@ -1,0 +1,137 @@
+//! Emission-pipeline overhead bench: Count vs Instances vs Sample vs
+//! TopVertices on the same graph and session, one JSON row per output
+//! kind plus overhead-ratio rows — what the EnumSink generalization
+//! costs *per emitted instance* relative to pure counting.
+//!
+//! Expectations (asserted where exact, printed where statistical):
+//!   - every output reports the identical class histogram
+//!     (`per_class_totals`), so the rows measure overhead, not work;
+//!   - Count is the floor; TopVertices ≈ Sharded counting; Sample pays
+//!     one instance hash per event; Instances pays buffering + one
+//!     mutex drain per 256 events until the limit, then counting only.
+//!
+//! CI's bench-smoke job runs this shrunk (`-- --n 4000`) and archives
+//! the rows as the `BENCH_sinks.json` artifact (schema seeded at the
+//! repo root).
+
+use std::time::Instant;
+
+use vdmc::engine::{MotifQuery, Output, QueryOutput, Session, SessionConfig};
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::util::json::Json;
+
+struct Opts {
+    n: usize,
+    ba_m: usize,
+    seed: u64,
+    workers: usize,
+    k: usize,
+    limit: usize,
+    per_class: usize,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts =
+        Opts { n: 12_000, ba_m: 3, seed: 42, workers: 4, k: 4, limit: 100_000, per_class: 64 };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> String {
+            *i += 1;
+            args.get(*i).unwrap_or_else(|| panic!("{} needs a value", args[*i - 1])).clone()
+        };
+        match args[i].as_str() {
+            "--n" => opts.n = take(&mut i).parse().expect("--n"),
+            "--ba" => opts.ba_m = take(&mut i).parse().expect("--ba"),
+            "--seed" => opts.seed = take(&mut i).parse().expect("--seed"),
+            "--workers" => opts.workers = take(&mut i).parse().expect("--workers"),
+            "--k" => opts.k = take(&mut i).parse().expect("--k"),
+            "--limit" => opts.limit = take(&mut i).parse().expect("--limit"),
+            "--per-class" => opts.per_class = take(&mut i).parse().expect("--per-class"),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg {other:?}"),
+        }
+        i += 1;
+    }
+    opts
+}
+
+fn main() {
+    let opts = parse_opts();
+    let g = generators::barabasi_albert(opts.n, opts.ba_m, opts.seed);
+    println!(
+        "# sink overhead on BA({}, {}) seed {}: n={} m={}, k={}, {} workers",
+        opts.n,
+        opts.ba_m,
+        opts.seed,
+        g.n(),
+        g.m(),
+        opts.k,
+        opts.workers,
+    );
+    let session =
+        Session::load_with(&g, &SessionConfig { workers: opts.workers, ..Default::default() });
+    let size = MotifSize::from_k(opts.k).expect("--k must be 3 or 4");
+    let base = MotifQuery { size, direction: Direction::Undirected, ..Default::default() };
+
+    let outputs: Vec<(&str, Output)> = vec![
+        ("counts", Output::Counts),
+        ("instances", Output::Instances { limit: opts.limit }),
+        ("sample", Output::Sample { per_class: opts.per_class, seed: opts.seed }),
+        ("top-vertices", Output::TopVertices { k: 10 }),
+    ];
+
+    let mut histogram: Option<Vec<u64>> = None;
+    let mut secs_of: Vec<(String, f64)> = Vec::new();
+    for (label, output) in outputs {
+        let q = MotifQuery { output, ..base.clone() };
+        // warm-up, then the measured run (cached setup for every row)
+        let _ = session.query(&q).unwrap();
+        let t0 = Instant::now();
+        let (result, report) = session.query_with_report(&q).unwrap();
+        let secs = t0.elapsed().as_secs_f64();
+
+        // every output must report the identical class histogram — the
+        // rows measure sink overhead, never different work
+        let want = histogram.get_or_insert_with(|| report.per_class_totals.clone());
+        assert_eq!(&report.per_class_totals, want, "{label} changed the histogram");
+
+        let mut j = Json::obj();
+        j.set("bench", "sink")
+            .set("output", label)
+            .set("k", opts.k)
+            .set("workers", session.workers())
+            .set("n", g.n())
+            .set("m", g.m())
+            .set("instances", report.total_instances)
+            .set("secs", secs)
+            .set("ns_per_instance", secs * 1e9 / report.total_instances.max(1) as f64);
+        match &result {
+            QueryOutput::Instances(list) => {
+                j.set("materialized", list.instances.len()).set("truncated", list.truncated);
+            }
+            QueryOutput::Sample(s) => {
+                j.set("reservoirs", s.classes.iter().filter(|c| c.seen > 0).count())
+                    .set("per_class", s.per_class);
+            }
+            QueryOutput::TopVertices(t) => {
+                j.set("top", t.top_k);
+            }
+            QueryOutput::Counts(_) => {}
+        }
+        println!("{}", j.to_string_compact());
+        secs_of.push((label.to_string(), secs));
+    }
+
+    let count_secs = secs_of[0].1.max(1e-12);
+    for (label, secs) in &secs_of[1..] {
+        let mut j = Json::obj();
+        j.set("bench", "sink_overhead")
+            .set("output", label.as_str())
+            .set("vs_counts", secs / count_secs);
+        println!("{}", j.to_string_compact());
+    }
+    println!("# expectation: vs_counts stays O(1) — the event pipeline adds per-instance work");
+    println!("# (a hash for sample, buffered pushes for instances), never an extra graph pass.");
+}

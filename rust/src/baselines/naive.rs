@@ -69,6 +69,7 @@ pub fn count(graph: &Graph, size: MotifSize, direction: Direction) -> MotifCount
         n_classes,
         per_vertex,
         class_ids: mapper.class_ids(),
+        per_class_instances: Vec::new(),
         total_instances: instances,
         elapsed_secs: start.elapsed().as_secs_f64(),
     }

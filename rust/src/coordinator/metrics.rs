@@ -18,6 +18,9 @@ pub struct WorkerMetrics {
     /// `steals` under single-item stealing; larger under half-deque batch
     /// stealing, where one steal moves several items).
     pub steal_batch: u64,
+    /// Instances this worker emitted per class slot (summed into
+    /// [`RunReport::per_class_totals`]).
+    pub per_class: Vec<u64>,
     pub busy_secs: f64,
 }
 
@@ -37,6 +40,11 @@ pub struct RunReport {
     /// Bytes held by the hybrid adjacency tier's bitmap hub rows (0 when
     /// the session runs pure CSR) — the memory the probe speedup costs.
     pub tier_memory_bytes: usize,
+    /// Instance totals per class slot (the class histogram alongside
+    /// `total_instances`; sums to it). Unlike `MotifCounts::class_totals`
+    /// this stays exact under a query scope, where an instance can touch
+    /// fewer than k in-scope vertices.
+    pub per_class_totals: Vec<u64>,
 }
 
 impl RunReport {
@@ -98,6 +106,7 @@ impl RunReport {
             .set("setup_secs", self.setup_secs)
             .set("setup_reused", self.setup_reused)
             .set("tier_memory_bytes", self.tier_memory_bytes)
+            .set("per_class_totals", self.per_class_totals.clone())
             .set("steals", self.total_steals())
             .set("steal_batch_total", self.total_steal_batch())
             .set("steal_batch_avg", self.avg_steal_batch());
@@ -139,6 +148,7 @@ mod tests {
             setup_secs: 0.1,
             setup_reused: false,
             tier_memory_bytes: 0,
+            per_class_totals: vec![40, 60],
         }
     }
 
@@ -175,5 +185,13 @@ mod tests {
         let s = report(&[1.0, 2.0]).to_json().to_string_compact();
         assert!(s.contains("\"workers\":["));
         assert!(s.contains("\"busy_secs\":2"));
+    }
+
+    #[test]
+    fn json_carries_class_histogram() {
+        let r = report(&[1.0]);
+        let s = r.to_json().to_string_compact();
+        assert!(s.contains("\"per_class_totals\":[40,60]"), "{s}");
+        assert_eq!(r.per_class_totals.iter().sum::<u64>(), r.total_instances);
     }
 }

@@ -13,7 +13,7 @@ pub mod work;
 
 use anyhow::Result;
 
-use crate::engine::{CountQuery, SchedulerMode, Session, SessionConfig};
+use crate::engine::{CountQuery, SchedulerMode, Scope, Session, SessionConfig};
 use crate::graph::csr::Graph;
 use crate::graph::AdjacencyMode;
 use crate::graph::ordering::VertexOrdering;
@@ -44,6 +44,10 @@ pub struct CountConfig {
     pub adjacency: AdjacencyMode,
     /// Hub degree threshold for the hybrid tier; `None` = ≈ √m.
     pub hub_threshold: Option<usize>,
+    /// Query scope: `Scope::All` (the historical behavior) or a vertex
+    /// set / seed neighborhood — one-shot scoped counts without holding a
+    /// session.
+    pub scope: Scope,
 }
 
 impl Default for CountConfig {
@@ -58,6 +62,7 @@ impl Default for CountConfig {
             max_units_per_item: 64,
             adjacency: AdjacencyMode::Hybrid,
             hub_threshold: None,
+            scope: Scope::All,
         }
     }
 }
@@ -75,13 +80,16 @@ impl CountConfig {
     }
 
     fn query(&self) -> CountQuery {
-        CountQuery::builder()
-            .size(self.size)
-            .direction(self.direction)
-            .scheduler(self.scheduler)
-            .sink(self.counter)
-            .build()
-            .expect("typed setters cannot fail")
+        // direct literal, not the builder: a malformed scope should come
+        // back as the session's Result, never a panic in a getter
+        CountQuery {
+            size: self.size,
+            direction: self.direction,
+            scheduler: self.scheduler,
+            sink: self.counter,
+            scope: self.scope.clone(),
+            ..Default::default()
+        }
     }
 }
 
@@ -312,6 +320,22 @@ mod tests {
         let g = generators::star(5);
         let cfg = CountConfig { direction: Direction::Directed, ..Default::default() };
         assert!(count_motifs(&g, &cfg).is_err());
+    }
+
+    #[test]
+    fn one_shot_scoped_count_matches_full_rows() {
+        let g = generators::gnp_directed(50, 0.1, 6);
+        let base = CountConfig { size: MotifSize::Three, direction: Direction::Directed, ..Default::default() };
+        let full = count_motifs(&g, &base.clone()).unwrap();
+        let scoped = count_motifs(
+            &g,
+            &CountConfig { scope: Scope::Vertices(vec![2, 9]), ..base },
+        )
+        .unwrap();
+        for v in [2u32, 9] {
+            assert_eq!(scoped.vertex(v), full.vertex(v), "v{v}");
+        }
+        assert!(scoped.total_instances <= full.total_instances);
     }
 
     #[test]

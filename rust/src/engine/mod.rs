@@ -1,7 +1,7 @@
 //! Execution engine: partitioned, work-stealing, reusable-session motif
-//! counting.
+//! enumeration.
 //!
-//! Four layers, each mapping onto the paper's design (Sections 4–6):
+//! Five layers, each mapping onto the paper's design (Sections 4–6):
 //!
 //! 1. [`partition`] — the Section 6 (root, first-neighbor) unit
 //!    decomposition, plus contiguous vertex-range shards whose *unit
@@ -10,25 +10,43 @@
 //! 2. [`scheduler`] — how workers claim items: the seed's shared fetch-add
 //!    cursor, per-worker deques with randomized single-item FIFO stealing,
 //!    or half-deque batch stealing (`SchedulerMode::WorkStealingBatch`).
-//! 3. [`sink`] — where counts land: shared atomics (the paper's GPU
-//!    atomicAdd), per-worker shards merged at the end, or partition-local
-//!    plain writes with an atomic cross-shard fallback.
-//! 4. [`session`] — [`Session::load`] computes ordering, relabeled CSR and
-//!    partitions once and serves repeated [`CountQuery`]s from the cache.
+//! 3. [`sink`] — where enumeration events go: the generic [`EnumSink`]
+//!    pipeline consumes one `MotifEvent { verts, class_slot }` per
+//!    instance through monomorphized per-worker handles. Four consumers
+//!    ship — per-vertex counts (wrapping the object-safe [`CounterSink`]
+//!    strategies: shared atomics, per-worker shards, partition-local
+//!    writes), materialized instance lists, per-class reservoir samples,
+//!    and top-vertex rankings.
+//! 4. [`query`] — what a request asks for: [`MotifQuery`] with its
+//!    [`Output`] (counts / instances / sample / top-vertices) and
+//!    [`Scope`] (all / vertex set / seed neighborhood, filtered at the
+//!    work-unit level), built through the validating
+//!    [`MotifQuery::builder`] shared by CLI, wire and benches.
+//! 5. [`session`] — [`Session::load`] computes ordering, relabeled CSR and
+//!    partitions once and serves repeated [`MotifQuery`]s from the cache.
 //!    Sessions are also live: `Session::apply_edges` maintains per-vertex
-//!    counts under edge deltas via the fifth layer, [`crate::stream`]
-//!    (delta overlay + edge-local re-enumeration).
+//!    counts under edge deltas via [`crate::stream`] (delta overlay +
+//!    edge-local re-enumeration); maintenance is Count-only and rejects
+//!    other outputs with the typed `stream::CountOnlyError`.
 //!
 //! `crate::coordinator` remains as a thin compatibility wrapper: its
 //! `count_motifs` builds a one-shot [`Session`] per call.
 
 pub mod partition;
+pub mod query;
 pub mod scheduler;
 pub mod session;
 pub mod sink;
 
 pub use crate::graph::AdjacencyMode;
 pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
+pub use query::{
+    ClassSample, CountQuery, CountQueryBuilder, InstanceList, MotifInstance, MotifQuery,
+    MotifQueryBuilder, Output, QueryOutput, SampleSummary, Scope, TopVertices, VertexBits,
+};
 pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
-pub use session::{CountQuery, CountQueryBuilder, Session, SessionConfig};
-pub use sink::{make_sink, CounterSink, WorkerHandle};
+pub use session::{Session, SessionConfig};
+pub use sink::{
+    make_sink, CountEnumSink, CounterSink, EmitHandle, EnumSink, InstanceEnumSink, MotifEvent,
+    SampleEnumSink, TopVerticesEnumSink, WorkerHandle,
+};

@@ -1,0 +1,610 @@
+//! Query surface: what one enumeration request against a loaded
+//! [`crate::engine::Session`] asks for.
+//!
+//! [`MotifQuery`] widens the historical `CountQuery` along two new axes:
+//!
+//! - [`Output`] — what the emission pipeline produces. `Counts` is the
+//!   paper's per-vertex count matrix (bit-identical to the pre-redesign
+//!   sinks); `Instances` materializes the enumerated instances themselves
+//!   (bounded by a hard `limit`); `Sample` keeps a per-class uniform
+//!   reservoir of instances, reproducible for a fixed seed under any
+//!   scheduler; `TopVertices` ranks the busiest vertices per class.
+//! - [`Scope`] — which part of the graph the query covers. Scoping
+//!   filters at the **work-unit level**: only (root, neighbor) units
+//!   whose root can own an in-scope instance are enumerated (the root of
+//!   a k-set is its minimal member, and a connected k-set has diameter
+//!   ≤ k-1, so the candidate roots are the (k-1)-hop ball around the
+//!   scope set). Scoped queries therefore do neighborhood-local work,
+//!   not a full pass plus post-filter.
+//!
+//! [`MotifQuery::builder`] stays the one validating construction path
+//! shared by the CLI flags, the service wire codec and the benches, so
+//! the accepted knob spellings cannot drift between surfaces.
+
+use anyhow::{bail, Result};
+
+use crate::motifs::counter::{CounterMode, MotifCounts};
+use crate::motifs::{Direction, MotifSize};
+use crate::util::json::Json;
+
+use super::scheduler::SchedulerMode;
+
+/// What the emission pipeline should produce for a query.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Output {
+    /// Per-vertex class counts (the paper's deliverable; the default).
+    Counts,
+    /// The enumerated instances themselves, up to a hard `limit`;
+    /// [`InstanceList::truncated`] reports whether the limit cut the
+    /// stream short.
+    Instances { limit: usize },
+    /// A uniform per-class reservoir of up to `per_class` instances.
+    /// Selection is keyed on (seed, instance), so a fixed seed yields the
+    /// identical sample under every scheduler and worker count.
+    Sample { per_class: usize, seed: u64 },
+    /// The `k` busiest vertices per class, ranked by count.
+    TopVertices { k: usize },
+}
+
+impl Output {
+    /// The CLI/wire spelling of this output kind.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Output::Counts => "counts",
+            Output::Instances { .. } => "instances",
+            Output::Sample { .. } => "sample",
+            Output::TopVertices { .. } => "top-vertices",
+        }
+    }
+
+    /// Parse an output kind from its CLI/wire spelling with default
+    /// parameters (used where only the kind matters, e.g. rejecting
+    /// non-count outputs on the maintenance path).
+    pub fn parse_default(name: &str) -> Option<Output> {
+        match name {
+            "counts" => Some(Output::Counts),
+            "instances" => Some(Output::Instances { limit: 1000 }),
+            "sample" => Some(Output::Sample { per_class: 10, seed: 42 }),
+            "top-vertices" | "top" => Some(Output::TopVertices { k: 10 }),
+            _ => None,
+        }
+    }
+}
+
+/// Which part of the graph a query covers.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Scope {
+    /// The whole graph (the default).
+    All,
+    /// Exactly these vertices (original ids): results cover every
+    /// instance containing at least one of them.
+    Vertices(Vec<u32>),
+    /// The closed `radius`-hop undirected neighborhood of `seeds`
+    /// (original ids): results cover every instance touching that ball.
+    Neighborhood { seeds: Vec<u32>, radius: usize },
+}
+
+impl Scope {
+    pub fn is_all(&self) -> bool {
+        matches!(self, Scope::All)
+    }
+
+    /// The CLI/wire spelling of this scope kind.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Scope::All => "all",
+            Scope::Vertices(_) => "vertices",
+            Scope::Neighborhood { .. } => "neighborhood",
+        }
+    }
+}
+
+/// One enumeration request against a loaded session. `CountQuery` remains
+/// as the compatibility alias; struct-literal construction with
+/// `..Default::default()` keeps working unchanged.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MotifQuery {
+    pub size: MotifSize,
+    pub direction: Direction,
+    pub scheduler: SchedulerMode,
+    /// Counter-update strategy of the Count output (ignored by the other
+    /// outputs, which carry their own accumulation state).
+    pub sink: CounterMode,
+    pub output: Output,
+    pub scope: Scope,
+}
+
+/// Historical name of [`MotifQuery`] (the counts-only era). Every old
+/// call site keeps compiling; new code should say `MotifQuery`.
+pub type CountQuery = MotifQuery;
+
+impl Default for MotifQuery {
+    fn default() -> Self {
+        MotifQuery {
+            size: MotifSize::Three,
+            direction: Direction::Directed,
+            scheduler: SchedulerMode::WorkStealing,
+            sink: CounterMode::Sharded,
+            output: Output::Counts,
+            scope: Scope::All,
+        }
+    }
+}
+
+impl MotifQuery {
+    /// Validating builder — the one construction path shared by the CLI,
+    /// the service wire codec and the benches, so the accepted knob names
+    /// (`stealing-batch`, `partition`, `sample`, ...) can't drift between
+    /// surfaces.
+    pub fn builder() -> MotifQueryBuilder {
+        MotifQueryBuilder::default()
+    }
+}
+
+/// Historical name of [`MotifQueryBuilder`].
+pub type CountQueryBuilder = MotifQueryBuilder;
+
+/// Builder behind [`MotifQuery::builder`]. Typed setters are infallible;
+/// the `*_name` setters parse the CLI/wire spellings and defer their
+/// error to [`MotifQueryBuilder::build`], so call sites chain without
+/// intermediate `?`s.
+#[derive(Debug, Clone, Default)]
+pub struct MotifQueryBuilder {
+    query: MotifQuery,
+    err: Option<String>,
+}
+
+impl MotifQueryBuilder {
+    pub fn size(mut self, size: MotifSize) -> Self {
+        self.query.size = size;
+        self
+    }
+
+    /// Motif size from its integer spelling (3 or 4).
+    pub fn size_k(mut self, k: usize) -> Self {
+        match MotifSize::from_k(k) {
+            Some(s) => self.query.size = s,
+            None => self.fail(format!("motif size must be 3 or 4, got {k}")),
+        }
+        self
+    }
+
+    pub fn direction(mut self, direction: Direction) -> Self {
+        self.query.direction = direction;
+        self
+    }
+
+    /// Direction from its wire spelling: `directed` | `undirected`.
+    pub fn direction_name(mut self, name: &str) -> Self {
+        match Direction::parse(name) {
+            Some(d) => self.query.direction = d,
+            None => self.fail(format!("unknown direction {name:?} (directed | undirected)")),
+        }
+        self
+    }
+
+    pub fn scheduler(mut self, scheduler: SchedulerMode) -> Self {
+        self.query.scheduler = scheduler;
+        self
+    }
+
+    /// Scheduler from its CLI spelling: `cursor` | `stealing` |
+    /// `stealing-batch`.
+    pub fn scheduler_name(mut self, name: &str) -> Self {
+        match name {
+            "cursor" => self.query.scheduler = SchedulerMode::SharedCursor,
+            "stealing" => self.query.scheduler = SchedulerMode::WorkStealing,
+            "stealing-batch" => self.query.scheduler = SchedulerMode::WorkStealingBatch,
+            _ => self.fail(format!(
+                "unknown scheduler {name:?} (cursor | stealing | stealing-batch)"
+            )),
+        }
+        self
+    }
+
+    pub fn sink(mut self, sink: CounterMode) -> Self {
+        self.query.sink = sink;
+        self
+    }
+
+    /// Counter sink from its CLI spelling: `atomic` | `sharded` |
+    /// `partition`.
+    pub fn sink_name(mut self, name: &str) -> Self {
+        match name {
+            "atomic" => self.query.sink = CounterMode::Atomic,
+            "sharded" => self.query.sink = CounterMode::Sharded,
+            "partition" => self.query.sink = CounterMode::PartitionLocal,
+            _ => self.fail(format!("unknown sink {name:?} (atomic | sharded | partition)")),
+        }
+        self
+    }
+
+    pub fn output(mut self, output: Output) -> Self {
+        self.query.output = output;
+        self
+    }
+
+    /// Instances output with a hard cap on materialized instances.
+    pub fn instances(self, limit: usize) -> Self {
+        self.output(Output::Instances { limit })
+    }
+
+    /// Per-class reservoir-sample output.
+    pub fn sample(self, per_class: usize, seed: u64) -> Self {
+        self.output(Output::Sample { per_class, seed })
+    }
+
+    /// Per-class top-k-vertices output.
+    pub fn top_vertices(self, k: usize) -> Self {
+        self.output(Output::TopVertices { k })
+    }
+
+    pub fn scope(mut self, scope: Scope) -> Self {
+        self.query.scope = scope;
+        self
+    }
+
+    /// Restrict the query to instances touching these vertices.
+    pub fn scope_vertices(self, vertices: Vec<u32>) -> Self {
+        self.scope(Scope::Vertices(vertices))
+    }
+
+    /// Restrict the query to the `radius`-hop neighborhood of `seeds`.
+    pub fn neighborhood(self, seeds: Vec<u32>, radius: usize) -> Self {
+        self.scope(Scope::Neighborhood { seeds, radius })
+    }
+
+    fn fail(&mut self, msg: String) {
+        // first error wins: it names the knob the caller got wrong
+        if self.err.is_none() {
+            self.err = Some(msg);
+        }
+    }
+
+    pub fn build(mut self) -> Result<MotifQuery> {
+        // parameter validation happens here (not in the setters) so the
+        // first *spelling* error still wins over a parameter error
+        if self.err.is_none() {
+            match self.query.output {
+                Output::Instances { limit } if limit == 0 => {
+                    self.fail("instances output needs a limit >= 1".to_string())
+                }
+                Output::Sample { per_class, .. } if per_class == 0 => {
+                    self.fail("sample output needs per_class >= 1".to_string())
+                }
+                Output::TopVertices { k } if k == 0 => {
+                    self.fail("top-vertices output needs k >= 1".to_string())
+                }
+                _ => {}
+            }
+        }
+        if self.err.is_none() {
+            match &self.query.scope {
+                Scope::Vertices(vs) if vs.is_empty() => {
+                    self.fail("vertex scope needs at least one vertex".to_string())
+                }
+                Scope::Neighborhood { seeds, .. } if seeds.is_empty() => {
+                    self.fail("neighborhood scope needs at least one seed".to_string())
+                }
+                _ => {}
+            }
+        }
+        match self.err {
+            Some(msg) => bail!("{msg}"),
+            None => Ok(self.query),
+        }
+    }
+}
+
+// ------------------------------------------------------------- vertex bits
+
+/// Compact vertex bitset (one bit per processing id) used for scope
+/// membership tests on the emission path and root filtering at the
+/// work-unit level.
+#[derive(Debug, Clone, Default)]
+pub struct VertexBits {
+    words: Vec<u64>,
+    count: usize,
+}
+
+impl VertexBits {
+    pub fn new(n: usize) -> VertexBits {
+        VertexBits { words: vec![0u64; n.div_ceil(64)], count: 0 }
+    }
+
+    /// Insert `v`; true when it was not present before.
+    pub fn insert(&mut self, v: u32) -> bool {
+        let (w, b) = (v as usize / 64, v as usize % 64);
+        debug_assert!(w < self.words.len(), "vertex {v} beyond bitset width");
+        let mask = 1u64 << b;
+        if self.words[w] & mask == 0 {
+            self.words[w] |= mask;
+            self.count += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        let w = v as usize / 64;
+        w < self.words.len() && self.words[w] & (1u64 << (v as usize % 64)) != 0
+    }
+
+    /// True when any of `vs` is a member (the per-instance scope test).
+    #[inline]
+    pub fn contains_any(&self, vs: &[u32]) -> bool {
+        vs.iter().any(|&v| self.contains(v))
+    }
+
+    /// Members inserted so far.
+    pub fn len(&self) -> usize {
+        self.count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Members in ascending order.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &word)| {
+            let mut rest = word;
+            std::iter::from_fn(move || {
+                if rest == 0 {
+                    return None;
+                }
+                let b = rest.trailing_zeros();
+                rest &= rest - 1;
+                Some(wi as u32 * 64 + b)
+            })
+        })
+    }
+}
+
+// ------------------------------------------------------------ result types
+
+/// One materialized motif instance in ORIGINAL vertex ids, members sorted
+/// ascending. `class_slot` indexes the query's compact class space (see
+/// the `class_ids` column labels on the carrying result).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MotifInstance {
+    pub verts: Vec<u32>,
+    pub class_slot: u16,
+}
+
+/// The [`Output::Instances`] result: the enumerated instances themselves,
+/// canonically ordered (each instance's vertices ascending, instances
+/// sorted lexicographically) so untruncated lists are deterministic under
+/// any scheduler.
+#[derive(Debug, Clone)]
+pub struct InstanceList {
+    pub k: usize,
+    pub direction: Direction,
+    /// Canonical class id per slot (column labels).
+    pub class_ids: Vec<u16>,
+    pub instances: Vec<MotifInstance>,
+    /// True when more instances were enumerated than `limit` kept; which
+    /// instances survive a truncated run depends on scheduling — only
+    /// untruncated lists are deterministic.
+    pub truncated: bool,
+    /// Instances enumerated (and, under a scope, accepted) in total.
+    pub total_seen: u64,
+    /// Per-slot instance totals over the whole run (exact even when the
+    /// materialized list is truncated).
+    pub per_class_seen: Vec<u64>,
+}
+
+impl InstanceList {
+    /// Canonical class id of an instance's slot.
+    pub fn class_id(&self, slot: u16) -> u16 {
+        self.class_ids[slot as usize]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut classes = Json::obj();
+        for (cid, &seen) in self.class_ids.iter().zip(&self.per_class_seen) {
+            classes.set(&format!("m{cid}"), seen);
+        }
+        let rows: Vec<Json> = self
+            .instances
+            .iter()
+            .map(|i| {
+                Json::Arr(vec![
+                    Json::from(i.verts.clone()),
+                    Json::from(self.class_id(i.class_slot) as u64),
+                ])
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("k", self.k)
+            .set("direction", self.direction.label())
+            .set("count", self.instances.len())
+            .set("truncated", self.truncated)
+            .set("total_seen", self.total_seen)
+            .set("classes", classes)
+            .set("instances", Json::Arr(rows));
+        j
+    }
+}
+
+/// One class's reservoir from an [`Output::Sample`] run.
+#[derive(Debug, Clone)]
+pub struct ClassSample {
+    /// Compact slot this reservoir covers.
+    pub slot: u16,
+    /// Canonical class id (the `m<id>` label).
+    pub class_id: u16,
+    /// Instances of this class enumerated in total (exact).
+    pub seen: u64,
+    /// Up to `per_class` uniformly sampled instances, in selection-key
+    /// order (deterministic for a fixed seed).
+    pub instances: Vec<MotifInstance>,
+}
+
+/// The [`Output::Sample`] result: a per-class uniform reservoir plus the
+/// exact per-class totals the sample was drawn from.
+#[derive(Debug, Clone)]
+pub struct SampleSummary {
+    pub k: usize,
+    pub direction: Direction,
+    pub per_class: usize,
+    pub seed: u64,
+    /// One entry per class slot (empty classes keep `seen == 0`).
+    pub classes: Vec<ClassSample>,
+    /// Instances enumerated (and, under a scope, accepted) in total.
+    pub total_seen: u64,
+}
+
+impl SampleSummary {
+    pub fn to_json(&self) -> Json {
+        let mut classes = Json::obj();
+        for c in &self.classes {
+            if c.seen == 0 {
+                continue;
+            }
+            let rows: Vec<Json> =
+                c.instances.iter().map(|i| Json::from(i.verts.clone())).collect();
+            let mut o = Json::obj();
+            o.set("seen", c.seen).set("sample", Json::Arr(rows));
+            classes.set(&format!("m{}", c.class_id), o);
+        }
+        let mut j = Json::obj();
+        j.set("k", self.k)
+            .set("direction", self.direction.label())
+            .set("per_class", self.per_class)
+            .set("seed", self.seed)
+            .set("total_seen", self.total_seen)
+            .set("classes", classes);
+        j
+    }
+}
+
+/// The [`Output::TopVertices`] result: per class, the busiest vertices by
+/// count (ORIGINAL ids, count descending, vertex id ascending on ties).
+#[derive(Debug, Clone)]
+pub struct TopVertices {
+    pub k: usize,
+    pub direction: Direction,
+    pub class_ids: Vec<u16>,
+    /// Requested ranking depth.
+    pub top_k: usize,
+    /// `per_class[slot]` = up to `top_k` (vertex, count) pairs.
+    pub per_class: Vec<Vec<(u32, u64)>>,
+    pub total_instances: u64,
+}
+
+impl TopVertices {
+    pub fn to_json(&self) -> Json {
+        let mut classes = Json::obj();
+        for (cid, rows) in self.class_ids.iter().zip(&self.per_class) {
+            if rows.is_empty() {
+                continue;
+            }
+            let rows: Vec<Json> = rows
+                .iter()
+                .map(|&(v, c)| Json::Arr(vec![Json::from(v as u64), Json::from(c)]))
+                .collect();
+            classes.set(&format!("m{cid}"), Json::Arr(rows));
+        }
+        let mut j = Json::obj();
+        j.set("k", self.k)
+            .set("direction", self.direction.label())
+            .set("top", self.top_k)
+            .set("total_instances", self.total_instances)
+            .set("classes", classes);
+        j
+    }
+}
+
+/// What a [`crate::engine::Session::query`] call produced — one variant
+/// per [`Output`] kind.
+#[derive(Debug, Clone)]
+pub enum QueryOutput {
+    Counts(MotifCounts),
+    Instances(InstanceList),
+    Sample(SampleSummary),
+    TopVertices(TopVertices),
+}
+
+impl QueryOutput {
+    /// The [`Output`] spelling this result came from.
+    pub fn label(&self) -> &'static str {
+        match self {
+            QueryOutput::Counts(_) => "counts",
+            QueryOutput::Instances(_) => "instances",
+            QueryOutput::Sample(_) => "sample",
+            QueryOutput::TopVertices(_) => "top-vertices",
+        }
+    }
+
+    /// Unwrap a Counts result; `None` for the other variants.
+    pub fn into_counts(self) -> Option<MotifCounts> {
+        match self {
+            QueryOutput::Counts(c) => Some(c),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vertex_bits_basics() {
+        let mut b = VertexBits::new(130);
+        assert!(b.is_empty());
+        assert!(b.insert(0));
+        assert!(b.insert(129));
+        assert!(b.insert(64));
+        assert!(!b.insert(64), "double insert reports existing");
+        assert_eq!(b.len(), 3);
+        assert!(b.contains(0) && b.contains(64) && b.contains(129));
+        assert!(!b.contains(1) && !b.contains(128));
+        assert!(!b.contains(10_000), "out-of-width probe is just false");
+        assert!(b.contains_any(&[5, 64]));
+        assert!(!b.contains_any(&[5, 63]));
+        assert_eq!(b.iter().collect::<Vec<_>>(), vec![0, 64, 129]);
+    }
+
+    #[test]
+    fn builder_validates_output_and_scope_parameters() {
+        assert!(MotifQuery::builder().instances(0).build().is_err());
+        assert!(MotifQuery::builder().sample(0, 1).build().is_err());
+        assert!(MotifQuery::builder().top_vertices(0).build().is_err());
+        assert!(MotifQuery::builder().scope_vertices(vec![]).build().is_err());
+        assert!(MotifQuery::builder().neighborhood(vec![], 2).build().is_err());
+
+        let q = MotifQuery::builder()
+            .size_k(4)
+            .sample(16, 7)
+            .neighborhood(vec![3, 9], 2)
+            .build()
+            .unwrap();
+        assert_eq!(q.output, Output::Sample { per_class: 16, seed: 7 });
+        assert_eq!(q.scope, Scope::Neighborhood { seeds: vec![3, 9], radius: 2 });
+
+        // first (spelling) error still wins over parameter validation
+        let err = MotifQuery::builder()
+            .scheduler_name("fifo")
+            .instances(0)
+            .build()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("fifo"), "{err}");
+    }
+
+    #[test]
+    fn output_parse_labels_roundtrip() {
+        for name in ["counts", "instances", "sample", "top-vertices"] {
+            let o = Output::parse_default(name).unwrap();
+            assert_eq!(o.label(), name);
+        }
+        assert!(Output::parse_default("histogram").is_none());
+        assert_eq!(Scope::All.label(), "all");
+        assert_eq!(Scope::Vertices(vec![1]).label(), "vertices");
+        assert_eq!(Scope::Neighborhood { seeds: vec![1], radius: 1 }.label(), "neighborhood");
+    }
+}

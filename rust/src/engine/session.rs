@@ -3,26 +3,41 @@
 //! [`Session::load`] performs every input-only computation once — the
 //! Section 6 degree-descending relabeling, the relabeled CSR (with its
 //! undirected view and transpose), and the degree-mass-balanced
-//! [`PartitionSet`] — and then serves repeated [`CountQuery`]s against the
+//! [`PartitionSet`] — and then serves repeated [`MotifQuery`]s against the
 //! cached state. This is what makes repeated queries cheap: the seed
 //! coordinator rebuilt ordering, queue and counters on every call, so a
 //! serving deployment paid full setup cost per request.
+//!
+//! [`Session::query`] is the general entry point: one call covers every
+//! [`Output`] kind (per-vertex counts, materialized instances, per-class
+//! reservoir samples, top-vertex rankings) and every [`Scope`] (whole
+//! graph, explicit vertex sets, seed neighborhoods). Scoping happens at
+//! the **work-unit level** — the root of a k-set is its minimal member
+//! and a connected k-set has diameter ≤ k-1, so only units whose root
+//! lies in the (k-1)-hop ball around the scope set are enumerated; a
+//! per-instance membership test then keeps exactly the instances that
+//! touch the scope. [`Session::count`] remains the Counts-only shorthand.
 //!
 //! Since the stream layer landed, a session is also *live*:
 //! [`Session::maintain`] registers a (size, direction) counter,
 //! [`Session::apply_edges`] applies a batch of edge insertions/deletions
 //! by patching the delta overlay and re-enumerating only the instances
 //! containing each changed edge, and [`Session::maintained_counts`] reads
-//! the incrementally maintained per-vertex counts back. Full counts keep
-//! working while deltas are pending: the enumerators run over the overlay
-//! view (same code path, see [`crate::graph::GraphProbe`]) with a freshly
-//! budgeted partition, and once the overlay outgrows
-//! `SessionConfig::compact_ratio` the CSR is rebuilt (counting-sort
-//! bucket build) and the cached partitions refreshed.
+//! the incrementally maintained per-vertex counts back. Maintenance is
+//! **Count-only**: [`Session::maintain_query`] rejects any other output
+//! (or a scope) with the typed [`CountOnlyError`] — instance lists and
+//! samples don't invert under deletions, so they must run as full
+//! queries, which stay exact while deltas are pending (the enumerators
+//! run over the overlay view — same code path, see
+//! [`crate::graph::GraphProbe`] — with a freshly budgeted partition).
+//! Once the overlay outgrows `SessionConfig::compact_ratio` the CSR is
+//! rebuilt (counting-sort bucket build) and the cached partitions
+//! refreshed.
 //!
-//! Every query picks its own motif size, direction, scheduler and sink;
-//! the per-query state (scheduler queues, counter arrays) is rebuilt from
-//! the cached partition in O(items + n·classes), with no graph passes.
+//! Every query picks its own motif size, direction, scheduler, sink,
+//! output and scope; the per-query state (scheduler queues, sink
+//! accumulators) is rebuilt from the cached partition in
+//! O(items + n·classes), with no graph passes.
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -34,16 +49,23 @@ use crate::coordinator::metrics::{RunReport, WorkerMetrics};
 use crate::graph::csr::Graph;
 use crate::graph::ordering::VertexOrdering;
 use crate::graph::{AdjacencyMode, GraphProbe};
-use crate::motifs::counter::{CounterMode, MotifCounts, SlotMapper};
+use crate::motifs::counter::{MotifCounts, SlotMapper};
 use crate::motifs::iso::NO_SLOT;
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
-use crate::stream::delta::{reenumerate_edge, EdgeChange, MaintainedCounts};
+use crate::stream::delta::{reenumerate_edge, CountOnlyError, EdgeChange, MaintainedCounts};
 use crate::stream::overlay::{DeltaOverlay, OverlayView};
 use crate::stream::{DeltaOp, DeltaReport, EdgeDelta};
 
-use super::partition::PartitionSet;
+use super::partition::{total_units, PartitionSet, WorkItem};
+use super::query::{
+    ClassSample, InstanceList, MotifInstance, MotifQuery, Output, QueryOutput, SampleSummary,
+    Scope, TopVertices, VertexBits,
+};
 use super::scheduler::{Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
-use super::sink::{make_sink, CounterSink};
+use super::sink::{
+    CountEnumSink, EmitHandle, EnumSink, InstanceEnumSink, InstanceRec, MotifEvent,
+    SampleEnumSink, TopVerticesEnumSink,
+};
 
 /// Load-time configuration (everything a query may NOT change, because the
 /// cached partition depends on it).
@@ -80,126 +102,15 @@ impl Default for SessionConfig {
     }
 }
 
-/// One counting request against a loaded session.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct CountQuery {
-    pub size: MotifSize,
-    pub direction: Direction,
-    pub scheduler: SchedulerMode,
-    pub sink: CounterMode,
+/// The resolved scope of one query, in processing ids: the member set
+/// (instances must touch it) and the root set (units whose root can own a
+/// member-touching instance — the (k-1)-hop ball around the members).
+struct ScopeSets {
+    members: VertexBits,
+    roots: VertexBits,
 }
 
-impl Default for CountQuery {
-    fn default() -> Self {
-        CountQuery {
-            size: MotifSize::Three,
-            direction: Direction::Directed,
-            scheduler: SchedulerMode::WorkStealing,
-            sink: CounterMode::Sharded,
-        }
-    }
-}
-
-impl CountQuery {
-    /// Validating builder — the one construction path shared by the CLI,
-    /// the service wire codec and the benches, so the accepted knob names
-    /// (`stealing-batch`, `partition`, ...) can't drift between surfaces.
-    pub fn builder() -> CountQueryBuilder {
-        CountQueryBuilder::default()
-    }
-}
-
-/// Builder behind [`CountQuery::builder`]. Typed setters are infallible;
-/// the `*_name` setters parse the CLI/wire spellings and defer their
-/// error to [`CountQueryBuilder::build`], so call sites chain without
-/// intermediate `?`s.
-#[derive(Debug, Clone, Default)]
-pub struct CountQueryBuilder {
-    query: CountQuery,
-    err: Option<String>,
-}
-
-impl CountQueryBuilder {
-    pub fn size(mut self, size: MotifSize) -> Self {
-        self.query.size = size;
-        self
-    }
-
-    /// Motif size from its integer spelling (3 or 4).
-    pub fn size_k(mut self, k: usize) -> Self {
-        match MotifSize::from_k(k) {
-            Some(s) => self.query.size = s,
-            None => self.fail(format!("motif size must be 3 or 4, got {k}")),
-        }
-        self
-    }
-
-    pub fn direction(mut self, direction: Direction) -> Self {
-        self.query.direction = direction;
-        self
-    }
-
-    /// Direction from its wire spelling: `directed` | `undirected`.
-    pub fn direction_name(mut self, name: &str) -> Self {
-        match Direction::parse(name) {
-            Some(d) => self.query.direction = d,
-            None => self.fail(format!("unknown direction {name:?} (directed | undirected)")),
-        }
-        self
-    }
-
-    pub fn scheduler(mut self, scheduler: SchedulerMode) -> Self {
-        self.query.scheduler = scheduler;
-        self
-    }
-
-    /// Scheduler from its CLI spelling: `cursor` | `stealing` |
-    /// `stealing-batch`.
-    pub fn scheduler_name(mut self, name: &str) -> Self {
-        match name {
-            "cursor" => self.query.scheduler = SchedulerMode::SharedCursor,
-            "stealing" => self.query.scheduler = SchedulerMode::WorkStealing,
-            "stealing-batch" => self.query.scheduler = SchedulerMode::WorkStealingBatch,
-            _ => self.fail(format!(
-                "unknown scheduler {name:?} (cursor | stealing | stealing-batch)"
-            )),
-        }
-        self
-    }
-
-    pub fn sink(mut self, sink: CounterMode) -> Self {
-        self.query.sink = sink;
-        self
-    }
-
-    /// Counter sink from its CLI spelling: `atomic` | `sharded` |
-    /// `partition`.
-    pub fn sink_name(mut self, name: &str) -> Self {
-        match name {
-            "atomic" => self.query.sink = CounterMode::Atomic,
-            "sharded" => self.query.sink = CounterMode::Sharded,
-            "partition" => self.query.sink = CounterMode::PartitionLocal,
-            _ => self.fail(format!("unknown sink {name:?} (atomic | sharded | partition)")),
-        }
-        self
-    }
-
-    fn fail(&mut self, msg: String) {
-        // first error wins: it names the knob the caller got wrong
-        if self.err.is_none() {
-            self.err = Some(msg);
-        }
-    }
-
-    pub fn build(self) -> Result<CountQuery> {
-        match self.err {
-            Some(msg) => bail!("{msg}"),
-            None => Ok(self.query),
-        }
-    }
-}
-
-/// A graph loaded for repeated motif counting and live edge updates:
+/// A graph loaded for repeated motif queries and live edge updates:
 /// cached ordering, relabeled CSR, partition set, delta overlay and
 /// incrementally maintained counters.
 pub struct Session {
@@ -355,101 +266,290 @@ impl Session {
         &self.maintained
     }
 
-    /// Count all k-motifs per vertex for one query.
-    pub fn count(&self, query: &CountQuery) -> Result<MotifCounts> {
-        Ok(self.count_with_report(query)?.0)
+    // ------------------------------------------------------------- queries
+
+    /// Run one query — any [`Output`], any [`Scope`].
+    pub fn query(&self, query: &MotifQuery) -> Result<QueryOutput> {
+        Ok(self.query_with_report(query)?.0)
     }
 
-    /// As [`Session::count`], also returning the run report. The report's
+    /// As [`Session::query`], also returning the run report. The report's
     /// `setup_secs`/`setup_reused` show whether this call paid for setup
-    /// (first query) or served from cache. While deltas are pending the
-    /// enumeration runs over the overlay view with a freshly budgeted
-    /// partition (the cached one has stale unit counts).
-    pub fn count_with_report(&self, query: &CountQuery) -> Result<(MotifCounts, RunReport)> {
+    /// (first query) or served from cache; `per_class_totals` carries the
+    /// exact class histogram for every output kind. While deltas are
+    /// pending the enumeration runs over the overlay view with a freshly
+    /// budgeted partition (the cached one has stale unit counts).
+    pub fn query_with_report(&self, query: &MotifQuery) -> Result<(QueryOutput, RunReport)> {
         if query.direction == Direction::Directed && !self.directed {
             bail!("directed motif counting requested on an undirected graph");
         }
         let reused = self.served.fetch_add(1, Ordering::Relaxed) > 0;
         let start = Instant::now();
-        let k = query.size.k();
-        let mapper = SlotMapper::new(k, query.direction);
-        let n_classes = mapper.n_classes();
+        let mapper = SlotMapper::new(query.size.k(), query.direction);
 
-        let (per_vertex_proc, instances, metrics, queue_items, queue_units) =
-            if self.overlay.is_empty() {
-                self.run_query(&self.h, &self.partitions, query, &mapper)
-            } else {
-                let view = OverlayView::new(&self.h, &self.overlay);
-                let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
-                self.run_query(&view, &partitions, query, &mapper)
-            };
-
-        // map back to original vertex ids
-        let per_vertex = self.ordering.unapply_rows(&per_vertex_proc, n_classes);
-        let elapsed = start.elapsed().as_secs_f64();
-
-        let counts = MotifCounts {
-            k,
-            direction: query.direction,
-            n: self.n,
-            n_classes,
-            per_vertex,
-            class_ids: mapper.class_ids(),
-            total_instances: instances,
-            elapsed_secs: elapsed,
+        let (mut out, metrics, queue_items, queue_units) = if self.overlay.is_empty() {
+            self.query_on(&self.h, &self.partitions, query, &mapper)?
+        } else {
+            let view = OverlayView::new(&self.h, &self.overlay);
+            let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
+            self.query_on(&view, &partitions, query, &mapper)?
         };
+        let elapsed = start.elapsed().as_secs_f64();
+        if let QueryOutput::Counts(c) = &mut out {
+            c.elapsed_secs = elapsed;
+        }
+
+        let mut per_class_totals = vec![0u64; mapper.n_classes()];
+        for w in &metrics {
+            for (t, c) in per_class_totals.iter_mut().zip(&w.per_class) {
+                *t += c;
+            }
+        }
+        let total_instances: u64 = metrics.iter().map(|w| w.instances).sum();
         let report = RunReport {
             workers: metrics,
-            total_instances: instances,
+            total_instances,
             elapsed_secs: elapsed,
             queue_items,
             queue_units,
             setup_secs: if reused { 0.0 } else { self.setup_secs },
             setup_reused: reused,
             tier_memory_bytes: self.h.tier_memory_bytes(),
+            per_class_totals,
         };
-        Ok((counts, report))
+        Ok((out, report))
+    }
+
+    /// Count all k-motifs per vertex — the [`Output::Counts`] shorthand.
+    pub fn count(&self, query: &MotifQuery) -> Result<MotifCounts> {
+        Ok(self.count_with_report(query)?.0)
+    }
+
+    /// As [`Session::count`], also returning the run report. Rejects
+    /// queries whose output is not [`Output::Counts`]; use
+    /// [`Session::query`] for the other output kinds.
+    pub fn count_with_report(&self, query: &MotifQuery) -> Result<(MotifCounts, RunReport)> {
+        if !matches!(query.output, Output::Counts) {
+            bail!(
+                "Session::count serves the counts output only (query asked for {}); \
+                 use Session::query",
+                query.output.label()
+            );
+        }
+        let (out, report) = self.query_with_report(query)?;
+        match out {
+            QueryOutput::Counts(c) => Ok((c, report)),
+            _ => unreachable!("counts output produced a non-counts result"),
+        }
     }
 
     /// Run one query over any probe surface (the cached CSR or the
-    /// overlay view), returning processing-order rows.
-    fn run_query<G: GraphProbe + Sync>(
+    /// overlay view), producing the final (original-id) result plus the
+    /// per-worker metrics and queue statistics.
+    fn query_on<G: GraphProbe + Sync>(
         &self,
         h: &G,
         partitions: &PartitionSet,
-        query: &CountQuery,
+        query: &MotifQuery,
         mapper: &SlotMapper,
-    ) -> (Vec<u64>, u64, Vec<WorkerMetrics>, usize, usize) {
-        let workers = partitions.n_shards();
-        let scheduler: Box<dyn Scheduler> = match query.scheduler {
-            SchedulerMode::SharedCursor => {
-                Box::new(SharedCursorScheduler::new(partitions.all_items()))
+    ) -> Result<(QueryOutput, Vec<WorkerMetrics>, usize, usize)> {
+        let k = query.size.k();
+        let n_classes = mapper.n_classes();
+        // the builder validates these; struct-literal queries get the
+        // same errors here instead of a panic deeper in the sink layer
+        match query.output {
+            Output::Instances { limit: 0 } => bail!("instances output needs a limit >= 1"),
+            Output::Sample { per_class: 0, .. } => bail!("sample output needs per_class >= 1"),
+            Output::TopVertices { k: 0 } => bail!("top-vertices output needs k >= 1"),
+            _ => {}
+        }
+        let scope = self.resolve_scope(h, &query.scope, k)?;
+        let out = match query.output {
+            Output::Counts => {
+                let ranges = partitions.ranges();
+                let sink = CountEnumSink::new(query.sink, self.n, n_classes, &ranges);
+                let (metrics, qi, qu) =
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let (mut rows, instances) = sink.finish();
+                if let Some(sc) = &scope {
+                    // out-of-scope rows hold partial counts (only their
+                    // instances shared with the scope); zero them so the
+                    // result never exposes a partial row
+                    zero_non_members(&mut rows, n_classes, &sc.members);
+                }
+                let per_vertex = self.ordering.unapply_rows(&rows, n_classes);
+                // exact per-class instance totals from the worker
+                // metrics: the only correct class histogram under a
+                // scope, where column sums don't divide by k
+                let mut per_class_instances = vec![0u64; n_classes];
+                for w in &metrics {
+                    for (t, c) in per_class_instances.iter_mut().zip(&w.per_class) {
+                        *t += c;
+                    }
+                }
+                let counts = MotifCounts {
+                    k,
+                    direction: query.direction,
+                    n: self.n,
+                    n_classes,
+                    per_vertex,
+                    class_ids: mapper.class_ids(),
+                    per_class_instances,
+                    total_instances: instances,
+                    elapsed_secs: 0.0, // stamped by query_with_report
+                };
+                (QueryOutput::Counts(counts), metrics, qi, qu)
             }
-            SchedulerMode::WorkStealing => {
-                Box::new(WorkStealingScheduler::new(partitions.item_lists()))
+            Output::Instances { limit } => {
+                let sink = InstanceEnumSink::new(limit, n_classes);
+                let (metrics, qi, qu) =
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let raw = sink.finish();
+                let mut instances: Vec<MotifInstance> =
+                    raw.recs.iter().map(|r| self.instance_of(r, k)).collect();
+                instances.sort_unstable_by(|a, b| {
+                    a.verts.cmp(&b.verts).then(a.class_slot.cmp(&b.class_slot))
+                });
+                let list = InstanceList {
+                    k,
+                    direction: query.direction,
+                    class_ids: mapper.class_ids(),
+                    instances,
+                    truncated: raw.truncated,
+                    total_seen: raw.total_seen,
+                    per_class_seen: raw.per_class_seen,
+                };
+                (QueryOutput::Instances(list), metrics, qi, qu)
             }
-            SchedulerMode::WorkStealingBatch => {
-                Box::new(WorkStealingScheduler::half_deque(partitions.item_lists()))
+            Output::Sample { per_class, seed } => {
+                let sink = SampleEnumSink::new(per_class, seed, n_classes);
+                let (metrics, qi, qu) =
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let raw = sink.finish();
+                let class_ids = mapper.class_ids();
+                let classes: Vec<ClassSample> = raw
+                    .per_class
+                    .into_iter()
+                    .enumerate()
+                    .map(|(slot, (seen, recs))| ClassSample {
+                        slot: slot as u16,
+                        class_id: class_ids[slot],
+                        seen,
+                        instances: recs.iter().map(|r| self.instance_of(r, k)).collect(),
+                    })
+                    .collect();
+                let sample = SampleSummary {
+                    k,
+                    direction: query.direction,
+                    per_class,
+                    seed,
+                    classes,
+                    total_seen: raw.total_seen,
+                };
+                (QueryOutput::Sample(sample), metrics, qi, qu)
+            }
+            Output::TopVertices { k: top_k } => {
+                let sink = TopVerticesEnumSink::new(self.n, n_classes);
+                let (metrics, qi, qu) =
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let (mut rows, instances) = sink.finish();
+                if let Some(sc) = &scope {
+                    zero_non_members(&mut rows, n_classes, &sc.members);
+                }
+                let per_vertex = self.ordering.unapply_rows(&rows, n_classes);
+                let mut per_class: Vec<Vec<(u32, u64)>> = Vec::with_capacity(n_classes);
+                for slot in 0..n_classes {
+                    let mut ranked: Vec<(u32, u64)> = (0..self.n as u32)
+                        .filter_map(|v| {
+                            let c = per_vertex[v as usize * n_classes + slot];
+                            (c > 0).then_some((v, c))
+                        })
+                        .collect();
+                    ranked.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                    ranked.truncate(top_k);
+                    per_class.push(ranked);
+                }
+                let top = TopVertices {
+                    k,
+                    direction: query.direction,
+                    class_ids: mapper.class_ids(),
+                    top_k,
+                    per_class,
+                    total_instances: instances,
+                };
+                (QueryOutput::TopVertices(top), metrics, qi, qu)
             }
         };
-        let ranges = partitions.ranges();
-        let sink = make_sink(query.sink, self.n, mapper.n_classes(), &ranges);
+        let (out, metrics, qi, qu) = out;
+        Ok((out, metrics, qi, qu))
+    }
 
-        let sched_ref: &dyn Scheduler = scheduler.as_ref();
-        let sink_ref: &dyn CounterSink = sink.as_ref();
-        let size = query.size;
-        let dir = query.direction;
-        let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..workers)
-                .map(|w| {
-                    s.spawn(move || worker_loop(h, size, dir, mapper, sched_ref, sink_ref, w))
-                })
-                .collect();
-            handles.into_iter().map(|t| t.join().expect("worker panicked")).collect()
-        });
+    /// Map one buffered instance record to original ids, members sorted.
+    fn instance_of(&self, rec: &InstanceRec, k: usize) -> MotifInstance {
+        let mut verts: Vec<u32> = rec.verts[..k]
+            .iter()
+            .map(|&pv| self.ordering.old_of_new[pv as usize])
+            .collect();
+        verts.sort_unstable();
+        MotifInstance { verts, class_slot: rec.class_slot }
+    }
 
-        let (per_vertex_proc, instances) = sink.finish();
-        (per_vertex_proc, instances, metrics, partitions.total_items, partitions.total_units)
+    /// Resolve a query scope against the run surface: member bits plus
+    /// the (k-1)-hop root ball, both in processing ids.
+    fn resolve_scope<G: GraphProbe>(
+        &self,
+        h: &G,
+        scope: &Scope,
+        k: usize,
+    ) -> Result<Option<ScopeSets>> {
+        let to_bits = |vs: &[u32]| -> Result<VertexBits> {
+            let mut bits = VertexBits::new(self.n);
+            for &v in vs {
+                if v as usize >= self.n {
+                    bail!("scope vertex {v} out of range (n={})", self.n);
+                }
+                bits.insert(self.ordering.new_of_old[v as usize]);
+            }
+            Ok(bits)
+        };
+        match scope {
+            Scope::All => Ok(None),
+            Scope::Vertices(vs) => {
+                if vs.is_empty() {
+                    bail!("vertex scope needs at least one vertex");
+                }
+                let members = to_bits(vs)?;
+                let roots = expand_hops(h, &members, k - 1);
+                Ok(Some(ScopeSets { members, roots }))
+            }
+            Scope::Neighborhood { seeds, radius } => {
+                if seeds.is_empty() {
+                    bail!("neighborhood scope needs at least one seed");
+                }
+                let members = expand_hops(h, &to_bits(seeds)?, *radius);
+                let roots = expand_hops(h, &members, k - 1);
+                Ok(Some(ScopeSets { members, roots }))
+            }
+        }
+    }
+
+    /// The closed `radius`-hop undirected neighborhood of `seeds`, in
+    /// ORIGINAL vertex ids (sorted). Runs over the overlay view while
+    /// deltas are pending — the service's scoped `vertex_counts` resolves
+    /// its row set through this.
+    pub fn neighborhood(&self, seeds: &[u32], radius: usize) -> Result<Vec<u32>> {
+        let scope = Scope::Neighborhood { seeds: seeds.to_vec(), radius };
+        let sets = if self.overlay.is_empty() {
+            self.resolve_scope(&self.h, &scope, 1)?
+        } else {
+            let view = OverlayView::new(&self.h, &self.overlay);
+            self.resolve_scope(&view, &scope, 1)?
+        }
+        .expect("a neighborhood scope always resolves");
+        let mut out: Vec<u32> =
+            sets.members.iter().map(|pv| self.ordering.old_of_new[pv as usize]).collect();
+        out.sort_unstable();
+        Ok(out)
     }
 
     // ----------------------------------------------------------- streaming
@@ -465,16 +565,46 @@ impl Session {
             return Ok(());
         }
         let mapper = SlotMapper::new(size.k(), direction);
-        let query = CountQuery { size, direction, ..Default::default() };
-        let (rows, instances, _, _, _) = if self.overlay.is_empty() {
-            self.run_query(&self.h, &self.partitions, &query, &mapper)
+        let (rows, instances) = if self.overlay.is_empty() {
+            self.full_count_proc(&self.h, &self.partitions, size, direction, &mapper)
         } else {
             let view = OverlayView::new(&self.h, &self.overlay);
             let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
-            self.run_query(&view, &partitions, &query, &mapper)
+            self.full_count_proc(&view, &partitions, size, direction, &mapper)
         };
         self.maintained.push(MaintainedCounts::new(size, direction, rows, instances));
         Ok(())
+    }
+
+    /// As [`Session::maintain`], validating the whole query: maintenance
+    /// is Count-only and unscoped, so any other [`Output`] or [`Scope`]
+    /// is rejected with the typed [`CountOnlyError`] (reachable through
+    /// `anyhow::Error::downcast_ref`).
+    pub fn maintain_query(&mut self, query: &MotifQuery) -> Result<()> {
+        if !matches!(query.output, Output::Counts) {
+            return Err(CountOnlyError::new(format!("`{}` output", query.output.label())).into());
+        }
+        if !query.scope.is_all() {
+            return Err(CountOnlyError::new(format!("`{}` scope", query.scope.label())).into());
+        }
+        self.maintain(query.size, query.direction)
+    }
+
+    /// One full, unscoped count in processing-id rows — the baseline a
+    /// maintained counter starts from.
+    fn full_count_proc<G: GraphProbe + Sync>(
+        &self,
+        h: &G,
+        partitions: &PartitionSet,
+        size: MotifSize,
+        direction: Direction,
+        mapper: &SlotMapper,
+    ) -> (Vec<u64>, u64) {
+        let query = MotifQuery { size, direction, ..Default::default() };
+        let sink =
+            CountEnumSink::new(query.sink, self.n, mapper.n_classes(), &partitions.ranges());
+        let _ = run_enum(h, partitions, &query, mapper, &sink, None);
+        sink.finish()
     }
 
     /// Read a maintained counter back as [`MotifCounts`] (original vertex
@@ -666,22 +796,166 @@ fn resolve_workers(requested: usize) -> usize {
     }
 }
 
+/// Zero the rows of vertices outside the scope member set (processing-id
+/// rows) so a scoped result never exposes a partial out-of-scope row.
+fn zero_non_members(rows: &mut [u64], n_classes: usize, members: &VertexBits) {
+    for (v, row) in rows.chunks_mut(n_classes).enumerate() {
+        if !members.contains(v as u32) {
+            row.iter_mut().for_each(|x| *x = 0);
+        }
+    }
+}
+
+/// Grow `start` by `hops` undirected BFS layers over any probe surface.
+fn expand_hops<G: GraphProbe>(h: &G, start: &VertexBits, hops: usize) -> VertexBits {
+    let mut out = start.clone();
+    if hops == 0 {
+        return out;
+    }
+    let mut frontier: Vec<u32> = start.iter().collect();
+    for _ in 0..hops {
+        let mut next = Vec::new();
+        for &v in &frontier {
+            for w in h.und_neighbors(v) {
+                if out.insert(w) {
+                    next.push(w);
+                }
+            }
+        }
+        if next.is_empty() {
+            break;
+        }
+        frontier = next;
+    }
+    out
+}
+
+/// Drive one query's enumeration into any [`EnumSink`]: build the
+/// scheduler (scope-filtering the cached items at the work-unit level),
+/// run one monomorphized worker loop per thread, and return the metrics
+/// plus the (filtered) queue statistics.
+fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
+    h: &G,
+    partitions: &PartitionSet,
+    query: &MotifQuery,
+    mapper: &SlotMapper,
+    sink: &S,
+    scope: Option<&ScopeSets>,
+) -> (Vec<WorkerMetrics>, usize, usize) {
+    let workers = partitions.n_shards();
+    let (scheduler, queue_items, queue_units): (Box<dyn Scheduler>, usize, usize) = match scope {
+        None => {
+            let s: Box<dyn Scheduler> = match query.scheduler {
+                SchedulerMode::SharedCursor => {
+                    Box::new(SharedCursorScheduler::new(partitions.all_items()))
+                }
+                SchedulerMode::WorkStealing => {
+                    Box::new(WorkStealingScheduler::new(partitions.item_lists()))
+                }
+                SchedulerMode::WorkStealingBatch => {
+                    Box::new(WorkStealingScheduler::half_deque(partitions.item_lists()))
+                }
+            };
+            (s, partitions.total_items, partitions.total_units)
+        }
+        Some(sc) => {
+            // the scope's speedup lives here: only units whose root can
+            // own an in-scope instance ever reach a worker
+            let keep = |it: &WorkItem| sc.roots.contains(it.root);
+            match query.scheduler {
+                SchedulerMode::SharedCursor => {
+                    let items: Vec<WorkItem> =
+                        partitions.all_items().into_iter().filter(keep).collect();
+                    let (qi, qu) = (items.len(), total_units(&items));
+                    (Box::new(SharedCursorScheduler::new(items)), qi, qu)
+                }
+                SchedulerMode::WorkStealing | SchedulerMode::WorkStealingBatch => {
+                    let lists: Vec<Vec<WorkItem>> = partitions
+                        .item_lists()
+                        .into_iter()
+                        .map(|l| l.into_iter().filter(keep).collect())
+                        .collect();
+                    let qi = lists.iter().map(Vec::len).sum();
+                    let qu = lists.iter().map(|l| total_units(l)).sum();
+                    let s: Box<dyn Scheduler> =
+                        if query.scheduler == SchedulerMode::WorkStealingBatch {
+                            Box::new(WorkStealingScheduler::half_deque(lists))
+                        } else {
+                            Box::new(WorkStealingScheduler::new(lists))
+                        };
+                    (s, qi, qu)
+                }
+            }
+        }
+    };
+
+    let sched_ref: &dyn Scheduler = scheduler.as_ref();
+    let members = scope.map(|sc| &sc.members);
+    let size = query.size;
+    let dir = query.direction;
+    let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                s.spawn(move || worker_loop(h, size, dir, mapper, sched_ref, sink, members, w))
+            })
+            .collect();
+        handles.into_iter().map(|t| t.join().expect("worker panicked")).collect()
+    });
+    (metrics, queue_items, queue_units)
+}
+
 /// Worker inner loop shared by every scheduler × sink combination and
 /// every probe surface (static CSR or delta overlay): claim items until
-/// drained, feed every enumerated instance to the sink handle.
-fn worker_loop<G: GraphProbe + Sync>(
+/// drained, feed every enumerated instance to the sink handle. The handle
+/// type is monomorphized, and the scope test compiles away entirely on
+/// unscoped runs (const-generic split in [`drive`]) — the Count fast path
+/// is the pre-redesign `record(verts, slot)` call, nothing more.
+#[allow(clippy::too_many_arguments)]
+fn worker_loop<G: GraphProbe, S: EnumSink>(
     h: &G,
     size: MotifSize,
     dir: Direction,
     mapper: &SlotMapper,
     sched: &dyn Scheduler,
-    sink: &dyn CounterSink,
+    sink: &S,
+    members: Option<&VertexBits>,
     worker_id: usize,
 ) -> WorkerMetrics {
-    let mut m = WorkerMetrics { worker_id, ..Default::default() };
+    let mut m = WorkerMetrics {
+        worker_id,
+        per_class: vec![0; mapper.n_classes()],
+        ..Default::default()
+    };
     let t0 = Instant::now();
-    let mut handle = sink.worker(worker_id);
+    let mut handle = sink.attach(worker_id);
     let mut ctx = bfs3::EnumCtx::new(h.n());
+    match members {
+        None => {
+            let empty = VertexBits::default();
+            drive::<_, _, false>(h, size, dir, mapper, sched, &empty, &mut handle, &mut ctx, &mut m, worker_id);
+        }
+        Some(bits) => {
+            drive::<_, _, true>(h, size, dir, mapper, sched, bits, &mut handle, &mut ctx, &mut m, worker_id);
+        }
+    }
+    handle.flush();
+    m.busy_secs = t0.elapsed().as_secs_f64();
+    m
+}
+
+#[allow(clippy::too_many_arguments)]
+fn drive<G: GraphProbe, H: EmitHandle, const SCOPED: bool>(
+    h: &G,
+    size: MotifSize,
+    dir: Direction,
+    mapper: &SlotMapper,
+    sched: &dyn Scheduler,
+    members: &VertexBits,
+    handle: &mut H,
+    ctx: &mut bfs3::EnumCtx,
+    m: &mut WorkerMetrics,
+    worker_id: usize,
+) {
     while let Some(claim) = sched.pop(worker_id) {
         let item = claim.item;
         m.items += 1;
@@ -693,27 +967,32 @@ fn worker_loop<G: GraphProbe + Sync>(
         for j in item.j_start..item.j_end {
             match size {
                 MotifSize::Three => {
-                    bfs3::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
+                    bfs3::enumerate_unit(h, dir, item.root, j as usize, ctx, &mut |verts, raw| {
                         let slot = mapper.slot(raw);
                         debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
+                        if SCOPED && !members.contains_any(verts) {
+                            return;
+                        }
                         m.instances += 1;
-                        handle.record(verts, slot);
+                        m.per_class[slot as usize] += 1;
+                        handle.emit(MotifEvent { verts, class_slot: slot });
                     });
                 }
                 MotifSize::Four => {
-                    bfs4::enumerate_unit(h, dir, item.root, j as usize, &mut ctx, &mut |verts, raw| {
+                    bfs4::enumerate_unit(h, dir, item.root, j as usize, ctx, &mut |verts, raw| {
                         let slot = mapper.slot(raw);
                         debug_assert_ne!(slot, NO_SLOT, "enumerator produced invalid id {raw}");
+                        if SCOPED && !members.contains_any(verts) {
+                            return;
+                        }
                         m.instances += 1;
-                        handle.record(verts, slot);
+                        m.per_class[slot as usize] += 1;
+                        handle.emit(MotifEvent { verts, class_slot: slot });
                     });
                 }
             }
         }
     }
-    handle.flush();
-    m.busy_secs = t0.elapsed().as_secs_f64();
-    m
 }
 
 #[cfg(test)]
@@ -721,6 +1000,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{count_motifs, CountConfig};
     use crate::graph::generators;
+    use crate::motifs::counter::CounterMode;
 
     #[test]
     fn session_reuse_skips_setup_and_matches_seed_path() {
@@ -728,7 +1008,7 @@ mod tests {
         let session = Session::load(&g);
         assert_eq!(session.queries_served(), 0);
 
-        let q3 = CountQuery { size: MotifSize::Three, ..Default::default() };
+        let q3 = MotifQuery { size: MotifSize::Three, ..Default::default() };
         let (c1, r1) = session.count_with_report(&q3).unwrap();
         assert!(!r1.setup_reused);
         let (c2, r2) = session.count_with_report(&q3).unwrap();
@@ -752,7 +1032,7 @@ mod tests {
         for size in [MotifSize::Three, MotifSize::Four] {
             for dir in [Direction::Directed, Direction::Undirected] {
                 let got = session
-                    .count(&CountQuery { size, direction: dir, ..Default::default() })
+                    .count(&MotifQuery { size, direction: dir, ..Default::default() })
                     .unwrap();
                 let want = count_motifs(
                     &g,
@@ -770,11 +1050,12 @@ mod tests {
         let g = generators::barabasi_albert(150, 4, 3);
         let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
         let base = session
-            .count(&CountQuery {
+            .count(&MotifQuery {
                 size: MotifSize::Four,
                 direction: Direction::Undirected,
                 scheduler: SchedulerMode::SharedCursor,
                 sink: CounterMode::Atomic,
+                ..Default::default()
             })
             .unwrap();
         for scheduler in [
@@ -784,11 +1065,12 @@ mod tests {
         ] {
             for sink in [CounterMode::Atomic, CounterMode::Sharded, CounterMode::PartitionLocal] {
                 let got = session
-                    .count(&CountQuery {
+                    .count(&MotifQuery {
                         size: MotifSize::Four,
                         direction: Direction::Undirected,
                         scheduler,
                         sink,
+                        ..Default::default()
                     })
                     .unwrap();
                 assert_eq!(got.per_vertex, base.per_vertex, "{scheduler:?} {sink:?}");
@@ -801,7 +1083,7 @@ mod tests {
     fn directed_query_on_undirected_session_is_error() {
         let g = generators::star(6);
         let session = Session::load(&g);
-        let err = session.count(&CountQuery::default()).unwrap_err();
+        let err = session.count(&MotifQuery::default()).unwrap_err();
         assert!(err.to_string().contains("undirected"));
         let mut session = session;
         let err = session.maintain(MotifSize::Three, Direction::Directed).unwrap_err();
@@ -817,8 +1099,8 @@ mod tests {
             SchedulerMode::WorkStealing,
             SchedulerMode::WorkStealingBatch,
         ] {
-            let (_, report) = session
-                .count_with_report(&CountQuery {
+            let (counts, report) = session
+                .count_with_report(&MotifQuery {
                     size: MotifSize::Three,
                     direction: Direction::Undirected,
                     scheduler,
@@ -830,6 +1112,9 @@ mod tests {
             assert_eq!(report.queue_units, g.und.m() / 2);
             let worker_instances: u64 = report.workers.iter().map(|w| w.instances).sum();
             assert_eq!(worker_instances, report.total_instances);
+            // the class histogram is exact and consistent both ways
+            assert_eq!(report.per_class_totals.iter().sum::<u64>(), report.total_instances);
+            assert_eq!(report.per_class_totals, counts.class_instances());
         }
     }
 
@@ -839,7 +1124,7 @@ mod tests {
         let g = generators::star(600);
         let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
         let (_, report) = session
-            .count_with_report(&CountQuery {
+            .count_with_report(&MotifQuery {
                 size: MotifSize::Three,
                 direction: Direction::Undirected,
                 scheduler: SchedulerMode::WorkStealingBatch,
@@ -848,6 +1133,250 @@ mod tests {
             .unwrap();
         // steal-batch mass >= steal count whenever any steal happened
         assert!(report.total_steal_batch() >= report.total_steals());
+    }
+
+    // --------------------------------------------------- outputs & scopes
+
+    #[test]
+    fn count_rejects_non_count_outputs() {
+        let g = generators::star(6);
+        let session = Session::load(&g);
+        let q = MotifQuery {
+            direction: Direction::Undirected,
+            output: Output::Instances { limit: 10 },
+            ..Default::default()
+        };
+        let err = session.count(&q).unwrap_err();
+        assert!(err.to_string().contains("counts output only"), "{err}");
+    }
+
+    #[test]
+    fn instances_match_counts_histogram() {
+        let g = generators::gnp_directed(40, 0.12, 9);
+        let session = Session::load_with(&g, &SessionConfig { workers: 3, ..Default::default() });
+        for size in [MotifSize::Three, MotifSize::Four] {
+            let base = MotifQuery { size, direction: Direction::Directed, ..Default::default() };
+            let counts = session.count(&base).unwrap();
+            let q = MotifQuery { output: Output::Instances { limit: usize::MAX >> 1 }, ..base };
+            let (out, report) = session.query_with_report(&q).unwrap();
+            let list = match out {
+                QueryOutput::Instances(l) => l,
+                other => panic!("{other:?}"),
+            };
+            assert!(!list.truncated);
+            assert_eq!(list.total_seen, counts.total_instances);
+            assert_eq!(list.instances.len() as u64, counts.total_instances);
+            assert_eq!(list.per_class_seen, counts.class_instances());
+            assert_eq!(report.per_class_totals, counts.class_instances());
+            // canonical order: sorted, no duplicates
+            for w in list.instances.windows(2) {
+                assert!(w[0].verts < w[1].verts, "unsorted or duplicate instance");
+            }
+            // the per-instance histogram agrees with the materialized list
+            let mut hist = vec![0u64; list.class_ids.len()];
+            for i in &list.instances {
+                hist[i.class_slot as usize] += 1;
+            }
+            assert_eq!(hist, list.per_class_seen);
+        }
+    }
+
+    #[test]
+    fn instance_limit_truncates_but_histogram_stays_exact() {
+        let g = generators::gnp_undirected(40, 0.15, 4);
+        let session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        let counts = session
+            .count(&MotifQuery { direction: Direction::Undirected, ..Default::default() })
+            .unwrap();
+        assert!(counts.total_instances > 5);
+        let q = MotifQuery {
+            direction: Direction::Undirected,
+            output: Output::Instances { limit: 5 },
+            ..Default::default()
+        };
+        let list = match session.query(&q).unwrap() {
+            QueryOutput::Instances(l) => l,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(list.instances.len(), 5, "hard limit respected");
+        assert!(list.truncated);
+        assert_eq!(list.total_seen, counts.total_instances);
+        assert_eq!(list.per_class_seen, counts.class_instances());
+    }
+
+    #[test]
+    fn sample_is_identical_across_schedulers_and_reports_exact_seen() {
+        let g = generators::barabasi_albert(120, 3, 8);
+        let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+        let counts = session
+            .count(&MotifQuery { direction: Direction::Undirected, ..Default::default() })
+            .unwrap();
+        let run = |scheduler| {
+            let q = MotifQuery {
+                direction: Direction::Undirected,
+                scheduler,
+                output: Output::Sample { per_class: 7, seed: 11 },
+                ..Default::default()
+            };
+            match session.query(&q).unwrap() {
+                QueryOutput::Sample(s) => s,
+                other => panic!("{other:?}"),
+            }
+        };
+        let base = run(SchedulerMode::SharedCursor);
+        for scheduler in [SchedulerMode::WorkStealing, SchedulerMode::WorkStealingBatch] {
+            let got = run(scheduler);
+            for (a, b) in base.classes.iter().zip(&got.classes) {
+                assert_eq!(a.seen, b.seen, "{scheduler:?}");
+                assert_eq!(a.instances, b.instances, "{scheduler:?} sample must not move");
+            }
+        }
+        // seen counts are the exact per-class totals
+        let want = counts.class_instances();
+        let got: Vec<u64> = base.classes.iter().map(|c| c.seen).collect();
+        assert_eq!(got, want);
+        for c in &base.classes {
+            assert_eq!(c.instances.len() as u64, c.seen.min(7));
+        }
+    }
+
+    #[test]
+    fn top_vertices_ranking_matches_counts() {
+        let g = generators::barabasi_albert(100, 3, 2);
+        let session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        let counts = session
+            .count(&MotifQuery { direction: Direction::Undirected, ..Default::default() })
+            .unwrap();
+        let q = MotifQuery {
+            direction: Direction::Undirected,
+            output: Output::TopVertices { k: 3 },
+            ..Default::default()
+        };
+        let top = match session.query(&q).unwrap() {
+            QueryOutput::TopVertices(t) => t,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(top.total_instances, counts.total_instances);
+        for (slot, ranked) in top.per_class.iter().enumerate() {
+            assert!(ranked.len() <= 3);
+            // ranked counts match the count matrix and are descending
+            let mut prev = u64::MAX;
+            for &(v, c) in ranked {
+                assert_eq!(c, counts.vertex(v)[slot], "v{v} slot {slot}");
+                assert!(c <= prev);
+                prev = c;
+            }
+            // the top entry really is the maximum of the column
+            if let Some(&(_, best)) = ranked.first() {
+                let max = (0..counts.n as u32).map(|v| counts.vertex(v)[slot]).max().unwrap();
+                assert_eq!(best, max);
+            }
+        }
+    }
+
+    #[test]
+    fn scoped_counts_match_full_rows_restricted() {
+        let g = generators::gnp_directed(70, 0.08, 19);
+        let session = Session::load_with(&g, &SessionConfig { workers: 3, ..Default::default() });
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in [Direction::Directed, Direction::Undirected] {
+                let full = session
+                    .count(&MotifQuery { size, direction: dir, ..Default::default() })
+                    .unwrap();
+                let scope_vs = vec![0u32, 7, 33];
+                let (scoped, report) = session
+                    .count_with_report(&MotifQuery {
+                        size,
+                        direction: dir,
+                        scope: Scope::Vertices(scope_vs.clone()),
+                        ..Default::default()
+                    })
+                    .unwrap();
+                for &v in &scope_vs {
+                    assert_eq!(scoped.vertex(v), full.vertex(v), "v{v} {size:?} {dir:?}");
+                }
+                for v in 0..g.n() as u32 {
+                    if !scope_vs.contains(&v) {
+                        assert!(scoped.vertex(v).iter().all(|&c| c == 0), "v{v} must be zeroed");
+                    }
+                }
+                // the work-unit filter did real filtering
+                assert!(report.queue_units <= g.und.m() / 2);
+                assert!(scoped.total_instances <= full.total_instances);
+                assert_eq!(
+                    report.per_class_totals.iter().sum::<u64>(),
+                    scoped.total_instances
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn neighborhood_scope_covers_the_ball() {
+        let g = generators::barabasi_albert(80, 3, 5);
+        let session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        let full = session
+            .count(&MotifQuery { direction: Direction::Undirected, ..Default::default() })
+            .unwrap();
+        let ball = session.neighborhood(&[4], 2).unwrap();
+        assert!(ball.contains(&4));
+        let scoped = session
+            .count(&MotifQuery {
+                direction: Direction::Undirected,
+                scope: Scope::Neighborhood { seeds: vec![4], radius: 2 },
+                ..Default::default()
+            })
+            .unwrap();
+        for &v in &ball {
+            assert_eq!(scoped.vertex(v), full.vertex(v), "v{v}");
+        }
+        for v in 0..g.n() as u32 {
+            if !ball.contains(&v) {
+                assert!(scoped.vertex(v).iter().all(|&c| c == 0));
+            }
+        }
+    }
+
+    #[test]
+    fn scope_rejects_out_of_range_vertices() {
+        let g = generators::star(10);
+        let session = Session::load(&g);
+        let q = MotifQuery {
+            direction: Direction::Undirected,
+            scope: Scope::Vertices(vec![99]),
+            ..Default::default()
+        };
+        let err = session.count(&q).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn maintain_query_rejects_non_count_outputs_with_typed_error() {
+        let g = generators::gnp_directed(30, 0.1, 2);
+        let mut session = Session::load(&g);
+        for output in [
+            Output::Instances { limit: 10 },
+            Output::Sample { per_class: 5, seed: 1 },
+            Output::TopVertices { k: 3 },
+        ] {
+            let err = session
+                .maintain_query(&MotifQuery { output, ..Default::default() })
+                .unwrap_err();
+            let typed = err.downcast_ref::<CountOnlyError>();
+            assert!(typed.is_some(), "{output:?} must raise the typed error");
+            assert!(err.to_string().contains("Count-only"), "{err}");
+        }
+        // scoped maintenance is equally rejected
+        let err = session
+            .maintain_query(&MotifQuery {
+                scope: Scope::Vertices(vec![1]),
+                ..Default::default()
+            })
+            .unwrap_err();
+        assert!(err.downcast_ref::<CountOnlyError>().is_some());
+        // the counts output registers fine
+        session.maintain_query(&MotifQuery::default()).unwrap();
+        assert_eq!(session.maintained().len(), 1);
     }
 
     // -------------------------------------------------------- streaming
@@ -878,7 +1407,7 @@ mod tests {
             [(MotifSize::Three, Direction::Directed), (MotifSize::Four, Direction::Undirected)]
         {
             let maintained = session.maintained_counts(size, dir).unwrap();
-            let want = fresh.count(&CountQuery { size, direction: dir, ..Default::default() }).unwrap();
+            let want = fresh.count(&MotifQuery { size, direction: dir, ..Default::default() }).unwrap();
             assert_eq!(maintained.per_vertex, want.per_vertex, "{size:?} {dir:?}");
             assert_eq!(maintained.total_instances, want.total_instances);
         }
@@ -897,7 +1426,7 @@ mod tests {
         session.apply_edges(&deltas).unwrap();
         assert!(session.overlay_entries() > 0, "overlay should be dirty");
 
-        let q = CountQuery { size: MotifSize::Four, direction: Direction::Directed, ..Default::default() };
+        let q = MotifQuery { size: MotifSize::Four, direction: Direction::Directed, ..Default::default() };
         let dirty = session.count(&q).unwrap();
 
         let snapshot = session.snapshot_graph();
@@ -905,6 +1434,39 @@ mod tests {
         let want = fresh.count(&q).unwrap();
         assert_eq!(dirty.per_vertex, want.per_vertex);
         assert_eq!(dirty.total_instances, want.total_instances);
+    }
+
+    #[test]
+    fn scoped_and_instance_queries_stay_exact_over_dirty_overlay() {
+        let g = generators::gnp_directed(45, 0.1, 27);
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, compact_ratio: f64::INFINITY, ..Default::default() },
+        );
+        let deltas: Vec<EdgeDelta> =
+            (0..15).map(|i| EdgeDelta::insert(i, (i * 11 + 2) % 45)).collect();
+        session.apply_edges(&deltas).unwrap();
+        assert!(session.overlay_entries() > 0);
+
+        let fresh = Session::load(&session.snapshot_graph());
+        // scoped counts over the dirty overlay equal the reload's rows
+        let scope = Scope::Vertices(vec![1, 8, 20]);
+        let dirty = session
+            .count(&MotifQuery { scope: scope.clone(), ..Default::default() })
+            .unwrap();
+        let want = fresh.count(&MotifQuery { scope, ..Default::default() }).unwrap();
+        assert_eq!(dirty.per_vertex, want.per_vertex);
+        // instance lists too
+        let q = MotifQuery { output: Output::Instances { limit: usize::MAX >> 1 }, ..Default::default() };
+        let a = match session.query(&q).unwrap() {
+            QueryOutput::Instances(l) => l,
+            other => panic!("{other:?}"),
+        };
+        let b = match fresh.query(&q).unwrap() {
+            QueryOutput::Instances(l) => l,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(a.instances, b.instances);
     }
 
     #[test]
@@ -924,7 +1486,7 @@ mod tests {
         }
         let snapshot = session.snapshot_graph();
         let fresh = Session::load(&snapshot);
-        let q = CountQuery {
+        let q = MotifQuery {
             size: MotifSize::Three,
             direction: Direction::Undirected,
             ..Default::default()
@@ -945,7 +1507,7 @@ mod tests {
         assert!(session.maintained_counts(MotifSize::Four, Direction::Directed).is_none());
         let c = session.maintained_counts(MotifSize::Three, Direction::Directed).unwrap();
         let want = session
-            .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
+            .count(&MotifQuery { size: MotifSize::Three, ..Default::default() })
             .unwrap();
         assert_eq!(c.per_vertex, want.per_vertex);
     }
@@ -971,7 +1533,7 @@ mod tests {
         assert!(hybrid.hub_rows() > 0);
         for size in [MotifSize::Three, MotifSize::Four] {
             for dir in [Direction::Directed, Direction::Undirected] {
-                let q = CountQuery { size, direction: dir, ..Default::default() };
+                let q = MotifQuery { size, direction: dir, ..Default::default() };
                 let (a, ra) = csr.count_with_report(&q).unwrap();
                 let (b, rb) = hybrid.count_with_report(&q).unwrap();
                 assert_eq!(a.per_vertex, b.per_vertex, "{size:?} {dir:?}");
@@ -1005,7 +1567,7 @@ mod tests {
             "compaction must re-tier the rebuilt CSR"
         );
         // counts over the re-tiered CSR still match a fresh reload
-        let q = CountQuery { size: MotifSize::Three, direction: Direction::Directed, ..Default::default() };
+        let q = MotifQuery { size: MotifSize::Three, direction: Direction::Directed, ..Default::default() };
         let fresh = Session::load(&session.snapshot_graph());
         assert_eq!(
             session.count(&q).unwrap().per_vertex,
@@ -1031,7 +1593,7 @@ mod tests {
 
     #[test]
     fn builder_parses_cli_spellings_and_rejects_bad_ones() {
-        let q = CountQuery::builder()
+        let q = MotifQuery::builder()
             .size_k(4)
             .direction_name("undirected")
             .scheduler_name("stealing-batch")
@@ -1042,18 +1604,19 @@ mod tests {
         assert_eq!(q.direction, Direction::Undirected);
         assert_eq!(q.scheduler, SchedulerMode::WorkStealingBatch);
         assert_eq!(q.sink, CounterMode::PartitionLocal);
+        assert_eq!(q.output, Output::Counts);
+        assert_eq!(q.scope, Scope::All);
 
-        // defaults match CountQuery::default()
-        let d = CountQuery::builder().build().unwrap();
-        assert_eq!(d.size, CountQuery::default().size);
-        assert_eq!(d.scheduler, CountQuery::default().scheduler);
+        // defaults match MotifQuery::default()
+        let d = MotifQuery::builder().build().unwrap();
+        assert_eq!(d, MotifQuery::default());
 
-        assert!(CountQuery::builder().size_k(5).build().is_err());
-        assert!(CountQuery::builder().direction_name("sideways").build().is_err());
-        assert!(CountQuery::builder().scheduler_name("fifo").build().is_err());
-        assert!(CountQuery::builder().sink_name("tree").build().is_err());
+        assert!(MotifQuery::builder().size_k(5).build().is_err());
+        assert!(MotifQuery::builder().direction_name("sideways").build().is_err());
+        assert!(MotifQuery::builder().scheduler_name("fifo").build().is_err());
+        assert!(MotifQuery::builder().sink_name("tree").build().is_err());
         // first error wins and names the bad knob
-        let err = CountQuery::builder()
+        let err = MotifQuery::builder()
             .size_k(9)
             .scheduler_name("fifo")
             .build()

@@ -1,9 +1,30 @@
-//! Sink layer: where enumerated instances are counted.
+//! Sink layer: where enumerated instances go.
 //!
-//! [`CounterSink`] unifies the counter-update strategies behind one
-//! object-safe interface: the run loop asks the sink for a per-worker
-//! [`WorkerHandle`], records every instance through it, and flushes once
-//! at the end. Three implementations (the ablation bench compares them):
+//! The emission pipeline has two tiers:
+//!
+//! **[`EnumSink`] — the generic event consumer.** Every enumerated
+//! instance is one [`MotifEvent`] `{ verts, class_slot }`; the run loop
+//! attaches one monomorphized [`EmitHandle`] per worker, feeds it every
+//! event, and flushes once at the end. Four consumers ship:
+//!
+//! - [`CountEnumSink`] — per-vertex class counts, wrapping the
+//!   [`CounterSink`] strategies below (results are bit-identical to the
+//!   pre-redesign counts; the per-event cost compiles down to exactly the
+//!   old `record(verts, slot)` call).
+//! - [`InstanceEnumSink`] — materializes the instances themselves through
+//!   bounded per-worker buffers draining into one shared list, with a
+//!   hard `limit` and a `truncated` flag.
+//! - [`SampleEnumSink`] — a uniform per-class reservoir of up to
+//!   `per_class` instances. Selection is a bottom-k sketch over a
+//!   seed-keyed instance hash, so membership depends only on (seed,
+//!   instance) — the sample is reproducible under work stealing, across
+//!   scheduler modes and worker counts.
+//! - [`TopVerticesEnumSink`] — full per-vertex counts accumulated in
+//!   per-worker shards; the session ranks the per-class top vertices from
+//!   the merged rows at finish.
+//!
+//! **[`CounterSink`] — the object-safe counting strategies** the Count
+//! output (and the stream layer's delta re-enumerator) picks at runtime:
 //!
 //! - [`AtomicSink`] — one shared `AtomicU64` array, relaxed fetch-add per
 //!   touch (the paper's GPU atomicAdd strategy, Appendix I).
@@ -17,10 +38,477 @@
 //!   add with ~`n × classes` total extra memory instead of per-worker
 //!   copies.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::motifs::counter::{AtomicCounter, CounterMode, ShardCounter};
+
+// ================================================================ events
+
+/// One enumerated motif instance, as the enumerators emit it: the member
+/// vertices (processing ids, root first) and the compact class slot.
+#[derive(Debug, Clone, Copy)]
+pub struct MotifEvent<'a> {
+    pub verts: &'a [u32],
+    pub class_slot: u16,
+}
+
+/// Generic consumer of enumeration events. Unlike the object-safe
+/// [`CounterSink`], implementations are monomorphized into the worker
+/// loop — the emit path pays no dispatch the consumer doesn't itself
+/// require.
+pub trait EnumSink: Sync {
+    /// Per-worker emission endpoint; created inside the worker's thread.
+    type Handle<'s>: EmitHandle
+    where
+        Self: 's;
+
+    fn attach(&self, worker_id: usize) -> Self::Handle<'_>;
+}
+
+/// A worker's private emission endpoint.
+pub trait EmitHandle {
+    /// Consume one instance event.
+    fn emit(&mut self, ev: MotifEvent<'_>);
+
+    /// Push worker-private state into the shared sink (end of the worker
+    /// loop). Idempotent: a second flush contributes nothing.
+    fn flush(&mut self);
+}
+
+// ========================================================== count consumer
+
+/// [`EnumSink`] adapter over the object-safe [`CounterSink`] strategies —
+/// the Count output. Results are bit-identical to driving the wrapped
+/// sink directly: `emit` is exactly one `record(verts, slot)` call.
+pub struct CountEnumSink {
+    inner: Box<dyn CounterSink>,
+}
+
+impl CountEnumSink {
+    pub fn new(
+        mode: CounterMode,
+        n: usize,
+        n_classes: usize,
+        home_ranges: &[(u32, u32)],
+    ) -> CountEnumSink {
+        CountEnumSink { inner: make_sink(mode, n, n_classes, home_ranges) }
+    }
+
+    /// Collapse into `(per-vertex counts, total instances)` after every
+    /// worker handle has flushed.
+    pub fn finish(self) -> (Vec<u64>, u64) {
+        self.inner.finish()
+    }
+}
+
+impl EnumSink for CountEnumSink {
+    type Handle<'s>
+        = CountEmitHandle<'s>
+    where
+        Self: 's;
+
+    fn attach(&self, worker_id: usize) -> CountEmitHandle<'_> {
+        CountEmitHandle { inner: self.inner.worker(worker_id) }
+    }
+}
+
+/// Count handle: forwards each event to the wrapped [`WorkerHandle`].
+pub struct CountEmitHandle<'s> {
+    inner: Box<dyn WorkerHandle + 's>,
+}
+
+impl EmitHandle for CountEmitHandle<'_> {
+    #[inline]
+    fn emit(&mut self, ev: MotifEvent<'_>) {
+        self.inner.record(ev.verts, ev.class_slot);
+    }
+
+    fn flush(&mut self) {
+        self.inner.flush();
+    }
+}
+
+// ======================================================= instance consumer
+
+/// Max vertices an instance record can hold (k ≤ 4 today; the paper's
+/// Discussion extends the structures to 5).
+pub const MAX_K: usize = 4;
+
+/// One buffered instance in processing ids (first `k` entries of `verts`
+/// are meaningful).
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceRec {
+    pub verts: [u32; MAX_K],
+    pub class_slot: u16,
+}
+
+impl InstanceRec {
+    #[inline]
+    fn of(ev: MotifEvent<'_>) -> InstanceRec {
+        let mut verts = [0u32; MAX_K];
+        verts[..ev.verts.len()].copy_from_slice(ev.verts);
+        InstanceRec { verts, class_slot: ev.class_slot }
+    }
+}
+
+/// Raw (processing-id) result of an [`InstanceEnumSink`] run.
+#[derive(Debug, Clone)]
+pub struct RawInstances {
+    pub recs: Vec<InstanceRec>,
+    /// Per-slot instance totals over the whole run (exact even when the
+    /// materialized list hit the limit).
+    pub per_class_seen: Vec<u64>,
+    pub total_seen: u64,
+    /// True when `total_seen` exceeded the kept list.
+    pub truncated: bool,
+}
+
+/// Instance buffer shared by all workers.
+struct InstanceShared {
+    recs: Vec<InstanceRec>,
+    per_class: Vec<u64>,
+    seen: u64,
+}
+
+/// Materializes enumerated instances: per-worker buffers of
+/// [`INSTANCE_BUF`] records drain into one shared list under a mutex
+/// until the hard `limit` is reached; per-class totals keep counting to
+/// the end either way, so the histogram stays exact.
+pub struct InstanceEnumSink {
+    limit: usize,
+    n_classes: usize,
+    shared: Mutex<InstanceShared>,
+    /// Fast-path short-circuit: set once the shared list is full so
+    /// workers stop buffering (they still count).
+    full: AtomicBool,
+}
+
+/// Per-worker buffer length between drains.
+const INSTANCE_BUF: usize = 256;
+
+impl InstanceEnumSink {
+    pub fn new(limit: usize, n_classes: usize) -> InstanceEnumSink {
+        assert!(limit >= 1, "instances output needs a limit >= 1");
+        InstanceEnumSink {
+            limit,
+            n_classes,
+            shared: Mutex::new(InstanceShared {
+                // cap the eager reservation: limit may be usize::MAX-ish
+                recs: Vec::with_capacity(limit.min(64 * INSTANCE_BUF)),
+                per_class: vec![0; n_classes],
+                seen: 0,
+            }),
+            full: AtomicBool::new(false),
+        }
+    }
+
+    pub fn finish(self) -> RawInstances {
+        let sh = self.shared.into_inner().unwrap();
+        RawInstances {
+            truncated: sh.seen > sh.recs.len() as u64,
+            recs: sh.recs,
+            per_class_seen: sh.per_class,
+            total_seen: sh.seen,
+        }
+    }
+}
+
+impl EnumSink for InstanceEnumSink {
+    type Handle<'s>
+        = InstanceEmitHandle<'s>
+    where
+        Self: 's;
+
+    fn attach(&self, _worker_id: usize) -> InstanceEmitHandle<'_> {
+        InstanceEmitHandle {
+            sink: self,
+            buf: Vec::with_capacity(INSTANCE_BUF),
+            per_class: vec![0; self.n_classes],
+            seen: 0,
+        }
+    }
+}
+
+/// Instance handle: bounded local buffer + local class histogram.
+pub struct InstanceEmitHandle<'s> {
+    sink: &'s InstanceEnumSink,
+    buf: Vec<InstanceRec>,
+    per_class: Vec<u64>,
+    seen: u64,
+}
+
+impl InstanceEmitHandle<'_> {
+    fn drain(&mut self) {
+        if self.buf.is_empty() {
+            return;
+        }
+        let mut sh = self.sink.shared.lock().unwrap();
+        if sh.recs.len() < self.sink.limit {
+            let room = self.sink.limit - sh.recs.len();
+            let take = room.min(self.buf.len());
+            sh.recs.extend(self.buf.drain(..take));
+        }
+        if sh.recs.len() >= self.sink.limit {
+            self.sink.full.store(true, Ordering::Relaxed);
+        }
+        // anything left in the buffer found the list full: drop it (it
+        // stays counted in the local histogram)
+        self.buf.clear();
+    }
+}
+
+impl EmitHandle for InstanceEmitHandle<'_> {
+    #[inline]
+    fn emit(&mut self, ev: MotifEvent<'_>) {
+        self.seen += 1;
+        self.per_class[ev.class_slot as usize] += 1;
+        if self.sink.full.load(Ordering::Relaxed) {
+            return;
+        }
+        self.buf.push(InstanceRec::of(ev));
+        if self.buf.len() >= INSTANCE_BUF {
+            self.drain();
+        }
+    }
+
+    fn flush(&mut self) {
+        self.drain();
+        if self.seen > 0 {
+            let mut sh = self.sink.shared.lock().unwrap();
+            sh.seen += self.seen;
+            for (t, c) in sh.per_class.iter_mut().zip(&self.per_class) {
+                *t += c;
+            }
+        }
+        self.seen = 0;
+        self.per_class.iter_mut().for_each(|c| *c = 0);
+    }
+}
+
+// ========================================================= sample consumer
+
+/// SplitMix64 finalizer — the instance-hash mixer behind the sample
+/// selection keys.
+#[inline]
+fn splitmix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Deterministic selection key of one instance: depends only on the seed,
+/// the class slot and the vertex tuple (which the enumerators emit in one
+/// fixed order per instance) — never on the worker or claim order.
+#[inline]
+fn sample_key(seed: u64, verts: &[u32], slot: u16) -> u64 {
+    let mut h = splitmix64(seed ^ (slot as u64).wrapping_mul(0xA24B_AED4_963E_E407));
+    for &v in verts {
+        h = splitmix64(h ^ v as u64);
+    }
+    h
+}
+
+/// One class's bounded bottom-k reservoir: the `cap` instances with the
+/// smallest selection keys seen so far, plus the exact seen count.
+#[derive(Debug, Clone)]
+struct ClassReservoir {
+    /// (key, instance), unordered; `max_key` caches the current maximum
+    /// so the common reject path is one compare.
+    entries: Vec<(u64, InstanceRec)>,
+    max_key: u64,
+    seen: u64,
+}
+
+impl ClassReservoir {
+    fn new() -> ClassReservoir {
+        ClassReservoir { entries: Vec::new(), max_key: u64::MAX, seen: 0 }
+    }
+
+    #[inline]
+    fn offer(&mut self, cap: usize, key: u64, rec: InstanceRec) {
+        self.seen += 1;
+        if self.entries.len() < cap {
+            self.entries.push((key, rec));
+            if self.entries.len() == cap {
+                self.max_key = self.entries.iter().map(|e| e.0).max().unwrap();
+            }
+            return;
+        }
+        if key >= self.max_key {
+            return; // the common reject path: one compare
+        }
+        let mi = self
+            .entries
+            .iter()
+            .position(|e| e.0 == self.max_key)
+            .expect("cached max key is present");
+        self.entries[mi] = (key, rec);
+        self.max_key = self.entries.iter().map(|e| e.0).max().unwrap();
+    }
+
+    /// Merge `other`'s entries into this reservoir (both bottom-k for the
+    /// same key space), keeping the `cap` smallest keys.
+    fn absorb(&mut self, cap: usize, other: &mut ClassReservoir) {
+        self.seen += other.seen;
+        self.entries.append(&mut other.entries);
+        self.entries.sort_unstable_by_key(|&(k, r)| (k, r.verts));
+        self.entries.truncate(cap);
+        self.max_key =
+            if self.entries.len() == cap { self.entries[cap - 1].0 } else { u64::MAX };
+        other.seen = 0;
+    }
+}
+
+/// Raw (processing-id) result of a [`SampleEnumSink`] run: per class, the
+/// kept (key, instance) pairs in key order plus the exact seen count.
+#[derive(Debug, Clone)]
+pub struct RawSample {
+    pub per_class: Vec<(u64, Vec<InstanceRec>)>,
+    pub total_seen: u64,
+}
+
+/// Uniform per-class reservoir sampler (bottom-k sketch): every instance
+/// of a class survives with probability `per_class / seen`, and the kept
+/// set is a function of (seed, instances) alone — identical across
+/// scheduler modes, steal interleavings and worker counts.
+pub struct SampleEnumSink {
+    per_class: usize,
+    seed: u64,
+    n_classes: usize,
+    shared: Mutex<Vec<ClassReservoir>>,
+}
+
+impl SampleEnumSink {
+    pub fn new(per_class: usize, seed: u64, n_classes: usize) -> SampleEnumSink {
+        assert!(per_class >= 1, "sample output needs per_class >= 1");
+        SampleEnumSink {
+            per_class,
+            seed,
+            n_classes,
+            shared: Mutex::new((0..n_classes).map(|_| ClassReservoir::new()).collect()),
+        }
+    }
+
+    pub fn finish(self) -> RawSample {
+        let classes = self.shared.into_inner().unwrap();
+        let total_seen = classes.iter().map(|c| c.seen).sum();
+        RawSample {
+            per_class: classes
+                .into_iter()
+                .map(|mut c| {
+                    c.entries.sort_unstable_by_key(|&(k, r)| (k, r.verts));
+                    (c.seen, c.entries.into_iter().map(|(_, r)| r).collect())
+                })
+                .collect(),
+            total_seen,
+        }
+    }
+}
+
+impl EnumSink for SampleEnumSink {
+    type Handle<'s>
+        = SampleEmitHandle<'s>
+    where
+        Self: 's;
+
+    fn attach(&self, _worker_id: usize) -> SampleEmitHandle<'_> {
+        SampleEmitHandle {
+            sink: self,
+            local: (0..self.n_classes).map(|_| ClassReservoir::new()).collect(),
+        }
+    }
+}
+
+/// Sample handle: per-class local reservoirs merged into the shared ones
+/// at flush (bottom-k sketches merge exactly).
+pub struct SampleEmitHandle<'s> {
+    sink: &'s SampleEnumSink,
+    local: Vec<ClassReservoir>,
+}
+
+impl EmitHandle for SampleEmitHandle<'_> {
+    #[inline]
+    fn emit(&mut self, ev: MotifEvent<'_>) {
+        let key = sample_key(self.sink.seed, ev.verts, ev.class_slot);
+        self.local[ev.class_slot as usize].offer(
+            self.sink.per_class,
+            key,
+            InstanceRec::of(ev),
+        );
+    }
+
+    fn flush(&mut self) {
+        let mut shared = self.sink.shared.lock().unwrap();
+        for (s, l) in shared.iter_mut().zip(self.local.iter_mut()) {
+            if l.seen > 0 {
+                s.absorb(self.sink.per_class, l);
+            }
+        }
+    }
+}
+
+// =================================================== top-vertices consumer
+
+/// Full per-vertex counts through per-worker shards (no contention); the
+/// session extracts the per-class top-k ranking from the merged rows —
+/// "running" in the sense that no instance is ever materialized.
+pub struct TopVerticesEnumSink {
+    n: usize,
+    n_classes: usize,
+    merged: Mutex<ShardCounter>,
+}
+
+impl TopVerticesEnumSink {
+    pub fn new(n: usize, n_classes: usize) -> TopVerticesEnumSink {
+        TopVerticesEnumSink { n, n_classes, merged: Mutex::new(ShardCounter::new(n, n_classes)) }
+    }
+
+    /// The merged `(per-vertex rows, total instances)` in processing ids.
+    pub fn finish(self) -> (Vec<u64>, u64) {
+        let merged = self.merged.into_inner().unwrap();
+        (merged.counts, merged.instances)
+    }
+}
+
+impl EnumSink for TopVerticesEnumSink {
+    type Handle<'s>
+        = TopVerticesEmitHandle<'s>
+    where
+        Self: 's;
+
+    fn attach(&self, _worker_id: usize) -> TopVerticesEmitHandle<'_> {
+        TopVerticesEmitHandle {
+            sink: self,
+            local: ShardCounter::new(self.n, self.n_classes),
+            flushed: false,
+        }
+    }
+}
+
+/// Top-vertices handle: a private [`ShardCounter`] merged at flush.
+pub struct TopVerticesEmitHandle<'s> {
+    sink: &'s TopVerticesEnumSink,
+    local: ShardCounter,
+    flushed: bool,
+}
+
+impl EmitHandle for TopVerticesEmitHandle<'_> {
+    #[inline]
+    fn emit(&mut self, ev: MotifEvent<'_>) {
+        self.local.record(ev.verts, ev.class_slot);
+    }
+
+    fn flush(&mut self) {
+        if !self.flushed {
+            self.sink.merged.lock().unwrap().merge(&self.local);
+            self.flushed = true;
+        }
+    }
+}
+
+// ===================================================== counting strategies
 
 /// Object-safe counting strategy shared by all workers of a run.
 pub trait CounterSink: Sync {
@@ -297,5 +785,140 @@ mod tests {
             assert_eq!(counts, vec![1, 1], "{mode:?}");
             assert_eq!(instances, 1, "{mode:?}");
         }
+    }
+
+    // ------------------------------------------------ EnumSink consumers
+
+    /// Emit the same deterministic 3-motif stream through any EnumSink.
+    fn feed<S: EnumSink>(sink: &S, workers: usize, per_worker: &[(&[u32], u16)]) {
+        std::thread::scope(|s| {
+            for w in 0..workers {
+                s.spawn(move || {
+                    let mut h = sink.attach(w);
+                    for &(verts, slot) in per_worker {
+                        h.emit(MotifEvent { verts, class_slot: slot });
+                    }
+                    h.flush();
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn count_enum_sink_matches_direct_counter() {
+        let stream: Vec<(&[u32], u16)> = vec![(&[0, 1, 2], 0), (&[2, 5, 7], 1), (&[6, 7, 0], 0)];
+        let sink = CountEnumSink::new(CounterMode::Sharded, 8, 2, &[]);
+        feed(&sink, 3, &stream);
+        let (counts, instances) = sink.finish();
+        assert_eq!(instances, 9);
+
+        let direct = make_sink(CounterMode::Sharded, 8, 2, &[]);
+        for _ in 0..3 {
+            let mut h = direct.worker(0);
+            for &(verts, slot) in &stream {
+                h.record(verts, slot);
+            }
+            h.flush();
+        }
+        let (want, want_instances) = direct.finish();
+        assert_eq!(counts, want);
+        assert_eq!(instances, want_instances);
+    }
+
+    #[test]
+    fn instance_sink_collects_everything_below_limit() {
+        let stream: Vec<(&[u32], u16)> = vec![(&[0, 1, 2], 0), (&[1, 2, 3], 1)];
+        let sink = InstanceEnumSink::new(100, 2);
+        feed(&sink, 2, &stream);
+        let raw = sink.finish();
+        assert_eq!(raw.total_seen, 4);
+        assert!(!raw.truncated);
+        assert_eq!(raw.recs.len(), 4);
+        assert_eq!(raw.per_class_seen, vec![2, 2]);
+    }
+
+    #[test]
+    fn instance_sink_enforces_hard_limit_but_keeps_exact_histogram() {
+        let verts = [0u32, 1, 2];
+        let stream: Vec<(&[u32], u16)> = (0..50).map(|_| (&verts[..], 0u16)).collect();
+        let sink = InstanceEnumSink::new(7, 1);
+        feed(&sink, 4, &stream);
+        let raw = sink.finish();
+        assert_eq!(raw.recs.len(), 7, "hard limit respected");
+        assert!(raw.truncated);
+        assert_eq!(raw.total_seen, 200);
+        assert_eq!(raw.per_class_seen, vec![200], "histogram exact past the limit");
+    }
+
+    #[test]
+    fn sample_sink_is_worker_count_invariant() {
+        // distinct instances so the reservoir sees a real population
+        let instances: Vec<([u32; 3], u16)> =
+            (0..200u32).map(|i| ([i, i + 1, i + 2], (i % 2) as u16)).collect();
+        let run = |workers: usize| {
+            let sink = SampleEnumSink::new(5, 99, 2);
+            std::thread::scope(|s| {
+                for w in 0..workers {
+                    let shard: Vec<&([u32; 3], u16)> =
+                        instances.iter().skip(w).step_by(workers).collect();
+                    let sink = &sink;
+                    s.spawn(move || {
+                        let mut h = sink.attach(w);
+                        for (verts, slot) in shard {
+                            h.emit(MotifEvent { verts, class_slot: *slot });
+                        }
+                        h.flush();
+                    });
+                }
+            });
+            sink.finish()
+        };
+        let one = run(1);
+        let four = run(4);
+        assert_eq!(one.total_seen, 200);
+        assert_eq!(four.total_seen, 200);
+        for slot in 0..2 {
+            let (seen1, recs1) = &one.per_class[slot];
+            let (seen4, recs4) = &four.per_class[slot];
+            assert_eq!(seen1, seen4);
+            assert_eq!(*seen1, 100);
+            assert_eq!(recs1.len(), 5);
+            let v1: Vec<[u32; MAX_K]> = recs1.iter().map(|r| r.verts).collect();
+            let v4: Vec<[u32; MAX_K]> = recs4.iter().map(|r| r.verts).collect();
+            assert_eq!(v1, v4, "sample must not depend on the work split");
+        }
+        // a different seed picks a different sample
+        let sink = SampleEnumSink::new(5, 100, 2);
+        feed(
+            &sink,
+            1,
+            &instances.iter().map(|(v, s)| (&v[..], *s)).collect::<Vec<_>>(),
+        );
+        let other = sink.finish();
+        let a: Vec<[u32; MAX_K]> = one.per_class[0].1.iter().map(|r| r.verts).collect();
+        let b: Vec<[u32; MAX_K]> = other.per_class[0].1.iter().map(|r| r.verts).collect();
+        assert_ne!(a, b, "seed must steer the selection");
+    }
+
+    #[test]
+    fn sample_sink_keeps_all_when_population_is_small() {
+        let sink = SampleEnumSink::new(10, 1, 1);
+        let instances: Vec<([u32; 3], u16)> = (0..4u32).map(|i| ([i, i + 1, i + 2], 0)).collect();
+        feed(&sink, 2, &instances.iter().map(|(v, s)| (&v[..], *s)).collect::<Vec<_>>());
+        let raw = sink.finish();
+        let (seen, recs) = &raw.per_class[0];
+        assert_eq!(*seen, 8, "two workers × four instances");
+        assert_eq!(recs.len(), 8.min(10));
+    }
+
+    #[test]
+    fn top_vertices_sink_counts_match_sharded() {
+        let stream: Vec<(&[u32], u16)> = vec![(&[0, 1, 2], 0), (&[0, 2, 3], 1), (&[0, 1, 3], 1)];
+        let sink = TopVerticesEnumSink::new(4, 2);
+        feed(&sink, 2, &stream);
+        let (counts, instances) = sink.finish();
+        assert_eq!(instances, 6);
+        // vertex 0 participates in every instance
+        assert_eq!(counts[0] + counts[1], 6);
     }
 }

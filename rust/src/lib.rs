@@ -59,6 +59,45 @@
 //! }
 //! ```
 //!
+//! Counting is one face of the emission pipeline. A
+//! [`engine::MotifQuery`] picks an [`engine::Output`] — per-vertex
+//! `Counts`, the materialized `Instances` themselves (hard `limit` +
+//! `truncated` flag), a per-class reservoir `Sample` (reproducible for a
+//! fixed seed under any scheduler), or `TopVertices` rankings — and an
+//! [`engine::Scope`] — the whole graph, an explicit vertex set, or a
+//! seed `Neighborhood`. Scopes filter at the work-unit level (only roots
+//! that can own an in-scope instance are enumerated), so a scoped query
+//! does neighborhood-local work:
+//!
+//! ```no_run
+//! use vdmc::engine::{MotifQuery, Output, QueryOutput, Scope, Session};
+//! use vdmc::graph::generators;
+//! use vdmc::motifs::{Direction, MotifSize};
+//!
+//! let g = generators::gnp_directed(1000, 0.01, 42);
+//! let session = Session::load(&g);
+//! // sample up to 8 instances per 3-motif class around vertex 7
+//! let q = MotifQuery {
+//!     size: MotifSize::Three,
+//!     direction: Direction::Undirected,
+//!     output: Output::Sample { per_class: 8, seed: 1 },
+//!     scope: Scope::Neighborhood { seeds: vec![7], radius: 2 },
+//!     ..Default::default()
+//! };
+//! if let QueryOutput::Sample(sample) = session.query(&q).unwrap() {
+//!     for class in sample.classes.iter().filter(|c| c.seen > 0) {
+//!         println!("m{}: {} seen, {} sampled", class.class_id, class.seen,
+//!                  class.instances.len());
+//!     }
+//! }
+//! ```
+//!
+//! Incremental maintenance ([`stream`]) stays **Count-only**: instance
+//! lists and samples don't invert under edge deletions, so
+//! `Session::maintain_query` rejects them with the typed
+//! [`stream::CountOnlyError`]; full queries of every output stay exact
+//! over a dirty overlay.
+//!
 //! Sessions default to the **hybrid adjacency tier** (`--adjacency
 //! hybrid` on the CLI): hub vertices get packed bitmap rows so the hot
 //! path's membership probes are one word test instead of a binary
@@ -71,10 +110,12 @@
 //! layer instead of hand-held sessions: a [`service::VdmcService`] owns
 //! an LRU [`service::SessionPool`] (entry cap + byte budget over
 //! `Session::memory_bytes`) and answers the unified typed
-//! [`service::Request`]s — `LoadGraph`, `Count`, `VertexCounts` (the
-//! paper's per-vertex motif vectors as O(classes) row reads), `ApplyEdges`,
-//! `Maintain`, `Evict`, `Stats`. `vdmc serve` exposes exactly this API
-//! as a JSON-lines daemon on stdin/stdout:
+//! [`service::Request`]s — `LoadGraph`, `Count` (full or scoped),
+//! `Instances`, `Sample`, `VertexCounts` (the paper's per-vertex motif
+//! vectors as O(classes) row reads, rows from a vertex list or a seed
+//! neighborhood), `ApplyEdges`, `Maintain` (Count-only), `Evict`,
+//! `Stats`. `vdmc serve` exposes exactly this API as a JSON-lines
+//! daemon on stdin/stdout:
 //!
 //! ```no_run
 //! use vdmc::service::{GraphSource, Request, Response, VdmcService};

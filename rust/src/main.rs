@@ -2,7 +2,10 @@
 //!
 //! Subcommands:
 //!   generate   write a random graph to an edge-list file
-//!   count      count per-vertex 3-/4-motifs of a graph file
+//!   count      per-vertex 3-/4-motifs of a graph file (counts, instance
+//!              lists, samples or top-vertex rankings; optionally scoped
+//!              to a vertex set / seed neighborhood)
+//!   sample     per-class reservoir sample of motif instances
 //!   stream     replay an edge timeline incrementally over a live session
 //!   serve      resident multi-graph daemon: JSONL requests on stdin
 //!   validate   Fig. 3 experiment: G(n,p) counts vs Eq. 7.4 theory
@@ -17,7 +20,9 @@ use std::process::ExitCode;
 
 use vdmc::baselines;
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
-use vdmc::engine::{AdjacencyMode, CountQuery, Session, SessionConfig};
+use vdmc::engine::{
+    AdjacencyMode, CountQuery, MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig,
+};
 use vdmc::graph::{generators, io};
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
@@ -46,12 +51,20 @@ stdout line (blank lines and #-comments skipped; "id" is echoed back):
     {"op":"load_graph","id":1,"graph":"web","path":"web.tsv","directed":true}
     {"op":"load_graph","graph":"toy","n":4,"edges":[[0,1],[1,2],[2,0]]}
     {"op":"count","graph":"web","k":3,"direction":"directed"}
+    {"op":"count","graph":"web","k":3,"vertices":[0,5,7]}
+    {"op":"count","graph":"web","k":4,"seeds":[0],"radius":2}
+    {"op":"instances","graph":"web","k":3,"limit":500}
+    {"op":"sample","graph":"web","k":4,"per_class":16,"seed":7}
     {"op":"vertex_counts","graph":"web","k":3,"direction":"directed","vertices":[0,5,7]}
+    {"op":"vertex_counts","graph":"web","k":3,"seeds":[0],"radius":1}
     {"op":"apply_edges","graph":"web","deltas":[["+",0,5],["-",1,2]]}
     {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
     {"op":"evict","graph":"toy"}
     {"op":"stats"}
-a failed request answers {"ok":false,...} and the daemon keeps serving."#;
+a scope ("vertices", or "seeds"+"radius") restricts count/instances/
+sample to instances touching it — filtered at the work-unit level, so
+scoped queries do neighborhood-local work. a failed request answers
+{"ok":false,...} and the daemon keeps serving."#;
 
 fn app() -> App {
     App {
@@ -73,12 +86,34 @@ fn app() -> App {
                 .opt("counter", "atomic | sharded | partition", Some("sharded"))
                 .opt("scheduler", "cursor | stealing | stealing-batch", Some("stealing"))
                 .opt("repeat", "serve the query N times from one session", Some("1"))
-                .opt("out", "write per-vertex counts TSV here", None)
+                .opt("output", "counts | instances | sample | top", Some("counts"))
+                .opt("limit", "max materialized instances (--output instances)", Some("1000"))
+                .opt("per-class", "reservoir size per class (--output sample)", Some("10"))
+                .opt("sample-seed", "sample selection seed (--output sample)", Some("42"))
+                .opt("top", "vertices per class (--output top)", Some("10"))
+                .opt("vertices", "scope: comma-separated vertex ids", None)
+                .opt("seeds", "scope: comma-separated seed vertex ids", None)
+                .opt("radius", "scope: hops around --seeds (default 1)", None)
+                .opt("out", "write per-vertex counts TSV / instance JSONL here", None)
                 .flag("directed", "interpret the file as a directed graph")
                 .flag("undirected-motifs", "classify on the undirected view")
                 .flag("baseline-naive", "use the brute-force baseline instead")
                 .flag("baseline-slow", "use the python-parity baseline instead")
                 .flag("json", "emit a JSON report to stdout"),
+            engine_opts(Command::new(
+                "sample",
+                "per-class reservoir sample of motif instances (optionally around seeds)",
+            ))
+            .opt("input", "edge list path", None)
+            .opt("k", "motif size (3 or 4)", Some("3"))
+            .opt("per-class", "reservoir size per class", Some("10"))
+            .opt("seed", "sample selection seed", Some("42"))
+            .opt("vertices", "scope: comma-separated vertex ids", None)
+            .opt("seeds", "scope: comma-separated seed vertex ids", None)
+            .opt("radius", "scope: hops around --seeds (default 1)", None)
+            .opt("out", "write the sample JSON here instead of stdout", None)
+            .flag("directed", "interpret the file as a directed graph")
+            .flag("undirected-motifs", "classify on the undirected view"),
             engine_opts(Command::new(
                 "stream",
                 "replay an edge timeline incrementally over a live session",
@@ -141,6 +176,7 @@ fn main() -> ExitCode {
     let run = match cmd.name {
         "generate" => cmd_generate(&args),
         "count" => cmd_count(&args),
+        "sample" => cmd_sample(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
         "validate" => cmd_validate(&args),
@@ -163,6 +199,37 @@ fn parse_direction(args: &Args) -> Direction {
         Direction::Undirected
     } else {
         Direction::Directed
+    }
+}
+
+/// Comma-separated vertex-id list (`--vertices 0,5,7`).
+fn parse_u32_list(s: &str) -> anyhow::Result<Vec<u32>> {
+    s.split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+        .map(|t| t.parse::<u32>().map_err(|_| anyhow::anyhow!("bad vertex id {t:?}")))
+        .collect()
+}
+
+/// The `--vertices` / `--seeds` / `--radius` scope flags shared by
+/// `count` and `sample` — same semantics (and same rejections) as the
+/// wire's scope fields.
+fn parse_scope(args: &Args) -> anyhow::Result<Scope> {
+    let radius: Option<usize> = args.get_parse("radius").map_err(anyhow::Error::msg)?;
+    match (args.get("vertices"), args.get("seeds")) {
+        (Some(_), Some(_)) => anyhow::bail!("--vertices and --seeds are mutually exclusive"),
+        (Some(vs), None) => {
+            anyhow::ensure!(radius.is_none(), "--radius only applies to --seeds scopes");
+            Ok(Scope::Vertices(parse_u32_list(vs)?))
+        }
+        (None, Some(seeds)) => Ok(Scope::Neighborhood {
+            seeds: parse_u32_list(seeds)?,
+            radius: radius.unwrap_or(1),
+        }),
+        (None, None) => {
+            anyhow::ensure!(radius.is_none(), "--radius needs a --seeds list");
+            Ok(Scope::All)
+        }
     }
 }
 
@@ -290,37 +357,61 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
     let k: usize = args.req("k").map_err(anyhow::Error::msg)?;
     let size = MotifSize::from_k(k).ok_or_else(|| anyhow::anyhow!("k must be 3 or 4"))?;
     let direction = parse_direction(args);
+    let scope = parse_scope(args)?;
+    let output = match args
+        .one_of("output", &["counts", "instances", "sample", "top"])
+        .map_err(anyhow::Error::msg)?
+        .as_str()
+    {
+        "instances" => Output::Instances { limit: args.req("limit").map_err(anyhow::Error::msg)? },
+        "sample" => Output::Sample {
+            per_class: args.req("per-class").map_err(anyhow::Error::msg)?,
+            seed: args.req("sample-seed").map_err(anyhow::Error::msg)?,
+        },
+        "top" => Output::TopVertices { k: args.req("top").map_err(anyhow::Error::msg)? },
+        _ => Output::Counts,
+    };
 
-    // setup seconds paid by the engine path (0.0 for the baselines, whose
-    // elapsed_secs already cover everything)
-    let mut setup_secs = 0.0;
-    let counts = if args.flag("baseline-naive") {
-        baselines::naive::count(&g, size, direction)
-    } else if args.flag("baseline-slow") {
-        baselines::slow::count(&g, size, direction)
-    } else {
-        // the one validating construction path shared with the service
-        // wire codec and the benches
-        let query = CountQuery::builder()
-            .size(size)
-            .direction(direction)
-            .scheduler_name(args.get("scheduler").unwrap_or("stealing"))
-            .sink_name(args.get("counter").unwrap_or("sharded"))
-            .build()?;
-        let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
-        let repeat = repeat.max(1);
-        let cfg = parse_engine_config(args)?;
+    if args.flag("baseline-naive") || args.flag("baseline-slow") {
+        anyhow::ensure!(
+            scope.is_all() && matches!(output, Output::Counts),
+            "the baselines serve full counts only (no --output / --vertices / --seeds)"
+        );
+        let counts = if args.flag("baseline-naive") {
+            baselines::naive::count(&g, size, direction)
+        } else {
+            baselines::slow::count(&g, size, direction)
+        };
+        // the baselines' elapsed_secs already cover everything: no setup
+        let totals = counts.class_instances();
+        return report_counts(args, &counts, &totals, 0.0);
+    }
 
+    // the one validating construction path shared with the service
+    // wire codec and the benches
+    let query = MotifQuery::builder()
+        .size(size)
+        .direction(direction)
+        .scheduler_name(args.get("scheduler").unwrap_or("stealing"))
+        .sink_name(args.get("counter").unwrap_or("sharded"))
+        .output(output)
+        .scope(scope)
+        .build()?;
+    let cfg = parse_engine_config(args)?;
+    let session = Session::load_with(&g, &cfg);
+    if cfg.adjacency == AdjacencyMode::Hybrid {
+        eprintln!(
+            "hybrid adjacency tier: {} hub rows, {} KiB",
+            session.hub_rows(),
+            session.tier_memory_bytes() / 1024,
+        );
+    }
+
+    if matches!(query.output, Output::Counts) {
         // load once, serve N identical queries from the cached session —
         // the serving-path hot loop
-        let session = Session::load_with(&g, &cfg);
-        if cfg.adjacency == AdjacencyMode::Hybrid {
-            eprintln!(
-                "hybrid adjacency tier: {} hub rows, {} KiB",
-                session.hub_rows(),
-                session.tier_memory_bytes() / 1024,
-            );
-        }
+        let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
+        let repeat = repeat.max(1);
         let mut last = None;
         for i in 0..repeat {
             let (counts, report) = session.count_with_report(&query)?;
@@ -336,19 +427,74 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
             last = Some((counts, report));
         }
         let (counts, report) = last.expect("repeat >= 1");
-        setup_secs = session.setup_secs();
         if args.flag("json") {
             let mut sink = ReportSink::stdout_pretty();
             sink.emit(&report.to_json());
             sink.finish()?;
         }
-        counts
-    };
+        // totals from the report's histogram: exact under a scope, where
+        // class_totals/k would not divide
+        return report_counts(args, &counts, &report.per_class_totals, session.setup_secs());
+    }
 
+    // instances / sample / top outputs: one query, structured emission
+    let repeat: usize = args.req("repeat").map_err(anyhow::Error::msg)?;
+    anyhow::ensure!(
+        repeat <= 1,
+        "--repeat applies to --output counts only (got --repeat {repeat} with --output {})",
+        query.output.label()
+    );
+    let (result, report) = session.query_with_report(&query)?;
+    if args.flag("json") {
+        let mut sink = ReportSink::stdout_pretty();
+        sink.emit(&report.to_json());
+        sink.finish()?;
+    }
+    eprintln!(
+        "{}: {} instances enumerated in {:.3}s (+{:.3}s setup)",
+        result.label(),
+        report.total_instances,
+        report.elapsed_secs,
+        session.setup_secs(),
+    );
+    match result {
+        QueryOutput::Instances(list) => {
+            // one JSONL row per instance (pipe-friendly); summary on stderr
+            let mut sink = ReportSink::lines(args.get("out"))?;
+            for inst in &list.instances {
+                let mut row = Json::obj();
+                row.set("verts", inst.verts.clone())
+                    .set("class", list.class_id(inst.class_slot) as u64);
+                sink.emit(&row);
+            }
+            sink.finish()?;
+            eprintln!(
+                "materialized {} of {} instances{}",
+                list.instances.len(),
+                list.total_seen,
+                if list.truncated { " (truncated by --limit)" } else { "" },
+            );
+        }
+        QueryOutput::Sample(sample) => emit_structured(args, &sample.to_json())?,
+        QueryOutput::TopVertices(top) => emit_structured(args, &top.to_json())?,
+        QueryOutput::Counts(_) => unreachable!("counts output handled above"),
+    }
+    Ok(())
+}
+
+/// Shared counts emission: stderr summary, then the per-vertex TSV
+/// (`--out`) or the class totals (`totals` — report-derived for the
+/// engine path so scoped histograms stay exact).
+fn report_counts(
+    args: &Args,
+    counts: &vdmc::motifs::MotifCounts,
+    totals: &[u64],
+    setup_secs: f64,
+) -> anyhow::Result<()> {
     eprintln!(
         "counted {} {}-motif instances over {} classes in {:.3}s (+{:.3}s setup, {:.0} instances/s)",
         counts.total_instances,
-        k,
+        counts.k,
         counts.n_classes,
         counts.elapsed_secs,
         setup_secs,
@@ -358,13 +504,52 @@ fn cmd_count(args: &Args) -> anyhow::Result<()> {
         io::write_counts_tsv(Path::new(out), &counts.class_ids, &counts.per_vertex, counts.n_classes)?;
         eprintln!("wrote per-vertex counts to {out}");
     } else {
-        // print class totals
-        let totals = counts.class_instances();
-        for (c, t) in counts.class_ids.iter().zip(&totals) {
+        for (c, t) in counts.class_ids.iter().zip(totals) {
             println!("m{c}\t{t}");
         }
     }
     Ok(())
+}
+
+/// One structured JSON result: pretty to stdout, compact line to `--out`.
+fn emit_structured(args: &Args, j: &Json) -> anyhow::Result<()> {
+    let mut sink = match args.get("out") {
+        Some(_) => ReportSink::lines(args.get("out"))?,
+        None => ReportSink::stdout_pretty(),
+    };
+    sink.emit(j);
+    sink.finish()
+}
+
+fn cmd_sample(args: &Args) -> anyhow::Result<()> {
+    let g = load(args)?;
+    let k: usize = args.req("k").map_err(anyhow::Error::msg)?;
+    let size = MotifSize::from_k(k).ok_or_else(|| anyhow::anyhow!("k must be 3 or 4"))?;
+    let query = MotifQuery::builder()
+        .size(size)
+        .direction(parse_direction(args))
+        .sample(
+            args.req("per-class").map_err(anyhow::Error::msg)?,
+            args.req("seed").map_err(anyhow::Error::msg)?,
+        )
+        .scope(parse_scope(args)?)
+        .build()?;
+    let session = Session::load_with(&g, &parse_engine_config(args)?);
+    let (result, report) = session.query_with_report(&query)?;
+    let sample = match result {
+        QueryOutput::Sample(s) => s,
+        other => unreachable!("sample query produced {}", other.label()),
+    };
+    eprintln!(
+        "sampled {} non-empty classes from {} instances in {:.3}s \
+         (per-class {}, seed {} — rerun with the same seed for the same sample)",
+        sample.classes.iter().filter(|c| c.seen > 0).count(),
+        report.total_instances,
+        report.elapsed_secs,
+        sample.per_class,
+        sample.seed,
+    );
+    emit_structured(args, &sample.to_json())
 }
 
 fn cmd_stream(args: &Args) -> anyhow::Result<()> {

@@ -175,6 +175,13 @@ pub struct MotifCounts {
     pub per_vertex: Vec<u64>,
     /// Canonical id per slot (column labels).
     pub class_ids: Vec<u16>,
+    /// Exact per-class instance totals when the producer tracked them
+    /// (the engine's emission pipeline always does). REQUIRED for scoped
+    /// counts, where an instance can touch fewer than k in-scope
+    /// vertices and the column sums no longer divide by k. Empty means
+    /// "derive from `per_vertex` / k" — the full-count producers
+    /// (baselines, maintained counters) that predate scoping.
+    pub per_class_instances: Vec<u64>,
     /// Total motif instances counted (each once and only once).
     pub total_instances: u64,
     /// Wall-clock seconds of the counting phase.
@@ -198,8 +205,13 @@ impl MotifCounts {
         out
     }
 
-    /// Per-class instance counts (class totals / k).
+    /// Per-class instance counts: the producer's exact totals when
+    /// present (always, on the engine path — the only correct answer for
+    /// scoped counts), else class totals / k.
     pub fn class_instances(&self) -> Vec<u64> {
+        if !self.per_class_instances.is_empty() {
+            return self.per_class_instances.clone();
+        }
         self.class_totals()
             .into_iter()
             .map(|t| {
@@ -289,6 +301,7 @@ mod tests {
             n_classes: 2,
             per_vertex: vec![3, 6, 3, 0],
             class_ids: vec![30, 63],
+            per_class_instances: Vec::new(),
             total_instances: 4,
             elapsed_secs: 0.0,
         };
@@ -296,5 +309,23 @@ mod tests {
         assert_eq!(mc.class_totals(), vec![6, 6]);
         assert_eq!(mc.class_instances(), vec![2, 2]);
         assert_eq!(mc.mean_per_vertex(), vec![3.0, 3.0]);
+    }
+
+    #[test]
+    fn producer_totals_override_the_derived_division() {
+        // a scoped count: member rows sum to members-per-instance, NOT
+        // k per instance — the producer's exact totals must win
+        let mc = MotifCounts {
+            k: 3,
+            direction: Direction::Undirected,
+            n: 3,
+            n_classes: 2,
+            per_vertex: vec![2, 1, 0, 0, 0, 0], // one member vertex kept
+            class_ids: vec![30, 63],
+            per_class_instances: vec![2, 1],
+            total_instances: 3,
+            elapsed_secs: 0.0,
+        };
+        assert_eq!(mc.class_instances(), vec![2, 1], "no divide-by-k on scoped counts");
     }
 }

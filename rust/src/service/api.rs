@@ -1,6 +1,7 @@
 //! The unified typed request/response surface of [`crate::service`].
 //!
-//! Every way of driving the engine — load a graph, run a count, look up
+//! Every way of driving the engine — load a graph, run a (possibly
+//! scoped) count, materialize instances, draw a per-class sample, look up
 //! per-vertex motif vectors, apply edge deltas, register maintenance,
 //! evict, read pool stats — is one [`Request`] variant routed through
 //! [`crate::service::VdmcService::handle`] to a pooled session, answered
@@ -14,7 +15,7 @@
 use std::path::PathBuf;
 
 use crate::coordinator::metrics::RunReport;
-use crate::engine::CountQuery;
+use crate::engine::{InstanceList, MotifQuery, Output, SampleSummary, Scope};
 use crate::motifs::counter::MotifCounts;
 use crate::motifs::{Direction, MotifSize};
 use crate::stream::{DeltaReport, EdgeDelta};
@@ -35,18 +36,29 @@ pub enum GraphSource {
 pub enum Request {
     /// Load (or reload) a graph into the pool under `graph`.
     LoadGraph { graph: String, source: GraphSource, directed: bool },
-    /// Full per-vertex count with an explicit [`CountQuery`].
-    Count { graph: String, query: CountQuery },
-    /// Per-vertex motif vector lookup for a vertex set — the paper's
-    /// headline deliverable served interactively. The first lookup for a
-    /// (size, direction) pair registers a maintained counter (one full
-    /// enumeration); afterwards lookups are O(|vertices| × classes) array
-    /// reads and stay fresh across [`Request::ApplyEdges`].
-    VertexCounts { graph: String, size: MotifSize, direction: Direction, vertices: Vec<u32> },
+    /// Full or scoped per-vertex count with an explicit [`MotifQuery`]
+    /// (its output must be `Counts`; the wire codec guarantees this).
+    Count { graph: String, query: MotifQuery },
+    /// Materialize the enumerated instances themselves (the query's
+    /// output must be `Instances { limit }`).
+    Instances { graph: String, query: MotifQuery },
+    /// Draw a per-class reservoir sample of instances (the query's
+    /// output must be `Sample { per_class, seed }`).
+    Sample { graph: String, query: MotifQuery },
+    /// Per-vertex motif vector lookup — the paper's headline deliverable
+    /// served interactively. The row set is a [`Scope`]: an explicit
+    /// vertex list, or a seed neighborhood expanded server-side. The
+    /// first lookup for a (size, direction) pair registers a maintained
+    /// counter (one full enumeration); afterwards lookups are
+    /// O(|rows| × classes) array reads and stay fresh across
+    /// [`Request::ApplyEdges`].
+    VertexCounts { graph: String, size: MotifSize, direction: Direction, scope: Scope },
     /// Apply an edge insert/delete batch to the live session.
     ApplyEdges { graph: String, deltas: Vec<EdgeDelta> },
     /// Register incremental maintenance for (size, direction).
-    Maintain { graph: String, size: MotifSize, direction: Direction },
+    /// Maintenance is Count-only: a non-`Counts` output is rejected with
+    /// the typed `stream::CountOnlyError`.
+    Maintain { graph: String, size: MotifSize, direction: Direction, output: Output },
     /// Drop a graph from the pool.
     Evict { graph: String },
     /// Pool metrics snapshot.
@@ -59,6 +71,8 @@ impl Request {
         match self {
             Request::LoadGraph { .. } => "load_graph",
             Request::Count { .. } => "count",
+            Request::Instances { .. } => "instances",
+            Request::Sample { .. } => "sample",
             Request::VertexCounts { .. } => "vertex_counts",
             Request::ApplyEdges { .. } => "apply_edges",
             Request::Maintain { .. } => "maintain",
@@ -72,6 +86,8 @@ impl Request {
         match self {
             Request::LoadGraph { graph, .. }
             | Request::Count { graph, .. }
+            | Request::Instances { graph, .. }
+            | Request::Sample { graph, .. }
             | Request::VertexCounts { graph, .. }
             | Request::ApplyEdges { graph, .. }
             | Request::Maintain { graph, .. }
@@ -109,7 +125,11 @@ pub enum Response {
     /// Full count result (complete per-vertex matrix in-process; the wire
     /// digests it to class totals — use `vertex_counts` for exact rows).
     Counted { graph: String, counts: MotifCounts, report: RunReport },
-    /// Per-vertex motif vectors for the requested set.
+    /// Materialized instance list.
+    Instances { graph: String, list: InstanceList, report: RunReport },
+    /// Per-class reservoir sample.
+    Sampled { graph: String, sample: SampleSummary, report: RunReport },
+    /// Per-vertex motif vectors for the requested row set.
     VertexRows {
         graph: String,
         size: MotifSize,
@@ -136,6 +156,8 @@ impl Response {
         match self {
             Response::Loaded { .. } => "load_graph",
             Response::Counted { .. } => "count",
+            Response::Instances { .. } => "instances",
+            Response::Sampled { .. } => "sample",
             Response::VertexRows { .. } => "vertex_counts",
             Response::Applied { .. } => "apply_edges",
             Response::Maintained { .. } => "maintain",
@@ -144,4 +166,3 @@ impl Response {
         }
     }
 }
-

@@ -18,9 +18,12 @@
 //!   Session (cached ordering/CSR/hub tier/partitions + overlay)
 //! ```
 //!
-//! - [`api`] — the [`Request`]/[`Response`] enums: `LoadGraph`, `Count`,
-//!   `VertexCounts` (the paper's per-vertex motif vectors, served as
-//!   array lookups from maintained counters), `ApplyEdges`, `Maintain`,
+//! - [`api`] — the [`Request`]/[`Response`] enums: `LoadGraph`, `Count`
+//!   (full or scoped), `Instances` (materialized instance lists),
+//!   `Sample` (per-class reservoir samples), `VertexCounts` (the paper's
+//!   per-vertex motif vectors, served as array lookups from maintained
+//!   counters, with explicit rows or a seed-neighborhood scope),
+//!   `ApplyEdges`, `Maintain` (Count-only, typed rejection otherwise),
 //!   `Evict`, `Stats`.
 //! - [`pool`] — [`SessionPool`]: LRU keyed by graph id, bounded by entry
 //!   count and a byte budget computed from CSR + hub-tier + overlay +
@@ -44,7 +47,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{Session, SessionConfig};
+use crate::engine::{MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig};
 use crate::graph::csr::Graph;
 use crate::graph::io;
 
@@ -131,12 +134,48 @@ impl VdmcService {
                 let (counts, report) = session.count_with_report(&query)?;
                 Ok(Response::Counted { graph, counts, report })
             }
-            Request::VertexCounts { graph, size, direction, vertices } => {
+            Request::Instances { graph, query } => {
+                if !matches!(query.output, Output::Instances { .. }) {
+                    bail!("instances request needs Output::Instances, got {}", query.output.label());
+                }
                 let session = self.session(&graph)?;
-                // validate the vertex set BEFORE maintain(): a bad
+                let (out, report) = session.query_with_report(&query)?;
+                match out {
+                    QueryOutput::Instances(list) => Ok(Response::Instances { graph, list, report }),
+                    other => unreachable!("instances output produced {}", other.label()),
+                }
+            }
+            Request::Sample { graph, query } => {
+                if !matches!(query.output, Output::Sample { .. }) {
+                    bail!("sample request needs Output::Sample, got {}", query.output.label());
+                }
+                let session = self.session(&graph)?;
+                let (out, report) = session.query_with_report(&query)?;
+                match out {
+                    QueryOutput::Sample(sample) => Ok(Response::Sampled { graph, sample, report }),
+                    other => unreachable!("sample output produced {}", other.label()),
+                }
+            }
+            Request::VertexCounts { graph, size, direction, scope } => {
+                let session = self.session(&graph)?;
+                // resolve + validate the row set BEFORE maintain(): a bad
                 // request must not grow the session (and dodge the
                 // byte re-metering below)
                 let n = session.n();
+                let vertices: Vec<u32> = match scope {
+                    Scope::Vertices(vs) => vs,
+                    Scope::Neighborhood { seeds, radius } => session.neighborhood(&seeds, radius)?,
+                    Scope::All => bail!(
+                        "vertex_counts needs an explicit row set (vertices or seeds+radius); \
+                         an all-vertices dump would materialize n rows"
+                    ),
+                };
+                if vertices.is_empty() {
+                    // an empty row set must not register a maintained
+                    // counter (one full enumeration + permanent n×classes
+                    // memory) just to answer nothing
+                    bail!("vertex_counts needs at least one vertex in its row set");
+                }
                 if let Some(&v) = vertices.iter().find(|&&v| v as usize >= n) {
                     bail!("vertex {v} out of range for graph {graph:?} (n={n})");
                 }
@@ -176,9 +215,16 @@ impl VdmcService {
                 self.pool.update_bytes(&graph);
                 Ok(Response::Applied { graph, report })
             }
-            Request::Maintain { graph, size, direction } => {
+            Request::Maintain { graph, size, direction, output } => {
                 let session = self.session(&graph)?;
-                session.maintain(size, direction)?;
+                // Count-only: the typed CountOnlyError surfaces through
+                // the wire as a per-request failure line
+                session.maintain_query(&MotifQuery {
+                    size,
+                    direction,
+                    output,
+                    ..Default::default()
+                })?;
                 let instances = session
                     .maintained()
                     .iter()
@@ -211,7 +257,7 @@ mod tests {
     use crate::engine::{CountQuery, Session};
     use crate::graph::generators;
     use crate::motifs::{Direction, MotifSize};
-    use crate::stream::EdgeDelta;
+    use crate::stream::{CountOnlyError, EdgeDelta};
 
     fn edges_of(g: &Graph) -> Vec<(u32, u32)> {
         g.out.edges().collect()
@@ -236,13 +282,117 @@ mod tests {
         }
 
         let query = CountQuery::default();
-        let got = match svc.handle(Request::Count { graph: "g".into(), query }).unwrap() {
+        let got = match svc
+            .handle(Request::Count { graph: "g".into(), query: query.clone() })
+            .unwrap()
+        {
             Response::Counted { counts, .. } => counts,
             other => panic!("{other:?}"),
         };
         let want = Session::load(&g).count(&query).unwrap();
         assert_eq!(got.per_vertex, want.per_vertex);
         assert_eq!(got.total_instances, want.total_instances);
+    }
+
+    #[test]
+    fn instances_sample_and_scoped_count_requests_serve() {
+        let g = generators::gnp_undirected(30, 0.15, 8);
+        let mut svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: false,
+        })
+        .unwrap();
+        let session = Session::load(&g);
+        let base = CountQuery { direction: Direction::Undirected, ..Default::default() };
+        let full = session.count(&base).unwrap();
+
+        // instances: untruncated list covers every instance
+        let q = CountQuery { output: Output::Instances { limit: 1 << 20 }, ..base.clone() };
+        match svc.handle(Request::Instances { graph: "g".into(), query: q }).unwrap() {
+            Response::Instances { list, report, .. } => {
+                assert!(!list.truncated);
+                assert_eq!(list.total_seen, full.total_instances);
+                assert_eq!(report.per_class_totals, full.class_instances());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // sample: exact seen counts, bounded reservoirs
+        let q = CountQuery { output: Output::Sample { per_class: 4, seed: 3 }, ..base.clone() };
+        match svc.handle(Request::Sample { graph: "g".into(), query: q }).unwrap() {
+            Response::Sampled { sample, .. } => {
+                let seen: Vec<u64> = sample.classes.iter().map(|c| c.seen).collect();
+                assert_eq!(seen, full.class_instances());
+                for c in &sample.classes {
+                    assert!(c.instances.len() as u64 <= c.seen.min(4));
+                }
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // scoped count: rows of the scope equal the full rows
+        let q = CountQuery { scope: Scope::Vertices(vec![0, 5]), ..base };
+        match svc.handle(Request::Count { graph: "g".into(), query: q }).unwrap() {
+            Response::Counted { counts, .. } => {
+                assert_eq!(counts.vertex(0), full.vertex(0));
+                assert_eq!(counts.vertex(5), full.vertex(5));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // mismatched output kinds are request errors, not panics
+        let err = svc
+            .handle(Request::Instances { graph: "g".into(), query: CountQuery::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("Output::Instances"), "{err}");
+        let err = svc
+            .handle(Request::Sample { graph: "g".into(), query: CountQuery::default() })
+            .unwrap_err();
+        assert!(err.to_string().contains("Output::Sample"), "{err}");
+    }
+
+    #[test]
+    fn maintain_rejects_non_count_outputs_with_typed_error() {
+        let g = generators::gnp_undirected(20, 0.2, 5);
+        let mut svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: false,
+        })
+        .unwrap();
+        let err = svc
+            .handle(Request::Maintain {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                output: Output::Sample { per_class: 3, seed: 1 },
+            })
+            .unwrap_err();
+        assert!(err.downcast_ref::<CountOnlyError>().is_some(), "{err}");
+        // ... and the counts output still registers
+        match svc
+            .handle(Request::Maintain {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                output: Output::Counts,
+            })
+            .unwrap()
+        {
+            Response::Maintained { instances, .. } => {
+                let want = Session::load(&g)
+                    .count(&CountQuery {
+                        direction: Direction::Undirected,
+                        ..Default::default()
+                    })
+                    .unwrap();
+                assert_eq!(instances, want.total_instances);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -261,7 +411,7 @@ mod tests {
                 graph: "g".into(),
                 size: MotifSize::Three,
                 direction: Direction::Directed,
-                vertices: vs,
+                scope: Scope::Vertices(vs),
             })
             .unwrap()
         {
@@ -294,6 +444,25 @@ mod tests {
         for r in &after {
             assert_eq!(r.counts, want.vertex(r.vertex), "v{} after deltas", r.vertex);
         }
+
+        // a seed-neighborhood scope resolves its row set server-side
+        match svc
+            .handle(Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                scope: Scope::Neighborhood { seeds: vec![0], radius: 1 },
+            })
+            .unwrap()
+        {
+            Response::VertexRows { rows, .. } => {
+                assert!(rows.iter().any(|r| r.vertex == 0), "the seed itself is a row");
+                for r in &rows {
+                    assert_eq!(r.counts, want.vertex(r.vertex), "v{} via neighborhood", r.vertex);
+                }
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]
@@ -315,10 +484,33 @@ mod tests {
                 graph: "g".into(),
                 size: MotifSize::Three,
                 direction: Direction::Undirected,
-                vertices: vec![99],
+                scope: Scope::Vertices(vec![99]),
             })
             .unwrap_err();
         assert!(err.to_string().contains("out of range"), "{err}");
+
+        // an all-vertices dump is refused (it would materialize n rows)
+        let err = svc
+            .handle(Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                scope: Scope::All,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("explicit row set"), "{err}");
+
+        // ... and so is an empty row set — it must not register a
+        // maintained counter just to answer nothing
+        let err = svc
+            .handle(Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Undirected,
+                scope: Scope::Vertices(vec![]),
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("at least one vertex"), "{err}");
 
         // out-of-range inline edge is rejected at load
         let err = svc
@@ -362,6 +554,7 @@ mod tests {
                 graph: "c".into(),
                 size: MotifSize::Three,
                 direction: Direction::Undirected,
+                output: Output::Counts,
             })
             .unwrap()
         {

@@ -10,28 +10,39 @@
 //! {"op":"load_graph","id":1,"graph":"web","path":"web.tsv","directed":true}
 //! {"op":"load_graph","graph":"toy","directed":false,"n":4,"edges":[[0,1],[1,2],[2,0]]}
 //! {"op":"count","graph":"web","k":3,"direction":"directed","scheduler":"stealing","sink":"sharded"}
+//! {"op":"count","graph":"web","k":3,"vertices":[0,5,7]}
+//! {"op":"count","graph":"web","k":4,"seeds":[0,5],"radius":2}
+//! {"op":"instances","graph":"web","k":3,"direction":"directed","limit":500}
+//! {"op":"sample","graph":"web","k":4,"per_class":16,"seed":7,"seeds":[0],"radius":2}
 //! {"op":"vertex_counts","graph":"web","k":3,"direction":"directed","vertices":[0,5,7]}
+//! {"op":"vertex_counts","graph":"web","k":3,"seeds":[0],"radius":1}
 //! {"op":"apply_edges","graph":"web","deltas":[["+",0,5],["-",1,2]]}
 //! {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
 //! {"op":"evict","graph":"toy"}
 //! {"op":"stats"}
 //! ```
 //!
-//! `count` defaults: `k` 3, `direction` `"directed"`, `scheduler`
-//! `"stealing"`, `sink` `"sharded"` — the same spellings and defaults as
-//! the `vdmc count` flags, because both go through
-//! [`CountQuery::builder`].
+//! A scope is spelled the same way on every op that takes one: either a
+//! `"vertices"` array (results cover instances touching those vertices)
+//! or `"seeds"` + `"radius"` (the seed neighborhood); neither means the
+//! whole graph. `count` defaults: `k` 3, `direction` `"directed"`,
+//! `scheduler` `"stealing"`, `sink` `"sharded"` — the same spellings and
+//! defaults as the `vdmc count` flags, because both go through
+//! [`MotifQuery::builder`].
 //!
 //! ## Responses
 //!
 //! Success: `{"ok":true,"op":...,"id":...,"elapsed_secs":...,` payload
 //! `}`. Failure: `{"ok":false,"op":...,"id":...,"error":"..."}` — the
 //! stream keeps going; one bad request never kills the daemon. `count`
-//! answers carry the class-total digest (`"classes":{"m6":123,...}`);
-//! exact per-vertex rows go through `vertex_counts`, whose `"counts"`
-//! maps each requested vertex to its class vector.
+//! answers carry the class-total digest (`"classes":{"m6":123,...}`,
+//! scope-exact via the run report's class histogram); exact per-vertex
+//! rows go through `vertex_counts`, whose `"counts"` maps each requested
+//! vertex to its class vector. `instances` answers list
+//! `[[verts...],class_id]` pairs plus the exact per-class totals;
+//! `sample` answers map each class to `{"seen":n,"sample":[[verts]...]}`.
 
-use crate::engine::CountQuery;
+use crate::engine::{MotifQuery, Output, Scope};
 use crate::motifs::{Direction, MotifSize};
 use crate::stream::EdgeDelta;
 use crate::util::json::Json;
@@ -55,10 +66,77 @@ fn field_bool(j: &Json, key: &str, default: bool) -> Result<bool, String> {
     }
 }
 
+/// Optional non-negative integer field, strict like [`field_str`].
+fn field_u64(j: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            v.as_u64().ok_or_else(|| format!("\"{key}\" must be a non-negative integer, got {v:?}"))
+        }
+    }
+}
+
+/// Optional u32-id array field: absent -> `None`; malformed -> error.
+fn field_vertices(j: &Json, key: &str) -> Result<Option<Vec<u32>>, String> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let arr = v
+                .as_arr()
+                .ok_or_else(|| format!("\"{key}\" must be an array of vertex ids, got {v:?}"))?;
+            arr.iter()
+                .map(|x| {
+                    x.as_u64()
+                        .filter(|&id| id <= u32::MAX as u64)
+                        .map(|id| id as u32)
+                        .ok_or_else(|| format!("bad vertex id {x:?} in \"{key}\""))
+                })
+                .collect::<Result<Vec<u32>, String>>()
+                .map(Some)
+        }
+    }
+}
+
+/// The shared scope spelling: `"vertices"` XOR `"seeds"` (+ optional
+/// `"radius"`, default 1); neither means [`Scope::All`].
+fn decode_scope(j: &Json) -> Result<Scope, String> {
+    let vertices = field_vertices(j, "vertices")?;
+    let seeds = field_vertices(j, "seeds")?;
+    match (vertices, seeds) {
+        (Some(_), Some(_)) => {
+            Err("a request takes \"vertices\" or \"seeds\", not both".to_string())
+        }
+        (Some(vs), None) => {
+            if j.get("radius").is_some() {
+                return Err("\"radius\" only applies to \"seeds\" scopes".to_string());
+            }
+            Ok(Scope::Vertices(vs))
+        }
+        (None, Some(seeds)) => {
+            let radius = field_u64(j, "radius", 1)? as usize;
+            Ok(Scope::Neighborhood { seeds, radius })
+        }
+        (None, None) => {
+            if j.get("radius").is_some() {
+                return Err("\"radius\" needs a \"seeds\" array".to_string());
+            }
+            Ok(Scope::All)
+        }
+    }
+}
+
 /// Decode one request line. Returns the request plus the echo id.
 pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
     let j = Json::parse(line)?;
-    let id = j.get("id").and_then(Json::as_u64);
+    // strict like every other optional field: a mistyped id must error,
+    // not silently vanish and break the client's response correlation
+    let id = match j.get("id") {
+        None => None,
+        Some(v) => Some(
+            v.as_u64()
+                .ok_or_else(|| format!("\"id\" must be a non-negative integer, got {v:?}"))?,
+        ),
+    };
     let op = j
         .get("op")
         .and_then(Json::as_str)
@@ -82,6 +160,16 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
         let name = field_str(&j, "direction", "directed")?;
         Direction::parse(name)
             .ok_or_else(|| format!("unknown direction {name:?} (directed | undirected)"))
+    };
+    // the shared enumeration-query assembly of count/instances/sample:
+    // same spellings, same defaults, same validating builder
+    let base_query = || -> Result<crate::engine::MotifQueryBuilder, String> {
+        Ok(MotifQuery::builder()
+            .size(size()?)
+            .direction(direction()?)
+            .scheduler_name(field_str(&j, "scheduler", "stealing")?)
+            .sink_name(field_str(&j, "sink", "sharded")?)
+            .scope(decode_scope(&j)?))
     };
 
     let req = match op {
@@ -119,30 +207,29 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
             Request::LoadGraph { graph: graph()?, source, directed }
         }
         "count" => {
-            let query = CountQuery::builder()
-                .size(size()?)
-                .direction(direction()?)
-                .scheduler_name(field_str(&j, "scheduler", "stealing")?)
-                .sink_name(field_str(&j, "sink", "sharded")?)
-                .build()
-                .map_err(|e| e.to_string())?;
+            let query = base_query()?.build().map_err(|e| e.to_string())?;
             Request::Count { graph: graph()?, query }
         }
+        "instances" => {
+            let limit = field_u64(&j, "limit", 1000)? as usize;
+            let query = base_query()?.instances(limit).build().map_err(|e| e.to_string())?;
+            Request::Instances { graph: graph()?, query }
+        }
+        "sample" => {
+            let per_class = field_u64(&j, "per_class", 10)? as usize;
+            let seed = field_u64(&j, "seed", 42)?;
+            let query =
+                base_query()?.sample(per_class, seed).build().map_err(|e| e.to_string())?;
+            Request::Sample { graph: graph()?, query }
+        }
         "vertex_counts" => {
-            let vs = j
-                .get("vertices")
-                .and_then(Json::as_arr)
-                .ok_or_else(|| "vertex_counts needs a \"vertices\" array".to_string())?;
-            let vertices = vs
-                .iter()
-                .map(|v| {
-                    v.as_u64()
-                        .filter(|&x| x <= u32::MAX as u64)
-                        .map(|x| x as u32)
-                        .ok_or_else(|| format!("bad vertex id {v:?}"))
-                })
-                .collect::<Result<Vec<u32>, String>>()?;
-            Request::VertexCounts { graph: graph()?, size: size()?, direction: direction()?, vertices }
+            let scope = decode_scope(&j)?;
+            if scope.is_all() {
+                return Err(
+                    "vertex_counts needs a \"vertices\" array or \"seeds\"+\"radius\"".to_string()
+                );
+            }
+            Request::VertexCounts { graph: graph()?, size: size()?, direction: direction()?, scope }
         }
         "apply_edges" => {
             let ds = j
@@ -152,7 +239,15 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
             let deltas = ds.iter().map(decode_delta).collect::<Result<Vec<_>, String>>()?;
             Request::ApplyEdges { graph: graph()?, deltas }
         }
-        "maintain" => Request::Maintain { graph: graph()?, size: size()?, direction: direction()? },
+        "maintain" => {
+            let output_name = field_str(&j, "output", "counts")?;
+            let output = Output::parse_default(output_name).ok_or_else(|| {
+                format!(
+                    "unknown output {output_name:?} (counts | instances | sample | top-vertices)"
+                )
+            })?;
+            Request::Maintain { graph: graph()?, size: size()?, direction: direction()?, output }
+        }
         "evict" => Request::Evict { graph: graph()? },
         "stats" => Request::Stats,
         other => return Err(format!("unknown op {other:?}")),
@@ -194,6 +289,15 @@ fn decode_delta(d: &Json) -> Result<EdgeDelta, String> {
     }
 }
 
+/// Fold a payload object's fields flat into the response envelope.
+fn fold_into(j: &mut Json, payload: Json) {
+    if let Json::Obj(m) = payload {
+        for (k, v) in m {
+            j.set(&k, v);
+        }
+    }
+}
+
 /// Encode one successful response as a compact JSON line (no trailing
 /// newline). `elapsed_secs` is the service-side handling time of this
 /// request.
@@ -214,9 +318,12 @@ pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> S
                 .set("evicted", *evicted);
         }
         Response::Counted { graph, counts, report } => {
+            // the report's histogram, not counts.class_instances(): under
+            // a scope an instance can touch fewer than k in-scope
+            // vertices, so only the report stays exact
             let mut classes = Json::obj();
-            for (cid, t) in counts.class_ids.iter().zip(counts.class_instances()) {
-                classes.set(&format!("m{cid}"), t);
+            for (cid, t) in counts.class_ids.iter().zip(&report.per_class_totals) {
+                classes.set(&format!("m{cid}"), *t);
             }
             j.set("graph", graph.as_str())
                 .set("k", counts.k)
@@ -226,6 +333,14 @@ pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> S
                 .set("classes", classes)
                 .set("count_secs", counts.elapsed_secs)
                 .set("setup_reused", report.setup_reused);
+        }
+        Response::Instances { graph, list, report } => {
+            j.set("graph", graph.as_str()).set("setup_reused", report.setup_reused);
+            fold_into(&mut j, list.to_json());
+        }
+        Response::Sampled { graph, sample, report } => {
+            j.set("graph", graph.as_str()).set("setup_reused", report.setup_reused);
+            fold_into(&mut j, sample.to_json());
         }
         Response::VertexRows { graph, size, direction, class_ids, rows, total_instances } => {
             let mut counts = Json::obj();
@@ -281,7 +396,7 @@ pub fn encode_error(op: Option<&str>, id: Option<u64>, error: &str) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::SchedulerMode;
+    use crate::engine::{CountQuery, SchedulerMode};
     use crate::motifs::counter::CounterMode;
 
     #[test]
@@ -325,6 +440,8 @@ mod tests {
                 assert_eq!(query.direction, Direction::Undirected);
                 assert_eq!(query.scheduler, SchedulerMode::SharedCursor);
                 assert_eq!(query.sink, CounterMode::Atomic);
+                assert_eq!(query.output, Output::Counts);
+                assert_eq!(query.scope, Scope::All);
             }
             other => panic!("{other:?}"),
         }
@@ -334,6 +451,62 @@ mod tests {
         match r {
             Request::Count { query, .. } => {
                 assert_eq!(query, CountQuery::default());
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // scoped count: vertices spelling
+        let (r, _) =
+            decode_request(r#"{"op":"count","graph":"g","vertices":[3,9]}"#).unwrap();
+        match r {
+            Request::Count { query, .. } => {
+                assert_eq!(query.scope, Scope::Vertices(vec![3, 9]));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // scoped count: seeds spelling with default radius 1
+        let (r, _) = decode_request(r#"{"op":"count","graph":"g","seeds":[4]}"#).unwrap();
+        match r {
+            Request::Count { query, .. } => {
+                assert_eq!(query.scope, Scope::Neighborhood { seeds: vec![4], radius: 1 });
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let (r, _) = decode_request(
+            r#"{"op":"instances","graph":"g","k":3,"direction":"undirected","limit":50}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Instances { graph, query } => {
+                assert_eq!(graph, "g");
+                assert_eq!(query.output, Output::Instances { limit: 50 });
+            }
+            other => panic!("{other:?}"),
+        }
+        // instances default limit
+        let (r, _) = decode_request(r#"{"op":"instances","graph":"g"}"#).unwrap();
+        match r {
+            Request::Instances { query, .. } => {
+                assert_eq!(query.output, Output::Instances { limit: 1000 });
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let (r, _) = decode_request(
+            r#"{"op":"sample","graph":"g","k":4,"per_class":16,"seed":7,"seeds":[0,5],"radius":2}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Sample { graph, query } => {
+                assert_eq!(graph, "g");
+                assert_eq!(query.size, MotifSize::Four);
+                assert_eq!(query.output, Output::Sample { per_class: 16, seed: 7 });
+                assert_eq!(
+                    query.scope,
+                    Scope::Neighborhood { seeds: vec![0, 5], radius: 2 }
+                );
             }
             other => panic!("{other:?}"),
         }
@@ -348,7 +521,20 @@ mod tests {
                 graph: "g".into(),
                 size: MotifSize::Three,
                 direction: Direction::Directed,
-                vertices: vec![0, 5]
+                scope: Scope::Vertices(vec![0, 5])
+            }
+        );
+        let (r, _) = decode_request(
+            r#"{"op":"vertex_counts","graph":"g","seeds":[2],"radius":2}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                scope: Scope::Neighborhood { seeds: vec![2], radius: 2 }
             }
         );
 
@@ -372,9 +558,20 @@ mod tests {
             Request::Maintain {
                 graph: "g".into(),
                 size: MotifSize::Four,
-                direction: Direction::Undirected
+                direction: Direction::Undirected,
+                output: Output::Counts
             }
         );
+        // a non-counts maintain decodes (the service rejects it with the
+        // typed Count-only error at handle time)
+        let (r, _) = decode_request(
+            r#"{"op":"maintain","graph":"g","output":"sample"}"#,
+        )
+        .unwrap();
+        match r {
+            Request::Maintain { output, .. } => assert!(matches!(output, Output::Sample { .. })),
+            other => panic!("{other:?}"),
+        }
 
         assert_eq!(
             decode_request(r#"{"op":"evict","graph":"g"}"#).unwrap().0,
@@ -395,7 +592,20 @@ mod tests {
             r#"{"op":"load_graph","graph":"g"}"#,                    // no source
             r#"{"op":"load_graph","graph":"g","path":"p","edges":[]}"#, // both sources
             r#"{"op":"apply_edges","graph":"g","deltas":[["*",1,2]]}"#, // bad delta op
-            r#"{"op":"vertex_counts","graph":"g"}"#,                 // no vertices
+            r#"{"op":"vertex_counts","graph":"g"}"#,                 // no row set
+            // scope misuse
+            r#"{"op":"count","graph":"g","vertices":[1],"seeds":[2]}"#, // both spellings
+            r#"{"op":"count","graph":"g","vertices":[1],"radius":2}"#,  // radius w/o seeds
+            r#"{"op":"count","graph":"g","radius":2}"#,                 // radius alone
+            r#"{"op":"count","graph":"g","vertices":[]}"#,              // empty scope
+            r#"{"op":"count","graph":"g","vertices":"0,1"}"#,           // mistyped scope
+            r#"{"op":"count","graph":"g","seeds":[-1]}"#,               // bad id
+            // output parameter misuse
+            r#"{"op":"instances","graph":"g","limit":0}"#,
+            r#"{"op":"instances","graph":"g","limit":"many"}"#,
+            r#"{"op":"sample","graph":"g","per_class":0}"#,
+            r#"{"op":"sample","graph":"g","seed":"fork"}"#,
+            r#"{"op":"maintain","graph":"g","output":"histogram"}"#,
             // mistyped fields must error, never silently default
             r#"{"op":"load_graph","graph":"g","path":"p","directed":"true"}"#,
             r#"{"op":"load_graph","graph":"g","edges":[[0,1]],"n":"4"}"#,
@@ -403,6 +613,9 @@ mod tests {
             r#"{"op":"count","graph":"g","k":"4"}"#,
             r#"{"op":"count","graph":"g","direction":3}"#,
             r#"{"op":"count","graph":"g","scheduler":1}"#,
+            r#"{"op":"stats","id":"7"}"#,
+            r#"{"op":"stats","id":7.5}"#,
+            r#"{"op":"stats","id":-1}"#,
         ] {
             assert!(decode_request(bad).is_err(), "{bad:?} must not decode");
         }
@@ -423,6 +636,77 @@ mod tests {
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
         assert!(j.get("error").and_then(Json::as_str).unwrap().contains("not loaded"));
+    }
+
+    #[test]
+    fn encode_instances_and_sample_payloads() {
+        use crate::engine::{InstanceList, MotifInstance, SampleSummary};
+        use crate::engine::ClassSample;
+        let report = crate::coordinator::metrics::RunReport {
+            workers: vec![],
+            total_instances: 2,
+            elapsed_secs: 0.1,
+            queue_items: 1,
+            queue_units: 1,
+            setup_secs: 0.0,
+            setup_reused: true,
+            tier_memory_bytes: 0,
+            per_class_totals: vec![2],
+        };
+        let list = InstanceList {
+            k: 3,
+            direction: Direction::Undirected,
+            class_ids: vec![63],
+            instances: vec![
+                MotifInstance { verts: vec![0, 1, 2], class_slot: 0 },
+                MotifInstance { verts: vec![1, 2, 3], class_slot: 0 },
+            ],
+            truncated: false,
+            total_seen: 2,
+            per_class_seen: vec![2],
+        };
+        let line = encode_response(
+            &Response::Instances { graph: "g".into(), list, report: report.clone() },
+            Some(1),
+            0.5,
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("instances"));
+        assert_eq!(j.get("count").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("truncated").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("total_seen").and_then(Json::as_u64), Some(2));
+        assert_eq!(
+            j.get("classes").and_then(|c| c.get("m63")).and_then(Json::as_u64),
+            Some(2)
+        );
+        let rows = j.get("instances").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+
+        let sample = SampleSummary {
+            k: 3,
+            direction: Direction::Undirected,
+            per_class: 2,
+            seed: 9,
+            classes: vec![ClassSample {
+                slot: 0,
+                class_id: 63,
+                seen: 5,
+                instances: vec![MotifInstance { verts: vec![0, 1, 2], class_slot: 0 }],
+            }],
+            total_seen: 5,
+        };
+        let line = encode_response(
+            &Response::Sampled { graph: "g".into(), sample, report },
+            None,
+            0.5,
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("sample"));
+        assert_eq!(j.get("per_class").and_then(Json::as_u64), Some(2));
+        assert_eq!(j.get("seed").and_then(Json::as_u64), Some(9));
+        let m63 = j.get("classes").and_then(|c| c.get("m63")).unwrap();
+        assert_eq!(m63.get("seen").and_then(Json::as_u64), Some(5));
+        assert_eq!(m63.get("sample").and_then(Json::as_arr).unwrap().len(), 1);
     }
 
     #[test]

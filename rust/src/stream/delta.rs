@@ -42,6 +42,41 @@ use crate::motifs::{Direction, MotifSize};
 /// worker threads instead of run inline.
 pub(crate) const PARALLEL_UNITS: usize = 512;
 
+/// Typed rejection of non-Count work on the incremental-maintenance path.
+///
+/// Delta maintenance is **Count-only** by construction: the edge-local
+/// re-enumerator folds ±deltas into per-vertex counters, which works
+/// because counter updates commute and invert. Instance lists, reservoir
+/// samples and top-k rankings do not invert under deletions (a deleted
+/// instance may be exactly the one a reservoir kept), so maintaining them
+/// incrementally would silently serve wrong answers. Those outputs —
+/// and scoped maintenance — must run as full `Session::query` calls,
+/// which stay correct over a dirty overlay.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CountOnlyError {
+    /// What was asked for, e.g. "`sample` output" or "`vertices` scope".
+    pub requested: String,
+}
+
+impl CountOnlyError {
+    pub fn new(requested: impl Into<String>) -> CountOnlyError {
+        CountOnlyError { requested: requested.into() }
+    }
+}
+
+impl std::fmt::Display for CountOnlyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "delta maintenance is Count-only: {} cannot be maintained incrementally \
+             (run a full Session::query instead — it stays exact over pending deltas)",
+            self.requested
+        )
+    }
+}
+
+impl std::error::Error for CountOnlyError {}
+
 /// One applied edge change in processing ids: the (u,v) direction bits
 /// before and after (bit0 = u→v, bit1 = v→u; undirected graphs use
 /// 0b11/0). Everything else about the graph is identical pre/post.
@@ -129,6 +164,8 @@ impl MaintainedCounts {
             n_classes: self.mapper.n_classes(),
             per_vertex: per_vertex_orig,
             class_ids: self.mapper.class_ids(),
+            // maintained counters are always full-graph: derive from rows
+            per_class_instances: Vec::new(),
             total_instances: self.instances,
             elapsed_secs: secs,
         }

@@ -29,7 +29,7 @@ pub mod delta;
 pub mod overlay;
 pub mod timeline;
 
-pub use delta::MaintainedCounts;
+pub use delta::{CountOnlyError, MaintainedCounts};
 pub use overlay::{DeltaOverlay, OverlayView};
 pub use timeline::{load_timeline, replay, ReplaySummary};
 

@@ -2,7 +2,7 @@
 //! bit-identical to dedicated per-graph sessions — across interleaved
 //! queries, live edge deltas, byte-budget evictions and the JSONL wire.
 
-use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
@@ -60,15 +60,15 @@ fn interleaved_pooled_traffic_matches_dedicated_sessions() {
     for round in 0..3u64 {
         for (gi, (id, g)) in graphs.iter().enumerate() {
             // full counts, both sizes, straight against the dedicated oracle
-            for q in [q3, q4] {
+            for q in [&q3, &q4] {
                 let got = match svc
-                    .handle(Request::Count { graph: id.clone(), query: q })
+                    .handle(Request::Count { graph: id.clone(), query: q.clone() })
                     .unwrap()
                 {
                     Response::Counted { counts, .. } => counts,
                     other => panic!("{other:?}"),
                 };
-                let want = oracles[gi].count(&q).unwrap();
+                let want = oracles[gi].count(q).unwrap();
                 assert_eq!(got.per_vertex, want.per_vertex, "{id} round {round} {:?}", q.size);
                 assert_eq!(got.total_instances, want.total_instances);
             }
@@ -80,7 +80,7 @@ fn interleaved_pooled_traffic_matches_dedicated_sessions() {
                     graph: id.clone(),
                     size: MotifSize::Three,
                     direction: Direction::Directed,
-                    vertices: probe.clone(),
+                    scope: Scope::Vertices(probe.clone()),
                 })
                 .unwrap()
             {
@@ -240,6 +240,52 @@ fn wire_jsonl_stream_matches_dedicated_sessions() {
                 "{id} class m{cid}"
             );
         }
+
+        // instances over the wire: untruncated, exact totals
+        let j = roundtrip(format!(
+            r#"{{"op":"instances","graph":"{id}","k":3,"direction":"directed","limit":1000000}}"#
+        ));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+        assert_eq!(
+            j.get("total_seen").and_then(Json::as_u64),
+            Some(want.total_instances),
+            "{id} instances"
+        );
+        assert_eq!(j.get("truncated").and_then(Json::as_bool), Some(false));
+        assert_eq!(
+            j.get("count").and_then(Json::as_u64),
+            Some(want.total_instances),
+            "{id} materialized"
+        );
+
+        // sample over the wire: per-class seen equals the class digest
+        let j = roundtrip(format!(
+            r#"{{"op":"sample","graph":"{id}","k":3,"direction":"directed","per_class":4,"seed":9}}"#
+        ));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+        let sample_classes = j.get("classes").expect("sample classes");
+        for (cid, t) in want.class_ids.iter().zip(want.class_instances()) {
+            if t == 0 {
+                continue; // empty classes are omitted from the sample map
+            }
+            let entry = sample_classes
+                .get(&format!("m{cid}"))
+                .unwrap_or_else(|| panic!("{id}: sample class m{cid} missing"));
+            assert_eq!(entry.get("seen").and_then(Json::as_u64), Some(t), "{id} m{cid}");
+            let kept = entry.get("sample").and_then(Json::as_arr).unwrap().len() as u64;
+            assert_eq!(kept, t.min(4), "{id} m{cid} reservoir size");
+        }
+
+        // scoped count over the wire: a vertex scope answers with the
+        // scope-touching totals only
+        let j = roundtrip(format!(
+            r#"{{"op":"count","graph":"{id}","k":3,"direction":"directed","vertices":[0,1]}}"#
+        ));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+        assert!(
+            j.get("total_instances").and_then(Json::as_u64).unwrap() <= want.total_instances,
+            "{id} scoped"
+        );
 
         // exact per-vertex rows over the wire
         let probe: Vec<u32> = (0..g.n() as u32).step_by(7).collect();

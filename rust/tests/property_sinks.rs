@@ -1,0 +1,429 @@
+//! Property tests for the EnumSink emission pipeline: the Instances
+//! output against an independent brute-force oracle, the Sample output's
+//! determinism and statistical behavior, and the Scope semantics
+//! ("scoped counts equal full-count rows restricted to the scope").
+//!
+//! The oracle enumerates every C(n, k) vertex subset, keeps the connected
+//! ones (undirected view), and classifies them through
+//! `encode_adjacency` + `SlotMapper` — it shares no code with the
+//! proper-BFS enumerators or the sink layer.
+
+use vdmc::engine::{
+    MotifQuery, Output, QueryOutput, SchedulerMode, Scope, Session, SessionConfig,
+};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::counter::SlotMapper;
+use vdmc::motifs::{encode_adjacency, Direction, MotifSize};
+
+/// (sorted verts, class slot) of every connected induced k-subset.
+fn oracle(g: &Graph, size: MotifSize, dir: Direction) -> Vec<(Vec<u32>, u16)> {
+    let k = size.k();
+    let mapper = SlotMapper::new(k, dir);
+    let mut out: Vec<(Vec<u32>, u16)> = Vec::new();
+    let mut consider = |vs: &[u32]| {
+        let m = vs.len();
+        let mut adj = vec![false; m * m];
+        for i in 0..m {
+            for j in 0..m {
+                if i != j {
+                    adj[i * m + j] = g.und.has_edge(vs[i], vs[j]);
+                }
+            }
+        }
+        let mut seen = vec![false; m];
+        seen[0] = true;
+        let mut stack = vec![0usize];
+        let mut cnt = 1;
+        while let Some(x) = stack.pop() {
+            for y in 0..m {
+                if !seen[y] && adj[x * m + y] {
+                    seen[y] = true;
+                    cnt += 1;
+                    stack.push(y);
+                }
+            }
+        }
+        if cnt < m {
+            return;
+        }
+        let raw = match dir {
+            Direction::Directed => encode_adjacency(k, |i, j| g.out.has_edge(vs[i], vs[j])),
+            Direction::Undirected => encode_adjacency(k, |i, j| g.und.has_edge(vs[i], vs[j])),
+        };
+        out.push((vs.to_vec(), mapper.slot(raw)));
+    };
+    let n = g.n() as u32;
+    match size {
+        MotifSize::Three => {
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    for c in (b + 1)..n {
+                        consider(&[a, b, c]);
+                    }
+                }
+            }
+        }
+        MotifSize::Four => {
+            for a in 0..n {
+                for b in (a + 1)..n {
+                    for c in (b + 1)..n {
+                        for d in (c + 1)..n {
+                            consider(&[a, b, c, d]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+/// Run an untruncated Instances query and return (sorted verts, slot).
+fn engine_instances(
+    session: &Session,
+    size: MotifSize,
+    dir: Direction,
+    scope: Scope,
+) -> Vec<(Vec<u32>, u16)> {
+    let q = MotifQuery {
+        size,
+        direction: dir,
+        output: Output::Instances { limit: usize::MAX >> 1 },
+        scope,
+        ..Default::default()
+    };
+    let list = match session.query(&q).unwrap() {
+        QueryOutput::Instances(l) => l,
+        other => panic!("{other:?}"),
+    };
+    assert!(!list.truncated, "untruncated run must keep everything");
+    list.instances.into_iter().map(|i| (i.verts, i.class_slot)).collect()
+}
+
+fn test_graphs() -> Vec<(&'static str, Graph)> {
+    vec![
+        ("gnp-directed-1", generators::gnp_directed(16, 0.25, 1)),
+        ("gnp-directed-2", generators::gnp_directed(16, 0.2, 2)),
+        ("gnp-undirected", generators::gnp_undirected(18, 0.22, 7)),
+        ("star", generators::star(12)),
+        ("ba", generators::barabasi_albert(20, 3, 5)),
+    ]
+}
+
+fn directions(g: &Graph) -> Vec<Direction> {
+    if g.directed {
+        vec![Direction::Directed, Direction::Undirected]
+    } else {
+        vec![Direction::Undirected]
+    }
+}
+
+// ------------------------------------------------------- (a) instances
+
+#[test]
+fn instances_are_set_equal_to_the_oracle() {
+    for (name, g) in test_graphs() {
+        let session = Session::load_with(&g, &SessionConfig { workers: 3, ..Default::default() });
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in directions(&g) {
+                let want = oracle(&g, size, dir);
+                let got = engine_instances(&session, size, dir, Scope::All);
+                assert_eq!(got, want, "{name} {size:?} {dir:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scoped_instances_are_exactly_the_scope_touching_oracle_subset() {
+    for (name, g) in [
+        ("gnp-directed", generators::gnp_directed(16, 0.25, 3)),
+        ("ba", generators::barabasi_albert(20, 3, 9)),
+    ] {
+        let session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+        let scope_vs: Vec<u32> = vec![0, 5, 11];
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in directions(&g) {
+                let want: Vec<(Vec<u32>, u16)> = oracle(&g, size, dir)
+                    .into_iter()
+                    .filter(|(vs, _)| vs.iter().any(|v| scope_vs.contains(v)))
+                    .collect();
+                let got =
+                    engine_instances(&session, size, dir, Scope::Vertices(scope_vs.clone()));
+                assert_eq!(got, want, "{name} {size:?} {dir:?} scoped");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------- (b) sample
+
+#[test]
+fn sample_is_deterministic_across_schedulers_and_worker_counts() {
+    let g = generators::barabasi_albert(150, 3, 4);
+    let runs: Vec<Vec<(u64, Vec<(Vec<u32>, u16)>)>> = [
+        (1usize, SchedulerMode::SharedCursor),
+        (4, SchedulerMode::SharedCursor),
+        (4, SchedulerMode::WorkStealing),
+        (4, SchedulerMode::WorkStealingBatch),
+        (7, SchedulerMode::WorkStealingBatch),
+    ]
+    .into_iter()
+    .map(|(workers, scheduler)| {
+        let session = Session::load_with(&g, &SessionConfig { workers, ..Default::default() });
+        let q = MotifQuery {
+            size: MotifSize::Three,
+            direction: Direction::Undirected,
+            scheduler,
+            output: Output::Sample { per_class: 9, seed: 77 },
+            ..Default::default()
+        };
+        match session.query(&q).unwrap() {
+            QueryOutput::Sample(s) => s
+                .classes
+                .into_iter()
+                .map(|c| {
+                    (
+                        c.seen,
+                        c.instances.into_iter().map(|i| (i.verts, i.class_slot)).collect(),
+                    )
+                })
+                .collect(),
+            other => panic!("{other:?}"),
+        }
+    })
+    .collect();
+    for run in &runs[1..] {
+        assert_eq!(run, &runs[0], "fixed seed must pin the sample exactly");
+    }
+}
+
+#[test]
+fn sample_reservoirs_are_subsets_with_exact_seen_counts() {
+    let g = generators::gnp_directed(16, 0.3, 11);
+    let session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+    for size in [MotifSize::Three, MotifSize::Four] {
+        for dir in directions(&g) {
+            let want = oracle(&g, size, dir);
+            let q = MotifQuery {
+                size,
+                direction: dir,
+                output: Output::Sample { per_class: 5, seed: 13 },
+                ..Default::default()
+            };
+            let s = match session.query(&q).unwrap() {
+                QueryOutput::Sample(s) => s,
+                other => panic!("{other:?}"),
+            };
+            assert_eq!(s.total_seen, want.len() as u64, "{size:?} {dir:?}");
+            for c in &s.classes {
+                let class_want: Vec<&(Vec<u32>, u16)> =
+                    want.iter().filter(|(_, slot)| *slot == c.slot).collect();
+                assert_eq!(c.seen, class_want.len() as u64, "exact per-class seen");
+                assert_eq!(c.instances.len() as u64, c.seen.min(5));
+                for inst in &c.instances {
+                    assert!(
+                        class_want.iter().any(|(vs, _)| *vs == inst.verts),
+                        "sampled instance {:?} not in the oracle set",
+                        inst.verts
+                    );
+                }
+                // no duplicates inside a reservoir
+                for (i, a) in c.instances.iter().enumerate() {
+                    for b in &c.instances[i + 1..] {
+                        assert_ne!(a.verts, b.verts, "duplicate in reservoir");
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sample_estimates_per_vertex_participation_within_bounds() {
+    // The reservoir is a uniform without-replacement draw: for any vertex
+    // v and class c, occurrences(v in sample) / |sample| estimates
+    // count[v][c] / seen_c. Everything is deterministic for the fixed
+    // seed, so the 5σ-wide bound below either always holds or never does.
+    let g = generators::barabasi_albert(300, 3, 21);
+    let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+    let counts = session
+        .count(&MotifQuery { direction: Direction::Undirected, ..Default::default() })
+        .unwrap();
+    let per_class = 60usize;
+    let q = MotifQuery {
+        direction: Direction::Undirected,
+        output: Output::Sample { per_class, seed: 20_22 },
+        ..Default::default()
+    };
+    let s = match session.query(&q).unwrap() {
+        QueryOutput::Sample(s) => s,
+        other => panic!("{other:?}"),
+    };
+    // the busiest vertex overall
+    let hub = (0..g.n() as u32)
+        .max_by_key(|&v| counts.vertex(v).iter().sum::<u64>())
+        .unwrap();
+    let mut checked = 0;
+    for c in &s.classes {
+        if c.seen < 200 {
+            continue; // too small for a statistical statement
+        }
+        let kept = c.instances.len() as f64;
+        let occurrences =
+            c.instances.iter().filter(|i| i.verts.contains(&hub)).count() as f64;
+        let p_true = counts.vertex(hub)[c.slot as usize] as f64 / c.seen as f64;
+        let p_est = occurrences / kept;
+        // binomial-ish 5σ + slack: wide enough to be robust, tight
+        // enough to catch a broken (non-uniform) selection
+        let sigma = (p_true * (1.0 - p_true) / kept).sqrt();
+        assert!(
+            (p_est - p_true).abs() <= 5.0 * sigma + 0.05,
+            "class m{}: estimated {p_est:.3} vs true {p_true:.3} (σ={sigma:.3})",
+            c.class_id
+        );
+        // ... and the class-total estimate k/seen·total is exact by
+        // construction: seen IS the class total
+        assert_eq!(c.seen, counts.class_instances()[c.slot as usize]);
+        checked += 1;
+    }
+    assert!(checked > 0, "at least one class must be large enough to check");
+}
+
+// -------------------------------------------------------- (c) scoping
+
+#[test]
+fn scoped_counts_equal_full_rows_restricted_to_the_scope() {
+    for (name, g) in test_graphs() {
+        let session = Session::load_with(&g, &SessionConfig { workers: 3, ..Default::default() });
+        let scope_vs: Vec<u32> = vec![0, 3, 9];
+        for size in [MotifSize::Three, MotifSize::Four] {
+            for dir in directions(&g) {
+                let full = session
+                    .count(&MotifQuery { size, direction: dir, ..Default::default() })
+                    .unwrap();
+                let scoped = session
+                    .count(&MotifQuery {
+                        size,
+                        direction: dir,
+                        scope: Scope::Vertices(scope_vs.clone()),
+                        ..Default::default()
+                    })
+                    .unwrap();
+                for v in 0..g.n() as u32 {
+                    if scope_vs.contains(&v) {
+                        assert_eq!(
+                            scoped.vertex(v),
+                            full.vertex(v),
+                            "{name} {size:?} {dir:?} v{v}"
+                        );
+                    } else {
+                        assert!(
+                            scoped.vertex(v).iter().all(|&c| c == 0),
+                            "{name} {size:?} {dir:?} v{v} must be zeroed"
+                        );
+                    }
+                }
+                // total = oracle instances touching the scope, exactly
+                let want_total = oracle(&g, size, dir)
+                    .iter()
+                    .filter(|(vs, _)| vs.iter().any(|v| scope_vs.contains(v)))
+                    .count() as u64;
+                assert_eq!(scoped.total_instances, want_total, "{name} {size:?} {dir:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn neighborhood_scope_rows_match_full_rows_across_scheduler_modes() {
+    let g = generators::barabasi_albert(120, 3, 13);
+    let session = Session::load_with(&g, &SessionConfig { workers: 4, ..Default::default() });
+    let full = session
+        .count(&MotifQuery {
+            size: MotifSize::Four,
+            direction: Direction::Undirected,
+            ..Default::default()
+        })
+        .unwrap();
+    let ball = session.neighborhood(&[2, 50], 1).unwrap();
+    for scheduler in [
+        SchedulerMode::SharedCursor,
+        SchedulerMode::WorkStealing,
+        SchedulerMode::WorkStealingBatch,
+    ] {
+        let scoped = session
+            .count(&MotifQuery {
+                size: MotifSize::Four,
+                direction: Direction::Undirected,
+                scheduler,
+                scope: Scope::Neighborhood { seeds: vec![2, 50], radius: 1 },
+                ..Default::default()
+            })
+            .unwrap();
+        for &v in &ball {
+            assert_eq!(scoped.vertex(v), full.vertex(v), "{scheduler:?} v{v}");
+        }
+        for v in 0..g.n() as u32 {
+            if !ball.contains(&v) {
+                assert!(scoped.vertex(v).iter().all(|&c| c == 0), "{scheduler:?} v{v}");
+            }
+        }
+    }
+}
+
+#[test]
+fn scoped_queries_over_dirty_overlay_match_reload() {
+    use vdmc::stream::EdgeDelta;
+    let g = generators::gnp_directed(40, 0.12, 17);
+    let mut session = Session::load_with(
+        &g,
+        &SessionConfig { workers: 2, compact_ratio: f64::INFINITY, ..Default::default() },
+    );
+    let deltas: Vec<EdgeDelta> =
+        (0..12u32).map(|i| EdgeDelta::insert(i, (i * 13 + 5) % 40)).collect();
+    session.apply_edges(&deltas).unwrap();
+    assert!(session.overlay_entries() > 0, "overlay must be dirty");
+
+    let snapshot = session.snapshot_graph();
+    let scope = Scope::Neighborhood { seeds: vec![3], radius: 1 };
+    for size in [MotifSize::Three, MotifSize::Four] {
+        let q = MotifQuery {
+            size,
+            direction: Direction::Directed,
+            scope: scope.clone(),
+            ..Default::default()
+        };
+        let dirty = session.count(&q).unwrap();
+        let fresh = Session::load(&snapshot).count(&q).unwrap();
+        assert_eq!(dirty.per_vertex, fresh.per_vertex, "{size:?}");
+        assert_eq!(dirty.total_instances, fresh.total_instances);
+        // the scope-touching instances also match the snapshot's oracle
+        let members = Session::load(&snapshot).neighborhood(&[3], 1).unwrap();
+        let want_total = oracle(&snapshot, size, Direction::Directed)
+            .iter()
+            .filter(|(vs, _)| vs.iter().any(|v| members.contains(v)))
+            .count() as u64;
+        assert_eq!(dirty.total_instances, want_total, "{size:?}");
+    }
+}
+
+// --------------------------------------------- maintenance stays Count-only
+
+#[test]
+fn delta_maintenance_rejects_non_count_outputs_with_typed_error() {
+    use vdmc::stream::CountOnlyError;
+    let g = generators::gnp_directed(25, 0.15, 5);
+    let mut session = Session::load(&g);
+    let err = session
+        .maintain_query(&MotifQuery {
+            output: Output::Instances { limit: 100 },
+            ..Default::default()
+        })
+        .unwrap_err();
+    let typed = err.downcast_ref::<CountOnlyError>().expect("typed CountOnlyError");
+    assert!(typed.requested.contains("instances"), "{typed:?}");
+    assert!(err.to_string().contains("Count-only"));
+}
