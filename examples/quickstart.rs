@@ -155,8 +155,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // -- serving: many graphs behind one VdmcService ----------------------
+    // handles are Send + Sync and cheap to clone (an Arc bump): hold one
+    // per client thread and call handle(&self) concurrently — readers
+    // run on pinned immutable snapshots, writers commit new epochs
     println!("\n== serving: VdmcService multiplexing pooled graphs ==");
-    let mut svc = VdmcService::with_defaults();
+    let svc = VdmcService::with_defaults();
     for (id, seed) in [("alpha", 1u64), ("beta", 2), ("gamma", 3)] {
         let g = generators::gnp_directed(n / 4, p * 2.0, seed);
         let edges: Vec<(u32, u32)> = g.out.edges().collect();
@@ -189,6 +192,22 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+    // concurrent clients: one cloned handle per thread, one shared pool —
+    // snapshot isolation keeps every reader bit-exact while others run
+    std::thread::scope(|s| {
+        for id in ["alpha", "beta", "gamma"] {
+            let svc = svc.clone();
+            s.spawn(move || {
+                let resp = svc.handle(Request::Count {
+                    graph: id.into(),
+                    query: CountQuery { direction: Direction::Directed, ..Default::default() },
+                });
+                if let Ok(Response::Counted { counts, .. }) = resp {
+                    println!("  [thread] {id}: {} 3-motif instances", counts.total_instances);
+                }
+            });
+        }
+    });
     if let Response::Stats(stats) = svc.handle(Request::Stats)? {
         println!(
             "  pool: {} resident ({} KiB), {} hits / {} misses",

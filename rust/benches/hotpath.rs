@@ -7,7 +7,12 @@
 //!    rows of a hub-heavy (power-law) graph: the CSR binary search vs the
 //!    hybrid tier's single word test, same pair stream, checksum-guarded
 //!    so neither loop can be optimized away.
-//! 2. `bench: "count"` — end-to-end counting wall-clock of `--adjacency
+//! 2. `bench: "gallop"` — the row-merge strategies raced on the same
+//!    hub-row × sparse-target workload: the two-pointer
+//!    `bits_against_merge` walk vs the galloping dispatch `bits_against`
+//!    takes when `|targets| * GALLOP_RATIO <= |row|`, checksum-guarded
+//!    bit-identical, with a `gallop_speedup` row.
+//! 3. `bench: "count"` — end-to-end counting wall-clock of `--adjacency
 //!    csr` vs `--adjacency hybrid` sessions on the same graph, plus a
 //!    `speedup` row per k. Both k = 3 and k = 4 run by default
 //!    (`--k3-only` to skip the slower k = 4): the 3-BFS assembles ids
@@ -27,6 +32,7 @@ use std::time::Instant;
 use vdmc::engine::{AdjacencyMode, CountQuery, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::{generators, GraphProbe};
+use vdmc::motifs::probe::{bits_against, bits_against_merge, GALLOP_RATIO};
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::util::json::Json;
 use vdmc::util::rng::Pcg32;
@@ -126,7 +132,61 @@ fn main() {
     println!("{}", probe_row("bitmap", pairs.len(), hub_secs, hits_hub).to_string_compact());
     assert_eq!(hits_csr, hits_hub, "probe parity violated");
 
-    // ---- 2. counting wall-clock: csr vs hybrid sessions
+    // ---- 2. row-merge microbenchmark: two-pointer merge vs galloping
+    // the 4-BFS shape the gallop path exists for: a hub's long sorted row
+    // intersected with a short candidate list
+    let hub = (0..g.n() as u32).max_by_key(|&v| g.und_degree(v)).unwrap();
+    let row_len = g.und.neighbors_above(hub, 0).len();
+    let t_count = (row_len / GALLOP_RATIO).max(1);
+    let step = (g.n() / t_count).max(1);
+    let targets: Vec<u32> =
+        (1..g.n() as u32).step_by(step).filter(|&t| t != hub).take(t_count).collect();
+    assert!(
+        targets.len() * GALLOP_RATIO <= row_len,
+        "target list too dense to exercise the gallop dispatch"
+    );
+    println!(
+        "# gallop workload: hub v{hub} row {row_len} entries x {} targets, {} reps",
+        targets.len(),
+        50_000
+    );
+    let reps = 50_000usize;
+    let t0 = Instant::now();
+    let mut sum_merge = 0u64;
+    for _ in 0..reps {
+        bits_against_merge(&g, Direction::Undirected, hub, 0, &targets, |t, b| {
+            sum_merge = sum_merge.wrapping_add(t as u64 + b as u64);
+        });
+    }
+    let merge_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut sum_gallop = 0u64;
+    for _ in 0..reps {
+        bits_against(&g, Direction::Undirected, hub, 0, &targets, |t, b| {
+            sum_gallop = sum_gallop.wrapping_add(t as u64 + b as u64);
+        });
+    }
+    let gallop_secs = t0.elapsed().as_secs_f64();
+    assert_eq!(sum_merge, sum_gallop, "gallop parity violated");
+    for (mode, secs) in [("merge", merge_secs), ("gallop", gallop_secs)] {
+        let mut j = Json::obj();
+        j.set("bench", "gallop")
+            .set("mode", mode)
+            .set("row_len", row_len)
+            .set("targets", targets.len())
+            .set("reps", reps)
+            .set("secs", secs)
+            .set("ns_per_call", secs * 1e9 / reps as f64);
+        println!("{}", j.to_string_compact());
+    }
+    let mut j = Json::obj();
+    j.set("bench", "gallop_speedup")
+        .set("row_len", row_len)
+        .set("targets", targets.len())
+        .set("gallop_speedup", merge_secs / gallop_secs.max(1e-12));
+    println!("{}", j.to_string_compact());
+
+    // ---- 3. counting wall-clock: csr vs hybrid sessions
     let sizes: &[MotifSize] =
         if opts.k3_only { &[MotifSize::Three] } else { &[MotifSize::Three, MotifSize::Four] };
     for &size in sizes {

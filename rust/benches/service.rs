@@ -14,10 +14,19 @@
 //! - `bench: "amortize"` — pooled vs throwaway: the same query stream
 //!   served by the pool vs paying `Session::load` per request, the
 //!   multi-graph analogue of the session-reuse ablation.
+//! - `bench: "concurrency"` — aggregate scoped-query throughput at
+//!   1/2/4/8 client threads over cloned service handles (sessions
+//!   pinned to 1 worker so the scaling measured is the service's, not
+//!   the scheduler's), plus the derived `concurrent_speedup` row.
+//! - `bench: "reader_latency_during_commits"` — mean scoped-read
+//!   latency with and without a concurrent writer committing delta
+//!   batches to the same graph: snapshot isolation says the two should
+//!   track each other.
 //!
 //! Defaults: 3 G(n, 0.01) directed graphs, n = 2000, 6 traffic rounds.
 //! CI shrinks it with `--n 600`.
 
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Instant;
 
 use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
@@ -99,7 +108,7 @@ fn main() {
 
     // budget sized for ~2 resident sessions: real traffic sees evictions
     let per = Session::load_with(&graphs[0].1, &SessionConfig::default()).memory_bytes();
-    let mut svc = VdmcService::new(ServiceConfig {
+    let svc = VdmcService::new(ServiceConfig {
         max_graphs: 0,
         byte_budget: per * 2 + per / 2,
         ..Default::default()
@@ -127,7 +136,7 @@ fn main() {
     for round in 0..opts.rounds {
         for (id, g) in &graphs {
             // a miss (evicted graph) is reloaded — that is the serving story
-            if !svc.pool().contains(id) {
+            if !svc.with_pool(|p| p.contains(id)) {
                 let (r, secs) = svc.handle_timed(load_req(id, g));
                 r.expect("reload");
                 load.push(secs);
@@ -211,5 +220,125 @@ fn main() {
         .set("throwaway_secs", throwaway_secs)
         .set("pooled_speedup", throwaway_secs / pooled_counts_secs.max(1e-9))
         .set("checksum", sink);
+    println!("{}", j.to_string_compact());
+
+    // -- concurrency: scoped-query throughput vs client threads ----------
+    // sessions pinned to 1 worker each, so the only parallelism is the
+    // client threads sharing pinned snapshots through cloned handles —
+    // this measures the service's concurrency, not the scheduler's
+    println!("# concurrency: scoped counts over cloned handles, 1-worker sessions");
+    let csvc = VdmcService::new(ServiceConfig {
+        session: SessionConfig { workers: 1, ..Default::default() },
+        max_graphs: 0,
+        byte_budget: 0,
+    });
+    for (id, g) in &graphs {
+        csvc.handle(load_req(id, g)).expect("load");
+    }
+    let per_client = 32usize;
+    let base = &q3;
+    let mut qps_by_clients: Vec<(usize, f64)> = Vec::new();
+    for clients in [1usize, 2, 4, 8] {
+        let t0 = Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let svc = csvc.clone();
+                let graphs = &graphs;
+                s.spawn(move || {
+                    for i in 0..per_client {
+                        let (id, g) = &graphs[(c + i) % graphs.len()];
+                        let seed = ((c * 131 + i * 17) % g.n()) as u32;
+                        let q = CountQuery {
+                            scope: Scope::Neighborhood { seeds: vec![seed], radius: 1 },
+                            ..base.clone()
+                        };
+                        svc.handle(Request::Count { graph: id.clone(), query: q })
+                            .expect("scoped count");
+                    }
+                });
+            }
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        let qps = (clients * per_client) as f64 / secs.max(1e-9);
+        qps_by_clients.push((clients, qps));
+        let mut j = Json::obj();
+        j.set("bench", "concurrency")
+            .set("clients", clients)
+            .set("requests", clients * per_client)
+            .set("secs", secs)
+            .set("throughput_qps", qps);
+        println!("{}", j.to_string_compact());
+    }
+    let serial_qps = qps_by_clients[0].1;
+    let (max_clients, max_qps) =
+        qps_by_clients.iter().copied().max_by(|a, b| a.1.total_cmp(&b.1)).unwrap();
+    let speedup = max_qps / serial_qps.max(1e-9);
+    let mut j = Json::obj();
+    j.set("bench", "concurrent_speedup")
+        .set("clients", max_clients)
+        .set("serial_qps", serial_qps)
+        .set("concurrent_qps", max_qps)
+        .set("speedup", speedup);
+    println!("{}", j.to_string_compact());
+    assert!(
+        speedup >= 2.0,
+        "8 concurrent clients over shared snapshots must beat serial by >= 2x \
+         (target 4x on 8 cores), got {speedup:.2}x"
+    );
+
+    // -- reader latency while a writer commits ---------------------------
+    // snapshot isolation: a reader pins an epoch and never waits on the
+    // writer's commit, so the busy mean should track the idle mean
+    let timed_read = |i: usize| -> f64 {
+        let (id, g) = &graphs[i % graphs.len()];
+        let q = CountQuery {
+            scope: Scope::Neighborhood { seeds: vec![(i * 23 % g.n()) as u32], radius: 1 },
+            ..base.clone()
+        };
+        let t = Instant::now();
+        csvc.handle(Request::Count { graph: id.clone(), query: q }).expect("scoped count");
+        t.elapsed().as_secs_f64()
+    };
+    let reads = 48usize;
+    let mut idle = Lat::default();
+    for i in 0..reads {
+        idle.push(timed_read(i));
+    }
+    let stop = AtomicBool::new(false);
+    let mut busy = Lat::default();
+    std::thread::scope(|s| {
+        s.spawn(|| {
+            // the writer: keep committing delta batches to every graph
+            // until the readers are done
+            let mut round = 0u32;
+            while !stop.load(Ordering::Relaxed) {
+                for (id, g) in &graphs {
+                    let n = g.n() as u32;
+                    let deltas: Vec<EdgeDelta> = (0..8u32)
+                        .map(|i| {
+                            let a = (i * 13 + round * 7 + 1) % n;
+                            let b = (i * 29 + round * 11 + 2) % n;
+                            EdgeDelta::insert(a, if a == b { (b + 1) % n } else { b })
+                        })
+                        .collect();
+                    csvc.handle(Request::ApplyEdges { graph: id.clone(), deltas })
+                        .expect("apply_edges");
+                }
+                round += 1;
+            }
+        });
+        for i in 0..reads {
+            busy.push(timed_read(i));
+        }
+        stop.store(true, Ordering::Relaxed);
+    });
+    let idle_mean = idle.total / idle.requests.max(1) as f64;
+    let busy_mean = busy.total / busy.requests.max(1) as f64;
+    let mut j = Json::obj();
+    j.set("bench", "reader_latency_during_commits")
+        .set("reads", reads)
+        .set("idle_mean_secs", idle_mean)
+        .set("busy_mean_secs", busy_mean)
+        .set("busy_over_idle", busy_mean / idle_mean.max(1e-9));
     println!("{}", j.to_string_compact());
 }

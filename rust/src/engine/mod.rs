@@ -45,7 +45,7 @@ pub use query::{
     MotifQueryBuilder, Output, QueryOutput, SampleSummary, Scope, TopVertices, VertexBits,
 };
 pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
-pub use session::{Session, SessionConfig};
+pub use session::{Session, SessionConfig, SessionSnapshot, SnapshotCell};
 pub use sink::{
     make_sink, CountEnumSink, CounterSink, EmitHandle, EnumSink, InstanceEnumSink, MotifEvent,
     SampleEnumSink, TopVerticesEnumSink, WorkerHandle,

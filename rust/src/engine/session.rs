@@ -41,6 +41,7 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -110,31 +111,140 @@ struct ScopeSets {
     roots: VertexBits,
 }
 
-/// A graph loaded for repeated motif queries and live edge updates:
-/// cached ordering, relabeled CSR, partition set, delta overlay and
-/// incrementally maintained counters.
-pub struct Session {
+/// An immutable, epoch-stamped capture of one session's complete read
+/// state: relabeled CSR + hub tier, vertex ordering, cached partitions,
+/// the frozen delta overlay and the maintained counters — everything a
+/// query touches, shared behind `Arc`s. Snapshots are never mutated:
+/// writers commit a *successor* snapshot into the session's
+/// [`SnapshotCell`] (copy-on-write of the overlay side-lists and the
+/// counters; the CSR, hub tier, ordering and partitions are shared
+/// untouched except across a compaction). Any number of readers may
+/// hold and query one snapshot concurrently — `Arc<SessionSnapshot>`
+/// is `Send + Sync` and pinning is one refcount bump — and a reader
+/// that pinned epoch `e` keeps answering from epoch `e` no matter how
+/// many batches commit meanwhile.
+pub struct SessionSnapshot {
     directed: bool,
     n: usize,
-    ordering: VertexOrdering,
+    /// Commit counter: 0 at load, +1 per committed write batch.
+    epoch: u64,
+    ordering: Arc<VertexOrdering>,
     /// Relabeled base graph (processing ids); patched by `overlay`.
-    h: Graph,
-    partitions: PartitionSet,
-    /// Pending edge patches over `h` (empty when no deltas applied since
-    /// the last compaction).
-    overlay: DeltaOverlay,
-    /// Incrementally maintained per-vertex counters (processing ids).
-    maintained: Vec<MaintainedCounts>,
-    /// Requested worker count (pre-clamping), reused on compaction.
+    h: Arc<Graph>,
+    partitions: Arc<PartitionSet>,
+    /// Edge patches frozen at this epoch (empty right after load or
+    /// compaction).
+    overlay: Arc<DeltaOverlay>,
+    /// Maintained per-vertex counters frozen at this epoch.
+    maintained: Arc<Vec<MaintainedCounts>>,
+    /// Requested worker count (pre-clamping), reused on rebuilds.
     workers: usize,
     max_units_per_item: usize,
+    setup_secs: f64,
+    /// Queries served, shared across every epoch of the session.
+    served: Arc<AtomicUsize>,
+}
+
+/// The shared head pointer of one session: the current snapshot plus
+/// weak references to superseded epochs readers may still be pinning.
+/// Readers call [`SnapshotCell::head`] (an `Arc` clone under a read
+/// lock held only for the pointer copy); writers commit a successor
+/// with a pointer swap. Readers therefore never wait on an in-flight
+/// write batch, and writers never wait on in-flight queries — those
+/// keep their pinned epoch alive by refcount, so eviction or
+/// compaction can't free state under a running query.
+pub struct SnapshotCell {
+    head: RwLock<Arc<SessionSnapshot>>,
+    superseded: Mutex<Vec<Weak<SessionSnapshot>>>,
+}
+
+impl SnapshotCell {
+    fn new(head: Arc<SessionSnapshot>) -> SnapshotCell {
+        SnapshotCell { head: RwLock::new(head), superseded: Mutex::new(Vec::new()) }
+    }
+
+    /// Pin the current head snapshot: one `Arc` clone.
+    pub fn head(&self) -> Arc<SessionSnapshot> {
+        self.head.read().expect("snapshot head lock poisoned").clone()
+    }
+
+    /// Publish `next` as the new head. The old head is remembered as a
+    /// weak reference: still-pinned readers keep it alive, and the cell
+    /// reports it in [`SnapshotCell::pinned_snapshots`] /
+    /// [`SnapshotCell::retained_bytes`] until the last pin drops.
+    fn commit(&self, next: Arc<SessionSnapshot>) {
+        let mut head = self.head.write().expect("snapshot head lock poisoned");
+        let old = std::mem::replace(&mut *head, next);
+        drop(head);
+        let mut superseded = self.superseded.lock().expect("superseded list poisoned");
+        superseded.retain(|w| w.strong_count() > 0);
+        superseded.push(Arc::downgrade(&old));
+        // `old` drops here: unpinned epochs die immediately
+    }
+
+    /// Epoch of the current head snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.head().epoch
+    }
+
+    /// Snapshots currently pinned outside this cell: in-flight readers
+    /// of the head plus still-alive superseded epochs.
+    pub fn pinned_snapshots(&self) -> usize {
+        let head_pins = {
+            let head = self.head.read().expect("snapshot head lock poisoned");
+            Arc::strong_count(&head).saturating_sub(1)
+        };
+        let old_pins = self
+            .superseded
+            .lock()
+            .expect("superseded list poisoned")
+            .iter()
+            .filter(|w| w.strong_count() > 0)
+            .count();
+        head_pins + old_pins
+    }
+
+    /// Bytes kept alive by superseded-but-pinned epochs beyond what the
+    /// head already accounts for: per alive epoch, the components not
+    /// shared with the head (epochs sharing state with *each other* are
+    /// each counted, so this is an upper bound).
+    pub fn retained_bytes(&self) -> usize {
+        let head = self.head();
+        self.superseded
+            .lock()
+            .expect("superseded list poisoned")
+            .iter()
+            .filter_map(Weak::upgrade)
+            .map(|s| s.retained_vs(&head))
+            .sum()
+    }
+
+    /// Total resident bytes: the head snapshot plus retained epochs —
+    /// the number the [`crate::service::SessionPool`] byte budget
+    /// meters, computable without the writer lock.
+    pub fn resident_bytes(&self) -> usize {
+        self.head().memory_bytes() + self.retained_bytes()
+    }
+}
+
+/// A graph loaded for repeated motif queries and live edge updates.
+///
+/// The session is a thin writer head over a [`SnapshotCell`]: every
+/// read (`query`/`count`/`maintained_counts`/...) pins the current
+/// [`SessionSnapshot`] and runs on it, and every write
+/// (`maintain`/`apply_edges`) prepares a successor snapshot
+/// copy-on-write and commits it with a pointer swap. Concurrent
+/// readers hold snapshots via [`Session::snapshot`] or the shared cell
+/// from [`Session::share`]; nothing a reader pinned can be freed under
+/// it.
+pub struct Session {
+    /// Shared head; [`Session::share`] hands it to concurrent readers.
+    cell: Arc<SnapshotCell>,
     compact_ratio: f64,
     /// Adjacency tier; the hybrid bitmap rows are rebuilt on compaction.
     adjacency: AdjacencyMode,
     hub_threshold: Option<usize>,
     compactions: usize,
-    setup_secs: f64,
-    served: AtomicUsize,
     /// Pool identity: which graph this session serves. `None` for
     /// hand-built sessions outside a [`crate::service::SessionPool`].
     graph_id: Option<String>,
@@ -147,7 +257,8 @@ impl Session {
     }
 
     /// Load: relabel, build the undirected/transpose views, partition.
-    /// All of it happens exactly once per session.
+    /// All of it happens exactly once per session; the result becomes
+    /// the epoch-0 snapshot.
     pub fn load_with(graph: &Graph, cfg: &SessionConfig) -> Session {
         let t0 = Instant::now();
         let n = graph.n();
@@ -163,22 +274,26 @@ impl Session {
         let workers = resolve_workers(cfg.workers);
         let max_units_per_item = cfg.max_units_per_item.max(1);
         let partitions = PartitionSet::build(&h, workers, max_units_per_item);
-        Session {
+        let snap = SessionSnapshot {
             directed: graph.directed,
             n,
-            ordering,
-            h,
-            partitions,
-            overlay: DeltaOverlay::new(),
-            maintained: Vec::new(),
+            epoch: 0,
+            ordering: Arc::new(ordering),
+            h: Arc::new(h),
+            partitions: Arc::new(partitions),
+            overlay: Arc::new(DeltaOverlay::new()),
+            maintained: Arc::new(Vec::new()),
             workers,
             max_units_per_item,
+            setup_secs: t0.elapsed().as_secs_f64(),
+            served: Arc::new(AtomicUsize::new(0)),
+        };
+        Session {
+            cell: Arc::new(SnapshotCell::new(Arc::new(snap))),
             compact_ratio: cfg.compact_ratio.max(0.0),
             adjacency: cfg.adjacency,
             hub_threshold: cfg.hub_threshold,
             compactions: 0,
-            setup_secs: t0.elapsed().as_secs_f64(),
-            served: AtomicUsize::new(0),
             graph_id: None,
         }
     }
@@ -193,38 +308,73 @@ impl Session {
         self.graph_id.as_deref()
     }
 
+    // ------------------------------------------------------- snapshots
+
+    /// Pin the current snapshot: an immutable, `Send + Sync` view every
+    /// read method also exists on. Queries against it are unaffected by
+    /// concurrent `apply_edges`/`maintain` commits.
+    pub fn snapshot(&self) -> Arc<SessionSnapshot> {
+        self.cell.head()
+    }
+
+    /// The shared snapshot cell — hand this to concurrent readers (the
+    /// service pins per-request snapshots through it without touching
+    /// the writer lock).
+    pub fn share(&self) -> Arc<SnapshotCell> {
+        self.cell.clone()
+    }
+
+    /// Epoch of the current head snapshot: 0 at load, +1 per committed
+    /// write batch.
+    pub fn epoch(&self) -> u64 {
+        self.cell.epoch()
+    }
+
+    /// Snapshots currently pinned by readers (head + superseded).
+    pub fn pinned_snapshots(&self) -> usize {
+        self.cell.pinned_snapshots()
+    }
+
+    /// Bytes kept alive by superseded-but-pinned epochs.
+    pub fn retained_bytes(&self) -> usize {
+        self.cell.retained_bytes()
+    }
+
+    // ------------------------------------------------------- accessors
+
     /// Vertex count of the loaded graph.
     pub fn n(&self) -> usize {
-        self.n
+        self.cell.head().n
     }
 
     /// Worker threads (= shard count) queries run with.
     pub fn workers(&self) -> usize {
-        self.partitions.n_shards()
+        self.cell.head().workers()
     }
 
     /// Wall-clock seconds the one-time setup took.
     pub fn setup_secs(&self) -> f64 {
-        self.setup_secs
+        self.cell.head().setup_secs
     }
 
-    /// Queries served so far.
+    /// Queries served so far (across all epochs).
     pub fn queries_served(&self) -> usize {
-        self.served.load(Ordering::Relaxed)
+        self.cell.head().queries_served()
     }
 
-    pub fn partitions(&self) -> &PartitionSet {
-        &self.partitions
+    /// The cached partition set of the current snapshot.
+    pub fn partitions(&self) -> Arc<PartitionSet> {
+        self.cell.head().partitions.clone()
     }
 
     /// Pending overlay side-list entries (0 when fully compacted).
     pub fn overlay_entries(&self) -> usize {
-        self.overlay.entries()
+        self.cell.head().overlay_entries()
     }
 
     /// Overlay occupancy relative to the base CSR.
     pub fn overlay_ratio(&self) -> f64 {
-        self.overlay.ratio(&self.h)
+        self.cell.head().overlay_ratio()
     }
 
     /// CSR rebuilds performed by `apply_edges` so far.
@@ -239,6 +389,314 @@ impl Session {
 
     /// Bytes held by the hybrid bitmap tier (0 under [`AdjacencyMode::Csr`]).
     pub fn tier_memory_bytes(&self) -> usize {
+        self.cell.head().tier_memory_bytes()
+    }
+
+    /// Bitmap hub rows of the relabeled undirected view.
+    pub fn hub_rows(&self) -> usize {
+        self.cell.head().hub_rows()
+    }
+
+    /// Total resident bytes of this session: the head snapshot (CSR
+    /// views + hub tier, overlay, partitions, maintained counters,
+    /// ordering) **plus** superseded epochs still pinned by readers.
+    /// This is the number the [`crate::service::SessionPool`] byte
+    /// budget meters — pinned history is resident memory too.
+    pub fn memory_bytes(&self) -> usize {
+        self.cell.resident_bytes()
+    }
+
+    /// The incrementally maintained counters of the current snapshot.
+    pub fn maintained(&self) -> Arc<Vec<MaintainedCounts>> {
+        self.cell.head().maintained.clone()
+    }
+
+    // ------------------------------------------------- delegated reads
+
+    /// Run one query — any [`Output`], any [`Scope`] — on the current
+    /// snapshot.
+    pub fn query(&self, query: &MotifQuery) -> Result<QueryOutput> {
+        self.cell.head().query(query)
+    }
+
+    /// As [`Session::query`], also returning the run report.
+    pub fn query_with_report(&self, query: &MotifQuery) -> Result<(QueryOutput, RunReport)> {
+        self.cell.head().query_with_report(query)
+    }
+
+    /// Count all k-motifs per vertex — the [`Output::Counts`] shorthand.
+    pub fn count(&self, query: &MotifQuery) -> Result<MotifCounts> {
+        self.cell.head().count(query)
+    }
+
+    /// As [`Session::count`], also returning the run report.
+    pub fn count_with_report(&self, query: &MotifQuery) -> Result<(MotifCounts, RunReport)> {
+        self.cell.head().count_with_report(query)
+    }
+
+    /// The closed `radius`-hop undirected neighborhood of `seeds`, in
+    /// ORIGINAL vertex ids (sorted), over the current snapshot.
+    pub fn neighborhood(&self, seeds: &[u32], radius: usize) -> Result<Vec<u32>> {
+        self.cell.head().neighborhood(seeds, radius)
+    }
+
+    /// Read a maintained counter back as [`MotifCounts`] (original
+    /// vertex ids). `None` when (size, direction) was never
+    /// [`Session::maintain`]ed.
+    pub fn maintained_counts(&self, size: MotifSize, direction: Direction) -> Option<MotifCounts> {
+        self.cell.head().maintained_counts(size, direction)
+    }
+
+    /// One maintained counter row for one ORIGINAL vertex id. `None`
+    /// when (size, direction) is not maintained or `v` is out of range.
+    /// (Readers holding a pinned [`SessionSnapshot`] can borrow the row
+    /// without this copy.)
+    pub fn maintained_vertex(
+        &self,
+        size: MotifSize,
+        direction: Direction,
+        v: u32,
+    ) -> Option<Vec<u64>> {
+        self.cell.head().maintained_vertex(size, direction, v).map(<[u64]>::to_vec)
+    }
+
+    /// Materialize the session's current graph (base + overlay) back
+    /// into ORIGINAL vertex ids — the reload-and-recount oracle used by
+    /// tests and `vdmc stream --verify`.
+    pub fn snapshot_graph(&self) -> Graph {
+        self.cell.head().snapshot_graph()
+    }
+
+    // -------------------------------------------------------- writers
+
+    /// Register an incrementally maintained per-vertex counter for (size,
+    /// direction): one full count now, per-edge deltas afterwards.
+    /// Idempotent for an already-maintained pair. Commits a new epoch.
+    pub fn maintain(&mut self, size: MotifSize, direction: Direction) -> Result<()> {
+        let head = self.cell.head();
+        if direction == Direction::Directed && !head.directed {
+            bail!("directed motif maintenance requested on an undirected graph");
+        }
+        if head.maintained.iter().any(|m| m.size() == size && m.direction() == direction) {
+            return Ok(());
+        }
+        let mapper = SlotMapper::new(size.k(), direction);
+        let (rows, instances) = if head.overlay.is_empty() {
+            head.full_count_proc(&*head.h, &head.partitions, size, direction, &mapper)
+        } else {
+            let view = OverlayView::new(&head.h, &head.overlay);
+            let partitions = PartitionSet::build(&view, head.workers, head.max_units_per_item);
+            head.full_count_proc(&view, &partitions, size, direction, &mapper)
+        };
+        let mut maintained = head.maintained.as_ref().clone();
+        maintained.push(MaintainedCounts::new(size, direction, rows, instances));
+        self.cell.commit(head.next(None, None, None, Some(maintained)));
+        Ok(())
+    }
+
+    /// As [`Session::maintain`], validating the whole query: maintenance
+    /// is Count-only and unscoped, so any other [`Output`] or [`Scope`]
+    /// is rejected with the typed [`CountOnlyError`] (reachable through
+    /// `anyhow::Error::downcast_ref`).
+    pub fn maintain_query(&mut self, query: &MotifQuery) -> Result<()> {
+        if !matches!(query.output, Output::Counts) {
+            return Err(CountOnlyError::new(format!("`{}` output", query.output.label())).into());
+        }
+        if !query.scope.is_all() {
+            return Err(CountOnlyError::new(format!("`{}` scope", query.scope.label())).into());
+        }
+        self.maintain(query.size, query.direction)
+    }
+
+    /// Apply a batch of edge insertions/deletions (original vertex ids)
+    /// without reloading: patch the overlay, re-enumerate only the motif
+    /// instances containing each changed edge, and fold the deltas into
+    /// every maintained counter. Ops on self-loops, out-of-range vertices,
+    /// already-present inserts and absent deletes are counted as skipped.
+    /// Compaction (CSR rebuild + partition refresh) triggers at the end of
+    /// a batch that pushed the overlay past `compact_ratio`.
+    ///
+    /// The whole batch is prepared **copy-on-write** — the overlay
+    /// side-lists and maintained counters are cloned, the CSR/hub
+    /// tier/ordering/partitions are not — and published as one new
+    /// epoch at the end; concurrent readers keep answering from the
+    /// pre-batch snapshot until the commit, and from their own pinned
+    /// epoch after it.
+    pub fn apply_edges(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaReport> {
+        let t0 = Instant::now();
+        let head = self.cell.head();
+        let mut report = DeltaReport::default();
+        let mut touched: HashSet<u32> = HashSet::new();
+        let n = head.n as u32;
+        let mut overlay = head.overlay.as_ref().clone();
+        let mut maintained = head.maintained.as_ref().clone();
+        for d in deltas {
+            if d.u == d.v || d.u >= n || d.v >= n {
+                report.skipped_invalid += 1;
+                continue;
+            }
+            let pu = head.ordering.new_of_old[d.u as usize];
+            let pv = head.ordering.new_of_old[d.v as usize];
+            let bits_pre = {
+                let view = OverlayView::new(&head.h, &overlay);
+                if head.directed {
+                    (view.out_has_edge(pu, pv) as u8) | ((view.out_has_edge(pv, pu) as u8) << 1)
+                } else if view.und_has_edge(pu, pv) {
+                    0b11
+                } else {
+                    0
+                }
+            };
+            match d.op {
+                DeltaOp::Insert => {
+                    if head.directed {
+                        if bits_pre & 0b01 != 0 {
+                            report.skipped_duplicate += 1;
+                            continue;
+                        }
+                        // patch first: the union state (und pair present)
+                        // is the post state for insertions
+                        overlay.insert_directed(&head.h, pu, pv, bits_pre == 0);
+                        let ch =
+                            EdgeChange { u: pu, v: pv, bits_pre, bits_post: bits_pre | 0b01 };
+                        reenumerate_into(
+                            &head, &overlay, &ch, &mut maintained, &mut report, &mut touched,
+                        );
+                    } else {
+                        if bits_pre != 0 {
+                            report.skipped_duplicate += 1;
+                            continue;
+                        }
+                        overlay.insert_undirected(&head.h, pu, pv);
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0, bits_post: 0b11 };
+                        reenumerate_into(
+                            &head, &overlay, &ch, &mut maintained, &mut report, &mut touched,
+                        );
+                    }
+                    report.inserted += 1;
+                }
+                DeltaOp::Delete => {
+                    if head.directed {
+                        if bits_pre & 0b01 == 0 {
+                            report.skipped_missing += 1;
+                            continue;
+                        }
+                        let bits_post = bits_pre & 0b10;
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre, bits_post };
+                        if bits_post == 0 {
+                            // the pair's last direction goes away: the pre
+                            // state is the union state — enumerate, THEN patch
+                            reenumerate_into(
+                                &head, &overlay, &ch, &mut maintained, &mut report, &mut touched,
+                            );
+                            overlay.delete_directed(&head.h, pu, pv, true);
+                        } else {
+                            // reciprocal edge remains: und structure intact
+                            overlay.delete_directed(&head.h, pu, pv, false);
+                            reenumerate_into(
+                                &head, &overlay, &ch, &mut maintained, &mut report, &mut touched,
+                            );
+                        }
+                    } else {
+                        if bits_pre == 0 {
+                            report.skipped_missing += 1;
+                            continue;
+                        }
+                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0b11, bits_post: 0 };
+                        reenumerate_into(
+                            &head, &overlay, &ch, &mut maintained, &mut report, &mut touched,
+                        );
+                        overlay.delete_undirected(&head.h, pu, pv);
+                    }
+                    report.deleted += 1;
+                }
+            }
+        }
+
+        // compaction folds the overlay into a rebuilt CSR; like every
+        // other mutation it lands in the successor snapshot — readers
+        // pinned to older epochs keep the pre-compaction CSR alive
+        let mut new_h: Option<Arc<Graph>> = None;
+        let mut new_partitions: Option<Arc<PartitionSet>> = None;
+        if !overlay.is_empty() && overlay.ratio(&head.h) > self.compact_ratio {
+            let mut rebuilt = overlay.compact(&head.h);
+            if self.adjacency == AdjacencyMode::Hybrid {
+                // the rebuilt CSR ships without bitmaps; re-tier it
+                rebuilt.enable_hybrid(self.hub_threshold);
+            }
+            new_partitions = Some(Arc::new(PartitionSet::build(
+                &rebuilt,
+                head.workers,
+                head.max_units_per_item,
+            )));
+            new_h = Some(Arc::new(rebuilt));
+            overlay = DeltaOverlay::new();
+            self.compactions += 1;
+            report.compactions += 1;
+        }
+        report.touched_vertices = touched.len();
+        report.overlay_entries = overlay.entries();
+        report.overlay_ratio = overlay.ratio(new_h.as_deref().unwrap_or_else(|| head.h.as_ref()));
+        if report.applied() > 0 || new_h.is_some() {
+            // skipped-only batches change nothing: no commit, no epoch.
+            // counters are only re-cloned when any exist; an empty list
+            // keeps sharing the head's empty Arc
+            let maintained = (!maintained.is_empty()).then_some(maintained);
+            self.cell.commit(head.next(new_h, new_partitions, Some(overlay), maintained));
+        }
+        report.elapsed_secs = t0.elapsed().as_secs_f64();
+        Ok(report)
+    }
+}
+
+impl SessionSnapshot {
+    /// Epoch stamp: 0 at load, +1 per committed write batch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Vertex count of the loaded graph.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether the loaded graph is directed.
+    pub fn directed(&self) -> bool {
+        self.directed
+    }
+
+    /// Worker threads (= shard count) queries run with.
+    pub fn workers(&self) -> usize {
+        self.partitions.n_shards()
+    }
+
+    /// Wall-clock seconds the one-time setup took.
+    pub fn setup_secs(&self) -> f64 {
+        self.setup_secs
+    }
+
+    /// Queries served so far (shared across epochs).
+    pub fn queries_served(&self) -> usize {
+        self.served.load(Ordering::Relaxed)
+    }
+
+    /// The cached partition set of this epoch.
+    pub fn partitions(&self) -> &PartitionSet {
+        &self.partitions
+    }
+
+    /// Pending overlay side-list entries frozen at this epoch.
+    pub fn overlay_entries(&self) -> usize {
+        self.overlay.entries()
+    }
+
+    /// Overlay occupancy relative to the base CSR.
+    pub fn overlay_ratio(&self) -> f64 {
+        self.overlay.ratio(self.h.as_ref())
+    }
+
+    /// Bytes held by the hybrid bitmap tier (0 under [`AdjacencyMode::Csr`]).
+    pub fn tier_memory_bytes(&self) -> usize {
         self.h.tier_memory_bytes()
     }
 
@@ -247,12 +705,13 @@ impl Session {
         self.h.hub_rows()
     }
 
-    /// Total resident bytes of this session: the relabeled CSR views and
-    /// hub-tier bitmaps, the pending delta overlay, the cached partition
-    /// items, and every maintained per-vertex counter. This is the number
-    /// the [`crate::service::SessionPool`] byte budget meters — it grows
-    /// as deltas accumulate and counters are registered, and shrinks on
-    /// compaction.
+    /// The maintained counters frozen at this epoch.
+    pub fn maintained(&self) -> &[MaintainedCounts] {
+        &self.maintained
+    }
+
+    /// Resident bytes of this snapshot: CSR views + hub tier, overlay,
+    /// partitions, maintained counters, ordering.
     pub fn memory_bytes(&self) -> usize {
         self.h.memory_bytes()
             + self.overlay.memory_bytes()
@@ -261,9 +720,48 @@ impl Session {
             + self.ordering.memory_bytes()
     }
 
-    /// The incrementally maintained counters.
-    pub fn maintained(&self) -> &[MaintainedCounts] {
-        &self.maintained
+    /// Bytes this snapshot holds that `head` does not share — what a
+    /// pinned superseded epoch costs on top of the head.
+    fn retained_vs(&self, head: &SessionSnapshot) -> usize {
+        let mut bytes = 0;
+        if !Arc::ptr_eq(&self.h, &head.h) {
+            bytes += self.h.memory_bytes();
+        }
+        if !Arc::ptr_eq(&self.partitions, &head.partitions) {
+            bytes += self.partitions.memory_bytes();
+        }
+        if !Arc::ptr_eq(&self.overlay, &head.overlay) {
+            bytes += self.overlay.memory_bytes();
+        }
+        if !Arc::ptr_eq(&self.maintained, &head.maintained) {
+            bytes += self.maintained.iter().map(|m| m.memory_bytes()).sum::<usize>();
+        }
+        bytes
+    }
+
+    /// Build the successor snapshot: epoch + 1, replacing only the given
+    /// components; everything else is shared by `Arc` clone.
+    fn next(
+        &self,
+        h: Option<Arc<Graph>>,
+        partitions: Option<Arc<PartitionSet>>,
+        overlay: Option<DeltaOverlay>,
+        maintained: Option<Vec<MaintainedCounts>>,
+    ) -> Arc<SessionSnapshot> {
+        Arc::new(SessionSnapshot {
+            directed: self.directed,
+            n: self.n,
+            epoch: self.epoch + 1,
+            ordering: self.ordering.clone(),
+            h: h.unwrap_or_else(|| self.h.clone()),
+            partitions: partitions.unwrap_or_else(|| self.partitions.clone()),
+            overlay: overlay.map(Arc::new).unwrap_or_else(|| self.overlay.clone()),
+            maintained: maintained.map(Arc::new).unwrap_or_else(|| self.maintained.clone()),
+            workers: self.workers,
+            max_units_per_item: self.max_units_per_item,
+            setup_secs: self.setup_secs,
+            served: self.served.clone(),
+        })
     }
 
     // ------------------------------------------------------------- queries
@@ -288,7 +786,7 @@ impl Session {
         let mapper = SlotMapper::new(query.size.k(), query.direction);
 
         let (mut out, metrics, queue_items, queue_units) = if self.overlay.is_empty() {
-            self.query_on(&self.h, &self.partitions, query, &mapper)?
+            self.query_on(&*self.h, &self.partitions, query, &mapper)?
         } else {
             let view = OverlayView::new(&self.h, &self.overlay);
             let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
@@ -540,7 +1038,7 @@ impl Session {
     pub fn neighborhood(&self, seeds: &[u32], radius: usize) -> Result<Vec<u32>> {
         let scope = Scope::Neighborhood { seeds: seeds.to_vec(), radius };
         let sets = if self.overlay.is_empty() {
-            self.resolve_scope(&self.h, &scope, 1)?
+            self.resolve_scope(&*self.h, &scope, 1)?
         } else {
             let view = OverlayView::new(&self.h, &self.overlay);
             self.resolve_scope(&view, &scope, 1)?
@@ -552,43 +1050,7 @@ impl Session {
         Ok(out)
     }
 
-    // ----------------------------------------------------------- streaming
-
-    /// Register an incrementally maintained per-vertex counter for (size,
-    /// direction): one full count now, per-edge deltas afterwards.
-    /// Idempotent for an already-maintained pair.
-    pub fn maintain(&mut self, size: MotifSize, direction: Direction) -> Result<()> {
-        if direction == Direction::Directed && !self.directed {
-            bail!("directed motif maintenance requested on an undirected graph");
-        }
-        if self.maintained.iter().any(|m| m.size() == size && m.direction() == direction) {
-            return Ok(());
-        }
-        let mapper = SlotMapper::new(size.k(), direction);
-        let (rows, instances) = if self.overlay.is_empty() {
-            self.full_count_proc(&self.h, &self.partitions, size, direction, &mapper)
-        } else {
-            let view = OverlayView::new(&self.h, &self.overlay);
-            let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
-            self.full_count_proc(&view, &partitions, size, direction, &mapper)
-        };
-        self.maintained.push(MaintainedCounts::new(size, direction, rows, instances));
-        Ok(())
-    }
-
-    /// As [`Session::maintain`], validating the whole query: maintenance
-    /// is Count-only and unscoped, so any other [`Output`] or [`Scope`]
-    /// is rejected with the typed [`CountOnlyError`] (reachable through
-    /// `anyhow::Error::downcast_ref`).
-    pub fn maintain_query(&mut self, query: &MotifQuery) -> Result<()> {
-        if !matches!(query.output, Output::Counts) {
-            return Err(CountOnlyError::new(format!("`{}` output", query.output.label())).into());
-        }
-        if !query.scope.is_all() {
-            return Err(CountOnlyError::new(format!("`{}` scope", query.scope.label())).into());
-        }
-        self.maintain(query.size, query.direction)
-    }
+    // ------------------------------------------------- streaming support
 
     /// One full, unscoped count in processing-id rows — the baseline a
     /// maintained counter starts from.
@@ -636,131 +1098,6 @@ impl Session {
         Some(&m.per_vertex()[pv * nc..(pv + 1) * nc])
     }
 
-    /// Apply a batch of edge insertions/deletions (original vertex ids)
-    /// without reloading: patch the overlay, re-enumerate only the motif
-    /// instances containing each changed edge, and fold the deltas into
-    /// every maintained counter. Ops on self-loops, out-of-range vertices,
-    /// already-present inserts and absent deletes are counted as skipped.
-    /// Compaction (CSR rebuild + partition refresh) triggers at the end of
-    /// a batch that pushed the overlay past `compact_ratio`.
-    pub fn apply_edges(&mut self, deltas: &[EdgeDelta]) -> Result<DeltaReport> {
-        let t0 = Instant::now();
-        let mut report = DeltaReport::default();
-        let mut touched: HashSet<u32> = HashSet::new();
-        let n = self.n as u32;
-        for d in deltas {
-            if d.u == d.v || d.u >= n || d.v >= n {
-                report.skipped_invalid += 1;
-                continue;
-            }
-            let pu = self.ordering.new_of_old[d.u as usize];
-            let pv = self.ordering.new_of_old[d.v as usize];
-            let bits_pre = {
-                let view = OverlayView::new(&self.h, &self.overlay);
-                if self.directed {
-                    (view.out_has_edge(pu, pv) as u8) | ((view.out_has_edge(pv, pu) as u8) << 1)
-                } else if view.und_has_edge(pu, pv) {
-                    0b11
-                } else {
-                    0
-                }
-            };
-            match d.op {
-                DeltaOp::Insert => {
-                    if self.directed {
-                        if bits_pre & 0b01 != 0 {
-                            report.skipped_duplicate += 1;
-                            continue;
-                        }
-                        // patch first: the union state (und pair present)
-                        // is the post state for insertions
-                        self.overlay.insert_directed(&self.h, pu, pv, bits_pre == 0);
-                        let ch =
-                            EdgeChange { u: pu, v: pv, bits_pre, bits_post: bits_pre | 0b01 };
-                        self.reenumerate(&ch, &mut report, &mut touched);
-                    } else {
-                        if bits_pre != 0 {
-                            report.skipped_duplicate += 1;
-                            continue;
-                        }
-                        self.overlay.insert_undirected(&self.h, pu, pv);
-                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0, bits_post: 0b11 };
-                        self.reenumerate(&ch, &mut report, &mut touched);
-                    }
-                    report.inserted += 1;
-                }
-                DeltaOp::Delete => {
-                    if self.directed {
-                        if bits_pre & 0b01 == 0 {
-                            report.skipped_missing += 1;
-                            continue;
-                        }
-                        let bits_post = bits_pre & 0b10;
-                        let ch = EdgeChange { u: pu, v: pv, bits_pre, bits_post };
-                        if bits_post == 0 {
-                            // the pair's last direction goes away: the pre
-                            // state is the union state — enumerate, THEN patch
-                            self.reenumerate(&ch, &mut report, &mut touched);
-                            self.overlay.delete_directed(&self.h, pu, pv, true);
-                        } else {
-                            // reciprocal edge remains: und structure intact
-                            self.overlay.delete_directed(&self.h, pu, pv, false);
-                            self.reenumerate(&ch, &mut report, &mut touched);
-                        }
-                    } else {
-                        if bits_pre == 0 {
-                            report.skipped_missing += 1;
-                            continue;
-                        }
-                        let ch = EdgeChange { u: pu, v: pv, bits_pre: 0b11, bits_post: 0 };
-                        self.reenumerate(&ch, &mut report, &mut touched);
-                        self.overlay.delete_undirected(&self.h, pu, pv);
-                    }
-                    report.deleted += 1;
-                }
-            }
-        }
-
-        if !self.overlay.is_empty() && self.overlay.ratio(&self.h) > self.compact_ratio {
-            self.h = self.overlay.compact(&self.h);
-            if self.adjacency == AdjacencyMode::Hybrid {
-                // the rebuilt CSR ships without bitmaps; re-tier it
-                self.h.enable_hybrid(self.hub_threshold);
-            }
-            self.partitions = PartitionSet::build(&self.h, self.workers, self.max_units_per_item);
-            self.compactions += 1;
-            report.compactions += 1;
-        }
-        report.touched_vertices = touched.len();
-        report.overlay_entries = self.overlay.entries();
-        report.overlay_ratio = self.overlay.ratio(&self.h);
-        report.elapsed_secs = t0.elapsed().as_secs_f64();
-        Ok(report)
-    }
-
-    fn reenumerate(
-        &mut self,
-        ch: &EdgeChange,
-        report: &mut DeltaReport,
-        touched: &mut HashSet<u32>,
-    ) {
-        if self.maintained.is_empty() {
-            return;
-        }
-        let view = OverlayView::new(&self.h, &self.overlay);
-        let stats = reenumerate_edge(
-            &view,
-            self.directed,
-            ch,
-            &mut self.maintained,
-            self.workers,
-            self.max_units_per_item,
-            touched,
-        );
-        report.reenumerated_units += stats.units;
-        report.reenumerated_sets += stats.sets;
-    }
-
     /// Materialize the session's current graph (base + overlay) back into
     /// ORIGINAL vertex ids — the reload-and-recount oracle used by tests
     /// and `vdmc stream --verify`.
@@ -794,6 +1131,35 @@ fn resolve_workers(requested: usize) -> usize {
     } else {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
     }
+}
+
+/// Re-enumerate the motif instances containing one changed edge and fold
+/// the deltas into `maintained` — the copy-on-write working set of an
+/// in-flight `apply_edges` batch (`head` supplies the shared base CSR and
+/// run parameters; `overlay` is the batch-local patched state).
+fn reenumerate_into(
+    head: &SessionSnapshot,
+    overlay: &DeltaOverlay,
+    ch: &EdgeChange,
+    maintained: &mut [MaintainedCounts],
+    report: &mut DeltaReport,
+    touched: &mut HashSet<u32>,
+) {
+    if maintained.is_empty() {
+        return;
+    }
+    let view = OverlayView::new(&head.h, overlay);
+    let stats = reenumerate_edge(
+        &view,
+        head.directed,
+        ch,
+        maintained,
+        head.workers,
+        head.max_units_per_item,
+        touched,
+    );
+    report.reenumerated_units += stats.units;
+    report.reenumerated_sets += stats.sets;
 }
 
 /// Zero the rows of vertices outside the scope member set (processing-id
@@ -1669,5 +2035,112 @@ mod tests {
         assert_eq!(report.reenumerated_units, 0);
         let after = session.maintained_counts(MotifSize::Three, Direction::Undirected).unwrap();
         assert_eq!(before.per_vertex, after.per_vertex);
+    }
+
+    // -------------------------------------------------------- snapshots
+
+    #[test]
+    fn snapshots_pin_epochs_under_writes() {
+        let g = generators::star(10);
+        let mut session = Session::load(&g);
+        assert_eq!(session.epoch(), 0);
+        assert_eq!(session.pinned_snapshots(), 0);
+
+        let q = MotifQuery { direction: Direction::Undirected, ..Default::default() };
+        let pinned = session.snapshot();
+        let before = pinned.count(&q).unwrap();
+
+        session.apply_edges(&[EdgeDelta::insert(1, 2)]).unwrap();
+        assert_eq!(session.epoch(), 1, "an applied batch commits one epoch");
+        assert_eq!(pinned.epoch(), 0, "the pinned snapshot stays on its epoch");
+        assert!(session.pinned_snapshots() >= 1, "the superseded epoch is pinned");
+
+        // the pinned reader still sees the pre-batch graph, bit-identical
+        let again = pinned.count(&q).unwrap();
+        assert_eq!(again.per_vertex, before.per_vertex);
+        assert_eq!(again.total_instances, before.total_instances);
+        // while the head moved on (the 0-1-2 path became a triangle)
+        let head = session.count(&q).unwrap();
+        assert_ne!(head.per_vertex, before.per_vertex, "head must see the new edge");
+
+        drop(pinned);
+        assert_eq!(session.pinned_snapshots(), 0, "dropping the pin frees the epoch");
+    }
+
+    #[test]
+    fn retained_bytes_meter_pinned_history() {
+        let g = generators::gnp_directed(50, 0.08, 3);
+        let mut session = Session::load_with(
+            &g,
+            &SessionConfig { workers: 2, compact_ratio: f64::INFINITY, ..Default::default() },
+        );
+        let deltas: Vec<EdgeDelta> =
+            (0..12u32).map(|i| EdgeDelta::insert(i, (i * 5 + 1) % 50)).collect();
+        session.apply_edges(&deltas).unwrap();
+        assert!(session.overlay_entries() > 0);
+
+        // pin the dirty epoch, then push another batch past it
+        let pinned = session.snapshot();
+        let head_only = pinned.memory_bytes();
+        let more: Vec<EdgeDelta> =
+            (12..24u32).map(|i| EdgeDelta::insert(i, (i * 7 + 2) % 50)).collect();
+        session.apply_edges(&more).unwrap();
+
+        assert!(session.retained_bytes() > 0, "pinned superseded overlay must be metered");
+        assert!(
+            session.memory_bytes() > head_only,
+            "pool-visible bytes include pinned history"
+        );
+        let with_pin = session.memory_bytes();
+        drop(pinned);
+        assert_eq!(session.retained_bytes(), 0);
+        assert!(session.memory_bytes() < with_pin, "freed history leaves the meter");
+    }
+
+    #[test]
+    fn skipped_only_batches_do_not_commit() {
+        let g = generators::star(8);
+        let mut session = Session::load(&g);
+        let report = session
+            .apply_edges(&[EdgeDelta::insert(3, 3), EdgeDelta::delete(2, 5)])
+            .unwrap();
+        assert_eq!(report.applied(), 0);
+        assert_eq!(session.epoch(), 0, "nothing changed, no epoch");
+    }
+
+    #[test]
+    fn maintain_commits_one_epoch() {
+        let g = generators::gnp_directed(30, 0.1, 8);
+        let mut session = Session::load(&g);
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        assert_eq!(session.epoch(), 1);
+        // idempotent re-registration does not commit
+        session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+        assert_eq!(session.epoch(), 1);
+        // a pinned pre-maintain snapshot has no counter; the head does
+        let head = session.snapshot();
+        assert_eq!(head.maintained().len(), 1);
+        assert!(head.maintained_counts(MotifSize::Three, Direction::Directed).is_some());
+    }
+
+    #[test]
+    fn concurrent_readers_on_shared_snapshots() {
+        let g = generators::barabasi_albert(80, 3, 6);
+        let session =
+            Session::load_with(&g, &SessionConfig { workers: 1, ..Default::default() });
+        let snap = session.snapshot();
+        let q = MotifQuery { direction: Direction::Undirected, ..Default::default() };
+        let want = snap.count(&q).unwrap();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let snap = snap.clone();
+                let q = q.clone();
+                let want = &want;
+                s.spawn(move || {
+                    let got = snap.count(&q).unwrap();
+                    assert_eq!(got.per_vertex, want.per_vertex);
+                });
+            }
+        });
     }
 }

@@ -132,6 +132,17 @@ pub trait GraphProbe {
     fn fast_bits(&self, center: u32, v: u32) -> DirBits {
         (self.out_has_edge(center, v) as u8) | ((self.out_has_edge(v, center) as u8) << 1)
     }
+
+    /// The raw sorted undirected row of `v` above `after`, when the
+    /// surface can expose one as a plain slice — the probe layer's
+    /// galloping merge binary-searches it directly instead of stepping
+    /// an iterator. `None` (the default, and the overlay's answer for
+    /// patched rows) routes callers to the generic merge path; it never
+    /// affects results.
+    #[inline]
+    fn und_slice_above(&self, _v: u32, _after: u32) -> Option<&[u32]> {
+        None
+    }
 }
 
 impl GraphProbe for Graph {
@@ -198,6 +209,11 @@ impl GraphProbe for Graph {
     #[inline]
     fn is_und_hub(&self, v: u32) -> bool {
         self.und.is_hub(v)
+    }
+
+    #[inline]
+    fn und_slice_above(&self, v: u32, after: u32) -> Option<&[u32]> {
+        Some(self.und.neighbors_above(v, after))
     }
 
     #[inline]

@@ -109,18 +109,23 @@
 //! Serving **many graphs from one process** goes through the [`service`]
 //! layer instead of hand-held sessions: a [`service::VdmcService`] owns
 //! an LRU [`service::SessionPool`] (entry cap + byte budget over
-//! `Session::memory_bytes`) and answers the unified typed
+//! resident session bytes) and answers the unified typed
 //! [`service::Request`]s — `LoadGraph`, `Count` (full or scoped),
 //! `Instances`, `Sample`, `VertexCounts` (the paper's per-vertex motif
 //! vectors as O(classes) row reads, rows from a vertex list or a seed
 //! neighborhood), `ApplyEdges`, `Maintain` (Count-only), `Evict`,
-//! `Stats`. `vdmc serve` exposes exactly this API as a JSON-lines
-//! daemon on stdin/stdout:
+//! `Stats`. Service handles are `Clone + Send + Sync` and cheap to
+//! clone (an `Arc` bump): hold one per client thread and call
+//! `handle(&self)` concurrently — reads run on pinned immutable
+//! snapshots while writers commit new epochs, so readers never block
+//! writers and vice versa. `vdmc serve` exposes exactly this API as a
+//! JSON-lines daemon over stdin/stdout or TCP (`--tcp`, one thread per
+//! client):
 //!
 //! ```no_run
 //! use vdmc::service::{GraphSource, Request, Response, VdmcService};
 //!
-//! let mut svc = VdmcService::with_defaults();
+//! let svc = VdmcService::with_defaults();
 //! svc.handle(Request::LoadGraph {
 //!     graph: "toy".into(),
 //!     source: GraphSource::Edges { n: 3, edges: vec![(0, 1), (1, 2), (2, 0)] },

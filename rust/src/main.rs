@@ -7,14 +7,15 @@
 //!              to a vertex set / seed neighborhood)
 //!   sample     per-class reservoir sample of motif instances
 //!   stream     replay an edge timeline incrementally over a live session
-//!   serve      resident multi-graph daemon: JSONL requests on stdin
+//!   serve      resident multi-graph daemon: JSONL over stdin or TCP
+//!              (--tcp, thread per client, shared snapshot-isolated pool)
 //!   validate   Fig. 3 experiment: G(n,p) counts vs Eq. 7.4 theory
 //!   toolbox    Section 10 measures (k-core, pagerank, ...)
 //!   info       graph statistics
 //!   artifacts  check/compile the PJRT artifacts and print the manifest
 
 use std::fs::File;
-use std::io::{BufRead as _, BufWriter, Write as _};
+use std::io::{BufWriter, Write as _};
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
@@ -26,7 +27,7 @@ use vdmc::engine::{
 use vdmc::graph::{generators, io};
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
-use vdmc::service::{wire, ServiceConfig, VdmcService};
+use vdmc::service::{serve_connection, serve_tcp, ServeOptions, ServiceConfig, VdmcService};
 use vdmc::stream;
 use vdmc::theory;
 use vdmc::toolbox;
@@ -64,7 +65,12 @@ stdout line (blank lines and #-comments skipped; "id" is echoed back):
 a scope ("vertices", or "seeds"+"radius") restricts count/instances/
 sample to instances touching it — filtered at the work-unit level, so
 scoped queries do neighborhood-local work. a failed request answers
-{"ok":false,...} and the daemon keeps serving."#;
+{"ok":false,...} and the daemon keeps serving.
+
+with --tcp ADDR the same protocol runs over TCP, one thread per client
+against one shared snapshot-isolated pool (reads never block writes).
+closing the daemon's stdin drains every connection and exits; in both
+modes every in-flight response is written before shutdown."#;
 
 fn app() -> App {
     App {
@@ -128,7 +134,7 @@ fn app() -> App {
             .flag("verify", "recount from scratch at the end and compare"),
             engine_opts(Command::new(
                 "serve",
-                "resident multi-graph daemon: JSONL requests on stdin, responses on stdout",
+                "resident multi-graph daemon: JSONL requests over stdin or TCP",
             ))
             .opt("max-graphs", "session pool entry cap (0 = unbounded)", Some("8"))
             .opt(
@@ -136,6 +142,9 @@ fn app() -> App {
                 "session pool byte budget in MiB over resident session memory (0 = unbounded)",
                 Some("0"),
             )
+            .opt("tcp", "listen on this address (e.g. 127.0.0.1:7171) instead of stdin", None)
+            .opt("inflight", "responses queued per client before its handler blocks", Some("64"))
+            .opt("max-clients", "concurrent TCP clients (0 = unbounded)", Some("0"))
             .extra(SERVE_EXAMPLES),
             Command::new("validate", "Fig. 3: G(n,p) measurement vs Eq. 7.4 theory")
                 .opt("n", "vertex count", Some("1000"))
@@ -585,7 +594,7 @@ fn cmd_stream(args: &Args) -> anyhow::Result<()> {
         let mut j = report.to_json();
         j.set("batch", i);
         let mut totals = Json::obj();
-        for m in s.maintained() {
+        for m in s.maintained().iter() {
             let dir = m.direction().label();
             totals.set(&format!("k{}_{dir}", m.size().k()), m.instances());
         }
@@ -627,57 +636,70 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let session = parse_engine_config(args)?;
     let max_graphs: usize = args.req("max-graphs").map_err(anyhow::Error::msg)?;
     let budget_mb: usize = args.req("byte-budget-mb").map_err(anyhow::Error::msg)?;
-    let mut svc = VdmcService::new(ServiceConfig {
+    let opts = ServeOptions {
+        inflight: args.req("inflight").map_err(anyhow::Error::msg)?,
+        max_clients: args.req("max-clients").map_err(anyhow::Error::msg)?,
+    };
+    let svc = VdmcService::new(ServiceConfig {
         session,
         max_graphs,
         byte_budget: budget_mb << 20,
     });
-    eprintln!(
-        "vdmc serve: pool caps {} graphs / {} MiB (0 = unbounded); one JSON request per line",
-        max_graphs, budget_mb,
-    );
 
-    let stdin = std::io::stdin();
-    let mut out = std::io::stdout().lock();
-    let mut served = 0u64;
-    for line in stdin.lock().lines() {
-        let line = line?;
-        let line = line.trim();
-        if line.is_empty() || line.starts_with('#') {
-            continue;
-        }
-        let reply = match wire::decode_request(line) {
-            Ok((req, id)) => {
-                let op = req.op();
-                let (result, secs) = svc.handle_timed(req);
-                match result {
-                    Ok(resp) => wire::encode_response(&resp, id, secs),
-                    Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+    match args.get("tcp") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)?;
+            let local = listener.local_addr()?;
+            eprintln!(
+                "vdmc serve: listening on {local}; pool caps {max_graphs} graphs / \
+                 {budget_mb} MiB (0 = unbounded); {} responses in flight per client; \
+                 close stdin to drain and exit",
+                opts.inflight,
+            );
+            // stdin EOF is the drain signal: the accept loop stops, every
+            // connection's read side is shut down, in-flight responses
+            // flush, and serve_tcp returns once all clients are joined
+            let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+            let flag = std::sync::Arc::clone(&shutdown);
+            std::thread::spawn(move || {
+                let mut sink = String::new();
+                loop {
+                    sink.clear();
+                    match std::io::stdin().read_line(&mut sink) {
+                        Ok(0) | Err(_) => break,
+                        Ok(_) => {}
+                    }
                 }
-            }
-            // best-effort id/op echo so the client can correlate the
-            // failure even when the request never decoded
-            Err(e) => {
-                let j = Json::parse(line).ok();
-                let id = j.as_ref().and_then(|j| j.get("id")).and_then(Json::as_u64);
-                let op = j.as_ref().and_then(|j| j.get("op")).and_then(Json::as_str).map(String::from);
-                wire::encode_error(op.as_deref(), id, &e)
-            }
-        };
-        // one response per request, flushed immediately: clients pipeline
-        writeln!(out, "{reply}")?;
-        out.flush()?;
-        served += 1;
+                flag.store(true, std::sync::atomic::Ordering::SeqCst);
+            });
+            let summary = serve_tcp(&svc, listener, &opts, &shutdown)?;
+            eprintln!(
+                "vdmc serve: drained {} client(s) / {} request(s)",
+                summary.clients, summary.requests,
+            );
+        }
+        None => {
+            eprintln!(
+                "vdmc serve: pool caps {max_graphs} graphs / {budget_mb} MiB \
+                 (0 = unbounded); one JSON request per line",
+            );
+            let stdin = std::io::stdin();
+            let served = serve_connection(&svc, stdin.lock(), &mut std::io::stdout(), &opts)?;
+            eprintln!("vdmc serve: stdin closed after {served} request(s)");
+        }
     }
-    let stats = svc.pool().stats();
+
+    let stats = svc.with_pool(|p| p.stats());
     eprintln!(
-        "vdmc serve: stdin closed after {served} request(s); pool {} resident / {} bytes, \
-         {} hits / {} misses, {} evictions",
+        "vdmc serve: pool {} resident / {} bytes ({} retained by pinned epochs), \
+         {} hits / {} misses, {} evictions ({} deferred)",
         stats.entries,
         stats.resident_bytes,
+        stats.retained_bytes,
         stats.hits,
         stats.misses,
         stats.evictions(),
+        stats.evictions_deferred,
     );
     Ok(())
 }

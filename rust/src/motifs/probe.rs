@@ -205,12 +205,44 @@ impl<I: Iterator<Item = u32>> Iterator for MergedNeighbors<I> {
     }
 }
 
+/// Row-to-target length ratio beyond which [`bits_against`] abandons the
+/// two-pointer merge for one-sided binary-search galloping: walking a
+/// hub's multi-thousand-entry row to locate a handful of targets touches
+/// every entry, while galloping touches O(|targets| · log |row|).
+pub const GALLOP_RATIO: usize = 32;
+
 /// For every `target` (sorted ascending), report the (center, target)
-/// direction bits — 0 when non-adjacent — by merging the center's rows
-/// against the target list. Replaces one binary search per pair with a
-/// two-pointer walk: O(d_center + |targets|) total.
+/// direction bits — 0 when non-adjacent. Dispatches on the row shape:
+/// hub×tail pairs (`|row| / |targets| >= `[`GALLOP_RATIO`], and the
+/// surface exposes the raw row via [`GraphProbe::und_slice_above`]) use
+/// one-sided exponential + binary search through the long row; anything
+/// else takes the [`bits_against_merge`] two-pointer walk. Both paths
+/// are bit-identical — `property_tiers.rs` holds them to that.
 #[inline]
 pub fn bits_against<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    center: u32,
+    after: u32,
+    targets: &[u32],
+    f: impl FnMut(u32, DirBits),
+) {
+    if !targets.is_empty() {
+        if let Some(row) = g.und_slice_above(center, after) {
+            if targets.len() * GALLOP_RATIO <= row.len() {
+                bits_against_gallop(g, dir, center, row, targets, f);
+                return;
+            }
+        }
+    }
+    bits_against_merge(g, dir, center, after, targets, f)
+}
+
+/// The two-pointer strategy behind [`bits_against`]: merge the center's
+/// rows against the target list, O(d_center + |targets|) total. Public so
+/// the hotpath microbench can race it against the galloping path.
+#[inline]
+pub fn bits_against_merge<G: GraphProbe>(
     g: &G,
     dir: Direction,
     center: u32,
@@ -235,6 +267,40 @@ pub fn bits_against<G: GraphProbe>(
     }
 }
 
+/// Galloping strategy for long-row × short-target-list shapes: per target
+/// an exponential probe from the previous hit position bounds a binary
+/// search window, so the long row is never walked element-by-element.
+/// Direction bits of hits come from the tiered pair probes with the
+/// undirected membership already settled.
+fn bits_against_gallop<G: GraphProbe>(
+    g: &G,
+    dir: Direction,
+    center: u32,
+    row: &[u32],
+    targets: &[u32],
+    mut f: impl FnMut(u32, DirBits),
+) {
+    let mut base = 0usize;
+    for &t in targets {
+        // exponential probe: find an upper bound for t past `base`
+        let mut step = 1usize;
+        let mut hi = base;
+        while hi < row.len() && row[hi] < t {
+            hi += step;
+            step <<= 1;
+        }
+        let hi = hi.min(row.len());
+        let idx = base + row[base..hi].partition_point(|&w| w < t);
+        if row.get(idx) == Some(&t) {
+            f(t, pair_bits(g, dir, center, t, Some(true)));
+            base = idx + 1;
+        } else {
+            f(t, 0);
+            base = idx;
+        }
+    }
+}
+
 /// Append the (center, t) direction bits of every `t` in `targets`
 /// (sorted ascending, all > `after`) to `out` — the frontier-local cache
 /// filler of [`super::bfs3::EnumCtx`]. Picks the cheapest strategy the
@@ -242,8 +308,9 @@ pub fn bits_against<G: GraphProbe>(
 /// bitmap hub row (O(1) word tests) or when the target list is much
 /// shorter than the row a merge would walk (the regime where per-pair
 /// probes measurably beat merges — EXPERIMENTS.md §Perf iteration 3);
-/// one [`bits_against`] two-pointer merge otherwise. All strategies
-/// produce bit-identical results; `out` is appended to, not cleared.
+/// one [`bits_against`] walk otherwise (which itself gallops on hub×tail
+/// row shapes). All strategies produce bit-identical results; `out` is
+/// appended to, not cleared.
 #[inline]
 pub fn fill_pair_bits<G: GraphProbe>(
     g: &G,
@@ -374,6 +441,39 @@ mod tests {
                 // reports 0 there (no self loops)
                 assert_eq!(got, want, "center {center} after {after}");
             }
+        }
+    }
+
+    #[test]
+    fn gallop_bits_identical_to_merge_on_hub_rows() {
+        use crate::graph::generators;
+        // undirected star hub: row length n-1, a tiny target list forces
+        // the gallop dispatch; the merge path is the oracle
+        let star = generators::star(4000);
+        let targets: Vec<u32> = (1..4000u32).step_by(61).collect();
+        assert!(targets.len() * GALLOP_RATIO <= star.und.degree(0));
+        let mut fast = Vec::new();
+        bits_against(&star, Direction::Undirected, 0, 0, &targets, |t, b| fast.push((t, b)));
+        let mut slow = Vec::new();
+        bits_against_merge(&star, Direction::Undirected, 0, 0, &targets, |t, b| {
+            slow.push((t, b))
+        });
+        assert_eq!(fast, slow);
+
+        // directed hub with gaps: 0 -> even vertices only, so odd targets
+        // miss — both hit and miss outcomes must stay identical
+        let edges: Vec<(u32, u32)> = (1..2000u32).map(|v| (0, 2 * v)).collect();
+        let g = Graph::from_edges(4000, &edges, true);
+        let targets: Vec<u32> = (1..4000u32).step_by(97).collect(); // mixed parity
+        assert!(targets.len() * GALLOP_RATIO <= g.und.degree(0));
+        for dir in [Direction::Directed, Direction::Undirected] {
+            let mut fast = Vec::new();
+            bits_against(&g, dir, 0, 0, &targets, |t, b| fast.push((t, b)));
+            let mut slow = Vec::new();
+            bits_against_merge(&g, dir, 0, 0, &targets, |t, b| slow.push((t, b)));
+            assert_eq!(fast, slow, "{dir:?}");
+            assert!(fast.iter().any(|&(_, b)| b == 0), "absent targets covered");
+            assert!(fast.iter().any(|&(_, b)| b != 0), "present targets covered");
         }
     }
 

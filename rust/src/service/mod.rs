@@ -1,22 +1,32 @@
-//! Service layer: one resident process, many graphs, one typed API.
+//! Service layer: one resident process, many graphs, many clients, one
+//! typed API.
 //!
 //! The engine below this layer answers one graph per [`Session`]; the
 //! ROADMAP's north star is a deployment serving per-vertex motif queries
 //! for *many* graphs under heavy traffic. [`VdmcService`] is that
-//! façade:
+//! façade — and it is concurrent: handles are `Clone + Send + Sync`,
+//! one per client thread, all sharing one pool:
 //!
 //! ```text
-//!            Request (typed / JSONL)                Response
-//!                 │                                     ▲
-//!                 ▼                                     │
-//!  VdmcService::handle ── routes by graph id ── per-request timing
-//!                 │
-//!                 ▼
-//!        SessionPool (LRU: entry cap + byte budget, PoolStats)
-//!                 │
-//!                 ▼
-//!   Session (cached ordering/CSR/hub tier/partitions + overlay)
+//!   client 1   client 2   ...   client k      (threads / TCP conns)
+//!      │           │                │
+//!      ▼           ▼                ▼
+//!  VdmcService::handle(&self) ── routes by graph id, times requests
+//!      │
+//!      ▼
+//!  SessionPool (Mutex'd LRU: entry cap + byte budget, PoolStats)
+//!      │ pin() ──────────────► Arc<SessionSnapshot>  (readers)
+//!      │ writer() ───────────► Arc<Mutex<Session>>   (writers)
+//!      ▼
+//!  SnapshotCell (epoch-stamped immutable snapshots, COW commits)
 //! ```
+//!
+//! The pool lock is held only to *route* — pin a snapshot or check out
+//! a writer handle — never across an enumeration. Reads run on the
+//! pinned [`SessionSnapshot`] (immutable, shared); writes lock that
+//! graph's [`Session`] head and commit a new epoch without touching
+//! pinned readers. Readers never block writers; writers never block
+//! readers; two graphs never block each other.
 //!
 //! - [`api`] — the [`Request`]/[`Response`] enums: `LoadGraph`, `Count`
 //!   (full or scoped), `Instances` (materialized instance lists),
@@ -26,11 +36,12 @@
 //!   `ApplyEdges`, `Maintain` (Count-only, typed rejection otherwise),
 //!   `Evict`, `Stats`.
 //! - [`pool`] — [`SessionPool`]: LRU keyed by graph id, bounded by entry
-//!   count and a byte budget computed from CSR + hub-tier + overlay +
-//!   counter memory ([`Session::memory_bytes`]), metered by
-//!   [`PoolStats`].
-//! - [`wire`] — the JSON-lines codec `vdmc serve` speaks on
-//!   stdin/stdout.
+//!   count and a byte budget over resident bytes (head snapshot plus
+//!   superseded-but-pinned epochs), metered by [`PoolStats`]; busy
+//!   entries (pinned or checked out) are never evicted.
+//! - [`wire`] — the JSON-lines codec `vdmc serve` speaks.
+//! - [`serve`] — the transports: single-connection JSONL loops
+//!   (stdin/stdout) and the thread-per-client TCP listener.
 //!
 //! Every later ROADMAP item (GPU sink, NUMA pinning, real-world
 //! datasets) plugs in *below* this API: clients keep sending the same
@@ -38,16 +49,21 @@
 
 pub mod api;
 pub mod pool;
+pub mod serve;
 pub mod wire;
 
 pub use api::{GraphSource, Request, Response, VertexRow};
-pub use pool::{PoolStats, SessionPool};
+pub use pool::{GraphStat, OpLatency, PoolStats, SessionPool};
+pub use serve::{serve_connection, serve_tcp, ServeOptions};
 
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::{MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig};
+use crate::engine::{
+    MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig, SessionSnapshot,
+};
 use crate::graph::csr::Graph;
 use crate::graph::io;
 
@@ -58,7 +74,7 @@ pub struct ServiceConfig {
     pub session: SessionConfig,
     /// Pool entry cap (0 = unbounded).
     pub max_graphs: usize,
-    /// Pool byte budget over [`Session::memory_bytes`] (0 = unbounded).
+    /// Pool byte budget over resident session bytes (0 = unbounded).
     pub byte_budget: usize,
 }
 
@@ -68,18 +84,27 @@ impl Default for ServiceConfig {
     }
 }
 
-/// The multi-graph façade: owns a [`SessionPool`] and routes every
-/// [`Request`] to the right pooled session.
+/// The multi-graph façade: a cheap-to-clone handle onto one shared
+/// [`SessionPool`]. Clone it freely — one handle per client thread is
+/// the intended shape (`Clone + Send + Sync`); all clones route into
+/// the same pool and see the same graphs.
+#[derive(Clone)]
 pub struct VdmcService {
+    inner: Arc<ServiceInner>,
+}
+
+struct ServiceInner {
     session_cfg: SessionConfig,
-    pool: SessionPool,
+    pool: Mutex<SessionPool>,
 }
 
 impl VdmcService {
     pub fn new(cfg: ServiceConfig) -> VdmcService {
         VdmcService {
-            session_cfg: cfg.session,
-            pool: SessionPool::new(cfg.max_graphs, cfg.byte_budget),
+            inner: Arc::new(ServiceInner {
+                session_cfg: cfg.session,
+                pool: Mutex::new(SessionPool::new(cfg.max_graphs, cfg.byte_budget)),
+            }),
         }
     }
 
@@ -88,22 +113,39 @@ impl VdmcService {
         VdmcService::new(ServiceConfig::default())
     }
 
-    /// The pool, for metrics inspection.
-    pub fn pool(&self) -> &SessionPool {
-        &self.pool
+    /// Run `f` under the pool lock — for metrics inspection. Request
+    /// routing uses the same lock internally; keep `f` short.
+    pub fn with_pool<T>(&self, f: impl FnOnce(&SessionPool) -> T) -> T {
+        f(&self.lock_pool())
     }
 
-    fn session(&mut self, id: &str) -> Result<&mut Session> {
-        self.pool
-            .get(id)
+    fn lock_pool(&self) -> MutexGuard<'_, SessionPool> {
+        self.inner.pool.lock().expect("service pool lock poisoned")
+    }
+
+    /// Pin the current snapshot of `id`. Holds the pool lock only for
+    /// the lookup; the query then runs lock-free on the snapshot.
+    fn pin(&self, id: &str) -> Result<Arc<SessionSnapshot>> {
+        self.lock_pool()
+            .pin(id)
+            .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+    }
+
+    /// Check out the writer handle of `id` (see [`SessionPool::writer`]).
+    fn writer(&self, id: &str) -> Result<Arc<Mutex<Session>>> {
+        self.lock_pool()
+            .writer(id)
             .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
     }
 
     /// Handle one request. Errors are per-request: the service stays
-    /// usable after a failure.
-    pub fn handle(&mut self, req: Request) -> Result<Response> {
+    /// usable after a failure. Safe to call from many threads at once —
+    /// reads share pinned snapshots, writes serialize per graph.
+    pub fn handle(&self, req: Request) -> Result<Response> {
         match req {
             Request::LoadGraph { graph, source, directed } => {
+                // build the session OUTSIDE the pool lock: a slow load
+                // must not stall requests against other graphs
                 let g = match source {
                     GraphSource::Path(path) => io::load_edge_list(&path, directed)?,
                     GraphSource::Edges { n, edges } => {
@@ -115,10 +157,12 @@ impl VdmcService {
                         Graph::from_edges(n, &edges, directed)
                     }
                 };
-                let session = Session::load_with(&g, &self.session_cfg);
+                let session = Session::load_with(&g, &self.inner.session_cfg);
                 let memory_bytes = session.memory_bytes();
-                let replaced = self.pool.contains(&graph);
-                let evicted = self.pool.insert(&graph, session);
+                let mut pool = self.lock_pool();
+                let replaced = pool.contains(&graph);
+                let evicted = pool.insert(&graph, session);
+                drop(pool);
                 Ok(Response::Loaded {
                     graph,
                     n: g.n(),
@@ -130,16 +174,16 @@ impl VdmcService {
                 })
             }
             Request::Count { graph, query } => {
-                let session = self.session(&graph)?;
-                let (counts, report) = session.count_with_report(&query)?;
+                let snap = self.pin(&graph)?;
+                let (counts, report) = snap.count_with_report(&query)?;
                 Ok(Response::Counted { graph, counts, report })
             }
             Request::Instances { graph, query } => {
                 if !matches!(query.output, Output::Instances { .. }) {
                     bail!("instances request needs Output::Instances, got {}", query.output.label());
                 }
-                let session = self.session(&graph)?;
-                let (out, report) = session.query_with_report(&query)?;
+                let snap = self.pin(&graph)?;
+                let (out, report) = snap.query_with_report(&query)?;
                 match out {
                     QueryOutput::Instances(list) => Ok(Response::Instances { graph, list, report }),
                     other => unreachable!("instances output produced {}", other.label()),
@@ -149,22 +193,22 @@ impl VdmcService {
                 if !matches!(query.output, Output::Sample { .. }) {
                     bail!("sample request needs Output::Sample, got {}", query.output.label());
                 }
-                let session = self.session(&graph)?;
-                let (out, report) = session.query_with_report(&query)?;
+                let snap = self.pin(&graph)?;
+                let (out, report) = snap.query_with_report(&query)?;
                 match out {
                     QueryOutput::Sample(sample) => Ok(Response::Sampled { graph, sample, report }),
                     other => unreachable!("sample output produced {}", other.label()),
                 }
             }
             Request::VertexCounts { graph, size, direction, scope } => {
-                let session = self.session(&graph)?;
+                let snap = self.pin(&graph)?;
                 // resolve + validate the row set BEFORE maintain(): a bad
                 // request must not grow the session (and dodge the
                 // byte re-metering below)
-                let n = session.n();
+                let n = snap.n();
                 let vertices: Vec<u32> = match scope {
                     Scope::Vertices(vs) => vs,
-                    Scope::Neighborhood { seeds, radius } => session.neighborhood(&seeds, radius)?,
+                    Scope::Neighborhood { seeds, radius } => snap.neighborhood(&seeds, radius)?,
                     Scope::All => bail!(
                         "vertex_counts needs an explicit row set (vertices or seeds+radius); \
                          an all-vertices dump would materialize n rows"
@@ -179,44 +223,62 @@ impl VdmcService {
                 if let Some(&v) = vertices.iter().find(|&&v| v as usize >= n) {
                     bail!("vertex {v} out of range for graph {graph:?} (n={n})");
                 }
-                // first lookup for this (size, direction) pays one full
-                // enumeration; afterwards maintain() is a no-op and the
-                // counters stay fresh across apply_edges
-                session.maintain(size, direction)?;
+                let maintained = snap
+                    .maintained()
+                    .iter()
+                    .any(|m| m.size() == size && m.direction() == direction);
+                let snap = if maintained {
+                    // the counter is live in the pinned epoch: serve the
+                    // rows lock-free from the snapshot we already hold
+                    snap
+                } else {
+                    // first lookup for this (size, direction) pays one
+                    // full enumeration under the writer lock (idempotent:
+                    // a racing lookup's maintain() becomes a no-op), then
+                    // re-pins the epoch that carries the counter
+                    let writer = self.writer(&graph)?;
+                    let mut session = lock_session(&graph, &writer)?;
+                    session.maintain(size, direction)?;
+                    let fresh = session.snapshot();
+                    drop(session);
+                    drop(writer);
+                    self.lock_pool().update_bytes(&graph);
+                    fresh
+                };
                 // O(classes) point reads from the maintained counter —
                 // no n-sized materialization on the lookup path
                 let mut rows = Vec::with_capacity(vertices.len());
                 for v in vertices {
-                    let row =
-                        session.maintained_vertex(size, direction, v).expect("validated above");
+                    let row = snap.maintained_vertex(size, direction, v).expect("validated above");
                     rows.push(VertexRow { vertex: v, counts: row.to_vec() });
                 }
-                let m = session
+                let m = snap
                     .maintained()
                     .iter()
                     .find(|m| m.size() == size && m.direction() == direction)
                     .expect("maintained just above");
-                let class_ids = m.class_ids();
-                let total_instances = m.instances();
-                self.pool.update_bytes(&graph);
                 Ok(Response::VertexRows {
                     graph,
                     size,
                     direction,
-                    class_ids,
+                    class_ids: m.class_ids(),
                     rows,
-                    total_instances,
+                    total_instances: m.instances(),
                 })
             }
             Request::ApplyEdges { graph, deltas } => {
-                let session = self.session(&graph)?;
+                let writer = self.writer(&graph)?;
+                let mut session = lock_session(&graph, &writer)?;
                 let report = session.apply_edges(&deltas)?;
+                drop(session);
+                drop(writer);
                 // the overlay grew (or a compaction shrank it): re-meter
-                self.pool.update_bytes(&graph);
+                self.lock_pool().update_bytes(&graph);
                 Ok(Response::Applied { graph, report })
             }
             Request::Maintain { graph, size, direction, output } => {
-                let session = self.session(&graph)?;
+                let writer = self.writer(&graph)?;
+                let mut session = lock_session(&graph, &writer)?;
                 // Count-only: the typed CountOnlyError surfaces through
                 // the wire as a per-request failure line
                 session.maintain_query(&MotifQuery {
@@ -231,24 +293,42 @@ impl VdmcService {
                     .find(|m| m.size() == size && m.direction() == direction)
                     .map(|m| m.instances())
                     .expect("maintained just above");
-                self.pool.update_bytes(&graph);
+                drop(session);
+                drop(writer);
+                self.lock_pool().update_bytes(&graph);
                 Ok(Response::Maintained { graph, size, direction, instances })
             }
             Request::Evict { graph } => {
-                let found = self.pool.evict(&graph);
+                let found = self.lock_pool().evict(&graph);
                 Ok(Response::Evicted { graph, found })
             }
-            Request::Stats => Ok(Response::Stats(self.pool.stats())),
+            Request::Stats => Ok(Response::Stats(self.lock_pool().stats())),
         }
     }
 
     /// As [`VdmcService::handle`], returning the wall-clock seconds the
-    /// request took — the per-request timing the wire reports.
-    pub fn handle_timed(&mut self, req: Request) -> (Result<Response>, f64) {
+    /// request took — the per-request timing the wire reports. Also
+    /// feeds the per-op latency digests in [`PoolStats::ops`].
+    pub fn handle_timed(&self, req: Request) -> (Result<Response>, f64) {
+        let op = req.op();
         let t0 = Instant::now();
         let out = self.handle(req);
-        (out, t0.elapsed().as_secs_f64())
+        let secs = t0.elapsed().as_secs_f64();
+        self.lock_pool().record_latency(op, secs);
+        (out, secs)
     }
+}
+
+/// Lock one graph's writer-side [`Session`], turning a poisoned mutex
+/// (a previous writer panicked mid-commit) into a per-request error
+/// instead of cascading panics across clients.
+fn lock_session<'a>(
+    id: &str,
+    writer: &'a Arc<Mutex<Session>>,
+) -> Result<MutexGuard<'a, Session>> {
+    writer
+        .lock()
+        .map_err(|_| anyhow!("writer for graph {id:?} is poisoned by an earlier panic"))
 }
 
 #[cfg(test)]
@@ -266,7 +346,7 @@ mod tests {
     #[test]
     fn service_count_matches_dedicated_session() {
         let g = generators::gnp_directed(50, 0.08, 3);
-        let mut svc = VdmcService::with_defaults();
+        let svc = VdmcService::with_defaults();
         let resp = svc
             .handle(Request::LoadGraph {
                 graph: "g".into(),
@@ -297,7 +377,7 @@ mod tests {
     #[test]
     fn instances_sample_and_scoped_count_requests_serve() {
         let g = generators::gnp_undirected(30, 0.15, 8);
-        let mut svc = VdmcService::with_defaults();
+        let svc = VdmcService::with_defaults();
         svc.handle(Request::LoadGraph {
             graph: "g".into(),
             source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
@@ -356,7 +436,7 @@ mod tests {
     #[test]
     fn maintain_rejects_non_count_outputs_with_typed_error() {
         let g = generators::gnp_undirected(20, 0.2, 5);
-        let mut svc = VdmcService::with_defaults();
+        let svc = VdmcService::with_defaults();
         svc.handle(Request::LoadGraph {
             graph: "g".into(),
             source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
@@ -398,7 +478,7 @@ mod tests {
     #[test]
     fn vertex_counts_serves_rows_and_survives_deltas() {
         let g = generators::gnp_directed(40, 0.1, 11);
-        let mut svc = VdmcService::with_defaults();
+        let svc = VdmcService::with_defaults();
         svc.handle(Request::LoadGraph {
             graph: "g".into(),
             source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
@@ -406,7 +486,7 @@ mod tests {
         })
         .unwrap();
 
-        let rows = |svc: &mut VdmcService, vs: Vec<u32>| match svc
+        let rows = |svc: &VdmcService, vs: Vec<u32>| match svc
             .handle(Request::VertexCounts {
                 graph: "g".into(),
                 size: MotifSize::Three,
@@ -419,7 +499,7 @@ mod tests {
             other => panic!("{other:?}"),
         };
 
-        let before = rows(&mut svc, vec![0, 7, 13]);
+        let before = rows(&svc, vec![0, 7, 13]);
         let want = Session::load(&g)
             .count(&CountQuery { size: MotifSize::Three, ..Default::default() })
             .unwrap();
@@ -434,7 +514,7 @@ mod tests {
             Response::Applied { report, .. } => assert!(report.applied() > 0),
             other => panic!("{other:?}"),
         }
-        let after = rows(&mut svc, vec![0, 7, 13]);
+        let after = rows(&svc, vec![0, 7, 13]);
 
         let mut oracle = Session::load(&g);
         oracle.apply_edges(&deltas).unwrap();
@@ -467,7 +547,7 @@ mod tests {
 
     #[test]
     fn unknown_graph_and_bad_vertices_are_request_errors() {
-        let mut svc = VdmcService::with_defaults();
+        let svc = VdmcService::with_defaults();
         let err = svc
             .handle(Request::Count { graph: "nope".into(), query: CountQuery::default() })
             .unwrap_err();
@@ -530,7 +610,7 @@ mod tests {
 
     #[test]
     fn maintain_evict_stats_lifecycle() {
-        let mut svc = VdmcService::new(ServiceConfig { max_graphs: 2, ..Default::default() });
+        let svc = VdmcService::new(ServiceConfig { max_graphs: 2, ..Default::default() });
         for (id, seed) in [("a", 1u64), ("b", 2), ("c", 3)] {
             let g = generators::gnp_undirected(30, 0.1, seed);
             svc.handle(Request::LoadGraph {
@@ -583,10 +663,58 @@ mod tests {
     }
 
     #[test]
-    fn handle_timed_reports_elapsed() {
-        let mut svc = VdmcService::with_defaults();
+    fn handle_timed_reports_elapsed_and_feeds_latency_digests() {
+        let svc = VdmcService::with_defaults();
         let (resp, secs) = svc.handle_timed(Request::Stats);
         assert!(resp.is_ok());
         assert!(secs >= 0.0);
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats(s) => {
+                let op = s.ops.iter().find(|o| o.op == "stats").expect("stats latency recorded");
+                assert_eq!(op.count, 1);
+                assert!(op.p50_secs >= 0.0 && op.p50_secs <= op.p99_secs + 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn cloned_handles_share_the_pool_across_threads() {
+        fn assert_handle<T: Clone + Send + Sync>() {}
+        assert_handle::<VdmcService>();
+
+        let g = generators::gnp_directed(40, 0.08, 7);
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: true,
+        })
+        .unwrap();
+        let want = Session::load(&g).count(&CountQuery::default()).unwrap();
+
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let svc = svc.clone();
+                let want = &want;
+                s.spawn(move || {
+                    for _ in 0..3 {
+                        match svc
+                            .handle(Request::Count { graph: "g".into(), query: CountQuery::default() })
+                            .unwrap()
+                        {
+                            Response::Counted { counts, .. } => {
+                                assert_eq!(counts.per_vertex, want.per_vertex);
+                            }
+                            other => panic!("{other:?}"),
+                        }
+                    }
+                });
+            }
+        });
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats(s) => assert!(s.hits >= 12, "12 counts routed through one pool"),
+            other => panic!("{other:?}"),
+        }
     }
 }

@@ -1,41 +1,126 @@
 //! [`SessionPool`] — the multi-graph residency layer.
 //!
 //! One process serves many loaded graphs: each graph id maps to a cached
-//! [`Session`] (relabeled CSR, hub-tier bitmaps, partitions, overlay,
-//! maintained counters). The pool is an LRU bounded two ways:
+//! session (relabeled CSR, hub-tier bitmaps, partitions, overlay,
+//! maintained counters), held as a **writer handle** plus a **snapshot
+//! cell**:
+//!
+//! - readers call [`SessionPool::pin`] and get the current
+//!   [`SessionSnapshot`] as a cheap `Arc` clone — queries then run
+//!   entirely outside the pool lock, against state that no writer can
+//!   mutate;
+//! - writers call [`SessionPool::writer`] and get the
+//!   `Arc<Mutex<Session>>` head — commits publish a new epoch into the
+//!   shared [`SnapshotCell`] without touching pinned readers.
+//!
+//! The pool is an LRU bounded two ways:
 //!
 //! - **entry cap** (`max_entries`): at most this many resident sessions;
-//! - **byte budget** (`byte_budget`): the sum of
-//!   [`Session::memory_bytes`] across residents may not exceed it.
+//! - **byte budget** (`byte_budget`): the sum of resident bytes
+//!   (head snapshot + superseded-but-pinned epochs,
+//!   [`SnapshotCell::resident_bytes`]) may not exceed it.
 //!
 //! Either bound at 0 means unbounded. When an insert or an in-place
-//! growth (delta overlay, newly maintained counter) pushes the pool over
-//! a bound, least-recently-used sessions are evicted until it fits —
-//! except the session that triggered enforcement, which always stays:
-//! one over-budget graph runs alone rather than thrashing.
+//! growth (delta overlay, newly maintained counter, retained epochs)
+//! pushes the pool over a bound, least-recently-used sessions are
+//! evicted until it fits — except the session that triggered
+//! enforcement, which always stays, and **busy** sessions: a graph with
+//! pinned snapshots or a checked-out writer handle is never dropped
+//! from under an in-flight request. Deferred evictions are counted in
+//! [`PoolStats::evictions_deferred`] and retried at the next
+//! enforcement point.
 //!
-//! Every access is metered ([`PoolStats`]): hits, misses, loads and
-//! evictions split by cause, plus resident bytes — the serving-layer
-//! numbers `vdmc serve`'s `stats` request and `benches/service.rs`
-//! report.
+//! Every access is metered ([`PoolStats`]): hits, misses, loads,
+//! evictions split by cause, resident/retained bytes, per-graph epoch
+//! and pin counts, and per-op latency percentiles fed by
+//! [`SessionPool::record_latency`] — the serving-layer numbers `vdmc
+//! serve`'s `stats` request and `benches/service.rs` report.
 
-use crate::engine::Session;
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{Session, SessionSnapshot, SnapshotCell};
 use crate::util::json::Json;
 
-/// Counter snapshot of one pool: sizing, traffic and eviction causes.
+/// Ring size for per-op latency sampling: percentiles are computed over
+/// the most recent this-many requests per op.
+const LATENCY_RING: usize = 1024;
+
+/// Sliding window of recent request latencies for one op.
+#[derive(Debug, Clone, Default)]
+struct LatencyRing {
+    samples: Vec<f64>,
+    next: usize,
+    count: u64,
+}
+
+impl LatencyRing {
+    fn record(&mut self, secs: f64) {
+        if self.samples.len() < LATENCY_RING {
+            self.samples.push(secs);
+        } else {
+            self.samples[self.next] = secs;
+        }
+        self.next = (self.next + 1) % LATENCY_RING;
+        self.count += 1;
+    }
+
+    /// `(p50, p99)` over the retained window (sort-on-demand: stats are
+    /// rare next to requests).
+    fn percentiles(&self) -> (f64, f64) {
+        let mut s = self.samples.clone();
+        s.sort_by(f64::total_cmp);
+        let pick = |p: f64| s[((s.len() - 1) as f64 * p).round() as usize];
+        (pick(0.50), pick(0.99))
+    }
+}
+
+/// Per-resident-graph line of a [`PoolStats`] snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphStat {
+    /// Graph id (the pool key).
+    pub id: String,
+    /// Current snapshot epoch (0 = as loaded, +1 per committed batch).
+    pub epoch: u64,
+    /// Snapshots currently pinned by readers (head + superseded).
+    pub pinned: usize,
+    /// Accounted resident bytes (head + retained epochs).
+    pub bytes: usize,
+    /// Bytes retained only because superseded epochs are still pinned.
+    pub retained_bytes: usize,
+}
+
+/// Latency digest for one request op over its recent-sample ring.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpLatency {
+    /// Wire op name (`count`, `apply_edges`, ...).
+    pub op: String,
+    /// Requests recorded over the pool's lifetime.
+    pub count: u64,
+    /// Median seconds over the retained window.
+    pub p50_secs: f64,
+    /// 99th-percentile seconds over the retained window.
+    pub p99_secs: f64,
+}
+
+/// Counter snapshot of one pool: sizing, traffic, eviction causes and
+/// concurrency state (epochs, pins, retained bytes, per-op latency).
 #[derive(Debug, Clone, Default)]
 pub struct PoolStats {
     /// Resident sessions right now.
     pub entries: usize,
-    /// Sum of [`Session::memory_bytes`] over residents.
+    /// Sum of accounted bytes over residents (head + retained epochs).
     pub resident_bytes: usize,
+    /// Bytes held only by superseded-but-pinned epochs, summed.
+    pub retained_bytes: usize,
+    /// Snapshots currently pinned by readers, summed over residents.
+    pub pinned_snapshots: usize,
     /// Entry cap (0 = unbounded).
     pub max_entries: usize,
     /// Byte budget (0 = unbounded).
     pub byte_budget: usize,
-    /// `get` calls that found the graph resident.
+    /// `pin`/`writer` calls that found the graph resident.
     pub hits: u64,
-    /// `get` calls that missed.
+    /// `pin`/`writer` calls that missed.
     pub misses: u64,
     /// Sessions inserted over the pool's lifetime.
     pub loads: u64,
@@ -45,15 +130,23 @@ pub struct PoolStats {
     pub evictions_byte_budget: u64,
     /// Explicit evictions (`evict` requests / replaced loads).
     pub evictions_explicit: u64,
+    /// Enforcement passes that wanted a victim but every candidate was
+    /// busy (pinned snapshots or a checked-out writer).
+    pub evictions_deferred: u64,
+    /// Per-graph epoch / pin / byte lines.
+    pub graphs: Vec<GraphStat>,
+    /// Per-op latency digests (p50/p99 over recent samples).
+    pub ops: Vec<OpLatency>,
 }
 
 impl PoolStats {
-    /// All evictions regardless of cause.
+    /// All evictions regardless of cause (deferred ones never happened,
+    /// so they are not included).
     pub fn evictions(&self) -> u64 {
         self.evictions_entry_cap + self.evictions_byte_budget + self.evictions_explicit
     }
 
-    /// Fraction of `get` calls served from a resident session.
+    /// Fraction of lookups served from a resident session.
     pub fn hit_rate(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {
@@ -67,6 +160,8 @@ impl PoolStats {
         let mut j = Json::obj();
         j.set("entries", self.entries)
             .set("resident_bytes", self.resident_bytes)
+            .set("retained_bytes", self.retained_bytes)
+            .set("pinned_snapshots", self.pinned_snapshots)
             .set("max_entries", self.max_entries)
             .set("byte_budget", self.byte_budget)
             .set("hits", self.hits)
@@ -76,26 +171,63 @@ impl PoolStats {
             .set("evictions", self.evictions())
             .set("evictions_entry_cap", self.evictions_entry_cap)
             .set("evictions_byte_budget", self.evictions_byte_budget)
-            .set("evictions_explicit", self.evictions_explicit);
+            .set("evictions_explicit", self.evictions_explicit)
+            .set("evictions_deferred", self.evictions_deferred);
+        let mut graphs = Vec::with_capacity(self.graphs.len());
+        for g in &self.graphs {
+            let mut gj = Json::obj();
+            gj.set("id", g.id.as_str())
+                .set("epoch", g.epoch)
+                .set("pinned", g.pinned)
+                .set("bytes", g.bytes)
+                .set("retained_bytes", g.retained_bytes);
+            graphs.push(gj);
+        }
+        j.set("graphs", graphs);
+        let mut ops = Vec::with_capacity(self.ops.len());
+        for o in &self.ops {
+            let mut oj = Json::obj();
+            oj.set("op", o.op.as_str())
+                .set("count", o.count)
+                .set("p50_secs", o.p50_secs)
+                .set("p99_secs", o.p99_secs);
+            ops.push(oj);
+        }
+        j.set("ops", ops);
         j
     }
 }
 
 struct Entry {
     id: String,
-    session: Session,
+    /// The mutable head: `ApplyEdges`/`Maintain` lock this, commit new
+    /// epochs into `cell`, and never block readers.
+    writer: Arc<Mutex<Session>>,
+    /// The shared snapshot cell the writer publishes into; readers pin
+    /// heads from here without any session lock.
+    cell: Arc<SnapshotCell>,
     /// Recency stamp: larger = used more recently.
     last_used: u64,
-    /// Cached [`Session::memory_bytes`] as of the last touch/update.
+    /// Cached [`SnapshotCell::resident_bytes`] as of the last
+    /// touch/update.
     bytes: usize,
 }
 
+impl Entry {
+    /// A busy entry must not be evicted: a reader holds a pinned
+    /// snapshot, or a writer handle is checked out of the pool.
+    fn busy(&self) -> bool {
+        self.cell.pinned_snapshots() > 0 || Arc::strong_count(&self.writer) > 1
+    }
+}
+
 /// LRU session cache keyed by graph id. See the module docs for the
-/// two-bound eviction policy.
+/// two-bound eviction policy and the pin/writer split.
 pub struct SessionPool {
     max_entries: usize,
     byte_budget: usize,
     entries: Vec<Entry>,
+    latency: Vec<(String, LatencyRing)>,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -103,6 +235,7 @@ pub struct SessionPool {
     evictions_entry_cap: u64,
     evictions_byte_budget: u64,
     evictions_explicit: u64,
+    evictions_deferred: u64,
 }
 
 impl SessionPool {
@@ -112,6 +245,7 @@ impl SessionPool {
             max_entries,
             byte_budget,
             entries: Vec::new(),
+            latency: Vec::new(),
             tick: 0,
             hits: 0,
             misses: 0,
@@ -119,6 +253,7 @@ impl SessionPool {
             evictions_entry_cap: 0,
             evictions_byte_budget: 0,
             evictions_explicit: 0,
+            evictions_deferred: 0,
         }
     }
 
@@ -158,27 +293,50 @@ impl SessionPool {
     /// evicted to make room.
     pub fn insert(&mut self, id: &str, mut session: Session) -> u64 {
         session.set_graph_id(id);
-        let bytes = session.memory_bytes();
+        let cell = session.share();
+        let bytes = cell.resident_bytes();
         if let Some(i) = self.entries.iter().position(|e| e.id == id) {
             // reload of a resident graph: swap in place, not an LRU event
             self.entries.remove(i);
             self.evictions_explicit += 1;
         }
         let last_used = self.next_tick();
-        self.entries.push(Entry { id: id.to_string(), session, last_used, bytes });
+        self.entries.push(Entry {
+            id: id.to_string(),
+            writer: Arc::new(Mutex::new(session)),
+            cell,
+            last_used,
+            bytes,
+        });
         self.loads += 1;
         self.enforce(id)
     }
 
-    /// Fetch a resident session, bumping recency. Counts a hit or a miss.
-    pub fn get(&mut self, id: &str) -> Option<&mut Session> {
+    /// Pin the current snapshot of a resident graph, bumping recency.
+    /// Counts a hit or a miss. The returned `Arc` keeps that epoch alive
+    /// (and the entry un-evictable) until dropped — queries run against
+    /// it entirely outside the pool lock.
+    pub fn pin(&mut self, id: &str) -> Option<Arc<SessionSnapshot>> {
+        self.touch(id).map(|e| e.cell.head())
+    }
+
+    /// Check out the writer handle of a resident graph, bumping recency.
+    /// Counts a hit or a miss. Lock it to `apply_edges`/`maintain`;
+    /// commits publish new epochs without blocking pinned readers. Drop
+    /// the handle promptly — while checked out the entry is busy and
+    /// cannot be evicted.
+    pub fn writer(&mut self, id: &str) -> Option<Arc<Mutex<Session>>> {
+        self.touch(id).map(|e| Arc::clone(&e.writer))
+    }
+
+    fn touch(&mut self, id: &str) -> Option<&Entry> {
         let tick = self.tick + 1;
         match self.entries.iter_mut().find(|e| e.id == id) {
             Some(e) => {
                 e.last_used = tick;
                 self.tick = tick;
                 self.hits += 1;
-                Some(&mut e.session)
+                Some(e)
             }
             None => {
                 self.misses += 1;
@@ -187,7 +345,9 @@ impl SessionPool {
         }
     }
 
-    /// Drop one graph. Returns whether it was resident.
+    /// Drop one graph. Returns whether it was resident. Pinned snapshots
+    /// of an explicitly evicted graph stay alive (their `Arc`s own the
+    /// state); the pool just stops handing out new ones.
     pub fn evict(&mut self, id: &str) -> bool {
         match self.entries.iter().position(|e| e.id == id) {
             Some(i) => {
@@ -199,20 +359,36 @@ impl SessionPool {
         }
     }
 
-    /// Re-account `id`'s bytes after an in-place mutation (delta overlay
-    /// growth, new maintained counter, compaction) and re-enforce the
-    /// byte budget against the other residents.
+    /// Re-account `id`'s bytes after a commit (delta overlay growth, new
+    /// maintained counter, compaction, retained epochs) and re-enforce
+    /// the byte budget against the other residents.
     pub fn update_bytes(&mut self, id: &str) -> u64 {
         if let Some(e) = self.entries.iter_mut().find(|x| x.id == id) {
-            e.bytes = e.session.memory_bytes();
+            e.bytes = e.cell.resident_bytes();
             self.enforce(id)
         } else {
             0
         }
     }
 
-    /// Evict least-recently-used entries (never `protect`) until both
-    /// bounds hold. Returns the number of evictions performed.
+    /// Record one request's wall-clock seconds under its wire op name;
+    /// feeds the per-op p50/p99 digests in [`PoolStats::ops`].
+    pub fn record_latency(&mut self, op: &str, secs: f64) {
+        match self.latency.iter_mut().find(|(name, _)| name == op) {
+            Some((_, ring)) => ring.record(secs),
+            None => {
+                let mut ring = LatencyRing::default();
+                ring.record(secs);
+                self.latency.push((op.to_string(), ring));
+            }
+        }
+    }
+
+    /// Evict least-recently-used entries (never `protect`, never a busy
+    /// entry) until both bounds hold. Returns the number of evictions
+    /// performed; a pass that wanted a victim but found only busy ones
+    /// counts one deferred eviction and gives up until the next
+    /// enforcement point.
     fn enforce(&mut self, protect: &str) -> u64 {
         let mut evicted = 0u64;
         loop {
@@ -225,7 +401,7 @@ impl SessionPool {
                 .entries
                 .iter()
                 .enumerate()
-                .filter(|(_, e)| e.id != protect)
+                .filter(|(_, e)| e.id != protect && !e.busy())
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(i, _)| i);
             match victim {
@@ -238,17 +414,47 @@ impl SessionPool {
                     }
                     evicted += 1;
                 }
-                // only the protected session remains: an over-budget
-                // graph runs alone rather than evicting itself
-                None => return evicted,
+                None => {
+                    // over a bound with no eligible victim: either only
+                    // the protected session remains (an over-budget graph
+                    // runs alone rather than evicting itself), or every
+                    // candidate is pinned/checked-out — defer, never free
+                    // state under an in-flight request
+                    if self.entries.iter().any(|e| e.id != protect && e.busy()) {
+                        self.evictions_deferred += 1;
+                    }
+                    return evicted;
+                }
             }
         }
     }
 
     pub fn stats(&self) -> PoolStats {
+        let graphs: Vec<GraphStat> = self
+            .entries
+            .iter()
+            .map(|e| GraphStat {
+                id: e.id.clone(),
+                epoch: e.cell.epoch(),
+                pinned: e.cell.pinned_snapshots(),
+                bytes: e.bytes,
+                retained_bytes: e.cell.retained_bytes(),
+            })
+            .collect();
+        let mut ops: Vec<OpLatency> = self
+            .latency
+            .iter()
+            .map(|(op, ring)| {
+                let (p50_secs, p99_secs) = ring.percentiles();
+                OpLatency { op: op.clone(), count: ring.count, p50_secs, p99_secs }
+            })
+            .collect();
+        ops.sort_by(|a, b| a.op.cmp(&b.op));
         PoolStats {
             entries: self.entries.len(),
             resident_bytes: self.resident_bytes(),
+            retained_bytes: graphs.iter().map(|g| g.retained_bytes).sum(),
+            pinned_snapshots: graphs.iter().map(|g| g.pinned).sum(),
             max_entries: self.max_entries,
             byte_budget: self.byte_budget,
             hits: self.hits,
@@ -257,6 +463,9 @@ impl SessionPool {
             evictions_entry_cap: self.evictions_entry_cap,
             evictions_byte_budget: self.evictions_byte_budget,
             evictions_explicit: self.evictions_explicit,
+            evictions_deferred: self.evictions_deferred,
+            graphs,
+            ops,
         }
     }
 }
@@ -275,7 +484,7 @@ mod tests {
         let mut pool = SessionPool::new(2, 0);
         pool.insert("a", session(30, 1));
         pool.insert("b", session(30, 2));
-        assert!(pool.get("a").is_some(), "touch a: b becomes LRU");
+        assert!(pool.pin("a").is_some(), "touch a: b becomes LRU");
         pool.insert("c", session(30, 3));
         assert!(pool.contains("a") && pool.contains("c"));
         assert!(!pool.contains("b"), "LRU entry b must be the victim");
@@ -305,17 +514,21 @@ mod tests {
     #[test]
     fn hit_miss_and_load_counters() {
         let mut pool = SessionPool::new(0, 0);
-        assert!(pool.get("a").is_none());
+        assert!(pool.pin("a").is_none());
         pool.insert("a", session(30, 1));
-        assert!(pool.get("a").is_some());
-        assert!(pool.get("a").is_some());
-        assert!(pool.get("zzz").is_none());
+        assert!(pool.pin("a").is_some());
+        assert!(pool.writer("a").is_some());
+        assert!(pool.pin("zzz").is_none());
         let s = pool.stats();
         assert_eq!((s.hits, s.misses, s.loads), (2, 2, 1));
         assert!((s.hit_rate() - 0.5).abs() < 1e-12);
         let j = s.to_json().to_string_compact();
         assert!(j.contains("\"hits\":2"), "{j}");
         assert!(j.contains("\"evictions\":0"), "{j}");
+        // keys inside each graph line are BTreeMap-ordered
+        assert!(j.contains("\"graphs\":[{\"bytes\":"), "{j}");
+        assert!(j.contains("\"epoch\":0"), "{j}");
+        assert!(j.contains("\"id\":\"a\""), "{j}");
     }
 
     #[test]
@@ -324,7 +537,7 @@ mod tests {
         pool.insert("a", session(30, 1));
         pool.insert("a", session(40, 2));
         assert_eq!(pool.len(), 1);
-        assert_eq!(pool.get("a").unwrap().graph_id(), Some("a"));
+        assert_eq!(pool.writer("a").unwrap().lock().unwrap().graph_id(), Some("a"));
         assert!(pool.evict("a"));
         assert!(!pool.evict("a"), "second evict finds nothing");
         let s = pool.stats();
@@ -343,11 +556,71 @@ mod tests {
         assert_eq!(pool.len(), 2);
         // grow b in place past the slack: maintaining a 4-motif counter
         // adds n × classes × 8 bytes
-        let b = pool.get("b").unwrap();
-        b.maintain(crate::motifs::MotifSize::Four, crate::motifs::Direction::Directed).unwrap();
+        {
+            let b = pool.writer("b").unwrap();
+            b.lock()
+                .unwrap()
+                .maintain(crate::motifs::MotifSize::Four, crate::motifs::Direction::Directed)
+                .unwrap();
+        }
         let evicted = pool.update_bytes("b");
         assert_eq!(evicted, 1, "growth must push a out");
         assert!(pool.contains("b") && !pool.contains("a"));
         assert_eq!(pool.stats().evictions_byte_budget, 1);
+    }
+
+    #[test]
+    fn pinned_entries_defer_eviction() {
+        let mut pool = SessionPool::new(1, 0);
+        pool.insert("a", session(30, 1));
+        let pinned = pool.pin("a").unwrap();
+        // over the entry cap, but the only candidate is pinned: defer
+        pool.insert("b", session(30, 2));
+        assert_eq!(pool.len(), 2, "a pinned entry is never evicted");
+        assert!(pool.contains("a") && pool.contains("b"));
+        let s = pool.stats();
+        assert_eq!(s.evictions_deferred, 1);
+        assert_eq!(s.pinned_snapshots, 1);
+        // the pinned snapshot still answers queries
+        assert_eq!(pinned.epoch(), 0);
+
+        // once the pin drops, the next enforcement point evicts it
+        drop(pinned);
+        pool.update_bytes("b");
+        assert!(!pool.contains("a"), "unpinned LRU entry is evictable again");
+        assert!(pool.contains("b"));
+        assert_eq!(pool.stats().evictions_entry_cap, 1);
+    }
+
+    #[test]
+    fn checked_out_writer_defers_eviction() {
+        let mut pool = SessionPool::new(1, 0);
+        pool.insert("a", session(30, 1));
+        let writer = pool.writer("a").unwrap();
+        pool.insert("b", session(30, 2));
+        assert!(pool.contains("a"), "a checked-out writer is never evicted");
+        assert_eq!(pool.stats().evictions_deferred, 1);
+        drop(writer);
+        pool.update_bytes("b");
+        assert!(!pool.contains("a"));
+    }
+
+    #[test]
+    fn latency_rings_report_percentiles() {
+        let mut pool = SessionPool::new(0, 0);
+        for i in 1..=100u32 {
+            pool.record_latency("count", i as f64 / 1000.0);
+        }
+        pool.record_latency("stats", 0.5);
+        let s = pool.stats();
+        assert_eq!(s.ops.len(), 2);
+        let count = s.ops.iter().find(|o| o.op == "count").unwrap();
+        assert_eq!(count.count, 100);
+        assert!(count.p50_secs <= count.p99_secs);
+        assert!((count.p50_secs - 0.050).abs() < 0.002, "{}", count.p50_secs);
+        assert!((count.p99_secs - 0.099).abs() < 0.002, "{}", count.p99_secs);
+        let j = s.to_json().to_string_compact();
+        assert!(j.contains("\"ops\":[{"), "{j}");
+        assert!(j.contains("\"op\":\"count\""), "{j}");
     }
 }

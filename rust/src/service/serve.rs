@@ -1,0 +1,328 @@
+//! Transports for `vdmc serve`: single-connection JSONL loops and the
+//! thread-per-client TCP listener.
+//!
+//! Both speak the [`super::wire`] codec — one JSON request per line, one
+//! JSON response per line, in request order. The concurrency model:
+//!
+//! - [`serve_connection`] drives ONE client. The calling thread reads
+//!   and handles requests serially (per-client order is part of the
+//!   protocol); finished responses flow through a bounded channel — the
+//!   **inflight window** — to a scoped writer thread. A slow client
+//!   that stops reading eventually blocks its own connection's handler,
+//!   never the process. On EOF the channel closes and the writer drains
+//!   every queued response before the call returns: no request that was
+//!   handled loses its reply. Malformed lines become error responses
+//!   through the same channel, so they cannot desync the ordering.
+//! - [`serve_tcp`] accepts clients and runs one [`serve_connection`]
+//!   per connection thread, all sharing one [`VdmcService`] handle
+//!   (reads share pinned snapshots; writes serialize per graph).
+//!   Shutdown is graceful: flip the flag, the listener stops accepting,
+//!   every client's read side is shut down (their loops see EOF and
+//!   drain), and the scope joins them all.
+//!
+//! `vdmc serve` runs the stdin/stdout mode as exactly the 1-client
+//! special case of [`serve_connection`].
+
+use std::io::{self, BufRead, BufReader, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+use super::{wire, VdmcService};
+
+/// How often the TCP accept loop polls for shutdown / free client slots.
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Transport tuning shared by the stdin and TCP modes.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeOptions {
+    /// Responses queued per client before its handler blocks (the
+    /// per-client inflight window; min 1).
+    pub inflight: usize,
+    /// Concurrent TCP clients (0 = unbounded); excess connections wait
+    /// in the listen backlog.
+    pub max_clients: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions { inflight: 64, max_clients: 0 }
+    }
+}
+
+/// What one [`serve_tcp`] run served, for the shutdown log line.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TcpServeSummary {
+    /// Connections accepted.
+    pub clients: u64,
+    /// Requests answered across all connections.
+    pub requests: u64,
+}
+
+/// Decode-handle-encode for one request line; never fails — undecodable
+/// lines become error responses with a best-effort id/op echo so the
+/// client can correlate the failure, and the response keeps its slot in
+/// the per-connection ordering.
+fn handle_line(svc: &VdmcService, line: &str) -> String {
+    match wire::decode_request(line) {
+        Ok((req, id)) => {
+            let op = req.op();
+            let (result, secs) = svc.handle_timed(req);
+            match result {
+                Ok(resp) => wire::encode_response(&resp, id, secs),
+                Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+            }
+        }
+        Err(e) => {
+            let j = Json::parse(line).ok();
+            let id = j.as_ref().and_then(|j| j.get("id")).and_then(Json::as_u64);
+            let op =
+                j.as_ref().and_then(|j| j.get("op")).and_then(Json::as_str).map(String::from);
+            wire::encode_error(op.as_deref(), id, &e)
+        }
+    }
+}
+
+/// Serve one client: read JSONL requests from `reader` until EOF, write
+/// one response per request to `writer` in order, then drain and return
+/// how many requests were answered.
+///
+/// The reader stays on the calling thread (so non-`Send` readers like
+/// `StdinLock` work); only the writer crosses into the scoped sink
+/// thread. Blank lines and `#` comments are skipped without a response,
+/// matching the fixture format.
+pub fn serve_connection<R: BufRead, W: Write + Send>(
+    svc: &VdmcService,
+    reader: R,
+    writer: &mut W,
+    opts: &ServeOptions,
+) -> io::Result<u64> {
+    let (tx, rx) = sync_channel::<String>(opts.inflight.max(1));
+    let mut served = 0u64;
+    let mut read_err: Option<io::Error> = None;
+    let sink_result = std::thread::scope(|s| {
+        let sink = s.spawn(move || -> io::Result<()> {
+            for reply in rx {
+                writeln!(writer, "{reply}")?;
+                // flushed per response: clients pipeline against the
+                // inflight window and must see replies promptly
+                writer.flush()?;
+            }
+            Ok(())
+        });
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(e) => {
+                    read_err = Some(e);
+                    break;
+                }
+            };
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let reply = handle_line(svc, line);
+            if tx.send(reply).is_err() {
+                // the sink died (client closed its read side): stop
+                // handling, the write error surfaces below
+                break;
+            }
+            served += 1;
+        }
+        // EOF (or error): close the channel so the sink writes out every
+        // queued response and exits — the drain the protocol promises
+        drop(tx);
+        sink.join().expect("response sink thread panicked")
+    });
+    if let Some(e) = read_err {
+        return Err(e);
+    }
+    sink_result?;
+    Ok(served)
+}
+
+/// Accept TCP clients until `shutdown` flips, serving each on its own
+/// thread against the shared service. Returns once every connection has
+/// drained. See the module docs for the shutdown sequence.
+pub fn serve_tcp(
+    svc: &VdmcService,
+    listener: TcpListener,
+    opts: &ServeOptions,
+    shutdown: &AtomicBool,
+) -> io::Result<TcpServeSummary> {
+    listener.set_nonblocking(true)?;
+    let active = AtomicUsize::new(0);
+    let clients = AtomicU64::new(0);
+    let requests = AtomicU64::new(0);
+    // read-side handles of live connections, for the shutdown nudge
+    let conns: Mutex<Vec<(u64, TcpStream)>> = Mutex::new(Vec::new());
+    let mut accept_err: Option<io::Error> = None;
+
+    std::thread::scope(|s| {
+        let mut next_id = 0u64;
+        loop {
+            if shutdown.load(Ordering::SeqCst) {
+                break;
+            }
+            if opts.max_clients > 0 && active.load(Ordering::SeqCst) >= opts.max_clients {
+                // at the client cap: let the backlog hold newcomers
+                std::thread::sleep(ACCEPT_POLL);
+                continue;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    // accepted sockets must block: the connection thread
+                    // parks in read() until a request or EOF arrives
+                    let prepared = stream.set_nonblocking(false).and_then(|()| {
+                        Ok((stream.try_clone()?, BufReader::new(stream.try_clone()?)))
+                    });
+                    let (handle, reader) = match prepared {
+                        Ok(pair) => pair,
+                        // a client that vanished between accept and setup
+                        // is not a server error
+                        Err(_) => continue,
+                    };
+                    let id = next_id;
+                    next_id += 1;
+                    conns.lock().expect("conn registry poisoned").push((id, handle));
+                    active.fetch_add(1, Ordering::SeqCst);
+                    clients.fetch_add(1, Ordering::SeqCst);
+                    let svc = svc.clone();
+                    let (active, requests, conns) = (&active, &requests, &conns);
+                    s.spawn(move || {
+                        let mut stream = stream;
+                        if let Ok(n) = serve_connection(&svc, reader, &mut stream, opts) {
+                            requests.fetch_add(n, Ordering::SeqCst);
+                        }
+                        conns.lock().expect("conn registry poisoned").retain(|(c, _)| *c != id);
+                        active.fetch_sub(1, Ordering::SeqCst);
+                    });
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
+                }
+                Err(e) => {
+                    accept_err = Some(e);
+                    break;
+                }
+            }
+        }
+        // graceful drain: no new clients; shutting down each read side
+        // EOFs its loop, which flushes in-flight responses and exits.
+        // The scope then joins every connection thread.
+        for (_, c) in conns.lock().expect("conn registry poisoned").iter() {
+            let _ = c.shutdown(Shutdown::Read);
+        }
+    });
+
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(TcpServeSummary {
+            clients: clients.into_inner(),
+            requests: requests.into_inner(),
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::{GraphSource, Request, Response};
+
+    fn loaded_service() -> VdmcService {
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges {
+                n: 5,
+                edges: vec![(0, 1), (1, 2), (2, 0), (2, 3), (3, 4)],
+            },
+            directed: false,
+        })
+        .unwrap();
+        svc
+    }
+
+    fn lines_of(out: &[u8]) -> Vec<Json> {
+        std::str::from_utf8(out)
+            .unwrap()
+            .lines()
+            .map(|l| Json::parse(l).unwrap())
+            .collect()
+    }
+
+    #[test]
+    fn connection_serves_in_order_and_drains_on_eof() {
+        let svc = loaded_service();
+        let input = "\
+            {\"op\":\"count\",\"id\":1,\"graph\":\"g\",\"k\":3,\"direction\":\"undirected\"}\n\
+            # a comment and a blank line produce no responses\n\
+            \n\
+            {\"op\":\"stats\",\"id\":2}\n";
+        let mut out: Vec<u8> = Vec::new();
+        let served =
+            serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+        assert_eq!(served, 2);
+        let lines = lines_of(&out);
+        assert_eq!(lines.len(), 2, "every handled request has a drained response");
+        let ids: Vec<u64> =
+            lines.iter().map(|l| l.get("id").and_then(Json::as_u64).unwrap()).collect();
+        assert_eq!(ids, vec![1, 2], "responses in request order");
+        assert!(lines.iter().all(|l| l.get("ok").and_then(Json::as_bool) == Some(true)));
+    }
+
+    #[test]
+    fn malformed_line_keeps_its_slot_in_the_ordering() {
+        let svc = loaded_service();
+        let input = "\
+            {\"op\":\"stats\",\"id\":1}\n\
+            {\"op\":\"count\",\"id\":2,\"graph\":  % not json %\n\
+            {\"op\":\"stats\",\"id\":3}\n";
+        let mut out: Vec<u8> = Vec::new();
+        let served =
+            serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+        assert_eq!(served, 3, "the malformed line still costs one response slot");
+        let lines = lines_of(&out);
+        assert_eq!(lines.len(), 3);
+        let oks: Vec<bool> =
+            lines.iter().map(|l| l.get("ok").and_then(Json::as_bool).unwrap()).collect();
+        assert_eq!(oks, vec![true, false, true], "error response in the middle, in order");
+        assert_eq!(lines[1].get("id").and_then(Json::as_u64), None, "unparsable id is omitted");
+    }
+
+    #[test]
+    fn tiny_inflight_window_still_drains_everything() {
+        let svc = loaded_service();
+        let mut input = String::new();
+        for i in 0..20 {
+            input.push_str(&format!("{{\"op\":\"stats\",\"id\":{i}}}\n"));
+        }
+        let mut out: Vec<u8> = Vec::new();
+        let opts = ServeOptions { inflight: 1, ..Default::default() };
+        let served = serve_connection(&svc, input.as_bytes(), &mut out, &opts).unwrap();
+        assert_eq!(served, 20);
+        assert_eq!(lines_of(&out).len(), 20);
+    }
+
+    #[test]
+    fn stats_response_decodes_back_through_the_wire() {
+        let svc = loaded_service();
+        let (resp, secs) = svc.handle_timed(Request::Stats);
+        match resp.unwrap() {
+            Response::Stats(s) => {
+                let line = wire::encode_response(&Response::Stats(s), Some(9), secs);
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+                let pool = j.get("pool").expect("stats payload");
+                assert!(pool.get("graphs").and_then(Json::as_arr).is_some());
+                assert!(pool.get("ops").and_then(Json::as_arr).is_some());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -78,8 +78,11 @@ fn patch_row(map: &mut PatchMap, key: u32, f: impl FnOnce(&mut Patch)) {
 }
 
 /// Sparse edge patches over a base graph (patches only — pair with the
-/// base via [`OverlayView`] to probe).
-#[derive(Debug, Default)]
+/// base via [`OverlayView`] to probe). `Clone` is the snapshot layer's
+/// copy-on-write: an `apply_edges` batch clones the side-lists (cheap —
+/// patches are sparse by construction), mutates the clone, and publishes
+/// it in the successor [`crate::engine::SessionSnapshot`].
+#[derive(Debug, Clone, Default)]
 pub struct DeltaOverlay {
     out: PatchMap,
     inn: PatchMap,
@@ -337,6 +340,17 @@ impl GraphProbe for OverlayView<'_> {
     #[inline]
     fn is_und_hub(&self, v: u32) -> bool {
         self.base.und.is_hub(v)
+    }
+
+    /// The galloping merge can only borrow a raw base row when no patch
+    /// touches it; patched rows fall back to the merged iterator path.
+    #[inline]
+    fn und_slice_above(&self, v: u32, after: u32) -> Option<&[u32]> {
+        if self.overlay.und.get(&v).is_none() {
+            Some(self.base.und.neighbors_above(v, after))
+        } else {
+            None
+        }
     }
 
     #[inline]

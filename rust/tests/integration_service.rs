@@ -1,12 +1,17 @@
 //! Service-layer acceptance: pooled multi-graph traffic must be
 //! bit-identical to dedicated per-graph sessions — across interleaved
-//! queries, live edge deltas, byte-budget evictions and the JSONL wire.
+//! queries, live edge deltas, byte-budget evictions, the JSONL wire,
+//! and the serve transports (EOF drain, malformed-line ordering, TCP
+//! multi-client).
 
 use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
-use vdmc::service::{wire, GraphSource, Request, Response, ServiceConfig, VdmcService};
+use vdmc::service::{
+    serve_connection, serve_tcp, wire, GraphSource, Request, Response, ServeOptions,
+    ServiceConfig, VdmcService,
+};
 use vdmc::stream::EdgeDelta;
 use vdmc::util::json::Json;
 
@@ -48,7 +53,7 @@ fn delta_batch(n: usize, round: u64) -> Vec<EdgeDelta> {
 #[test]
 fn interleaved_pooled_traffic_matches_dedicated_sessions() {
     let graphs = graphs();
-    let mut svc = VdmcService::with_defaults();
+    let svc = VdmcService::with_defaults();
     let mut oracles: Vec<Session> = Vec::new();
     for (id, g) in &graphs {
         svc.handle(load_req(id, g)).unwrap();
@@ -138,7 +143,7 @@ fn byte_budget_eviction_is_reported_and_recoverable() {
         .unwrap();
     // two largest-session budget: the three graphs (n = 40/45/50) sum
     // well past it, so the third load must evict
-    let mut svc = VdmcService::new(ServiceConfig {
+    let svc = VdmcService::new(ServiceConfig {
         max_graphs: 0,
         byte_budget: per * 2,
         ..Default::default()
@@ -189,10 +194,10 @@ fn byte_budget_eviction_is_reported_and_recoverable() {
 #[test]
 fn wire_jsonl_stream_matches_dedicated_sessions() {
     let graphs = graphs();
-    let mut svc = VdmcService::with_defaults();
+    let svc = VdmcService::with_defaults();
 
     // the serve loop body, minus stdin plumbing
-    let mut roundtrip = |line: String| -> Json {
+    let roundtrip = |line: String| -> Json {
         let (req, id) = wire::decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
         let op = req.op();
         let (result, secs) = svc.handle_timed(req);
@@ -336,4 +341,172 @@ fn wire_jsonl_stream_matches_dedicated_sessions() {
     let pool = j.get("pool").expect("pool stats");
     assert!(pool.get("hits").and_then(Json::as_u64).unwrap() > 0);
     assert_eq!(pool.get("entries").and_then(Json::as_usize), Some(3));
+}
+
+fn response_lines(out: &[u8]) -> Vec<Json> {
+    std::str::from_utf8(out).unwrap().lines().map(|l| Json::parse(l).unwrap()).collect()
+}
+
+/// Shutdown regression: EOF on the request stream must drain every
+/// in-flight response before `serve_connection` returns — even when the
+/// handler runs far ahead of a tiny inflight window, no tail of handled
+/// requests may lose its reply.
+#[test]
+fn serve_eof_drains_inflight_responses() {
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    svc.handle(load_req(&graphs[0].0, &graphs[0].1)).unwrap();
+    let want = Session::load(&graphs[0].1).count(&CountQuery::default()).unwrap();
+
+    let mut input = String::new();
+    for i in 0..24 {
+        input.push_str(&format!(
+            "{{\"op\":\"count\",\"id\":{i},\"graph\":\"g0\",\"k\":3,\"direction\":\"directed\"}}\n"
+        ));
+    }
+    let mut out: Vec<u8> = Vec::new();
+    let opts = ServeOptions { inflight: 2, ..Default::default() };
+    let served = serve_connection(&svc, input.as_bytes(), &mut out, &opts).unwrap();
+    assert_eq!(served, 24);
+
+    let lines = response_lines(&out);
+    assert_eq!(lines.len(), 24, "every handled request gets a drained response");
+    for (i, j) in lines.iter().enumerate() {
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(i as u64), "response order");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(
+            j.get("total_instances").and_then(Json::as_u64),
+            Some(want.total_instances),
+            "request {i}"
+        );
+    }
+}
+
+/// Ordering regression: a malformed line mid-stream becomes an ok:false
+/// response in its slot — later responses keep their positions and ids,
+/// and handler-level errors (unknown graph) are distinct from decode
+/// errors but equally in-order.
+#[test]
+fn serve_malformed_line_mid_stream_keeps_ordering() {
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    svc.handle(load_req(&graphs[0].0, &graphs[0].1)).unwrap();
+
+    let input = "\
+        {\"op\":\"stats\",\"id\":1}\n\
+        this line is not json at all\n\
+        {\"op\":\"count\",\"id\":2,\"graph\":\"g0\",\"k\":3,\"direction\":\"directed\"}\n\
+        {\"op\":\"count\",\"id\":3,\"graph\":\"ghost\",\"k\":3,\"direction\":\"directed\"}\n\
+        {\"op\":\"stats\",\"id\":4}\n";
+    let mut out: Vec<u8> = Vec::new();
+    let served =
+        serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+    assert_eq!(served, 5, "malformed and failing lines still cost one response slot each");
+
+    let lines = response_lines(&out);
+    assert_eq!(lines.len(), 5);
+    let ids: Vec<Option<u64>> =
+        lines.iter().map(|l| l.get("id").and_then(Json::as_u64)).collect();
+    assert_eq!(ids, vec![Some(1), None, Some(2), Some(3), Some(4)], "ordering preserved");
+    let oks: Vec<bool> =
+        lines.iter().map(|l| l.get("ok").and_then(Json::as_bool).unwrap()).collect();
+    assert_eq!(oks, vec![true, false, true, false, true]);
+    assert!(lines[1].get("error").and_then(Json::as_str).is_some(), "decode error reported");
+    assert!(
+        lines[3].get("error").and_then(Json::as_str).unwrap().contains("not loaded"),
+        "handler error reported"
+    );
+}
+
+/// The multi-client transport end-to-end: several TCP clients share one
+/// pool, each gets its own in-order bit-exact responses, and flipping
+/// the shutdown flag drains everything before `serve_tcp` returns.
+#[test]
+fn tcp_clients_share_one_pool_and_drain_on_shutdown() {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    for (id, g) in &graphs {
+        svc.handle(load_req(id, g)).unwrap();
+    }
+    let wants: Vec<u64> = graphs
+        .iter()
+        .map(|(_, g)| Session::load(g).count(&CountQuery::default()).unwrap().total_instances)
+        .collect();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = {
+        let svc = svc.clone();
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || {
+            serve_tcp(&svc, listener, &ServeOptions::default(), &shutdown).unwrap()
+        })
+    };
+
+    let n_clients = 4usize;
+    let clients: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut w = stream;
+                for (i, gid) in ["g0", "g1", "g2"].iter().enumerate() {
+                    writeln!(
+                        w,
+                        "{{\"op\":\"count\",\"id\":{},\"graph\":\"{gid}\",\"k\":3,\
+                         \"direction\":\"directed\"}}",
+                        c * 10 + i
+                    )
+                    .unwrap();
+                }
+                // half-close: the server sees EOF and must drain our replies
+                w.shutdown(Shutdown::Write).unwrap();
+                let mut replies = Vec::new();
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap() == 0 {
+                        break;
+                    }
+                    replies.push(Json::parse(line.trim()).unwrap());
+                }
+                replies
+            })
+        })
+        .collect();
+
+    for (c, h) in clients.into_iter().enumerate() {
+        let replies = h.join().unwrap();
+        assert_eq!(replies.len(), 3, "client {c}: one drained response per request");
+        for (i, j) in replies.iter().enumerate() {
+            assert_eq!(j.get("id").and_then(Json::as_u64), Some((c * 10 + i) as u64));
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "client {c}: {j:?}");
+            assert_eq!(
+                j.get("total_instances").and_then(Json::as_u64),
+                Some(wants[i]),
+                "client {c} graph g{i}: pooled answer must match the dedicated oracle"
+            );
+        }
+    }
+
+    shutdown.store(true, Ordering::SeqCst);
+    let summary = server.join().unwrap();
+    assert_eq!(summary.clients, n_clients as u64);
+    assert_eq!(summary.requests, (n_clients * 3) as u64);
+
+    // one pool behind all clients: 12 pooled hits, zero reloads
+    match svc.handle(Request::Stats).unwrap() {
+        Response::Stats(s) => {
+            assert_eq!(s.entries, 3);
+            assert!(s.hits >= (n_clients * 3) as u64, "stats: {s:?}");
+            assert_eq!(s.misses, 0);
+        }
+        other => panic!("{other:?}"),
+    }
 }

@@ -1,0 +1,188 @@
+//! Snapshot-isolation property tests: epoch stamping, pinned-snapshot
+//! immutability against a reload oracle, concurrent readers racing a
+//! committing writer, and the pool's refusal to free pinned state.
+//!
+//! The contract under test: `Session::snapshot()` pins an immutable
+//! epoch-stamped view; every effective `apply_edges` batch commits a new
+//! epoch at the head without touching pinned snapshots; a pinned
+//! snapshot's counts are bit-identical to a fresh `Session::load` of the
+//! graph as it stood at that epoch; and `SessionPool` never evicts an
+//! entry whose snapshots are still pinned (it defers and reports).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use vdmc::engine::{CountQuery, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::service::SessionPool;
+use vdmc::stream::EdgeDelta;
+
+fn small_graph(seed: u64) -> Graph {
+    generators::gnp_directed(60, 0.08, seed)
+}
+
+/// Deterministic effective batch: inserts fresh edges, so every round
+/// changes the graph and must commit a new epoch.
+fn insert_batch(g: &Graph, round: u32) -> Vec<EdgeDelta> {
+    let n = g.n() as u32;
+    (0..6u32)
+        .map(|i| {
+            let a = (i * 17 + round * 29 + 1) % n;
+            let b = (i * 23 + round * 41 + 2) % n;
+            EdgeDelta::insert(a, if a == b { (b + 1) % n } else { b })
+        })
+        .collect()
+}
+
+#[test]
+fn epochs_stamp_every_effective_commit() {
+    let g = small_graph(3);
+    let mut session = Session::load(&g);
+    assert_eq!(session.epoch(), 0, "a fresh load is epoch 0");
+    assert_eq!(session.snapshot().epoch(), 0);
+
+    let cell = session.share();
+    for round in 0..4u32 {
+        let before = session.epoch();
+        let report = session.apply_edges(&insert_batch(&session.snapshot_graph(), round)).unwrap();
+        assert!(report.applied() > 0, "round {round} must be effective");
+        assert_eq!(session.epoch(), before + 1, "each effective batch commits one epoch");
+        assert_eq!(cell.epoch(), session.epoch(), "the shared cell tracks the head");
+        assert_eq!(cell.head().epoch(), session.epoch());
+    }
+
+    // a batch that applies nothing commits nothing
+    let before = session.epoch();
+    let report = session.apply_edges(&[]).unwrap();
+    assert_eq!(report.applied(), 0);
+    assert_eq!(session.epoch(), before, "empty batches don't mint epochs");
+}
+
+#[test]
+fn pinned_snapshots_are_bit_identical_to_a_reload_at_their_epoch() {
+    let g = small_graph(7);
+    let mut session = Session::load(&g);
+    session.maintain(MotifSize::Three, Direction::Directed).unwrap();
+
+    let q3 = CountQuery::default();
+    let q4 = CountQuery { size: MotifSize::Four, ..Default::default() };
+
+    // pin the current epoch (maintain committed one), remember its
+    // graph and counts
+    let pinned = session.snapshot();
+    let pinned_epoch = pinned.epoch();
+    let pinned_graph = pinned.snapshot_graph();
+    let before3 = pinned.count(&q3).unwrap();
+    let before4 = pinned.count(&q4).unwrap();
+
+    // the writer moves on: several committed epochs
+    for round in 0..3u32 {
+        session.apply_edges(&insert_batch(&session.snapshot_graph(), round)).unwrap();
+    }
+    assert_eq!(pinned.epoch(), pinned_epoch, "the pin stays at its epoch");
+    assert!(session.epoch() > pinned_epoch);
+
+    // the pinned view still answers exactly as its epoch did: the oracle
+    // is a dedicated session loaded from the graph as pinned
+    let oracle = Session::load(&pinned_graph);
+    for (q, before) in [(&q3, &before3), (&q4, &before4)] {
+        let again = pinned.count(q).unwrap();
+        assert_eq!(again.per_vertex, before.per_vertex, "pinned counts are frozen");
+        let want = oracle.count(q).unwrap();
+        assert_eq!(again.per_vertex, want.per_vertex, "pinned == reload at pinned epoch");
+        assert_eq!(again.total_instances, want.total_instances);
+    }
+    // maintained rows on the pin are frozen too
+    let row0 = pinned.maintained_vertex(MotifSize::Three, Direction::Directed, 0).unwrap();
+    let oracle3 = oracle.count(&q3).unwrap();
+    assert_eq!(row0, oracle3.vertex(0));
+
+    // while the head answers for the mutated graph, same oracle scheme
+    let head = session.snapshot();
+    let fresh = Session::load(&head.snapshot_graph());
+    let got = head.count(&q3).unwrap();
+    let want = fresh.count(&q3).unwrap();
+    assert_eq!(got.per_vertex, want.per_vertex, "head == reload at head epoch");
+}
+
+/// The tentpole's race: scoped readers pinning snapshots while a writer
+/// thread commits batch after batch. Every reader observation must be
+/// internally consistent — the counts of the epoch it pinned, verified
+/// against a dedicated reload of that epoch's graph.
+#[test]
+fn concurrent_readers_race_a_committing_writer() {
+    let g = small_graph(13);
+    let mut session = Session::load_with(&g, &SessionConfig { workers: 2, ..Default::default() });
+    let cell = session.share();
+    let q3 = CountQuery::default();
+
+    let writer_done = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // the writer: 6 committed epochs, no coordination with readers
+        s.spawn(|| {
+            for round in 0..6u32 {
+                let batch = insert_batch(&session.snapshot_graph(), round);
+                session.apply_edges(&batch).unwrap();
+            }
+            writer_done.store(true, Ordering::SeqCst);
+        });
+        // readers: pin whatever head is current, count, and hold the
+        // result to the reload oracle of exactly that pinned epoch
+        for r in 0..3usize {
+            let cell = &cell;
+            let q3 = &q3;
+            let writer_done = &writer_done;
+            s.spawn(move || {
+                let mut checked = 0usize;
+                loop {
+                    let snap = cell.head();
+                    let epoch = snap.epoch();
+                    let got = snap.count(q3).unwrap();
+                    // the pin holds even if the writer commits right now
+                    let oracle = Session::load(&snap.snapshot_graph());
+                    let want = oracle.count(q3).unwrap();
+                    assert_eq!(
+                        got.per_vertex, want.per_vertex,
+                        "reader {r}: epoch {epoch} diverged from its reload oracle"
+                    );
+                    assert_eq!(snap.epoch(), epoch, "the pinned epoch never moves");
+                    checked += 1;
+                    if writer_done.load(Ordering::SeqCst) && checked >= 3 {
+                        break;
+                    }
+                }
+            });
+        }
+    });
+
+    assert_eq!(cell.epoch(), 6, "all writer commits landed");
+}
+
+#[test]
+fn pool_defers_eviction_of_pinned_snapshots() {
+    // entry cap 1: inserting "b" wants to evict "a", but "a" is pinned
+    let mut pool = SessionPool::new(1, 0);
+    pool.insert("a", Session::load(&small_graph(1)));
+    let pin = pool.pin("a").expect("a is resident");
+    pool.insert("b", Session::load(&small_graph(2)));
+
+    let stats = pool.stats();
+    assert!(pool.contains("a"), "pinned entries must never be freed");
+    assert_eq!(stats.entries, 2, "over cap because the victim was pinned");
+    assert!(stats.evictions_deferred >= 1, "the deferral is reported: {stats:?}");
+    assert!(stats.pinned_snapshots >= 1);
+
+    // counting through the pin keeps working even while the pool is
+    // over budget — the query can't have its state freed underneath it
+    let counts = pin.count(&CountQuery::default()).unwrap();
+    let want = Session::load(&small_graph(1)).count(&CountQuery::default()).unwrap();
+    assert_eq!(counts.per_vertex, want.per_vertex);
+
+    // releasing the pin makes "a" evictable again on the next pressure
+    drop(pin);
+    pool.insert("c", Session::load(&small_graph(3)));
+    let stats = pool.stats();
+    assert!(stats.entries <= 2, "unpinned entries evict normally: {stats:?}");
+    assert!(pool.contains("c"));
+}

@@ -159,6 +159,70 @@ fn overlay_parity_with_pending_deltas() {
     }
 }
 
+/// The galloping row merge is a pure strategy swap: for every (center,
+/// after, target-list) shape — hub rows long enough to trigger the
+/// dispatch and tail rows that fall back to the two-pointer walk —
+/// `bits_against` must agree bit-for-bit with the `bits_against_merge`
+/// oracle, hit and miss targets alike, in both directions.
+#[test]
+fn gallop_merge_parity_on_hub_rows() {
+    use vdmc::motifs::probe::{bits_against, bits_against_merge, GALLOP_RATIO};
+
+    let graphs: Vec<(&str, Graph)> = vec![
+        ("star", generators::star(3000)),
+        ("ba", generators::barabasi_albert(800, 4, 17)),
+        ("ba-directed", generators::barabasi_albert_directed(800, 4, 0.3, 19)),
+    ];
+    let mut galloped = 0usize;
+    for (name, g) in &graphs {
+        let n = g.n() as u32;
+        // centers: the heaviest rows (gallop candidates) plus tails
+        // (merge fallback)
+        let mut by_deg: Vec<u32> = (0..n).collect();
+        by_deg.sort_by_key(|&v| std::cmp::Reverse(g.und.degree(v)));
+        let centers: Vec<u32> =
+            by_deg.iter().take(4).chain(by_deg.iter().rev().take(4)).copied().collect();
+        let mut rng = Pcg32::seeded(0xD1CE ^ n as u64);
+        for &center in &centers {
+            for after in [0u32, 5, n / 2] {
+                for t_count in [1usize, 3, 10, 40] {
+                    let span = (n - after - 1).max(1);
+                    let mut targets: Vec<u32> = (0..t_count)
+                        .map(|_| after + 1 + rng.below(span))
+                        .filter(|&t| t != center)
+                        .collect();
+                    targets.sort_unstable();
+                    targets.dedup();
+                    if targets.is_empty() {
+                        continue;
+                    }
+                    let row_len = g.und.neighbors_above(center, after).len();
+                    if targets.len() * GALLOP_RATIO <= row_len {
+                        galloped += 1;
+                    }
+                    for dir in directions(g) {
+                        let mut fast: Vec<(u32, u8)> = Vec::new();
+                        bits_against(g, dir, center, after, &targets, |t, b| {
+                            fast.push((t, b));
+                        });
+                        let mut slow: Vec<(u32, u8)> = Vec::new();
+                        bits_against_merge(g, dir, center, after, &targets, |t, b| {
+                            slow.push((t, b));
+                        });
+                        assert_eq!(
+                            fast, slow,
+                            "{name} center {center} after {after} {dir:?} \
+                             ({} targets, row {row_len})",
+                            targets.len()
+                        );
+                    }
+                }
+            }
+        }
+    }
+    assert!(galloped > 0, "no combination exercised the gallop dispatch");
+}
+
 #[test]
 fn maintained_counters_parity_across_tiers() {
     let g = generators::barabasi_albert_directed(120, 3, 0.2, 31);
