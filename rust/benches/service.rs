@@ -22,6 +22,10 @@
 //!   latency with and without a concurrent writer committing delta
 //!   batches to the same graph: snapshot isolation says the two should
 //!   track each other.
+//! - `bench: "telemetry_overhead"` — min-of-rounds wall time of the
+//!   same count stream with telemetry enabled vs disabled; the spans +
+//!   registry must cost <= 3% on the count path (asserted), with
+//!   bit-identical results.
 //!
 //! Defaults: 3 G(n, 0.01) directed graphs, n = 2000, 6 traffic rounds.
 //! CI shrinks it with `--n 600`.
@@ -33,7 +37,7 @@ use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
-use vdmc::service::{GraphSource, Request, Response, ServiceConfig, VdmcService};
+use vdmc::service::{GraphSource, Request, Response, ServiceConfig, TelemetryConfig, VdmcService};
 use vdmc::stream::EdgeDelta;
 use vdmc::util::json::Json;
 
@@ -182,7 +186,7 @@ fn main() {
     }
 
     let stats = match svc.handle(Request::Stats).expect("stats") {
-        Response::Stats(s) => s,
+        Response::Stats { pool, .. } => pool,
         other => panic!("{other:?}"),
     };
     let mut j = Json::obj();
@@ -222,6 +226,65 @@ fn main() {
         .set("checksum", sink);
     println!("{}", j.to_string_compact());
 
+    // -- telemetry overhead: same count stream, spans + registry on/off --
+    // interleaved min-of-rounds: the cheapest observed pass of each
+    // config, so scheduler noise cancels instead of accumulating
+    println!("# telemetry overhead: interleaved count stream, enabled vs disabled");
+    let telemetry_svc = |enabled: bool| -> VdmcService {
+        let svc = VdmcService::new(ServiceConfig {
+            max_graphs: 0,
+            byte_budget: 0,
+            telemetry: TelemetryConfig { enabled, ..Default::default() },
+            ..Default::default()
+        });
+        for (id, g) in &graphs {
+            svc.handle(load_req(id, g)).expect("load");
+        }
+        svc
+    };
+    let count_stream = |svc: &VdmcService| -> (f64, u64) {
+        let t0 = Instant::now();
+        let mut checksum = 0u64;
+        for (id, _) in &graphs {
+            let (r, _) =
+                svc.handle_timed(Request::Count { graph: id.clone(), query: q3.clone() });
+            checksum = checksum.wrapping_add(match r.expect("count") {
+                Response::Counted { counts, .. } => counts.total_instances,
+                other => panic!("{other:?}"),
+            });
+        }
+        (t0.elapsed().as_secs_f64(), checksum)
+    };
+    let on = telemetry_svc(true);
+    let off = telemetry_svc(false);
+    count_stream(&on); // warm both pools before timing
+    count_stream(&off);
+    let telemetry_rounds = 5usize;
+    let (mut best_on, mut best_off) = (f64::INFINITY, f64::INFINITY);
+    let (mut sum_on, mut sum_off) = (0u64, 0u64);
+    for _ in 0..telemetry_rounds {
+        let (s_on, c_on) = count_stream(&on);
+        let (s_off, c_off) = count_stream(&off);
+        best_on = best_on.min(s_on);
+        best_off = best_off.min(s_off);
+        sum_on = sum_on.wrapping_add(c_on);
+        sum_off = sum_off.wrapping_add(c_off);
+    }
+    assert_eq!(sum_on, sum_off, "telemetry must not change what gets counted");
+    let overhead_pct = (best_on / best_off.max(1e-9) - 1.0) * 100.0;
+    let mut j = Json::obj();
+    j.set("bench", "telemetry_overhead")
+        .set("rounds", telemetry_rounds)
+        .set("enabled_secs", best_on)
+        .set("disabled_secs", best_off)
+        .set("overhead_pct", overhead_pct)
+        .set("checksum", sum_on);
+    println!("{}", j.to_string_compact());
+    assert!(
+        overhead_pct <= 3.0,
+        "full telemetry must cost <= 3% on the count path, got {overhead_pct:.2}%"
+    );
+
     // -- concurrency: scoped-query throughput vs client threads ----------
     // sessions pinned to 1 worker each, so the only parallelism is the
     // client threads sharing pinned snapshots through cloned handles —
@@ -231,6 +294,7 @@ fn main() {
         session: SessionConfig { workers: 1, ..Default::default() },
         max_graphs: 0,
         byte_budget: 0,
+        ..Default::default()
     });
     for (id, g) in &graphs {
         csvc.handle(load_req(id, g)).expect("load");

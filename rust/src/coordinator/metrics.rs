@@ -24,6 +24,26 @@ pub struct WorkerMetrics {
     pub busy_secs: f64,
 }
 
+/// Wall-clock seconds per engine phase of one query: the partition
+/// setup paid by this call (0.0 when served from cache), the parallel
+/// enumeration proper, and the sink merge / result assembly. The phases
+/// are disjoint slices of `RunReport::elapsed_secs`, so consumers can
+/// attribute a slow query without tracing enabled.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseSecs {
+    pub setup: f64,
+    pub enumerate: f64,
+    pub merge: f64,
+}
+
+impl PhaseSecs {
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("setup", self.setup).set("enumerate", self.enumerate).set("merge", self.merge);
+        j
+    }
+}
+
 /// Aggregated run report.
 #[derive(Debug, Clone)]
 pub struct RunReport {
@@ -37,6 +57,8 @@ pub struct RunReport {
     pub setup_secs: f64,
     /// True when the query reused a session's cached setup.
     pub setup_reused: bool,
+    /// Per-phase wall-clock breakdown of this call.
+    pub phase_secs: PhaseSecs,
     /// Bytes held by the hybrid adjacency tier's bitmap hub rows (0 when
     /// the session runs pure CSR) — the memory the probe speedup costs.
     pub tier_memory_bytes: usize,
@@ -105,6 +127,7 @@ impl RunReport {
             .set("queue_units", self.queue_units)
             .set("setup_secs", self.setup_secs)
             .set("setup_reused", self.setup_reused)
+            .set("phase_secs", self.phase_secs.to_json())
             .set("tier_memory_bytes", self.tier_memory_bytes)
             .set("per_class_totals", self.per_class_totals.clone())
             .set("steals", self.total_steals())
@@ -147,6 +170,7 @@ mod tests {
             queue_units: 50,
             setup_secs: 0.1,
             setup_reused: false,
+            phase_secs: PhaseSecs { setup: 0.1, enumerate: 1.6, merge: 0.3 },
             tier_memory_bytes: 0,
             per_class_totals: vec![40, 60],
         }
@@ -185,6 +209,15 @@ mod tests {
         let s = report(&[1.0, 2.0]).to_json().to_string_compact();
         assert!(s.contains("\"workers\":["));
         assert!(s.contains("\"busy_secs\":2"));
+    }
+
+    #[test]
+    fn json_carries_phase_breakdown() {
+        let j = report(&[1.0]).to_json();
+        let phases = j.get("phase_secs").expect("phase_secs object");
+        assert_eq!(phases.get("setup").and_then(Json::as_f64), Some(0.1));
+        assert_eq!(phases.get("enumerate").and_then(Json::as_f64), Some(1.6));
+        assert_eq!(phases.get("merge").and_then(Json::as_f64), Some(0.3));
     }
 
     #[test]

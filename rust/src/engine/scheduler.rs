@@ -29,7 +29,9 @@
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
+use std::time::Instant;
 
+use crate::telemetry::trace;
 use crate::util::rng::Pcg32;
 
 use super::partition::WorkItem;
@@ -76,7 +78,12 @@ pub struct SharedCursorScheduler {
 
 impl SharedCursorScheduler {
     pub fn new(items: Vec<WorkItem>) -> SharedCursorScheduler {
-        SharedCursorScheduler { items, cursor: AtomicUsize::new(0) }
+        // constructors run on the request thread, so queue building is
+        // visible to an active trace as the "schedule" phase
+        trace::time_phase("schedule", || SharedCursorScheduler {
+            items,
+            cursor: AtomicUsize::new(0),
+        })
     }
 }
 
@@ -122,6 +129,7 @@ impl WorkStealingScheduler {
     }
 
     fn build(per_worker: Vec<Vec<WorkItem>>, steal_half: bool) -> WorkStealingScheduler {
+        let t0 = Instant::now();
         let n_items = per_worker.iter().map(|q| q.len()).sum();
         let n_workers = per_worker.len();
         let queues = per_worker
@@ -134,6 +142,7 @@ impl WorkStealingScheduler {
         let rngs = (0..n_workers)
             .map(|w| Mutex::new(Pcg32::new(0x5EED ^ w as u64, w as u64)))
             .collect();
+        trace::record_phase("schedule", t0.elapsed().as_secs_f64());
         WorkStealingScheduler { queues, rngs, n_items, steal_half }
     }
 }

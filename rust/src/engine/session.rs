@@ -46,7 +46,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::metrics::{RunReport, WorkerMetrics};
+use crate::coordinator::metrics::{PhaseSecs, RunReport, WorkerMetrics};
 use crate::graph::csr::Graph;
 use crate::graph::ordering::VertexOrdering;
 use crate::graph::{AdjacencyMode, GraphProbe};
@@ -56,6 +56,7 @@ use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
 use crate::stream::delta::{reenumerate_edge, CountOnlyError, EdgeChange, MaintainedCounts};
 use crate::stream::overlay::{DeltaOverlay, OverlayView};
 use crate::stream::{DeltaOp, DeltaReport, EdgeDelta};
+use crate::telemetry::trace;
 
 use super::partition::{total_units, PartitionSet, WorkItem};
 use super::query::{
@@ -490,7 +491,9 @@ impl Session {
         };
         let mut maintained = head.maintained.as_ref().clone();
         maintained.push(MaintainedCounts::new(size, direction, rows, instances));
+        let t_commit = Instant::now();
         self.cell.commit(head.next(None, None, None, Some(maintained)));
+        trace::record_phase("commit", t_commit.elapsed().as_secs_f64());
         Ok(())
     }
 
@@ -642,9 +645,19 @@ impl Session {
             // counters are only re-cloned when any exist; an empty list
             // keeps sharing the head's empty Arc
             let maintained = (!maintained.is_empty()).then_some(maintained);
+            let t_commit = Instant::now();
             self.cell.commit(head.next(new_h, new_partitions, Some(overlay), maintained));
+            trace::record_phase("commit", t_commit.elapsed().as_secs_f64());
         }
         report.elapsed_secs = t0.elapsed().as_secs_f64();
+        trace::with_registry(|reg| {
+            reg.counter("vdmc_engine_overlay_patches_total", "Overlay edge patches applied.")
+                .add(report.applied() as u64);
+            if report.compactions > 0 {
+                reg.counter("vdmc_engine_compactions_total", "Overlay compactions committed.")
+                    .add(report.compactions as u64);
+            }
+        });
         Ok(report)
     }
 }
@@ -785,11 +798,15 @@ impl SessionSnapshot {
         let start = Instant::now();
         let mapper = SlotMapper::new(query.size.k(), query.direction);
 
-        let (mut out, metrics, queue_items, queue_units) = if self.overlay.is_empty() {
+        let mut setup_phase = 0.0;
+        let (mut out, metrics, queue_items, queue_units, phases) = if self.overlay.is_empty() {
             self.query_on(&*self.h, &self.partitions, query, &mapper)?
         } else {
+            let t_setup = Instant::now();
             let view = OverlayView::new(&self.h, &self.overlay);
             let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
+            setup_phase = t_setup.elapsed().as_secs_f64();
+            trace::record_phase("setup", setup_phase);
             self.query_on(&view, &partitions, query, &mapper)?
         };
         let elapsed = start.elapsed().as_secs_f64();
@@ -812,9 +829,31 @@ impl SessionSnapshot {
             queue_units,
             setup_secs: if reused { 0.0 } else { self.setup_secs },
             setup_reused: reused,
+            phase_secs: PhaseSecs { setup: setup_phase, ..phases },
             tier_memory_bytes: self.h.tier_memory_bytes(),
             per_class_totals,
         };
+        let class_ids = mapper.class_ids();
+        let k_str = query.size.k().to_string();
+        trace::with_registry(|reg| {
+            reg.counter("vdmc_engine_units_total", "Work units scheduled by queries.")
+                .add(report.queue_units as u64);
+            reg.counter("vdmc_engine_items_total", "Work items scheduled by queries.")
+                .add(report.queue_items as u64);
+            reg.counter("vdmc_engine_steals_total", "Work items claimed by stealing.")
+                .add(report.total_steals());
+            for (slot, &total) in report.per_class_totals.iter().enumerate() {
+                if total > 0 {
+                    let class = class_ids[slot].to_string();
+                    reg.counter_with(
+                        "vdmc_engine_instances_total",
+                        "Motif instances emitted, by motif size and class id.",
+                        &[("k", &k_str), ("class", &class)],
+                    )
+                    .add(total);
+                }
+            }
+        });
         Ok((out, report))
     }
 
@@ -843,14 +882,15 @@ impl SessionSnapshot {
 
     /// Run one query over any probe surface (the cached CSR or the
     /// overlay view), producing the final (original-id) result plus the
-    /// per-worker metrics and queue statistics.
+    /// per-worker metrics, queue statistics and the enumerate/merge
+    /// phase timings (`PhaseSecs::setup` is stamped by the caller).
     fn query_on<G: GraphProbe + Sync>(
         &self,
         h: &G,
         partitions: &PartitionSet,
         query: &MotifQuery,
         mapper: &SlotMapper,
-    ) -> Result<(QueryOutput, Vec<WorkerMetrics>, usize, usize)> {
+    ) -> Result<(QueryOutput, Vec<WorkerMetrics>, usize, usize, PhaseSecs)> {
         let k = query.size.k();
         let n_classes = mapper.n_classes();
         // the builder validates these; struct-literal queries get the
@@ -866,8 +906,11 @@ impl SessionSnapshot {
             Output::Counts => {
                 let ranges = partitions.ranges();
                 let sink = CountEnumSink::new(query.sink, self.n, n_classes, &ranges);
+                let t_run = Instant::now();
                 let (metrics, qi, qu) =
                     run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let enumerate = t_run.elapsed().as_secs_f64();
+                let t_merge = Instant::now();
                 let (mut rows, instances) = sink.finish();
                 if let Some(sc) = &scope {
                     // out-of-scope rows hold partial counts (only their
@@ -896,12 +939,15 @@ impl SessionSnapshot {
                     total_instances: instances,
                     elapsed_secs: 0.0, // stamped by query_with_report
                 };
-                (QueryOutput::Counts(counts), metrics, qi, qu)
+                (QueryOutput::Counts(counts), metrics, qi, qu, close_phases(enumerate, t_merge))
             }
             Output::Instances { limit } => {
                 let sink = InstanceEnumSink::new(limit, n_classes);
+                let t_run = Instant::now();
                 let (metrics, qi, qu) =
                     run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let enumerate = t_run.elapsed().as_secs_f64();
+                let t_merge = Instant::now();
                 let raw = sink.finish();
                 let mut instances: Vec<MotifInstance> =
                     raw.recs.iter().map(|r| self.instance_of(r, k)).collect();
@@ -917,12 +963,15 @@ impl SessionSnapshot {
                     total_seen: raw.total_seen,
                     per_class_seen: raw.per_class_seen,
                 };
-                (QueryOutput::Instances(list), metrics, qi, qu)
+                (QueryOutput::Instances(list), metrics, qi, qu, close_phases(enumerate, t_merge))
             }
             Output::Sample { per_class, seed } => {
                 let sink = SampleEnumSink::new(per_class, seed, n_classes);
+                let t_run = Instant::now();
                 let (metrics, qi, qu) =
                     run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let enumerate = t_run.elapsed().as_secs_f64();
+                let t_merge = Instant::now();
                 let raw = sink.finish();
                 let class_ids = mapper.class_ids();
                 let classes: Vec<ClassSample> = raw
@@ -944,12 +993,15 @@ impl SessionSnapshot {
                     classes,
                     total_seen: raw.total_seen,
                 };
-                (QueryOutput::Sample(sample), metrics, qi, qu)
+                (QueryOutput::Sample(sample), metrics, qi, qu, close_phases(enumerate, t_merge))
             }
             Output::TopVertices { k: top_k } => {
                 let sink = TopVerticesEnumSink::new(self.n, n_classes);
+                let t_run = Instant::now();
                 let (metrics, qi, qu) =
                     run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                let enumerate = t_run.elapsed().as_secs_f64();
+                let t_merge = Instant::now();
                 let (mut rows, instances) = sink.finish();
                 if let Some(sc) = &scope {
                     zero_non_members(&mut rows, n_classes, &sc.members);
@@ -975,11 +1027,11 @@ impl SessionSnapshot {
                     per_class,
                     total_instances: instances,
                 };
-                (QueryOutput::TopVertices(top), metrics, qi, qu)
+                (QueryOutput::TopVertices(top), metrics, qi, qu, close_phases(enumerate, t_merge))
             }
         };
-        let (out, metrics, qi, qu) = out;
-        Ok((out, metrics, qi, qu))
+        let (out, metrics, qi, qu, phases) = out;
+        Ok((out, metrics, qi, qu, phases))
     }
 
     /// Map one buffered instance record to original ids, members sorted.
@@ -1194,6 +1246,15 @@ fn expand_hops<G: GraphProbe>(h: &G, start: &VertexBits, hops: usize) -> VertexB
         frontier = next;
     }
     out
+}
+
+/// Close the enumerate/merge bookkeeping of one `query_on` arm: record
+/// the enumerate span on the active trace (the sinks record their own
+/// `merge` span inside `finish`) and return the report's phase
+/// breakdown, whose `merge` covers sink merge *plus* result assembly.
+fn close_phases(enumerate: f64, merge_started: Instant) -> PhaseSecs {
+    trace::record_phase("enumerate", enumerate);
+    PhaseSecs { setup: 0.0, enumerate, merge: merge_started.elapsed().as_secs_f64() }
 }
 
 /// Drive one query's enumeration into any [`EnumSink`]: build the

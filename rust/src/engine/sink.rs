@@ -42,6 +42,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::motifs::counter::{AtomicCounter, CounterMode, ShardCounter};
+use crate::telemetry::trace;
 
 // ================================================================ events
 
@@ -96,9 +97,10 @@ impl CountEnumSink {
     }
 
     /// Collapse into `(per-vertex counts, total instances)` after every
-    /// worker handle has flushed.
+    /// worker handle has flushed. Recorded as the trace's "merge" phase
+    /// (finish runs on the request thread).
     pub fn finish(self) -> (Vec<u64>, u64) {
-        self.inner.finish()
+        trace::time_phase("merge", || self.inner.finish())
     }
 }
 
@@ -204,13 +206,15 @@ impl InstanceEnumSink {
     }
 
     pub fn finish(self) -> RawInstances {
-        let sh = self.shared.into_inner().unwrap();
-        RawInstances {
-            truncated: sh.seen > sh.recs.len() as u64,
-            recs: sh.recs,
-            per_class_seen: sh.per_class,
-            total_seen: sh.seen,
-        }
+        trace::time_phase("merge", || {
+            let sh = self.shared.into_inner().unwrap();
+            RawInstances {
+                truncated: sh.seen > sh.recs.len() as u64,
+                recs: sh.recs,
+                per_class_seen: sh.per_class,
+                total_seen: sh.seen,
+            }
+        })
     }
 }
 
@@ -392,18 +396,20 @@ impl SampleEnumSink {
     }
 
     pub fn finish(self) -> RawSample {
-        let classes = self.shared.into_inner().unwrap();
-        let total_seen = classes.iter().map(|c| c.seen).sum();
-        RawSample {
-            per_class: classes
-                .into_iter()
-                .map(|mut c| {
-                    c.entries.sort_unstable_by_key(|&(k, r)| (k, r.verts));
-                    (c.seen, c.entries.into_iter().map(|(_, r)| r).collect())
-                })
-                .collect(),
-            total_seen,
-        }
+        trace::time_phase("merge", || {
+            let classes = self.shared.into_inner().unwrap();
+            let total_seen = classes.iter().map(|c| c.seen).sum();
+            RawSample {
+                per_class: classes
+                    .into_iter()
+                    .map(|mut c| {
+                        c.entries.sort_unstable_by_key(|&(k, r)| (k, r.verts));
+                        (c.seen, c.entries.into_iter().map(|(_, r)| r).collect())
+                    })
+                    .collect(),
+                total_seen,
+            }
+        })
     }
 }
 
@@ -467,8 +473,10 @@ impl TopVerticesEnumSink {
 
     /// The merged `(per-vertex rows, total instances)` in processing ids.
     pub fn finish(self) -> (Vec<u64>, u64) {
-        let merged = self.merged.into_inner().unwrap();
-        (merged.counts, merged.instances)
+        trace::time_phase("merge", || {
+            let merged = self.merged.into_inner().unwrap();
+            (merged.counts, merged.instances)
+        })
     }
 }
 

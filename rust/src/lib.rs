@@ -131,8 +131,9 @@
 //!     source: GraphSource::Edges { n: 3, edges: vec![(0, 1), (1, 2), (2, 0)] },
 //!     directed: false,
 //! }).unwrap();
-//! if let Response::Stats(stats) = svc.handle(Request::Stats).unwrap() {
-//!     println!("pool: {} resident, {} bytes", stats.entries, stats.resident_bytes);
+//! if let Response::Stats { pool, process } = svc.handle(Request::Stats).unwrap() {
+//!     println!("pool: {} resident, {} bytes", pool.entries, pool.resident_bytes);
+//!     println!("up {:.0}s, {} requests", process.uptime_secs, process.total_requests());
 //! }
 //! ```
 
@@ -144,6 +145,7 @@ pub mod motifs;
 pub mod runtime;
 pub mod service;
 pub mod stream;
+pub mod telemetry;
 pub mod theory;
 pub mod toolbox;
 pub mod util;

@@ -27,7 +27,10 @@ use vdmc::engine::{
 use vdmc::graph::{generators, io};
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
-use vdmc::service::{serve_connection, serve_tcp, ServeOptions, ServiceConfig, VdmcService};
+use vdmc::service::{
+    serve_connection, serve_tcp, ServeOptions, ServiceConfig, TelemetryConfig, VdmcService,
+};
+use vdmc::telemetry::{serve_exposition, set_log_level, LogLevel};
 use vdmc::stream;
 use vdmc::theory;
 use vdmc::toolbox;
@@ -62,15 +65,24 @@ stdout line (blank lines and #-comments skipped; "id" is echoed back):
     {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
     {"op":"evict","graph":"toy"}
     {"op":"stats"}
+    {"op":"metrics"}
 a scope ("vertices", or "seeds"+"radius") restricts count/instances/
 sample to instances touching it — filtered at the work-unit level, so
 scoped queries do neighborhood-local work. a failed request answers
-{"ok":false,...} and the daemon keeps serving.
+{"ok":false,...} and the daemon keeps serving. any request may carry a
+"trace":"<id>" field; it is echoed on the response (a generated id is
+stamped when absent) and tags that request's span in the trace buffer
+and slow-query log.
 
 with --tcp ADDR the same protocol runs over TCP, one thread per client
 against one shared snapshot-isolated pool (reads never block writes).
 closing the daemon's stdin drains every connection and exits; in both
-modes every in-flight response is written before shutdown."#;
+modes every in-flight response is written before shutdown.
+
+with --metrics-addr ADDR a Prometheus text endpoint (GET /metrics)
+serves the same registry the "metrics" op returns: request counts and
+latency histograms per op, pool occupancy/evictions, engine work-unit
+and instance counters, phase timings, transport bytes."#;
 
 fn app() -> App {
     App {
@@ -145,6 +157,13 @@ fn app() -> App {
             .opt("tcp", "listen on this address (e.g. 127.0.0.1:7171) instead of stdin", None)
             .opt("inflight", "responses queued per client before its handler blocks", Some("64"))
             .opt("max-clients", "concurrent TCP clients (0 = unbounded)", Some("0"))
+            .opt(
+                "metrics-addr",
+                "serve Prometheus text on this address (e.g. 127.0.0.1:7172)",
+                None,
+            )
+            .opt("log-level", "stderr log verbosity: off | error | info | debug", Some("info"))
+            .opt("slow-query-ms", "log requests slower than this, in ms (0 = never)", Some("0"))
             .extra(SERVE_EXAMPLES),
             Command::new("validate", "Fig. 3: G(n,p) measurement vs Eq. 7.4 theory")
                 .opt("n", "vertex count", Some("1000"))
@@ -640,11 +659,39 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         inflight: args.req("inflight").map_err(anyhow::Error::msg)?,
         max_clients: args.req("max-clients").map_err(anyhow::Error::msg)?,
     };
+    let level = args.req::<String>("log-level").map_err(anyhow::Error::msg)?;
+    set_log_level(
+        LogLevel::parse(&level)
+            .ok_or_else(|| anyhow::anyhow!("--log-level must be off|error|info|debug"))?,
+    );
+    let slow_ms: u64 = args.req("slow-query-ms").map_err(anyhow::Error::msg)?;
     let svc = VdmcService::new(ServiceConfig {
         session,
         max_graphs,
         byte_budget: budget_mb << 20,
+        telemetry: TelemetryConfig {
+            slow_query_secs: slow_ms as f64 / 1000.0,
+            ..Default::default()
+        },
     });
+
+    // shared by the transport drain and the metrics endpoint, whichever
+    // combination of them this invocation runs
+    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_thread = match args.get("metrics-addr") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)?;
+            let local = listener.local_addr()?;
+            eprintln!("vdmc serve: metrics on http://{local}/metrics");
+            let svc = svc.clone();
+            let flag = std::sync::Arc::clone(&shutdown);
+            Some(std::thread::spawn(move || {
+                let render = move || svc.metrics_text();
+                serve_exposition(listener, &flag, &render)
+            }))
+        }
+        None => None,
+    };
 
     match args.get("tcp") {
         Some(addr) => {
@@ -659,7 +706,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             // stdin EOF is the drain signal: the accept loop stops, every
             // connection's read side is shut down, in-flight responses
             // flush, and serve_tcp returns once all clients are joined
-            let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
             let flag = std::sync::Arc::clone(&shutdown);
             std::thread::spawn(move || {
                 let mut sink = String::new();
@@ -686,6 +732,15 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             let stdin = std::io::stdin();
             let served = serve_connection(&svc, stdin.lock(), &mut std::io::stdout(), &opts)?;
             eprintln!("vdmc serve: stdin closed after {served} request(s)");
+        }
+    }
+
+    shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+    if let Some(t) = metrics_thread {
+        match t.join() {
+            Ok(Ok(scrapes)) => eprintln!("vdmc serve: metrics endpoint served {scrapes} scrape(s)"),
+            Ok(Err(e)) => eprintln!("vdmc serve: metrics endpoint failed: {e}"),
+            Err(_) => eprintln!("vdmc serve: metrics endpoint thread panicked"),
         }
     }
 

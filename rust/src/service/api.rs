@@ -61,8 +61,12 @@ pub enum Request {
     Maintain { graph: String, size: MotifSize, direction: Direction, output: Output },
     /// Drop a graph from the pool.
     Evict { graph: String },
-    /// Pool metrics snapshot.
+    /// Pool + process metrics snapshot.
     Stats,
+    /// Prometheus text exposition of the service's metrics registry —
+    /// the same body `vdmc serve --metrics-addr` serves over HTTP, for
+    /// clients that only speak the JSONL wire.
+    Metrics,
 }
 
 impl Request {
@@ -78,6 +82,7 @@ impl Request {
             Request::Maintain { .. } => "maintain",
             Request::Evict { .. } => "evict",
             Request::Stats => "stats",
+            Request::Metrics => "metrics",
         }
     }
 
@@ -92,8 +97,31 @@ impl Request {
             | Request::ApplyEdges { graph, .. }
             | Request::Maintain { graph, .. }
             | Request::Evict { graph } => Some(graph),
-            Request::Stats => None,
+            Request::Stats | Request::Metrics => None,
         }
+    }
+}
+
+/// Process-level identity and traffic counters alongside the pool's in a
+/// [`Response::Stats`] answer.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ProcessStats {
+    /// Seconds since the service was constructed.
+    pub uptime_secs: f64,
+    /// Crate version (`CARGO_PKG_VERSION`) of the serving binary.
+    pub version: String,
+    /// Requests handled per wire op, lifetime (sorted by op name).
+    pub requests_by_op: Vec<(String, u64)>,
+    /// Wire bytes read from clients (0 for in-process callers).
+    pub wire_bytes_in: u64,
+    /// Wire bytes written to clients (0 for in-process callers).
+    pub wire_bytes_out: u64,
+}
+
+impl ProcessStats {
+    /// Total requests across all ops.
+    pub fn total_requests(&self) -> u64 {
+        self.requests_by_op.iter().map(|(_, n)| n).sum()
     }
 }
 
@@ -146,8 +174,10 @@ pub enum Response {
     Maintained { graph: String, size: MotifSize, direction: Direction, instances: u64 },
     /// Eviction outcome.
     Evicted { graph: String, found: bool },
-    /// Pool metrics.
-    Stats(PoolStats),
+    /// Pool + process metrics.
+    Stats { pool: PoolStats, process: ProcessStats },
+    /// Prometheus text exposition (format 0.0.4).
+    Metrics { text: String },
 }
 
 impl Response {
@@ -162,7 +192,8 @@ impl Response {
             Response::Applied { .. } => "apply_edges",
             Response::Maintained { .. } => "maintain",
             Response::Evicted { .. } => "evict",
-            Response::Stats(_) => "stats",
+            Response::Stats { .. } => "stats",
+            Response::Metrics { .. } => "metrics",
         }
     }
 }

@@ -43,6 +43,13 @@
 //! - [`serve`] — the transports: single-connection JSONL loops
 //!   (stdin/stdout) and the thread-per-client TCP listener.
 //!
+//! The service also owns the process's **telemetry**: one
+//! [`MetricsRegistry`] shared with the pool and the transports, a root
+//! [`trace`] span per request (so engine phases land in
+//! `vdmc_phase_seconds` and in the bounded trace buffer), and the
+//! Prometheus text both [`Request::Metrics`] and `vdmc serve
+//! --metrics-addr` expose.
+//!
 //! Every later ROADMAP item (GPU sink, NUMA pinning, real-world
 //! datasets) plugs in *below* this API: clients keep sending the same
 //! requests.
@@ -52,8 +59,8 @@ pub mod pool;
 pub mod serve;
 pub mod wire;
 
-pub use api::{GraphSource, Request, Response, VertexRow};
-pub use pool::{GraphStat, OpLatency, PoolStats, SessionPool};
+pub use api::{GraphSource, ProcessStats, Request, Response, VertexRow};
+pub use pool::{GraphStat, OpLatency, PoolStats, SessionPool, REQUEST_SECONDS};
 pub use serve::{serve_connection, serve_tcp, ServeOptions};
 
 use std::sync::{Arc, Mutex, MutexGuard};
@@ -66,6 +73,29 @@ use crate::engine::{
 };
 use crate::graph::csr::Graph;
 use crate::graph::io;
+use crate::telemetry::metrics::{MetricsRegistry, ValueSnapshot};
+use crate::telemetry::{prometheus, trace, LogLevel, TraceBuffer, TraceRecord};
+
+/// Telemetry knobs of one service.
+#[derive(Debug, Clone)]
+pub struct TelemetryConfig {
+    /// Master switch. Off: no request counters, no latency histograms
+    /// (so [`PoolStats::ops`] stays empty), no spans, no trace buffer —
+    /// the bench baseline for measuring telemetry overhead.
+    pub enabled: bool,
+    /// Requests slower than this many seconds emit one structured
+    /// slow-query line on stderr and count in `vdmc_slow_queries_total`
+    /// (0.0 = never).
+    pub slow_query_secs: f64,
+    /// Finished root spans retained in memory (newest win).
+    pub trace_buffer: usize,
+}
+
+impl Default for TelemetryConfig {
+    fn default() -> Self {
+        TelemetryConfig { enabled: true, slow_query_secs: 0.0, trace_buffer: 256 }
+    }
+}
 
 /// Service sizing: how sessions are built and how many stay resident.
 #[derive(Debug, Clone)]
@@ -76,11 +106,18 @@ pub struct ServiceConfig {
     pub max_graphs: usize,
     /// Pool byte budget over resident session bytes (0 = unbounded).
     pub byte_budget: usize,
+    /// Metrics / tracing knobs.
+    pub telemetry: TelemetryConfig,
 }
 
 impl Default for ServiceConfig {
     fn default() -> Self {
-        ServiceConfig { session: SessionConfig::default(), max_graphs: 8, byte_budget: 0 }
+        ServiceConfig {
+            session: SessionConfig::default(),
+            max_graphs: 8,
+            byte_budget: 0,
+            telemetry: TelemetryConfig::default(),
+        }
     }
 }
 
@@ -96,14 +133,145 @@ pub struct VdmcService {
 struct ServiceInner {
     session_cfg: SessionConfig,
     pool: Mutex<SessionPool>,
+    telemetry: ServiceTelemetry,
+}
+
+/// Per-service observability state: the metrics registry every layer
+/// (pool, transports, engine spans) records into, the trace buffer of
+/// recent requests, and the slow-query threshold.
+pub struct ServiceTelemetry {
+    enabled: bool,
+    registry: Arc<MetricsRegistry>,
+    traces: TraceBuffer,
+    slow_query_secs: f64,
+    start: Instant,
+}
+
+impl ServiceTelemetry {
+    fn new(cfg: &TelemetryConfig, registry: Arc<MetricsRegistry>) -> ServiceTelemetry {
+        if cfg.enabled {
+            // pre-register the always-there families so a scrape shows
+            // them at zero instead of omitting them until first use
+            registry.counter("vdmc_slow_queries_total", HELP_SLOW_QUERIES);
+        }
+        ServiceTelemetry {
+            enabled: cfg.enabled,
+            registry,
+            traces: TraceBuffer::new(cfg.trace_buffer),
+            slow_query_secs: cfg.slow_query_secs,
+            start: Instant::now(),
+        }
+    }
+
+    /// The registry all of this service's metrics live in.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
+    }
+
+    /// Finished root spans, newest last.
+    pub fn traces(&self) -> &TraceBuffer {
+        &self.traces
+    }
+
+    /// Seconds since the service was constructed.
+    pub fn uptime_secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Account one finished request: traffic counters, the latency
+    /// histogram [`PoolStats::ops`] reads, the trace buffer, and the
+    /// slow-query log line.
+    fn on_request(&self, record: TraceRecord, errored: bool) {
+        if !self.enabled {
+            return;
+        }
+        let op = &record.op;
+        self.registry
+            .counter_with("vdmc_requests_total", HELP_REQUESTS, &[("op", op)])
+            .inc();
+        self.registry
+            .histogram_with(REQUEST_SECONDS, HELP_REQUEST_SECONDS, &[("op", op)])
+            .record(record.total_secs);
+        if errored {
+            self.registry
+                .counter_with("vdmc_request_errors_total", HELP_REQUEST_ERRORS, &[("op", op)])
+                .inc();
+        }
+        if self.slow_query_secs > 0.0 && record.total_secs >= self.slow_query_secs {
+            self.registry.counter("vdmc_slow_queries_total", HELP_SLOW_QUERIES).inc();
+            trace::log(
+                LogLevel::Info,
+                "vdmc::service",
+                "slow query",
+                &[("query", record.to_json())],
+            );
+        }
+        self.traces.push(record);
+    }
+
+    /// Process-level identity/traffic fields of a stats answer, read off
+    /// the registry.
+    fn process_stats(&self) -> ProcessStats {
+        let mut requests_by_op = Vec::new();
+        let mut wire_bytes_in = 0u64;
+        let mut wire_bytes_out = 0u64;
+        for fam in self.registry.snapshot() {
+            match fam.name {
+                "vdmc_requests_total" => {
+                    for s in &fam.series {
+                        if let ValueSnapshot::Counter(n) = s.value {
+                            let op = label_value(&s.labels, "op").unwrap_or_default();
+                            requests_by_op.push((op, n));
+                        }
+                    }
+                }
+                "vdmc_transport_bytes_total" => {
+                    for s in &fam.series {
+                        if let ValueSnapshot::Counter(n) = s.value {
+                            match label_value(&s.labels, "dir").as_deref() {
+                                Some("in") => wire_bytes_in = n,
+                                Some("out") => wire_bytes_out = n,
+                                _ => {}
+                            }
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        requests_by_op.sort();
+        ProcessStats {
+            uptime_secs: self.uptime_secs(),
+            version: env!("CARGO_PKG_VERSION").to_string(),
+            requests_by_op,
+            wire_bytes_in,
+            wire_bytes_out,
+        }
+    }
+}
+
+const HELP_REQUESTS: &str = "Requests handled, by wire op.";
+const HELP_REQUEST_SECONDS: &str = "Request wall-clock seconds, by wire op.";
+const HELP_REQUEST_ERRORS: &str = "Requests answered with an error, by wire op.";
+const HELP_SLOW_QUERIES: &str = "Requests slower than the slow-query threshold.";
+
+/// Value of `key` in a snapshot's label set.
+fn label_value(labels: &[(&'static str, String)], key: &str) -> Option<String> {
+    labels.iter().find(|(k, _)| *k == key).map(|(_, v)| v.clone())
 }
 
 impl VdmcService {
     pub fn new(cfg: ServiceConfig) -> VdmcService {
+        let registry = Arc::new(MetricsRegistry::new());
         VdmcService {
             inner: Arc::new(ServiceInner {
                 session_cfg: cfg.session,
-                pool: Mutex::new(SessionPool::new(cfg.max_graphs, cfg.byte_budget)),
+                pool: Mutex::new(SessionPool::with_registry(
+                    cfg.max_graphs,
+                    cfg.byte_budget,
+                    Arc::clone(&registry),
+                )),
+                telemetry: ServiceTelemetry::new(&cfg.telemetry, registry),
             }),
         }
     }
@@ -123,19 +291,29 @@ impl VdmcService {
         self.inner.pool.lock().expect("service pool lock poisoned")
     }
 
+    /// Telemetry state: registry, trace buffer, uptime.
+    pub fn telemetry(&self) -> &ServiceTelemetry {
+        &self.inner.telemetry
+    }
+
     /// Pin the current snapshot of `id`. Holds the pool lock only for
-    /// the lookup; the query then runs lock-free on the snapshot.
+    /// the lookup; the query then runs lock-free on the snapshot. The
+    /// routing time is the active trace's "pin" phase.
     fn pin(&self, id: &str) -> Result<Arc<SessionSnapshot>> {
-        self.lock_pool()
-            .pin(id)
-            .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+        trace::time_phase("pin", || {
+            self.lock_pool()
+                .pin(id)
+                .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+        })
     }
 
     /// Check out the writer handle of `id` (see [`SessionPool::writer`]).
     fn writer(&self, id: &str) -> Result<Arc<Mutex<Session>>> {
-        self.lock_pool()
-            .writer(id)
-            .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+        trace::time_phase("pin", || {
+            self.lock_pool()
+                .writer(id)
+                .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+        })
     }
 
     /// Handle one request. Errors are per-request: the service stays
@@ -302,20 +480,97 @@ impl VdmcService {
                 let found = self.lock_pool().evict(&graph);
                 Ok(Response::Evicted { graph, found })
             }
-            Request::Stats => Ok(Response::Stats(self.lock_pool().stats())),
+            Request::Stats => {
+                let pool = self.lock_pool().stats();
+                Ok(Response::Stats { pool, process: self.inner.telemetry.process_stats() })
+            }
+            Request::Metrics => Ok(Response::Metrics { text: self.metrics_text() }),
         }
     }
 
     /// As [`VdmcService::handle`], returning the wall-clock seconds the
     /// request took — the per-request timing the wire reports. Also
-    /// feeds the per-op latency digests in [`PoolStats::ops`].
+    /// feeds the request counters and the per-op latency digests in
+    /// [`PoolStats::ops`].
     pub fn handle_timed(&self, req: Request) -> (Result<Response>, f64) {
-        let op = req.op();
-        let t0 = Instant::now();
-        let out = self.handle(req);
-        let secs = t0.elapsed().as_secs_f64();
-        self.lock_pool().record_latency(op, secs);
+        let (out, secs, _) = self.handle_traced(req, None);
         (out, secs)
+    }
+
+    /// Handle one request under a root trace span. `trace_id` is the
+    /// client-supplied id (the wire's `"trace"` field), or `None` to
+    /// generate one; either way the id used is returned so the transport
+    /// can echo it. Engine phases recorded inside land in the trace
+    /// buffer and the `vdmc_phase_seconds` histograms.
+    pub fn handle_traced(
+        &self,
+        req: Request,
+        trace_id: Option<String>,
+    ) -> (Result<Response>, f64, String) {
+        let tel = &self.inner.telemetry;
+        let op = req.op();
+        let graph = req.graph().map(str::to_string);
+        let trace_id = trace_id.unwrap_or_else(trace::gen_trace_id);
+        let span = trace::start_root(
+            trace_id.clone(),
+            if tel.enabled { Some(Arc::clone(&tel.registry)) } else { None },
+        );
+        let out = self.handle(req);
+        let (phases, total_secs) = span.finish();
+        tel.on_request(
+            TraceRecord { trace_id: trace_id.clone(), op: op.into(), graph, total_secs, phases },
+            out.is_err(),
+        );
+        (out, total_secs, trace_id)
+    }
+
+    /// Prometheus text exposition (format 0.0.4) of the full registry —
+    /// the body behind both [`Request::Metrics`] and `vdmc serve
+    /// --metrics-addr`. Pool totals are mirrored into the registry here,
+    /// at scrape time (the pool's mutex-guarded tallies stay the source
+    /// of truth).
+    pub fn metrics_text(&self) -> String {
+        let tel = &self.inner.telemetry;
+        let stats = self.lock_pool().stats();
+        sync_pool_metrics(&tel.registry, &stats);
+        tel.registry.gauge("vdmc_process_uptime_seconds", "Seconds since service start.").set(
+            tel.uptime_secs() as i64,
+        );
+        prometheus::render(&tel.registry.snapshot())
+    }
+}
+
+/// Mirror a [`PoolStats`] snapshot into the registry via absolute
+/// stores, so scrapes see the pool's counters without a second write
+/// path on the request flow.
+fn sync_pool_metrics(reg: &MetricsRegistry, s: &PoolStats) {
+    let help_ev = "Sessions evicted from the pool, by cause.";
+    reg.counter("vdmc_pool_hits_total", "Pool lookups served by a resident session.")
+        .store(s.hits);
+    reg.counter("vdmc_pool_misses_total", "Pool lookups that found nothing resident.")
+        .store(s.misses);
+    reg.counter("vdmc_pool_loads_total", "Sessions inserted into the pool.").store(s.loads);
+    reg.counter_with("vdmc_pool_evictions_total", help_ev, &[("cause", "entry_cap")])
+        .store(s.evictions_entry_cap);
+    reg.counter_with("vdmc_pool_evictions_total", help_ev, &[("cause", "byte_budget")])
+        .store(s.evictions_byte_budget);
+    reg.counter_with("vdmc_pool_evictions_total", help_ev, &[("cause", "explicit")])
+        .store(s.evictions_explicit);
+    reg.counter("vdmc_pool_evictions_deferred_total", "Eviction passes deferred by busy entries.")
+        .store(s.evictions_deferred);
+    reg.gauge("vdmc_pool_entries", "Sessions resident right now.").set(s.entries as i64);
+    reg.gauge("vdmc_pool_resident_bytes", "Accounted bytes over resident sessions.")
+        .set(s.resident_bytes as i64);
+    reg.gauge("vdmc_pool_retained_bytes", "Bytes held only by superseded-but-pinned epochs.")
+        .set(s.retained_bytes as i64);
+    reg.gauge("vdmc_pool_pinned_snapshots", "Snapshots currently pinned by readers.")
+        .set(s.pinned_snapshots as i64);
+    for g in &s.graphs {
+        reg.gauge_with("vdmc_pool_graph_epoch", "Current epoch, by resident graph.", &[(
+            "graph",
+            g.id.as_str(),
+        )])
+        .set(g.epoch as i64);
     }
 }
 
@@ -603,7 +858,7 @@ mod tests {
         assert!(err.to_string().contains("out of range"), "{err}");
         // ... and the service keeps serving
         match svc.handle(Request::Stats).unwrap() {
-            Response::Stats(s) => assert_eq!(s.entries, 1),
+            Response::Stats { pool, .. } => assert_eq!(pool.entries, 1),
             other => panic!("{other:?}"),
         }
     }
@@ -622,9 +877,9 @@ mod tests {
         }
         // entry cap 2: the LRU load ("a") was evicted
         match svc.handle(Request::Stats).unwrap() {
-            Response::Stats(s) => {
-                assert_eq!(s.entries, 2);
-                assert_eq!(s.evictions_entry_cap, 1);
+            Response::Stats { pool, .. } => {
+                assert_eq!(pool.entries, 2);
+                assert_eq!(pool.evictions_entry_cap, 1);
             }
             other => panic!("{other:?}"),
         }
@@ -669,10 +924,134 @@ mod tests {
         assert!(resp.is_ok());
         assert!(secs >= 0.0);
         match svc.handle(Request::Stats).unwrap() {
-            Response::Stats(s) => {
-                let op = s.ops.iter().find(|o| o.op == "stats").expect("stats latency recorded");
+            Response::Stats { pool, .. } => {
+                let op =
+                    pool.ops.iter().find(|o| o.op == "stats").expect("stats latency recorded");
                 assert_eq!(op.count, 1);
                 assert!(op.p50_secs >= 0.0 && op.p50_secs <= op.p99_secs + 1e-12);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_carries_process_fields() {
+        let svc = VdmcService::with_defaults();
+        svc.handle_timed(Request::Stats);
+        svc.handle_timed(Request::Evict { graph: "nope".into() });
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats { process, .. } => {
+                assert!(process.uptime_secs >= 0.0);
+                assert_eq!(process.version, env!("CARGO_PKG_VERSION"));
+                assert_eq!(process.total_requests(), 2);
+                let by_op = &process.requests_by_op;
+                assert!(by_op.contains(&("stats".to_string(), 1)), "{by_op:?}");
+                assert!(by_op.contains(&("evict".to_string(), 1)), "{by_op:?}");
+                // no transport in-process: wire byte counters are absent
+                assert_eq!((process.wire_bytes_in, process.wire_bytes_out), (0, 0));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn handle_traced_echoes_or_generates_the_trace_id() {
+        let svc = VdmcService::with_defaults();
+        let (_, _, echoed) = svc.handle_traced(Request::Stats, Some("client-7".into()));
+        assert_eq!(echoed, "client-7");
+        let (_, _, generated) = svc.handle_traced(Request::Stats, None);
+        assert!(!generated.is_empty() && generated != "client-7");
+        // both requests landed in the trace buffer
+        let traces = svc.telemetry().traces().recent(8);
+        assert_eq!(traces.len(), 2);
+        assert_eq!(traces[0].trace_id, "client-7");
+        assert_eq!(traces[0].op, "stats");
+    }
+
+    #[test]
+    fn query_traces_carry_engine_phases() {
+        let g = generators::gnp_directed(40, 0.1, 2);
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: true,
+        })
+        .unwrap();
+        let (out, _, _) =
+            svc.handle_traced(Request::Count { graph: "g".into(), query: Default::default() }, None);
+        out.unwrap();
+        let rec = svc.telemetry().traces().recent(1).pop().expect("trace recorded");
+        let names: Vec<&str> = rec.phases.iter().map(|(n, _)| *n).collect();
+        for phase in ["pin", "schedule", "enumerate", "merge"] {
+            assert!(names.contains(&phase), "missing {phase} in {names:?}");
+        }
+        // ... and the phase histograms saw the same records
+        let reg = svc.telemetry().registry();
+        let h = reg.histogram_with(trace::PHASE_SECONDS, "", &[("phase", "enumerate")]);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn disabled_telemetry_records_nothing() {
+        let svc = VdmcService::new(ServiceConfig {
+            telemetry: TelemetryConfig { enabled: false, ..Default::default() },
+            ..Default::default()
+        });
+        svc.handle_timed(Request::Stats);
+        assert!(svc.telemetry().traces().is_empty());
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats { pool, process } => {
+                assert!(pool.ops.is_empty(), "no latency digests without telemetry");
+                assert_eq!(process.total_requests(), 0);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn metrics_request_returns_prometheus_text() {
+        let svc = VdmcService::with_defaults();
+        svc.handle_timed(Request::Stats);
+        let text = match svc.handle(Request::Metrics).unwrap() {
+            Response::Metrics { text } => text,
+            other => panic!("{other:?}"),
+        };
+        for needle in [
+            "# TYPE vdmc_requests_total counter",
+            "vdmc_requests_total{op=\"stats\"} 1",
+            "# TYPE vdmc_request_seconds histogram",
+            "# TYPE vdmc_pool_entries gauge",
+            "vdmc_pool_hits_total 0",
+            "vdmc_process_uptime_seconds",
+            "vdmc_slow_queries_total 0",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn request_counters_are_exact_under_racing_clients() {
+        const CLIENTS: usize = 8;
+        const PER_CLIENT: usize = 50;
+        let svc = VdmcService::with_defaults();
+        std::thread::scope(|s| {
+            for _ in 0..CLIENTS {
+                let svc = svc.clone();
+                s.spawn(move || {
+                    for _ in 0..PER_CLIENT {
+                        let (resp, _) = svc.handle_timed(Request::Stats);
+                        resp.unwrap();
+                    }
+                });
+            }
+        });
+        let want = (CLIENTS * PER_CLIENT) as u64;
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats { pool, process } => {
+                assert_eq!(process.total_requests(), want, "no increment may be lost");
+                let op = pool.ops.iter().find(|o| o.op == "stats").unwrap();
+                assert_eq!(op.count, want, "histogram count matches the counter");
             }
             other => panic!("{other:?}"),
         }
@@ -713,7 +1092,9 @@ mod tests {
             }
         });
         match svc.handle(Request::Stats).unwrap() {
-            Response::Stats(s) => assert!(s.hits >= 12, "12 counts routed through one pool"),
+            Response::Stats { pool, .. } => {
+                assert!(pool.hits >= 12, "12 counts routed through one pool");
+            }
             other => panic!("{other:?}"),
         }
     }

@@ -32,47 +32,22 @@
 //!
 //! Every access is metered ([`PoolStats`]): hits, misses, loads,
 //! evictions split by cause, resident/retained bytes, per-graph epoch
-//! and pin counts, and per-op latency percentiles fed by
-//! [`SessionPool::record_latency`] — the serving-layer numbers `vdmc
-//! serve`'s `stats` request and `benches/service.rs` report.
+//! and pin counts, and per-op latency percentiles derived from the
+//! shared [`MetricsRegistry`]'s [`REQUEST_SECONDS`] histograms — the
+//! serving-layer numbers `vdmc serve`'s `stats` request and
+//! `benches/service.rs` report.
 
 use std::sync::{Arc, Mutex};
 
 use crate::engine::{Session, SessionSnapshot, SnapshotCell};
+use crate::telemetry::metrics::{MetricsRegistry, ValueSnapshot};
 use crate::util::json::Json;
 
-/// Ring size for per-op latency sampling: percentiles are computed over
-/// the most recent this-many requests per op.
-const LATENCY_RING: usize = 1024;
-
-/// Sliding window of recent request latencies for one op.
-#[derive(Debug, Clone, Default)]
-struct LatencyRing {
-    samples: Vec<f64>,
-    next: usize,
-    count: u64,
-}
-
-impl LatencyRing {
-    fn record(&mut self, secs: f64) {
-        if self.samples.len() < LATENCY_RING {
-            self.samples.push(secs);
-        } else {
-            self.samples[self.next] = secs;
-        }
-        self.next = (self.next + 1) % LATENCY_RING;
-        self.count += 1;
-    }
-
-    /// `(p50, p99)` over the retained window (sort-on-demand: stats are
-    /// rare next to requests).
-    fn percentiles(&self) -> (f64, f64) {
-        let mut s = self.samples.clone();
-        s.sort_by(f64::total_cmp);
-        let pick = |p: f64| s[((s.len() - 1) as f64 * p).round() as usize];
-        (pick(0.50), pick(0.99))
-    }
-}
+/// Histogram family the service records every request's wall-clock
+/// seconds into, labeled `{op="..."}`. [`SessionPool::stats`] derives
+/// the per-op p50/p99 digests from these buckets — one write path, two
+/// consumers (the stats response and the Prometheus exposition).
+pub const REQUEST_SECONDS: &str = "vdmc_request_seconds";
 
 /// Per-resident-graph line of a [`PoolStats`] snapshot.
 #[derive(Debug, Clone, PartialEq)]
@@ -89,16 +64,18 @@ pub struct GraphStat {
     pub retained_bytes: usize,
 }
 
-/// Latency digest for one request op over its recent-sample ring.
+/// Latency digest for one request op, read off its [`REQUEST_SECONDS`]
+/// histogram (estimates within one bucket growth factor, full lifetime
+/// history — no sampling window).
 #[derive(Debug, Clone, PartialEq)]
 pub struct OpLatency {
     /// Wire op name (`count`, `apply_edges`, ...).
     pub op: String,
     /// Requests recorded over the pool's lifetime.
     pub count: u64,
-    /// Median seconds over the retained window.
+    /// Estimated median seconds.
     pub p50_secs: f64,
-    /// 99th-percentile seconds over the retained window.
+    /// Estimated 99th-percentile seconds.
     pub p99_secs: f64,
 }
 
@@ -135,7 +112,7 @@ pub struct PoolStats {
     pub evictions_deferred: u64,
     /// Per-graph epoch / pin / byte lines.
     pub graphs: Vec<GraphStat>,
-    /// Per-op latency digests (p50/p99 over recent samples).
+    /// Per-op latency digests (p50/p99 from the request histograms).
     pub ops: Vec<OpLatency>,
 }
 
@@ -227,7 +204,13 @@ pub struct SessionPool {
     max_entries: usize,
     byte_budget: usize,
     entries: Vec<Entry>,
-    latency: Vec<(String, LatencyRing)>,
+    /// The metrics registry request latencies land in (the service's
+    /// registry when the pool backs a [`VdmcService`], a private one for
+    /// standalone pools). [`SessionPool::stats`] reads its
+    /// [`REQUEST_SECONDS`] family for the per-op digests.
+    ///
+    /// [`VdmcService`]: super::VdmcService
+    registry: Arc<MetricsRegistry>,
     tick: u64,
     hits: u64,
     misses: u64,
@@ -239,13 +222,25 @@ pub struct SessionPool {
 }
 
 impl SessionPool {
-    /// `max_entries` / `byte_budget` of 0 mean unbounded.
+    /// `max_entries` / `byte_budget` of 0 mean unbounded. The pool owns a
+    /// private metrics registry; services share theirs through
+    /// [`SessionPool::with_registry`].
     pub fn new(max_entries: usize, byte_budget: usize) -> SessionPool {
+        SessionPool::with_registry(max_entries, byte_budget, Arc::new(MetricsRegistry::new()))
+    }
+
+    /// Like [`SessionPool::new`], recording latencies into (and deriving
+    /// [`PoolStats::ops`] from) a caller-provided registry.
+    pub fn with_registry(
+        max_entries: usize,
+        byte_budget: usize,
+        registry: Arc<MetricsRegistry>,
+    ) -> SessionPool {
         SessionPool {
             max_entries,
             byte_budget,
             entries: Vec::new(),
-            latency: Vec::new(),
+            registry,
             tick: 0,
             hits: 0,
             misses: 0,
@@ -255,6 +250,11 @@ impl SessionPool {
             evictions_explicit: 0,
             evictions_deferred: 0,
         }
+    }
+
+    /// The registry the pool's latency digests come from.
+    pub fn registry(&self) -> &Arc<MetricsRegistry> {
+        &self.registry
     }
 
     pub fn len(&self) -> usize {
@@ -371,19 +371,6 @@ impl SessionPool {
         }
     }
 
-    /// Record one request's wall-clock seconds under its wire op name;
-    /// feeds the per-op p50/p99 digests in [`PoolStats::ops`].
-    pub fn record_latency(&mut self, op: &str, secs: f64) {
-        match self.latency.iter_mut().find(|(name, _)| name == op) {
-            Some((_, ring)) => ring.record(secs),
-            None => {
-                let mut ring = LatencyRing::default();
-                ring.record(secs);
-                self.latency.push((op.to_string(), ring));
-            }
-        }
-    }
-
     /// Evict least-recently-used entries (never `protect`, never a busy
     /// entry) until both bounds hold. Returns the number of evictions
     /// performed; a pass that wanted a victim but found only busy ones
@@ -441,12 +428,27 @@ impl SessionPool {
                 retained_bytes: e.cell.retained_bytes(),
             })
             .collect();
-        let mut ops: Vec<OpLatency> = self
-            .latency
+        let snapshot = self.registry.snapshot();
+        let mut ops: Vec<OpLatency> = snapshot
             .iter()
-            .map(|(op, ring)| {
-                let (p50_secs, p99_secs) = ring.percentiles();
-                OpLatency { op: op.clone(), count: ring.count, p50_secs, p99_secs }
+            .filter(|f| f.name == REQUEST_SECONDS)
+            .flat_map(|f| f.series.iter())
+            .filter_map(|s| match &s.value {
+                ValueSnapshot::Histogram(h) if h.count > 0 => {
+                    let op = s
+                        .labels
+                        .iter()
+                        .find(|(k, _)| *k == "op")
+                        .map(|(_, v)| v.clone())
+                        .unwrap_or_default();
+                    Some(OpLatency {
+                        op,
+                        count: h.count,
+                        p50_secs: h.quantile(0.50),
+                        p99_secs: h.quantile(0.99),
+                    })
+                }
+                _ => None,
             })
             .collect();
         ops.sort_by(|a, b| a.op.cmp(&b.op));
@@ -606,19 +608,30 @@ mod tests {
     }
 
     #[test]
-    fn latency_rings_report_percentiles() {
-        let mut pool = SessionPool::new(0, 0);
+    fn op_latency_digests_come_from_the_request_histograms() {
+        use crate::telemetry::metrics::HIST_GROWTH;
+
+        let pool = SessionPool::new(0, 0);
+        let reg = pool.registry();
+        let count_hist = reg.histogram_with(REQUEST_SECONDS, "h", &[("op", "count")]);
         for i in 1..=100u32 {
-            pool.record_latency("count", i as f64 / 1000.0);
+            count_hist.record(i as f64 / 1000.0);
         }
-        pool.record_latency("stats", 0.5);
+        reg.histogram_with(REQUEST_SECONDS, "h", &[("op", "stats")]).record(0.5);
+        // an untouched series stays out of the digest
+        let _ = reg.histogram_with(REQUEST_SECONDS, "h", &[("op", "evict")]);
         let s = pool.stats();
-        assert_eq!(s.ops.len(), 2);
+        assert_eq!(s.ops.len(), 2, "only ops with samples are reported");
         let count = s.ops.iter().find(|o| o.op == "count").unwrap();
         assert_eq!(count.count, 100);
         assert!(count.p50_secs <= count.p99_secs);
-        assert!((count.p50_secs - 0.050).abs() < 0.002, "{}", count.p50_secs);
-        assert!((count.p99_secs - 0.099).abs() < 0.002, "{}", count.p99_secs);
+        // bucketed estimates: within one growth factor of the truth
+        for (est, truth) in [(count.p50_secs, 0.050), (count.p99_secs, 0.099)] {
+            assert!(
+                est >= truth / HIST_GROWTH && est <= truth * HIST_GROWTH,
+                "estimate {est} not within one bucket of {truth}"
+            );
+        }
         let j = s.to_json().to_string_compact();
         assert!(j.contains("\"ops\":[{"), "{j}");
         assert!(j.contains("\"op\":\"count\""), "{j}");

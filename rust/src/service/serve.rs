@@ -22,6 +22,12 @@
 //!
 //! `vdmc serve` runs the stdin/stdout mode as exactly the 1-client
 //! special case of [`serve_connection`].
+//!
+//! Both transports feed the service's
+//! [`MetricsRegistry`](crate::telemetry::MetricsRegistry): accepted
+//! connections, queued-response depth (the inflight gauge), malformed
+//! request lines, and wire bytes by direction — the
+//! `vdmc_transport_*` families of the metric catalog.
 
 use std::io::{self, BufRead, BufReader, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
@@ -36,6 +42,16 @@ use super::{wire, VdmcService};
 
 /// How often the TCP accept loop polls for shutdown / free client slots.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+// Transport metric families (see ARCHITECTURE.md §10 for the catalog).
+const CONNECTIONS: &str = "vdmc_transport_connections_total";
+const HELP_CONNECTIONS: &str = "Client connections accepted (stdin counts as one).";
+const INFLIGHT: &str = "vdmc_transport_inflight";
+const HELP_INFLIGHT: &str = "Responses queued to client writers right now.";
+const MALFORMED: &str = "vdmc_transport_malformed_lines_total";
+const HELP_MALFORMED: &str = "Request lines that failed to decode.";
+const BYTES: &str = "vdmc_transport_bytes_total";
+const HELP_BYTES: &str = "Wire bytes by direction (dir=\"in\"|\"out\"), newlines included.";
 
 /// Transport tuning shared by the stdin and TCP modes.
 #[derive(Debug, Clone, Copy)]
@@ -69,20 +85,23 @@ pub struct TcpServeSummary {
 /// the per-connection ordering.
 fn handle_line(svc: &VdmcService, line: &str) -> String {
     match wire::decode_request(line) {
-        Ok((req, id)) => {
+        Ok((req, id, trace)) => {
             let op = req.op();
-            let (result, secs) = svc.handle_timed(req);
+            let (result, secs, trace_id) = svc.handle_traced(req, trace);
             match result {
-                Ok(resp) => wire::encode_response(&resp, id, secs),
-                Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+                Ok(resp) => wire::encode_response(&resp, id, secs, Some(&trace_id)),
+                Err(e) => wire::encode_error(Some(op), id, Some(&trace_id), &format!("{e:#}")),
             }
         }
         Err(e) => {
+            svc.telemetry().registry().counter(MALFORMED, HELP_MALFORMED).inc();
             let j = Json::parse(line).ok();
             let id = j.as_ref().and_then(|j| j.get("id")).and_then(Json::as_u64);
             let op =
                 j.as_ref().and_then(|j| j.get("op")).and_then(Json::as_str).map(String::from);
-            wire::encode_error(op.as_deref(), id, &e)
+            let trace =
+                j.as_ref().and_then(|j| j.get("trace")).and_then(Json::as_str).map(String::from);
+            wire::encode_error(op.as_deref(), id, trace.as_deref(), &e)
         }
     }
 }
@@ -101,16 +120,25 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     writer: &mut W,
     opts: &ServeOptions,
 ) -> io::Result<u64> {
+    let reg = svc.telemetry().registry();
+    reg.counter(CONNECTIONS, HELP_CONNECTIONS).inc();
+    reg.counter(MALFORMED, HELP_MALFORMED); // pre-register: scrapes show 0
+    let bytes_in = reg.counter_with(BYTES, HELP_BYTES, &[("dir", "in")]);
+    let bytes_out = reg.counter_with(BYTES, HELP_BYTES, &[("dir", "out")]);
+    let inflight = reg.gauge(INFLIGHT, HELP_INFLIGHT);
     let (tx, rx) = sync_channel::<String>(opts.inflight.max(1));
     let mut served = 0u64;
     let mut read_err: Option<io::Error> = None;
     let sink_result = std::thread::scope(|s| {
+        let (bytes_out, inflight_sink) = (bytes_out.clone(), inflight.clone());
         let sink = s.spawn(move || -> io::Result<()> {
             for reply in rx {
                 writeln!(writer, "{reply}")?;
                 // flushed per response: clients pipeline against the
                 // inflight window and must see replies promptly
                 writer.flush()?;
+                bytes_out.add(reply.len() as u64 + 1);
+                inflight_sink.dec();
             }
             Ok(())
         });
@@ -122,14 +150,17 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
                     break;
                 }
             };
+            bytes_in.add(line.len() as u64 + 1);
             let line = line.trim();
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
             let reply = handle_line(svc, line);
+            inflight.inc();
             if tx.send(reply).is_err() {
                 // the sink died (client closed its read side): stop
                 // handling, the write error surfaces below
+                inflight.dec();
                 break;
             }
             served += 1;
@@ -314,15 +345,72 @@ mod tests {
         let svc = loaded_service();
         let (resp, secs) = svc.handle_timed(Request::Stats);
         match resp.unwrap() {
-            Response::Stats(s) => {
-                let line = wire::encode_response(&Response::Stats(s), Some(9), secs);
+            resp @ Response::Stats { .. } => {
+                let line = wire::encode_response(&resp, Some(9), secs, None);
                 let j = Json::parse(&line).unwrap();
                 assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
                 let pool = j.get("pool").expect("stats payload");
                 assert!(pool.get("graphs").and_then(Json::as_arr).is_some());
                 assert!(pool.get("ops").and_then(Json::as_arr).is_some());
+                let process = j.get("process").expect("process payload");
+                assert!(process.get("uptime_secs").and_then(Json::as_f64).is_some());
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn trace_ids_ride_the_connection_round_trip() {
+        let svc = loaded_service();
+        let input = "\
+            {\"op\":\"stats\",\"id\":1,\"trace\":\"cli-trace-7\"}\n\
+            {\"op\":\"stats\",\"id\":2}\n\
+            {\"op\":\"count\",\"id\":3,\"graph\":\"nope\",\"trace\":\"cli-trace-8\"}\n";
+        let mut out: Vec<u8> = Vec::new();
+        serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+        let lines = lines_of(&out);
+        assert_eq!(lines.len(), 3);
+        // a client-supplied id is echoed verbatim
+        assert_eq!(lines[0].get("trace").and_then(Json::as_str), Some("cli-trace-7"));
+        // none supplied: the service stamps a generated one
+        let generated = lines[1].get("trace").and_then(Json::as_str).unwrap();
+        assert!(!generated.is_empty() && generated != "cli-trace-7");
+        // errors echo the trace too, so failures stay correlatable
+        assert_eq!(lines[2].get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(lines[2].get("trace").and_then(Json::as_str), Some("cli-trace-8"));
+    }
+
+    #[test]
+    fn transport_counters_track_bytes_lines_and_connections() {
+        use crate::telemetry::ValueSnapshot;
+        let svc = loaded_service();
+        let input = "\
+            {\"op\":\"stats\",\"id\":1}\n\
+            not json at all\n";
+        let mut out: Vec<u8> = Vec::new();
+        serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+        let value = |name: &str, label: Option<(&str, &str)>| -> u64 {
+            let snap = svc.telemetry().registry().snapshot();
+            let fam = snap.iter().find(|f| f.name == name).unwrap_or_else(|| panic!("{name}"));
+            let series = fam
+                .series
+                .iter()
+                .find(|s| match label {
+                    None => s.labels.is_empty(),
+                    Some((k, v)) => s.labels.iter().any(|(lk, lv)| *lk == k && lv == v),
+                })
+                .unwrap();
+            match &series.value {
+                ValueSnapshot::Counter(n) => *n,
+                ValueSnapshot::Gauge(g) => *g as u64,
+                other => panic!("{other:?}"),
+            }
+        };
+        assert_eq!(value(CONNECTIONS, None), 1);
+        assert_eq!(value(MALFORMED, None), 1);
+        assert_eq!(value(BYTES, Some(("dir", "in"))), input.len() as u64);
+        // every reply is written as line + newline, so out.len() is exact
+        assert_eq!(value(BYTES, Some(("dir", "out"))), out.len() as u64);
+        assert_eq!(value(INFLIGHT, None), 0, "every queued response was drained");
     }
 }

@@ -20,6 +20,7 @@
 //! {"op":"maintain","graph":"web","k":4,"direction":"undirected"}
 //! {"op":"evict","graph":"toy"}
 //! {"op":"stats"}
+//! {"op":"metrics"}
 //! ```
 //!
 //! A scope is spelled the same way on every op that takes one: either a
@@ -30,17 +31,27 @@
 //! defaults as the `vdmc count` flags, because both go through
 //! [`MotifQuery::builder`].
 //!
+//! Any request may carry a string `"trace"` field: the trace id of the
+//! root span the service opens for it, echoed back in the response line.
+//! Absent, the service generates one (still echoed), so every response
+//! can be correlated with its slow-query log line and trace record.
+//!
 //! ## Responses
 //!
-//! Success: `{"ok":true,"op":...,"id":...,"elapsed_secs":...,` payload
-//! `}`. Failure: `{"ok":false,"op":...,"id":...,"error":"..."}` — the
-//! stream keeps going; one bad request never kills the daemon. `count`
-//! answers carry the class-total digest (`"classes":{"m6":123,...}`,
-//! scope-exact via the run report's class histogram); exact per-vertex
-//! rows go through `vertex_counts`, whose `"counts"` maps each requested
-//! vertex to its class vector. `instances` answers list
-//! `[[verts...],class_id]` pairs plus the exact per-class totals;
-//! `sample` answers map each class to `{"seen":n,"sample":[[verts]...]}`.
+//! Success: `{"ok":true,"op":...,"id":...,"trace":...,
+//! "elapsed_secs":...,` payload `}`. Failure:
+//! `{"ok":false,"op":...,"id":...,"error":"..."}` — the stream keeps
+//! going; one bad request never kills the daemon. `count` answers carry
+//! the class-total digest (`"classes":{"m6":123,...}`, scope-exact via
+//! the run report's class histogram) plus the report's
+//! `"phase_secs"` breakdown; exact per-vertex rows go through
+//! `vertex_counts`, whose `"counts"` maps each requested vertex to its
+//! class vector. `instances` answers list `[[verts...],class_id]` pairs
+//! plus the exact per-class totals; `sample` answers map each class to
+//! `{"seen":n,"sample":[[verts]...]}`. `stats` answers carry the pool
+//! snapshot under `"pool"` and process identity/traffic under
+//! `"process"`; `metrics` answers carry the Prometheus text under
+//! `"metrics"`.
 
 use crate::engine::{MotifQuery, Output, Scope};
 use crate::motifs::{Direction, MotifSize};
@@ -125,8 +136,9 @@ fn decode_scope(j: &Json) -> Result<Scope, String> {
     }
 }
 
-/// Decode one request line. Returns the request plus the echo id.
-pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
+/// Decode one request line. Returns the request, the echo id, and the
+/// client-supplied trace id (the `"trace"` field), if any.
+pub fn decode_request(line: &str) -> Result<(Request, Option<u64>, Option<String>), String> {
     let j = Json::parse(line)?;
     // strict like every other optional field: a mistyped id must error,
     // not silently vanish and break the client's response correlation
@@ -135,6 +147,14 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
         Some(v) => Some(
             v.as_u64()
                 .ok_or_else(|| format!("\"id\" must be a non-negative integer, got {v:?}"))?,
+        ),
+    };
+    let trace = match j.get("trace") {
+        None => None,
+        Some(v) => Some(
+            v.as_str()
+                .ok_or_else(|| format!("\"trace\" must be a string, got {v:?}"))?
+                .to_string(),
         ),
     };
     let op = j
@@ -250,9 +270,10 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>), String> {
         }
         "evict" => Request::Evict { graph: graph()? },
         "stats" => Request::Stats,
+        "metrics" => Request::Metrics,
         other => return Err(format!("unknown op {other:?}")),
     };
-    Ok((req, id))
+    Ok((req, id, trace))
 }
 
 /// `[u, v]` pairs.
@@ -300,12 +321,20 @@ fn fold_into(j: &mut Json, payload: Json) {
 
 /// Encode one successful response as a compact JSON line (no trailing
 /// newline). `elapsed_secs` is the service-side handling time of this
-/// request.
-pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> String {
+/// request; `trace` the trace id to echo.
+pub fn encode_response(
+    resp: &Response,
+    id: Option<u64>,
+    elapsed_secs: f64,
+    trace: Option<&str>,
+) -> String {
     let mut j = Json::obj();
     j.set("ok", true).set("op", resp.op()).set("elapsed_secs", elapsed_secs);
     if let Some(id) = id {
         j.set("id", id);
+    }
+    if let Some(trace) = trace {
+        j.set("trace", trace);
     }
     match resp {
         Response::Loaded { graph, n, m, directed, memory_bytes, replaced, evicted } => {
@@ -332,7 +361,8 @@ pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> S
                 .set("n_classes", counts.n_classes)
                 .set("classes", classes)
                 .set("count_secs", counts.elapsed_secs)
-                .set("setup_reused", report.setup_reused);
+                .set("setup_reused", report.setup_reused)
+                .set("phase_secs", report.phase_secs.to_json());
         }
         Response::Instances { graph, list, report } => {
             j.set("graph", graph.as_str()).set("setup_reused", report.setup_reused);
@@ -375,8 +405,23 @@ pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> S
         Response::Evicted { graph, found } => {
             j.set("graph", graph.as_str()).set("found", *found);
         }
-        Response::Stats(stats) => {
-            j.set("pool", stats.to_json());
+        Response::Stats { pool, process } => {
+            j.set("pool", pool.to_json());
+            let mut p = Json::obj();
+            p.set("uptime_secs", process.uptime_secs)
+                .set("version", process.version.as_str())
+                .set("total_requests", process.total_requests())
+                .set("wire_bytes_in", process.wire_bytes_in)
+                .set("wire_bytes_out", process.wire_bytes_out);
+            let mut by_op = Json::obj();
+            for (op, n) in &process.requests_by_op {
+                by_op.set(op, *n);
+            }
+            p.set("requests_by_op", by_op);
+            j.set("process", p);
+        }
+        Response::Metrics { text } => {
+            j.set("metrics", text.as_str());
         }
     }
     j.to_string_compact()
@@ -384,11 +429,14 @@ pub fn encode_response(resp: &Response, id: Option<u64>, elapsed_secs: f64) -> S
 
 /// Encode a failure line. The daemon answers malformed or failed requests
 /// with these and keeps reading.
-pub fn encode_error(op: Option<&str>, id: Option<u64>, error: &str) -> String {
+pub fn encode_error(op: Option<&str>, id: Option<u64>, trace: Option<&str>, error: &str) -> String {
     let mut j = Json::obj();
     j.set("ok", false).set("op", op.unwrap_or("?")).set("error", error);
     if let Some(id) = id {
         j.set("id", id);
+    }
+    if let Some(trace) = trace {
+        j.set("trace", trace);
     }
     j.to_string_compact()
 }
@@ -401,11 +449,12 @@ mod tests {
 
     #[test]
     fn decode_every_op() {
-        let (r, id) = decode_request(
+        let (r, id, trace) = decode_request(
             r#"{"op":"load_graph","id":7,"graph":"g","path":"g.tsv","directed":true}"#,
         )
         .unwrap();
         assert_eq!(id, Some(7));
+        assert_eq!(trace, None);
         assert_eq!(
             r,
             Request::LoadGraph {
@@ -415,7 +464,7 @@ mod tests {
             }
         );
 
-        let (r, id) = decode_request(
+        let (r, id, _) = decode_request(
             r#"{"op":"load_graph","graph":"t","edges":[[0,1],[1,2]],"directed":false}"#,
         )
         .unwrap();
@@ -429,7 +478,7 @@ mod tests {
             }
         );
 
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"count","graph":"g","k":4,"direction":"undirected","scheduler":"cursor","sink":"atomic"}"#,
         )
         .unwrap();
@@ -447,7 +496,7 @@ mod tests {
         }
 
         // count defaults mirror the CLI
-        let (r, _) = decode_request(r#"{"op":"count","graph":"g"}"#).unwrap();
+        let (r, _, _) = decode_request(r#"{"op":"count","graph":"g"}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
                 assert_eq!(query, CountQuery::default());
@@ -456,7 +505,7 @@ mod tests {
         }
 
         // scoped count: vertices spelling
-        let (r, _) =
+        let (r, _, _) =
             decode_request(r#"{"op":"count","graph":"g","vertices":[3,9]}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
@@ -466,7 +515,7 @@ mod tests {
         }
 
         // scoped count: seeds spelling with default radius 1
-        let (r, _) = decode_request(r#"{"op":"count","graph":"g","seeds":[4]}"#).unwrap();
+        let (r, _, _) = decode_request(r#"{"op":"count","graph":"g","seeds":[4]}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
                 assert_eq!(query.scope, Scope::Neighborhood { seeds: vec![4], radius: 1 });
@@ -474,7 +523,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"instances","graph":"g","k":3,"direction":"undirected","limit":50}"#,
         )
         .unwrap();
@@ -486,7 +535,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // instances default limit
-        let (r, _) = decode_request(r#"{"op":"instances","graph":"g"}"#).unwrap();
+        let (r, _, _) = decode_request(r#"{"op":"instances","graph":"g"}"#).unwrap();
         match r {
             Request::Instances { query, .. } => {
                 assert_eq!(query.output, Output::Instances { limit: 1000 });
@@ -494,7 +543,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"sample","graph":"g","k":4,"per_class":16,"seed":7,"seeds":[0,5],"radius":2}"#,
         )
         .unwrap();
@@ -511,7 +560,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"vertex_counts","graph":"g","k":3,"direction":"directed","vertices":[0,5]}"#,
         )
         .unwrap();
@@ -524,7 +573,7 @@ mod tests {
                 scope: Scope::Vertices(vec![0, 5])
             }
         );
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"vertex_counts","graph":"g","seeds":[2],"radius":2}"#,
         )
         .unwrap();
@@ -538,7 +587,7 @@ mod tests {
             }
         );
 
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"apply_edges","graph":"g","deltas":[["+",0,5],["-",1,2]]}"#,
         )
         .unwrap();
@@ -550,7 +599,7 @@ mod tests {
             }
         );
 
-        let (r, _) =
+        let (r, _, _) =
             decode_request(r#"{"op":"maintain","graph":"g","k":4,"direction":"undirected"}"#)
                 .unwrap();
         assert_eq!(
@@ -564,7 +613,7 @@ mod tests {
         );
         // a non-counts maintain decodes (the service rejects it with the
         // typed Count-only error at handle time)
-        let (r, _) = decode_request(
+        let (r, _, _) = decode_request(
             r#"{"op":"maintain","graph":"g","output":"sample"}"#,
         )
         .unwrap();
@@ -578,6 +627,14 @@ mod tests {
             Request::Evict { graph: "g".into() }
         );
         assert_eq!(decode_request(r#"{"op":"stats"}"#).unwrap().0, Request::Stats);
+        assert_eq!(decode_request(r#"{"op":"metrics"}"#).unwrap().0, Request::Metrics);
+
+        // a trace id rides along on any op
+        let (r, id, trace) =
+            decode_request(r#"{"op":"stats","id":3,"trace":"t-abc"}"#).unwrap();
+        assert_eq!(r, Request::Stats);
+        assert_eq!(id, Some(3));
+        assert_eq!(trace.as_deref(), Some("t-abc"));
     }
 
     #[test]
@@ -616,6 +673,7 @@ mod tests {
             r#"{"op":"stats","id":"7"}"#,
             r#"{"op":"stats","id":7.5}"#,
             r#"{"op":"stats","id":-1}"#,
+            r#"{"op":"stats","trace":7}"#, // trace id must be a string
         ] {
             assert!(decode_request(bad).is_err(), "{bad:?} must not decode");
         }
@@ -624,17 +682,24 @@ mod tests {
     #[test]
     fn encode_lines_parse_back() {
         let resp = Response::Evicted { graph: "g".into(), found: true };
-        let line = encode_response(&resp, Some(3), 0.25);
+        let line = encode_response(&resp, Some(3), 0.25, Some("t-9"));
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
         assert_eq!(j.get("op").and_then(Json::as_str), Some("evict"));
         assert_eq!(j.get("id").and_then(Json::as_u64), Some(3));
         assert_eq!(j.get("found").and_then(Json::as_bool), Some(true));
         assert_eq!(j.get("elapsed_secs").and_then(Json::as_f64), Some(0.25));
+        assert_eq!(j.get("trace").and_then(Json::as_str), Some("t-9"));
 
-        let line = encode_error(Some("count"), None, "graph \"x\" not loaded");
+        // no trace supplied → no trace key on the answer
+        let line = encode_response(&resp, Some(3), 0.25, None);
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("trace").is_none());
+
+        let line = encode_error(Some("count"), None, Some("t-9"), "graph \"x\" not loaded");
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("trace").and_then(Json::as_str), Some("t-9"));
         assert!(j.get("error").and_then(Json::as_str).unwrap().contains("not loaded"));
     }
 
@@ -652,6 +717,7 @@ mod tests {
             setup_reused: true,
             tier_memory_bytes: 0,
             per_class_totals: vec![2],
+            phase_secs: Default::default(),
         };
         let list = InstanceList {
             k: 3,
@@ -669,6 +735,7 @@ mod tests {
             &Response::Instances { graph: "g".into(), list, report: report.clone() },
             Some(1),
             0.5,
+            None,
         );
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("op").and_then(Json::as_str), Some("instances"));
@@ -699,6 +766,7 @@ mod tests {
             &Response::Sampled { graph: "g".into(), sample, report },
             None,
             0.5,
+            None,
         );
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("op").and_then(Json::as_str), Some("sample"));
@@ -710,13 +778,53 @@ mod tests {
     }
 
     #[test]
+    fn encode_stats_and_metrics_payloads() {
+        use super::super::api::ProcessStats;
+        use super::super::pool::PoolStats;
+        let resp = Response::Stats {
+            pool: PoolStats::default(),
+            process: ProcessStats {
+                uptime_secs: 12.5,
+                version: "0.1.0".into(),
+                requests_by_op: vec![("count".into(), 3), ("stats".into(), 1)],
+                wire_bytes_in: 100,
+                wire_bytes_out: 900,
+            },
+        };
+        let line = encode_response(&resp, None, 0.0, None);
+        let j = Json::parse(&line).unwrap();
+        assert!(j.get("pool").is_some(), "pool key is wire-stable");
+        let p = j.get("process").unwrap();
+        assert_eq!(p.get("uptime_secs").and_then(Json::as_f64), Some(12.5));
+        assert_eq!(p.get("version").and_then(Json::as_str), Some("0.1.0"));
+        assert_eq!(p.get("total_requests").and_then(Json::as_u64), Some(4));
+        assert_eq!(p.get("wire_bytes_out").and_then(Json::as_u64), Some(900));
+        let by_op = p.get("requests_by_op").unwrap();
+        assert_eq!(by_op.get("count").and_then(Json::as_u64), Some(3));
+
+        let line = encode_response(
+            &Response::Metrics { text: "# TYPE vdmc_requests_total counter\n".into() },
+            None,
+            0.0,
+            None,
+        );
+        let j = Json::parse(&line).unwrap();
+        assert!(j
+            .get("metrics")
+            .and_then(Json::as_str)
+            .unwrap()
+            .contains("vdmc_requests_total"));
+    }
+
+    #[test]
     fn applied_report_cannot_clobber_envelope_timing() {
         let report = crate::stream::DeltaReport {
             inserted: 2,
             elapsed_secs: 9.0, // the batch-internal timing
             ..Default::default()
         };
-        let line = encode_response(&Response::Applied { graph: "g".into(), report }, None, 0.5);
+        let line =
+            encode_response(&Response::Applied { graph: "g".into(), report }, None, 0.5, None);
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("elapsed_secs").and_then(Json::as_f64), Some(0.5), "request timing");
         assert_eq!(j.get("batch_secs").and_then(Json::as_f64), Some(9.0), "report timing");

@@ -1,0 +1,536 @@
+//! Lock-cheap process metrics: counters, gauges and exponential-bucket
+//! histograms behind a [`MetricsRegistry`].
+//!
+//! The registry is the *naming* layer: [`MetricsRegistry::counter_with`]
+//! and friends look up (or create) a family by name and a series by
+//! label set under one short mutex hold, and hand back an `Arc` to the
+//! instrument. The hot path — [`Counter::inc`], [`Gauge::set`],
+//! [`Histogram::record`] — is pure relaxed atomics on that shared
+//! handle: no lock, no allocation, safe to call from any worker thread.
+//!
+//! Histograms use fixed exponential buckets (first bound
+//! [`HIST_FIRST_BOUND`] seconds, growth [`HIST_GROWTH`]×, covering
+//! 1 µs .. ~134 s), so p50/p99 come from a cumulative bucket walk with
+//! linear interpolation — bounded error of one bucket width, constant
+//! memory, and exact merge across threads. This replaces the service
+//! pool's old 1024-sample rings, which forgot history beyond the window
+//! and sorted on every read.
+//!
+//! Reads ([`MetricsRegistry::snapshot`]) are loosely consistent with
+//! concurrent writers: a histogram scraped mid-`record` may briefly show
+//! `count` ahead of its buckets. That is fine for monitoring and never
+//! produces negative rates.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Lowest histogram bucket upper bound, in seconds (1 µs).
+pub const HIST_FIRST_BOUND: f64 = 1e-6;
+/// Multiplicative growth between consecutive bucket bounds.
+pub const HIST_GROWTH: f64 = 2.0;
+/// Finite buckets; the last bound is `1e-6 * 2^27` ≈ 134 s, everything
+/// above lands in the implicit overflow (+Inf) bucket.
+pub const HIST_FINITE_BUCKETS: usize = 28;
+
+/// Upper bound (inclusive) of finite bucket `i`, in seconds.
+pub fn bucket_bound(i: usize) -> f64 {
+    HIST_FIRST_BOUND * HIST_GROWTH.powi(i as i32)
+}
+
+/// Monotonically increasing counter (relaxed atomic u64).
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Overwrite the absolute value. For totals whose source of truth
+    /// lives elsewhere (the session pool's mutex-guarded tallies) and is
+    /// mirrored into the registry at scrape time; incrementing paths use
+    /// [`Counter::inc`]/[`Counter::add`] instead. Mixing both on one
+    /// counter would lose increments.
+    pub fn store(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Point-in-time value that can go up and down (relaxed atomic i64).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicI64);
+
+impl Gauge {
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, d: i64) {
+        self.0.fetch_add(d, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn dec(&self) {
+        self.add(-1);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed exponential-bucket latency histogram (seconds).
+#[derive(Debug)]
+pub struct Histogram {
+    /// Per-bucket (non-cumulative) sample counts; index
+    /// [`HIST_FINITE_BUCKETS`] is the overflow (+Inf) bucket.
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+}
+
+/// Smallest bucket index whose bound is >= `secs` (le semantics).
+fn bucket_index(secs: f64) -> usize {
+    let mut idx = 0;
+    let mut bound = HIST_FIRST_BOUND;
+    while idx < HIST_FINITE_BUCKETS && secs > bound {
+        idx += 1;
+        bound *= HIST_GROWTH;
+    }
+    idx
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram {
+            buckets: (0..=HIST_FINITE_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation in seconds. Non-finite or negative values
+    /// are clamped to 0 (lowest bucket) rather than dropped, so `count`
+    /// always matches the number of `record` calls.
+    pub fn record(&self, secs: f64) {
+        let v = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add((v * 1e9).round() as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_secs(&self) -> f64 {
+        self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_secs() / n as f64
+        }
+    }
+
+    /// Estimated q-quantile; see [`HistogramSnapshot::quantile`].
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.snapshot().quantile(q)
+    }
+
+    /// Consistent-enough copy for rendering and percentile math:
+    /// cumulative finite buckets plus total count and sum.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut cum = 0u64;
+        let mut buckets = Vec::with_capacity(HIST_FINITE_BUCKETS);
+        for (i, b) in self.buckets.iter().take(HIST_FINITE_BUCKETS).enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            buckets.push((bucket_bound(i), cum));
+        }
+        // the +Inf bucket is implicit: cumulative count there == count
+        let overflow = self.buckets[HIST_FINITE_BUCKETS].load(Ordering::Relaxed);
+        HistogramSnapshot { buckets, count: cum + overflow, sum_secs: self.sum_secs() }
+    }
+}
+
+/// Frozen histogram state: `(upper_bound_secs, cumulative_count)` per
+/// finite bucket; `count` additionally includes the overflow bucket.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnapshot {
+    pub buckets: Vec<(f64, u64)>,
+    pub count: u64,
+    pub sum_secs: f64,
+}
+
+impl HistogramSnapshot {
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_secs / self.count as f64
+        }
+    }
+
+    /// Estimate the q-quantile by walking the cumulative buckets and
+    /// interpolating linearly inside the winning bucket. The estimate is
+    /// always within the true quantile's bucket, i.e. off by at most one
+    /// [`HIST_GROWTH`] factor; overflow-bucket quantiles clamp to the
+    /// last finite bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut prev_cum = 0u64;
+        let mut prev_bound = 0.0;
+        for &(le, cum) in &self.buckets {
+            if cum >= target {
+                let in_bucket = cum - prev_cum;
+                let frac = (target - prev_cum) as f64 / in_bucket as f64;
+                return prev_bound + (le - prev_bound) * frac;
+            }
+            prev_cum = cum;
+            prev_bound = le;
+        }
+        self.buckets.last().map(|&(le, _)| le).unwrap_or(0.0)
+    }
+}
+
+/// What a family's series hold.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Counter,
+    Gauge,
+    Histogram,
+}
+
+impl MetricKind {
+    /// Prometheus `# TYPE` keyword.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MetricKind::Counter => "counter",
+            MetricKind::Gauge => "gauge",
+            MetricKind::Histogram => "histogram",
+        }
+    }
+}
+
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Family {
+    name: &'static str,
+    help: &'static str,
+    kind: MetricKind,
+    series: Vec<(Vec<(&'static str, String)>, Metric)>,
+}
+
+/// One series' frozen value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ValueSnapshot {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(HistogramSnapshot),
+}
+
+/// One labeled series inside a [`FamilySnapshot`].
+#[derive(Debug, Clone)]
+pub struct SeriesSnapshot {
+    pub labels: Vec<(&'static str, String)>,
+    pub value: ValueSnapshot,
+}
+
+/// One metric family: name, help, kind and every labeled series.
+#[derive(Debug, Clone)]
+pub struct FamilySnapshot {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub kind: MetricKind,
+    pub series: Vec<SeriesSnapshot>,
+}
+
+fn labels_match(ls: &[(&'static str, String)], labels: &[(&'static str, &str)]) -> bool {
+    ls.len() == labels.len()
+        && ls.iter().zip(labels).all(|((ak, av), (bk, bv))| ak == bk && av == bv)
+}
+
+/// Process-wide registry of metric families. Cheap to share
+/// (`Arc<MetricsRegistry>`); every service owns exactly one so parallel
+/// `cargo test` services never pollute each other's counts.
+pub struct MetricsRegistry {
+    families: Mutex<Vec<Family>>,
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        MetricsRegistry::new()
+    }
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry { families: Mutex::new(Vec::new()) }
+    }
+
+    /// Unlabeled counter (the family's single series).
+    pub fn counter(&self, name: &'static str, help: &'static str) -> Arc<Counter> {
+        self.counter_with(name, help, &[])
+    }
+
+    /// Look up or create a counter series. Panics when `name` already
+    /// exists with a different kind — a programming error, not a runtime
+    /// condition.
+    pub fn counter_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Counter> {
+        match self.series(name, help, MetricKind::Counter, labels) {
+            Metric::Counter(c) => c,
+            _ => unreachable!("kind checked by series()"),
+        }
+    }
+
+    /// Unlabeled gauge (the family's single series).
+    pub fn gauge(&self, name: &'static str, help: &'static str) -> Arc<Gauge> {
+        self.gauge_with(name, help, &[])
+    }
+
+    /// Look up or create a gauge series.
+    pub fn gauge_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Gauge> {
+        match self.series(name, help, MetricKind::Gauge, labels) {
+            Metric::Gauge(g) => g,
+            _ => unreachable!("kind checked by series()"),
+        }
+    }
+
+    /// Unlabeled histogram (the family's single series).
+    pub fn histogram(&self, name: &'static str, help: &'static str) -> Arc<Histogram> {
+        self.histogram_with(name, help, &[])
+    }
+
+    /// Look up or create a histogram series.
+    pub fn histogram_with(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        labels: &[(&'static str, &str)],
+    ) -> Arc<Histogram> {
+        match self.series(name, help, MetricKind::Histogram, labels) {
+            Metric::Histogram(h) => h,
+            _ => unreachable!("kind checked by series()"),
+        }
+    }
+
+    fn series(
+        &self,
+        name: &'static str,
+        help: &'static str,
+        kind: MetricKind,
+        labels: &[(&'static str, &str)],
+    ) -> Metric {
+        let mut fams = self.families.lock().expect("metrics registry poisoned");
+        let fam = match fams.iter_mut().find(|f| f.name == name) {
+            Some(f) => {
+                assert!(
+                    f.kind == kind,
+                    "metric {name:?} registered as {:?}, requested as {kind:?}",
+                    f.kind
+                );
+                f
+            }
+            None => {
+                fams.push(Family { name, help, kind, series: Vec::new() });
+                fams.last_mut().expect("family just pushed")
+            }
+        };
+        if let Some((_, m)) = fam.series.iter().find(|(ls, _)| labels_match(ls, labels)) {
+            return m.clone();
+        }
+        let metric = match kind {
+            MetricKind::Counter => Metric::Counter(Arc::new(Counter::default())),
+            MetricKind::Gauge => Metric::Gauge(Arc::new(Gauge::default())),
+            MetricKind::Histogram => Metric::Histogram(Arc::new(Histogram::new())),
+        };
+        fam.series.push((
+            labels.iter().map(|(k, v)| (*k, (*v).to_string())).collect(),
+            metric.clone(),
+        ));
+        metric
+    }
+
+    /// Freeze every family for exposition: families sorted by name,
+    /// series by label values, so rendered output is deterministic.
+    pub fn snapshot(&self) -> Vec<FamilySnapshot> {
+        let fams = self.families.lock().expect("metrics registry poisoned");
+        let mut out: Vec<FamilySnapshot> = fams
+            .iter()
+            .map(|f| {
+                let mut series: Vec<SeriesSnapshot> = f
+                    .series
+                    .iter()
+                    .map(|(labels, m)| SeriesSnapshot {
+                        labels: labels.clone(),
+                        value: match m {
+                            Metric::Counter(c) => ValueSnapshot::Counter(c.get()),
+                            Metric::Gauge(g) => ValueSnapshot::Gauge(g.get()),
+                            Metric::Histogram(h) => ValueSnapshot::Histogram(h.snapshot()),
+                        },
+                    })
+                    .collect();
+                series.sort_by(|a, b| a.labels.cmp(&b.labels));
+                FamilySnapshot { name: f.name, help: f.help, kind: f.kind, series }
+            })
+            .collect();
+        out.sort_by(|a, b| a.name.cmp(b.name));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::summarize;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("t_total", "help");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        c.store(2);
+        assert_eq!(c.get(), 2);
+        let g = reg.gauge("t_gauge", "help");
+        g.set(7);
+        g.dec();
+        g.add(-2);
+        assert_eq!(g.get(), 4);
+    }
+
+    #[test]
+    fn registry_reuses_series_by_name_and_labels() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter_with("reqs_total", "h", &[("op", "count")]);
+        let b = reg.counter_with("reqs_total", "h", &[("op", "count")]);
+        let c = reg.counter_with("reqs_total", "h", &[("op", "stats")]);
+        assert!(Arc::ptr_eq(&a, &b), "same labels must share the series");
+        assert!(!Arc::ptr_eq(&a, &c), "different labels must not");
+        a.add(3);
+        assert_eq!(b.get(), 3);
+        let snap = reg.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].series.len(), 2);
+    }
+
+    #[test]
+    #[should_panic(expected = "registered as")]
+    fn kind_mismatch_panics() {
+        let reg = MetricsRegistry::new();
+        let _ = reg.counter("x_total", "h");
+        let _ = reg.gauge("x_total", "h");
+    }
+
+    #[test]
+    fn histogram_tracks_the_stats_oracle() {
+        // 1..=100 ms uniform — the same fixture the old latency rings
+        // used. Mean/sum must match util::stats exactly (the histogram
+        // keeps an exact nanosecond sum); quantile estimates must land
+        // inside the true quantile's bucket (one HIST_GROWTH factor).
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat_seconds", "h");
+        let samples: Vec<f64> = (1..=100).map(|ms| ms as f64 / 1000.0).collect();
+        for &s in &samples {
+            h.record(s);
+        }
+        let oracle = summarize(&samples);
+        assert_eq!(h.count(), 100);
+        assert!((h.sum_secs() - samples.iter().sum::<f64>()).abs() < 1e-6);
+        assert!((h.mean() - oracle.mean).abs() < 1e-6, "{} vs {}", h.mean(), oracle.mean);
+
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        // true p50 = 0.050, p99 = 0.099 for this fixture
+        assert!(p50 <= p99, "quantiles must be monotone: {p50} > {p99}");
+        for (est, truth) in [(p50, 0.050), (p99, 0.099)] {
+            assert!(
+                est >= truth / HIST_GROWTH && est <= truth * HIST_GROWTH,
+                "estimate {est} not within one bucket of {truth}"
+            );
+        }
+        assert!(h.quantile(0.0) > 0.0);
+        assert!(h.quantile(1.0) >= p99);
+    }
+
+    #[test]
+    fn histogram_edge_values_stay_counted() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("edge_seconds", "h");
+        h.record(0.0);
+        h.record(-1.0);
+        h.record(f64::NAN);
+        h.record(1e9); // overflow bucket
+        assert_eq!(h.count(), 4);
+        let snap = h.snapshot();
+        assert_eq!(snap.buckets.len(), HIST_FINITE_BUCKETS);
+        // three clamped-to-zero samples in the first bucket
+        assert_eq!(snap.buckets[0].1, 3);
+        // the overflow sample is in count but not in any finite bucket
+        assert_eq!(snap.buckets.last().unwrap().1, 3);
+        // an all-overflow quantile clamps to the last finite bound
+        assert_eq!(h.quantile(0.999), bucket_bound(HIST_FINITE_BUCKETS - 1));
+    }
+
+    #[test]
+    fn bucket_index_is_le_consistent() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(HIST_FIRST_BOUND), 0);
+        assert_eq!(bucket_index(HIST_FIRST_BOUND * 1.01), 1);
+        assert_eq!(bucket_index(f64::MAX), HIST_FINITE_BUCKETS);
+    }
+
+    #[test]
+    fn counters_are_exact_under_racing_threads() {
+        let reg = MetricsRegistry::new();
+        let c = reg.counter("race_total", "h");
+        let h = reg.histogram("race_seconds", "h");
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for i in 0..10_000u64 {
+                        c.inc();
+                        if i % 100 == 0 {
+                            h.record(0.001);
+                        }
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 80_000);
+        assert_eq!(h.count(), 800);
+    }
+}

@@ -1,0 +1,39 @@
+//! Cross-cutting telemetry: the metrics registry, request tracing spans,
+//! structured stderr logging and Prometheus exposition.
+//!
+//! Std-only (like everything in the vendored offline build) and split
+//! in three layers, each usable alone:
+//!
+//! - [`metrics`] — lock-cheap [`Counter`]s/[`Gauge`]s and
+//!   exponential-bucket [`Histogram`]s behind a [`MetricsRegistry`]:
+//!   name + label lookup under one short mutex hold, relaxed atomics on
+//!   the hot path. Replaces the service pool's former 1024-sample
+//!   latency rings.
+//! - [`trace`] — a thread-local root span per request ([`start_root`])
+//!   that engine code decorates with child phase records
+//!   ([`record_phase`]: pin, setup, schedule, enumerate, merge, commit)
+//!   without signature changes; finished spans land in a bounded
+//!   [`TraceBuffer`] and slow ones in a structured stderr line.
+//! - [`prometheus`] — text exposition (format 0.0.4) of a registry
+//!   snapshot, plus the single-threaded HTTP/1.0 scrape loop behind
+//!   `vdmc serve --metrics-addr`.
+//!
+//! The service layer ties them together: `VdmcService` owns one
+//! registry, opens the root span in `handle_traced`, and
+//! `Request::Metrics` / the `--metrics-addr` endpoint render the same
+//! snapshot. A `Session` used standalone (no service, no span) pays one
+//! thread-local check per phase and records nothing.
+
+pub mod metrics;
+pub mod prometheus;
+pub mod trace;
+
+pub use metrics::{
+    Counter, FamilySnapshot, Gauge, Histogram, HistogramSnapshot, MetricKind, MetricsRegistry,
+    SeriesSnapshot, ValueSnapshot,
+};
+pub use prometheus::{render, serve_exposition};
+pub use trace::{
+    current_trace_id, gen_trace_id, log, log_level, record_phase, set_log_level, start_root,
+    time_phase, with_registry, LogLevel, RootSpan, TraceBuffer, TraceRecord,
+};

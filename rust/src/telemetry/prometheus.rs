@@ -1,0 +1,293 @@
+//! Prometheus text exposition (format 0.0.4) and the minimal HTTP/1.0
+//! scrape endpoint behind `vdmc serve --metrics-addr`.
+//!
+//! [`render`] turns a registry snapshot into the canonical text format:
+//! `# HELP`/`# TYPE` headers per family, one `name{labels} value` line
+//! per series, and the `_bucket`/`_sum`/`_count` expansion (cumulative
+//! `le` buckets, closed by `le="+Inf"`) for histograms.
+//!
+//! [`serve_exposition`] is a single-threaded accept loop shaped like
+//! `service::serve_tcp` (nonblocking accept + short poll against a
+//! shared shutdown flag), answering every `GET /metrics` with a freshly
+//! rendered body. Scrapes are rare (seconds apart) and the body is one
+//! `String`, so one thread handling connections serially is enough — no
+//! per-client threads, no keep-alive, `Connection: close` always.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use super::metrics::{FamilySnapshot, ValueSnapshot};
+
+/// Accept-poll interval while waiting for scrapers (mirrors the serve
+/// loop's cadence).
+const ACCEPT_POLL: Duration = Duration::from_millis(5);
+
+/// Per-connection read/write timeout: a stalled scraper must not wedge
+/// the exposition thread past this.
+const CLIENT_TIMEOUT: Duration = Duration::from_millis(500);
+
+/// Largest request head we will buffer before answering anyway.
+const MAX_HEAD_BYTES: usize = 8192;
+
+/// Render family snapshots as Prometheus text exposition format 0.0.4.
+pub fn render(families: &[FamilySnapshot]) -> String {
+    let mut out = String::new();
+    for fam in families {
+        out.push_str("# HELP ");
+        out.push_str(fam.name);
+        out.push(' ');
+        out.push_str(fam.help);
+        out.push('\n');
+        out.push_str("# TYPE ");
+        out.push_str(fam.name);
+        out.push(' ');
+        out.push_str(fam.kind.as_str());
+        out.push('\n');
+        for s in &fam.series {
+            match &s.value {
+                ValueSnapshot::Counter(v) => {
+                    sample_line(&mut out, fam.name, "", &s.labels, None, &v.to_string());
+                }
+                ValueSnapshot::Gauge(v) => {
+                    sample_line(&mut out, fam.name, "", &s.labels, None, &v.to_string());
+                }
+                ValueSnapshot::Histogram(h) => {
+                    for &(le, cum) in &h.buckets {
+                        sample_line(
+                            &mut out,
+                            fam.name,
+                            "_bucket",
+                            &s.labels,
+                            Some(&format_f64(le)),
+                            &cum.to_string(),
+                        );
+                    }
+                    sample_line(
+                        &mut out,
+                        fam.name,
+                        "_bucket",
+                        &s.labels,
+                        Some("+Inf"),
+                        &h.count.to_string(),
+                    );
+                    let sum = format_f64(h.sum_secs);
+                    sample_line(&mut out, fam.name, "_sum", &s.labels, None, &sum);
+                    let count = h.count.to_string();
+                    sample_line(&mut out, fam.name, "_count", &s.labels, None, &count);
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `name[suffix]{labels[,le="bound"]} value\n`
+fn sample_line(
+    out: &mut String,
+    name: &str,
+    suffix: &str,
+    labels: &[(&'static str, String)],
+    le: Option<&str>,
+    value: &str,
+) {
+    out.push_str(name);
+    out.push_str(suffix);
+    if !labels.is_empty() || le.is_some() {
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            push_escaped(out, v);
+            out.push('"');
+        }
+        if let Some(le) = le {
+            if !first {
+                out.push(',');
+            }
+            out.push_str("le=\"");
+            out.push_str(le);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    out.push_str(value);
+    out.push('\n');
+}
+
+/// Escape a label value per the exposition format: backslash, quote,
+/// newline.
+fn push_escaped(out: &mut String, v: &str) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+}
+
+/// Shortest faithful float form (`Display` round-trips f64); Prometheus
+/// accepts plain decimal and exponent notation alike.
+fn format_f64(v: f64) -> String {
+    format!("{v}")
+}
+
+/// Serve `render()` output over HTTP/1.0 until `shutdown` flips.
+/// Returns the number of successfully answered scrapes.
+pub fn serve_exposition(
+    listener: TcpListener,
+    shutdown: &AtomicBool,
+    render: &(dyn Fn() -> String + Sync),
+) -> std::io::Result<u64> {
+    listener.set_nonblocking(true)?;
+    let mut served = 0u64;
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                if answer_scrape(stream, render) {
+                    served += 1;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(served)
+}
+
+/// Read one request head, answer, close. Returns true for a delivered
+/// 200 body.
+fn answer_scrape(mut stream: TcpStream, render: &(dyn Fn() -> String + Sync)) -> bool {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_read_timeout(Some(CLIENT_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(CLIENT_TIMEOUT));
+    let mut head = Vec::new();
+    let mut buf = [0u8; 1024];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break,
+            Ok(n) => {
+                head.extend_from_slice(&buf[..n]);
+                if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_HEAD_BYTES {
+                    break;
+                }
+            }
+            Err(_) => break,
+        }
+    }
+    let request = String::from_utf8_lossy(&head);
+    let path = request.split_whitespace().nth(1).unwrap_or("/");
+    let (status, body) = if path == "/metrics" || path == "/" {
+        ("200 OK", render())
+    } else {
+        ("404 Not Found", String::from("try /metrics\n"))
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: text/plain; version=0.0.4; charset=utf-8\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(response.as_bytes()).is_ok() && status.starts_with("200")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::metrics::{MetricsRegistry, HIST_FINITE_BUCKETS};
+    use std::sync::atomic::AtomicBool;
+    use std::sync::Arc;
+
+    fn fixture_registry() -> MetricsRegistry {
+        let reg = MetricsRegistry::new();
+        reg.counter_with("vdmc_requests_total", "Requests.", &[("op", "count")]).add(3);
+        reg.gauge("vdmc_pool_entries", "Resident sessions.").set(2);
+        reg.histogram("vdmc_request_seconds", "Latency.").record(0.004);
+        reg
+    }
+
+    #[test]
+    fn renders_help_type_and_samples() {
+        let text = render(&fixture_registry().snapshot());
+        assert!(text.contains("# HELP vdmc_pool_entries Resident sessions.\n"), "{text}");
+        assert!(text.contains("# TYPE vdmc_pool_entries gauge\n"), "{text}");
+        assert!(text.contains("vdmc_pool_entries 2\n"), "{text}");
+        assert!(text.contains("# TYPE vdmc_requests_total counter\n"), "{text}");
+        assert!(text.contains("vdmc_requests_total{op=\"count\"} 3\n"), "{text}");
+    }
+
+    #[test]
+    fn histogram_expands_to_cumulative_buckets() {
+        let text = render(&fixture_registry().snapshot());
+        assert!(text.contains("# TYPE vdmc_request_seconds histogram\n"), "{text}");
+        let buckets: Vec<&str> = text
+            .lines()
+            .filter(|l| l.starts_with("vdmc_request_seconds_bucket"))
+            .collect();
+        assert_eq!(buckets.len(), HIST_FINITE_BUCKETS + 1, "finite buckets + +Inf");
+        assert!(buckets.last().unwrap().contains("le=\"+Inf\"} 1"), "{buckets:?}");
+        // cumulative counts never decrease
+        let counts: Vec<u64> =
+            buckets.iter().map(|l| l.rsplit(' ').next().unwrap().parse().unwrap()).collect();
+        assert!(counts.windows(2).all(|w| w[0] <= w[1]), "{counts:?}");
+        assert!(text.contains("vdmc_request_seconds_count 1\n"), "{text}");
+        assert!(text.contains("vdmc_request_seconds_sum 0.004"), "{text}");
+    }
+
+    #[test]
+    fn label_values_are_escaped() {
+        let mut out = String::new();
+        sample_line(&mut out, "m", "", &[("p", "a\"b\\c\nd".to_string())], None, "1");
+        assert_eq!(out, "m{p=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn exposition_answers_http_scrapes() {
+        let reg = Arc::new(fixture_registry());
+        let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+        let addr = listener.local_addr().expect("addr");
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let shutdown = shutdown.clone();
+            let reg = reg.clone();
+            std::thread::spawn(move || {
+                serve_exposition(listener, &shutdown, &move || render(&reg.snapshot()))
+            })
+        };
+
+        let mut stream = TcpStream::connect(addr).expect("connect");
+        stream.write_all(b"GET /metrics HTTP/1.0\r\n\r\n").expect("request");
+        let mut response = String::new();
+        stream.read_to_string(&mut response).expect("response");
+        assert!(response.starts_with("HTTP/1.0 200 OK\r\n"), "{response}");
+        assert!(response.contains("Content-Type: text/plain; version=0.0.4"), "{response}");
+        let body = response.split("\r\n\r\n").nth(1).expect("body");
+        let len: usize = response
+            .lines()
+            .find(|l| l.starts_with("Content-Length: "))
+            .and_then(|l| l.trim_start_matches("Content-Length: ").parse().ok())
+            .expect("content length");
+        assert_eq!(body.len(), len, "Content-Length must match the body");
+        assert!(body.contains("vdmc_requests_total{op=\"count\"} 3\n"), "{body}");
+
+        let mut stream = TcpStream::connect(addr).expect("connect 404");
+        stream.write_all(b"GET /nope HTTP/1.0\r\n\r\n").expect("request");
+        let mut response = String::new();
+        stream.read_to_string(&mut response).expect("response");
+        assert!(response.starts_with("HTTP/1.0 404"), "{response}");
+
+        shutdown.store(true, Ordering::SeqCst);
+        let served = handle.join().expect("join").expect("serve ok");
+        assert_eq!(served, 1, "one 200 scrape answered");
+    }
+}

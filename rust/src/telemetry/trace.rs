@@ -1,0 +1,362 @@
+//! Request-scoped tracing and structured logging.
+//!
+//! One request = one **root span**: the service opens it with
+//! [`start_root`], carrying the trace id (client-supplied `"trace"` wire
+//! field or generated) and, when telemetry is enabled, the service's
+//! metrics registry. The context lives in a thread local, so engine code
+//! deep inside `Session`/`SessionSnapshot` can attach child **phase**
+//! records ([`record_phase`]/[`time_phase`]: pin, setup, schedule,
+//! enumerate, merge, commit) without any signature threading — a session
+//! used standalone, outside any span, pays a single thread-local check
+//! and records nothing.
+//!
+//! Finished root spans become [`TraceRecord`]s in a bounded in-memory
+//! [`TraceBuffer`] (newest wins); requests slower than the service's
+//! threshold additionally emit one structured slow-query line on stderr
+//! through [`log`], the JSON-lines logger gated by the process-wide
+//! [`LogLevel`].
+
+use std::cell::RefCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Instant, SystemTime, UNIX_EPOCH};
+
+use super::metrics::MetricsRegistry;
+use crate::util::json::Json;
+
+/// Histogram family phase durations land in (label: `phase`).
+pub const PHASE_SECONDS: &str = "vdmc_phase_seconds";
+const PHASE_HELP: &str = "Engine phase duration within one request, by phase.";
+
+struct ActiveTrace {
+    trace_id: String,
+    registry: Option<Arc<MetricsRegistry>>,
+    phases: Vec<(&'static str, f64)>,
+}
+
+thread_local! {
+    static ACTIVE: RefCell<Option<ActiveTrace>> = const { RefCell::new(None) };
+}
+
+/// Guard for one root span. Close it with [`RootSpan::finish`] to
+/// collect the recorded phases; dropping it without finishing (error
+/// unwind) just restores the previous context.
+pub struct RootSpan {
+    prev: Option<ActiveTrace>,
+    start: Instant,
+    finished: bool,
+}
+
+/// Open a root span on this thread, shadowing any active one until the
+/// guard closes. `registry` routes phase records into the
+/// [`PHASE_SECONDS`] histogram as well; `None` keeps them span-only.
+pub fn start_root(trace_id: String, registry: Option<Arc<MetricsRegistry>>) -> RootSpan {
+    let prev = ACTIVE.with(|a| {
+        a.borrow_mut().replace(ActiveTrace { trace_id, registry, phases: Vec::new() })
+    });
+    RootSpan { prev, start: Instant::now(), finished: false }
+}
+
+impl RootSpan {
+    /// Close the span: restore the shadowed context and return the
+    /// recorded `(phase, secs)` pairs plus total elapsed seconds.
+    pub fn finish(mut self) -> (Vec<(&'static str, f64)>, f64) {
+        self.finished = true;
+        let cur = ACTIVE.with(|a| std::mem::replace(&mut *a.borrow_mut(), self.prev.take()));
+        let phases = cur.map(|t| t.phases).unwrap_or_default();
+        (phases, self.start.elapsed().as_secs_f64())
+    }
+}
+
+impl Drop for RootSpan {
+    fn drop(&mut self) {
+        if !self.finished {
+            ACTIVE.with(|a| *a.borrow_mut() = self.prev.take());
+        }
+    }
+}
+
+/// Attach one completed phase to the active root span (and its phase
+/// histogram, when the span carries a registry). No-op outside a span.
+pub fn record_phase(name: &'static str, secs: f64) {
+    ACTIVE.with(|a| {
+        if let Some(t) = a.borrow_mut().as_mut() {
+            t.phases.push((name, secs));
+            if let Some(reg) = &t.registry {
+                reg.histogram_with(PHASE_SECONDS, PHASE_HELP, &[("phase", name)]).record(secs);
+            }
+        }
+    });
+}
+
+/// Run `f`, timing it as a phase when a root span is active; outside a
+/// span `f` runs untimed (not even an `Instant` read).
+pub fn time_phase<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
+    let active = ACTIVE.with(|a| a.borrow().is_some());
+    if !active {
+        return f();
+    }
+    let t0 = Instant::now();
+    let out = f();
+    record_phase(name, t0.elapsed().as_secs_f64());
+    out
+}
+
+/// Run `f` against the active span's metrics registry, when both exist —
+/// how engine code records counters without holding a registry handle.
+pub fn with_registry(f: impl FnOnce(&MetricsRegistry)) {
+    let reg = ACTIVE.with(|a| a.borrow().as_ref().and_then(|t| t.registry.clone()));
+    if let Some(reg) = reg {
+        f(&reg);
+    }
+}
+
+/// Trace id of the active root span on this thread.
+pub fn current_trace_id() -> Option<String> {
+    ACTIVE.with(|a| a.borrow().as_ref().map(|t| t.trace_id.clone()))
+}
+
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Generate a trace id for a request that did not supply one: process
+/// id + wall-clock nanos + a process-wide sequence number.
+pub fn gen_trace_id() -> String {
+    let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let nanos = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| u64::from(d.subsec_nanos()))
+        .unwrap_or(0);
+    format!("t{:x}-{:x}-{seq:x}", std::process::id(), nanos)
+}
+
+/// One finished root span.
+#[derive(Debug, Clone)]
+pub struct TraceRecord {
+    pub trace_id: String,
+    pub op: String,
+    pub graph: Option<String>,
+    pub total_secs: f64,
+    /// Child phases in completion order; phases can nest (schedule and
+    /// merge run inside enumerate's window), so they need not sum to
+    /// `total_secs`.
+    pub phases: Vec<(&'static str, f64)>,
+}
+
+impl TraceRecord {
+    /// Structured form for slow-query logging.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("trace", self.trace_id.as_str()).set("op", self.op.as_str());
+        if let Some(g) = &self.graph {
+            j.set("graph", g.as_str());
+        }
+        j.set("total_secs", self.total_secs);
+        let mut phases = Json::obj();
+        for (name, secs) in &self.phases {
+            // repeated phases (one per re-enumerated edge, say) fold
+            // into one summed entry
+            let prior = phases.get(name).and_then(Json::as_f64).unwrap_or(0.0);
+            phases.set(name, prior + secs);
+        }
+        j.set("phases", phases);
+        j
+    }
+}
+
+/// Bounded FIFO of the most recent finished traces.
+pub struct TraceBuffer {
+    cap: usize,
+    records: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl TraceBuffer {
+    pub fn new(cap: usize) -> TraceBuffer {
+        TraceBuffer { cap: cap.max(1), records: Mutex::new(VecDeque::new()) }
+    }
+
+    pub fn push(&self, rec: TraceRecord) {
+        let mut records = self.records.lock().expect("trace buffer poisoned");
+        if records.len() == self.cap {
+            records.pop_front();
+        }
+        records.push_back(rec);
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().expect("trace buffer poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The most recent `n` traces, oldest first.
+    pub fn recent(&self, n: usize) -> Vec<TraceRecord> {
+        let records = self.records.lock().expect("trace buffer poisoned");
+        records.iter().skip(records.len().saturating_sub(n)).cloned().collect()
+    }
+}
+
+// ---------------------------------------------------------------- logging
+
+/// Stderr log verbosity, most to least quiet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LogLevel {
+    Off = 0,
+    Error = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+impl LogLevel {
+    /// Parse a `--log-level` value.
+    pub fn parse(s: &str) -> Option<LogLevel> {
+        match s {
+            "off" => Some(LogLevel::Off),
+            "error" => Some(LogLevel::Error),
+            "info" => Some(LogLevel::Info),
+            "debug" => Some(LogLevel::Debug),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            LogLevel::Off => "off",
+            LogLevel::Error => "error",
+            LogLevel::Info => "info",
+            LogLevel::Debug => "debug",
+        }
+    }
+}
+
+/// Process-wide level; Info by default so slow-query lines are visible
+/// without flags.
+static LOG_LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
+
+pub fn set_log_level(level: LogLevel) {
+    LOG_LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn log_level() -> LogLevel {
+    match LOG_LEVEL.load(Ordering::Relaxed) {
+        0 => LogLevel::Off,
+        1 => LogLevel::Error,
+        3 => LogLevel::Debug,
+        _ => LogLevel::Info,
+    }
+}
+
+/// Emit one structured JSON log line on stderr when `level` is enabled:
+/// `{"level":...,"msg":...,"target":...,"ts":...}` plus `fields`.
+pub fn log(level: LogLevel, target: &str, msg: &str, fields: &[(&str, Json)]) {
+    if level == LogLevel::Off || level > log_level() {
+        return;
+    }
+    let ts = SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0);
+    let mut j = Json::obj();
+    j.set("ts", ts).set("level", level.as_str()).set("target", target).set("msg", msg);
+    for (k, v) in fields {
+        j.set(k, v.clone());
+    }
+    eprintln!("{}", j.to_string_compact());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn phases_outside_a_span_are_dropped() {
+        record_phase("setup", 0.5);
+        let span = start_root("t1".into(), None);
+        let (phases, _) = span.finish();
+        assert!(phases.is_empty(), "pre-span phase leaked in: {phases:?}");
+    }
+
+    #[test]
+    fn root_span_collects_phases_and_restores_context() {
+        assert_eq!(current_trace_id(), None);
+        let span = start_root("outer".into(), None);
+        record_phase("pin", 0.001);
+        {
+            let inner = start_root("inner".into(), None);
+            assert_eq!(current_trace_id().as_deref(), Some("inner"));
+            record_phase("setup", 0.002);
+            let (phases, _) = inner.finish();
+            assert_eq!(phases, vec![("setup", 0.002)]);
+        }
+        assert_eq!(current_trace_id().as_deref(), Some("outer"));
+        let out = time_phase("enumerate", || 41 + 1);
+        assert_eq!(out, 42);
+        let (phases, total) = span.finish();
+        assert_eq!(phases.len(), 2);
+        assert_eq!(phases[0], ("pin", 0.001));
+        assert_eq!(phases[1].0, "enumerate");
+        assert!(total >= 0.0);
+        assert_eq!(current_trace_id(), None);
+    }
+
+    #[test]
+    fn phase_records_feed_the_span_registry() {
+        let reg = Arc::new(MetricsRegistry::new());
+        let span = start_root("t".into(), Some(reg.clone()));
+        record_phase("merge", 0.004);
+        record_phase("merge", 0.008);
+        drop(span); // drop-without-finish must still restore the TLS
+        assert_eq!(current_trace_id(), None);
+        let h = reg.histogram_with(PHASE_SECONDS, "", &[("phase", "merge")]);
+        assert_eq!(h.count(), 2);
+        assert!((h.sum_secs() - 0.012).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trace_buffer_is_bounded_newest_wins() {
+        let buf = TraceBuffer::new(2);
+        for i in 0..5 {
+            buf.push(TraceRecord {
+                trace_id: format!("t{i}"),
+                op: "count".into(),
+                graph: None,
+                total_secs: 0.1,
+                phases: vec![],
+            });
+        }
+        assert_eq!(buf.len(), 2);
+        let recent = buf.recent(8);
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].trace_id, "t3");
+        assert_eq!(recent[1].trace_id, "t4");
+    }
+
+    #[test]
+    fn trace_record_json_folds_repeated_phases() {
+        let rec = TraceRecord {
+            trace_id: "abc".into(),
+            op: "apply_edges".into(),
+            graph: Some("g".into()),
+            total_secs: 1.5,
+            phases: vec![("commit", 0.25), ("commit", 0.25)],
+        };
+        let s = rec.to_json().to_string_compact();
+        assert!(s.contains("\"trace\":\"abc\""), "{s}");
+        assert!(s.contains("\"commit\":0.5"), "{s}");
+    }
+
+    #[test]
+    fn log_level_parses_and_orders() {
+        assert_eq!(LogLevel::parse("debug"), Some(LogLevel::Debug));
+        assert_eq!(LogLevel::parse("verbose"), None);
+        assert!(LogLevel::Off < LogLevel::Error && LogLevel::Error < LogLevel::Info);
+        assert_eq!(LogLevel::parse(LogLevel::Info.as_str()), Some(LogLevel::Info));
+    }
+
+    #[test]
+    fn gen_trace_ids_are_unique() {
+        let a = gen_trace_id();
+        let b = gen_trace_id();
+        assert_ne!(a, b);
+        assert!(a.starts_with('t'));
+    }
+}

@@ -120,11 +120,12 @@ fn interleaved_pooled_traffic_matches_dedicated_sessions() {
     }
 
     match svc.handle(Request::Stats).unwrap() {
-        Response::Stats(s) => {
+        Response::Stats { pool: s, process } => {
             assert_eq!(s.entries, 3);
             assert!(s.hits > 0, "interleaved traffic must be served from pooled sessions");
             assert_eq!(s.misses, 0);
             assert!(s.resident_bytes > 0);
+            assert!(process.total_requests() > 0, "traffic shows up in the process counters");
         }
         other => panic!("{other:?}"),
     }
@@ -152,7 +153,7 @@ fn byte_budget_eviction_is_reported_and_recoverable() {
         svc.handle(load_req(id, g)).unwrap();
     }
     let stats = match svc.handle(Request::Stats).unwrap() {
-        Response::Stats(s) => s,
+        Response::Stats { pool, .. } => pool,
         other => panic!("{other:?}"),
     };
     assert!(
@@ -181,7 +182,7 @@ fn byte_budget_eviction_is_reported_and_recoverable() {
     assert_eq!(got.per_vertex, want.per_vertex);
 
     let stats = match svc.handle(Request::Stats).unwrap() {
-        Response::Stats(s) => s,
+        Response::Stats { pool, .. } => pool,
         other => panic!("{other:?}"),
     };
     assert!(stats.misses >= 1, "the evicted graph's query must count as a miss");
@@ -198,12 +199,13 @@ fn wire_jsonl_stream_matches_dedicated_sessions() {
 
     // the serve loop body, minus stdin plumbing
     let roundtrip = |line: String| -> Json {
-        let (req, id) = wire::decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+        let (req, id, trace) =
+            wire::decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
         let op = req.op();
-        let (result, secs) = svc.handle_timed(req);
+        let (result, secs, trace_id) = svc.handle_traced(req, trace);
         let reply = match result {
-            Ok(resp) => wire::encode_response(&resp, id, secs),
-            Err(e) => wire::encode_error(Some(op), id, &format!("{e:#}")),
+            Ok(resp) => wire::encode_response(&resp, id, secs, Some(&trace_id)),
+            Err(e) => wire::encode_error(Some(op), id, Some(&trace_id), &format!("{e:#}")),
         };
         Json::parse(&reply).unwrap_or_else(|e| panic!("unparseable response {reply}: {e}"))
     };
@@ -502,10 +504,262 @@ fn tcp_clients_share_one_pool_and_drain_on_shutdown() {
 
     // one pool behind all clients: 12 pooled hits, zero reloads
     match svc.handle(Request::Stats).unwrap() {
-        Response::Stats(s) => {
+        Response::Stats { pool: s, .. } => {
             assert_eq!(s.entries, 3);
             assert!(s.hits >= (n_clients * 3) as u64, "stats: {s:?}");
             assert_eq!(s.misses, 0);
+        }
+        other => panic!("{other:?}"),
+    }
+}
+
+/// Trace ids and the phase breakdown survive the full JSONL round trip:
+/// a client-supplied `"trace"` is echoed on the response line, the count
+/// digest carries `phase_secs`, and the span lands in the trace buffer
+/// under that id with the engine phases recorded.
+#[test]
+fn trace_and_phase_breakdown_ride_the_wire() {
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    svc.handle(load_req(&graphs[0].0, &graphs[0].1)).unwrap();
+
+    let input = "\
+        {\"op\":\"count\",\"id\":1,\"graph\":\"g0\",\"k\":3,\"direction\":\"directed\",\
+         \"trace\":\"probe-1\"}\n\
+        {\"op\":\"count\",\"id\":2,\"graph\":\"g0\",\"k\":3,\"direction\":\"directed\"}\n";
+    let mut out: Vec<u8> = Vec::new();
+    serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+    let lines = response_lines(&out);
+    assert_eq!(lines.len(), 2);
+
+    assert_eq!(lines[0].get("trace").and_then(Json::as_str), Some("probe-1"));
+    let phases = lines[0].get("phase_secs").expect("count digest carries phase_secs");
+    for key in ["setup", "enumerate", "merge"] {
+        assert!(phases.get(key).and_then(Json::as_f64).is_some(), "phase_secs.{key}");
+    }
+    // no client id: the service stamps a generated one
+    let generated = lines[1].get("trace").and_then(Json::as_str).unwrap();
+    assert!(!generated.is_empty() && generated != "probe-1");
+
+    // the span is findable in the trace buffer by the client's id
+    let rec = svc
+        .telemetry()
+        .traces()
+        .recent(16)
+        .into_iter()
+        .find(|r| r.trace_id == "probe-1")
+        .expect("span buffered under the client's trace id");
+    assert_eq!(rec.op, "count");
+    assert_eq!(rec.graph.as_deref(), Some("g0"));
+    assert!(rec.phases.iter().any(|(p, _)| *p == "enumerate"), "phases: {:?}", rec.phases);
+    assert!(rec.total_secs >= 0.0);
+}
+
+/// The exposition body parses line by line: every line is a HELP/TYPE
+/// header or a `name[{labels}] value` sample, histograms expand to
+/// cumulative le-buckets closed by +Inf, and the families the catalog
+/// guarantees are all present after real traffic.
+#[test]
+fn prometheus_exposition_parses_line_by_line() {
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    svc.handle(load_req(&graphs[0].0, &graphs[0].1)).unwrap();
+    let input = "\
+        {\"op\":\"count\",\"id\":1,\"graph\":\"g0\",\"k\":3,\"direction\":\"directed\"}\n\
+        {\"op\":\"stats\",\"id\":2}\n\
+        {\"op\":\"metrics\",\"id\":3}\n";
+    let mut out: Vec<u8> = Vec::new();
+    serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+
+    // the wire's metrics op returns the same families --metrics-addr
+    // serves (values drift between renders — they're monotonic)
+    let lines = response_lines(&out);
+    let body = lines[2].get("metrics").and_then(Json::as_str).unwrap().to_string();
+    let fams = |s: &str| -> Vec<String> {
+        s.lines()
+            .filter(|l| l.starts_with("# TYPE "))
+            .map(|l| l.split_whitespace().nth(2).unwrap().to_string())
+            .collect()
+    };
+    assert_eq!(fams(&body), fams(&svc.metrics_text()));
+
+    let mut families: Vec<(String, String)> = Vec::new(); // (name, kind)
+    let mut samples = 0usize;
+    for line in body.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let kind = it.next().unwrap().to_string();
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind.as_str()),
+                "unknown kind in {line:?}"
+            );
+            families.push((name, kind));
+            continue;
+        }
+        if line.starts_with("# HELP ") {
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment {line:?}");
+        // sample line: name[{labels}] value
+        let (series, value) = line.rsplit_once(' ').unwrap_or_else(|| panic!("{line:?}"));
+        assert!(
+            value == "+Inf" || value.parse::<f64>().is_ok(),
+            "unparseable value in {line:?}"
+        );
+        let name = series.split('{').next().unwrap();
+        let (fam, kind) = families
+            .iter()
+            .rev()
+            .find(|(f, _)| {
+                name == f
+                    || (name.strip_prefix(f.as_str()).is_some_and(|suf| {
+                        ["_bucket", "_sum", "_count"].contains(&suf)
+                    }))
+            })
+            .unwrap_or_else(|| panic!("sample {line:?} before its TYPE header"));
+        if name != fam {
+            assert_eq!(kind, "histogram", "{line:?} uses histogram suffixes");
+        }
+        samples += 1;
+    }
+    assert!(samples > 0);
+
+    // the guaranteed catalog after a count + stats round
+    for needle in [
+        "vdmc_requests_total",
+        "vdmc_request_seconds",
+        "vdmc_phase_seconds",
+        "vdmc_engine_units_total",
+        "vdmc_engine_instances_total",
+        "vdmc_pool_hits_total",
+        "vdmc_pool_misses_total",
+        "vdmc_pool_loads_total",
+        "vdmc_pool_evictions_total",
+        "vdmc_pool_evictions_deferred_total",
+        "vdmc_pool_entries",
+        "vdmc_pool_resident_bytes",
+        "vdmc_pool_retained_bytes",
+        "vdmc_pool_pinned_snapshots",
+        "vdmc_pool_graph_epoch",
+        "vdmc_process_uptime_seconds",
+        "vdmc_slow_queries_total",
+        "vdmc_transport_connections_total",
+        "vdmc_transport_inflight",
+        "vdmc_transport_malformed_lines_total",
+        "vdmc_transport_bytes_total",
+    ] {
+        assert!(
+            families.iter().any(|(f, _)| f == needle),
+            "family {needle} missing; have {families:?}"
+        );
+    }
+    assert!(families.len() >= 12, "metric catalog shrank: {families:?}");
+
+    // nonzero where traffic guarantees it
+    let sample_value = |prefix: &str| -> f64 {
+        body.lines()
+            .find(|l| l.starts_with(prefix))
+            .unwrap_or_else(|| panic!("{prefix} sample missing"))
+            .rsplit_once(' ')
+            .unwrap()
+            .1
+            .parse()
+            .unwrap()
+    };
+    assert!(sample_value("vdmc_requests_total{op=\"count\"}") >= 1.0);
+    assert!(sample_value("vdmc_request_seconds_count{op=\"count\"}") >= 1.0);
+    assert!(sample_value("vdmc_engine_units_total") >= 1.0);
+}
+
+/// Counter exactness under racing TCP clients: with 8 clients hammering
+/// one pool, the request counters, transport byte tallies and connection
+/// counts come out exact — nothing lost to races.
+#[test]
+fn telemetry_counters_exact_under_racing_tcp_clients() {
+    use std::io::{BufRead as _, BufReader, Write as _};
+    use std::net::{Shutdown, TcpListener, TcpStream};
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    let graphs = graphs();
+    let svc = VdmcService::with_defaults();
+    svc.handle(load_req(&graphs[0].0, &graphs[0].1)).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = {
+        let svc = svc.clone();
+        let shutdown = Arc::clone(&shutdown);
+        std::thread::spawn(move || {
+            serve_tcp(&svc, listener, &ServeOptions::default(), &shutdown).unwrap()
+        })
+    };
+
+    let n_clients = 8usize;
+    let per_client = 25usize;
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut w = stream;
+                for i in 0..per_client {
+                    writeln!(
+                        w,
+                        "{{\"op\":\"count\",\"id\":{},\"graph\":\"g0\",\"k\":3,\
+                         \"direction\":\"directed\"}}",
+                        c * 1000 + i
+                    )
+                    .unwrap();
+                }
+                w.shutdown(Shutdown::Write).unwrap();
+                let mut replies = 0usize;
+                let mut line = String::new();
+                loop {
+                    line.clear();
+                    if reader.read_line(&mut line).unwrap() == 0 {
+                        break;
+                    }
+                    let j = Json::parse(line.trim()).unwrap();
+                    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "{j:?}");
+                    replies += 1;
+                }
+                replies
+            })
+        })
+        .collect();
+    let total_replies: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total_replies, n_clients * per_client);
+
+    shutdown.store(true, Ordering::SeqCst);
+    let summary = server.join().unwrap();
+    assert_eq!(summary.requests, (n_clients * per_client) as u64);
+
+    let body = svc.metrics_text();
+    let value = |prefix: &str| -> u64 {
+        body.lines()
+            .find(|l| l.starts_with(prefix))
+            .unwrap_or_else(|| panic!("{prefix} missing"))
+            .rsplit_once(' ')
+            .unwrap()
+            .1
+            .parse::<f64>()
+            .unwrap() as u64
+    };
+    let want = (n_clients * per_client) as u64;
+    assert_eq!(value("vdmc_requests_total{op=\"count\"}"), want);
+    assert_eq!(value("vdmc_request_seconds_count{op=\"count\"}"), want);
+    assert_eq!(value("vdmc_transport_connections_total"), n_clients as u64);
+    assert_eq!(value("vdmc_transport_inflight"), 0, "all queues drained");
+    assert!(value("vdmc_transport_bytes_total{dir=\"in\"}") > 0);
+    assert!(value("vdmc_transport_bytes_total{dir=\"out\"}") > 0);
+    // the registry-derived per-op digest agrees with the same histograms
+    match svc.handle(Request::Stats).unwrap() {
+        Response::Stats { pool, .. } => {
+            let count_op = pool.ops.iter().find(|o| o.op == "count").unwrap();
+            assert_eq!(count_op.count, want);
         }
         other => panic!("{other:?}"),
     }
