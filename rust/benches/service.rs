@@ -26,14 +26,21 @@
 //!   same count stream with telemetry enabled vs disabled; the spans +
 //!   registry must cost <= 3% on the count path (asserted), with
 //!   bit-identical results.
+//! - `bench: "happy_path_overhead"` — min-of-rounds wall time of the
+//!   same counts through the cancellable path (a far-future deadline
+//!   token polled every work unit) vs the plain path; the per-unit
+//!   check must cost <= 2% (asserted), with bit-identical results.
+//! - `bench: "cancellation_latency"` — cancel a running k=4 count from
+//!   another thread and measure cancel-to-return; must stay within a
+//!   few work units' cost (asserted against the measured unit cost).
 //!
 //! Defaults: 3 G(n, 0.01) directed graphs, n = 2000, 6 traffic rounds.
 //! CI shrinks it with `--n 600`.
 
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
+use vdmc::engine::{AbortReason, CancelToken, CountQuery, Scope, Session, SessionConfig};
 use vdmc::graph::csr::Graph;
 use vdmc::graph::generators;
 use vdmc::motifs::{Direction, MotifSize};
@@ -405,4 +412,118 @@ fn main() {
         .set("busy_mean_secs", busy_mean)
         .set("busy_over_idle", busy_mean / idle_mean.max(1e-9));
     println!("{}", j.to_string_compact());
+
+    // -- happy-path overhead of the cancellation machinery ---------------
+    // the cancellable path polls the token once per work unit; against a
+    // token that never fires (far-future deadline) that poll is the whole
+    // cost. Same interleaved min-of-rounds discipline as the telemetry
+    // row, on a dedicated session so pool effects can't leak in.
+    println!("# happy-path overhead: cancellable vs plain count path");
+    let hp_session = Session::load_with(&graphs[0].1, &SessionConfig::default());
+    let hp_snap = hp_session.snapshot();
+    let far_token = CancelToken::after(Duration::from_secs(3600));
+    let plain_pass = || -> (f64, u64) {
+        let t0 = Instant::now();
+        let mut checksum = 0u64;
+        for _ in 0..3 {
+            let (counts, _) = hp_snap.count_with_report(&q3).expect("count");
+            checksum = checksum.wrapping_add(counts.total_instances);
+        }
+        (t0.elapsed().as_secs_f64(), checksum)
+    };
+    let cancellable_pass = || -> (f64, u64) {
+        let t0 = Instant::now();
+        let mut checksum = 0u64;
+        for _ in 0..3 {
+            let (counts, _) =
+                hp_snap.count_with_report_cancel(&q3, Some(&far_token)).expect("count");
+            checksum = checksum.wrapping_add(counts.total_instances);
+        }
+        (t0.elapsed().as_secs_f64(), checksum)
+    };
+    plain_pass(); // warm the cached setup before timing
+    cancellable_pass();
+    let hp_rounds = 5usize;
+    let (mut best_plain, mut best_cancel) = (f64::INFINITY, f64::INFINITY);
+    let (mut sum_plain, mut sum_cancel) = (0u64, 0u64);
+    for _ in 0..hp_rounds {
+        let (s_p, c_p) = plain_pass();
+        let (s_c, c_c) = cancellable_pass();
+        best_plain = best_plain.min(s_p);
+        best_cancel = best_cancel.min(s_c);
+        sum_plain = sum_plain.wrapping_add(c_p);
+        sum_cancel = sum_cancel.wrapping_add(c_c);
+    }
+    assert_eq!(sum_plain, sum_cancel, "the token must not change what gets counted");
+    let hp_overhead_pct = (best_cancel / best_plain.max(1e-9) - 1.0) * 100.0;
+    let mut j = Json::obj();
+    j.set("bench", "happy_path_overhead")
+        .set("rounds", hp_rounds)
+        .set("cancellable_secs", best_cancel)
+        .set("plain_secs", best_plain)
+        .set("overhead_pct", hp_overhead_pct)
+        .set("checksum", sum_plain);
+    println!("{}", j.to_string_compact());
+    assert!(
+        hp_overhead_pct <= 2.0,
+        "the per-unit cancellation check must cost <= 2% on the count path, \
+         got {hp_overhead_pct:.2}%"
+    );
+
+    // -- cancellation latency: cancel-to-return, mid-run -----------------
+    // workers poll per work unit, so cancel-to-return should cost about
+    // one unit (the unit in progress finishes) plus joins. Asserted with
+    // 4x unit-cost slack and a 10ms floor for sleep/scheduler jitter.
+    println!("# cancellation latency: cross-thread cancel of a k=4 count");
+    let q4 = CountQuery::builder()
+        .size_k(4)
+        .direction_name("directed")
+        .scheduler_name("stealing")
+        .sink_name("sharded")
+        .build()
+        .expect("valid names");
+    let (_, full_report) = hp_snap.count_with_report(&q4).expect("k4 count");
+    let t0 = Instant::now();
+    hp_snap.count_with_report(&q4).expect("k4 count");
+    let full_secs = t0.elapsed().as_secs_f64();
+    let unit_secs = full_secs / full_report.queue_units.max(1) as f64;
+    // aim the cancel at ~25% of the run; if a noisy run finishes before
+    // the sleep lands, retry with a shorter fuse instead of flaking
+    let mut latency_secs = f64::INFINITY;
+    let mut aborted = false;
+    for attempt in 0..5u32 {
+        let cancel_token = CancelToken::new();
+        let fuse = (full_secs * 0.25 / (1 << attempt) as f64).max(1e-4);
+        let (lat, ab) = std::thread::scope(|s| {
+            let runner = s.spawn(|| {
+                let r = hp_snap.count_with_report_cancel(&q4, Some(&cancel_token));
+                (Instant::now(), r.is_err())
+            });
+            std::thread::sleep(Duration::from_secs_f64(fuse));
+            let t_cancel = Instant::now();
+            cancel_token.cancel(AbortReason::ClientGone);
+            let (t_end, ab) = runner.join().expect("cancelled runner");
+            (t_end.saturating_duration_since(t_cancel).as_secs_f64(), ab)
+        });
+        if ab {
+            latency_secs = lat;
+            aborted = true;
+            break;
+        }
+    }
+    let bound_secs = (unit_secs * 4.0).max(0.010);
+    let mut j = Json::obj();
+    j.set("bench", "cancellation_latency")
+        .set("latency_secs", latency_secs)
+        .set("unit_secs", unit_secs)
+        .set("bound_secs", bound_secs)
+        .set("full_secs", full_secs)
+        .set("units", full_report.queue_units);
+    println!("{}", j.to_string_compact());
+    assert!(aborted, "the cancel must land mid-run and abort the count");
+    assert!(
+        latency_secs <= bound_secs,
+        "cancel-to-return must stay within a few work units \
+         ({latency_secs:.4}s > {bound_secs:.4}s bound)"
+    );
 }

@@ -1,0 +1,299 @@
+//! Cooperative cancellation for long-running enumerations.
+//!
+//! A [`CancelToken`] is a cheap, cloneable handle over a shared atomic
+//! flag plus an optional deadline [`Instant`]. The service boundary
+//! creates one per request (optionally as a [`CancelToken::child`] of a
+//! per-connection token, so a vanished client or a server shutdown
+//! cancels whatever that connection has in flight), and the engine's
+//! worker loop polls it **once per work unit** — a unit is one
+//! *(root, first-neighbor)* pair, the paper's grid cell, so a cancelled
+//! or deadline-blown query stops within a single unit's cost instead of
+//! running to completion and discarding the result.
+//!
+//! An aborted run surfaces as the typed [`QueryAborted`] error
+//! (reachable through `anyhow::Error::downcast_ref`, like the stream
+//! layer's `CountOnlyError`), carrying the [`AbortReason`] and exact
+//! partial-progress accounting: work units completed vs scheduled. The
+//! engine guarantees abort purity — a cancelled query never commits
+//! state, so pool contents, snapshot epochs and maintained counters are
+//! bit-identical to the query never having run (asserted by the
+//! cancellation property tests).
+//!
+//! The happy-path cost is one relaxed atomic load per unit (plus one
+//! clock read when a deadline is armed), benchmarked by the service
+//! bench's `happy_path_overhead` row (≤ 2% asserted).
+
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// Counter names shared by the engine (increment side, through the
+// request's traced registry) and the service telemetry (pre-registration
+// side, so scrapes show 0 before the first abort).
+/// Queries aborted because their deadline passed.
+pub const DEADLINE_EXCEEDED_TOTAL: &str = "vdmc_deadline_exceeded_total";
+pub const HELP_DEADLINE_EXCEEDED: &str = "Queries aborted by an expired deadline.";
+/// Queries aborted by an explicit cancel (client gone, shutdown, shed).
+pub const CANCELLED_TOTAL: &str = "vdmc_cancelled_total";
+pub const HELP_CANCELLED: &str = "Queries aborted by explicit cancellation (reason label).";
+/// Worker or request panics contained by a catch_unwind boundary.
+pub const PANICS_CAUGHT_TOTAL: &str = "vdmc_panics_caught_total";
+pub const HELP_PANICS_CAUGHT: &str = "Panics caught at isolation boundaries instead of dying.";
+
+/// Why an in-flight query was aborted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AbortReason {
+    /// The request's deadline (explicit `deadline_ms` or the serve
+    /// default) passed while enumeration was still running.
+    Deadline,
+    /// The client vanished: its connection errored or a response write
+    /// timed out, so nobody is waiting for the result.
+    ClientGone,
+    /// The server is draining for shutdown.
+    Shutdown,
+    /// Admission control revoked the request under overload.
+    Shed,
+}
+
+impl AbortReason {
+    /// Stable wire/metric label.
+    pub fn label(&self) -> &'static str {
+        match self {
+            AbortReason::Deadline => "deadline",
+            AbortReason::ClientGone => "client_gone",
+            AbortReason::Shutdown => "shutdown",
+            AbortReason::Shed => "shed",
+        }
+    }
+
+    fn from_state(state: u8) -> Option<AbortReason> {
+        match state {
+            1 => Some(AbortReason::Deadline),
+            2 => Some(AbortReason::ClientGone),
+            3 => Some(AbortReason::Shutdown),
+            4 => Some(AbortReason::Shed),
+            _ => None,
+        }
+    }
+
+    fn state(self) -> u8 {
+        match self {
+            AbortReason::Deadline => 1,
+            AbortReason::ClientGone => 2,
+            AbortReason::Shutdown => 3,
+            AbortReason::Shed => 4,
+        }
+    }
+}
+
+impl fmt::Display for AbortReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+struct Inner {
+    /// 0 = live; otherwise `AbortReason::state()`. First cancel wins.
+    state: AtomicU8,
+    /// Absolute deadline; checked (and latched into `state`) by `check`.
+    deadline: Option<Instant>,
+    /// Optional request label (the service tags tokens with the graph
+    /// id); fault sites use it to scope injected faults to one graph.
+    tag: Option<String>,
+    /// Connection-level token this request token was derived from:
+    /// cancelling the parent cancels every child.
+    parent: Option<Arc<Inner>>,
+}
+
+impl Inner {
+    fn reason(&self) -> Option<AbortReason> {
+        AbortReason::from_state(self.state.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared cancellation flag + optional deadline. Clones observe the
+/// same state; `check` is one relaxed load on the happy path.
+#[derive(Clone)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+impl Default for CancelToken {
+    fn default() -> Self {
+        CancelToken::new()
+    }
+}
+
+impl fmt::Debug for CancelToken {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("CancelToken")
+            .field("cancelled", &self.inner.reason())
+            .field("deadline", &self.inner.deadline)
+            .field("tag", &self.inner.tag)
+            .finish()
+    }
+}
+
+impl CancelToken {
+    fn build(deadline: Option<Instant>, tag: Option<String>, parent: Option<Arc<Inner>>) -> Self {
+        CancelToken {
+            inner: Arc::new(Inner { state: AtomicU8::new(0), deadline, tag, parent }),
+        }
+    }
+
+    /// A live token with no deadline.
+    pub fn new() -> Self {
+        CancelToken::build(None, None, None)
+    }
+
+    /// A token that reports [`AbortReason::Deadline`] once `deadline`
+    /// passes.
+    pub fn with_deadline(deadline: Instant) -> Self {
+        CancelToken::build(Some(deadline), None, None)
+    }
+
+    /// A token whose deadline is `timeout` from now.
+    pub fn after(timeout: Duration) -> Self {
+        CancelToken::with_deadline(Instant::now() + timeout)
+    }
+
+    /// A per-request token derived from this (connection-level) token:
+    /// it carries its own deadline and tag but also aborts when the
+    /// parent is cancelled.
+    pub fn child(&self, deadline: Option<Instant>, tag: Option<String>) -> CancelToken {
+        CancelToken::build(deadline, tag, Some(Arc::clone(&self.inner)))
+    }
+
+    /// Request the abort. The first reason wins; returns whether this
+    /// call was the one that cancelled the token.
+    pub fn cancel(&self, reason: AbortReason) -> bool {
+        self.inner
+            .state
+            .compare_exchange(0, reason.state(), Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    /// Poll the token: the explicit flag (own, then parent chain), then
+    /// the deadline. A passed deadline is latched into the flag so every
+    /// later observer agrees on the reason.
+    #[inline]
+    pub fn check(&self) -> Option<AbortReason> {
+        if let Some(r) = self.inner.reason() {
+            return Some(r);
+        }
+        let mut up = self.inner.parent.as_deref();
+        while let Some(p) = up {
+            if let Some(r) = p.reason() {
+                return Some(r);
+            }
+            up = p.parent.as_deref();
+        }
+        if let Some(d) = self.inner.deadline {
+            if Instant::now() >= d {
+                self.cancel(AbortReason::Deadline);
+                return Some(self.inner.reason().unwrap_or(AbortReason::Deadline));
+            }
+        }
+        None
+    }
+
+    /// Whether the token has been cancelled (deadline included).
+    pub fn is_cancelled(&self) -> bool {
+        self.check().is_some()
+    }
+
+    /// The armed deadline, if any.
+    pub fn deadline(&self) -> Option<Instant> {
+        self.inner.deadline
+    }
+
+    /// The request label (graph id) this token was tagged with.
+    pub fn tag(&self) -> Option<&str> {
+        self.inner.tag.as_deref()
+    }
+}
+
+/// Typed abort error: the query stopped cooperatively without
+/// committing anything. `units_done`/`units_total` are exact work-unit
+/// progress at the moment the workers quiesced.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct QueryAborted {
+    /// Why the query stopped.
+    pub reason: AbortReason,
+    /// Work units fully enumerated before the stop.
+    pub units_done: u64,
+    /// Work units the scheduler had queued for the run.
+    pub units_total: u64,
+}
+
+impl fmt::Display for QueryAborted {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "query aborted ({}) after {}/{} work units",
+            self.reason.label(),
+            self.units_done,
+            self.units_total
+        )
+    }
+}
+
+impl std::error::Error for QueryAborted {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_cancel_wins_and_clones_share_state() {
+        let t = CancelToken::new();
+        assert_eq!(t.check(), None);
+        let c = t.clone();
+        assert!(c.cancel(AbortReason::Shutdown));
+        assert!(!t.cancel(AbortReason::ClientGone), "second cancel loses");
+        assert_eq!(t.check(), Some(AbortReason::Shutdown));
+        assert_eq!(c.check(), Some(AbortReason::Shutdown));
+    }
+
+    #[test]
+    fn deadline_latches_into_the_flag() {
+        let t = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        assert_eq!(t.check(), Some(AbortReason::Deadline));
+        // latched: an explicit cancel afterwards cannot change the reason
+        t.cancel(AbortReason::Shutdown);
+        assert_eq!(t.check(), Some(AbortReason::Deadline));
+    }
+
+    #[test]
+    fn future_deadline_stays_live() {
+        let t = CancelToken::after(Duration::from_secs(3600));
+        assert_eq!(t.check(), None);
+        assert!(t.deadline().is_some());
+    }
+
+    #[test]
+    fn child_sees_parent_cancellation_but_keeps_its_own_deadline() {
+        let conn = CancelToken::new();
+        let req = conn.child(None, Some("g1".into()));
+        assert_eq!(req.tag(), Some("g1"));
+        assert_eq!(req.check(), None);
+        conn.cancel(AbortReason::ClientGone);
+        assert_eq!(req.check(), Some(AbortReason::ClientGone));
+        assert_eq!(conn.check(), Some(AbortReason::ClientGone));
+
+        let conn2 = CancelToken::new();
+        let req2 = conn2.child(Some(Instant::now() - Duration::from_millis(1)), None);
+        assert_eq!(req2.check(), Some(AbortReason::Deadline));
+        assert_eq!(conn2.check(), None, "a child's deadline never cancels the parent");
+    }
+
+    #[test]
+    fn query_aborted_displays_progress_and_downcasts() {
+        let err: anyhow::Error =
+            QueryAborted { reason: AbortReason::Deadline, units_done: 3, units_total: 10 }.into();
+        let aborted = err.downcast_ref::<QueryAborted>().expect("typed abort");
+        assert_eq!(aborted.reason, AbortReason::Deadline);
+        assert!(err.to_string().contains("3/10 work units"), "{err}");
+    }
+}

@@ -29,9 +29,16 @@
 //!    edge-local re-enumeration); maintenance is Count-only and rejects
 //!    other outputs with the typed `stream::CountOnlyError`.
 //!
+//! Cross-cutting: [`cancel`] threads a [`CancelToken`] — shared atomic
+//! flag plus optional deadline, polled once per work unit by the worker
+//! loop — through every query entry point, so the service can bound,
+//! cancel and shed requests; an aborted run fails with the typed
+//! [`QueryAborted`] instead of returning partial counts.
+//!
 //! `crate::coordinator` remains as a thin compatibility wrapper: its
 //! `count_motifs` builds a one-shot [`Session`] per call.
 
+pub mod cancel;
 pub mod partition;
 pub mod query;
 pub mod scheduler;
@@ -39,6 +46,7 @@ pub mod session;
 pub mod sink;
 
 pub use crate::graph::AdjacencyMode;
+pub use cancel::{AbortReason, CancelToken, QueryAborted};
 pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
 pub use query::{
     ClassSample, CountQuery, CountQueryBuilder, InstanceList, MotifInstance, MotifQuery,

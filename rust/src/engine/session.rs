@@ -40,7 +40,7 @@
 //! O(items + n·classes), with no graph passes.
 
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::time::Instant;
 
@@ -53,10 +53,16 @@ use crate::graph::{AdjacencyMode, GraphProbe};
 use crate::motifs::counter::{MotifCounts, SlotMapper};
 use crate::motifs::iso::NO_SLOT;
 use crate::motifs::{bfs3, bfs4, Direction, MotifSize};
+use crate::service::faults;
 use crate::stream::delta::{reenumerate_edge, CountOnlyError, EdgeChange, MaintainedCounts};
 use crate::stream::overlay::{DeltaOverlay, OverlayView};
 use crate::stream::{DeltaOp, DeltaReport, EdgeDelta};
 use crate::telemetry::trace;
+
+use super::cancel::{
+    AbortReason, CancelToken, QueryAborted, CANCELLED_TOTAL, DEADLINE_EXCEEDED_TOTAL,
+    HELP_CANCELLED, HELP_DEADLINE_EXCEEDED, HELP_PANICS_CAUGHT, PANICS_CAUGHT_TOTAL,
+};
 
 use super::partition::{total_units, PartitionSet, WorkItem};
 use super::query::{
@@ -309,6 +315,28 @@ impl Session {
         self.graph_id.as_deref()
     }
 
+    /// Rebuild a fresh writer over this session's last *committed*
+    /// state. Commits are atomic pointer swaps, so a writer that
+    /// panicked mid-batch (poisoning its service-side mutex) left the
+    /// snapshot cell at the previous consistent head; the recovered
+    /// writer shares that cell — epochs, overlay and maintained
+    /// counters are exactly the last commit — and bumps the epoch with
+    /// an otherwise-identical successor so the recovery is observable.
+    /// The service swaps this into the pool in place of the poisoned
+    /// writer (see `SessionPool::replace_writer`).
+    pub fn recover(&self) -> Session {
+        let head = self.cell.head();
+        self.cell.commit(head.next(None, None, None, None));
+        Session {
+            cell: self.cell.clone(),
+            compact_ratio: self.compact_ratio,
+            adjacency: self.adjacency,
+            hub_threshold: self.hub_threshold,
+            compactions: self.compactions,
+            graph_id: self.graph_id.clone(),
+        }
+    }
+
     // ------------------------------------------------------- snapshots
 
     /// Pin the current snapshot: an immutable, `Send + Sync` view every
@@ -483,14 +511,15 @@ impl Session {
         }
         let mapper = SlotMapper::new(size.k(), direction);
         let (rows, instances) = if head.overlay.is_empty() {
-            head.full_count_proc(&*head.h, &head.partitions, size, direction, &mapper)
+            head.full_count_proc(&*head.h, &head.partitions, size, direction, &mapper)?
         } else {
             let view = OverlayView::new(&head.h, &head.overlay);
             let partitions = PartitionSet::build(&view, head.workers, head.max_units_per_item);
-            head.full_count_proc(&view, &partitions, size, direction, &mapper)
+            head.full_count_proc(&view, &partitions, size, direction, &mapper)?
         };
         let mut maintained = head.maintained.as_ref().clone();
         maintained.push(MaintainedCounts::new(size, direction, rows, instances));
+        faults::hit(faults::SITE_COMMIT, self.graph_id());
         let t_commit = Instant::now();
         self.cell.commit(head.next(None, None, None, Some(maintained)));
         trace::record_phase("commit", t_commit.elapsed().as_secs_f64());
@@ -645,6 +674,7 @@ impl Session {
             // counters are only re-cloned when any exist; an empty list
             // keeps sharing the head's empty Arc
             let maintained = (!maintained.is_empty()).then_some(maintained);
+            faults::hit(faults::SITE_COMMIT, self.graph_id());
             let t_commit = Instant::now();
             self.cell.commit(head.next(new_h, new_partitions, Some(overlay), maintained));
             trace::record_phase("commit", t_commit.elapsed().as_secs_f64());
@@ -791,8 +821,28 @@ impl SessionSnapshot {
     /// pending the enumeration runs over the overlay view with a freshly
     /// budgeted partition (the cached one has stale unit counts).
     pub fn query_with_report(&self, query: &MotifQuery) -> Result<(QueryOutput, RunReport)> {
+        self.query_with_report_cancel(query, None)
+    }
+
+    /// As [`SessionSnapshot::query_with_report`], polling `cancel` once
+    /// per work unit: a cancelled or deadline-blown run stops within one
+    /// unit and fails with the typed [`QueryAborted`] (partial progress
+    /// in `units_done`/`units_total`) instead of returning counts. A
+    /// snapshot is immutable, so an aborted query leaves no trace —
+    /// epochs, pool state and maintained counters are untouched.
+    pub fn query_with_report_cancel(
+        &self,
+        query: &MotifQuery,
+        cancel: Option<&CancelToken>,
+    ) -> Result<(QueryOutput, RunReport)> {
         if query.direction == Direction::Directed && !self.directed {
             bail!("directed motif counting requested on an undirected graph");
+        }
+        if let Some(reason) = cancel.and_then(CancelToken::check) {
+            // already dead on arrival (deadline spent in the queue, or
+            // the client vanished): don't start the enumeration at all
+            record_abort(reason);
+            return Err(QueryAborted { reason, units_done: 0, units_total: 0 }.into());
         }
         let reused = self.served.fetch_add(1, Ordering::Relaxed) > 0;
         let start = Instant::now();
@@ -800,14 +850,14 @@ impl SessionSnapshot {
 
         let mut setup_phase = 0.0;
         let (mut out, metrics, queue_items, queue_units, phases) = if self.overlay.is_empty() {
-            self.query_on(&*self.h, &self.partitions, query, &mapper)?
+            self.query_on(&*self.h, &self.partitions, query, &mapper, cancel)?
         } else {
             let t_setup = Instant::now();
             let view = OverlayView::new(&self.h, &self.overlay);
             let partitions = PartitionSet::build(&view, self.workers, self.max_units_per_item);
             setup_phase = t_setup.elapsed().as_secs_f64();
             trace::record_phase("setup", setup_phase);
-            self.query_on(&view, &partitions, query, &mapper)?
+            self.query_on(&view, &partitions, query, &mapper, cancel)?
         };
         let elapsed = start.elapsed().as_secs_f64();
         if let QueryOutput::Counts(c) = &mut out {
@@ -866,6 +916,16 @@ impl SessionSnapshot {
     /// queries whose output is not [`Output::Counts`]; use
     /// [`Session::query`] for the other output kinds.
     pub fn count_with_report(&self, query: &MotifQuery) -> Result<(MotifCounts, RunReport)> {
+        self.count_with_report_cancel(query, None)
+    }
+
+    /// As [`SessionSnapshot::count_with_report`] with cooperative
+    /// cancellation — see [`SessionSnapshot::query_with_report_cancel`].
+    pub fn count_with_report_cancel(
+        &self,
+        query: &MotifQuery,
+        cancel: Option<&CancelToken>,
+    ) -> Result<(MotifCounts, RunReport)> {
         if !matches!(query.output, Output::Counts) {
             bail!(
                 "Session::count serves the counts output only (query asked for {}); \
@@ -873,7 +933,7 @@ impl SessionSnapshot {
                 query.output.label()
             );
         }
-        let (out, report) = self.query_with_report(query)?;
+        let (out, report) = self.query_with_report_cancel(query, cancel)?;
         match out {
             QueryOutput::Counts(c) => Ok((c, report)),
             _ => unreachable!("counts output produced a non-counts result"),
@@ -890,6 +950,7 @@ impl SessionSnapshot {
         partitions: &PartitionSet,
         query: &MotifQuery,
         mapper: &SlotMapper,
+        cancel: Option<&CancelToken>,
     ) -> Result<(QueryOutput, Vec<WorkerMetrics>, usize, usize, PhaseSecs)> {
         let k = query.size.k();
         let n_classes = mapper.n_classes();
@@ -908,7 +969,7 @@ impl SessionSnapshot {
                 let sink = CountEnumSink::new(query.sink, self.n, n_classes, &ranges);
                 let t_run = Instant::now();
                 let (metrics, qi, qu) =
-                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref(), cancel)?;
                 let enumerate = t_run.elapsed().as_secs_f64();
                 let t_merge = Instant::now();
                 let (mut rows, instances) = sink.finish();
@@ -945,7 +1006,7 @@ impl SessionSnapshot {
                 let sink = InstanceEnumSink::new(limit, n_classes);
                 let t_run = Instant::now();
                 let (metrics, qi, qu) =
-                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref(), cancel)?;
                 let enumerate = t_run.elapsed().as_secs_f64();
                 let t_merge = Instant::now();
                 let raw = sink.finish();
@@ -969,7 +1030,7 @@ impl SessionSnapshot {
                 let sink = SampleEnumSink::new(per_class, seed, n_classes);
                 let t_run = Instant::now();
                 let (metrics, qi, qu) =
-                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref(), cancel)?;
                 let enumerate = t_run.elapsed().as_secs_f64();
                 let t_merge = Instant::now();
                 let raw = sink.finish();
@@ -999,7 +1060,7 @@ impl SessionSnapshot {
                 let sink = TopVerticesEnumSink::new(self.n, n_classes);
                 let t_run = Instant::now();
                 let (metrics, qi, qu) =
-                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref());
+                    run_enum(h, partitions, query, mapper, &sink, scope.as_ref(), cancel)?;
                 let enumerate = t_run.elapsed().as_secs_f64();
                 let t_merge = Instant::now();
                 let (mut rows, instances) = sink.finish();
@@ -1113,12 +1174,12 @@ impl SessionSnapshot {
         size: MotifSize,
         direction: Direction,
         mapper: &SlotMapper,
-    ) -> (Vec<u64>, u64) {
+    ) -> Result<(Vec<u64>, u64)> {
         let query = MotifQuery { size, direction, ..Default::default() };
         let sink =
             CountEnumSink::new(query.sink, self.n, mapper.n_classes(), &partitions.ranges());
-        let _ = run_enum(h, partitions, &query, mapper, &sink, None);
-        sink.finish()
+        run_enum(h, partitions, &query, mapper, &sink, None, None)?;
+        Ok(sink.finish())
     }
 
     /// Read a maintained counter back as [`MotifCounts`] (original vertex
@@ -1257,10 +1318,44 @@ fn close_phases(enumerate: f64, merge_started: Instant) -> PhaseSecs {
     PhaseSecs { setup: 0.0, enumerate, merge: merge_started.elapsed().as_secs_f64() }
 }
 
+/// Record one abort on the active trace's registry: deadline blows get
+/// their own counter, explicit cancellations are labeled by reason.
+fn record_abort(reason: AbortReason) {
+    trace::with_registry(|reg| match reason {
+        AbortReason::Deadline => {
+            reg.counter(DEADLINE_EXCEEDED_TOTAL, HELP_DEADLINE_EXCEEDED).inc();
+        }
+        _ => {
+            reg.counter_with(CANCELLED_TOTAL, HELP_CANCELLED, &[("reason", reason.label())])
+                .inc();
+        }
+    });
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_note(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Drive one query's enumeration into any [`EnumSink`]: build the
 /// scheduler (scope-filtering the cached items at the work-unit level),
 /// run one monomorphized worker loop per thread, and return the metrics
 /// plus the (filtered) queue statistics.
+///
+/// Failure containment happens here. Each worker polls `cancel` once
+/// per work unit and quiesces within one unit of a cancel/deadline —
+/// the run then fails with the typed [`QueryAborted`] carrying exact
+/// units-done/units-total progress. Each worker closure also runs under
+/// `catch_unwind`: a panicking worker latches the shared stop flag (its
+/// siblings bail at their next unit), is counted in
+/// `vdmc_panics_caught_total`, and surfaces as an error — never a
+/// process death, and never a partial result presented as complete.
 fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
     h: &G,
     partitions: &PartitionSet,
@@ -1268,7 +1363,8 @@ fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
     mapper: &SlotMapper,
     sink: &S,
     scope: Option<&ScopeSets>,
-) -> (Vec<WorkerMetrics>, usize, usize) {
+    cancel: Option<&CancelToken>,
+) -> Result<(Vec<WorkerMetrics>, usize, usize)> {
     let workers = partitions.n_shards();
     let (scheduler, queue_items, queue_units): (Box<dyn Scheduler>, usize, usize) = match scope {
         None => {
@@ -1320,15 +1416,57 @@ fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
     let members = scope.map(|sc| &sc.members);
     let size = query.size;
     let dir = query.direction;
-    let metrics: Vec<WorkerMetrics> = std::thread::scope(|s| {
+    // shared early-stop latch: the first worker to observe a cancel (or
+    // to panic) flips it, and every sibling bails at its next unit
+    let stop = AtomicBool::new(false);
+    let stop_ref = &stop;
+    let mut metrics: Vec<WorkerMetrics> = Vec::with_capacity(workers);
+    let mut abort: Option<AbortReason> = None;
+    let mut panics = 0u64;
+    let mut note = String::new();
+    std::thread::scope(|s| {
         let handles: Vec<_> = (0..workers)
             .map(|w| {
-                s.spawn(move || worker_loop(h, size, dir, mapper, sched_ref, sink, members, w))
+                s.spawn(move || {
+                    let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        worker_loop(
+                            h, size, dir, mapper, sched_ref, sink, members, w, cancel, stop_ref,
+                        )
+                    }));
+                    if out.is_err() {
+                        stop_ref.store(true, Ordering::Relaxed);
+                    }
+                    out
+                })
             })
             .collect();
-        handles.into_iter().map(|t| t.join().expect("worker panicked")).collect()
+        for t in handles {
+            match t.join().expect("worker thread join failed") {
+                Ok((m, a)) => {
+                    if abort.is_none() {
+                        abort = a;
+                    }
+                    metrics.push(m);
+                }
+                Err(payload) => {
+                    panics += 1;
+                    note = panic_note(payload.as_ref());
+                }
+            }
+        }
     });
-    (metrics, queue_items, queue_units)
+    if panics > 0 {
+        trace::with_registry(|reg| {
+            reg.counter(PANICS_CAUGHT_TOTAL, HELP_PANICS_CAUGHT).add(panics);
+        });
+        bail!("{panics} enumeration worker(s) panicked (caught): {note}");
+    }
+    if let Some(reason) = abort {
+        let units_done: u64 = metrics.iter().map(|m| m.units).sum();
+        record_abort(reason);
+        return Err(QueryAborted { reason, units_done, units_total: queue_units as u64 }.into());
+    }
+    Ok((metrics, queue_items, queue_units))
 }
 
 /// Worker inner loop shared by every scheduler × sink combination and
@@ -1347,7 +1485,9 @@ fn worker_loop<G: GraphProbe, S: EnumSink>(
     sink: &S,
     members: Option<&VertexBits>,
     worker_id: usize,
-) -> WorkerMetrics {
+    cancel: Option<&CancelToken>,
+    stop: &AtomicBool,
+) -> (WorkerMetrics, Option<AbortReason>) {
     let mut m = WorkerMetrics {
         worker_id,
         per_class: vec![0; mapper.n_classes()],
@@ -1356,20 +1496,32 @@ fn worker_loop<G: GraphProbe, S: EnumSink>(
     let t0 = Instant::now();
     let mut handle = sink.attach(worker_id);
     let mut ctx = bfs3::EnumCtx::new(h.n());
-    match members {
+    let aborted = match members {
         None => {
             let empty = VertexBits::default();
-            drive::<_, _, false>(h, size, dir, mapper, sched, &empty, &mut handle, &mut ctx, &mut m, worker_id);
+            drive::<_, _, false>(
+                h, size, dir, mapper, sched, &empty, &mut handle, &mut ctx, &mut m, worker_id,
+                cancel, stop,
+            )
         }
-        Some(bits) => {
-            drive::<_, _, true>(h, size, dir, mapper, sched, bits, &mut handle, &mut ctx, &mut m, worker_id);
-        }
-    }
+        Some(bits) => drive::<_, _, true>(
+            h, size, dir, mapper, sched, bits, &mut handle, &mut ctx, &mut m, worker_id, cancel,
+            stop,
+        ),
+    };
     handle.flush();
     m.busy_secs = t0.elapsed().as_secs_f64();
-    m
+    (m, aborted)
 }
 
+/// The per-worker claim loop. Cancellation is polled here, **once per
+/// work unit** (`WorkItem`s batch up to `max_units_per_item` units, so
+/// a per-claim check alone could overshoot by a whole item): one
+/// relaxed load of the shared stop latch, one token check, and — in
+/// chaos/debug builds only — the `enumerate_unit` fault site. Returns
+/// the abort reason if this worker was the one that observed the
+/// cancellation (`None` both on a drained queue and when only the stop
+/// latch was seen — the observing sibling reports the reason).
 #[allow(clippy::too_many_arguments)]
 fn drive<G: GraphProbe, H: EmitHandle, const SCOPED: bool>(
     h: &G,
@@ -1382,16 +1534,27 @@ fn drive<G: GraphProbe, H: EmitHandle, const SCOPED: bool>(
     ctx: &mut bfs3::EnumCtx,
     m: &mut WorkerMetrics,
     worker_id: usize,
-) {
+    cancel: Option<&CancelToken>,
+    stop: &AtomicBool,
+) -> Option<AbortReason> {
     while let Some(claim) = sched.pop(worker_id) {
         let item = claim.item;
         m.items += 1;
-        m.units += item.units() as u64;
         if claim.stolen {
             m.steals += 1;
             m.steal_batch += claim.batch as u64;
         }
         for j in item.j_start..item.j_end {
+            if stop.load(Ordering::Relaxed) {
+                return None;
+            }
+            if let Some(c) = cancel {
+                if let Some(reason) = c.check() {
+                    stop.store(true, Ordering::Relaxed);
+                    return Some(reason);
+                }
+            }
+            faults::hit(faults::SITE_ENUMERATE_UNIT, cancel.and_then(CancelToken::tag));
             match size {
                 MotifSize::Three => {
                     bfs3::enumerate_unit(h, dir, item.root, j as usize, ctx, &mut |verts, raw| {
@@ -1418,8 +1581,10 @@ fn drive<G: GraphProbe, H: EmitHandle, const SCOPED: bool>(
                     });
                 }
             }
+            m.units += 1;
         }
     }
+    None
 }
 
 #[cfg(test)]

@@ -28,7 +28,8 @@ use vdmc::graph::{generators, io};
 use vdmc::motifs::{Direction, MotifSize};
 use vdmc::runtime::exec::{ArtifactRunner, BATCH};
 use vdmc::service::{
-    serve_connection, serve_tcp, ServeOptions, ServiceConfig, TelemetryConfig, VdmcService,
+    serve_connection, serve_tcp, AdmissionConfig, ServeOptions, ServiceConfig, TelemetryConfig,
+    VdmcService,
 };
 use vdmc::telemetry::{serve_exposition, set_log_level, LogLevel};
 use vdmc::stream;
@@ -73,6 +74,17 @@ scoped queries do neighborhood-local work. a failed request answers
 "trace":"<id>" field; it is echoed on the response (a generated id is
 stamped when absent) and tags that request's span in the trace buffer
 and slow-query log.
+
+any request may carry "deadline_ms":N — an enumeration that overruns
+the budget (or --default-deadline-ms; "deadline_ms":0 opts out of the
+default) stops cooperatively at the next work unit and answers
+{"ok":false,...,"aborted":{"reason":"deadline","units_done":...}}.
+over --max-inflight / --admission-bytes-mb, enumerating requests are
+shed (never queued) with {"ok":false,...,"overloaded":
+{"retry_after_ms":...}}; metadata, loads and the write path always
+pass. debug/chaos builds also accept {"op":"inject_fault","site":...,
+"action":"panic|delay|error|clear",...} to arm the deterministic fault
+harness — release builds answer ok:false.
 
 with --tcp ADDR the same protocol runs over TCP, one thread per client
 against one shared snapshot-isolated pool (reads never block writes).
@@ -155,8 +167,29 @@ fn app() -> App {
                 Some("0"),
             )
             .opt("tcp", "listen on this address (e.g. 127.0.0.1:7171) instead of stdin", None)
-            .opt("inflight", "responses queued per client before its handler blocks", Some("64"))
+            .opt("inflight", "requests read ahead per client before its reader blocks", Some("64"))
             .opt("max-clients", "concurrent TCP clients (0 = unbounded)", Some("0"))
+            .opt(
+                "default-deadline-ms",
+                "cancel enumerations over this budget unless the request sets deadline_ms (0 = none)",
+                Some("0"),
+            )
+            .opt(
+                "max-inflight",
+                "concurrently enumerating requests before shedding (0 = unbounded)",
+                Some("0"),
+            )
+            .opt(
+                "admission-bytes-mb",
+                "shed enumerations while pool resident bytes exceed this (0 = unbounded)",
+                Some("0"),
+            )
+            .opt("read-timeout-ms", "drop TCP clients idle past this (0 = never)", Some("0"))
+            .opt(
+                "write-timeout-ms",
+                "treat TCP clients as gone when a response write stalls this long (0 = never)",
+                Some("30000"),
+            )
             .opt(
                 "metrics-addr",
                 "serve Prometheus text on this address (e.g. 127.0.0.1:7172)",
@@ -658,7 +691,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let opts = ServeOptions {
         inflight: args.req("inflight").map_err(anyhow::Error::msg)?,
         max_clients: args.req("max-clients").map_err(anyhow::Error::msg)?,
+        read_timeout_ms: args.req("read-timeout-ms").map_err(anyhow::Error::msg)?,
+        write_timeout_ms: args.req("write-timeout-ms").map_err(anyhow::Error::msg)?,
+        default_deadline_ms: args.req("default-deadline-ms").map_err(anyhow::Error::msg)?,
     };
+    let admission_mb: usize = args.req("admission-bytes-mb").map_err(anyhow::Error::msg)?;
     let level = args.req::<String>("log-level").map_err(anyhow::Error::msg)?;
     set_log_level(
         LogLevel::parse(&level)
@@ -672,6 +709,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         telemetry: TelemetryConfig {
             slow_query_secs: slow_ms as f64 / 1000.0,
             ..Default::default()
+        },
+        admission: AdmissionConfig {
+            max_inflight: args.req("max-inflight").map_err(anyhow::Error::msg)?,
+            max_resident_bytes: admission_mb << 20,
         },
     });
 
@@ -720,8 +761,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             });
             let summary = serve_tcp(&svc, listener, &opts, &shutdown)?;
             eprintln!(
-                "vdmc serve: drained {} client(s) / {} request(s)",
-                summary.clients, summary.requests,
+                "vdmc serve: drained {} client(s) / {} request(s) ({} aborted)",
+                summary.clients, summary.requests, summary.aborted,
             );
         }
         None => {

@@ -67,6 +67,19 @@ pub enum Request {
     /// the same body `vdmc serve --metrics-addr` serves over HTTP, for
     /// clients that only speak the JSONL wire.
     Metrics,
+    /// Arm a deterministic fault (chaos/debug builds only; release
+    /// builds answer ok:false — the harness is compiled out). `site` is
+    /// one of [`super::faults::SITES`]; `action` is
+    /// `panic`/`delay`/`error`/`clear`; `count` is fires remaining
+    /// (0 = unlimited); `graph` scopes the fault to requests tagged
+    /// with that graph id.
+    InjectFault {
+        site: String,
+        action: String,
+        delay_ms: u64,
+        count: u64,
+        graph: Option<String>,
+    },
 }
 
 impl Request {
@@ -83,7 +96,22 @@ impl Request {
             Request::Evict { .. } => "evict",
             Request::Stats => "stats",
             Request::Metrics => "metrics",
+            Request::InjectFault { .. } => "inject_fault",
         }
+    }
+
+    /// Whether this request runs a full enumeration — the ops admission
+    /// control gates. Metadata ops (`stats`/`metrics`/`evict`), loads
+    /// and the delta write path always pass: shedding them would hide
+    /// the very signals an overloaded operator needs.
+    pub fn enumerates(&self) -> bool {
+        matches!(
+            self,
+            Request::Count { .. }
+                | Request::Instances { .. }
+                | Request::Sample { .. }
+                | Request::VertexCounts { .. }
+        )
     }
 
     /// The pool key this request targets, when it targets one.
@@ -97,7 +125,9 @@ impl Request {
             | Request::ApplyEdges { graph, .. }
             | Request::Maintain { graph, .. }
             | Request::Evict { graph } => Some(graph),
-            Request::Stats | Request::Metrics => None,
+            // InjectFault's `graph` is a fault *scope*, not a pool
+            // target — admission control and pool routing ignore it
+            Request::Stats | Request::Metrics | Request::InjectFault { .. } => None,
         }
     }
 }
@@ -178,6 +208,8 @@ pub enum Response {
     Stats { pool: PoolStats, process: ProcessStats },
     /// Prometheus text exposition (format 0.0.4).
     Metrics { text: String },
+    /// Fault armed (or cleared) by [`Request::InjectFault`].
+    FaultArmed { site: String, action: String },
 }
 
 impl Response {
@@ -194,6 +226,7 @@ impl Response {
             Response::Evicted { .. } => "evict",
             Response::Stats { .. } => "stats",
             Response::Metrics { .. } => "metrics",
+            Response::FaultArmed { .. } => "inject_fault",
         }
     }
 }

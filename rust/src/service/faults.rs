@@ -1,0 +1,295 @@
+//! Deterministic fault injection for the request-lifecycle tests and
+//! the CI chaos phase.
+//!
+//! Four **named sites** sit on the serving path:
+//!
+//! | site             | where it fires                                      |
+//! |------------------|-----------------------------------------------------|
+//! | `enumerate_unit` | per work unit inside the engine's worker loop       |
+//! | `commit`         | before a writer publishes a successor snapshot      |
+//! | `wire_encode`    | before a response is encoded onto the wire          |
+//! | `pool_insert`    | while the pool registers a freshly loaded session   |
+//!
+//! A fault is **armed** via [`arm`] (the wire's `inject_fault` op) or
+//! the `VDMC_FAULTS` env var (`site[@graph]=action[:delay_ms[:count]]`,
+//! comma-separated, loaded when the service is built), and fires
+//! deterministically: the first `count` requests that reach the site
+//! (optionally scoped to one graph via the request token's tag) panic,
+//! sleep, or fail — nothing is random. Sites are **compiled out of
+//! plain release builds**: the hooks are empty `#[inline(always)]`
+//! functions unless `debug_assertions` or the `chaos` cargo feature is
+//! on, so production binaries pay nothing and `arm` reports the harness
+//! as unavailable.
+//!
+//! Armed builds still keep the happy path cheap — one relaxed atomic
+//! load — so the fault sites never distort the benches.
+
+use anyhow::Result;
+
+/// Per-work-unit site inside the engine's `drive` loop.
+pub const SITE_ENUMERATE_UNIT: &str = "enumerate_unit";
+/// Writer-commit site: fires before a successor snapshot publishes, so
+/// a `panic` here poisons the per-graph writer mutex (and exercises the
+/// service's writer recovery) while the snapshot cell stays committed.
+pub const SITE_COMMIT: &str = "commit";
+/// Response-encode site on the transport path.
+pub const SITE_WIRE_ENCODE: &str = "wire_encode";
+/// Pool-registration site inside `SessionPool::insert`.
+pub const SITE_POOL_INSERT: &str = "pool_insert";
+
+/// Every site, for validation and the ARCHITECTURE.md catalog.
+pub const SITES: [&str; 4] = [SITE_ENUMERATE_UNIT, SITE_COMMIT, SITE_WIRE_ENCODE, SITE_POOL_INSERT];
+
+/// Whether the harness is compiled into this binary.
+pub fn compiled_in() -> bool {
+    cfg!(any(debug_assertions, feature = "chaos"))
+}
+
+#[cfg(any(debug_assertions, feature = "chaos"))]
+mod armed {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Mutex;
+    use std::time::Duration;
+
+    use anyhow::{bail, Result};
+
+    #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+    pub enum Action {
+        Panic,
+        Delay(u64),
+        Error,
+    }
+
+    struct Fault {
+        site: String,
+        action: Action,
+        /// Fires remaining; 0 = unlimited.
+        remaining: u64,
+        /// Only fire for requests tagged with this graph id.
+        graph: Option<String>,
+    }
+
+    static FAULTS: Mutex<Vec<Fault>> = Mutex::new(Vec::new());
+    /// Fast-path latch: sites return immediately while nothing is armed.
+    static ANY: AtomicBool = AtomicBool::new(false);
+
+    pub fn arm(
+        site: &str,
+        action: &str,
+        delay_ms: u64,
+        count: u64,
+        graph: Option<String>,
+    ) -> Result<()> {
+        if !super::SITES.contains(&site) {
+            bail!("unknown fault site {site:?} (sites: {})", super::SITES.join(", "));
+        }
+        if action == "clear" {
+            // scoped clear: with a graph, only that scope's faults go;
+            // without one, the whole site is disarmed
+            let mut faults = FAULTS.lock().expect("fault registry poisoned");
+            faults.retain(|f| !(f.site == site && (graph.is_none() || f.graph == graph)));
+            ANY.store(!faults.is_empty(), Ordering::Relaxed);
+            return Ok(());
+        }
+        let action = match action {
+            "panic" => Action::Panic,
+            "delay" => Action::Delay(delay_ms),
+            "error" => Action::Error,
+            other => bail!("unknown fault action {other:?} (panic, delay, error, clear)"),
+        };
+        let mut faults = FAULTS.lock().expect("fault registry poisoned");
+        faults.push(Fault { site: site.to_string(), action, remaining: count, graph });
+        ANY.store(true, Ordering::Relaxed);
+        Ok(())
+    }
+
+    pub fn disarm_all() {
+        FAULTS.lock().expect("fault registry poisoned").clear();
+        ANY.store(false, Ordering::Relaxed);
+    }
+
+    /// Claim one fire of the first armed fault matching (site, tag).
+    /// Error-action faults are only claimable by fail points, so a
+    /// plain `hit` site never burns their budget without effect.
+    fn claim(site: &str, tag: Option<&str>, take_error: bool) -> Option<Action> {
+        if !ANY.load(Ordering::Relaxed) {
+            return None;
+        }
+        let mut faults = FAULTS.lock().expect("fault registry poisoned");
+        let idx = faults.iter().position(|f| {
+            f.site == site
+                && (take_error || f.action != Action::Error)
+                && match (&f.graph, tag) {
+                    (None, _) => true,
+                    (Some(g), Some(t)) => g == t,
+                    (Some(_), None) => false,
+                }
+        })?;
+        let action = faults[idx].action;
+        if faults[idx].remaining > 0 {
+            faults[idx].remaining -= 1;
+            if faults[idx].remaining == 0 {
+                faults.remove(idx);
+                ANY.store(!faults.is_empty(), Ordering::Relaxed);
+            }
+        }
+        Some(action)
+    }
+
+    fn fire(site: &str, action: Action) -> Result<(), String> {
+        match action {
+            Action::Delay(ms) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                Ok(())
+            }
+            Action::Panic => panic!("injected fault: panic at site {site:?}"),
+            Action::Error => Err(format!("injected fault: error at site {site:?}")),
+        }
+    }
+
+    #[inline]
+    pub fn hit(site: &str, tag: Option<&str>) {
+        if let Some(action) = claim(site, tag, false) {
+            let _ = fire(site, action);
+        }
+    }
+
+    #[inline]
+    pub fn fail_point(site: &str, tag: Option<&str>) -> Result<(), String> {
+        match claim(site, tag, true) {
+            Some(action) => fire(site, action),
+            None => Ok(()),
+        }
+    }
+
+    pub fn arm_from_env() {
+        let Ok(spec) = std::env::var("VDMC_FAULTS") else { return };
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Err(e) = arm_spec(part) {
+                eprintln!("vdmc: ignoring VDMC_FAULTS entry {part:?}: {e}");
+            }
+        }
+    }
+
+    /// `site[@graph]=action[:delay_ms[:count]]`
+    fn arm_spec(spec: &str) -> Result<()> {
+        let (lhs, rhs) = spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("expected site[@graph]=action[:delay_ms[:count]], got {spec:?}")
+        })?;
+        let (site, graph) = match lhs.split_once('@') {
+            Some((s, g)) => (s, Some(g.to_string())),
+            None => (lhs, None),
+        };
+        let mut fields = rhs.split(':');
+        let action = fields.next().unwrap_or_default();
+        let delay_ms = fields.next().map(|s| s.parse::<u64>()).transpose()?.unwrap_or(0);
+        let count = fields.next().map(|s| s.parse::<u64>()).transpose()?.unwrap_or(1);
+        arm(site, action, delay_ms, count, graph)
+    }
+}
+
+#[cfg(any(debug_assertions, feature = "chaos"))]
+pub use armed::{arm_from_env, disarm_all};
+
+/// Arm one fault. Errors on unknown sites/actions, and always errors
+/// when the harness is compiled out.
+#[cfg(any(debug_assertions, feature = "chaos"))]
+pub fn arm(site: &str, action: &str, delay_ms: u64, count: u64, graph: Option<String>) -> Result<()> {
+    armed::arm(site, action, delay_ms, count, graph)
+}
+
+/// Fault site hook for panic/delay faults. Free when nothing is armed.
+#[cfg(any(debug_assertions, feature = "chaos"))]
+#[inline]
+pub fn hit(site: &str, tag: Option<&str>) {
+    armed::hit(site, tag)
+}
+
+/// Fault site hook that can also fail with an injected error.
+#[cfg(any(debug_assertions, feature = "chaos"))]
+#[inline]
+pub fn fail_point(site: &str, tag: Option<&str>) -> Result<(), String> {
+    armed::fail_point(site, tag)
+}
+
+// ---- compiled-out stubs: plain release builds pay nothing ------------
+
+/// Arm one fault — unavailable: the harness is compiled out.
+#[cfg(not(any(debug_assertions, feature = "chaos")))]
+pub fn arm(
+    _site: &str,
+    _action: &str,
+    _delay_ms: u64,
+    _count: u64,
+    _graph: Option<String>,
+) -> Result<()> {
+    anyhow::bail!("fault injection is compiled out of this build (enable the `chaos` feature)")
+}
+
+/// No-op: the harness is compiled out.
+#[cfg(not(any(debug_assertions, feature = "chaos")))]
+pub fn arm_from_env() {}
+
+/// No-op: the harness is compiled out.
+#[cfg(not(any(debug_assertions, feature = "chaos")))]
+pub fn disarm_all() {}
+
+/// No-op: the harness is compiled out.
+#[cfg(not(any(debug_assertions, feature = "chaos")))]
+#[inline(always)]
+pub fn hit(_site: &str, _tag: Option<&str>) {}
+
+/// Always passes: the harness is compiled out.
+#[cfg(not(any(debug_assertions, feature = "chaos")))]
+#[inline(always)]
+pub fn fail_point(_site: &str, _tag: Option<&str>) -> Result<(), String> {
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Tests compile under debug_assertions, so the armed harness is in.
+    // The registry is process-global and lib tests run concurrently, so
+    // every test arms *graph-scoped* faults under tags no other test's
+    // traffic uses, and fully consumes (or scope-clears) what it armed
+    // — never a global disarm that could strip a sibling test's fault
+    // mid-flight.
+
+    #[test]
+    fn unknown_sites_and_actions_are_rejected() {
+        assert!(arm("nowhere", "panic", 0, 1, None).is_err());
+        assert!(arm(SITE_COMMIT, "explode", 0, 1, Some("faults-reject".into())).is_err());
+        assert!(compiled_in());
+    }
+
+    #[test]
+    fn one_shot_error_fires_exactly_once_and_only_at_fail_points() {
+        let tag = "faults-oneshot";
+        arm(SITE_WIRE_ENCODE, "error", 0, 1, Some(tag.into())).unwrap();
+        // a plain hit never consumes an error-action fault
+        hit(SITE_WIRE_ENCODE, Some(tag));
+        let err = fail_point(SITE_WIRE_ENCODE, Some(tag)).unwrap_err();
+        assert!(err.contains("wire_encode"), "{err}");
+        assert!(fail_point(SITE_WIRE_ENCODE, Some(tag)).is_ok(), "budget spent");
+    }
+
+    #[test]
+    fn graph_scoped_faults_skip_other_tags() {
+        arm(SITE_ENUMERATE_UNIT, "error", 0, 1, Some("faults-victim".into())).unwrap();
+        assert!(fail_point(SITE_ENUMERATE_UNIT, Some("faults-healthy")).is_ok());
+        assert!(fail_point(SITE_ENUMERATE_UNIT, None).is_ok(), "untagged requests are skipped");
+        assert!(fail_point(SITE_ENUMERATE_UNIT, Some("faults-victim")).is_err());
+    }
+
+    #[test]
+    fn clear_action_disarms_one_scope_of_one_site() {
+        arm(SITE_COMMIT, "error", 0, 1, Some("faults-clear-a".into())).unwrap();
+        arm(SITE_POOL_INSERT, "error", 0, 1, Some("faults-clear-b".into())).unwrap();
+        arm(SITE_COMMIT, "clear", 0, 0, Some("faults-clear-a".into())).unwrap();
+        assert!(fail_point(SITE_COMMIT, Some("faults-clear-a")).is_ok(), "cleared");
+        let err = fail_point(SITE_POOL_INSERT, Some("faults-clear-b")).unwrap_err();
+        assert!(err.contains("pool_insert"), "a scoped clear leaves other sites armed: {err}");
+    }
+}

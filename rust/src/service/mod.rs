@@ -42,6 +42,24 @@
 //! - [`wire`] — the JSON-lines codec `vdmc serve` speaks.
 //! - [`serve`] — the transports: single-connection JSONL loops
 //!   (stdin/stdout) and the thread-per-client TCP listener.
+//! - [`faults`] — the deterministic fault-injection sites the
+//!   robustness tests and the CI chaos phase arm (compiled out of plain
+//!   release builds).
+//!
+//! **Request lifecycle hardening** (see ARCHITECTURE.md §11): every
+//! request can carry a [`CancelToken`] ([`VdmcService::handle_cancel`])
+//! that the engine polls once per work unit, so deadlines, vanished
+//! clients and shutdown abort enumerations within one unit and answer
+//! the typed [`crate::engine::QueryAborted`]. Admission control
+//! ([`AdmissionConfig`]) sheds enumeration requests over the
+//! concurrency or resident-byte caps with the typed [`Overloaded`]
+//! (retry-after advice included) instead of queueing them. The
+//! per-request path runs under `catch_unwind`; a panicking handler
+//! answers ok:false, and a per-graph writer mutex poisoned by such a
+//! panic is *recovered* — the session is rebuilt over its last
+//! committed snapshot (commits are atomic, so no partial state can
+//! leak) and swapped into the pool, counted by
+//! `vdmc_writer_recoveries_total`.
 //!
 //! The service also owns the process's **telemetry**: one
 //! [`MetricsRegistry`] shared with the pool and the transports, a root
@@ -55,21 +73,28 @@
 //! requests.
 
 pub mod api;
+pub mod faults;
 pub mod pool;
 pub mod serve;
 pub mod wire;
 
 pub use api::{GraphSource, ProcessStats, Request, Response, VertexRow};
 pub use pool::{GraphStat, OpLatency, PoolStats, SessionPool, REQUEST_SECONDS};
-pub use serve::{serve_connection, serve_tcp, ServeOptions};
+pub use serve::{serve_connection, serve_tcp, ServeOptions, TcpServeSummary};
 
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::engine::cancel::{
+    CANCELLED_TOTAL, DEADLINE_EXCEEDED_TOTAL, HELP_CANCELLED, HELP_DEADLINE_EXCEEDED,
+    HELP_PANICS_CAUGHT, PANICS_CAUGHT_TOTAL,
+};
 use crate::engine::{
-    MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig, SessionSnapshot,
+    CancelToken, MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig, SessionSnapshot,
 };
 use crate::graph::csr::Graph;
 use crate::graph::io;
@@ -97,6 +122,21 @@ impl Default for TelemetryConfig {
     }
 }
 
+/// Admission control caps: enumeration requests over either bound are
+/// shed with the typed [`Overloaded`] answer — immediately, never
+/// queued — so an overloaded service keeps answering cheap requests
+/// and in-flight work finishes instead of thrashing. Metadata
+/// (`stats`/`metrics`/`evict`) and write ops are never gated.
+#[derive(Debug, Clone, Default)]
+pub struct AdmissionConfig {
+    /// Max concurrently-enumerating requests (0 = unbounded).
+    pub max_inflight: usize,
+    /// Max pool resident+retained bytes before enumerations are shed
+    /// (0 = unbounded). Retained epochs count: a pool dragging old
+    /// pinned snapshots is exactly the overload this cap is for.
+    pub max_resident_bytes: usize,
+}
+
 /// Service sizing: how sessions are built and how many stay resident.
 #[derive(Debug, Clone)]
 pub struct ServiceConfig {
@@ -108,6 +148,8 @@ pub struct ServiceConfig {
     pub byte_budget: usize,
     /// Metrics / tracing knobs.
     pub telemetry: TelemetryConfig,
+    /// Admission caps (both 0 = admit everything, the default).
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServiceConfig {
@@ -117,9 +159,46 @@ impl Default for ServiceConfig {
             max_graphs: 8,
             byte_budget: 0,
             telemetry: TelemetryConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
+
+/// Typed admission-control rejection: the request was shed before any
+/// work started. `retry_after_ms` is backoff advice —
+/// `min(5000, 50 × max(1, inflight − max_inflight))`, i.e. roughly one
+/// drained request slot, growing with the overshoot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Overloaded {
+    /// Concurrently-enumerating requests at shed time (this one
+    /// included).
+    pub inflight: usize,
+    /// Configured concurrency cap (0 = this bound didn't trip).
+    pub max_inflight: usize,
+    /// Pool resident+retained bytes at shed time.
+    pub resident_bytes: usize,
+    /// Configured byte cap (0 = this bound didn't trip).
+    pub max_resident_bytes: usize,
+    /// Suggested client backoff before retrying.
+    pub retry_after_ms: u64,
+}
+
+impl fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "service overloaded (inflight {}/{}, resident {}/{} bytes): request shed, \
+             retry in {} ms",
+            self.inflight,
+            self.max_inflight,
+            self.resident_bytes,
+            self.max_resident_bytes,
+            self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 /// The multi-graph façade: a cheap-to-clone handle onto one shared
 /// [`SessionPool`]. Clone it freely — one handle per client thread is
@@ -134,6 +213,11 @@ struct ServiceInner {
     session_cfg: SessionConfig,
     pool: Mutex<SessionPool>,
     telemetry: ServiceTelemetry,
+    admission: AdmissionConfig,
+    /// Requests currently past admission and enumerating (RAII-guarded
+    /// by [`AdmissionPermit`], so a panicking request releases its
+    /// slot).
+    enumerating: AtomicUsize,
 }
 
 /// Per-service observability state: the metrics registry every layer
@@ -153,6 +237,11 @@ impl ServiceTelemetry {
             // pre-register the always-there families so a scrape shows
             // them at zero instead of omitting them until first use
             registry.counter("vdmc_slow_queries_total", HELP_SLOW_QUERIES);
+            registry.counter(DEADLINE_EXCEEDED_TOTAL, HELP_DEADLINE_EXCEEDED);
+            registry.counter(CANCELLED_TOTAL, HELP_CANCELLED);
+            registry.counter(PANICS_CAUGHT_TOTAL, HELP_PANICS_CAUGHT);
+            registry.counter(SHED_TOTAL, HELP_SHED);
+            registry.counter(WRITER_RECOVERIES_TOTAL, HELP_WRITER_RECOVERIES);
         }
         ServiceTelemetry {
             enabled: cfg.enabled,
@@ -255,6 +344,39 @@ const HELP_REQUEST_SECONDS: &str = "Request wall-clock seconds, by wire op.";
 const HELP_REQUEST_ERRORS: &str = "Requests answered with an error, by wire op.";
 const HELP_SLOW_QUERIES: &str = "Requests slower than the slow-query threshold.";
 
+/// Requests shed by admission control (labeled by the cap that
+/// tripped).
+pub const SHED_TOTAL: &str = "vdmc_shed_total";
+const HELP_SHED: &str = "Requests shed by admission control before starting.";
+/// Poisoned per-graph writers rebuilt from their last committed
+/// snapshot.
+pub const WRITER_RECOVERIES_TOTAL: &str = "vdmc_writer_recoveries_total";
+const HELP_WRITER_RECOVERIES: &str =
+    "Poisoned per-graph writers rebuilt from the last committed snapshot.";
+
+/// RAII admission slot: dropping it (normal return, error, or unwind)
+/// releases the concurrency slot.
+struct AdmissionPermit<'a> {
+    enumerating: &'a AtomicUsize,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        self.enumerating.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+/// Best-effort text of a caught panic payload.
+fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Value of `key` in a snapshot's label set.
 fn label_value(labels: &[(&'static str, String)], key: &str) -> Option<String> {
     labels.iter().find(|(k, _)| *k == key).map(|(_, v)| v.clone())
@@ -263,6 +385,9 @@ fn label_value(labels: &[(&'static str, String)], key: &str) -> Option<String> {
 impl VdmcService {
     pub fn new(cfg: ServiceConfig) -> VdmcService {
         let registry = Arc::new(MetricsRegistry::new());
+        // chaos/debug builds: pick up VDMC_FAULTS so headless harnesses
+        // can arm faults without speaking the wire first
+        faults::arm_from_env();
         VdmcService {
             inner: Arc::new(ServiceInner {
                 session_cfg: cfg.session,
@@ -272,6 +397,8 @@ impl VdmcService {
                     Arc::clone(&registry),
                 )),
                 telemetry: ServiceTelemetry::new(&cfg.telemetry, registry),
+                admission: cfg.admission,
+                enumerating: AtomicUsize::new(0),
             }),
         }
     }
@@ -288,7 +415,11 @@ impl VdmcService {
     }
 
     fn lock_pool(&self) -> MutexGuard<'_, SessionPool> {
-        self.inner.pool.lock().expect("service pool lock poisoned")
+        // poison-tolerant: a panic under the pool lock (e.g. an injected
+        // pool_insert fault) must not wedge every later request. Pool
+        // mutations are single Vec ops + counter bumps, so the state a
+        // panicking thread left behind is consistent.
+        self.inner.pool.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Telemetry state: registry, trace buffer, uptime.
@@ -307,19 +438,52 @@ impl VdmcService {
         })
     }
 
-    /// Check out the writer handle of `id` (see [`SessionPool::writer`]).
+    /// Check out the writer handle of `id` (see [`SessionPool::writer`]),
+    /// recovering it first when a previous writer panicked and poisoned
+    /// the mutex: the session is rebuilt over its last committed
+    /// snapshot ([`Session::recover`] — commits are atomic pointer
+    /// swaps, so nothing a panic interrupted was ever published) and
+    /// swapped into the pool. `replace_writer`'s ptr-equality guard
+    /// makes racing recoveries converge on one swap; the losers loop
+    /// and re-fetch the healed handle.
     fn writer(&self, id: &str) -> Result<Arc<Mutex<Session>>> {
         trace::time_phase("pin", || {
-            self.lock_pool()
-                .writer(id)
-                .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))
+            loop {
+                let handle = self
+                    .lock_pool()
+                    .writer(id)
+                    .ok_or_else(|| anyhow!("graph {id:?} is not loaded (send load_graph first)"))?;
+                if !handle.is_poisoned() {
+                    return Ok(handle);
+                }
+                let recovered = match handle.lock() {
+                    Ok(s) => s.recover(),
+                    Err(poisoned) => poisoned.into_inner().recover(),
+                };
+                if self.lock_pool().replace_writer(id, &handle, recovered) {
+                    let tel = &self.inner.telemetry;
+                    if tel.enabled {
+                        tel.registry
+                            .counter(WRITER_RECOVERIES_TOTAL, HELP_WRITER_RECOVERIES)
+                            .inc();
+                    }
+                }
+            }
         })
     }
 
     /// Handle one request. Errors are per-request: the service stays
     /// usable after a failure. Safe to call from many threads at once —
     /// reads share pinned snapshots, writes serialize per graph.
+    ///
+    /// This direct path has no cancellation, no admission gate and no
+    /// panic boundary — the embedding caller's own. Transports route
+    /// through [`VdmcService::handle_cancel`], which has all three.
     pub fn handle(&self, req: Request) -> Result<Response> {
+        self.handle_inner(req, None)
+    }
+
+    fn handle_inner(&self, req: Request, cancel: Option<&CancelToken>) -> Result<Response> {
         match req {
             Request::LoadGraph { graph, source, directed } => {
                 // build the session OUTSIDE the pool lock: a slow load
@@ -353,7 +517,7 @@ impl VdmcService {
             }
             Request::Count { graph, query } => {
                 let snap = self.pin(&graph)?;
-                let (counts, report) = snap.count_with_report(&query)?;
+                let (counts, report) = snap.count_with_report_cancel(&query, cancel)?;
                 Ok(Response::Counted { graph, counts, report })
             }
             Request::Instances { graph, query } => {
@@ -361,7 +525,7 @@ impl VdmcService {
                     bail!("instances request needs Output::Instances, got {}", query.output.label());
                 }
                 let snap = self.pin(&graph)?;
-                let (out, report) = snap.query_with_report(&query)?;
+                let (out, report) = snap.query_with_report_cancel(&query, cancel)?;
                 match out {
                     QueryOutput::Instances(list) => Ok(Response::Instances { graph, list, report }),
                     other => unreachable!("instances output produced {}", other.label()),
@@ -372,7 +536,7 @@ impl VdmcService {
                     bail!("sample request needs Output::Sample, got {}", query.output.label());
                 }
                 let snap = self.pin(&graph)?;
-                let (out, report) = snap.query_with_report(&query)?;
+                let (out, report) = snap.query_with_report_cancel(&query, cancel)?;
                 match out {
                     QueryOutput::Sample(sample) => Ok(Response::Sampled { graph, sample, report }),
                     other => unreachable!("sample output produced {}", other.label()),
@@ -485,6 +649,12 @@ impl VdmcService {
                 Ok(Response::Stats { pool, process: self.inner.telemetry.process_stats() })
             }
             Request::Metrics => Ok(Response::Metrics { text: self.metrics_text() }),
+            Request::InjectFault { site, action, delay_ms, count, graph } => {
+                // errors on unknown sites/actions, and always in plain
+                // release builds (the harness is compiled out)
+                faults::arm(&site, &action, delay_ms, count, graph)?;
+                Ok(Response::FaultArmed { site, action })
+            }
         }
     }
 
@@ -507,6 +677,24 @@ impl VdmcService {
         req: Request,
         trace_id: Option<String>,
     ) -> (Result<Response>, f64, String) {
+        self.handle_cancel(req, trace_id, None)
+    }
+
+    /// The hardened request path the transports use: [`handle_traced`]
+    /// plus the full lifecycle — admission control (enumeration ops
+    /// over the caps answer the typed [`Overloaded`]), cooperative
+    /// cancellation (`cancel` is polled once per work unit; aborted
+    /// runs answer the typed [`crate::engine::QueryAborted`]), and a
+    /// panic boundary (a panicking handler answers ok:false and counts
+    /// in `vdmc_panics_caught_total` instead of killing the process).
+    ///
+    /// [`handle_traced`]: VdmcService::handle_traced
+    pub fn handle_cancel(
+        &self,
+        req: Request,
+        trace_id: Option<String>,
+        cancel: Option<CancelToken>,
+    ) -> (Result<Response>, f64, String) {
         let tel = &self.inner.telemetry;
         let op = req.op();
         let graph = req.graph().map(str::to_string);
@@ -515,13 +703,70 @@ impl VdmcService {
             trace_id.clone(),
             if tel.enabled { Some(Arc::clone(&tel.registry)) } else { None },
         );
-        let out = self.handle(req);
+        let out = self.handle_guarded(req, cancel.as_ref());
         let (phases, total_secs) = span.finish();
         tel.on_request(
             TraceRecord { trace_id: trace_id.clone(), op: op.into(), graph, total_secs, phases },
             out.is_err(),
         );
         (out, total_secs, trace_id)
+    }
+
+    /// Admission gate + panic boundary around [`VdmcService::handle_inner`].
+    fn handle_guarded(&self, req: Request, cancel: Option<&CancelToken>) -> Result<Response> {
+        let _permit = if req.enumerates() { Some(self.admit()?) } else { None };
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            self.handle_inner(req, cancel)
+        })) {
+            Ok(out) => out,
+            Err(payload) => {
+                // the panic already released every lock it held while
+                // unwinding (poisoning them — the writer path recovers,
+                // see `writer`); answer this request with an error and
+                // keep serving
+                let tel = &self.inner.telemetry;
+                if tel.enabled {
+                    tel.registry.counter(PANICS_CAUGHT_TOTAL, HELP_PANICS_CAUGHT).inc();
+                }
+                Err(anyhow!("request handler panicked (caught): {}", panic_text(payload.as_ref())))
+            }
+        }
+    }
+
+    /// Take one admission slot, or shed. The inflight count includes
+    /// this request, so the cap is exact: with `max_inflight = k`, the
+    /// k+1-th concurrent enumeration sheds.
+    fn admit(&self) -> Result<AdmissionPermit<'_>> {
+        let adm = &self.inner.admission;
+        let inflight = self.inner.enumerating.fetch_add(1, Ordering::Relaxed) + 1;
+        // construct the permit immediately: every early return below
+        // must release the slot it just took
+        let permit = AdmissionPermit { enumerating: &self.inner.enumerating };
+        let over_inflight = adm.max_inflight > 0 && inflight > adm.max_inflight;
+        let resident_bytes = if adm.max_resident_bytes > 0 {
+            self.lock_pool().resident_bytes()
+        } else {
+            0
+        };
+        let over_bytes = adm.max_resident_bytes > 0 && resident_bytes > adm.max_resident_bytes;
+        if !over_inflight && !over_bytes {
+            return Ok(permit);
+        }
+        drop(permit);
+        let tel = &self.inner.telemetry;
+        if tel.enabled {
+            let cause = if over_inflight { "inflight" } else { "bytes" };
+            tel.registry.counter_with(SHED_TOTAL, HELP_SHED, &[("cause", cause)]).inc();
+        }
+        let overshoot = inflight.saturating_sub(adm.max_inflight).max(1) as u64;
+        Err(Overloaded {
+            inflight,
+            max_inflight: if over_inflight { adm.max_inflight } else { 0 },
+            resident_bytes,
+            max_resident_bytes: if over_bytes { adm.max_resident_bytes } else { 0 },
+            retry_after_ms: (50 * overshoot).min(5000),
+        }
+        .into())
     }
 
     /// Prometheus text exposition (format 0.0.4) of the full registry —
@@ -1055,6 +1300,165 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn expired_deadline_answers_a_typed_abort_and_leaves_state_untouched() {
+        use crate::engine::{AbortReason, CancelToken, QueryAborted};
+        use std::time::Duration;
+
+        let g = generators::gnp_directed(40, 0.1, 21);
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: true,
+        })
+        .unwrap();
+
+        let token = CancelToken::with_deadline(Instant::now() - Duration::from_millis(1));
+        let (out, _, _) = svc.handle_cancel(
+            Request::Count { graph: "g".into(), query: CountQuery::default() },
+            None,
+            Some(token),
+        );
+        let err = out.unwrap_err();
+        let aborted = err.downcast_ref::<QueryAborted>().expect("typed abort");
+        assert_eq!(aborted.reason, AbortReason::Deadline);
+        assert_eq!(aborted.units_done, 0, "dead on arrival: no unit ran");
+
+        // abort purity: the pool is bit-identical to the query never
+        // having run, and the same query re-issued without a deadline
+        // matches a dedicated session
+        match svc.handle(Request::Stats).unwrap() {
+            Response::Stats { pool, .. } => {
+                assert_eq!(pool.graphs.len(), 1);
+                assert_eq!(pool.graphs[0].epoch, 0);
+                assert_eq!(pool.graphs[0].pinned, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        let (out, _, _) = svc.handle_cancel(
+            Request::Count { graph: "g".into(), query: CountQuery::default() },
+            None,
+            Some(CancelToken::after(Duration::from_secs(3600))),
+        );
+        let counts = match out.unwrap() {
+            Response::Counted { counts, .. } => counts,
+            other => panic!("{other:?}"),
+        };
+        let want = Session::load(&g).count(&CountQuery::default()).unwrap();
+        assert_eq!(counts.per_vertex, want.per_vertex);
+
+        let text = svc.metrics_text();
+        assert!(text.contains("vdmc_deadline_exceeded_total 1"), "{text}");
+    }
+
+    #[test]
+    fn admission_sheds_enumerations_over_the_byte_cap_with_typed_overloaded() {
+        let g = generators::gnp_directed(30, 0.1, 5);
+        let svc = VdmcService::new(ServiceConfig {
+            admission: AdmissionConfig { max_inflight: 0, max_resident_bytes: 1 },
+            ..Default::default()
+        });
+        // loads are never gated — an operator must be able to act
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: g.n(), edges: edges_of(&g) },
+            directed: true,
+        })
+        .unwrap();
+
+        let (out, _, _) = svc.handle_cancel(
+            Request::Count { graph: "g".into(), query: CountQuery::default() },
+            None,
+            None,
+        );
+        let err = out.unwrap_err();
+        let over = err.downcast_ref::<Overloaded>().expect("typed shed");
+        assert!(over.resident_bytes > 1);
+        assert_eq!(over.max_resident_bytes, 1);
+        assert_eq!(over.max_inflight, 0, "the inflight bound did not trip");
+        assert!(over.retry_after_ms > 0);
+
+        // metadata still answers, and the direct in-process path stays
+        // ungated (the embedding caller opted out of the lifecycle)
+        let (out, _, _) = svc.handle_cancel(Request::Stats, None, None);
+        out.unwrap();
+        svc.handle(Request::Count { graph: "g".into(), query: CountQuery::default() }).unwrap();
+
+        let text = svc.metrics_text();
+        assert!(text.contains("vdmc_shed_total{cause=\"bytes\"} 1"), "{text}");
+    }
+
+    #[test]
+    fn injected_commit_panic_is_caught_and_the_poisoned_writer_recovers() {
+        // unique graph id: the fault registry is process-global and
+        // scoped faults must never match another test's traffic
+        let id = "poisonable";
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: id.into(),
+            source: GraphSource::Edges {
+                n: 6,
+                edges: vec![(0, 1), (1, 2), (2, 3), (3, 4), (4, 5), (5, 0), (0, 2), (1, 3)],
+            },
+            directed: true,
+        })
+        .unwrap();
+        match svc
+            .handle(Request::InjectFault {
+                site: faults::SITE_COMMIT.into(),
+                action: "panic".into(),
+                delay_ms: 0,
+                count: 1,
+                graph: Some(id.into()),
+            })
+            .unwrap()
+        {
+            Response::FaultArmed { site, action } => {
+                assert_eq!((site.as_str(), action.as_str()), ("commit", "panic"));
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // the panic fires at the commit site, unwinds through the held
+        // writer guard (poisoning the mutex) and is caught at the
+        // request boundary: an error answer, not a process death
+        let deltas = vec![EdgeDelta::insert(0, 3)];
+        let (out, _, _) = svc.handle_cancel(
+            Request::ApplyEdges { graph: id.into(), deltas: deltas.clone() },
+            None,
+            None,
+        );
+        let err = out.unwrap_err();
+        assert!(err.to_string().contains("panicked (caught)"), "{err}");
+
+        // the next write finds the poison, rebuilds the session over
+        // its last committed snapshot, swaps it into the pool — and
+        // succeeds (the fault budget is spent)
+        let (out, _, _) =
+            svc.handle_cancel(Request::ApplyEdges { graph: id.into(), deltas }, None, None);
+        match out.unwrap() {
+            Response::Applied { report, .. } => assert_eq!(report.applied(), 1),
+            other => panic!("{other:?}"),
+        }
+
+        let text = svc.metrics_text();
+        assert!(text.contains("vdmc_panics_caught_total 1"), "{text}");
+        assert!(text.contains("vdmc_writer_recoveries_total 1"), "{text}");
+
+        // arming nonsense is a per-request error
+        let err = svc
+            .handle(Request::InjectFault {
+                site: "nowhere".into(),
+                action: "panic".into(),
+                delay_ms: 0,
+                count: 1,
+                graph: None,
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("unknown fault site"), "{err}");
     }
 
     #[test]

@@ -39,6 +39,7 @@
 
 use std::sync::{Arc, Mutex};
 
+use super::faults;
 use crate::engine::{Session, SessionSnapshot, SnapshotCell};
 use crate::telemetry::metrics::{MetricsRegistry, ValueSnapshot};
 use crate::util::json::Json;
@@ -292,6 +293,7 @@ impl SessionPool {
     /// against every *other* resident. Returns how many sessions were
     /// evicted to make room.
     pub fn insert(&mut self, id: &str, mut session: Session) -> u64 {
+        faults::hit(faults::SITE_POOL_INSERT, Some(id));
         session.set_graph_id(id);
         let cell = session.share();
         let bytes = cell.resident_bytes();
@@ -342,6 +344,31 @@ impl SessionPool {
                 self.misses += 1;
                 None
             }
+        }
+    }
+
+    /// Swap in a recovered writer for `id` — the service's
+    /// poisoned-mutex recovery path. `old` must still be the resident
+    /// writer handle (`Arc::ptr_eq`): if another thread already
+    /// recovered (or the graph was evicted/reloaded meanwhile) the swap
+    /// is refused and the caller retries against the current entry, so
+    /// one panic never produces two recoveries. The replacement shares
+    /// the same snapshot cell, so pins, epochs and byte accounting stay
+    /// coherent; bytes are re-metered anyway (the recovery commit bumps
+    /// the epoch). Not an LRU event: no hit/miss/load counts.
+    pub fn replace_writer(
+        &mut self,
+        id: &str,
+        old: &Arc<Mutex<Session>>,
+        session: Session,
+    ) -> bool {
+        match self.entries.iter_mut().find(|e| e.id == id) {
+            Some(e) if Arc::ptr_eq(&e.writer, old) => {
+                e.writer = Arc::new(Mutex::new(session));
+                e.bytes = e.cell.resident_bytes();
+                true
+            }
+            _ => false,
         }
     }
 
@@ -605,6 +632,24 @@ mod tests {
         drop(writer);
         pool.update_bytes("b");
         assert!(!pool.contains("a"));
+    }
+
+    #[test]
+    fn replace_writer_swaps_recovered_sessions_and_refuses_stale_handles() {
+        let mut pool = SessionPool::new(0, 0);
+        pool.insert("a", session(30, 1));
+        let old = pool.writer("a").unwrap();
+        let recovered = old.lock().unwrap().recover();
+        assert_eq!(recovered.epoch(), 1, "recovery bumps the committed epoch");
+        assert!(pool.replace_writer("a", &old, recovered));
+        let fresh = pool.writer("a").unwrap();
+        assert!(!Arc::ptr_eq(&fresh, &old), "the poisoned handle is out of the pool");
+        assert_eq!(fresh.lock().unwrap().graph_id(), Some("a"));
+        // a second recovery through the stale handle must be refused:
+        // the entry's writer is no longer `old`
+        let again = old.lock().unwrap().recover();
+        assert!(!pool.replace_writer("a", &old, again));
+        assert!(!pool.replace_writer("zzz", &fresh, session(30, 2)), "unknown graph");
     }
 
     #[test]

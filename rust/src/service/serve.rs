@@ -5,20 +5,39 @@
 //! JSON response per line, in request order. The concurrency model:
 //!
 //! - [`serve_connection`] drives ONE client. The calling thread reads
-//!   and handles requests serially (per-client order is part of the
-//!   protocol); finished responses flow through a bounded channel — the
-//!   **inflight window** — to a scoped writer thread. A slow client
-//!   that stops reading eventually blocks its own connection's handler,
-//!   never the process. On EOF the channel closes and the writer drains
-//!   every queued response before the call returns: no request that was
-//!   handled loses its reply. Malformed lines become error responses
-//!   through the same channel, so they cannot desync the ordering.
+//!   request lines and feeds them through a bounded channel — the
+//!   **inflight window** — to a scoped handler thread that decodes,
+//!   handles, and writes responses serially (per-client order is part
+//!   of the protocol). A slow client that stops reading eventually
+//!   blocks its own connection's handler, never the process. On clean
+//!   EOF the channel closes and the handler drains every queued request
+//!   before the call returns: no request that was read loses its reply.
+//!   Malformed lines become error responses through the same channel,
+//!   so they cannot desync the ordering.
+//! - Keeping the **reader** on its own side of that channel is what
+//!   makes cancellation work: while the handler is deep in an
+//!   enumeration, the reader is parked in `read()` and sees an abrupt
+//!   disconnect (reset, timeout) immediately — it flips the
+//!   connection's [`CancelToken`] with [`AbortReason::ClientGone`] and
+//!   the engine stops at the next work unit instead of computing an
+//!   answer nobody will read. A half-close (clean EOF) does *not*
+//!   cancel: pipelined requests drain, which the stdin fixture mode and
+//!   the CI harness rely on.
 //! - [`serve_tcp`] accepts clients and runs one [`serve_connection`]
 //!   per connection thread, all sharing one [`VdmcService`] handle
 //!   (reads share pinned snapshots; writes serialize per graph).
-//!   Shutdown is graceful: flip the flag, the listener stops accepting,
-//!   every client's read side is shut down (their loops see EOF and
-//!   drain), and the scope joins them all.
+//!   Accepted sockets get the configured read/write timeouts; a timed
+//!   out (idle past `read_timeout_ms`) or unwritable client counts as
+//!   gone. Shutdown is graceful: flip the flag, the listener stops
+//!   accepting, every connection token is cancelled with
+//!   [`AbortReason::Shutdown`] (long enumerations abort at the next
+//!   work unit) and every client's read side is shut down (their loops
+//!   see EOF and drain), then the scope joins them all.
+//!
+//! Per-request deadlines compose with all of that: each request handles
+//! under a child token of its connection's token, carrying the wire's
+//! `"deadline_ms"` budget (or the server's `--default-deadline-ms`) and
+//! the request's graph id as the fault-scope tag.
 //!
 //! `vdmc serve` runs the stdin/stdout mode as exactly the 1-client
 //! special case of [`serve_connection`].
@@ -34,11 +53,12 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use crate::engine::{AbortReason, CancelToken, QueryAborted};
 use crate::util::json::Json;
 
-use super::{wire, VdmcService};
+use super::{faults, wire, VdmcService};
 
 /// How often the TCP accept loop polls for shutdown / free client slots.
 const ACCEPT_POLL: Duration = Duration::from_millis(5);
@@ -56,17 +76,34 @@ const HELP_BYTES: &str = "Wire bytes by direction (dir=\"in\"|\"out\"), newlines
 /// Transport tuning shared by the stdin and TCP modes.
 #[derive(Debug, Clone, Copy)]
 pub struct ServeOptions {
-    /// Responses queued per client before its handler blocks (the
+    /// Requests read ahead per client before its reader blocks (the
     /// per-client inflight window; min 1).
     pub inflight: usize,
     /// Concurrent TCP clients (0 = unbounded); excess connections wait
     /// in the listen backlog.
     pub max_clients: usize,
+    /// TCP socket read timeout in ms (0 = none). A client idle past the
+    /// budget counts as gone: its in-flight request is cancelled and
+    /// the connection drops.
+    pub read_timeout_ms: u64,
+    /// TCP socket write timeout in ms (0 = none). A client that stops
+    /// reading long enough to stall a response write counts as gone.
+    pub write_timeout_ms: u64,
+    /// Deadline applied to requests that do not carry their own
+    /// `"deadline_ms"` field (0 = none). A wire `"deadline_ms":0`
+    /// explicitly opts a request out of this default.
+    pub default_deadline_ms: u64,
 }
 
 impl Default for ServeOptions {
     fn default() -> Self {
-        ServeOptions { inflight: 64, max_clients: 0 }
+        ServeOptions {
+            inflight: 64,
+            max_clients: 0,
+            read_timeout_ms: 0,
+            write_timeout_ms: 30_000,
+            default_deadline_ms: 0,
+        }
     }
 }
 
@@ -77,20 +114,59 @@ pub struct TcpServeSummary {
     pub clients: u64,
     /// Requests answered across all connections.
     pub requests: u64,
+    /// Requests that answered with a typed abort (deadline, client
+    /// gone, shutdown) instead of a result.
+    pub aborted: u64,
 }
 
 /// Decode-handle-encode for one request line; never fails — undecodable
 /// lines become error responses with a best-effort id/op echo so the
 /// client can correlate the failure, and the response keeps its slot in
-/// the per-connection ordering.
-fn handle_line(svc: &VdmcService, line: &str) -> String {
+/// the per-connection ordering. The request handles under a child of
+/// `conn`'s token carrying the effective deadline (wire `"deadline_ms"`,
+/// else `default_deadline_ms`, 0 = none) and the graph id as fault tag.
+/// Returns the encoded reply plus whether it was a typed abort.
+fn handle_line(
+    svc: &VdmcService,
+    line: &str,
+    conn: &CancelToken,
+    default_deadline_ms: u64,
+) -> (String, bool) {
     match wire::decode_request(line) {
-        Ok((req, id, trace)) => {
+        Ok((req, id, trace, deadline_ms)) => {
             let op = req.op();
-            let (result, secs, trace_id) = svc.handle_traced(req, trace);
+            let tag = req.graph().map(String::from);
+            let budget_ms = deadline_ms.unwrap_or(default_deadline_ms);
+            let deadline =
+                (budget_ms > 0).then(|| Instant::now() + Duration::from_millis(budget_ms));
+            let token = conn.child(deadline, tag.clone());
+            let (result, secs, trace_id) = svc.handle_cancel(req, trace, Some(token));
             match result {
-                Ok(resp) => wire::encode_response(&resp, id, secs, Some(&trace_id)),
-                Err(e) => wire::encode_error(Some(op), id, Some(&trace_id), &format!("{e:#}")),
+                Ok(resp) => {
+                    // the encode fault site sits outside the service's
+                    // panic boundary, so an injected panic here must be
+                    // caught too or it would take the connection down
+                    let fault = std::panic::catch_unwind(|| {
+                        faults::fail_point(faults::SITE_WIRE_ENCODE, tag.as_deref())
+                    });
+                    match fault {
+                        Ok(Ok(())) => {
+                            (wire::encode_response(&resp, id, secs, Some(&trace_id)), false)
+                        }
+                        Ok(Err(e)) => (wire::encode_error(Some(op), id, Some(&trace_id), &e), false),
+                        Err(_) => {
+                            use crate::engine::cancel::{HELP_PANICS_CAUGHT, PANICS_CAUGHT_TOTAL};
+                            let reg = svc.telemetry().registry();
+                            reg.counter(PANICS_CAUGHT_TOTAL, HELP_PANICS_CAUGHT).inc();
+                            let msg = "response encoding panicked (caught)";
+                            (wire::encode_error(Some(op), id, Some(&trace_id), msg), false)
+                        }
+                    }
+                }
+                Err(e) => {
+                    let aborted = e.downcast_ref::<QueryAborted>().is_some();
+                    (wire::encode_failure(Some(op), id, Some(&trace_id), &e), aborted)
+                }
             }
         }
         Err(e) => {
@@ -101,7 +177,7 @@ fn handle_line(svc: &VdmcService, line: &str) -> String {
                 j.as_ref().and_then(|j| j.get("op")).and_then(Json::as_str).map(String::from);
             let trace =
                 j.as_ref().and_then(|j| j.get("trace")).and_then(Json::as_str).map(String::from);
-            wire::encode_error(op.as_deref(), id, trace.as_deref(), &e)
+            (wire::encode_error(op.as_deref(), id, trace.as_deref(), &e), false)
         }
     }
 }
@@ -111,7 +187,7 @@ fn handle_line(svc: &VdmcService, line: &str) -> String {
 /// how many requests were answered.
 ///
 /// The reader stays on the calling thread (so non-`Send` readers like
-/// `StdinLock` work); only the writer crosses into the scoped sink
+/// `StdinLock` work); only the writer crosses into the scoped handler
 /// thread. Blank lines and `#` comments are skipped without a response,
 /// matching the fixture format.
 pub fn serve_connection<R: BufRead, W: Write + Send>(
@@ -120,6 +196,25 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     writer: &mut W,
     opts: &ServeOptions,
 ) -> io::Result<u64> {
+    let conn = CancelToken::new();
+    let (served, _aborted, err) = serve_conn_inner(svc, reader, writer, opts, &conn);
+    match err {
+        Some(e) => Err(e),
+        None => Ok(served),
+    }
+}
+
+/// [`serve_connection`] against an explicit connection token, reporting
+/// `(requests answered, typed aborts, terminal io error)`. The counts
+/// survive an error exit — a connection that times out after answering
+/// a thousand requests still answered them.
+fn serve_conn_inner<R: BufRead, W: Write + Send>(
+    svc: &VdmcService,
+    reader: R,
+    writer: &mut W,
+    opts: &ServeOptions,
+    conn: &CancelToken,
+) -> (u64, u64, Option<io::Error>) {
     let reg = svc.telemetry().registry();
     reg.counter(CONNECTIONS, HELP_CONNECTIONS).inc();
     reg.counter(MALFORMED, HELP_MALFORMED); // pre-register: scrapes show 0
@@ -127,25 +222,50 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
     let bytes_out = reg.counter_with(BYTES, HELP_BYTES, &[("dir", "out")]);
     let inflight = reg.gauge(INFLIGHT, HELP_INFLIGHT);
     let (tx, rx) = sync_channel::<String>(opts.inflight.max(1));
-    let mut served = 0u64;
     let mut read_err: Option<io::Error> = None;
-    let sink_result = std::thread::scope(|s| {
-        let (bytes_out, inflight_sink) = (bytes_out.clone(), inflight.clone());
-        let sink = s.spawn(move || -> io::Result<()> {
-            for reply in rx {
-                writeln!(writer, "{reply}")?;
+    let (served, aborted, write_err) = std::thread::scope(|s| {
+        let (bytes_out, inflight_h) = (bytes_out.clone(), inflight.clone());
+        let handler = s.spawn(move || {
+            let (mut served, mut aborted) = (0u64, 0u64);
+            let mut write_err: Option<io::Error> = None;
+            while let Ok(line) = rx.recv() {
+                if write_err.is_some() {
+                    // the client stopped reading; drop queued requests
+                    // unhandled, but keep draining so the reader side
+                    // never blocks on a full channel
+                    inflight_h.dec();
+                    continue;
+                }
+                let (reply, was_abort) =
+                    handle_line(svc, &line, conn, opts.default_deadline_ms);
+                served += 1;
+                if was_abort {
+                    aborted += 1;
+                }
                 // flushed per response: clients pipeline against the
                 // inflight window and must see replies promptly
-                writer.flush()?;
-                bytes_out.add(reply.len() as u64 + 1);
-                inflight_sink.dec();
+                match writeln!(writer, "{reply}").and_then(|()| writer.flush()) {
+                    Ok(()) => bytes_out.add(reply.len() as u64 + 1),
+                    Err(e) => {
+                        // unwritable (closed or write-timeout): the
+                        // client is gone — stop any future enumeration
+                        // on this connection from running to completion
+                        conn.cancel(AbortReason::ClientGone);
+                        write_err = Some(e);
+                    }
+                }
+                inflight_h.dec();
             }
-            Ok(())
+            (served, aborted, write_err)
         });
         for line in reader.lines() {
             let line = match line {
                 Ok(l) => l,
                 Err(e) => {
+                    // abrupt disconnect / reset / read-timeout while the
+                    // handler may be deep in an enumeration: flip the
+                    // connection token so it stops at the next work unit
+                    conn.cancel(AbortReason::ClientGone);
                     read_err = Some(e);
                     break;
                 }
@@ -155,26 +275,20 @@ pub fn serve_connection<R: BufRead, W: Write + Send>(
             if line.is_empty() || line.starts_with('#') {
                 continue;
             }
-            let reply = handle_line(svc, line);
             inflight.inc();
-            if tx.send(reply).is_err() {
-                // the sink died (client closed its read side): stop
-                // handling, the write error surfaces below
+            if tx.send(line.to_string()).is_err() {
+                // the handler died; nothing reads the channel anymore
                 inflight.dec();
                 break;
             }
-            served += 1;
         }
-        // EOF (or error): close the channel so the sink writes out every
-        // queued response and exits — the drain the protocol promises
+        // clean EOF (or error): close the channel so the handler answers
+        // every queued request and exits — the drain the protocol
+        // promises. A half-close does NOT cancel pipelined requests.
         drop(tx);
-        sink.join().expect("response sink thread panicked")
+        handler.join().expect("connection handler thread panicked")
     });
-    if let Some(e) = read_err {
-        return Err(e);
-    }
-    sink_result?;
-    Ok(served)
+    (served, aborted, read_err.or(write_err))
 }
 
 /// Accept TCP clients until `shutdown` flips, serving each on its own
@@ -190,10 +304,13 @@ pub fn serve_tcp(
     let active = AtomicUsize::new(0);
     let clients = AtomicU64::new(0);
     let requests = AtomicU64::new(0);
-    // read-side handles of live connections, for the shutdown nudge
-    let conns: Mutex<Vec<(u64, TcpStream)>> = Mutex::new(Vec::new());
+    let aborts = AtomicU64::new(0);
+    // read-side handles + cancel tokens of live connections, for the
+    // shutdown nudge
+    let conns: Mutex<Vec<(u64, TcpStream, CancelToken)>> = Mutex::new(Vec::new());
     let mut accept_err: Option<io::Error> = None;
 
+    let timeout = |ms: u64| (ms > 0).then(|| Duration::from_millis(ms));
     std::thread::scope(|s| {
         let mut next_id = 0u64;
         loop {
@@ -207,11 +324,16 @@ pub fn serve_tcp(
             }
             match listener.accept() {
                 Ok((stream, _peer)) => {
-                    // accepted sockets must block: the connection thread
-                    // parks in read() until a request or EOF arrives
-                    let prepared = stream.set_nonblocking(false).and_then(|()| {
-                        Ok((stream.try_clone()?, BufReader::new(stream.try_clone()?)))
-                    });
+                    // accepted sockets must block (the connection thread
+                    // parks in read() until a request, EOF, or timeout
+                    // arrives), bounded by the configured socket budgets
+                    let prepared = stream
+                        .set_nonblocking(false)
+                        .and_then(|()| stream.set_read_timeout(timeout(opts.read_timeout_ms)))
+                        .and_then(|()| stream.set_write_timeout(timeout(opts.write_timeout_ms)))
+                        .and_then(|()| {
+                            Ok((stream.try_clone()?, BufReader::new(stream.try_clone()?)))
+                        });
                     let (handle, reader) = match prepared {
                         Ok(pair) => pair,
                         // a client that vanished between accept and setup
@@ -220,17 +342,25 @@ pub fn serve_tcp(
                     };
                     let id = next_id;
                     next_id += 1;
-                    conns.lock().expect("conn registry poisoned").push((id, handle));
+                    let conn = CancelToken::new();
+                    conns
+                        .lock()
+                        .expect("conn registry poisoned")
+                        .push((id, handle, conn.clone()));
                     active.fetch_add(1, Ordering::SeqCst);
                     clients.fetch_add(1, Ordering::SeqCst);
                     let svc = svc.clone();
-                    let (active, requests, conns) = (&active, &requests, &conns);
+                    let (active, requests, aborts, conns) = (&active, &requests, &aborts, &conns);
                     s.spawn(move || {
                         let mut stream = stream;
-                        if let Ok(n) = serve_connection(&svc, reader, &mut stream, opts) {
-                            requests.fetch_add(n, Ordering::SeqCst);
-                        }
-                        conns.lock().expect("conn registry poisoned").retain(|(c, _)| *c != id);
+                        let (n, a, _err) =
+                            serve_conn_inner(&svc, reader, &mut stream, opts, &conn);
+                        requests.fetch_add(n, Ordering::SeqCst);
+                        aborts.fetch_add(a, Ordering::SeqCst);
+                        conns
+                            .lock()
+                            .expect("conn registry poisoned")
+                            .retain(|(c, _, _)| *c != id);
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
                 }
@@ -243,10 +373,13 @@ pub fn serve_tcp(
                 }
             }
         }
-        // graceful drain: no new clients; shutting down each read side
-        // EOFs its loop, which flushes in-flight responses and exits.
-        // The scope then joins every connection thread.
-        for (_, c) in conns.lock().expect("conn registry poisoned").iter() {
+        // graceful drain: no new clients. Cancelling each connection
+        // token makes any long enumeration abort at its next work unit
+        // (answered as a typed Shutdown abort); shutting down each read
+        // side EOFs its loop, which flushes in-flight responses and
+        // exits. The scope then joins every connection thread.
+        for (_, c, token) in conns.lock().expect("conn registry poisoned").iter() {
+            token.cancel(AbortReason::Shutdown);
             let _ = c.shutdown(Shutdown::Read);
         }
     });
@@ -256,6 +389,7 @@ pub fn serve_tcp(
         None => Ok(TcpServeSummary {
             clients: clients.into_inner(),
             requests: requests.into_inner(),
+            aborted: aborts.into_inner(),
         }),
     }
 }
@@ -378,6 +512,68 @@ mod tests {
         // errors echo the trace too, so failures stay correlatable
         assert_eq!(lines[2].get("ok").and_then(Json::as_bool), Some(false));
         assert_eq!(lines[2].get("trace").and_then(Json::as_str), Some("cli-trace-8"));
+    }
+
+    #[test]
+    fn wire_deadline_aborts_typed_and_the_connection_keeps_serving() {
+        // the fault scope tag doubles as the graph id, unique to this
+        // test so concurrent lib tests never trip over the armed delay
+        let svc = VdmcService::with_defaults();
+        let input = "\
+            {\"op\":\"load_graph\",\"id\":1,\"graph\":\"serve-deadline\",\"edges\":[[0,1],[1,2],[2,0],[2,3],[3,4],[4,0]],\"directed\":false}\n\
+            {\"op\":\"inject_fault\",\"id\":2,\"site\":\"enumerate_unit\",\"action\":\"delay\",\"delay_ms\":40,\"count\":2,\"graph\":\"serve-deadline\"}\n\
+            {\"op\":\"count\",\"id\":3,\"graph\":\"serve-deadline\",\"k\":3,\"direction\":\"undirected\",\"deadline_ms\":5}\n\
+            {\"op\":\"inject_fault\",\"id\":4,\"site\":\"enumerate_unit\",\"action\":\"clear\",\"graph\":\"serve-deadline\"}\n\
+            {\"op\":\"count\",\"id\":5,\"graph\":\"serve-deadline\",\"k\":3,\"direction\":\"undirected\"}\n";
+        let mut out: Vec<u8> = Vec::new();
+        let served =
+            serve_connection(&svc, input.as_bytes(), &mut out, &ServeOptions::default()).unwrap();
+        assert_eq!(served, 5);
+        let lines = lines_of(&out);
+        assert_eq!(lines[0].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(lines[1].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(lines[1].get("op").and_then(Json::as_str), Some("inject_fault"));
+        // the deadline-bounded count answers a typed abort, not a result
+        assert_eq!(lines[2].get("ok").and_then(Json::as_bool), Some(false));
+        let aborted = lines[2].get("aborted").expect("typed abort detail on the wire");
+        assert_eq!(aborted.get("reason").and_then(Json::as_str), Some("deadline"));
+        assert!(aborted.get("units_total").and_then(Json::as_u64).is_some());
+        // the connection survives: the scoped clear and a deadline-free
+        // re-issue both answer fine
+        assert_eq!(lines[3].get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(lines[4].get("ok").and_then(Json::as_bool), Some(true));
+        assert!(lines[4].get("total_instances").and_then(Json::as_u64).is_some());
+    }
+
+    #[test]
+    fn abrupt_disconnect_surfaces_the_read_error_after_draining() {
+        // a reader that yields one request, then dies mid-read the way a
+        // reset TCP socket does
+        struct ResetAfterOneLine {
+            line: Option<&'static [u8]>,
+        }
+        impl io::Read for ResetAfterOneLine {
+            fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+                match self.line.take() {
+                    Some(l) => {
+                        buf[..l.len()].copy_from_slice(l);
+                        Ok(l.len())
+                    }
+                    None => Err(io::Error::new(io::ErrorKind::ConnectionReset, "peer reset")),
+                }
+            }
+        }
+        let svc = loaded_service();
+        let reader =
+            BufReader::new(ResetAfterOneLine { line: Some(b"{\"op\":\"stats\",\"id\":1}\n") });
+        let mut out: Vec<u8> = Vec::new();
+        let err = serve_connection(&svc, reader, &mut out, &ServeOptions::default())
+            .expect_err("the reset must surface");
+        assert_eq!(err.kind(), io::ErrorKind::ConnectionReset);
+        // the request read before the reset still got its answer
+        let lines = lines_of(&out);
+        assert_eq!(lines.len(), 1);
+        assert_eq!(lines[0].get("ok").and_then(Json::as_bool), Some(true));
     }
 
     #[test]

@@ -36,12 +36,31 @@
 //! Absent, the service generates one (still echoed), so every response
 //! can be correlated with its slow-query log line and trace record.
 //!
+//! Any request may also carry a numeric `"deadline_ms"` budget: the
+//! serving loop arms a cancellation deadline that many milliseconds from
+//! decode, and an enumeration that overruns it stops at the next work
+//! unit with a typed failure line (below). `0` means no deadline even
+//! when the server was started with `--default-deadline-ms`.
+//!
+//! Debug/chaos builds additionally accept
+//! `{"op":"inject_fault","site":"commit","action":"panic","count":1,"graph":"web"}`
+//! (action `panic` | `delay` | `error` | `clear`, optional `delay_ms`,
+//! `count` defaulting to 1, optional `graph` scope) to arm the
+//! deterministic fault harness; plain release builds answer `ok:false`.
+//!
 //! ## Responses
 //!
 //! Success: `{"ok":true,"op":...,"id":...,"trace":...,
 //! "elapsed_secs":...,` payload `}`. Failure:
 //! `{"ok":false,"op":...,"id":...,"error":"..."}` — the stream keeps
-//! going; one bad request never kills the daemon. `count` answers carry
+//! going; one bad request never kills the daemon. Two failure classes
+//! carry structured detail besides the message: a cancelled or
+//! deadline-expired enumeration adds
+//! `"aborted":{"reason":"deadline","units_done":...,"units_total":...}`
+//! and a shed request adds
+//! `"overloaded":{"retry_after_ms":...,"inflight":...,...}`, so clients
+//! can distinguish retry-later conditions from real errors without
+//! parsing prose. `count` answers carry
 //! the class-total digest (`"classes":{"m6":123,...}`, scope-exact via
 //! the run report's class histogram) plus the report's
 //! `"phase_secs"` breakdown; exact per-vertex rows go through
@@ -53,12 +72,13 @@
 //! `"process"`; `metrics` answers carry the Prometheus text under
 //! `"metrics"`.
 
-use crate::engine::{MotifQuery, Output, Scope};
+use crate::engine::{MotifQuery, Output, QueryAborted, Scope};
 use crate::motifs::{Direction, MotifSize};
 use crate::stream::EdgeDelta;
 use crate::util::json::Json;
 
 use super::api::{GraphSource, Request, Response};
+use super::Overloaded;
 
 /// Optional string field: absent -> `default`; present non-string ->
 /// error (a mistyped field must never silently become a default).
@@ -136,9 +156,14 @@ fn decode_scope(j: &Json) -> Result<Scope, String> {
     }
 }
 
-/// Decode one request line. Returns the request, the echo id, and the
-/// client-supplied trace id (the `"trace"` field), if any.
-pub fn decode_request(line: &str) -> Result<(Request, Option<u64>, Option<String>), String> {
+/// Decode one request line. Returns the request, the echo id, the
+/// client-supplied trace id (the `"trace"` field), and the per-request
+/// deadline budget (the `"deadline_ms"` field), if any. A present
+/// `deadline_ms` always wins over the server default — `Some(0)` means
+/// the client explicitly opted out of any deadline.
+pub fn decode_request(
+    line: &str,
+) -> Result<(Request, Option<u64>, Option<String>, Option<u64>), String> {
     let j = Json::parse(line)?;
     // strict like every other optional field: a mistyped id must error,
     // not silently vanish and break the client's response correlation
@@ -156,6 +181,12 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>, Option<String
                 .ok_or_else(|| format!("\"trace\" must be a string, got {v:?}"))?
                 .to_string(),
         ),
+    };
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => Some(v.as_u64().ok_or_else(|| {
+            format!("\"deadline_ms\" must be a non-negative integer, got {v:?}")
+        })?),
     };
     let op = j
         .get("op")
@@ -271,9 +302,33 @@ pub fn decode_request(line: &str) -> Result<(Request, Option<u64>, Option<String
         "evict" => Request::Evict { graph: graph()? },
         "stats" => Request::Stats,
         "metrics" => Request::Metrics,
+        "inject_fault" => {
+            let site = j
+                .get("site")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "inject_fault needs a string \"site\" field".to_string())?
+                .to_string();
+            let action = j
+                .get("action")
+                .and_then(Json::as_str)
+                .ok_or_else(|| "inject_fault needs a string \"action\" field".to_string())?
+                .to_string();
+            let delay_ms = field_u64(&j, "delay_ms", 0)?;
+            let count = field_u64(&j, "count", 1)?;
+            // here "graph" scopes the fault, so it stays optional
+            let graph = match j.get("graph") {
+                None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| format!("\"graph\" must be a string, got {v:?}"))?
+                        .to_string(),
+                ),
+            };
+            Request::InjectFault { site, action, delay_ms, count, graph }
+        }
         other => return Err(format!("unknown op {other:?}")),
     };
-    Ok((req, id, trace))
+    Ok((req, id, trace, deadline_ms))
 }
 
 /// `[u, v]` pairs.
@@ -423,6 +478,9 @@ pub fn encode_response(
         Response::Metrics { text } => {
             j.set("metrics", text.as_str());
         }
+        Response::FaultArmed { site, action } => {
+            j.set("site", site.as_str()).set("action", action.as_str());
+        }
     }
     j.to_string_compact()
 }
@@ -441,6 +499,37 @@ pub fn encode_error(op: Option<&str>, id: Option<u64>, trace: Option<&str>, erro
     j.to_string_compact()
 }
 
+/// Encode a typed handler failure. Like [`encode_error`], but two
+/// lifecycle outcomes get machine-readable detail alongside the message:
+/// an aborted enumeration ([`QueryAborted`]) adds an `"aborted"` object
+/// and a shed request ([`Overloaded`]) adds an `"overloaded"` object, so
+/// clients can branch on retry-later conditions without parsing prose.
+pub fn encode_failure(
+    op: Option<&str>,
+    id: Option<u64>,
+    trace: Option<&str>,
+    error: &anyhow::Error,
+) -> String {
+    let line = encode_error(op, id, trace, &format!("{error:#}"));
+    let mut j = Json::parse(&line).expect("encode_error emits valid JSON");
+    if let Some(aborted) = error.downcast_ref::<QueryAborted>() {
+        let mut a = Json::obj();
+        a.set("reason", aborted.reason.label())
+            .set("units_done", aborted.units_done)
+            .set("units_total", aborted.units_total);
+        j.set("aborted", a);
+    } else if let Some(shed) = error.downcast_ref::<Overloaded>() {
+        let mut o = Json::obj();
+        o.set("retry_after_ms", shed.retry_after_ms)
+            .set("inflight", shed.inflight as u64)
+            .set("max_inflight", shed.max_inflight as u64)
+            .set("resident_bytes", shed.resident_bytes as u64)
+            .set("max_resident_bytes", shed.max_resident_bytes as u64);
+        j.set("overloaded", o);
+    }
+    j.to_string_compact()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -449,12 +538,13 @@ mod tests {
 
     #[test]
     fn decode_every_op() {
-        let (r, id, trace) = decode_request(
+        let (r, id, trace, deadline) = decode_request(
             r#"{"op":"load_graph","id":7,"graph":"g","path":"g.tsv","directed":true}"#,
         )
         .unwrap();
         assert_eq!(id, Some(7));
         assert_eq!(trace, None);
+        assert_eq!(deadline, None);
         assert_eq!(
             r,
             Request::LoadGraph {
@@ -464,7 +554,7 @@ mod tests {
             }
         );
 
-        let (r, id, _) = decode_request(
+        let (r, id, _, _) = decode_request(
             r#"{"op":"load_graph","graph":"t","edges":[[0,1],[1,2]],"directed":false}"#,
         )
         .unwrap();
@@ -478,7 +568,7 @@ mod tests {
             }
         );
 
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"count","graph":"g","k":4,"direction":"undirected","scheduler":"cursor","sink":"atomic"}"#,
         )
         .unwrap();
@@ -496,7 +586,7 @@ mod tests {
         }
 
         // count defaults mirror the CLI
-        let (r, _, _) = decode_request(r#"{"op":"count","graph":"g"}"#).unwrap();
+        let (r, _, _, _) = decode_request(r#"{"op":"count","graph":"g"}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
                 assert_eq!(query, CountQuery::default());
@@ -505,7 +595,7 @@ mod tests {
         }
 
         // scoped count: vertices spelling
-        let (r, _, _) =
+        let (r, _, _, _) =
             decode_request(r#"{"op":"count","graph":"g","vertices":[3,9]}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
@@ -515,7 +605,7 @@ mod tests {
         }
 
         // scoped count: seeds spelling with default radius 1
-        let (r, _, _) = decode_request(r#"{"op":"count","graph":"g","seeds":[4]}"#).unwrap();
+        let (r, _, _, _) = decode_request(r#"{"op":"count","graph":"g","seeds":[4]}"#).unwrap();
         match r {
             Request::Count { query, .. } => {
                 assert_eq!(query.scope, Scope::Neighborhood { seeds: vec![4], radius: 1 });
@@ -523,7 +613,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"instances","graph":"g","k":3,"direction":"undirected","limit":50}"#,
         )
         .unwrap();
@@ -535,7 +625,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
         // instances default limit
-        let (r, _, _) = decode_request(r#"{"op":"instances","graph":"g"}"#).unwrap();
+        let (r, _, _, _) = decode_request(r#"{"op":"instances","graph":"g"}"#).unwrap();
         match r {
             Request::Instances { query, .. } => {
                 assert_eq!(query.output, Output::Instances { limit: 1000 });
@@ -543,7 +633,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"sample","graph":"g","k":4,"per_class":16,"seed":7,"seeds":[0,5],"radius":2}"#,
         )
         .unwrap();
@@ -560,7 +650,7 @@ mod tests {
             other => panic!("{other:?}"),
         }
 
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"vertex_counts","graph":"g","k":3,"direction":"directed","vertices":[0,5]}"#,
         )
         .unwrap();
@@ -573,7 +663,7 @@ mod tests {
                 scope: Scope::Vertices(vec![0, 5])
             }
         );
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"vertex_counts","graph":"g","seeds":[2],"radius":2}"#,
         )
         .unwrap();
@@ -587,7 +677,7 @@ mod tests {
             }
         );
 
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"apply_edges","graph":"g","deltas":[["+",0,5],["-",1,2]]}"#,
         )
         .unwrap();
@@ -599,7 +689,7 @@ mod tests {
             }
         );
 
-        let (r, _, _) =
+        let (r, _, _, _) =
             decode_request(r#"{"op":"maintain","graph":"g","k":4,"direction":"undirected"}"#)
                 .unwrap();
         assert_eq!(
@@ -613,7 +703,7 @@ mod tests {
         );
         // a non-counts maintain decodes (the service rejects it with the
         // typed Count-only error at handle time)
-        let (r, _, _) = decode_request(
+        let (r, _, _, _) = decode_request(
             r#"{"op":"maintain","graph":"g","output":"sample"}"#,
         )
         .unwrap();
@@ -630,11 +720,49 @@ mod tests {
         assert_eq!(decode_request(r#"{"op":"metrics"}"#).unwrap().0, Request::Metrics);
 
         // a trace id rides along on any op
-        let (r, id, trace) =
+        let (r, id, trace, _) =
             decode_request(r#"{"op":"stats","id":3,"trace":"t-abc"}"#).unwrap();
         assert_eq!(r, Request::Stats);
         assert_eq!(id, Some(3));
         assert_eq!(trace.as_deref(), Some("t-abc"));
+
+        // a deadline budget rides along on any op, 0 = explicit opt-out
+        let (_, _, _, deadline) =
+            decode_request(r#"{"op":"count","graph":"g","deadline_ms":250}"#).unwrap();
+        assert_eq!(deadline, Some(250));
+        let (_, _, _, deadline) =
+            decode_request(r#"{"op":"stats","deadline_ms":0}"#).unwrap();
+        assert_eq!(deadline, Some(0));
+
+        // fault arming decodes with its defaults (count 1, no scope)
+        let (r, _, _, _) = decode_request(
+            r#"{"op":"inject_fault","site":"commit","action":"panic","graph":"g"}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::InjectFault {
+                site: "commit".into(),
+                action: "panic".into(),
+                delay_ms: 0,
+                count: 1,
+                graph: Some("g".into())
+            }
+        );
+        let (r, _, _, _) = decode_request(
+            r#"{"op":"inject_fault","site":"enumerate_unit","action":"delay","delay_ms":50,"count":0}"#,
+        )
+        .unwrap();
+        assert_eq!(
+            r,
+            Request::InjectFault {
+                site: "enumerate_unit".into(),
+                action: "delay".into(),
+                delay_ms: 50,
+                count: 0,
+                graph: None
+            }
+        );
     }
 
     #[test]
@@ -674,6 +802,11 @@ mod tests {
             r#"{"op":"stats","id":7.5}"#,
             r#"{"op":"stats","id":-1}"#,
             r#"{"op":"stats","trace":7}"#, // trace id must be a string
+            r#"{"op":"count","graph":"g","deadline_ms":"soon"}"#, // mistyped budget
+            r#"{"op":"count","graph":"g","deadline_ms":-5}"#,
+            r#"{"op":"inject_fault","action":"panic"}"#, // no site
+            r#"{"op":"inject_fault","site":"commit"}"#,  // no action
+            r#"{"op":"inject_fault","site":"commit","action":"panic","count":"all"}"#,
         ] {
             assert!(decode_request(bad).is_err(), "{bad:?} must not decode");
         }
@@ -696,11 +829,62 @@ mod tests {
         let j = Json::parse(&line).unwrap();
         assert!(j.get("trace").is_none());
 
+        let line = encode_response(
+            &Response::FaultArmed { site: "commit".into(), action: "panic".into() },
+            None,
+            0.0,
+            None,
+        );
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("op").and_then(Json::as_str), Some("inject_fault"));
+        assert_eq!(j.get("site").and_then(Json::as_str), Some("commit"));
+        assert_eq!(j.get("action").and_then(Json::as_str), Some("panic"));
+
         let line = encode_error(Some("count"), None, Some("t-9"), "graph \"x\" not loaded");
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
         assert_eq!(j.get("trace").and_then(Json::as_str), Some("t-9"));
         assert!(j.get("error").and_then(Json::as_str).unwrap().contains("not loaded"));
+    }
+
+    #[test]
+    fn encode_failure_carries_typed_abort_and_overload_detail() {
+        use crate::engine::AbortReason;
+
+        let err = anyhow::Error::new(QueryAborted {
+            reason: AbortReason::Deadline,
+            units_done: 17,
+            units_total: 200,
+        });
+        let j = Json::parse(&encode_failure(Some("count"), Some(4), Some("t-1"), &err)).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(j.get("id").and_then(Json::as_u64), Some(4));
+        assert!(j.get("error").and_then(Json::as_str).unwrap().contains("deadline"));
+        let a = j.get("aborted").expect("typed abort detail");
+        assert_eq!(a.get("reason").and_then(Json::as_str), Some("deadline"));
+        assert_eq!(a.get("units_done").and_then(Json::as_u64), Some(17));
+        assert_eq!(a.get("units_total").and_then(Json::as_u64), Some(200));
+        assert!(j.get("overloaded").is_none());
+
+        let err = anyhow::Error::new(Overloaded {
+            inflight: 9,
+            max_inflight: 8,
+            resident_bytes: 0,
+            max_resident_bytes: 0,
+            retry_after_ms: 50,
+        });
+        let j = Json::parse(&encode_failure(Some("count"), None, None, &err)).unwrap();
+        let o = j.get("overloaded").expect("typed overload detail");
+        assert_eq!(o.get("retry_after_ms").and_then(Json::as_u64), Some(50));
+        assert_eq!(o.get("inflight").and_then(Json::as_u64), Some(9));
+        assert_eq!(o.get("max_inflight").and_then(Json::as_u64), Some(8));
+        assert!(j.get("aborted").is_none());
+
+        // a plain error stays a plain line
+        let err = anyhow::anyhow!("graph \"x\" not loaded");
+        let j = Json::parse(&encode_failure(Some("count"), None, None, &err)).unwrap();
+        assert!(j.get("aborted").is_none());
+        assert!(j.get("overloaded").is_none());
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Cancellation purity: an aborted enumeration must leave the service
+//! in a state bit-identical to the query never having run — no epoch
+//! bump, no byte growth, no leaked snapshot pins — and a re-issue of
+//! the same query must match a dedicated-session oracle exactly.
+//!
+//! The abort itself is made deterministic with the fault harness: a
+//! graph-scoped `enumerate_unit` delay stretches work units so a short
+//! deadline (or a cross-thread cancel) always lands mid-run. This is an
+//! integration test on purpose — it owns its process, so the
+//! process-global fault registry can't race the lib tests (the faults
+//! are still graph-scoped and cleared, out of the same caution).
+
+use std::time::{Duration, Instant};
+
+use vdmc::engine::{AbortReason, CancelToken, CountQuery, QueryAborted, Session};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::service::{faults, GraphSource, Request, Response, VdmcService};
+
+fn load_req(id: &str, g: &Graph) -> Request {
+    Request::LoadGraph {
+        graph: id.to_string(),
+        source: GraphSource::Edges { n: g.n(), edges: g.out.edges().collect() },
+        directed: true,
+    }
+}
+
+/// Everything observable about the pool that a pure abort must not
+/// change: entry count, byte accounting, leaked pins, and each resident
+/// graph's (id, epoch, bytes) line.
+fn pool_fingerprint(svc: &VdmcService) -> (usize, usize, usize, usize, Vec<(String, u64, usize)>) {
+    match svc.handle(Request::Stats).unwrap() {
+        Response::Stats { pool, .. } => (
+            pool.entries,
+            pool.resident_bytes,
+            pool.retained_bytes,
+            pool.pinned_snapshots,
+            pool.graphs.iter().map(|g| (g.id.clone(), g.epoch, g.bytes)).collect(),
+        ),
+        other => panic!("{other:?}"),
+    }
+}
+
+fn abort_of(err: &anyhow::Error) -> &QueryAborted {
+    err.downcast_ref::<QueryAborted>()
+        .unwrap_or_else(|| panic!("expected a typed QueryAborted, got: {err:#}"))
+}
+
+#[test]
+fn deadline_abort_leaves_no_trace_and_reissue_matches_oracle() {
+    let svc = VdmcService::with_defaults();
+    for seed in 0..3u64 {
+        let id = format!("purity-{seed}");
+        let g = generators::gnp_directed(60, 0.08, seed + 101);
+        svc.handle(load_req(&id, &g)).unwrap();
+        let before = pool_fingerprint(&svc);
+
+        // stretch every work unit by 30ms against an 8ms budget: the
+        // deadline always expires before the enumeration can finish
+        faults::arm(faults::SITE_ENUMERATE_UNIT, "delay", 30, 3, Some(id.clone())).unwrap();
+        let token = CancelToken::new()
+            .child(Some(Instant::now() + Duration::from_millis(8)), Some(id.clone()));
+        let (result, _, _) = svc.handle_cancel(
+            Request::Count { graph: id.clone(), query: CountQuery::default() },
+            None,
+            Some(token),
+        );
+        let err = result.expect_err("the deadline must abort the count");
+        let aborted = abort_of(&err);
+        assert_eq!(aborted.reason, AbortReason::Deadline);
+        assert!(
+            aborted.units_done < aborted.units_total || aborted.units_total == 0,
+            "an aborted run must not have finished: {aborted}"
+        );
+        faults::arm(faults::SITE_ENUMERATE_UNIT, "clear", 0, 0, Some(id.clone())).unwrap();
+
+        // purity: the pool looks exactly like the query never ran
+        assert_eq!(pool_fingerprint(&svc), before, "aborted seed {seed} left a trace");
+
+        // the re-issue (no deadline) matches a dedicated session oracle
+        let counts = match svc
+            .handle(Request::Count { graph: id.clone(), query: CountQuery::default() })
+            .unwrap()
+        {
+            Response::Counted { counts, .. } => counts,
+            other => panic!("{other:?}"),
+        };
+        let want = Session::load(&g).count(&CountQuery::default()).unwrap();
+        assert_eq!(counts.per_vertex, want.per_vertex, "seed {seed}");
+        assert_eq!(counts.total_instances, want.total_instances, "seed {seed}");
+    }
+
+    // the three aborts are visible in the service metrics
+    let text = match svc.handle(Request::Metrics).unwrap() {
+        Response::Metrics { text } => text,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        text.contains("vdmc_deadline_exceeded_total 3"),
+        "deadline aborts must be counted:\n{text}"
+    );
+}
+
+#[test]
+fn cross_thread_cancel_aborts_mid_run_with_the_given_reason() {
+    let svc = VdmcService::with_defaults();
+    let id = "purity-gone".to_string();
+    let g = generators::gnp_directed(60, 0.08, 7);
+    svc.handle(load_req(&id, &g)).unwrap();
+    let before = pool_fingerprint(&svc);
+
+    faults::arm(faults::SITE_ENUMERATE_UNIT, "delay", 20, 50, Some(id.clone())).unwrap();
+    let token = CancelToken::new().child(None, Some(id.clone()));
+    let canceller = {
+        let token = token.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            token.cancel(AbortReason::ClientGone);
+        })
+    };
+    let (result, _, _) = svc.handle_cancel(
+        Request::Count { graph: id.clone(), query: CountQuery::default() },
+        None,
+        Some(token),
+    );
+    canceller.join().unwrap();
+    faults::arm(faults::SITE_ENUMERATE_UNIT, "clear", 0, 0, Some(id.clone())).unwrap();
+
+    let err = result.expect_err("the cross-thread cancel must abort the count");
+    assert_eq!(abort_of(&err).reason, AbortReason::ClientGone);
+    assert_eq!(pool_fingerprint(&svc), before, "the abort left a trace");
+
+    // a clean re-issue still matches the oracle
+    let counts = match svc
+        .handle(Request::Count { graph: id.clone(), query: CountQuery::default() })
+        .unwrap()
+    {
+        Response::Counted { counts, .. } => counts,
+        other => panic!("{other:?}"),
+    };
+    let want = Session::load(&g).count(&CountQuery::default()).unwrap();
+    assert_eq!(counts.per_vertex, want.per_vertex);
+    let text = match svc.handle(Request::Metrics).unwrap() {
+        Response::Metrics { text } => text,
+        other => panic!("{other:?}"),
+    };
+    assert!(
+        text.contains("vdmc_cancelled_total{reason=\"client_gone\"} 1"),
+        "the cancel must be counted by reason:\n{text}"
+    );
+}

@@ -199,7 +199,7 @@ fn wire_jsonl_stream_matches_dedicated_sessions() {
 
     // the serve loop body, minus stdin plumbing
     let roundtrip = |line: String| -> Json {
-        let (req, id, trace) =
+        let (req, id, trace, _) =
             wire::decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
         let op = req.op();
         let (result, secs, trace_id) = svc.handle_traced(req, trace);
