@@ -24,9 +24,10 @@
 //! bench's `happy_path_overhead` row (≤ 2% asserted).
 
 use std::fmt;
-use std::sync::atomic::{AtomicU8, Ordering};
-use std::sync::Arc;
 use std::time::{Duration, Instant};
+
+use crate::sync::atomic::{AtomicU8, Ordering};
+use crate::sync::Arc;
 
 // Counter names shared by the engine (increment side, through the
 // request's traced registry) and the service telemetry (pre-registration
@@ -108,6 +109,9 @@ struct Inner {
 
 impl Inner {
     fn reason(&self) -> Option<AbortReason> {
+        // relaxed: the flag is a standalone latch — observers act on the
+        // reason value itself and read no other memory published by the
+        // cancelling thread, so no acquire edge is needed.
         AbortReason::from_state(self.state.load(Ordering::Relaxed))
     }
 }
@@ -168,6 +172,10 @@ impl CancelToken {
     /// Request the abort. The first reason wins; returns whether this
     /// call was the one that cancelled the token.
     pub fn cancel(&self, reason: AbortReason) -> bool {
+        // relaxed: first-reason-wins needs only the CAS's per-location
+        // total order (exactly one transition from 0 sticks); the reason
+        // travels inside the atomic itself, so there is nothing else to
+        // publish.
         self.inner
             .state
             .compare_exchange(0, reason.state(), Ordering::Relaxed, Ordering::Relaxed)
@@ -286,6 +294,26 @@ mod tests {
         let req2 = conn2.child(Some(Instant::now() - Duration::from_millis(1)), None);
         assert_eq!(req2.check(), Some(AbortReason::Deadline));
         assert_eq!(conn2.check(), None, "a child's deadline never cancels the parent");
+    }
+
+    #[test]
+    fn cancel_propagates_down_the_whole_child_chain() {
+        let conn = CancelToken::new();
+        let req = conn.child(None, None);
+        let unit = req.child(None, Some("unit".into()));
+        assert_eq!(unit.check(), None);
+        conn.cancel(AbortReason::Shutdown);
+        assert_eq!(unit.check(), Some(AbortReason::Shutdown), "grandchild sees the root cancel");
+        assert_eq!(req.check(), Some(AbortReason::Shutdown));
+        // a child derived after the cancel is born cancelled
+        assert_eq!(req.child(None, None).check(), Some(AbortReason::Shutdown));
+        // first-reason-wins is per token, and check() reads own latch
+        // before walking up: a later cancel on the middle token relabels
+        // its own subtree but can never reach the root
+        assert!(req.cancel(AbortReason::Shed), "req's own latch was still unset");
+        assert_eq!(req.check(), Some(AbortReason::Shed));
+        assert_eq!(unit.check(), Some(AbortReason::Shed), "nearest cancelled ancestor wins");
+        assert_eq!(conn.check(), Some(AbortReason::Shutdown), "the root keeps its reason");
     }
 
     #[test]

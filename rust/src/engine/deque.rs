@@ -1,0 +1,203 @@
+//! Claim primitives under the scheduler layer: the shared fetch-add
+//! cursor and the per-worker steal deques.
+//!
+//! [`super::scheduler`] wraps these in the query-facing `Scheduler`
+//! trait and adds trace-phase timing; this module holds only the
+//! synchronization, generic over the item type and importing every
+//! primitive from [`crate::sync`], so `cfg(loom)` builds model-check
+//! the claim/steal protocol itself (`tests/loom_models.rs` asserts
+//! every item is claimed exactly once across all interleavings).
+//!
+//! Termination stays sound under batching: items only ever move from a
+//! victim's deque into the thief's hands and deque, so the total item
+//! count across queues is non-increasing and every item is claimed by
+//! exactly one worker. A worker that sweeps every queue empty may exit
+//! while a thief still drains its own transferred batch — that costs
+//! tail parallelism, never correctness, because counter updates
+//! commute.
+
+use std::collections::VecDeque;
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+use crate::sync::Mutex;
+use crate::util::rng::Pcg32;
+
+/// One claimed item plus where it came from.
+#[derive(Debug, Clone, Copy)]
+pub struct Claimed<T> {
+    pub item: T,
+    /// True when the item came from another worker's deque.
+    pub stolen: bool,
+    /// Items transferred by the steal operation that produced this
+    /// claim (1 for single-item steals, half the victim's deque for
+    /// batch steals, 0 for local pops).
+    pub batch: u32,
+}
+
+/// Shared pull-cursor over a flat queue: workers claim the next item
+/// with a single relaxed fetch-add — lock-free dynamic load balancing.
+pub struct CursorQueue<T> {
+    items: Vec<T>,
+    cursor: AtomicUsize,
+}
+
+impl<T: Copy> CursorQueue<T> {
+    pub fn new(items: Vec<T>) -> CursorQueue<T> {
+        CursorQueue { items, cursor: AtomicUsize::new(0) }
+    }
+
+    /// Claim the next item; `None` once the queue is drained (a
+    /// terminal state — later calls also return `None`).
+    #[inline]
+    pub fn claim(&self) -> Option<T> {
+        // relaxed: the RMW total order on `cursor` alone guarantees each
+        // index is handed out once; the items themselves are immutable
+        // after construction and published to the workers by the
+        // spawn/join happens-before, not by this counter.
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.items.get(i).copied()
+    }
+
+    /// Total items managed by this queue (claimed or not).
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+}
+
+/// Per-worker deques with randomized FIFO stealing (single-item or
+/// half-deque batches).
+///
+/// Each deque is stored reversed so `pop_back` (the LIFO local pop)
+/// serves items in seed order — heaviest work first, cache-warm —
+/// while thieves `pop_front` the cheap tail.
+pub struct StealDeques<T> {
+    queues: Vec<Mutex<VecDeque<T>>>,
+    /// Per-worker PRNG picking the steal-sweep start (deterministic
+    /// seeds keep runs reproducible; results don't depend on steal
+    /// order anyway).
+    rngs: Vec<Mutex<Pcg32>>,
+    n_items: usize,
+    /// Steal half of the victim's deque instead of one item.
+    steal_half: bool,
+}
+
+impl<T: Copy> StealDeques<T> {
+    /// `per_worker[w]` seeds worker w's deque; items must be in
+    /// scheduling order (most expensive first).
+    pub fn new(per_worker: Vec<Vec<T>>, steal_half: bool) -> StealDeques<T> {
+        let n_items = per_worker.iter().map(|q| q.len()).sum();
+        let n_workers = per_worker.len();
+        let queues = per_worker
+            .into_iter()
+            .map(|mut items| {
+                items.reverse();
+                Mutex::new(VecDeque::from(items))
+            })
+            .collect();
+        let rngs = (0..n_workers)
+            .map(|w| Mutex::new(Pcg32::new(0x5EED ^ w as u64, w as u64)))
+            .collect();
+        StealDeques { queues, rngs, n_items, steal_half }
+    }
+
+    /// Claim the next item for `worker_id`: a local LIFO pop, else a
+    /// randomized circular steal sweep. `None` once every deque is
+    /// drained (terminal — later calls also return `None`).
+    pub fn claim(&self, worker_id: usize) -> Option<Claimed<T>> {
+        let nq = self.queues.len();
+        if nq == 0 {
+            return None;
+        }
+        let home = worker_id % nq;
+        if let Some(item) = self.queues[home].lock().unwrap().pop_back() {
+            return Some(Claimed { item, stolen: false, batch: 0 });
+        }
+        // Home deque dry: circular sweep over the victims from a random
+        // start (randomizes contention without allocating per claim).
+        let start = self.rngs[home].lock().unwrap().below_usize(nq);
+        for offset in 0..nq {
+            let q = (start + offset) % nq;
+            if q == home {
+                continue;
+            }
+            let mut victim = self.queues[q].lock().unwrap();
+            if victim.is_empty() {
+                continue;
+            }
+            if !self.steal_half {
+                let item = victim.pop_front().unwrap();
+                return Some(Claimed { item, stolen: true, batch: 1 });
+            }
+            // Batch steal: drain the front half (the victim's cheap
+            // tail) in one go, then release the victim before touching
+            // the home deque — no two locks held at once.
+            let take = victim.len().div_ceil(2);
+            let mut taken: Vec<T> = victim.drain(..take).collect();
+            drop(victim);
+            let first = taken.remove(0);
+            if !taken.is_empty() {
+                // Front-of-victim order is cheapest-last; pushing it
+                // back-to-back keeps the home pop_back yielding the
+                // heaviest item of the batch first.
+                self.queues[home].lock().unwrap().extend(taken);
+            }
+            return Some(Claimed { item: first, stolen: true, batch: take as u32 });
+        }
+        None
+    }
+
+    /// Total items seeded across all deques (claimed or not).
+    pub fn len(&self) -> usize {
+        self.n_items
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_items == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miri_cursor_hands_out_each_index_once() {
+        let q = CursorQueue::new((0..10u32).collect());
+        let mut seen: Vec<u32> = Vec::new();
+        while let Some(v) = q.claim() {
+            seen.push(v);
+        }
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+        assert!(q.claim().is_none());
+        assert_eq!(q.len(), 10);
+        assert!(!q.is_empty());
+    }
+
+    #[test]
+    fn miri_steal_deques_drain_exactly_once() {
+        for steal_half in [false, true] {
+            let seeds = vec![(0..50u32).collect(), Vec::new(), (50..64).collect()];
+            let d = StealDeques::new(seeds, steal_half);
+            assert_eq!(d.len(), 64);
+            let mut claimed: Vec<u32> = Vec::new();
+            for w in 0..3 {
+                while let Some(c) = d.claim(w) {
+                    claimed.push(c.item);
+                }
+            }
+            claimed.sort_unstable();
+            assert_eq!(claimed, (0..64).collect::<Vec<_>>(), "steal_half={steal_half}");
+        }
+    }
+
+    #[test]
+    fn empty_deques_terminate() {
+        let d: StealDeques<u32> = StealDeques::new(vec![], false);
+        assert!(d.claim(0).is_none());
+        assert!(d.is_empty());
+    }
+}

@@ -38,22 +38,40 @@
 //! `crate::coordinator` remains as a thin compatibility wrapper: its
 //! `count_motifs` builds a one-shot [`Session`] per call.
 
+// The lock-free core (cancel, deque, snapshot) compiles under
+// `--cfg loom` so tests/loom_models.rs can model-check it; the heavy
+// enumeration layers are compiled out there — loom only needs the
+// synchronization, and keeping the loom surface small keeps the models'
+// state space (and the instrumented-build time) bounded.
 pub mod cancel;
+pub mod deque;
+#[cfg(not(loom))]
 pub mod partition;
+#[cfg(not(loom))]
 pub mod query;
+#[cfg(not(loom))]
 pub mod scheduler;
+#[cfg(not(loom))]
 pub mod session;
+#[cfg(not(loom))]
 pub mod sink;
+pub mod snapshot;
 
+#[cfg(not(loom))]
 pub use crate::graph::AdjacencyMode;
 pub use cancel::{AbortReason, CancelToken, QueryAborted};
+#[cfg(not(loom))]
 pub use partition::{build_items, total_units, PartitionSet, Shard, WorkItem};
+#[cfg(not(loom))]
 pub use query::{
     ClassSample, CountQuery, CountQueryBuilder, InstanceList, MotifInstance, MotifQuery,
     MotifQueryBuilder, Output, QueryOutput, SampleSummary, Scope, TopVertices, VertexBits,
 };
+#[cfg(not(loom))]
 pub use scheduler::{Claim, Scheduler, SchedulerMode, SharedCursorScheduler, WorkStealingScheduler};
+#[cfg(not(loom))]
 pub use session::{Session, SessionConfig, SessionSnapshot, SnapshotCell};
+#[cfg(not(loom))]
 pub use sink::{
     make_sink, CountEnumSink, CounterSink, EmitHandle, EnumSink, InstanceEnumSink, MotifEvent,
     SampleEnumSink, TopVerticesEnumSink, WorkerHandle,

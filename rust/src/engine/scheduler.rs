@@ -19,20 +19,16 @@
 //!   claims instead of once per claim. [`Claim::batch`] records the
 //!   transfer size for the `RunReport` steal-batch metrics.
 //!
-//! Termination stays sound under batching: items only ever move from a
-//! victim's deque into the thief's hands and deque, so the total item
-//! count across queues is non-increasing and every item is claimed by
-//! exactly one worker. A worker that sweeps every queue empty may exit
-//! while a thief still drains its own transferred batch — that costs tail
-//! parallelism, never correctness, because counter updates commute.
+//! The synchronization itself — the fetch-add cursor and the
+//! lock-per-deque steal protocol, including the termination argument —
+//! lives in [`super::deque`], generic over the item type and
+//! model-checked under loom; this layer binds it to [`WorkItem`] and
+//! records the "schedule" trace phase.
 
-use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
+use crate::engine::deque::{CursorQueue, StealDeques};
 use crate::telemetry::trace;
-use crate::util::rng::Pcg32;
 
 use super::partition::WorkItem;
 
@@ -72,46 +68,33 @@ pub trait Scheduler: Sync {
 /// Shared pull-cursor over a flat queue: workers claim the next item with a
 /// single relaxed fetch-add — lock-free dynamic load balancing.
 pub struct SharedCursorScheduler {
-    items: Vec<WorkItem>,
-    cursor: AtomicUsize,
+    queue: CursorQueue<WorkItem>,
 }
 
 impl SharedCursorScheduler {
     pub fn new(items: Vec<WorkItem>) -> SharedCursorScheduler {
         // constructors run on the request thread, so queue building is
         // visible to an active trace as the "schedule" phase
-        trace::time_phase("schedule", || SharedCursorScheduler {
-            items,
-            cursor: AtomicUsize::new(0),
-        })
+        trace::time_phase("schedule", || SharedCursorScheduler { queue: CursorQueue::new(items) })
     }
 }
 
 impl Scheduler for SharedCursorScheduler {
     #[inline]
     fn pop(&self, _worker_id: usize) -> Option<Claim> {
-        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
-        self.items.get(i).map(|&item| Claim { item, stolen: false, batch: 0 })
+        self.queue.claim().map(|item| Claim { item, stolen: false, batch: 0 })
     }
 
     fn n_items(&self) -> usize {
-        self.items.len()
+        self.queue.len()
     }
 }
 
 /// Per-worker deques with randomized FIFO stealing (single-item or
-/// half-deque batches).
+/// half-deque batches). See [`super::deque::StealDeques`] for the
+/// protocol.
 pub struct WorkStealingScheduler {
-    /// One deque per worker. Stored reversed so `pop_back` (the LIFO local
-    /// pop) serves items in root-ascending order — heaviest hubs first —
-    /// while thieves `pop_front` the cheap high-index tail.
-    queues: Vec<Mutex<VecDeque<WorkItem>>>,
-    /// Per-worker PRNG picking the steal-sweep start (deterministic seeds
-    /// keep runs reproducible; results don't depend on steal order anyway).
-    rngs: Vec<Mutex<Pcg32>>,
-    n_items: usize,
-    /// Steal half of the victim's deque instead of one item.
-    steal_half: bool,
+    deques: StealDeques<WorkItem>,
 }
 
 impl WorkStealingScheduler {
@@ -130,69 +113,21 @@ impl WorkStealingScheduler {
 
     fn build(per_worker: Vec<Vec<WorkItem>>, steal_half: bool) -> WorkStealingScheduler {
         let t0 = Instant::now();
-        let n_items = per_worker.iter().map(|q| q.len()).sum();
-        let n_workers = per_worker.len();
-        let queues = per_worker
-            .into_iter()
-            .map(|mut items| {
-                items.reverse();
-                Mutex::new(VecDeque::from(items))
-            })
-            .collect();
-        let rngs = (0..n_workers)
-            .map(|w| Mutex::new(Pcg32::new(0x5EED ^ w as u64, w as u64)))
-            .collect();
+        let deques = StealDeques::new(per_worker, steal_half);
         trace::record_phase("schedule", t0.elapsed().as_secs_f64());
-        WorkStealingScheduler { queues, rngs, n_items, steal_half }
+        WorkStealingScheduler { deques }
     }
 }
 
 impl Scheduler for WorkStealingScheduler {
     fn pop(&self, worker_id: usize) -> Option<Claim> {
-        let nq = self.queues.len();
-        if nq == 0 {
-            return None;
-        }
-        let home = worker_id % nq;
-        if let Some(item) = self.queues[home].lock().unwrap().pop_back() {
-            return Some(Claim { item, stolen: false, batch: 0 });
-        }
-        // Home deque dry: circular sweep over the victims from a random
-        // start (randomizes contention without allocating per pop).
-        let start = self.rngs[home].lock().unwrap().below_usize(nq);
-        for offset in 0..nq {
-            let q = (start + offset) % nq;
-            if q == home {
-                continue;
-            }
-            let mut victim = self.queues[q].lock().unwrap();
-            if victim.is_empty() {
-                continue;
-            }
-            if !self.steal_half {
-                let item = victim.pop_front().unwrap();
-                return Some(Claim { item, stolen: true, batch: 1 });
-            }
-            // Batch steal: drain the front half (the victim's cheap
-            // high-root tail) in one go, then release the victim before
-            // touching the home deque — no two locks held at once.
-            let take = victim.len().div_ceil(2);
-            let mut taken: Vec<WorkItem> = victim.drain(..take).collect();
-            drop(victim);
-            let first = taken.remove(0);
-            if !taken.is_empty() {
-                // Front-of-victim order is root-descending; pushing it
-                // back-to-back keeps the home pop_back yielding the
-                // lowest-root (heaviest) item of the batch first.
-                self.queues[home].lock().unwrap().extend(taken);
-            }
-            return Some(Claim { item: first, stolen: true, batch: take as u32 });
-        }
-        None
+        self.deques
+            .claim(worker_id)
+            .map(|c| Claim { item: c.item, stolen: c.stolen, batch: c.batch })
     }
 
     fn n_items(&self) -> usize {
-        self.n_items
+        self.deques.len()
     }
 }
 

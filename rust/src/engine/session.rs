@@ -41,7 +41,7 @@
 
 use std::collections::HashSet;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
@@ -152,85 +152,26 @@ pub struct SessionSnapshot {
     served: Arc<AtomicUsize>,
 }
 
-/// The shared head pointer of one session: the current snapshot plus
-/// weak references to superseded epochs readers may still be pinning.
-/// Readers call [`SnapshotCell::head`] (an `Arc` clone under a read
-/// lock held only for the pointer copy); writers commit a successor
-/// with a pointer swap. Readers therefore never wait on an in-flight
-/// write batch, and writers never wait on in-flight queries — those
-/// keep their pinned epoch alive by refcount, so eviction or
-/// compaction can't free state under a running query.
-pub struct SnapshotCell {
-    head: RwLock<Arc<SessionSnapshot>>,
-    superseded: Mutex<Vec<Weak<SessionSnapshot>>>,
-}
+/// The session's snapshot cell: the generic model-checked
+/// [`snapshot::SnapshotCell`](crate::engine::snapshot::SnapshotCell)
+/// instantiated with [`SessionSnapshot`]. Readers pin the head (an
+/// `Arc` clone under a read lock held only for the pointer copy);
+/// writers commit a successor with a pointer swap. Readers therefore
+/// never wait on an in-flight write batch, and writers never wait on
+/// in-flight queries — see `engine::snapshot` for the full protocol.
+pub type SnapshotCell = crate::engine::snapshot::SnapshotCell<SessionSnapshot>;
 
-impl SnapshotCell {
-    fn new(head: Arc<SessionSnapshot>) -> SnapshotCell {
-        SnapshotCell { head: RwLock::new(head), superseded: Mutex::new(Vec::new()) }
+impl crate::engine::snapshot::Snapshot for SessionSnapshot {
+    fn epoch(&self) -> u64 {
+        self.epoch
     }
 
-    /// Pin the current head snapshot: one `Arc` clone.
-    pub fn head(&self) -> Arc<SessionSnapshot> {
-        self.head.read().expect("snapshot head lock poisoned").clone()
+    fn memory_bytes(&self) -> usize {
+        SessionSnapshot::memory_bytes(self)
     }
 
-    /// Publish `next` as the new head. The old head is remembered as a
-    /// weak reference: still-pinned readers keep it alive, and the cell
-    /// reports it in [`SnapshotCell::pinned_snapshots`] /
-    /// [`SnapshotCell::retained_bytes`] until the last pin drops.
-    fn commit(&self, next: Arc<SessionSnapshot>) {
-        let mut head = self.head.write().expect("snapshot head lock poisoned");
-        let old = std::mem::replace(&mut *head, next);
-        drop(head);
-        let mut superseded = self.superseded.lock().expect("superseded list poisoned");
-        superseded.retain(|w| w.strong_count() > 0);
-        superseded.push(Arc::downgrade(&old));
-        // `old` drops here: unpinned epochs die immediately
-    }
-
-    /// Epoch of the current head snapshot.
-    pub fn epoch(&self) -> u64 {
-        self.head().epoch
-    }
-
-    /// Snapshots currently pinned outside this cell: in-flight readers
-    /// of the head plus still-alive superseded epochs.
-    pub fn pinned_snapshots(&self) -> usize {
-        let head_pins = {
-            let head = self.head.read().expect("snapshot head lock poisoned");
-            Arc::strong_count(&head).saturating_sub(1)
-        };
-        let old_pins = self
-            .superseded
-            .lock()
-            .expect("superseded list poisoned")
-            .iter()
-            .filter(|w| w.strong_count() > 0)
-            .count();
-        head_pins + old_pins
-    }
-
-    /// Bytes kept alive by superseded-but-pinned epochs beyond what the
-    /// head already accounts for: per alive epoch, the components not
-    /// shared with the head (epochs sharing state with *each other* are
-    /// each counted, so this is an upper bound).
-    pub fn retained_bytes(&self) -> usize {
-        let head = self.head();
-        self.superseded
-            .lock()
-            .expect("superseded list poisoned")
-            .iter()
-            .filter_map(Weak::upgrade)
-            .map(|s| s.retained_vs(&head))
-            .sum()
-    }
-
-    /// Total resident bytes: the head snapshot plus retained epochs —
-    /// the number the [`crate::service::SessionPool`] byte budget
-    /// meters, computable without the writer lock.
-    pub fn resident_bytes(&self) -> usize {
-        self.head().memory_bytes() + self.retained_bytes()
+    fn retained_vs(&self, head: &SessionSnapshot) -> usize {
+        SessionSnapshot::retained_vs(self, head)
     }
 }
 
@@ -720,6 +661,7 @@ impl SessionSnapshot {
 
     /// Queries served so far (shared across epochs).
     pub fn queries_served(&self) -> usize {
+        // relaxed: monitoring read of an independent counter.
         self.served.load(Ordering::Relaxed)
     }
 
@@ -844,6 +786,8 @@ impl SessionSnapshot {
             record_abort(reason);
             return Err(QueryAborted { reason, units_done: 0, units_total: 0 }.into());
         }
+        // relaxed: served is a pure tally — exact under the RMW total
+        // order, publishing nothing else.
         let reused = self.served.fetch_add(1, Ordering::Relaxed) > 0;
         let start = Instant::now();
         let mapper = SlotMapper::new(query.size.k(), query.direction);
@@ -1150,13 +1094,16 @@ impl SessionSnapshot {
     /// its row set through this.
     pub fn neighborhood(&self, seeds: &[u32], radius: usize) -> Result<Vec<u32>> {
         let scope = Scope::Neighborhood { seeds: seeds.to_vec(), radius };
-        let sets = if self.overlay.is_empty() {
+        let resolved = if self.overlay.is_empty() {
             self.resolve_scope(&*self.h, &scope, 1)?
         } else {
             let view = OverlayView::new(&self.h, &self.overlay);
             self.resolve_scope(&view, &scope, 1)?
-        }
-        .expect("a neighborhood scope always resolves");
+        };
+        // only Scope::Full resolves to None, and we built a Neighborhood
+        let Some(sets) = resolved else {
+            bail!("internal: neighborhood scope resolved to no member set");
+        };
         let mut out: Vec<u32> =
             sets.members.iter().map(|pv| self.ordering.old_of_new[pv as usize]).collect();
         out.sort_unstable();
@@ -1434,6 +1381,9 @@ fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
                         )
                     }));
                     if out.is_err() {
+                        // relaxed: stop is a pure quiesce hint — the
+                        // panic payload travels through the join result,
+                        // so the flag publishes no data.
                         stop_ref.store(true, Ordering::Relaxed);
                     }
                     out
@@ -1441,7 +1391,9 @@ fn run_enum<G: GraphProbe + Sync, S: EnumSink>(
             })
             .collect();
         for t in handles {
-            match t.join().expect("worker thread join failed") {
+            // a join error is a panic that escaped catch_unwind (can only
+            // be the store above) — fold it into the caught-panic path
+            match t.join().unwrap_or_else(Err) {
                 Ok((m, a)) => {
                     if abort.is_none() {
                         abort = a;
@@ -1545,11 +1497,15 @@ fn drive<G: GraphProbe, H: EmitHandle, const SCOPED: bool>(
             m.steal_batch += claim.batch as u64;
         }
         for j in item.j_start..item.j_end {
+            // relaxed: quiesce hint only — abort data flows via each
+            // worker's return value through the join, and a stale read
+            // costs at most one extra work unit.
             if stop.load(Ordering::Relaxed) {
                 return None;
             }
             if let Some(c) = cancel {
                 if let Some(reason) = c.check() {
+                    // relaxed: same quiesce hint as above.
                     stop.store(true, Ordering::Relaxed);
                     return Some(reason);
                 }

@@ -254,6 +254,9 @@ impl InstanceEmitHandle<'_> {
             sh.recs.extend(self.buf.drain(..take));
         }
         if sh.recs.len() >= self.sink.limit {
+            // relaxed: `full` is a hint that lets emitters skip
+            // buffering; the record list itself is published by the
+            // mutex above, never by this flag.
             self.sink.full.store(true, Ordering::Relaxed);
         }
         // anything left in the buffer found the list full: drop it (it
@@ -267,6 +270,8 @@ impl EmitHandle for InstanceEmitHandle<'_> {
     fn emit(&mut self, ev: MotifEvent<'_>) {
         self.seen += 1;
         self.per_class[ev.class_slot as usize] += 1;
+        // relaxed: advisory fast-path check — a stale read just buffers
+        // a few more records, which drain() then drops under the mutex.
         if self.sink.full.load(Ordering::Relaxed) {
             return;
         }
@@ -687,6 +692,9 @@ impl WorkerHandle for PartitionLocalHandle<'_> {
                 debug_assert!(idx < self.local.len());
                 self.local[idx] += 1;
             } else {
+                // relaxed: commutative tally into a shared slot; the
+                // final values are published to the merging thread by
+                // the worker join, not by these RMWs.
                 self.sink.global[v as usize * c + slot as usize].fetch_add(1, Ordering::Relaxed);
             }
         }
@@ -695,6 +703,7 @@ impl WorkerHandle for PartitionLocalHandle<'_> {
     fn flush(&mut self) {
         let c = self.sink.n_classes;
         let base = self.lo as usize * c;
+        // relaxed: commutative tallies (see record); the join publishes.
         for (i, x) in self.local.iter_mut().enumerate() {
             if *x != 0 {
                 self.sink.global[base + i].fetch_add(*x, Ordering::Relaxed);

@@ -1,0 +1,112 @@
+//! The epoch-stamped snapshot cell: the lock-free read path under every
+//! concurrent session.
+//!
+//! [`SnapshotCell<T>`] is the shared head pointer of one session — the
+//! current snapshot plus weak references to superseded epochs readers
+//! may still be pinning. Readers call [`SnapshotCell::head`] (an `Arc`
+//! clone under a read lock held only for the pointer copy); writers
+//! publish a successor with [`SnapshotCell::commit`] (a pointer swap).
+//! Readers therefore never wait on an in-flight write batch, and
+//! writers never wait on in-flight queries — those keep their pinned
+//! epoch alive by refcount, so eviction or compaction can't free state
+//! under a running query.
+//!
+//! The cell is generic over the [`Snapshot`] contract so its
+//! synchronization can be model-checked in isolation: `cfg(loom)`
+//! builds compile this module (via [`crate::sync`]) against loom's
+//! instrumented primitives and `tests/loom_models.rs` drives it with a
+//! tiny test snapshot, while production uses
+//! `engine::session::SnapshotCell` — an alias instantiated with
+//! `SessionSnapshot`.
+
+use crate::sync::{Arc, Mutex, RwLock, Weak};
+
+/// What the cell needs from an epoch snapshot: a monotone commit stamp
+/// and byte accounting for the pool's memory budget.
+pub trait Snapshot {
+    /// Monotone epoch stamp: fixed at construction, +1 per committed
+    /// successor.
+    fn epoch(&self) -> u64;
+    /// Resident bytes of this snapshot alone.
+    fn memory_bytes(&self) -> usize;
+    /// Bytes this snapshot holds that `head` does not share — what a
+    /// pinned superseded epoch costs on top of the head.
+    fn retained_vs(&self, head: &Self) -> usize;
+}
+
+/// The shared head pointer of one session. See the module docs for the
+/// reader/writer protocol.
+pub struct SnapshotCell<T: Snapshot> {
+    head: RwLock<Arc<T>>,
+    superseded: Mutex<Vec<Weak<T>>>,
+}
+
+impl<T: Snapshot> SnapshotCell<T> {
+    /// Wrap the initial epoch as the head.
+    pub fn new(head: Arc<T>) -> SnapshotCell<T> {
+        SnapshotCell { head: RwLock::new(head), superseded: Mutex::new(Vec::new()) }
+    }
+
+    /// Pin the current head snapshot: one `Arc` clone.
+    pub fn head(&self) -> Arc<T> {
+        self.head.read().expect("snapshot head lock poisoned").clone()
+    }
+
+    /// Publish `next` as the new head. The old head is remembered as a
+    /// weak reference: still-pinned readers keep it alive, and the cell
+    /// reports it in [`SnapshotCell::pinned_snapshots`] /
+    /// [`SnapshotCell::retained_bytes`] until the last pin drops.
+    pub fn commit(&self, next: Arc<T>) {
+        let mut head = self.head.write().expect("snapshot head lock poisoned");
+        let old = std::mem::replace(&mut *head, next);
+        drop(head);
+        let mut superseded = self.superseded.lock().expect("superseded list poisoned");
+        superseded.retain(|w| w.strong_count() > 0);
+        superseded.push(Arc::downgrade(&old));
+        // `old` drops here: unpinned epochs die immediately
+    }
+
+    /// Epoch of the current head snapshot.
+    pub fn epoch(&self) -> u64 {
+        self.head().epoch()
+    }
+
+    /// Snapshots currently pinned outside this cell: in-flight readers
+    /// of the head plus still-alive superseded epochs.
+    pub fn pinned_snapshots(&self) -> usize {
+        let head_pins = {
+            let head = self.head.read().expect("snapshot head lock poisoned");
+            Arc::strong_count(&head).saturating_sub(1)
+        };
+        let old_pins = self
+            .superseded
+            .lock()
+            .expect("superseded list poisoned")
+            .iter()
+            .filter(|w| w.strong_count() > 0)
+            .count();
+        head_pins + old_pins
+    }
+
+    /// Bytes kept alive by superseded-but-pinned epochs beyond what the
+    /// head already accounts for: per alive epoch, the components not
+    /// shared with the head (epochs sharing state with *each other* are
+    /// each counted, so this is an upper bound).
+    pub fn retained_bytes(&self) -> usize {
+        let head = self.head();
+        self.superseded
+            .lock()
+            .expect("superseded list poisoned")
+            .iter()
+            .filter_map(Weak::upgrade)
+            .map(|s| s.retained_vs(&head))
+            .sum()
+    }
+
+    /// Total resident bytes: the head snapshot plus retained epochs —
+    /// the number the session pool's byte budget meters, computable
+    /// without the writer lock.
+    pub fn resident_bytes(&self) -> usize {
+        self.head().memory_bytes() + self.retained_bytes()
+    }
+}

@@ -136,16 +136,67 @@
 //!     println!("up {:.0}s, {} requests", process.uptime_secs, process.total_requests());
 //! }
 //! ```
+//!
+//! ## Correctness tooling
+//!
+//! The hand-rolled concurrency core — [`engine::snapshot`] epoch
+//! commits, [`engine::cancel`] first-reason-wins CAS,
+//! [`engine::deque`] claim/steal, `service::admission` RAII permits and
+//! the [`telemetry::metrics`] atomic histogram — imports every lock and
+//! atomic from the [`sync`] shim, and four analysis layers check it
+//! (ARCHITECTURE.md §12–§13 document the memory-order discipline):
+//!
+//! - **loom models** (exhaustive interleavings): `cargo test -p vdmc
+//!   --release --test loom_models` with `RUSTFLAGS="--cfg loom"`.
+//!   Offline this runs against the vendored bounded-stress stand-in; CI
+//!   swaps in the real `loom = "0.7"` with `LOOM_MAX_PREEMPTIONS=3`.
+//! - **Miri** (UB and provenance on the tagged unit subset):
+//!   `cargo +nightly miri test -p vdmc --lib miri_`.
+//! - **ThreadSanitizer** (data races on the stress binaries):
+//!   `RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std
+//!   --target x86_64-unknown-linux-gnu -p vdmc --release --test
+//!   concurrency_stress`.
+//! - **`cargo xtask lint`** (std-only source analyzer, see
+//!   `rust/xtask`): every `Ordering::Relaxed` needs a `// relaxed:`
+//!   justification, every `unsafe` block a `// SAFETY:` comment, no
+//!   `.unwrap()`/`.expect()` on the request path, and no `std::sync`
+//!   imports around the shim in ported modules.
 
+// `--cfg loom` (model-checking) builds compile only the lock-free core
+// and its dependencies: the shim, the extracted concurrency modules and
+// `util`. Everything else is gated out — loom's instrumented types
+// cannot live in statics, and the models only drive the extracted
+// structures anyway.
+#[cfg(not(loom))]
 pub mod baselines;
+#[cfg(not(loom))]
 pub mod coordinator;
 pub mod engine;
+#[cfg(not(loom))]
 pub mod graph;
+#[cfg(not(loom))]
 pub mod motifs;
+#[cfg(not(loom))]
 pub mod runtime;
+#[cfg(not(loom))]
 pub mod service;
+/// Loom build of [`service`]: only the admission gate compiles.
+#[cfg(loom)]
+pub mod service {
+    pub mod admission;
+}
+#[cfg(not(loom))]
 pub mod stream;
+pub mod sync;
+#[cfg(not(loom))]
 pub mod telemetry;
+/// Loom build of [`telemetry`]: only the metrics instruments compile.
+#[cfg(loom)]
+pub mod telemetry {
+    pub mod metrics;
+}
+#[cfg(not(loom))]
 pub mod theory;
+#[cfg(not(loom))]
 pub mod toolbox;
 pub mod util;

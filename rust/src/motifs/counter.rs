@@ -99,6 +99,9 @@ impl AtomicCounter {
     /// Record one instance: +1 for every member vertex in `slot`.
     #[inline]
     pub fn record(&self, verts: &[u32], slot: u16) {
+        // relaxed: commutative tallies — updates are exact under each
+        // location's RMW total order, and the totals are published to
+        // the reader by the worker join, not by these RMWs.
         self.instances.fetch_add(1, Ordering::Relaxed);
         for &v in verts {
             self.counts[v as usize * self.n_classes + slot as usize]
@@ -107,6 +110,7 @@ impl AtomicCounter {
     }
 
     pub fn instances(&self) -> u64 {
+        // relaxed: monitoring read of an independent counter.
         self.instances.load(Ordering::Relaxed)
     }
 
@@ -133,10 +137,24 @@ impl ShardCounter {
     pub fn record(&mut self, verts: &[u32], slot: u16) {
         self.instances += 1;
         for &v in verts {
+            // the two invariants are asserted separately so a debug
+            // failure names the component that broke its contract
+            debug_assert!(
+                (slot as usize) < self.n_classes,
+                "class slot {slot} out of range (n_classes={}, SlotMapper contract)",
+                self.n_classes
+            );
             let idx = v as usize * self.n_classes + slot as usize;
-            debug_assert!(idx < self.counts.len());
-            // SAFETY: v < n (enumerator invariant) and slot < n_classes
-            // (SlotMapper invariant); checked in debug builds above.
+            debug_assert!(
+                idx < self.counts.len(),
+                "vertex {v} out of range ({} count slots, enumerator contract)",
+                self.counts.len()
+            );
+            // SAFETY: slot < n_classes (SlotMapper emits only mapped
+            // slots) and v < n (the enumerator only visits graph
+            // vertices), so idx = v*n_classes + slot < n*n_classes =
+            // counts.len(); both contracts are checked in debug builds
+            // above and exercised under Miri by miri_record_stays_in_bounds.
             unsafe { *self.counts.get_unchecked_mut(idx) += 1 };
         }
     }
@@ -233,6 +251,25 @@ impl MotifCounts {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn miri_record_stays_in_bounds() {
+        // Miri-tagged: drives the get_unchecked_mut fast path across the
+        // full index range (first and last vertex, first and last class
+        // slot) so provenance and bounds of the unchecked write are
+        // checked under the interpreter.
+        let n = 4;
+        let n_classes = 3;
+        let mut c = ShardCounter::new(n, n_classes);
+        c.record(&[0, 3], 0);
+        c.record(&[3], (n_classes - 1) as u16);
+        c.record(&[1, 2, 3], 1);
+        assert_eq!(c.instances, 3);
+        assert_eq!(c.counts[0], 1, "vertex 0, slot 0");
+        assert_eq!(c.counts[3 * n_classes], 1, "vertex 3, slot 0");
+        assert_eq!(c.counts[3 * n_classes + n_classes - 1], 1, "last slot of last vertex");
+        assert_eq!(c.counts.iter().sum::<u64>(), 6, "one bump per member vertex");
+    }
 
     #[test]
     fn directed_mapper_is_identity_on_table() {

@@ -58,9 +58,29 @@ impl TensorData<'_> {
     }
 }
 
-fn bytemuck_cast<T>(xs: &[T]) -> &[u8] {
-    // safe for plain-old-data numeric slices
-    unsafe { std::slice::from_raw_parts(xs.as_ptr() as *const u8, std::mem::size_of_val(xs)) }
+/// Marker for plain-old-data scalars with no padding and no invalid bit
+/// patterns — the only element types [`bytemuck_cast`] accepts. Private,
+/// so the impl list below (exactly the PJRT buffer element types) is
+/// closed.
+trait Pod: Copy + 'static {}
+impl Pod for f32 {}
+impl Pod for i32 {}
+
+/// View a POD numeric slice as its raw bytes for buffer upload.
+fn bytemuck_cast<T: Pod>(xs: &[T]) -> &[u8] {
+    // compile-time: a zero-sized or unexpectedly-padded element type
+    // would break the size_of_val length math below
+    const {
+        assert!(std::mem::size_of::<T>() > 0);
+        assert!(std::mem::size_of::<T>() % std::mem::align_of::<T>() == 0);
+    }
+    // SAFETY: `T: Pod` (sealed: f32/i32 only) has no padding or invalid
+    // bit patterns, so every byte of the slice is initialized; pointer
+    // and length describe the same live `&[T]` borrow, whose lifetime
+    // the returned `&[u8]` inherits; u8's alignment of 1 is satisfied by
+    // any pointer; size_of_val is the exact byte length of that borrow,
+    // which already fits in isize.
+    unsafe { std::slice::from_raw_parts(xs.as_ptr().cast::<u8>(), std::mem::size_of_val(xs)) }
 }
 
 /// Compiled-artifact cache over one PJRT client.
@@ -250,6 +270,21 @@ mod tests {
     fn padded_classes_contract() {
         assert_eq!(padded_classes(3), 128);
         assert_eq!(padded_classes(4), 256);
+    }
+
+    #[test]
+    fn miri_bytemuck_cast_views_exact_bytes() {
+        // Miri-tagged: the raw-parts byte view is checked for provenance,
+        // bounds and initialized-ness under the interpreter, including
+        // the empty-slice edge where the pointer is dangling-but-aligned.
+        let xs = [f32::MIN_POSITIVE, -0.0, f32::NAN, 3.5];
+        let bytes = bytemuck_cast(&xs);
+        assert_eq!(bytes.len(), std::mem::size_of_val(&xs));
+        assert_eq!(&bytes[12..16], &3.5f32.to_le_bytes());
+        let empty: &[i32] = &[];
+        assert_eq!(bytemuck_cast(empty), &[] as &[u8]);
+        let ys = [i32::MAX, i32::MIN];
+        assert_eq!(&bytemuck_cast(&ys)[0..4], &i32::MAX.to_le_bytes());
     }
 
     #[test]

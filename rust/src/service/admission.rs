@@ -1,0 +1,100 @@
+//! The admission gate: one fetch-add counter and an RAII permit.
+//!
+//! Admission control's *policy* (which caps apply, what `Overloaded`
+//! advice a shed request gets) lives in [`super`]; this module holds
+//! only the *mechanism* — the shared inflight counter whose balance
+//! must survive panics, early shed returns and every interleaving of
+//! concurrent requests. It imports its atomics from [`crate::sync`], so
+//! `tests/loom_models.rs` proves permit balance (slots released exactly
+//! once, never negative, never leaked) across all interleavings.
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
+
+/// Counts requests currently past admission and enumerating. Every
+/// entry hands out an [`AdmissionPermit`] that releases the slot on
+/// drop, so a panicking request can't leak its slot.
+pub struct AdmissionGate {
+    enumerating: AtomicUsize,
+}
+
+impl Default for AdmissionGate {
+    // hand-written (not derived): loom's AtomicUsize has no Default
+    fn default() -> AdmissionGate {
+        AdmissionGate::new()
+    }
+}
+
+impl AdmissionGate {
+    pub fn new() -> AdmissionGate {
+        AdmissionGate { enumerating: AtomicUsize::new(0) }
+    }
+
+    /// Take one slot unconditionally and return the post-increment
+    /// inflight count (this request included) plus the RAII permit
+    /// holding the slot. The caller applies its caps to the count and
+    /// either keeps the permit for the enumeration's lifetime or drops
+    /// it to shed — both paths, as well as an unwind between them,
+    /// release the slot exactly once.
+    pub fn enter(&self) -> (usize, AdmissionPermit<'_>) {
+        // relaxed: the counter is the only shared state — admission
+        // decisions need an atomic count, not an ordering of the
+        // requests' other memory; the RMW total order on `enumerating`
+        // alone makes the cap exact.
+        let inflight = self.enumerating.fetch_add(1, Ordering::Relaxed) + 1;
+        (inflight, AdmissionPermit { enumerating: &self.enumerating })
+    }
+
+    /// Requests currently holding a slot.
+    pub fn inflight(&self) -> usize {
+        // relaxed: monitoring read of an independent counter.
+        self.enumerating.load(Ordering::Relaxed)
+    }
+}
+
+/// RAII admission slot: dropping it (normal return, error, or unwind)
+/// releases the concurrency slot.
+pub struct AdmissionPermit<'a> {
+    enumerating: &'a AtomicUsize,
+}
+
+impl Drop for AdmissionPermit<'_> {
+    fn drop(&mut self) {
+        // relaxed: pairs with the fetch-add in `enter` on the same
+        // location; the RMW total order keeps the balance exact.
+        self.enumerating.fetch_sub(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miri_permits_balance() {
+        let gate = AdmissionGate::new();
+        let (inflight, p1) = gate.enter();
+        assert_eq!(inflight, 1);
+        let (inflight, p2) = gate.enter();
+        assert_eq!(inflight, 2);
+        drop(p1);
+        assert_eq!(gate.inflight(), 1);
+        drop(p2);
+        assert_eq!(gate.inflight(), 0);
+        // shed path: enter then drop immediately
+        let (inflight, permit) = gate.enter();
+        assert_eq!(inflight, 1);
+        drop(permit);
+        assert_eq!(gate.inflight(), 0);
+    }
+
+    #[test]
+    fn miri_permit_released_on_unwind() {
+        let gate = AdmissionGate::new();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let (_inflight, _permit) = gate.enter();
+            panic!("boom");
+        }));
+        assert!(result.is_err());
+        assert_eq!(gate.inflight(), 0);
+    }
+}

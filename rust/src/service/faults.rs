@@ -86,8 +86,10 @@ mod armed {
         if action == "clear" {
             // scoped clear: with a graph, only that scope's faults go;
             // without one, the whole site is disarmed
-            let mut faults = FAULTS.lock().expect("fault registry poisoned");
+            let mut faults = lock_registry();
             faults.retain(|f| !(f.site == site && (graph.is_none() || f.graph == graph)));
+            // relaxed: advisory fast-path latch — the registry itself is
+            // published by the FAULTS mutex, never by this flag.
             ANY.store(!faults.is_empty(), Ordering::Relaxed);
             return Ok(());
         }
@@ -97,25 +99,38 @@ mod armed {
             "error" => Action::Error,
             other => bail!("unknown fault action {other:?} (panic, delay, error, clear)"),
         };
-        let mut faults = FAULTS.lock().expect("fault registry poisoned");
+        let mut faults = lock_registry();
         faults.push(Fault { site: site.to_string(), action, remaining: count, graph });
+        // relaxed: advisory latch, see above.
         ANY.store(true, Ordering::Relaxed);
         Ok(())
     }
 
     pub fn disarm_all() {
-        FAULTS.lock().expect("fault registry poisoned").clear();
+        lock_registry().clear();
+        // relaxed: advisory latch, see above.
         ANY.store(false, Ordering::Relaxed);
+    }
+
+    /// The registry holds plain data and every mutation is a complete,
+    /// self-consistent edit, so a panic while the lock was held (e.g. an
+    /// injected `commit` panic unwinding through an armed test) leaves
+    /// nothing half-written — recover the guard instead of poisoning the
+    /// whole harness for the rest of the process.
+    fn lock_registry() -> std::sync::MutexGuard<'static, Vec<Fault>> {
+        FAULTS.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Claim one fire of the first armed fault matching (site, tag).
     /// Error-action faults are only claimable by fail points, so a
     /// plain `hit` site never burns their budget without effect.
     fn claim(site: &str, tag: Option<&str>, take_error: bool) -> Option<Action> {
+        // relaxed: fast-path skip only — a stale false misses at most
+        // one in-flight arm, and any true is re-checked under the lock.
         if !ANY.load(Ordering::Relaxed) {
             return None;
         }
-        let mut faults = FAULTS.lock().expect("fault registry poisoned");
+        let mut faults = lock_registry();
         let idx = faults.iter().position(|f| {
             f.site == site
                 && (take_error || f.action != Action::Error)
@@ -130,6 +145,7 @@ mod armed {
             faults[idx].remaining -= 1;
             if faults[idx].remaining == 0 {
                 faults.remove(idx);
+                // relaxed: advisory latch, see `arm`.
                 ANY.store(!faults.is_empty(), Ordering::Relaxed);
             }
         }

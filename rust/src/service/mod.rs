@@ -72,6 +72,7 @@
 //! datasets) plugs in *below* this API: clients keep sending the same
 //! requests.
 
+pub mod admission;
 pub mod api;
 pub mod faults;
 pub mod pool;
@@ -83,7 +84,6 @@ pub use pool::{GraphStat, OpLatency, PoolStats, SessionPool, REQUEST_SECONDS};
 pub use serve::{serve_connection, serve_tcp, ServeOptions, TcpServeSummary};
 
 use std::fmt;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
@@ -215,9 +215,9 @@ struct ServiceInner {
     telemetry: ServiceTelemetry,
     admission: AdmissionConfig,
     /// Requests currently past admission and enumerating (RAII-guarded
-    /// by [`AdmissionPermit`], so a panicking request releases its
-    /// slot).
-    enumerating: AtomicUsize,
+    /// by [`admission::AdmissionPermit`], so a panicking request
+    /// releases its slot).
+    gate: admission::AdmissionGate,
 }
 
 /// Per-service observability state: the metrics registry every layer
@@ -354,20 +354,8 @@ pub const WRITER_RECOVERIES_TOTAL: &str = "vdmc_writer_recoveries_total";
 const HELP_WRITER_RECOVERIES: &str =
     "Poisoned per-graph writers rebuilt from the last committed snapshot.";
 
-/// RAII admission slot: dropping it (normal return, error, or unwind)
-/// releases the concurrency slot.
-struct AdmissionPermit<'a> {
-    enumerating: &'a AtomicUsize,
-}
-
-impl Drop for AdmissionPermit<'_> {
-    fn drop(&mut self) {
-        self.enumerating.fetch_sub(1, Ordering::Relaxed);
-    }
-}
-
 /// Best-effort text of a caught panic payload.
-fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
+pub(crate) fn panic_text(payload: &(dyn std::any::Any + Send)) -> String {
     if let Some(s) = payload.downcast_ref::<&str>() {
         (*s).to_string()
     } else if let Some(s) = payload.downcast_ref::<String>() {
@@ -398,7 +386,7 @@ impl VdmcService {
                 )),
                 telemetry: ServiceTelemetry::new(&cfg.telemetry, registry),
                 admission: cfg.admission,
-                enumerating: AtomicUsize::new(0),
+                gate: admission::AdmissionGate::new(),
             }),
         }
     }
@@ -591,14 +579,20 @@ impl VdmcService {
                 // no n-sized materialization on the lookup path
                 let mut rows = Vec::with_capacity(vertices.len());
                 for v in vertices {
-                    let row = snap.maintained_vertex(size, direction, v).expect("validated above");
+                    // validated above, but a vanished row must answer as
+                    // a per-request error, not a process abort
+                    let Some(row) = snap.maintained_vertex(size, direction, v) else {
+                        bail!("internal: maintained row for vertex {v} missing from pinned epoch");
+                    };
                     rows.push(VertexRow { vertex: v, counts: row.to_vec() });
                 }
                 let m = snap
                     .maintained()
                     .iter()
                     .find(|m| m.size() == size && m.direction() == direction)
-                    .expect("maintained just above");
+                    .ok_or_else(|| {
+                        anyhow!("internal: counter maintained just above missing from epoch")
+                    })?;
                 Ok(Response::VertexRows {
                     graph,
                     size,
@@ -634,7 +628,9 @@ impl VdmcService {
                     .iter()
                     .find(|m| m.size() == size && m.direction() == direction)
                     .map(|m| m.instances())
-                    .expect("maintained just above");
+                    .ok_or_else(|| {
+                        anyhow!("internal: counter maintained just above missing from session")
+                    })?;
                 drop(session);
                 drop(writer);
                 self.lock_pool().update_bytes(&graph);
@@ -736,12 +732,11 @@ impl VdmcService {
     /// Take one admission slot, or shed. The inflight count includes
     /// this request, so the cap is exact: with `max_inflight = k`, the
     /// k+1-th concurrent enumeration sheds.
-    fn admit(&self) -> Result<AdmissionPermit<'_>> {
+    fn admit(&self) -> Result<admission::AdmissionPermit<'_>> {
         let adm = &self.inner.admission;
-        let inflight = self.inner.enumerating.fetch_add(1, Ordering::Relaxed) + 1;
-        // construct the permit immediately: every early return below
-        // must release the slot it just took
-        let permit = AdmissionPermit { enumerating: &self.inner.enumerating };
+        // the gate hands the permit out with the count: every early
+        // return below releases the slot it just took
+        let (inflight, permit) = self.inner.gate.enter();
         let over_inflight = adm.max_inflight > 0 && inflight > adm.max_inflight;
         let resident_bytes = if adm.max_resident_bytes > 0 {
             self.lock_pool().resident_bytes()

@@ -286,7 +286,13 @@ fn serve_conn_inner<R: BufRead, W: Write + Send>(
         // every queued request and exits — the drain the protocol
         // promises. A half-close does NOT cancel pipelined requests.
         drop(tx);
-        handler.join().expect("connection handler thread panicked")
+        handler.join().unwrap_or_else(|panic| {
+            // a handler panic (e.g. an injected `wire_encode` fault) must
+            // not take the whole server down with it — surface it as this
+            // connection's terminal error instead
+            let msg = super::panic_text(panic.as_ref());
+            (0, 0, Some(io::Error::other(format!("connection handler panicked: {msg}"))))
+        })
     });
     (served, aborted, read_err.or(write_err))
 }
@@ -345,7 +351,7 @@ pub fn serve_tcp(
                     let conn = CancelToken::new();
                     conns
                         .lock()
-                        .expect("conn registry poisoned")
+                        .unwrap_or_else(|e| e.into_inner())
                         .push((id, handle, conn.clone()));
                     active.fetch_add(1, Ordering::SeqCst);
                     clients.fetch_add(1, Ordering::SeqCst);
@@ -359,7 +365,7 @@ pub fn serve_tcp(
                         aborts.fetch_add(a, Ordering::SeqCst);
                         conns
                             .lock()
-                            .expect("conn registry poisoned")
+                            .unwrap_or_else(|e| e.into_inner())
                             .retain(|(c, _, _)| *c != id);
                         active.fetch_sub(1, Ordering::SeqCst);
                     });
@@ -378,7 +384,9 @@ pub fn serve_tcp(
         // (answered as a typed Shutdown abort); shutting down each read
         // side EOFs its loop, which flushes in-flight responses and
         // exits. The scope then joins every connection thread.
-        for (_, c, token) in conns.lock().expect("conn registry poisoned").iter() {
+        // push/retain edits are single complete statements, so a guard
+        // recovered from a poisoned lock still sees a consistent list
+        for (_, c, token) in conns.lock().unwrap_or_else(|e| e.into_inner()).iter() {
             token.cancel(AbortReason::Shutdown);
             let _ = c.shutdown(Shutdown::Read);
         }

@@ -488,6 +488,11 @@ pub fn encode_response(
 /// Encode a failure line. The daemon answers malformed or failed requests
 /// with these and keeps reading.
 pub fn encode_error(op: Option<&str>, id: Option<u64>, trace: Option<&str>, error: &str) -> String {
+    error_obj(op, id, trace, error).to_string_compact()
+}
+
+/// Shared failure envelope of [`encode_error`] / [`encode_failure`].
+fn error_obj(op: Option<&str>, id: Option<u64>, trace: Option<&str>, error: &str) -> Json {
     let mut j = Json::obj();
     j.set("ok", false).set("op", op.unwrap_or("?")).set("error", error);
     if let Some(id) = id {
@@ -496,7 +501,7 @@ pub fn encode_error(op: Option<&str>, id: Option<u64>, trace: Option<&str>, erro
     if let Some(trace) = trace {
         j.set("trace", trace);
     }
-    j.to_string_compact()
+    j
 }
 
 /// Encode a typed handler failure. Like [`encode_error`], but two
@@ -510,8 +515,7 @@ pub fn encode_failure(
     trace: Option<&str>,
     error: &anyhow::Error,
 ) -> String {
-    let line = encode_error(op, id, trace, &format!("{error:#}"));
-    let mut j = Json::parse(&line).expect("encode_error emits valid JSON");
+    let mut j = error_obj(op, id, trace, &format!("{error:#}"));
     if let Some(aborted) = error.downcast_ref::<QueryAborted>() {
         let mut a = Json::obj();
         a.set("reason", aborted.reason.label())

@@ -21,8 +21,8 @@
 //! `count` ahead of its buckets. That is fine for monitoring and never
 //! produces negative rates.
 
-use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use crate::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use crate::sync::{Arc, Mutex};
 
 /// Lowest histogram bucket upper bound, in seconds (1 µs).
 pub const HIST_FIRST_BOUND: f64 = 1e-6;
@@ -38,8 +38,23 @@ pub fn bucket_bound(i: usize) -> f64 {
 }
 
 /// Monotonically increasing counter (relaxed atomic u64).
-#[derive(Debug, Default)]
+#[cfg_attr(not(loom), derive(Debug))]
 pub struct Counter(AtomicU64);
+
+// hand-written (not derived): loom's atomics implement neither Default
+// nor (reliably) Debug
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+}
+
+#[cfg(loom)]
+impl std::fmt::Debug for Counter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Counter")
+    }
+}
 
 impl Counter {
     pub fn inc(&self) {
@@ -47,6 +62,9 @@ impl Counter {
     }
 
     pub fn add(&self, n: u64) {
+        // relaxed: pure tally — the RMW total order on the counter makes
+        // concurrent adds exact, and readers consume the value alone, so
+        // no other memory needs to be published with it.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
@@ -56,24 +74,45 @@ impl Counter {
     /// [`Counter::inc`]/[`Counter::add`] instead. Mixing both on one
     /// counter would lose increments.
     pub fn store(&self, v: u64) {
+        // relaxed: absolute mirror of a mutex-guarded source of truth;
+        // scrapes tolerate loose ordering (module docs).
         self.0.store(v, Ordering::Relaxed);
     }
 
     pub fn get(&self) -> u64 {
+        // relaxed: monitoring read of an independent value.
         self.0.load(Ordering::Relaxed)
     }
 }
 
 /// Point-in-time value that can go up and down (relaxed atomic i64).
-#[derive(Debug, Default)]
+#[cfg_attr(not(loom), derive(Debug))]
 pub struct Gauge(AtomicI64);
+
+// hand-written (not derived): loom's atomics implement neither Default
+// nor (reliably) Debug
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge(AtomicI64::new(0))
+    }
+}
+
+#[cfg(loom)]
+impl std::fmt::Debug for Gauge {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Gauge")
+    }
+}
 
 impl Gauge {
     pub fn set(&self, v: i64) {
+        // relaxed: point-in-time monitoring value, no data published
+        // alongside it.
         self.0.store(v, Ordering::Relaxed);
     }
 
     pub fn add(&self, d: i64) {
+        // relaxed: tally — RMW total order keeps concurrent deltas exact.
         self.0.fetch_add(d, Ordering::Relaxed);
     }
 
@@ -86,12 +125,13 @@ impl Gauge {
     }
 
     pub fn get(&self) -> i64 {
+        // relaxed: monitoring read of an independent value.
         self.0.load(Ordering::Relaxed)
     }
 }
 
 /// Fixed exponential-bucket latency histogram (seconds).
-#[derive(Debug)]
+#[cfg_attr(not(loom), derive(Debug))]
 pub struct Histogram {
     /// Per-bucket (non-cumulative) sample counts; index
     /// [`HIST_FINITE_BUCKETS`] is the overflow (+Inf) bucket.
@@ -111,6 +151,13 @@ fn bucket_index(secs: f64) -> usize {
     idx
 }
 
+#[cfg(loom)]
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("Histogram")
+    }
+}
+
 impl Histogram {
     fn new() -> Histogram {
         Histogram {
@@ -125,16 +172,22 @@ impl Histogram {
     /// always matches the number of `record` calls.
     pub fn record(&self, secs: f64) {
         let v = if secs.is_finite() && secs > 0.0 { secs } else { 0.0 };
+        // relaxed: three independent tallies; each RMW is exact on its
+        // own location, and the module-documented contract is that a
+        // concurrent snapshot may see count ahead of the buckets — never
+        // a lost sample, never a negative rate.
         self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_nanos.fetch_add((v * 1e9).round() as u64, Ordering::Relaxed);
     }
 
     pub fn count(&self) -> u64 {
+        // relaxed: monitoring read (loosely consistent, module docs).
         self.count.load(Ordering::Relaxed)
     }
 
     pub fn sum_secs(&self) -> f64 {
+        // relaxed: monitoring read (loosely consistent, module docs).
         self.sum_nanos.load(Ordering::Relaxed) as f64 / 1e9
     }
 
@@ -157,6 +210,9 @@ impl Histogram {
     pub fn snapshot(&self) -> HistogramSnapshot {
         let mut cum = 0u64;
         let mut buckets = Vec::with_capacity(HIST_FINITE_BUCKETS);
+        // relaxed: loosely-consistent scrape (module docs) — the
+        // snapshot's count is rebuilt from the bucket reads themselves,
+        // so quantile math is internally consistent even mid-record.
         for (i, b) in self.buckets.iter().take(HIST_FINITE_BUCKETS).enumerate() {
             cum += b.load(Ordering::Relaxed);
             buckets.push((bucket_bound(i), cum));

@@ -122,6 +122,8 @@ static TRACE_SEQ: AtomicU64 = AtomicU64::new(0);
 /// Generate a trace id for a request that did not supply one: process
 /// id + wall-clock nanos + a process-wide sequence number.
 pub fn gen_trace_id() -> String {
+    // relaxed: uniqueness needs only the RMW total order on the
+    // sequence counter; nothing else is published with an id.
     let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
     let nanos = SystemTime::now()
         .duration_since(UNIX_EPOCH)
@@ -236,10 +238,13 @@ impl LogLevel {
 static LOG_LEVEL: AtomicU8 = AtomicU8::new(LogLevel::Info as u8);
 
 pub fn set_log_level(level: LogLevel) {
+    // relaxed: standalone configuration flag — readers act on the level
+    // value alone, and a briefly stale read only delays a log line.
     LOG_LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
 pub fn log_level() -> LogLevel {
+    // relaxed: see set_log_level — value-only flag, staleness harmless.
     match LOG_LEVEL.load(Ordering::Relaxed) {
         0 => LogLevel::Off,
         1 => LogLevel::Error,

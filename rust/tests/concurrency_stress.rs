@@ -1,0 +1,278 @@
+//! Concurrency stress: the ThreadSanitizer target for the lock-free core.
+//!
+//! These tests race the same structures the loom models check
+//! (`tests/loom_models.rs`), but on real OS threads at real scale, so
+//! they double as the `-Zsanitizer=thread` binaries in CI's `tsan` job:
+//!
+//! ```text
+//! RUSTFLAGS="-Zsanitizer=thread" cargo +nightly test -Zbuild-std \
+//!     --target x86_64-unknown-linux-gnu -p vdmc --release \
+//!     --test concurrency_stress
+//! ```
+//!
+//! Under a plain `cargo test` they run as fast bounded stress (tier-1
+//! keeps them cheap); under TSan every interleaving that *does* happen
+//! is checked for data races at the hardware level — complementing
+//! loom's exhaustive-but-small state spaces with big-but-sampled ones.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::thread;
+
+use vdmc::engine::cancel::{AbortReason, CancelToken};
+use vdmc::engine::deque::{CursorQueue, StealDeques};
+use vdmc::engine::snapshot::{Snapshot, SnapshotCell};
+use vdmc::service::admission::AdmissionGate;
+use vdmc::telemetry::metrics::MetricsRegistry;
+
+/// Same minimal snapshot as the loom models: epoch stamp + fixed size.
+struct TestSnap {
+    epoch: u64,
+    bytes: usize,
+}
+
+impl TestSnap {
+    fn new(epoch: u64) -> Arc<TestSnap> {
+        Arc::new(TestSnap { epoch, bytes: 100 })
+    }
+}
+
+impl Snapshot for TestSnap {
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+    fn memory_bytes(&self) -> usize {
+        self.bytes
+    }
+    fn retained_vs(&self, head: &TestSnap) -> usize {
+        if self.epoch == head.epoch {
+            0
+        } else {
+            self.bytes
+        }
+    }
+}
+
+#[test]
+fn snapshot_readers_race_a_committing_writer() {
+    const COMMITS: u64 = 50;
+    const READS: usize = 200;
+    let cell = Arc::new(SnapshotCell::new(TestSnap::new(0)));
+    thread::scope(|scope| {
+        for _ in 0..3 {
+            scope.spawn(|| {
+                let mut last = 0u64;
+                for _ in 0..READS {
+                    let pin = cell.head();
+                    let epoch = pin.epoch();
+                    assert!(epoch >= last, "epoch went backwards: {last} -> {epoch}");
+                    assert!(epoch <= COMMITS, "epoch from the future: {epoch}");
+                    // accounting must never undercount a live pin
+                    assert!(cell.pinned_snapshots() >= 1);
+                    last = epoch;
+                }
+            });
+        }
+        scope.spawn(|| {
+            // the single writer (the production role of the per-graph
+            // writer mutex holder) stacks epochs 1..=COMMITS
+            for e in 1..=COMMITS {
+                cell.commit(TestSnap::new(e));
+            }
+        });
+    });
+    assert_eq!(cell.epoch(), COMMITS);
+    assert_eq!(cell.pinned_snapshots(), 0, "all pins dropped with the threads");
+    assert_eq!(cell.retained_bytes(), 0);
+    assert_eq!(cell.resident_bytes(), 100);
+}
+
+#[test]
+fn cancel_children_spawned_during_cancel_all_observe_it() {
+    for _ in 0..50 {
+        let conn = CancelToken::new();
+        let children = thread::scope(|scope| {
+            let canceller = {
+                let conn = conn.clone();
+                scope.spawn(move || {
+                    thread::yield_now();
+                    conn.cancel(AbortReason::ClientGone);
+                })
+            };
+            // spawn children while the cancel is (maybe) in flight —
+            // the serve loop's cancel-vs-spawn race at stress scale
+            let mut children = Vec::new();
+            for i in 0..100 {
+                let child = conn.child(None, Some(format!("req-{i}")));
+                match child.check() {
+                    None | Some(AbortReason::ClientGone) => {}
+                    other => panic!("impossible mid-race reason: {other:?}"),
+                }
+                children.push(child);
+            }
+            canceller.join().unwrap();
+            children
+        });
+        for (i, child) in children.iter().enumerate() {
+            assert_eq!(
+                child.check(),
+                Some(AbortReason::ClientGone),
+                "child {i} lost its parent's cancel"
+            );
+        }
+        assert_eq!(conn.child(None, None).check(), Some(AbortReason::ClientGone));
+    }
+}
+
+#[test]
+fn racing_cancels_elect_exactly_one_winner() {
+    const REASONS: [AbortReason; 4] = [
+        AbortReason::Deadline,
+        AbortReason::ClientGone,
+        AbortReason::Shutdown,
+        AbortReason::Shed,
+    ];
+    for _ in 0..200 {
+        let token = CancelToken::new();
+        let winners: Vec<AbortReason> = thread::scope(|scope| {
+            let handles: Vec<_> = REASONS
+                .iter()
+                .map(|&reason| {
+                    let token = token.clone();
+                    scope.spawn(move || token.cancel(reason).then_some(reason))
+                })
+                .collect();
+            handles.into_iter().filter_map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(winners.len(), 1, "exactly one cancel must win: {winners:?}");
+        assert_eq!(token.check(), Some(winners[0]), "observed reason must be the winner's");
+    }
+}
+
+#[test]
+fn admission_gate_balances_under_stress_and_unwinds() {
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 500;
+    let gate = Arc::new(AdmissionGate::new());
+    thread::scope(|scope| {
+        for t in 0..THREADS {
+            let gate = Arc::clone(&gate);
+            scope.spawn(move || {
+                for round in 0..ROUNDS {
+                    if (round + t) % 7 == 0 {
+                        // permit dropped by unwinding instead of return
+                        let result = catch_unwind(AssertUnwindSafe(|| {
+                            let (inflight, _permit) = gate.enter();
+                            assert!((1..=THREADS).contains(&inflight));
+                            panic!("request died mid-enumeration");
+                        }));
+                        assert!(result.is_err());
+                    } else {
+                        let (inflight, permit) = gate.enter();
+                        assert!((1..=THREADS).contains(&inflight), "inflight {inflight}");
+                        drop(permit);
+                    }
+                }
+            });
+        }
+    });
+    assert_eq!(gate.inflight(), 0, "every slot must be returned exactly once");
+}
+
+#[test]
+fn histogram_stays_exact_under_racing_recorders_and_scrapes() {
+    const THREADS: u64 = 4;
+    const RECORDS: u64 = 1000;
+    let registry = Arc::new(MetricsRegistry::new());
+    let hist = registry.histogram("stress_seconds", "stress test histogram");
+    thread::scope(|scope| {
+        for t in 0..THREADS {
+            let hist = Arc::clone(&hist);
+            scope.spawn(move || {
+                for i in 0..RECORDS {
+                    // spread samples over several buckets deterministically
+                    hist.record(1e-6 * ((t * RECORDS + i) % 64 + 1) as f64);
+                }
+            });
+        }
+        // concurrent scraper: snapshots must be internally consistent
+        // (count rebuilt from bucket reads) and monotone over time
+        let hist = Arc::clone(&hist);
+        scope.spawn(move || {
+            let mut last = 0u64;
+            for _ in 0..100 {
+                let snap = hist.snapshot();
+                assert!(snap.count >= last, "snapshot count regressed");
+                assert!(snap.count <= THREADS * RECORDS, "snapshot invented samples");
+                if snap.count > 0 {
+                    let (p50, p100) = (snap.quantile(0.5), snap.quantile(1.0));
+                    assert!(p50 <= p100, "quantiles must be ordered: {p50} > {p100}");
+                }
+                last = snap.count;
+            }
+        });
+    });
+    let snap = hist.snapshot();
+    assert_eq!(snap.count, THREADS * RECORDS, "no lost records");
+    // all samples lie in (0, 64e-6]: the max estimate sits within one
+    // ×2 bucket-growth factor of the true max
+    let p100 = snap.quantile(1.0);
+    assert!((32e-6..=128e-6).contains(&p100), "p100 {p100} off by over a growth factor");
+}
+
+#[test]
+fn cursor_queue_is_exactly_once_under_racing_claims() {
+    const ITEMS: u32 = 10_000;
+    const WORKERS: usize = 8;
+    let queue = Arc::new(CursorQueue::new((0..ITEMS).collect()));
+    let mut claimed: Vec<u32> = thread::scope(|scope| {
+        let handles: Vec<_> = (0..WORKERS)
+            .map(|_| {
+                let queue = Arc::clone(&queue);
+                scope.spawn(move || {
+                    let mut mine = Vec::new();
+                    while let Some(item) = queue.claim() {
+                        mine.push(item);
+                    }
+                    mine
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    claimed.sort_unstable();
+    assert_eq!(claimed, (0..ITEMS).collect::<Vec<_>>(), "exactly-once claim set");
+}
+
+#[test]
+fn steal_deques_are_exactly_once_under_racing_claims() {
+    const PER_WORKER: u32 = 1000;
+    const WORKERS: usize = 4;
+    for steal_half in [false, true] {
+        let seeds: Vec<Vec<u32>> = (0..WORKERS as u32)
+            .map(|w| (w * PER_WORKER..(w + 1) * PER_WORKER).collect())
+            .collect();
+        let deques = Arc::new(StealDeques::new(seeds, steal_half));
+        let mut claimed: Vec<u32> = thread::scope(|scope| {
+            let handles: Vec<_> = (0..WORKERS)
+                .map(|w| {
+                    let deques = Arc::clone(&deques);
+                    scope.spawn(move || {
+                        let mut mine = Vec::new();
+                        while let Some(c) = deques.claim(w) {
+                            mine.push(c.item);
+                        }
+                        mine
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        claimed.sort_unstable();
+        assert_eq!(
+            claimed,
+            (0..WORKERS as u32 * PER_WORKER).collect::<Vec<_>>(),
+            "exactly-once claim set (steal_half={steal_half})"
+        );
+    }
+}

@@ -1,0 +1,57 @@
+//! Offline stand-in for the [loom](https://docs.rs/loom) model checker.
+//!
+//! The vendored offline registry ships no `loom`, so this crate mirrors
+//! the subset of loom 0.7's surface that `vdmc::sync` and
+//! `tests/loom_models.rs` use, backed by plain `std` primitives.
+//! Semantics degrade from *exhaustive interleaving exploration* to
+//! *bounded stress*: [`model`] re-runs the closure `LOOM_ITERS` times
+//! (default 64) on real OS threads instead of enumerating schedules.
+//!
+//! The CI `loom-models` job swaps this path dependency for the real
+//! `loom = "0.7"` crate (network is available there) and runs the same
+//! test binary exhaustively; this stand-in keeps `--cfg loom` builds
+//! compiling offline and makes a local `cargo test --test loom_models`
+//! a meaningful smoke run. Only the common API subset is exposed, so
+//! code that compiles against the stand-in compiles against real loom.
+
+/// Run `f` under the model. Real loom explores every interleaving
+/// permitted by the memory model (bounded by `LOOM_MAX_PREEMPTIONS`);
+/// this stand-in re-runs it `LOOM_ITERS` times (default 64) as a
+/// bounded stress fallback.
+pub fn model<F>(f: F)
+where
+    F: Fn() + Sync + Send + 'static,
+{
+    let iters: usize = std::env::var("LOOM_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64);
+    for _ in 0..iters {
+        f();
+    }
+}
+
+/// Mirror of `loom::thread`.
+pub mod thread {
+    pub use std::thread::{spawn, yield_now, JoinHandle};
+}
+
+/// Mirror of `loom::hint`.
+pub mod hint {
+    pub use std::hint::spin_loop;
+}
+
+/// Mirror of `loom::sync`: locks, guards and atomics.
+pub mod sync {
+    pub use std::sync::{
+        Condvar, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard,
+    };
+
+    /// Mirror of `loom::sync::atomic`.
+    pub mod atomic {
+        pub use std::sync::atomic::{
+            fence, AtomicBool, AtomicI16, AtomicI32, AtomicI64, AtomicI8, AtomicIsize, AtomicU16,
+            AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+        };
+    }
+}

@@ -1,0 +1,455 @@
+//! `cargo xtask lint` — the vdmc invariant lint.
+//!
+//! A std-only, line-oriented scanner over `rust/src` enforcing the
+//! concurrency-discipline rules that `rustc`/clippy cannot express:
+//!
+//! | rule                  | invariant                                             |
+//! |-----------------------|-------------------------------------------------------|
+//! | `relaxed-justify`     | every `Ordering::Relaxed` carries a `// relaxed:`     |
+//! |                       | justification on the same or a nearby preceding line  |
+//! | `safety-comment`      | every `unsafe` carries a `// SAFETY:` comment         |
+//! | `request-path-unwrap` | no `.unwrap()` / `.expect(` on the serving path       |
+//! |                       | (`service/`, `engine/session.rs`) — errors propagate  |
+//! | `shim-bypass`         | modules ported to the `crate::sync` loom shim never   |
+//! |                       | name `std::sync` / `std::thread` directly             |
+//!
+//! Scanning is syntactic on purpose: line comments and the contents of
+//! string/char literals are stripped before token matching, and
+//! everything from a file's first `#[cfg(test)]` to EOF is exempt
+//! (tests may unwrap and may drive `std::thread` directly). Block
+//! comments and raw strings are not modelled — the tree doesn't use
+//! them outside tests, and a false positive is a loud, cheap fix.
+//!
+//! `cargo xtask lint --self-test` first seeds one violation of each
+//! rule class into a temp tree and asserts the scanner reports exactly
+//! those, proving the lint still bites before the clean run is trusted.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// How many raw lines above a flagged token a justification comment may
+/// sit (same line counts too). Large enough for a wrapped 3-line
+/// comment plus an attribute; small enough that the justification stays
+/// next to the code it covers.
+const WINDOW: usize = 8;
+
+/// Modules ported onto the `crate::sync` shim: under `--cfg loom` these
+/// compile against loom's instrumented primitives, so a direct
+/// `std::sync` / `std::thread` reference would silently escape the
+/// model checker. Paths are relative to `rust/src`.
+const PORTED: [&str; 5] = [
+    "engine/cancel.rs",
+    "engine/deque.rs",
+    "engine/snapshot.rs",
+    "service/admission.rs",
+    "telemetry/metrics.rs",
+];
+
+#[derive(Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Violation {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    message: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => lint(&args[1..]),
+        _ => {
+            eprintln!("usage: cargo xtask lint [--self-test]");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn lint(flags: &[String]) -> ExitCode {
+    let self_test = match flags {
+        [] => false,
+        [f] if f == "--self-test" => true,
+        other => {
+            eprintln!("unknown flags {other:?}; usage: cargo xtask lint [--self-test]");
+            return ExitCode::from(2);
+        }
+    };
+    if self_test {
+        return match run_self_test() {
+            Ok(()) => {
+                println!("vdmc-lint: self-test ok (every rule class still detected)");
+                ExitCode::SUCCESS
+            }
+            Err(e) => {
+                eprintln!("vdmc-lint: self-test FAILED: {e}");
+                ExitCode::FAILURE
+            }
+        };
+    }
+    // xtask lives at rust/xtask; the lint's domain is the library tree.
+    let src = Path::new(env!("CARGO_MANIFEST_DIR")).join("../src");
+    let violations = match scan_tree(&src) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("vdmc-lint: cannot scan {}: {e}", src.display());
+            return ExitCode::from(2);
+        }
+    };
+    if violations.is_empty() {
+        println!("vdmc-lint: clean");
+        return ExitCode::SUCCESS;
+    }
+    for v in &violations {
+        eprintln!("{v}");
+    }
+    eprintln!("vdmc-lint: {} violation(s)", violations.len());
+    ExitCode::FAILURE
+}
+
+// ------------------------------------------------------------- scanning
+
+/// Lint every `.rs` file under `src`, deterministically ordered.
+fn scan_tree(src: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs(src, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(src)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let text = fs::read_to_string(&path)?;
+        out.extend(scan_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint one file. `rel` is the path relative to `rust/src` with `/`
+/// separators — rule scoping matches on it.
+fn scan_source(rel: &str, text: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = text.lines().collect();
+    let code: Vec<String> = raw.iter().map(|l| strip_code(l)).collect();
+    // Everything from the first `#[cfg(test)]` onward is test code by
+    // repo convention (tests module closes the file).
+    let test_start = raw.iter().position(|l| l.contains("cfg(test)")).unwrap_or(raw.len());
+    let on_request_path = rel.starts_with("service/") || rel == "engine/session.rs";
+    let ported = PORTED.contains(&rel);
+    // The shim itself is the one legitimate `std::sync` importer.
+    let is_shim = rel == "sync.rs";
+
+    let mut out = Vec::new();
+    let mut push = |line: usize, rule: &'static str, message: String| {
+        out.push(Violation { file: format!("rust/src/{rel}"), line: line + 1, rule, message });
+    };
+    for (i, line) in code.iter().enumerate().take(test_start) {
+        if line.contains("Ordering::Relaxed") && !nearby(&raw, i, "// relaxed:") {
+            push(
+                i,
+                "relaxed-justify",
+                format!("Ordering::Relaxed without a `// relaxed:` justification within {WINDOW} lines"),
+            );
+        }
+        if has_word(line, "unsafe") && !nearby(&raw, i, "SAFETY:") {
+            push(
+                i,
+                "safety-comment",
+                format!("`unsafe` without a `// SAFETY:` comment within {WINDOW} lines"),
+            );
+        }
+        if on_request_path && (line.contains(".unwrap()") || line.contains(".expect(")) {
+            push(
+                i,
+                "request-path-unwrap",
+                "`.unwrap()`/`.expect(` on the request path — propagate an error instead".into(),
+            );
+        }
+        if ported && !is_shim && (line.contains("std::sync") || line.contains("std::thread")) {
+            push(
+                i,
+                "shim-bypass",
+                "direct `std::sync`/`std::thread` in a loom-ported module — use `crate::sync`"
+                    .into(),
+            );
+        }
+    }
+    out
+}
+
+/// Does `needle` appear on line `i` or any of the `WINDOW` raw lines
+/// above it? (Raw lines: justifications live in comments.)
+fn nearby(raw: &[&str], i: usize, needle: &str) -> bool {
+    let lo = i.saturating_sub(WINDOW);
+    raw[lo..=i].iter().any(|l| l.contains(needle))
+}
+
+/// Whole-word containment (so `unsafe` never matches inside a larger
+/// identifier).
+fn has_word(line: &str, word: &str) -> bool {
+    let bytes = line.as_bytes();
+    let mut from = 0;
+    while let Some(at) = line[from..].find(word) {
+        let start = from + at;
+        let end = start + word.len();
+        let pre = start == 0 || !is_ident(bytes[start - 1]);
+        let post = end == bytes.len() || !is_ident(bytes[end]);
+        if pre && post {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// Strip a line down to the tokens the rules match on: cut `//`
+/// comments (including doc comments) and blank out the *contents* of
+/// string and char literals, leaving their delimiters. Lifetimes
+/// (`'a`) are not char literals and pass through untouched.
+fn strip_code(line: &str) -> String {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = String::with_capacity(line.len());
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '/' && chars.get(i + 1) == Some(&'/') {
+            break;
+        }
+        if c == '"' {
+            out.push('"');
+            i += 1;
+            while i < chars.len() {
+                if chars[i] == '\\' {
+                    i += 2;
+                    continue;
+                }
+                if chars[i] == '"' {
+                    out.push('"');
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+            continue;
+        }
+        if c == '\'' {
+            // `'\n'` or `'x'` open a char literal; `'a` is a lifetime
+            let is_char =
+                chars.get(i + 1) == Some(&'\\') || (chars.get(i + 2) == Some(&'\'')).then_some(())
+                    == Some(());
+            if is_char {
+                out.push('\'');
+                i += 1;
+                while i < chars.len() && chars[i] != '\'' {
+                    if chars[i] == '\\' {
+                        i += 1;
+                    }
+                    i += 1;
+                }
+                if i < chars.len() {
+                    out.push('\'');
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+// ------------------------------------------------------------ self-test
+
+/// Seed one violation per rule class (plus clean counterparts) into a
+/// temp tree and assert the scanner reports exactly the seeded four —
+/// proof the lint still detects each class before a clean run means
+/// anything.
+fn run_self_test() -> Result<(), String> {
+    let root = std::env::temp_dir().join(format!("vdmc-lint-selftest-{}", std::process::id()));
+    let src = root.join("src");
+    let seeded: &[(&str, &str, &str)] = &[
+        (
+            "relaxed-justify",
+            "engine/seeded_relaxed.rs",
+            "pub fn f(a: &AtomicUsize) -> usize {\n    a.load(Ordering::Relaxed)\n}\n",
+        ),
+        (
+            "safety-comment",
+            "motifs/seeded_unsafe.rs",
+            "pub fn f(p: *const u32) -> u32 {\n    unsafe { *p }\n}\n",
+        ),
+        (
+            "request-path-unwrap",
+            "service/seeded_unwrap.rs",
+            "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n",
+        ),
+        (
+            "shim-bypass",
+            "engine/deque.rs",
+            "use std::sync::Mutex;\npub fn f() {}\n",
+        ),
+    ];
+    let clean: &[(&str, &str)] = &[
+        (
+            "engine/clean.rs",
+            "pub fn f(a: &AtomicUsize, p: *const u32) -> u32 {\n    \
+             // relaxed: monitoring read only.\n    let _ = a.load(Ordering::Relaxed);\n    \
+             // SAFETY: caller guarantees p is valid.\n    unsafe { *p }\n}\n",
+        ),
+        (
+            "service/clean.rs",
+            "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    \
+             pub fn g(x: Option<u32>) -> u32 {\n        x.unwrap()\n    }\n}\n",
+        ),
+    ];
+    let write_all = || -> std::io::Result<()> {
+        for (_, rel, body) in seeded {
+            let path = src.join(rel);
+            if let Some(dir) = path.parent() {
+                fs::create_dir_all(dir)?;
+            }
+            fs::write(path, body)?;
+        }
+        for (rel, body) in clean {
+            let path = src.join(rel);
+            if let Some(dir) = path.parent() {
+                fs::create_dir_all(dir)?;
+            }
+            fs::write(path, body)?;
+        }
+        Ok(())
+    };
+    let result = write_all()
+        .map_err(|e| format!("cannot seed temp tree: {e}"))
+        .and_then(|()| check_seeded(&src, seeded));
+    let _ = fs::remove_dir_all(&root);
+    result
+}
+
+fn check_seeded(src: &Path, seeded: &[(&str, &str, &str)]) -> Result<(), String> {
+    let found = scan_tree(src).map_err(|e| format!("scan failed: {e}"))?;
+    for v in &found {
+        println!("seeded violation detected: {v}");
+    }
+    let mut got: Vec<(String, String)> =
+        found.into_iter().map(|v| (v.rule.to_string(), v.file)).collect();
+    got.sort();
+    let mut want: Vec<(String, String)> = seeded
+        .iter()
+        .map(|(rule, rel, _)| (rule.to_string(), format!("rust/src/{rel}")))
+        .collect();
+    want.sort();
+    if got != want {
+        return Err(format!("expected exactly the seeded violations {want:?}, got {got:?}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_strings_and_chars_but_not_lifetimes() {
+        assert_eq!(strip_code("let x = 1; // Ordering::Relaxed"), "let x = 1; ");
+        assert_eq!(strip_code(r#"let s = "unsafe .unwrap()";"#), r#"let s = "";"#);
+        assert_eq!(strip_code(r"let c = '\''; let l: &'static str;"), "let c = ''; let l: &'static str;");
+        assert_eq!(strip_code(r#"let q = "esc \" quote"; f()"#), r#"let q = ""; f()"#);
+    }
+
+    #[test]
+    fn word_matching_respects_identifier_boundaries() {
+        assert!(has_word("unsafe { }", "unsafe"));
+        assert!(has_word("pub unsafe fn g()", "unsafe"));
+        assert!(!has_word("let unsafety = 1;", "unsafe"));
+        assert!(!has_word("made_unsafe()", "unsafe"));
+    }
+
+    #[test]
+    fn relaxed_needs_nearby_justification() {
+        let bad = "fn f(a: &AtomicU64) -> u64 {\n    a.load(Ordering::Relaxed)\n}\n";
+        let v = scan_source("engine/x.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "relaxed-justify");
+        assert_eq!(v[0].line, 2);
+
+        let good = "fn f(a: &AtomicU64) -> u64 {\n    // relaxed: tally only.\n    \
+                    a.load(Ordering::Relaxed)\n}\n";
+        assert!(scan_source("engine/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unsafe_needs_safety_comment() {
+        let bad = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let v = scan_source("motifs/x.rs", bad);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "safety-comment");
+
+        let good = "fn f(p: *const u8) -> u8 {\n    // SAFETY: p is valid by contract.\n    \
+                    unsafe { *p }\n}\n";
+        assert!(scan_source("motifs/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn unwrap_rule_applies_only_on_the_request_path() {
+        let body = "fn f(x: Option<u8>) -> u8 {\n    x.unwrap()\n}\n";
+        assert_eq!(scan_source("service/x.rs", body)[0].rule, "request-path-unwrap");
+        assert_eq!(scan_source("engine/session.rs", body)[0].rule, "request-path-unwrap");
+        assert!(scan_source("engine/x.rs", body).is_empty());
+        let expect = "fn f(x: Option<u8>) -> u8 {\n    x.expect(\"set\")\n}\n";
+        assert_eq!(scan_source("service/x.rs", expect)[0].rule, "request-path-unwrap");
+    }
+
+    #[test]
+    fn test_region_is_exempt_from_every_rule() {
+        let body = "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g(x: Option<u8>) -> u8 {\n        \
+                    let _ = ORD.load(Ordering::Relaxed);\n        x.unwrap()\n    }\n}\n";
+        assert!(scan_source("service/x.rs", body).is_empty());
+    }
+
+    #[test]
+    fn shim_bypass_fires_only_in_ported_modules() {
+        let body = "use std::sync::Mutex;\npub fn f() {}\n";
+        let v = scan_source("engine/deque.rs", body);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].rule, "shim-bypass");
+        assert!(scan_source("engine/partition.rs", body).is_empty());
+        let thread = "pub fn f() { std::thread::yield_now(); }\n";
+        assert_eq!(scan_source("telemetry/metrics.rs", thread)[0].rule, "shim-bypass");
+    }
+
+    #[test]
+    fn tokens_inside_strings_and_comments_do_not_fire() {
+        let body = "pub fn f() -> &'static str {\n    \
+                    // mentions unsafe and .unwrap() and Ordering::Relaxed in prose\n    \
+                    \"unsafe .unwrap() Ordering::Relaxed std::sync\"\n}\n";
+        assert!(scan_source("service/x.rs", body).is_empty());
+        assert!(scan_source("engine/deque.rs", body).is_empty());
+    }
+}
