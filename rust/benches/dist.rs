@@ -1,0 +1,271 @@
+//! Distribution-layer benchmark: what the scatter-gather router costs
+//! over a single-process session on the same machine — the merge + wire
+//! overhead `BENCH_dist.json` tracks. Workers are real `serve_tcp`
+//! processes-in-threads on loopback TCP, so every number includes the
+//! JSONL codec and socket round-trips the production cluster pays.
+//!
+//! One JSON row per line on stdout (lines starting with `{`; everything
+//! else is commentary):
+//!
+//! - `bench: "dist_count"` — full k=3 count at 1/2/4 shards: router
+//!   mean secs over rounds, the single-process baseline, and the
+//!   `router_over_single` ratio. 1 shard isolates pure wire + merge
+//!   cost; more shards add the gather fan-in. Results are asserted
+//!   bit-identical to the baseline at every width.
+//! - `bench: "dist_rows"` — scoped vertex_counts lookups (16 rows)
+//!   through the router vs the in-process service; the scatter hits
+//!   only owner shards, so this is the interactive-lookup overhead.
+//! - `bench: "dist_apply"` — an edge-delta batch through the router
+//!   (ghost-fringe fetch + fan-out + authoritative merge) vs
+//!   `Session::apply_edges`, then a post-batch count identity check.
+//!
+//! Defaults: G(1500, 0.01) directed, 5 rounds. CI shrinks it with
+//! `--n 500`.
+
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use vdmc::dist::{worker, Router, ShardPlan};
+use vdmc::engine::{CountQuery, Scope, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifSize};
+use vdmc::service::{GraphSource, Request, Response, ServeOptions, VdmcService};
+use vdmc::stream::EdgeDelta;
+use vdmc::util::json::Json;
+
+struct Opts {
+    n: usize,
+    rounds: usize,
+    seed: u64,
+}
+
+fn parse_opts() -> Opts {
+    let mut opts = Opts { n: 1500, rounds: 5, seed: 42 };
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut i = 0;
+    while i < args.len() {
+        let take = |i: &mut usize| -> String {
+            *i += 1;
+            args.get(*i).unwrap_or_else(|| panic!("{} needs a value", args[*i - 1])).clone()
+        };
+        match args[i].as_str() {
+            "--n" => opts.n = take(&mut i).parse().expect("--n"),
+            "--rounds" => opts.rounds = take(&mut i).parse().expect("--rounds"),
+            "--seed" => opts.seed = take(&mut i).parse().expect("--seed"),
+            "--bench" => {} // cargo bench passes this through
+            other => eprintln!("ignoring unknown arg {other:?}"),
+        }
+        i += 1;
+    }
+    opts
+}
+
+/// An in-process cluster: worker threads on loopback listeners plus a
+/// connected router; dropped workers drain and join.
+struct Cluster {
+    router: Router,
+    flags: Vec<Arc<AtomicBool>>,
+    handles: Vec<Option<JoinHandle<()>>>,
+}
+
+fn start_cluster(g: &Graph, k_max: usize, shards: usize) -> Cluster {
+    let listeners: Vec<TcpListener> =
+        (0..shards).map(|_| TcpListener::bind("127.0.0.1:0").expect("bind")).collect();
+    let addrs: Vec<String> =
+        listeners.iter().map(|l| l.local_addr().expect("addr").to_string()).collect();
+    let plan = ShardPlan::build(g, "g", "<mem>", k_max, &addrs, 64).expect("plan");
+    let mut flags = Vec::new();
+    let mut handles = Vec::new();
+    for (s, listener) in listeners.into_iter().enumerate() {
+        let local = worker::induced_local(&plan, s, g).expect("induced slice");
+        let svc =
+            worker::worker_service(&plan, s, local, SessionConfig::default()).expect("worker");
+        let flag = Arc::new(AtomicBool::new(false));
+        flags.push(Arc::clone(&flag));
+        handles.push(Some(std::thread::spawn(move || {
+            serve(svc, listener, flag);
+        })));
+    }
+    let router = Router::connect(plan).expect("connect");
+    Cluster { router, flags, handles }
+}
+
+fn serve(svc: VdmcService, listener: TcpListener, flag: Arc<AtomicBool>) {
+    vdmc::service::serve_tcp(&svc, listener, &ServeOptions::default(), &flag).expect("serve");
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for f in &self.flags {
+            f.store(true, Ordering::SeqCst);
+        }
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn main() {
+    let opts = parse_opts();
+    println!("# dist bench: G({}, 0.01) directed, {} rounds", opts.n, opts.rounds);
+    let g = generators::gnp_directed(opts.n, 0.01, opts.seed);
+    let session = Session::load(&g);
+    let q3 = CountQuery {
+        size: MotifSize::Three,
+        direction: Direction::Directed,
+        ..Default::default()
+    };
+
+    // single-process baseline: min-of-rounds so scheduler noise cancels
+    let mut single_secs = f64::INFINITY;
+    let mut baseline = session.count(&q3).expect("baseline count");
+    for _ in 0..opts.rounds {
+        let t0 = Instant::now();
+        baseline = session.count(&q3).expect("baseline count");
+        single_secs = single_secs.min(t0.elapsed().as_secs_f64());
+    }
+
+    // -- dist_count: full count at 1/2/4 shards ---------------------------
+    for shards in [1usize, 2, 4] {
+        let cluster = start_cluster(&g, 3, shards);
+        let count = || match cluster
+            .router
+            .handle(Request::Count { graph: "g".into(), query: q3.clone() }, None)
+            .expect("router count")
+        {
+            Response::Counted { counts, .. } => counts,
+            other => panic!("{other:?}"),
+        };
+        let warm = count(); // dial + maintain once before timing
+        assert_eq!(warm.per_vertex, baseline.per_vertex, "{shards}-shard counts drifted");
+        assert_eq!(warm.total_instances, baseline.total_instances);
+        let mut router_secs = f64::INFINITY;
+        for _ in 0..opts.rounds {
+            let t0 = Instant::now();
+            let got = count();
+            router_secs = router_secs.min(t0.elapsed().as_secs_f64());
+            assert_eq!(got.total_instances, baseline.total_instances);
+        }
+        let mut j = Json::obj();
+        j.set("bench", "dist_count")
+            .set("shards", shards)
+            .set("rounds", opts.rounds)
+            .set("router_secs", router_secs)
+            .set("single_secs", single_secs)
+            .set("router_over_single", router_secs / single_secs.max(1e-9))
+            .set("total_instances", baseline.total_instances);
+        println!("{}", j.to_string_compact());
+    }
+
+    // -- dist_rows: interactive scoped lookups at 2 shards ----------------
+    let cluster = start_cluster(&g, 3, 2);
+    let svc = VdmcService::with_defaults();
+    svc.handle(Request::LoadGraph {
+        graph: "g".into(),
+        source: GraphSource::Edges { n: g.n(), edges: g.out.edges().collect() },
+        directed: true,
+    })
+    .expect("load");
+    let probe: Vec<u32> = (0..g.n() as u32).step_by((g.n() / 16).max(1)).take(16).collect();
+    let rows_req = || Request::VertexCounts {
+        graph: "g".into(),
+        size: MotifSize::Three,
+        direction: Direction::Directed,
+        scope: Scope::Vertices(probe.clone()),
+    };
+    let local_rows = match svc.handle(rows_req()).expect("local rows") {
+        Response::VertexRows { rows, .. } => rows,
+        other => panic!("{other:?}"),
+    };
+    let routed_rows = match cluster.router.handle(rows_req(), None).expect("routed rows") {
+        Response::VertexRows { rows, .. } => rows,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(routed_rows.len(), local_rows.len());
+    for (a, b) in routed_rows.iter().zip(&local_rows) {
+        assert_eq!((a.vertex, &a.counts), (b.vertex, &b.counts), "routed row drifted");
+    }
+    let lookups = 64usize;
+    let timed = |go: &dyn Fn()| -> f64 {
+        let t0 = Instant::now();
+        for _ in 0..lookups {
+            go();
+        }
+        t0.elapsed().as_secs_f64() / lookups as f64
+    };
+    let local_mean = timed(&|| {
+        svc.handle(rows_req()).expect("local rows");
+    });
+    let routed_mean = timed(&|| {
+        cluster.router.handle(rows_req(), None).expect("routed rows");
+    });
+    let mut j = Json::obj();
+    j.set("bench", "dist_rows")
+        .set("shards", 2)
+        .set("lookups", lookups)
+        .set("row_count", probe.len())
+        .set("router_mean_secs", routed_mean)
+        .set("local_mean_secs", local_mean)
+        .set("router_over_local", routed_mean / local_mean.max(1e-9));
+    println!("{}", j.to_string_compact());
+
+    // -- dist_apply: a delta batch through the ghost-fringe fan-out -------
+    let n = g.n() as u32;
+    let mut oracle = Session::load(&g);
+    let mut router_secs = 0.0f64;
+    let mut oracle_secs = 0.0f64;
+    let apply_rounds = opts.rounds.max(2);
+    for round in 0..apply_rounds as u32 {
+        let deltas: Vec<EdgeDelta> = (0..16u32)
+            .map(|i| {
+                let a = (i * 19 + round * 7 + 1) % n;
+                let b = (i * 31 + round * 3 + 2) % n;
+                EdgeDelta::insert(a, if a == b { (b + 1) % n } else { b })
+            })
+            .collect();
+        let t0 = Instant::now();
+        let want = oracle.apply_edges(&deltas).expect("oracle apply");
+        oracle_secs += t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        let got = match cluster
+            .router
+            .handle(Request::ApplyEdges { graph: "g".into(), deltas }, None)
+            .expect("routed apply")
+        {
+            Response::Applied { report, .. } => report,
+            other => panic!("{other:?}"),
+        };
+        router_secs += t0.elapsed().as_secs_f64();
+        assert_eq!(
+            (got.inserted, got.deleted, got.skipped_duplicate),
+            (want.inserted, want.deleted, want.skipped_duplicate),
+            "round {round} delta accounting drifted"
+        );
+    }
+    let post = oracle.count(&q3).expect("post count");
+    let routed_post = match cluster
+        .router
+        .handle(Request::Count { graph: "g".into(), query: q3.clone() }, None)
+        .expect("post routed count")
+    {
+        Response::Counted { counts, .. } => counts,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(routed_post.per_vertex, post.per_vertex, "post-apply counts drifted");
+    let mut j = Json::obj();
+    j.set("bench", "dist_apply")
+        .set("shards", 2)
+        .set("batches", apply_rounds)
+        .set("deltas_per_batch", 16)
+        .set("router_secs", router_secs)
+        .set("single_secs", oracle_secs)
+        .set("router_over_single", router_secs / oracle_secs.max(1e-9))
+        .set("post_total_instances", post.total_instances);
+    println!("{}", j.to_string_compact());
+}

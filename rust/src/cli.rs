@@ -8,7 +8,11 @@
 //!   sample     per-class reservoir sample of motif instances
 //!   stream     replay an edge timeline incrementally over a live session
 //!   serve      resident multi-graph daemon: JSONL over stdin or TCP
-//!              (--tcp, thread per client, shared snapshot-isolated pool)
+//!              (--tcp, thread per client, shared snapshot-isolated pool);
+//!              --shards plan.json mounts a scatter-gather router over a
+//!              worker cluster
+//!   plan       partition a graph into a shard plan for a worker cluster
+//!   worker     serve one shard of a plan (the dist worker role)
 //!   validate   Fig. 3 experiment: G(n,p) counts vs Eq. 7.4 theory
 //!   toolbox    Section 10 measures (k-core, pagerank, ...)
 //!   info       graph statistics
@@ -21,6 +25,7 @@ use std::process::ExitCode;
 
 use vdmc::baselines;
 use vdmc::coordinator::{count_motifs_with_report, CountConfig};
+use vdmc::dist::{worker, Router, ShardPlan};
 use vdmc::engine::{
     AdjacencyMode, CountQuery, MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig,
 };
@@ -94,7 +99,21 @@ modes every in-flight response is written before shutdown.
 with --metrics-addr ADDR a Prometheus text endpoint (GET /metrics)
 serves the same registry the "metrics" op returns: request counts and
 latency histograms per op, pool occupancy/evictions, engine work-unit
-and instance counters, phase timings, transport bytes."#;
+and instance counters, phase timings, transport bytes.
+
+with --shards plan.json the daemon mounts a scatter-gather router over
+a worker cluster instead of serving the plan's graph locally: count /
+vertex_counts / instances / sample / apply_edges naming that graph id
+scatter over the plan's workers and merge loss-free; other graph ids
+still serve from the local pool. stand the cluster up with:
+    vdmc plan --input web.tsv --graph web --k-max 4 \
+        --addrs 127.0.0.1:7401,127.0.0.1:7402 --out plan.json --directed
+    vdmc worker --plan plan.json --shard 0 --listen 127.0.0.1:7401 &
+    vdmc worker --plan plan.json --shard 1 --listen 127.0.0.1:7402 &
+    vdmc serve --shards plan.json --tcp 127.0.0.1:7171
+a failed worker RPC answers {"ok":false,...,"shard":{"index":...,
+"addr":...,"kind":"connect|io|remote|protocol|..."}} — queries that
+only touch healthy shards keep serving."#;
 
 fn app() -> App {
     App {
@@ -197,7 +216,32 @@ fn app() -> App {
             )
             .opt("log-level", "stderr log verbosity: off | error | info | debug", Some("info"))
             .opt("slow-query-ms", "log requests slower than this, in ms (0 = never)", Some("0"))
+            .opt(
+                "shards",
+                "mount a scatter-gather router over this shard plan (from `vdmc plan`)",
+                None,
+            )
             .extra(SERVE_EXAMPLES),
+            Command::new("plan", "partition a graph into a shard plan for a worker cluster")
+                .opt("input", "edge list path (recorded in the plan for the workers)", None)
+                .opt("graph", "pool id the cluster serves the graph under", Some("g"))
+                .opt("k-max", "largest motif size the cluster must answer (3 or 4)", Some("4"))
+                .opt("addrs", "comma-separated worker addresses, one per shard", None)
+                .opt("out", "shard plan output path", Some("plan.json"))
+                .opt("max-units", "work-unit budget per partition item", Some("64"))
+                .flag("directed", "interpret the file as a directed graph"),
+            engine_opts(Command::new("worker", "serve one shard of a plan (dist worker role)"))
+                .opt("listen", "TCP address to serve on (must match the plan's entry)", None)
+                .opt("plan", "shard plan path (from `vdmc plan`)", None)
+                .opt("shard", "shard index in the plan this worker serves", None)
+                .opt("input", "edge list path override (default: the plan's recorded source)", None)
+                .opt("inflight", "requests read ahead per client before its reader blocks", Some("64"))
+                .opt(
+                    "metrics-addr",
+                    "serve Prometheus text on this address (includes vdmc_shard_index)",
+                    None,
+                )
+                .opt("log-level", "stderr log verbosity: off | error | info | debug", Some("info")),
             Command::new("validate", "Fig. 3: G(n,p) measurement vs Eq. 7.4 theory")
                 .opt("n", "vertex count", Some("1000"))
                 .opt("p", "edge probability", Some("0.1"))
@@ -240,6 +284,8 @@ pub fn main() -> ExitCode {
         "sample" => cmd_sample(&args),
         "stream" => cmd_stream(&args),
         "serve" => cmd_serve(&args),
+        "plan" => cmd_plan(&args),
+        "worker" => cmd_worker(&args),
         "validate" => cmd_validate(&args),
         "toolbox" => cmd_toolbox(&args),
         "info" => cmd_info(&args),
@@ -702,7 +748,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .ok_or_else(|| anyhow::anyhow!("--log-level must be off|error|info|debug"))?,
     );
     let slow_ms: u64 = args.req("slow-query-ms").map_err(anyhow::Error::msg)?;
-    let svc = VdmcService::new(ServiceConfig {
+    let cfg = ServiceConfig {
         session,
         max_graphs,
         byte_budget: budget_mb << 20,
@@ -714,7 +760,26 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             max_inflight: args.req("max-inflight").map_err(anyhow::Error::msg)?,
             max_resident_bytes: admission_mb << 20,
         },
-    });
+        shard: None,
+    };
+    let svc = match args.get("shards") {
+        Some(plan_path) => {
+            let plan = ShardPlan::load(Path::new(plan_path))?;
+            eprintln!(
+                "vdmc serve: routing graph {:?} (n={}, m={}, k_max={}) over {} shard(s)",
+                plan.graph,
+                plan.n,
+                plan.m,
+                plan.k_max,
+                plan.shards.len(),
+            );
+            // connect() pings every worker: mis-wired or mis-versioned
+            // deployments fail here, before any query is scattered
+            let router = Router::connect(plan)?;
+            VdmcService::with_router(cfg, router)
+        }
+        None => VdmcService::new(cfg),
+    };
 
     // shared by the transport drain and the metrics endpoint, whichever
     // combination of them this invocation runs
@@ -797,6 +862,142 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         stats.evictions(),
         stats.evictions_deferred,
     );
+    Ok(())
+}
+
+fn cmd_plan(args: &Args) -> anyhow::Result<()> {
+    let input = args.get("input").ok_or_else(|| anyhow::anyhow!("--input is required"))?;
+    let addrs_arg = args.get("addrs").ok_or_else(|| {
+        anyhow::anyhow!("--addrs is required (comma-separated worker addresses, one per shard)")
+    })?;
+    let addrs: Vec<String> = addrs_arg
+        .split(',')
+        .map(str::trim)
+        .filter(|a| !a.is_empty())
+        .map(str::to_string)
+        .collect();
+    anyhow::ensure!(!addrs.is_empty(), "--addrs names no worker address");
+    let graph_id = args.get("graph").unwrap_or("g");
+    let k_max: usize = args.req("k-max").map_err(anyhow::Error::msg)?;
+    let max_units: usize = args.req("max-units").map_err(anyhow::Error::msg)?;
+    let g = io::load_edge_list(Path::new(input), args.flag("directed"))?;
+    let plan = ShardPlan::build(&g, graph_id, input, k_max, &addrs, max_units)?;
+    let out = PathBuf::from(args.get("out").unwrap_or("plan.json"));
+    plan.save(&out)?;
+    eprintln!(
+        "wrote {} — graph {:?} (n={}, m={}, directed={}) over {} shard(s), \
+         fringe radius {}:",
+        out.display(),
+        plan.graph,
+        plan.n,
+        plan.m,
+        plan.directed,
+        plan.shards.len(),
+        plan.fringe_radius(),
+    );
+    for s in &plan.shards {
+        eprintln!(
+            "  shard {} @ {}: owns [{}, {}) ({} vertices), {} ghost rows, {} units",
+            s.index,
+            s.addr,
+            s.v_start,
+            s.v_end,
+            s.v_end - s.v_start,
+            s.ghosts.len(),
+            s.units,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> anyhow::Result<()> {
+    let listen = args.get("listen").ok_or_else(|| anyhow::anyhow!("--listen is required"))?;
+    let plan_path = args.get("plan").ok_or_else(|| anyhow::anyhow!("--plan is required"))?;
+    let shard: usize = args
+        .get_parse("shard")
+        .map_err(anyhow::Error::msg)?
+        .ok_or_else(|| anyhow::anyhow!("--shard is required"))?;
+    let level = args.req::<String>("log-level").map_err(anyhow::Error::msg)?;
+    set_log_level(
+        LogLevel::parse(&level)
+            .ok_or_else(|| anyhow::anyhow!("--log-level must be off|error|info|debug"))?,
+    );
+    let plan = ShardPlan::load(Path::new(plan_path))?;
+    let input = args.get("input").unwrap_or(plan.source.as_str()).to_string();
+    anyhow::ensure!(
+        !input.is_empty() && !input.starts_with('<'),
+        "the plan records no loadable source ({:?}); pass --input",
+        plan.source,
+    );
+    let session = parse_engine_config(args)?;
+    // stream the file, keeping only this shard's member-induced edges —
+    // the full graph is never resident on a worker
+    let local = worker::load_local(&plan, shard, Path::new(&input))?;
+    let local_m = local.m();
+    let svc = worker::worker_service(&plan, shard, local, session)?;
+    let spec = &plan.shards[shard];
+    eprintln!(
+        "vdmc worker: shard {shard} of {} — owns [{}, {}) ({} vertices) + {} ghost rows, \
+         {} local edges of {} under graph {:?}; close stdin to drain and exit",
+        plan.shards.len(),
+        spec.v_start,
+        spec.v_end,
+        spec.v_end - spec.v_start,
+        spec.ghosts.len(),
+        local_m,
+        plan.m,
+        plan.graph,
+    );
+
+    let shutdown = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let metrics_thread = match args.get("metrics-addr") {
+        Some(addr) => {
+            let listener = std::net::TcpListener::bind(addr)?;
+            let local_addr = listener.local_addr()?;
+            eprintln!("vdmc worker: metrics on http://{local_addr}/metrics");
+            let svc = svc.clone();
+            let flag = std::sync::Arc::clone(&shutdown);
+            Some(std::thread::spawn(move || {
+                let render = move || svc.metrics_text();
+                serve_exposition(listener, &flag, &render)
+            }))
+        }
+        None => None,
+    };
+
+    let listener = std::net::TcpListener::bind(listen)?;
+    eprintln!("vdmc worker: listening on {}", listener.local_addr()?);
+    let flag = std::sync::Arc::clone(&shutdown);
+    std::thread::spawn(move || {
+        let mut sink = String::new();
+        loop {
+            sink.clear();
+            match std::io::stdin().read_line(&mut sink) {
+                Ok(0) | Err(_) => break,
+                Ok(_) => {}
+            }
+        }
+        flag.store(true, std::sync::atomic::Ordering::SeqCst);
+    });
+    let opts = ServeOptions {
+        inflight: args.req("inflight").map_err(anyhow::Error::msg)?,
+        ..ServeOptions::default()
+    };
+    let summary = serve_tcp(&svc, listener, &opts, &shutdown)?;
+    eprintln!(
+        "vdmc worker: drained {} client(s) / {} request(s) ({} aborted)",
+        summary.clients, summary.requests, summary.aborted,
+    );
+    shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+    if let Some(t) = metrics_thread {
+        match t.join() {
+            Ok(Ok(scrapes)) => {
+                eprintln!("vdmc worker: metrics endpoint served {scrapes} scrape(s)")
+            }
+            Ok(Err(e)) => eprintln!("vdmc worker: metrics endpoint failed: {e}"),
+            Err(_) => eprintln!("vdmc worker: metrics endpoint thread panicked"),
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,120 @@
+//! Distribution layer: one graph, many processes.
+//!
+//! Everything below `service` counts motifs inside a single address
+//! space. This module lifts the same degree-mass decomposition the
+//! engine already uses across threads ([`crate::engine::PartitionSet`])
+//! to **processes**, in three pieces:
+//!
+//! - [`plan`] — the shard planner. Partitions the vertex space into
+//!   degree-balanced contiguous ranges (reusing `PartitionSet`'s unit
+//!   accounting) and computes each shard's *ghost fringe*: the
+//!   (k_max − 1)-hop undirected ball around its owned range. The result
+//!   is a serializable [`ShardPlan`] every cluster role loads.
+//! - [`worker`] — the data node. Loads only its shard's slice of the
+//!   edge list (owned range ∪ ghosts, full-`n` vertex space so ids stay
+//!   global) and serves the ordinary JSONL wire on it via the unchanged
+//!   [`crate::service::VdmcService`] + [`crate::service::serve_tcp`]
+//!   stack. `vdmc worker` is this role as a binary.
+//! - [`router`] — the scatter-gather front. Holds one persistent TCP
+//!   connection per shard, scatters count/instances/sample/vertex_counts
+//!   queries, and merges the partial answers loss-free: VDMC's
+//!   root-vertex ownership (each instance counted exactly once, at its
+//!   minimal member) makes per-vertex rows disjoint across shards, so
+//!   merging is concatenation, never reconciliation. Mounted behind the
+//!   service façade by `vdmc serve --shards plan.json`.
+//!
+//! ## The ghost-fringe invariant
+//!
+//! Worker `s` stores the subgraph induced on
+//! `members(s) = owned(s) ∪ ball(owned(s), k_max − 1)` (undirected ball
+//! over the *full* graph at plan time). Every motif instance is
+//! connected with ≤ k vertices, so all of it lies within k − 1 hops of
+//! any of its members — in particular of its root. Hence every instance
+//! rooted at an owned vertex lies entirely inside `members(s)`, with all
+//! its induced edges present, and the worker's per-vertex counts for
+//! **owned** rows are globally exact. Rows for ghost vertices are
+//! partial and are never read: the router filters every gathered result
+//! by `ShardPlan::shard_of(root)`.
+//!
+//! ## Failure semantics
+//!
+//! Worker RPCs retry with backoff across reconnects; once retries are
+//! exhausted (or the worker answers with a remote error) the router
+//! fails the *client* request with a typed [`ShardError`] naming the
+//! shard, its address, and the failure kind — the wire codec surfaces it
+//! as a structured `"shard"` object. Queries that only touch healthy
+//! shards (explicit `vertex_counts` row lookups) keep working while a
+//! shard is down; global aggregates need every shard and fail typed,
+//! never silently partial.
+
+use std::fmt;
+
+pub mod plan;
+pub mod router;
+pub mod worker;
+
+pub use plan::{ShardPlan, ShardSpec};
+pub use router::Router;
+
+/// Why a shard RPC failed, for typed client-side branching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardErrorKind {
+    /// TCP connect to the worker failed (down, unreachable, refused).
+    Connect,
+    /// An established connection broke mid-exchange (EOF, reset, timeout).
+    Io,
+    /// The worker answered `ok:false` — its error message is carried.
+    Remote,
+    /// The worker answered something the router could not interpret.
+    Protocol,
+    /// The worker runs a different crate version than the router.
+    VersionMismatch,
+    /// The worker serves a different shard index than the plan assigns
+    /// to its address (mis-wired deployment).
+    WrongShard,
+}
+
+impl ShardErrorKind {
+    /// Wire label (the `"kind"` field of the failure line's `"shard"`
+    /// object, and the `kind` label on the router's error counters).
+    pub fn label(&self) -> &'static str {
+        match self {
+            ShardErrorKind::Connect => "connect",
+            ShardErrorKind::Io => "io",
+            ShardErrorKind::Remote => "remote",
+            ShardErrorKind::Protocol => "protocol",
+            ShardErrorKind::VersionMismatch => "version-mismatch",
+            ShardErrorKind::WrongShard => "wrong-shard",
+        }
+    }
+}
+
+/// A typed per-shard failure: which worker, where, and why. The wire
+/// codec's failure encoder downcasts to this and adds a structured
+/// `"shard":{"index":...,"addr":...,"kind":...}` object so clients can
+/// tell a sick shard from a bad request without parsing prose.
+#[derive(Debug, Clone)]
+pub struct ShardError {
+    /// Shard index in the plan.
+    pub shard: usize,
+    /// The worker address the router dialed.
+    pub addr: String,
+    pub kind: ShardErrorKind,
+    /// Human-readable detail (connect errno, remote error text, ...).
+    pub message: String,
+}
+
+impl fmt::Display for ShardError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shard {} ({}) {}: {}",
+            self.shard,
+            self.addr,
+            self.kind.label(),
+            self.message
+        )
+    }
+}
+
+impl std::error::Error for ShardError {}

@@ -1,0 +1,403 @@
+//! Shard planning: degree-balanced contiguous vertex ranges plus the
+//! ghost fringe each worker must replicate.
+//!
+//! The planner runs once, offline, over the full graph (`vdmc plan`). It
+//! reuses [`PartitionSet`]'s degree-mass split — the same contiguous
+//! ranges the in-process engine balances work with — so a shard's owned
+//! range carries roughly `total_units / n_shards` enumeration work, then
+//! BFS-expands each range by `k_max − 1` undirected hops to find the
+//! ghost vertices the worker needs for exact owned-row counts (the
+//! fringe invariant, see [`crate::dist`]). The resulting [`ShardPlan`]
+//! is a small JSON document in ORIGINAL vertex ids; planner, workers and
+//! router all load the same file, so ownership never has to be
+//! negotiated at runtime.
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::PartitionSet;
+use crate::graph::Graph;
+use crate::motifs::MotifSize;
+use crate::util::json::Json;
+
+/// One worker's slice of the plan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Shard index (also the worker's `--shard` argument).
+    pub index: usize,
+    /// Worker address the router dials (`host:port`).
+    pub addr: String,
+    /// Owned vertex range `[v_start, v_end)` in ORIGINAL ids.
+    pub v_start: u32,
+    pub v_end: u32,
+    /// Degree-mass units of the owned range (load-balance observability).
+    pub units: u64,
+    /// Ghost vertices: outside the owned range but within `k_max − 1`
+    /// undirected hops of it. Sorted ascending.
+    pub ghosts: Vec<u32>,
+}
+
+impl ShardSpec {
+    /// Owned vertices (`v_end − v_start` of them).
+    pub fn owned(&self) -> std::ops::Range<u32> {
+        self.v_start..self.v_end
+    }
+
+    /// Whether `v` is owned by or ghost-replicated on this shard.
+    pub fn is_member(&self, v: u32) -> bool {
+        (self.v_start..self.v_end).contains(&v) || self.ghosts.binary_search(&v).is_ok()
+    }
+}
+
+/// A serializable cluster layout: which worker owns which contiguous
+/// vertex range of which graph, and the ghost rows each must replicate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Pool id every worker loads its slice under and the router serves.
+    pub graph: String,
+    /// Edge-list path the plan was computed from (workers default their
+    /// `--input` to this).
+    pub source: String,
+    pub n: usize,
+    pub m: usize,
+    pub directed: bool,
+    /// Largest motif size the cluster serves; the ghost fringe radius is
+    /// `k_max − 1`.
+    pub k_max: usize,
+    /// One spec per shard, index order; owned ranges partition `[0, n)`.
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ShardPlan {
+    /// Plan `addrs.len()` shards over `graph` (which must be in ORIGINAL
+    /// vertex ids — load the edge list directly, do not reorder). Errors
+    /// when the graph cannot sustain that many shards: the caller should
+    /// retry with the reported count rather than run empty workers.
+    pub fn build(
+        graph: &Graph,
+        name: &str,
+        source: &str,
+        k_max: usize,
+        addrs: &[String],
+        max_units_per_item: usize,
+    ) -> Result<ShardPlan> {
+        if MotifSize::from_k(k_max).is_none() {
+            bail!("k-max must be 3 or 4, got {k_max}");
+        }
+        if addrs.is_empty() {
+            bail!("a plan needs at least one worker address");
+        }
+        if graph.n() == 0 {
+            bail!("cannot plan shards over an empty graph");
+        }
+        let parts = PartitionSet::build(graph, addrs.len(), max_units_per_item);
+        if parts.n_shards() != addrs.len() {
+            bail!(
+                "graph only sustains {} shard(s) at this size (got {} addresses); \
+                 re-run with --shards {}",
+                parts.n_shards(),
+                addrs.len(),
+                parts.n_shards()
+            );
+        }
+        let radius = k_max - 1;
+        let shards = parts
+            .shards
+            .iter()
+            .zip(addrs)
+            .map(|(s, addr)| ShardSpec {
+                index: s.index,
+                addr: addr.clone(),
+                v_start: s.v_start,
+                v_end: s.v_end,
+                units: s.units as u64,
+                ghosts: fringe(graph, s.v_start, s.v_end, radius),
+            })
+            .collect();
+        Ok(ShardPlan {
+            graph: name.to_string(),
+            source: source.to_string(),
+            n: graph.n(),
+            m: graph.m(),
+            directed: graph.directed,
+            k_max,
+            shards,
+        })
+    }
+
+    /// The ghost fringe radius every worker replicated (`k_max − 1`).
+    pub fn fringe_radius(&self) -> usize {
+        self.k_max - 1
+    }
+
+    /// Owner shard of vertex `v`, `None` when `v` is out of range. O(log
+    /// shards): owned ranges are contiguous ascending.
+    pub fn shard_of(&self, v: u32) -> Option<usize> {
+        if (v as usize) >= self.n {
+            return None;
+        }
+        // first shard whose range ends past v; empty ranges sort through
+        Some(self.shards.partition_point(|s| s.v_end <= v))
+    }
+
+    // ---------------------------------------------------------- JSON
+
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("index", s.index)
+                    .set("addr", s.addr.as_str())
+                    .set("v_start", s.v_start)
+                    .set("v_end", s.v_end)
+                    .set("units", s.units)
+                    .set("ghosts", s.ghosts.clone());
+                o
+            })
+            .collect();
+        let mut j = Json::obj();
+        j.set("version", env!("CARGO_PKG_VERSION"))
+            .set("graph", self.graph.as_str())
+            .set("source", self.source.as_str())
+            .set("n", self.n)
+            .set("m", self.m)
+            .set("directed", self.directed)
+            .set("k_max", self.k_max)
+            .set("shards", shards);
+        j
+    }
+
+    /// Parse and structurally validate a plan: shard ranges must
+    /// partition `[0, n)` in index order, ghosts must be sorted,
+    /// in-range, and disjoint from their owned range. A corrupted plan
+    /// must fail here, not as silent double- or zero-counting later.
+    pub fn from_json(j: &Json) -> Result<ShardPlan> {
+        let str_field = |key: &str| -> Result<String> {
+            j.get(key)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .with_context(|| format!("plan: missing string field {key:?}"))
+        };
+        let usize_field = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("plan: missing integer field {key:?}"))
+        };
+        let graph = str_field("graph")?;
+        let source = str_field("source")?;
+        let n = usize_field("n")?;
+        let m = usize_field("m")?;
+        let k_max = usize_field("k_max")?;
+        if MotifSize::from_k(k_max).is_none() {
+            bail!("plan: k_max must be 3 or 4, got {k_max}");
+        }
+        let directed = j
+            .get("directed")
+            .and_then(Json::as_bool)
+            .context("plan: missing boolean field \"directed\"")?;
+        let raw = j
+            .get("shards")
+            .and_then(Json::as_arr)
+            .context("plan: missing \"shards\" array")?;
+        if raw.is_empty() {
+            bail!("plan: empty \"shards\" array");
+        }
+        let mut shards = Vec::with_capacity(raw.len());
+        let mut next_start = 0u32;
+        for (i, o) in raw.iter().enumerate() {
+            let num = |key: &str| -> Result<u64> {
+                o.get(key)
+                    .and_then(Json::as_u64)
+                    .with_context(|| format!("plan: shard {i} missing integer {key:?}"))
+            };
+            let index = num("index")? as usize;
+            if index != i {
+                bail!("plan: shard {i} carries index {index} (must be in order)");
+            }
+            let addr = o
+                .get("addr")
+                .and_then(Json::as_str)
+                .with_context(|| format!("plan: shard {i} missing string \"addr\""))?
+                .to_string();
+            let v_start = num("v_start")? as u32;
+            let v_end = num("v_end")? as u32;
+            if v_start != next_start || v_end < v_start {
+                bail!(
+                    "plan: shard {i} range [{v_start},{v_end}) does not continue \
+                     the partition at {next_start}"
+                );
+            }
+            next_start = v_end;
+            let units = num("units")?;
+            let ghosts_j = o
+                .get("ghosts")
+                .and_then(Json::as_arr)
+                .with_context(|| format!("plan: shard {i} missing \"ghosts\" array"))?;
+            let mut ghosts = Vec::with_capacity(ghosts_j.len());
+            for g in ghosts_j {
+                let v = g
+                    .as_u64()
+                    .filter(|&v| (v as usize) < n)
+                    .with_context(|| format!("plan: shard {i} bad ghost id {g:?}"))?
+                    as u32;
+                if (v_start..v_end).contains(&v) {
+                    bail!("plan: shard {i} lists owned vertex {v} as a ghost");
+                }
+                if ghosts.last().is_some_and(|&p| p >= v) {
+                    bail!("plan: shard {i} ghosts must be sorted ascending and unique");
+                }
+                ghosts.push(v);
+            }
+            shards.push(ShardSpec { index, addr, v_start, v_end, units, ghosts });
+        }
+        if next_start as usize != n {
+            bail!("plan: shard ranges cover [0,{next_start}) but n = {n}");
+        }
+        Ok(ShardPlan { graph, source, n, m, directed, k_max, shards })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing shard plan {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<ShardPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading shard plan {}", path.display()))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing shard plan {}: {e}", path.display()))?;
+        ShardPlan::from_json(&j)
+    }
+}
+
+/// Vertices outside `[v_start, v_end)` within `radius` undirected hops
+/// of it — multi-source BFS over the full graph. Sorted ascending by
+/// construction.
+fn fringe(graph: &Graph, v_start: u32, v_end: u32, radius: usize) -> Vec<u32> {
+    let n = graph.n();
+    // radius ≤ 3 (k_max ≤ 4), so u8 depths are plenty
+    let mut depth = vec![u8::MAX; n];
+    let mut queue = VecDeque::new();
+    for v in v_start..v_end {
+        depth[v as usize] = 0;
+        queue.push_back(v);
+    }
+    while let Some(v) = queue.pop_front() {
+        let d = depth[v as usize];
+        if d as usize == radius {
+            continue;
+        }
+        for &w in graph.und.neighbors(v) {
+            if depth[w as usize] == u8::MAX {
+                depth[w as usize] = d + 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    (0..n as u32)
+        .filter(|&v| !(v_start..v_end).contains(&v) && depth[v as usize] != u8::MAX)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    /// 0–1–2–3–4–5 path plus an isolated 6.
+    fn path_graph() -> Graph {
+        let mut b = GraphBuilder::with_n(7);
+        for v in 0..5u32 {
+            b.add_edge(v, v + 1);
+        }
+        b.build(false)
+    }
+
+    fn addrs(k: usize) -> Vec<String> {
+        (0..k).map(|i| format!("127.0.0.1:{}", 7000 + i)).collect()
+    }
+
+    #[test]
+    fn fringe_is_the_k_minus_one_ball() {
+        let g = path_graph();
+        // owned [0,2): 2 is 1 hop out, 3 is 2 hops, 4 is 3 hops
+        assert_eq!(fringe(&g, 0, 2, 1), vec![2]);
+        assert_eq!(fringe(&g, 0, 2, 2), vec![2, 3]);
+        assert_eq!(fringe(&g, 0, 2, 3), vec![2, 3, 4]);
+        // the isolated vertex never enters anyone's fringe
+        assert!(!fringe(&g, 0, 7, 3).contains(&6));
+    }
+
+    #[test]
+    fn build_partitions_and_owns_every_vertex() {
+        let g = path_graph();
+        let plan = ShardPlan::build(&g, "p", "p.tsv", 3, &addrs(2), 4).unwrap();
+        assert_eq!(plan.shards.len(), 2);
+        assert_eq!(plan.shards[0].v_start, 0);
+        assert_eq!(plan.shards[1].v_end, 7);
+        assert_eq!(plan.shards[0].v_end, plan.shards[1].v_start);
+        for v in 0..7u32 {
+            let s = plan.shard_of(v).unwrap();
+            assert!(plan.shards[s].owned().contains(&v), "vertex {v} owner {s}");
+        }
+        assert_eq!(plan.shard_of(7), None);
+        // every ghost is a member but never owned
+        for s in &plan.shards {
+            for &gv in &s.ghosts {
+                assert!(!s.owned().contains(&gv));
+                assert!(s.is_member(gv));
+            }
+        }
+    }
+
+    #[test]
+    fn build_rejects_impossible_requests() {
+        let g = path_graph();
+        assert!(ShardPlan::build(&g, "p", "p", 5, &addrs(2), 4).is_err(), "bad k");
+        assert!(ShardPlan::build(&g, "p", "p", 3, &[], 4).is_err(), "no addrs");
+        // more shards than the graph has work items
+        assert!(ShardPlan::build(&g, "p", "p", 3, &addrs(64), 4).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let g = path_graph();
+        let plan = ShardPlan::build(&g, "p", "p.tsv", 4, &addrs(2), 4).unwrap();
+        let back = ShardPlan::from_json(&plan.to_json()).unwrap();
+        assert_eq!(back, plan);
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_plans() {
+        let g = path_graph();
+        let plan = ShardPlan::build(&g, "p", "p.tsv", 3, &addrs(2), 4).unwrap();
+
+        // gap in the partition
+        let mut j = plan.to_json();
+        let mut butchered = plan.clone();
+        butchered.shards[1].v_start += 1;
+        j.set("shards", vec![butchered.shards[0].clone(), butchered.shards[1].clone()]
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("index", s.index)
+                    .set("addr", s.addr.as_str())
+                    .set("v_start", s.v_start)
+                    .set("v_end", s.v_end)
+                    .set("units", s.units)
+                    .set("ghosts", s.ghosts.clone());
+                o
+            })
+            .collect::<Vec<Json>>());
+        assert!(ShardPlan::from_json(&j).is_err(), "range gap must not parse");
+
+        // short coverage
+        let mut j = plan.to_json();
+        j.set("n", plan.n + 1);
+        assert!(ShardPlan::from_json(&j).is_err(), "uncovered vertex must not parse");
+    }
+}

@@ -1,0 +1,1413 @@
+//! The scatter-gather router: one client-facing front over many workers.
+//!
+//! The router owns a [`ShardPlan`] and one persistent JSONL/TCP
+//! connection per worker. Client requests against the plan's graph are
+//! scattered to the shards that can answer them and the partial answers
+//! are merged **loss-free**, leaning on one engine invariant throughout:
+//! every motif instance is owned by exactly one vertex (its minimal
+//! member), and a worker's counts for the vertices it *owns* are globally
+//! exact (the ghost-fringe invariant, [`crate::dist`]). Merging is
+//! therefore concatenation + dedup-by-owner, never reconciliation.
+//!
+//! Per-op merge semantics:
+//!
+//! - **count** (whole graph): gathers every shard's owned per-vertex rows
+//!   and assembles the full n × classes matrix; per-class instance totals
+//!   are column sums / k (each instance contributes k member rows).
+//!   Scattering the workers' *digest* totals instead would double-count
+//!   boundary instances — the row gather is what makes the merge exact.
+//! - **vertex_counts** (vertex scope): scattered only to the shards
+//!   owning the requested rows, so lookups touching healthy shards keep
+//!   working while another shard is down. Neighborhood scopes (radius ≤
+//!   k_max − 1) go to every shard; each keeps the ball members it owns —
+//!   exact, because any ≤ (k−1)-hop path ending at an owned vertex lies
+//!   inside that shard's member set. The response's `total_instances`
+//!   field is reported as **0**: the exact global total would need a full
+//!   gather (defeating partial-health lookups) — use `count` for totals.
+//! - **instances** (all / vertex scope): scattered everywhere, ghost-
+//!   rooted duplicates dropped (`shard_of(min member) == responder`),
+//!   merged list canonically sorted. Exact whenever no shard truncated.
+//! - **sample** (all scope): per-class totals come from a row gather
+//!   (exact); sampled instances are the union of owner-filtered worker
+//!   reservoirs re-keyed by [`sample_key`] over their canonical
+//!   original-id tuples and truncated to `per_class`. Deterministic for a
+//!   fixed seed, but *not* bit-identical to a single-process sample: the
+//!   workers hash processing-id tuples of their own reorderings.
+//! - **apply_edges**: serialized router-side; see [`Router::handle`]'s
+//!   delta fan-out below. Reports from the *authoritative* shard of each
+//!   delta (the owner of its minimal endpoint) are summed, so
+//!   inserted/deleted/skipped counts match a single-process apply.
+//!
+//! ## Delta fan-out (why it stays exact)
+//!
+//! Each worker must keep the induced subgraph of the (k−1)-ball around
+//! its owned range **of the current graph** — the plan's static fringe
+//! only covers the load-time graph. Before any delta is applied, the
+//! router fetches from each insert endpoint's owner the (k−1)-ball
+//! around that endpoint ([`Request::FetchBall`]) and inserts those edges
+//! on every shard. Any new instance spans old-edge components that each
+//! touch an insert endpoint or the root, so the fetched balls are
+//! exactly the old edges a remote shard might be missing; inductively
+//! every shard keeps the full ball invariant across arbitrarily many
+//! batches. Deletes need no fan-in (they only shrink balls) and are
+//! applied everywhere like inserts.
+//!
+//! ## Failure semantics
+//!
+//! Every RPC retries [`RPC_ATTEMPTS`] times with exponential backoff,
+//! reconnecting on connect/io/protocol errors; remote application errors
+//! and identity mismatches never retry. Exhausted retries surface as a
+//! typed [`ShardError`] naming the shard, address and failure kind — the
+//! client request fails typed, never silently partial. Reads concurrent
+//! with an `apply_edges` may observe some shards pre-delta and others
+//! post-delta (there is no cross-shard snapshot isolation); a single
+//! client that orders its own requests sees sequential behavior.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::metrics::{PhaseSecs, RunReport};
+use crate::engine::sink::sample_key;
+use crate::engine::{
+    CancelToken, ClassSample, InstanceList, MotifInstance, MotifQuery, Output, QueryAborted,
+    SampleSummary, Scope, TopVertices,
+};
+use crate::motifs::counter::{MotifCounts, SlotMapper};
+use crate::motifs::{Direction, MotifSize};
+use crate::service::api::{Request, Response, VertexRow};
+use crate::service::wire;
+use crate::stream::{DeltaOp, DeltaReport, EdgeDelta};
+use crate::telemetry::MetricsRegistry;
+use crate::util::json::Json;
+
+use super::plan::ShardPlan;
+use super::{ShardError, ShardErrorKind};
+
+/// Attempts per RPC (first try + retries).
+pub const RPC_ATTEMPTS: u32 = 3;
+/// Backoff before retry `i` is `RETRY_BACKOFF × 2^(i−1)`.
+const RETRY_BACKOFF: Duration = Duration::from_millis(50);
+/// TCP connect (and connect-time ping) timeout.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(5);
+/// Slack past the client deadline before a read is abandoned — the worker
+/// enforces the deadline itself and answers a typed abort; the grace lets
+/// that answer arrive instead of tearing the connection down.
+const READ_GRACE: Duration = Duration::from_secs(2);
+
+/// One worker link: lazily dialed, re-dialed after errors. The mutex
+/// serializes whole request/response exchanges, so concurrent scatters
+/// interleave per-connection without mixing frames.
+struct ShardConn {
+    index: usize,
+    addr: String,
+    stream: Mutex<Option<BufReader<TcpStream>>>,
+    next_id: AtomicU64,
+}
+
+/// Scatter-gather front over one [`ShardPlan`]'s workers. See the module
+/// docs for merge semantics; [`crate::service::VdmcService::with_router`]
+/// mounts one behind the ordinary service façade.
+pub struct Router {
+    plan: ShardPlan,
+    conns: Vec<ShardConn>,
+    metrics: Option<Arc<MetricsRegistry>>,
+    /// Serializes `apply_edges` fan-outs: the ball-fetch phase must see
+    /// the state every shard will apply the deltas to.
+    write_lock: Mutex<()>,
+}
+
+impl Router {
+    /// A router over `plan` with no connections dialed yet — links come
+    /// up lazily on first use. Prefer [`Router::connect`], which also
+    /// verifies every worker's identity up front.
+    pub fn new(plan: ShardPlan) -> Router {
+        let conns = plan
+            .shards
+            .iter()
+            .map(|s| ShardConn {
+                index: s.index,
+                addr: s.addr.clone(),
+                stream: Mutex::new(None),
+                next_id: AtomicU64::new(1),
+            })
+            .collect();
+        Router { plan, conns, metrics: None, write_lock: Mutex::new(()) }
+    }
+
+    /// Dial and identity-check every worker (version + shard index via
+    /// ping), failing with a typed [`ShardError`] on the first bad one.
+    pub fn connect(plan: ShardPlan) -> Result<Router> {
+        let router = Router::new(plan);
+        router.ping_all()?;
+        Ok(router)
+    }
+
+    /// Ping every shard (dialing as needed); the connect-time health and
+    /// identity sweep.
+    pub fn ping_all(&self) -> Result<()> {
+        let shards: Vec<usize> = (0..self.conns.len()).collect();
+        let results = self.scatter(&shards, |i| self.rpc(i, &Request::Ping, None).map(|_| ()));
+        fail_on_error(results)?;
+        Ok(())
+    }
+
+    /// Register the metrics registry the per-shard RPC counters land in
+    /// (`vdmc_dist_rpc_total` / `_errors_total` / `_retries_total`).
+    pub fn set_registry(&mut self, registry: Arc<MetricsRegistry>) {
+        self.metrics = Some(registry);
+    }
+
+    /// The graph id this router serves (the plan's).
+    pub fn graph(&self) -> &str {
+        &self.plan.graph
+    }
+
+    pub fn plan(&self) -> &ShardPlan {
+        &self.plan
+    }
+
+    /// Route one request. Supported: `count`, `instances`, `sample`,
+    /// `vertex_counts`, `apply_edges` (plus `ping`, answered per shard by
+    /// [`Router::ping_all`]); anything else targeting the plan's graph is
+    /// a typed error — workers own their slices, there is no cross-shard
+    /// load/evict/maintain.
+    pub fn handle(&self, req: Request, cancel: Option<&CancelToken>) -> Result<Response> {
+        let t0 = Instant::now();
+        check_cancel(cancel)?;
+        let deadline = cancel.and_then(|c| c.deadline());
+        if req.graph() != Some(self.plan.graph.as_str()) {
+            bail!(
+                "router serves graph {:?} only (request targets {:?})",
+                self.plan.graph,
+                req.graph()
+            );
+        }
+        match req {
+            Request::Count { graph, query } => self.count(&graph, &query, deadline, t0),
+            Request::Instances { graph, query } => self.instances(&graph, &query, deadline, t0),
+            Request::Sample { graph, query } => self.sample(&graph, &query, deadline, t0),
+            Request::VertexCounts { graph, size, direction, scope } => {
+                self.vertex_counts(&graph, size, direction, &scope, deadline)
+            }
+            Request::ApplyEdges { graph, deltas } => {
+                self.apply_edges(&graph, &deltas, deadline, t0)
+            }
+            other => bail!(
+                "op {:?} is not routable across shards (the router serves count, \
+                 instances, sample, vertex_counts and apply_edges; shard-local ops \
+                 go to a worker directly)",
+                other.op()
+            ),
+        }
+    }
+
+    /// Per-class top-k vertex ranking over the whole cluster, assembled
+    /// from a full owned-row gather with the engine's exact ranking
+    /// (count descending, vertex id ascending on ties). Typed API — the
+    /// wire reaches it through the service façade's maintain output.
+    pub fn top_vertices(
+        &self,
+        size: MotifSize,
+        direction: Direction,
+        top_k: usize,
+        cancel: Option<&CancelToken>,
+    ) -> Result<TopVertices> {
+        if top_k == 0 {
+            bail!("top-vertices needs k >= 1");
+        }
+        check_cancel(cancel)?;
+        let deadline = cancel.and_then(|c| c.deadline());
+        let g = self.gather_owned_rows(size, direction, deadline)?;
+        let k = size.k();
+        let totals = g.class_instance_totals(k)?;
+        let per_class: Vec<Vec<(u32, u64)>> = (0..g.n_classes)
+            .map(|slot| {
+                let mut ranked: Vec<(u32, u64)> = (0..g.n)
+                    .filter_map(|v| {
+                        let c = g.per_vertex[v * g.n_classes + slot];
+                        if c > 0 {
+                            Some((v as u32, c))
+                        } else {
+                            None
+                        }
+                    })
+                    .collect();
+                ranked.sort_unstable_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+                ranked.truncate(top_k);
+                ranked
+            })
+            .collect();
+        Ok(TopVertices {
+            k,
+            direction,
+            class_ids: g.class_ids,
+            top_k,
+            per_class,
+            total_instances: totals.iter().sum(),
+        })
+    }
+
+    // ------------------------------------------------------------ queries
+
+    fn count(
+        &self,
+        graph: &str,
+        query: &MotifQuery,
+        deadline: Option<Instant>,
+        t0: Instant,
+    ) -> Result<Response> {
+        if !matches!(query.output, Output::Counts) {
+            bail!("router count handler needs a counts output");
+        }
+        if !query.scope.is_all() {
+            bail!(
+                "scoped count is not supported across shards; use vertex_counts \
+                 for exact scoped rows"
+            );
+        }
+        let k = query.size.k();
+        let g = self.gather_owned_rows(query.size, query.direction, deadline)?;
+        let per_class = g.class_instance_totals(k)?;
+        let total: u64 = per_class.iter().sum();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let counts = MotifCounts {
+            k,
+            direction: query.direction,
+            n: g.n,
+            n_classes: g.n_classes,
+            per_vertex: g.per_vertex,
+            class_ids: g.class_ids,
+            per_class_instances: per_class.clone(),
+            total_instances: total,
+            elapsed_secs: elapsed,
+        };
+        let report = synth_report(total, per_class, elapsed);
+        Ok(Response::Counted { graph: graph.to_string(), counts, report })
+    }
+
+    fn instances(
+        &self,
+        graph: &str,
+        query: &MotifQuery,
+        deadline: Option<Instant>,
+        t0: Instant,
+    ) -> Result<Response> {
+        let limit = match query.output {
+            Output::Instances { limit } => limit,
+            _ => bail!("router instances handler needs an instances output"),
+        };
+        match &query.scope {
+            Scope::All => {}
+            Scope::Vertices(vs) => self.check_vertices(vs)?,
+            Scope::Neighborhood { .. } => bail!(
+                "neighborhood-scoped instances are not exact across shards (no \
+                 single shard can expand the seed ball); expand the neighborhood \
+                 with vertex_counts and send an explicit vertex scope"
+            ),
+        }
+        let owners = self.owner_shards();
+        let results = self.scatter(&owners, |i| {
+            let req =
+                Request::Instances { graph: graph.to_string(), query: query.clone() };
+            let j = self.rpc(i, &req, deadline)?;
+            parse_instances(&j).map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+        });
+        let parts = fail_on_error(results)?;
+        let mapper = SlotMapper::new(query.size.k(), query.direction);
+        let class_ids = mapper.class_ids();
+        let slot_of: BTreeMap<u16, u16> =
+            class_ids.iter().enumerate().map(|(s, &c)| (c, s as u16)).collect();
+        let mut truncated = parts.iter().any(|(_, p)| p.truncated);
+        let mut merged: Vec<MotifInstance> = Vec::new();
+        for (i, part) in parts {
+            for (verts, cid) in part.instances {
+                let root = verts.iter().copied().min().unwrap_or(u32::MAX);
+                if self.plan.shard_of(root) != Some(i) {
+                    continue; // ghost-rooted: its owner reports it
+                }
+                let slot = match slot_of.get(&cid) {
+                    Some(&s) => s,
+                    None => bail!(
+                        "shard {i} answered unknown class id {cid} for k={} {}",
+                        query.size.k(),
+                        query.direction.label()
+                    ),
+                };
+                merged.push(MotifInstance { verts, class_slot: slot });
+            }
+        }
+        merged.sort_unstable_by(|a, b| a.verts.cmp(&b.verts));
+        let mut per_class_seen = vec![0u64; class_ids.len()];
+        for m in &merged {
+            per_class_seen[m.class_slot as usize] += 1;
+        }
+        // exact whenever no shard truncated; under truncation the flag is
+        // the only trustworthy part, matching single-process semantics
+        let total_seen = merged.len() as u64;
+        if merged.len() > limit {
+            truncated = true;
+            merged.truncate(limit);
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let report = synth_report(total_seen, per_class_seen.clone(), elapsed);
+        let list = InstanceList {
+            k: query.size.k(),
+            direction: query.direction,
+            class_ids,
+            instances: merged,
+            truncated,
+            total_seen,
+            per_class_seen,
+        };
+        Ok(Response::Instances { graph: graph.to_string(), list, report })
+    }
+
+    fn sample(
+        &self,
+        graph: &str,
+        query: &MotifQuery,
+        deadline: Option<Instant>,
+        t0: Instant,
+    ) -> Result<Response> {
+        let (per_class_cap, seed) = match query.output {
+            Output::Sample { per_class, seed } => (per_class, seed),
+            _ => bail!("router sample handler needs a sample output"),
+        };
+        if !query.scope.is_all() {
+            bail!(
+                "scoped sample is not exact across shards (per-class seen totals \
+                 cannot be merged under a scope); sample the whole graph or \
+                 materialize scoped instances instead"
+            );
+        }
+        // exact per-class totals come from the row gather, not from the
+        // workers' local streams (those also see ghost-rooted instances)
+        let g = self.gather_owned_rows(query.size, query.direction, deadline)?;
+        let totals = g.class_instance_totals(query.size.k())?;
+        let owners = self.owner_shards();
+        let results = self.scatter(&owners, |i| {
+            let req = Request::Sample { graph: graph.to_string(), query: query.clone() };
+            let j = self.rpc(i, &req, deadline)?;
+            parse_sample(&j).map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+        });
+        let parts = fail_on_error(results)?;
+        let slot_of: BTreeMap<u16, u16> =
+            g.class_ids.iter().enumerate().map(|(s, &c)| (c, s as u16)).collect();
+        let mut pools: Vec<Vec<(u64, Vec<u32>)>> = vec![Vec::new(); g.n_classes];
+        for (i, classes) in parts {
+            for (cid, rows) in classes {
+                let slot = match slot_of.get(&cid) {
+                    Some(&s) => s,
+                    None => bail!("shard {i} answered unknown class id {cid}"),
+                };
+                for verts in rows {
+                    let root = verts.iter().copied().min().unwrap_or(u32::MAX);
+                    if self.plan.shard_of(root) != Some(i) {
+                        continue; // ghost-rooted: sampled again by its owner
+                    }
+                    let key = sample_key(seed, &verts, slot);
+                    pools[slot as usize].push((key, verts));
+                }
+            }
+        }
+        let classes: Vec<ClassSample> = pools
+            .into_iter()
+            .enumerate()
+            .map(|(slot, mut pool)| {
+                pool.sort_unstable_by(|a, b| a.0.cmp(&b.0).then(a.1.cmp(&b.1)));
+                pool.truncate(per_class_cap);
+                ClassSample {
+                    slot: slot as u16,
+                    class_id: g.class_ids[slot],
+                    seen: totals[slot],
+                    instances: pool
+                        .into_iter()
+                        .map(|(_, verts)| MotifInstance { verts, class_slot: slot as u16 })
+                        .collect(),
+                }
+            })
+            .collect();
+        let total_seen: u64 = totals.iter().sum();
+        let elapsed = t0.elapsed().as_secs_f64();
+        let report = synth_report(total_seen, totals, elapsed);
+        let sample = SampleSummary {
+            k: query.size.k(),
+            direction: query.direction,
+            per_class: per_class_cap,
+            seed,
+            classes,
+            total_seen,
+        };
+        Ok(Response::Sampled { graph: graph.to_string(), sample, report })
+    }
+
+    fn vertex_counts(
+        &self,
+        graph: &str,
+        size: MotifSize,
+        direction: Direction,
+        scope: &Scope,
+        deadline: Option<Instant>,
+    ) -> Result<Response> {
+        let expected = SlotMapper::new(size.k(), direction).class_ids();
+        let rows = match scope {
+            Scope::All => bail!(
+                "vertex_counts needs an explicit scope (a vertex list or a seed \
+                 neighborhood); use count for the whole graph"
+            ),
+            Scope::Vertices(vs) => {
+                if vs.is_empty() {
+                    bail!("vertex scope needs at least one vertex");
+                }
+                self.check_vertices(vs)?;
+                // only the owners of the requested rows are consulted, so
+                // lookups keep working while unrelated shards are down
+                let mut by_owner: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+                for &v in vs {
+                    if let Some(owner) = self.plan.shard_of(v) {
+                        by_owner.entry(owner).or_default().push(v);
+                    }
+                }
+                let owners: Vec<usize> = by_owner.keys().copied().collect();
+                let results = self.scatter(&owners, |i| {
+                    let mine = by_owner.get(&i).cloned().unwrap_or_default();
+                    let req = Request::VertexCounts {
+                        graph: graph.to_string(),
+                        size,
+                        direction,
+                        scope: Scope::Vertices(mine),
+                    };
+                    let j = self.rpc(i, &req, deadline)?;
+                    parse_vertex_counts(&j)
+                        .map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+                });
+                let parts = fail_on_error(results)?;
+                let mut by_vertex: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+                for (i, part) in parts {
+                    if part.class_ids != expected {
+                        bail!("shard {i} answered unexpected class ids {:?}", part.class_ids);
+                    }
+                    for (v, counts) in part.rows {
+                        by_vertex.insert(v, counts);
+                    }
+                }
+                // client order (duplicates included), like a local lookup
+                let mut out = Vec::with_capacity(vs.len());
+                for &v in vs {
+                    match by_vertex.get(&v) {
+                        Some(counts) => {
+                            out.push(VertexRow { vertex: v, counts: counts.clone() })
+                        }
+                        None => bail!("shard {:?} did not answer row {v}", self.plan.shard_of(v)),
+                    }
+                }
+                out
+            }
+            Scope::Neighborhood { seeds, radius } => {
+                if *radius > self.plan.fringe_radius() {
+                    bail!(
+                        "neighborhood radius {radius} exceeds the plan's ghost fringe \
+                         (k_max - 1 = {}); rebuild the plan with a larger --k-max",
+                        self.plan.fringe_radius()
+                    );
+                }
+                self.check_vertices(seeds)?;
+                // every shard expands the same seeds on its local subgraph
+                // and we keep the ball members each one owns: a <= (k-1)-hop
+                // path ending at an owned vertex lies inside that shard's
+                // member set, so the local ball agrees with the global one
+                // on owned vertices
+                let owners = self.owner_shards();
+                let results = self.scatter(&owners, |i| {
+                    let req = Request::VertexCounts {
+                        graph: graph.to_string(),
+                        size,
+                        direction,
+                        scope: Scope::Neighborhood { seeds: seeds.clone(), radius: *radius },
+                    };
+                    let j = self.rpc(i, &req, deadline)?;
+                    parse_vertex_counts(&j)
+                        .map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+                });
+                let parts = fail_on_error(results)?;
+                let mut by_vertex: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+                for (i, part) in parts {
+                    if part.class_ids != expected {
+                        bail!("shard {i} answered unexpected class ids {:?}", part.class_ids);
+                    }
+                    for (v, counts) in part.rows {
+                        if self.plan.shard_of(v) == Some(i) {
+                            by_vertex.insert(v, counts);
+                        }
+                    }
+                }
+                by_vertex
+                    .into_iter()
+                    .map(|(vertex, counts)| VertexRow { vertex, counts })
+                    .collect()
+            }
+        };
+        Ok(Response::VertexRows {
+            graph: graph.to_string(),
+            size,
+            direction,
+            class_ids: expected,
+            rows,
+            // the exact global total needs a full gather, which would defeat
+            // partial-health lookups — 0 is the documented "not maintained
+            // router-side" sentinel; use count for exact totals
+            total_instances: 0,
+        })
+    }
+
+    fn apply_edges(
+        &self,
+        graph: &str,
+        deltas: &[EdgeDelta],
+        deadline: Option<Instant>,
+        t0: Instant,
+    ) -> Result<Response> {
+        let _serialize = self.write_lock.lock().unwrap_or_else(|e| e.into_inner());
+        let radius = self.plan.fringe_radius();
+        // phase 1: fetch the current (k-1)-ball around every in-range
+        // insert endpoint from its owner — all fetches strictly before any
+        // apply, so every ball reflects the same pre-batch graph
+        let mut by_owner: BTreeMap<usize, BTreeSet<u32>> = BTreeMap::new();
+        for d in deltas {
+            if d.op != DeltaOp::Insert {
+                continue;
+            }
+            for w in [d.u, d.v] {
+                if let Some(owner) = self.plan.shard_of(w) {
+                    by_owner.entry(owner).or_default().insert(w);
+                }
+            }
+        }
+        let owners: Vec<usize> = by_owner.keys().copied().collect();
+        let results = self.scatter(&owners, |i| {
+            let mut edges: Vec<(u32, u32)> = Vec::new();
+            if let Some(ws) = by_owner.get(&i) {
+                for &w in ws {
+                    let req =
+                        Request::FetchBall { graph: graph.to_string(), vertex: w, radius };
+                    let j = self.rpc(i, &req, deadline)?;
+                    edges.extend(
+                        parse_ball_edges(&j)
+                            .map_err(|m| self.error(i, ShardErrorKind::Protocol, m))?,
+                    );
+                }
+            }
+            Ok(edges)
+        });
+        let mut ghost: BTreeSet<(u32, u32)> = BTreeSet::new();
+        for (_, edges) in fail_on_error(results)? {
+            ghost.extend(edges);
+        }
+        let ghost_inserts: Vec<EdgeDelta> =
+            ghost.into_iter().map(|(u, v)| EdgeDelta::insert(u, v)).collect();
+        // phase 2, per shard: (a) ghost-ball inserts (repair the fringe;
+        // report ignored — most are duplicates of edges already present),
+        // (b) deltas this shard is not authoritative for (report ignored),
+        // (c) deltas it is authoritative for — the owner of the minimal
+        // endpoint — whose reports sum to exactly the single-process one
+        let all: Vec<usize> = (0..self.conns.len()).collect();
+        let results = self.scatter(&all, |i| {
+            if !ghost_inserts.is_empty() {
+                self.rpc(
+                    i,
+                    &Request::ApplyEdges {
+                        graph: graph.to_string(),
+                        deltas: ghost_inserts.clone(),
+                    },
+                    deadline,
+                )?;
+            }
+            let mut mine: Vec<EdgeDelta> = Vec::new();
+            let mut other: Vec<EdgeDelta> = Vec::new();
+            for d in deltas {
+                if self.authority(d) == i {
+                    mine.push(*d);
+                } else {
+                    other.push(*d);
+                }
+            }
+            if !other.is_empty() {
+                self.rpc(
+                    i,
+                    &Request::ApplyEdges { graph: graph.to_string(), deltas: other },
+                    deadline,
+                )?;
+            }
+            if mine.is_empty() {
+                return Ok(DeltaReport::default());
+            }
+            let j = self.rpc(
+                i,
+                &Request::ApplyEdges { graph: graph.to_string(), deltas: mine },
+                deadline,
+            )?;
+            parse_delta_report(&j).map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+        });
+        let parts = fail_on_error(results)?;
+        let mut report = DeltaReport::default();
+        for (_, part) in parts {
+            accumulate_report(&mut report, &part);
+        }
+        report.elapsed_secs = t0.elapsed().as_secs_f64();
+        Ok(Response::Applied { graph: graph.to_string(), report })
+    }
+
+    // ------------------------------------------------------------ gathers
+
+    /// Scatter an owned-rows `vertex_counts` to every non-empty shard and
+    /// assemble the full n × classes matrix. The exactness backbone of
+    /// count / sample / top_vertices.
+    fn gather_owned_rows(
+        &self,
+        size: MotifSize,
+        direction: Direction,
+        deadline: Option<Instant>,
+    ) -> Result<GatheredRows> {
+        let expected = SlotMapper::new(size.k(), direction).class_ids();
+        let n_classes = expected.len();
+        let n = self.plan.n;
+        let owners = self.owner_shards();
+        let results = self.scatter(&owners, |i| {
+            let spec = &self.plan.shards[i];
+            let vs: Vec<u32> = (spec.v_start..spec.v_end).collect();
+            let req = Request::VertexCounts {
+                graph: self.plan.graph.clone(),
+                size,
+                direction,
+                scope: Scope::Vertices(vs),
+            };
+            let j = self.rpc(i, &req, deadline)?;
+            parse_vertex_counts(&j).map_err(|m| self.error(i, ShardErrorKind::Protocol, m))
+        });
+        let parts = fail_on_error(results)?;
+        let mut per_vertex = vec![0u64; n * n_classes];
+        for (i, part) in parts {
+            if part.class_ids != expected {
+                bail!(
+                    "shard {i} answered class ids {:?} where the router derives {:?} — \
+                     mixed worker builds?",
+                    part.class_ids,
+                    expected
+                );
+            }
+            let spec = &self.plan.shards[i];
+            let owned = (spec.v_end - spec.v_start) as usize;
+            if part.rows.len() != owned {
+                bail!("shard {i} answered {} of its {owned} owned rows", part.rows.len());
+            }
+            for (v, counts) in part.rows {
+                if !(spec.v_start..spec.v_end).contains(&v) {
+                    bail!("shard {i} answered row {v} outside its owned range");
+                }
+                if counts.len() != n_classes {
+                    bail!("shard {i} answered a {}-class row, expected {n_classes}", counts.len());
+                }
+                per_vertex[v as usize * n_classes..][..n_classes].copy_from_slice(&counts);
+            }
+        }
+        Ok(GatheredRows { n, n_classes, class_ids: expected, per_vertex })
+    }
+
+    // ---------------------------------------------------------- plumbing
+
+    /// Shards that own at least one vertex. Degree balancing can leave a
+    /// middle shard empty on skewed graphs; it owns no roots, so result
+    /// scatters skip it (it still receives deltas and fringe repairs).
+    fn owner_shards(&self) -> Vec<usize> {
+        self.plan.shards.iter().filter(|s| s.v_start < s.v_end).map(|s| s.index).collect()
+    }
+
+    /// The shard whose report is authoritative for a delta: the owner of
+    /// its minimal endpoint (shard 0 accounts out-of-range deltas, which
+    /// every session skips as invalid anyway).
+    fn authority(&self, d: &EdgeDelta) -> usize {
+        self.plan.shard_of(d.u.min(d.v)).unwrap_or(0)
+    }
+
+    fn check_vertices(&self, vs: &[u32]) -> Result<()> {
+        for &v in vs {
+            if (v as usize) >= self.plan.n {
+                bail!("vertex {v} is out of range (the plan's graph has {} vertices)", self.plan.n);
+            }
+        }
+        Ok(())
+    }
+
+    /// Run `f(shard)` concurrently for each listed shard, pairing every
+    /// result with its shard index (order preserved).
+    fn scatter<T, F>(&self, shards: &[usize], f: F) -> Vec<(usize, Result<T, ShardError>)>
+    where
+        T: Send,
+        F: Fn(usize) -> Result<T, ShardError> + Sync,
+    {
+        std::thread::scope(|scope| {
+            let f = &f;
+            let handles: Vec<(usize, std::thread::ScopedJoinHandle<'_, Result<T, ShardError>>)> =
+                shards.iter().map(|&i| (i, scope.spawn(move || f(i)))).collect();
+            handles
+                .into_iter()
+                .map(|(i, h)| {
+                    let r = h.join().unwrap_or_else(|_| {
+                        Err(self.error(
+                            i,
+                            ShardErrorKind::Protocol,
+                            "router scatter thread panicked".to_string(),
+                        ))
+                    });
+                    (i, r)
+                })
+                .collect()
+        })
+    }
+
+    /// One RPC with retries: reconnect + exponential backoff on
+    /// connect/io/protocol failures, immediate surfacing of remote errors
+    /// and identity mismatches (retrying those cannot help).
+    fn rpc(
+        &self,
+        shard: usize,
+        req: &Request,
+        deadline: Option<Instant>,
+    ) -> Result<Json, ShardError> {
+        self.bump_rpc(shard, req.op());
+        let conn = &self.conns[shard];
+        let mut last: Option<ShardError> = None;
+        for attempt in 0..RPC_ATTEMPTS {
+            if attempt > 0 {
+                if let Some(d) = deadline {
+                    if Instant::now() >= d {
+                        break;
+                    }
+                }
+                self.bump_retry(shard);
+                std::thread::sleep(RETRY_BACKOFF * 2u32.saturating_pow(attempt - 1));
+            }
+            match self.try_rpc(conn, req, deadline) {
+                Ok(j) => return Ok(j),
+                Err(e) => {
+                    self.bump_error(shard, e.kind);
+                    let fatal = matches!(
+                        e.kind,
+                        ShardErrorKind::Remote
+                            | ShardErrorKind::VersionMismatch
+                            | ShardErrorKind::WrongShard
+                    );
+                    if !fatal {
+                        // a broken or desynced link never serves the retry
+                        *conn.stream.lock().unwrap_or_else(|p| p.into_inner()) = None;
+                    }
+                    if fatal {
+                        return Err(e);
+                    }
+                    last = Some(e);
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| {
+            self.error(shard, ShardErrorKind::Io, "rpc attempts exhausted".to_string())
+        }))
+    }
+
+    /// One request/response exchange over the shard's link, dialing it
+    /// first when down. Holds the connection for the whole exchange.
+    fn try_rpc(
+        &self,
+        conn: &ShardConn,
+        req: &Request,
+        deadline: Option<Instant>,
+    ) -> Result<Json, ShardError> {
+        let mut guard = conn.stream.lock().unwrap_or_else(|p| p.into_inner());
+        if guard.is_none() {
+            *guard = Some(self.dial(conn)?);
+        }
+        let link = match guard.as_mut() {
+            Some(l) => l,
+            None => {
+                return Err(self.conn_error(
+                    conn,
+                    ShardErrorKind::Protocol,
+                    "link missing after dial".to_string(),
+                ))
+            }
+        };
+        let deadline_ms = match deadline {
+            Some(d) => {
+                let left = d.saturating_duration_since(Instant::now());
+                if left.is_zero() {
+                    return Err(self.conn_error(
+                        conn,
+                        ShardErrorKind::Io,
+                        "deadline exceeded before send".to_string(),
+                    ));
+                }
+                Some((left.as_millis() as u64).max(1))
+            }
+            None => None,
+        };
+        let id = conn.next_id.fetch_add(1, Ordering::SeqCst);
+        let line = wire::encode_request(req, Some(id), deadline_ms);
+        let read_timeout =
+            deadline.map(|d| d.saturating_duration_since(Instant::now()) + READ_GRACE);
+        link.get_ref()
+            .set_read_timeout(read_timeout)
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        let mut w = link.get_ref();
+        writeln!(w, "{line}")
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        let mut resp = String::new();
+        let got = link
+            .read_line(&mut resp)
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        if got == 0 {
+            return Err(self.conn_error(
+                conn,
+                ShardErrorKind::Io,
+                "connection closed by worker".to_string(),
+            ));
+        }
+        let j = Json::parse(resp.trim_end()).map_err(|e| {
+            self.conn_error(conn, ShardErrorKind::Protocol, format!("bad response json: {e}"))
+        })?;
+        if j.get("id").and_then(Json::as_u64) != Some(id) {
+            return Err(self.conn_error(
+                conn,
+                ShardErrorKind::Protocol,
+                "response id does not echo the request".to_string(),
+            ));
+        }
+        match j.get("ok").and_then(Json::as_bool) {
+            Some(true) => Ok(j),
+            Some(false) => {
+                let msg = j
+                    .get("error")
+                    .and_then(Json::as_str)
+                    .unwrap_or("unspecified remote error")
+                    .to_string();
+                Err(self.conn_error(conn, ShardErrorKind::Remote, msg))
+            }
+            None => Err(self.conn_error(
+                conn,
+                ShardErrorKind::Protocol,
+                "response has no ok field".to_string(),
+            )),
+        }
+    }
+
+    /// Dial a worker and verify its identity: crate version and shard
+    /// index must match the plan (a ping answers both).
+    fn dial(&self, conn: &ShardConn) -> Result<BufReader<TcpStream>, ShardError> {
+        let sa = conn
+            .addr
+            .to_socket_addrs()
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Connect, e.to_string()))?
+            .next()
+            .ok_or_else(|| {
+                self.conn_error(
+                    conn,
+                    ShardErrorKind::Connect,
+                    "address resolves to nothing".to_string(),
+                )
+            })?;
+        let stream = TcpStream::connect_timeout(&sa, CONNECT_TIMEOUT)
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Connect, e.to_string()))?;
+        stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(Some(CONNECT_TIMEOUT))
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        let mut link = BufReader::new(stream);
+        let id = conn.next_id.fetch_add(1, Ordering::SeqCst);
+        let line = wire::encode_request(&Request::Ping, Some(id), None);
+        let mut w = link.get_ref();
+        writeln!(w, "{line}")
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        let mut resp = String::new();
+        let got = link
+            .read_line(&mut resp)
+            .map_err(|e| self.conn_error(conn, ShardErrorKind::Io, e.to_string()))?;
+        if got == 0 {
+            return Err(self.conn_error(
+                conn,
+                ShardErrorKind::Io,
+                "connection closed during identity check".to_string(),
+            ));
+        }
+        let j = Json::parse(resp.trim_end()).map_err(|e| {
+            self.conn_error(conn, ShardErrorKind::Protocol, format!("bad ping response: {e}"))
+        })?;
+        if j.get("ok").and_then(Json::as_bool) != Some(true) {
+            let msg = j
+                .get("error")
+                .and_then(Json::as_str)
+                .unwrap_or("ping rejected")
+                .to_string();
+            return Err(self.conn_error(conn, ShardErrorKind::Remote, msg));
+        }
+        let version = j.get("version").and_then(Json::as_str).unwrap_or("<none>");
+        if version != env!("CARGO_PKG_VERSION") {
+            return Err(self.conn_error(
+                conn,
+                ShardErrorKind::VersionMismatch,
+                format!("worker runs {version}, router runs {}", env!("CARGO_PKG_VERSION")),
+            ));
+        }
+        match j.get("shard").and_then(Json::as_u64) {
+            Some(s) if s as usize == conn.index => Ok(link),
+            Some(s) => Err(self.conn_error(
+                conn,
+                ShardErrorKind::WrongShard,
+                format!("worker serves shard {s}, the plan assigns shard {}", conn.index),
+            )),
+            None => Err(self.conn_error(
+                conn,
+                ShardErrorKind::WrongShard,
+                "worker reports no shard identity (started without --shard?)".to_string(),
+            )),
+        }
+    }
+
+    fn error(&self, shard: usize, kind: ShardErrorKind, message: String) -> ShardError {
+        ShardError { shard, addr: self.conns[shard].addr.clone(), kind, message }
+    }
+
+    fn conn_error(&self, conn: &ShardConn, kind: ShardErrorKind, message: String) -> ShardError {
+        ShardError { shard: conn.index, addr: conn.addr.clone(), kind, message }
+    }
+
+    fn bump_rpc(&self, shard: usize, op: &str) {
+        if let Some(reg) = &self.metrics {
+            reg.counter_with(
+                "vdmc_dist_rpc_total",
+                "Shard RPCs issued by the router.",
+                &[("shard", &shard.to_string()), ("op", op)],
+            )
+            .inc();
+        }
+    }
+
+    fn bump_error(&self, shard: usize, kind: ShardErrorKind) {
+        if let Some(reg) = &self.metrics {
+            reg.counter_with(
+                "vdmc_dist_rpc_errors_total",
+                "Shard RPC failures observed by the router, by kind.",
+                &[("shard", &shard.to_string()), ("kind", kind.label())],
+            )
+            .inc();
+        }
+    }
+
+    fn bump_retry(&self, shard: usize) {
+        if let Some(reg) = &self.metrics {
+            reg.counter_with(
+                "vdmc_dist_retries_total",
+                "Shard RPC retry attempts issued by the router.",
+                &[("shard", &shard.to_string())],
+            )
+            .inc();
+        }
+    }
+}
+
+// ------------------------------------------------------------ free helpers
+
+/// Full owned-row gather: the global n × classes matrix.
+struct GatheredRows {
+    n: usize,
+    n_classes: usize,
+    class_ids: Vec<u16>,
+    per_vertex: Vec<u64>,
+}
+
+impl GatheredRows {
+    /// Per-class instance totals: column sums / k (every instance has
+    /// exactly k member rows). Non-divisible sums mean shards disagree
+    /// about the graph — surfaced, never rounded.
+    fn class_instance_totals(&self, k: usize) -> Result<Vec<u64>> {
+        let mut totals = vec![0u64; self.n_classes];
+        for row in self.per_vertex.chunks(self.n_classes) {
+            for (t, c) in totals.iter_mut().zip(row) {
+                *t += c;
+            }
+        }
+        for t in totals.iter_mut() {
+            if *t % k as u64 != 0 {
+                bail!(
+                    "gathered column sum {} is not divisible by k={k} — shards \
+                     disagree about the graph (mid-delta read?)",
+                    *t
+                );
+            }
+            *t /= k as u64;
+        }
+        Ok(totals)
+    }
+}
+
+fn check_cancel(cancel: Option<&CancelToken>) -> Result<()> {
+    if let Some(c) = cancel {
+        if let Some(reason) = c.check() {
+            return Err(anyhow::Error::new(QueryAborted {
+                reason,
+                units_done: 0,
+                units_total: 0,
+            }));
+        }
+    }
+    Ok(())
+}
+
+/// First shard failure wins; otherwise the unwrapped per-shard values.
+fn fail_on_error<T>(results: Vec<(usize, Result<T, ShardError>)>) -> Result<Vec<(usize, T)>> {
+    let mut out = Vec::with_capacity(results.len());
+    for (i, r) in results {
+        match r {
+            Ok(v) => out.push((i, v)),
+            Err(e) => return Err(anyhow::Error::new(e)),
+        }
+    }
+    Ok(out)
+}
+
+/// The router has no enumeration run behind a merged answer — the workers
+/// did the enumerating. This is the report shape the service layer and
+/// CLI summaries expect, carrying the merged totals.
+fn synth_report(total: u64, per_class: Vec<u64>, elapsed: f64) -> RunReport {
+    RunReport {
+        workers: Vec::new(),
+        total_instances: total,
+        elapsed_secs: elapsed,
+        queue_items: 0,
+        queue_units: 0,
+        setup_secs: 0.0,
+        setup_reused: false,
+        phase_secs: PhaseSecs::default(),
+        tier_memory_bytes: 0,
+        per_class_totals: per_class,
+    }
+}
+
+/// Element-wise report sum (work tallies are per-shard local work; the
+/// delta accounting fields add up to exactly the single-process report).
+fn accumulate_report(into: &mut DeltaReport, part: &DeltaReport) {
+    into.inserted += part.inserted;
+    into.deleted += part.deleted;
+    into.skipped_duplicate += part.skipped_duplicate;
+    into.skipped_missing += part.skipped_missing;
+    into.skipped_invalid += part.skipped_invalid;
+    into.touched_vertices += part.touched_vertices;
+    into.reenumerated_units += part.reenumerated_units;
+    into.reenumerated_sets += part.reenumerated_sets;
+    into.overlay_entries += part.overlay_entries;
+    into.overlay_ratio = into.overlay_ratio.max(part.overlay_ratio);
+    into.compactions += part.compactions;
+}
+
+/// One shard's `vertex_counts` answer.
+struct VertexCountsPart {
+    class_ids: Vec<u16>,
+    rows: Vec<(u32, Vec<u64>)>,
+}
+
+fn parse_class_ids(j: Option<&Json>) -> Result<Vec<u16>, String> {
+    let arr = j.and_then(Json::as_arr).ok_or_else(|| "missing class_ids".to_string())?;
+    let mut ids = Vec::with_capacity(arr.len());
+    for x in arr {
+        let id = x.as_u64().ok_or_else(|| "non-integer class id".to_string())?;
+        if id > u16::MAX as u64 {
+            return Err(format!("class id {id} out of range"));
+        }
+        ids.push(id as u16);
+    }
+    Ok(ids)
+}
+
+fn parse_vertex_counts(j: &Json) -> Result<VertexCountsPart, String> {
+    let class_ids = parse_class_ids(j.get("class_ids"))?;
+    let counts = match j.get("counts") {
+        Some(Json::Obj(m)) => m,
+        _ => return Err("missing counts object".to_string()),
+    };
+    let mut rows = Vec::with_capacity(counts.len());
+    for (key, val) in counts {
+        let v: u32 = key.parse().map_err(|_| format!("bad vertex key {key:?}"))?;
+        let arr = val.as_arr().ok_or_else(|| format!("row {key} is not an array"))?;
+        let mut row = Vec::with_capacity(arr.len());
+        for c in arr {
+            row.push(c.as_u64().ok_or_else(|| format!("row {key} has a non-count entry"))?);
+        }
+        rows.push((v, row));
+    }
+    Ok(VertexCountsPart { class_ids, rows })
+}
+
+/// One shard's `instances` answer: `(verts, canonical class id)` rows
+/// plus its truncation flag.
+struct InstancesPart {
+    truncated: bool,
+    instances: Vec<(Vec<u32>, u16)>,
+}
+
+fn parse_instances(j: &Json) -> Result<InstancesPart, String> {
+    let truncated =
+        j.get("truncated").and_then(Json::as_bool).ok_or_else(|| "missing truncated".to_string())?;
+    let arr =
+        j.get("instances").and_then(Json::as_arr).ok_or_else(|| "missing instances".to_string())?;
+    let mut instances = Vec::with_capacity(arr.len());
+    for row in arr {
+        let pair = row.as_arr().ok_or_else(|| "instance row is not an array".to_string())?;
+        if pair.len() != 2 {
+            return Err("instance row is not a [verts, class] pair".to_string());
+        }
+        let verts = parse_vertex_array(&pair[0])?;
+        let cid = pair[1].as_u64().ok_or_else(|| "non-integer instance class".to_string())?;
+        if cid > u16::MAX as u64 {
+            return Err(format!("instance class id {cid} out of range"));
+        }
+        instances.push((verts, cid as u16));
+    }
+    Ok(InstancesPart { truncated, instances })
+}
+
+/// One shard's `sample` answer: per canonical class id, the sampled
+/// vertex tuples (the local `seen` totals are ignored — they cover the
+/// shard's whole local stream, ghosts included).
+fn parse_sample(j: &Json) -> Result<Vec<(u16, Vec<Vec<u32>>)>, String> {
+    let classes = match j.get("classes") {
+        Some(Json::Obj(m)) => m,
+        _ => return Err("missing classes object".to_string()),
+    };
+    let mut out = Vec::with_capacity(classes.len());
+    for (key, val) in classes {
+        let cid: u16 = key
+            .strip_prefix('m')
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("bad class key {key:?}"))?;
+        let rows = val
+            .get("sample")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("class {key} has no sample array"))?;
+        let mut tuples = Vec::with_capacity(rows.len());
+        for row in rows {
+            tuples.push(parse_vertex_array(row)?);
+        }
+        out.push((cid, tuples));
+    }
+    Ok(out)
+}
+
+fn parse_ball_edges(j: &Json) -> Result<Vec<(u32, u32)>, String> {
+    let arr = j.get("edges").and_then(Json::as_arr).ok_or_else(|| "missing edges".to_string())?;
+    let mut edges = Vec::with_capacity(arr.len());
+    for row in arr {
+        let pair = row.as_arr().ok_or_else(|| "edge is not an array".to_string())?;
+        if pair.len() != 2 {
+            return Err("edge is not a [u, v] pair".to_string());
+        }
+        let u = pair[0].as_u64().ok_or_else(|| "non-integer edge endpoint".to_string())?;
+        let v = pair[1].as_u64().ok_or_else(|| "non-integer edge endpoint".to_string())?;
+        if u > u32::MAX as u64 || v > u32::MAX as u64 {
+            return Err("edge endpoint out of u32 range".to_string());
+        }
+        edges.push((u as u32, v as u32));
+    }
+    Ok(edges)
+}
+
+fn parse_vertex_array(j: &Json) -> Result<Vec<u32>, String> {
+    let arr = j.as_arr().ok_or_else(|| "vertex tuple is not an array".to_string())?;
+    let mut verts = Vec::with_capacity(arr.len());
+    for x in arr {
+        let v = x.as_u64().ok_or_else(|| "non-integer vertex id".to_string())?;
+        if v > u32::MAX as u64 {
+            return Err(format!("vertex id {v} out of u32 range"));
+        }
+        verts.push(v as u32);
+    }
+    Ok(verts)
+}
+
+fn parse_delta_report(j: &Json) -> Result<DeltaReport, String> {
+    let get_u = |key: &str| -> Result<u64, String> {
+        j.get(key).and_then(Json::as_u64).ok_or_else(|| format!("missing {key}"))
+    };
+    Ok(DeltaReport {
+        inserted: get_u("inserted")? as usize,
+        deleted: get_u("deleted")? as usize,
+        skipped_duplicate: get_u("skipped_duplicate")? as usize,
+        skipped_missing: get_u("skipped_missing")? as usize,
+        skipped_invalid: get_u("skipped_invalid")? as usize,
+        touched_vertices: get_u("touched_vertices")? as usize,
+        reenumerated_units: get_u("reenumerated_units")?,
+        reenumerated_sets: get_u("reenumerated_sets")?,
+        overlay_entries: get_u("overlay_entries")? as usize,
+        overlay_ratio: j.get("overlay_ratio").and_then(Json::as_f64).unwrap_or(0.0),
+        compactions: get_u("compactions")? as usize,
+        elapsed_secs: j.get("batch_secs").and_then(Json::as_f64).unwrap_or(0.0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn plan2() -> ShardPlan {
+        let g = generators::gnp_undirected(40, 0.1, 7);
+        let addrs = vec!["127.0.0.1:7501".to_string(), "127.0.0.1:7502".to_string()];
+        ShardPlan::build(&g, "g", "<mem>", 3, &addrs, 16).unwrap()
+    }
+
+    #[test]
+    fn gathered_rows_totals_divide_by_k() {
+        // 2 classes, 3 vertices, k = 3: column sums 3 and 6
+        let g = GatheredRows {
+            n: 3,
+            n_classes: 2,
+            class_ids: vec![5, 9],
+            per_vertex: vec![1, 2, 1, 2, 1, 2],
+        };
+        assert_eq!(g.class_instance_totals(3).unwrap(), vec![1, 2]);
+        let bad = GatheredRows {
+            n: 2,
+            n_classes: 1,
+            class_ids: vec![5],
+            per_vertex: vec![1, 1],
+        };
+        assert!(bad.class_instance_totals(3).is_err(), "non-divisible sum is surfaced");
+    }
+
+    #[test]
+    fn parse_vertex_counts_roundtrip() {
+        let mut counts = Json::obj();
+        counts.set("4", Json::from(vec![1u64, 0])).set("17", Json::from(vec![2u64, 3]));
+        let mut j = Json::obj();
+        j.set("class_ids", Json::from(vec![6u64, 14])).set("counts", counts);
+        let part = parse_vertex_counts(&j).unwrap();
+        assert_eq!(part.class_ids, vec![6, 14]);
+        // object keys sort lexicographically; the router reorders by id
+        let mut rows = part.rows.clone();
+        rows.sort();
+        assert_eq!(rows, vec![(4, vec![1, 0]), (17, vec![2, 3])]);
+        assert!(parse_vertex_counts(&Json::obj()).is_err());
+    }
+
+    #[test]
+    fn parse_instances_and_sample_roundtrip() {
+        let mut j = Json::obj();
+        j.set("truncated", false).set(
+            "instances",
+            Json::Arr(vec![Json::Arr(vec![
+                Json::from(vec![1u64, 5, 9]),
+                Json::from(12u64),
+            ])]),
+        );
+        let part = parse_instances(&j).unwrap();
+        assert!(!part.truncated);
+        assert_eq!(part.instances, vec![(vec![1, 5, 9], 12)]);
+
+        let mut class = Json::obj();
+        class
+            .set("seen", 7u64)
+            .set("sample", Json::Arr(vec![Json::from(vec![2u64, 3, 4])]));
+        let mut classes = Json::obj();
+        classes.set("m12", class);
+        let mut s = Json::obj();
+        s.set("classes", classes);
+        let sample = parse_sample(&s).unwrap();
+        assert_eq!(sample, vec![(12, vec![vec![2, 3, 4]])]);
+    }
+
+    #[test]
+    fn parse_delta_report_reads_wire_spelling() {
+        let mut j = Json::obj();
+        for key in [
+            "inserted",
+            "deleted",
+            "skipped_duplicate",
+            "skipped_missing",
+            "skipped_invalid",
+            "touched_vertices",
+            "reenumerated_units",
+            "reenumerated_sets",
+            "overlay_entries",
+            "compactions",
+        ] {
+            j.set(key, 2u64);
+        }
+        j.set("overlay_ratio", 0.5).set("batch_secs", 1.25);
+        let r = parse_delta_report(&j).unwrap();
+        assert_eq!(r.inserted, 2);
+        assert_eq!(r.reenumerated_units, 2);
+        assert_eq!(r.elapsed_secs, 1.25);
+        let mut a = DeltaReport::default();
+        accumulate_report(&mut a, &r);
+        accumulate_report(&mut a, &r);
+        assert_eq!(a.inserted, 4);
+        assert_eq!(a.overlay_ratio, 0.5, "ratio merges by max, not sum");
+    }
+
+    #[test]
+    fn router_rejects_unroutable_requests_without_io() {
+        let router = Router::new(plan2());
+        assert_eq!(router.graph(), "g");
+        let err = router
+            .handle(Request::Evict { graph: "g".to_string() }, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("not routable"), "{err}");
+        let err = router
+            .handle(
+                Request::Count {
+                    graph: "other".to_string(),
+                    query: MotifQuery::default(),
+                },
+                None,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("router serves graph"), "{err}");
+        // scoped count and out-of-fringe neighborhoods are typed rejects
+        let scoped = MotifQuery {
+            scope: Scope::Vertices(vec![1]),
+            ..MotifQuery::default()
+        };
+        let err = router
+            .handle(Request::Count { graph: "g".to_string(), query: scoped }, None)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("vertex_counts"), "{err}");
+        let err = router
+            .handle(
+                Request::VertexCounts {
+                    graph: "g".to_string(),
+                    size: MotifSize::Three,
+                    direction: Direction::Undirected,
+                    scope: Scope::Neighborhood { seeds: vec![1], radius: 9 },
+                },
+                None,
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("ghost fringe"), "{err}");
+    }
+
+    #[test]
+    fn authority_is_the_minimal_endpoint_owner() {
+        let router = Router::new(plan2());
+        let n = router.plan().n as u32;
+        let d = EdgeDelta::insert(n - 1, 0);
+        assert_eq!(router.authority(&d), 0, "min endpoint owns the accounting");
+        let oor = EdgeDelta::insert(n + 5, n + 6);
+        assert_eq!(router.authority(&oor), 0, "out-of-range deltas account on shard 0");
+    }
+}

@@ -1,0 +1,168 @@
+//! The worker role: one shard's slice of the graph behind the ordinary
+//! service stack.
+//!
+//! A worker is deliberately boring — it is the unchanged
+//! [`VdmcService`] + JSONL wire with two twists:
+//!
+//! 1. **Partial ingestion.** It loads only the edges whose endpoints
+//!    both lie in its member set (owned range ∪ ghost fringe), into a
+//!    full-`n` vertex space so every id on the wire stays global and no
+//!    translation tables exist anywhere in the cluster. By the fringe
+//!    invariant (see [`crate::dist`]), per-vertex counts for *owned*
+//!    rows on this induced subgraph equal the full-graph answer
+//!    exactly; ghost rows are partial and the router never reads them.
+//! 2. **Identity.** Its [`ServiceConfig::shard`] is stamped with the
+//!    shard index, so `Request::Ping` answers carry (version, shard) and
+//!    the router can reject mis-wired or mis-versioned deployments on
+//!    connect.
+//!
+//! The restriction to owned roots is a *router-side* invariant: a worker
+//! answers any query about its local subgraph (that openness is what
+//! `fetch_ball` relies on for delta fan-out). Point a plain client at a
+//! worker and scoped lookups of non-owned rows will be silently partial
+//! — always go through the router.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::engine::SessionConfig;
+use crate::graph::{io as graph_io, Graph};
+use crate::service::api::{GraphSource, Request, Response};
+use crate::service::{ServiceConfig, VdmcService};
+
+use super::plan::{ShardPlan, ShardSpec};
+
+/// The plan's spec for `shard`, or a descriptive error.
+pub fn spec(plan: &ShardPlan, shard: usize) -> Result<&ShardSpec> {
+    plan.shards
+        .get(shard)
+        .with_context(|| format!("plan has {} shard(s), no index {shard}", plan.shards.len()))
+}
+
+/// Global-id edge list of a graph: directed edges as-is, each undirected
+/// edge once (u < v) — the same convention as the edge-list file format.
+pub fn edge_list(graph: &Graph) -> Vec<(u32, u32)> {
+    if graph.directed {
+        graph.out.edges().collect()
+    } else {
+        graph.und.edges().filter(|&(u, v)| u < v).collect()
+    }
+}
+
+/// Worker-local graph from an edge-list file: streams the file, keeping
+/// only member-induced edges ([`graph_io::load_edge_list_filtered`]).
+pub fn load_local(plan: &ShardPlan, shard: usize, path: &Path) -> Result<Graph> {
+    let spec = spec(plan, shard)?;
+    let g = graph_io::load_edge_list_filtered(path, plan.directed, plan.n, &|v| {
+        spec.is_member(v)
+    })?;
+    Ok(g)
+}
+
+/// Worker-local graph induced from an already-loaded full graph — the
+/// in-process path tests and benches use to stand up clusters without
+/// touching disk.
+pub fn induced_local(plan: &ShardPlan, shard: usize, full: &Graph) -> Result<Graph> {
+    let spec = spec(plan, shard)?;
+    if full.n() != plan.n || full.directed != plan.directed {
+        bail!(
+            "graph (n={}, directed={}) does not match plan (n={}, directed={})",
+            full.n(),
+            full.directed,
+            plan.n,
+            plan.directed
+        );
+    }
+    let edges: Vec<(u32, u32)> = edge_list(full)
+        .into_iter()
+        .filter(|&(u, v)| spec.is_member(u) && spec.is_member(v))
+        .collect();
+    Ok(Graph::from_edges(plan.n, &edges, plan.directed))
+}
+
+/// Stand up the worker's service: shard identity stamped, local graph
+/// preloaded under the plan's graph id. Serving it is the caller's job
+/// (`vdmc worker` runs [`crate::service::serve_tcp`]; tests spawn the
+/// same loop on an in-process listener).
+pub fn worker_service(
+    plan: &ShardPlan,
+    shard: usize,
+    local: Graph,
+    session: SessionConfig,
+) -> Result<VdmcService> {
+    spec(plan, shard)?;
+    if local.n() != plan.n || local.directed != plan.directed {
+        bail!(
+            "local graph (n={}, directed={}) does not match plan (n={}, directed={})",
+            local.n(),
+            local.directed,
+            plan.n,
+            plan.directed
+        );
+    }
+    let cfg = ServiceConfig { session, shard: Some(shard), ..ServiceConfig::default() };
+    let svc = VdmcService::new(cfg);
+    let edges = edge_list(&local);
+    let loaded = svc.handle(Request::LoadGraph {
+        graph: plan.graph.clone(),
+        source: GraphSource::Edges { n: plan.n, edges },
+        directed: plan.directed,
+    })?;
+    match loaded {
+        Response::Loaded { .. } => Ok(svc),
+        other => bail!("unexpected response to worker graph load: {:?}", other.op()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    fn addrs(k: usize) -> Vec<String> {
+        (0..k).map(|i| format!("127.0.0.1:{}", 7400 + i)).collect()
+    }
+
+    #[test]
+    fn induced_local_keeps_member_edges_only() {
+        let g = generators::gnp_undirected(60, 0.08, 5);
+        let plan = ShardPlan::build(&g, "g", "<mem>", 3, &addrs(2), 16).unwrap();
+        for s in 0..2 {
+            let local = induced_local(&plan, s, &g).unwrap();
+            assert_eq!(local.n(), g.n(), "full vertex space");
+            let spec = &plan.shards[s];
+            for (u, v) in edge_list(&local) {
+                assert!(spec.is_member(u) && spec.is_member(v), "edge ({u},{v}) leaks");
+            }
+            // and nothing member-induced was dropped
+            let want =
+                edge_list(&g).into_iter().filter(|&(u, v)| spec.is_member(u) && spec.is_member(v));
+            assert_eq!(edge_list(&local), want.collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn worker_service_loads_under_plan_id() {
+        let g = generators::gnp_directed(40, 0.1, 9);
+        let plan = ShardPlan::build(&g, "shardtest", "<mem>", 3, &addrs(2), 16).unwrap();
+        let local = induced_local(&plan, 0, &g).unwrap();
+        let svc = worker_service(&plan, 0, local, SessionConfig::default()).unwrap();
+        // the shard identity is visible through ping
+        match svc.handle(Request::Ping).unwrap() {
+            Response::Pong { version, shard } => {
+                assert_eq!(version, env!("CARGO_PKG_VERSION"));
+                assert_eq!(shard, Some(0));
+            }
+            other => panic!("{:?}", other.op()),
+        }
+    }
+
+    #[test]
+    fn shard_index_out_of_plan_is_error() {
+        let g = generators::gnp_undirected(40, 0.1, 3);
+        let plan = ShardPlan::build(&g, "g", "<mem>", 3, &addrs(2), 16).unwrap();
+        assert!(spec(&plan, 2).is_err());
+        assert!(induced_local(&plan, 9, &g).is_err());
+    }
+}

@@ -141,6 +141,18 @@ impl PartitionSet {
         self.shards.iter().map(|s| (s.v_start, s.v_end)).collect()
     }
 
+    /// Owner shard of vertex `v` — the shard whose home range contains
+    /// it — or `None` past the vertex space. O(log shards) over the
+    /// contiguous ascending ranges. The distribution planner leans on
+    /// this being a total function over `[0, n)`: every root has exactly
+    /// one owner, which is what makes cross-process merges loss-free.
+    pub fn shard_of(&self, v: u32) -> Option<usize> {
+        if self.shards.last().map_or(true, |s| v >= s.v_end) {
+            return None;
+        }
+        Some(self.shards.partition_point(|s| s.v_end <= v))
+    }
+
     /// All items concatenated in root-ascending order (the shared-cursor
     /// scheduler's queue).
     pub fn all_items(&self) -> Vec<WorkItem> {
@@ -284,6 +296,24 @@ mod tests {
         let p = PartitionSet::build(&g, 16, 64);
         assert_eq!(p.n_shards(), 1);
         assert_eq!(p.all_items().len(), 1);
+    }
+
+    #[test]
+    fn shard_of_agrees_with_ranges() {
+        let g = generators::gnp_undirected(123, 0.1, 9);
+        let p = PartitionSet::build(&g, 5, 8);
+        for v in 0..g.n() as u32 {
+            let s = p.shard_of(v).unwrap();
+            let (lo, hi) = p.ranges()[s];
+            assert!((lo..hi).contains(&v), "vertex {v} mapped to shard {s} [{lo},{hi})");
+        }
+        assert_eq!(p.shard_of(g.n() as u32), None);
+        assert_eq!(p.shard_of(u32::MAX), None);
+        // a star's hub shard is [0,1): lookups skip the empty-range shards
+        let star = generators::star(1000);
+        let p = PartitionSet::build(&star, 4, 16);
+        assert_eq!(p.shard_of(0), Some(0));
+        assert!(p.shard_of(999).is_some());
     }
 
     #[test]

@@ -310,8 +310,15 @@ fn splitmix64(mut z: u64) -> u64 {
 /// Deterministic selection key of one instance: depends only on the seed,
 /// the class slot and the vertex tuple (which the enumerators emit in one
 /// fixed order per instance) — never on the worker or claim order.
+///
+/// Public for the distribution layer: the router re-keys gathered sample
+/// instances with this function over their canonical (sorted, original-id)
+/// vertex tuples to rank a deterministic cross-shard merge. Those tuples
+/// differ from the processing-id tuples the emitters hash, so a
+/// distributed sample is seed-deterministic but not bit-identical to a
+/// single-process one — see `crate::dist::router`.
 #[inline]
-fn sample_key(seed: u64, verts: &[u32], slot: u16) -> u64 {
+pub fn sample_key(seed: u64, verts: &[u32], slot: u16) -> u64 {
     let mut h = splitmix64(seed ^ (slot as u64).wrapping_mul(0xA24B_AED4_963E_E407));
     for &v in verts {
         h = splitmix64(h ^ v as u64);

@@ -40,6 +40,66 @@ pub fn load_edge_list(path: &Path, directed: bool) -> Result<Graph> {
     Ok(b.build(directed))
 }
 
+/// Load only the edges whose BOTH endpoints satisfy `keep`, into a graph
+/// with a fixed vertex space of `n` — ids stay global, filtered vertices
+/// simply end up isolated. Edges are filtered as the file streams by, so
+/// a worker ingesting one shard of a large graph never materializes the
+/// full edge list. Out-of-range endpoints are an error like any other
+/// malformed line: a plan and its edge list must agree on `n`.
+pub fn load_edge_list_filtered(
+    path: &Path,
+    directed: bool,
+    n: usize,
+    keep: &dyn Fn(u32) -> bool,
+) -> Result<Graph> {
+    let file = File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let reader = BufReader::new(file);
+    let mut b = GraphBuilder::with_n(n);
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.with_context(|| format!("reading {}", path.display()))?;
+        let trimmed = line.trim();
+        if trimmed.is_empty() || trimmed.starts_with('#') || trimmed.starts_with('%') {
+            continue;
+        }
+        let mut it = trimmed.split_whitespace();
+        let (u, v) = match (it.next(), it.next()) {
+            (Some(u), Some(v)) => (u, v),
+            _ => bail!("{}:{}: expected `u v`, got {trimmed:?}", path.display(), lineno + 1),
+        };
+        let u: u32 = u
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {u:?}", path.display(), lineno + 1))?;
+        let v: u32 = v
+            .parse()
+            .with_context(|| format!("{}:{}: bad vertex id {v:?}", path.display(), lineno + 1))?;
+        if (u as usize) >= n || (v as usize) >= n {
+            bail!(
+                "{}:{}: edge ({u},{v}) outside the declared vertex space n={n}",
+                path.display(),
+                lineno + 1
+            );
+        }
+        if keep(u) && keep(v) {
+            b.add_edge(u, v);
+        }
+    }
+    Ok(b.build(directed))
+}
+
+/// Load only the edges with both endpoints inside `[v_start, v_end)` —
+/// the contiguous-range special case of [`load_edge_list_filtered`]
+/// (shard workers use the filtered form directly, since their member set
+/// is a range plus a sorted ghost list).
+pub fn load_edges_in_range(
+    path: &Path,
+    directed: bool,
+    n: usize,
+    v_start: u32,
+    v_end: u32,
+) -> Result<Graph> {
+    load_edge_list_filtered(path, directed, n, &|v| (v_start..v_end).contains(&v))
+}
+
 /// Write a graph as an edge list (directed edges, or each undirected edge
 /// once with u < v).
 pub fn write_edge_list(graph: &Graph, path: &Path) -> Result<()> {
@@ -141,5 +201,56 @@ mod tests {
     #[test]
     fn missing_file_is_error() {
         assert!(load_edge_list(Path::new("/nonexistent/g.tsv"), true).is_err());
+    }
+
+    /// The stream fixture (n=300, directed) through the filtered loader:
+    /// a keep-everything filter reproduces the full graph, and a range
+    /// filter keeps exactly the edges with both endpoints in range.
+    #[test]
+    fn filtered_load_matches_full_load_on_stream_fixture() {
+        let p = Path::new("fixtures/stream_base.tsv");
+        let full = load_edge_list(p, true).unwrap();
+        let n = full.n();
+
+        let all = load_edge_list_filtered(p, true, n, &|_| true).unwrap();
+        assert_eq!(all.n(), n);
+        assert_eq!(all.m(), full.m());
+        assert_eq!(
+            all.out.edges().collect::<Vec<_>>(),
+            full.out.edges().collect::<Vec<_>>()
+        );
+
+        let (lo, hi) = (100u32, 220u32);
+        let ranged = load_edges_in_range(p, true, n, lo, hi).unwrap();
+        assert_eq!(ranged.n(), n, "vertex space stays global");
+        let want: Vec<(u32, u32)> = full
+            .out
+            .edges()
+            .filter(|&(u, v)| (lo..hi).contains(&u) && (lo..hi).contains(&v))
+            .collect();
+        assert_eq!(ranged.out.edges().collect::<Vec<_>>(), want);
+        // filtered-out vertices are isolated, not renumbered away
+        assert!(ranged.out.edges().all(|(u, v)| (lo..hi).contains(&u) && (lo..hi).contains(&v)));
+    }
+
+    #[test]
+    fn filtered_load_with_ghost_list_keeps_cross_edges() {
+        let p = tmp("ghost.tsv");
+        std::fs::write(&p, "0 1\n1 2\n2 3\n3 4\n").unwrap();
+        // members {0,1,2}: keeps 0-1, 1-2; drops 2-3 (3 not a member)
+        let members = [0u32, 1, 2];
+        let g =
+            load_edge_list_filtered(&p, false, 5, &|v| members.binary_search(&v).is_ok()).unwrap();
+        assert_eq!(g.n(), 5);
+        assert_eq!(g.m(), 2);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn filtered_load_rejects_out_of_range_edges() {
+        let p = tmp("oor.tsv");
+        std::fs::write(&p, "0 9\n").unwrap();
+        assert!(load_edge_list_filtered(&p, true, 5, &|_| true).is_err());
+        std::fs::remove_file(&p).ok();
     }
 }

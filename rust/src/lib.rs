@@ -137,6 +137,26 @@
 //! }
 //! ```
 //!
+//! Past one machine, the [`dist`] layer shards a graph across worker
+//! processes (ARCHITECTURE.md §14): `vdmc plan` splits the vertex space
+//! into degree-balanced contiguous ranges with a (k−1)-hop ghost fringe
+//! ([`dist::ShardPlan`]), `vdmc worker` serves one shard's induced
+//! slice over the same JSONL wire, and `vdmc serve --shards plan.json`
+//! mounts a scatter-gather [`dist::Router`] behind the service —
+//! counts, rows and instance lists merge loss-free (each motif is kept
+//! once, at the shard owning its minimal vertex), edge-delta batches
+//! fan out with ghost-ball prefetch so shard answers stay bit-identical
+//! to a single process, and a dead worker surfaces as the typed
+//! [`dist::ShardError`] rather than a wrong or hung answer:
+//!
+//! ```text
+//! vdmc plan  --input web.tsv --graph web --k-max 4 \
+//!            --addrs 127.0.0.1:7401,127.0.0.1:7402 --out plan.json
+//! vdmc worker --listen 127.0.0.1:7401 --plan plan.json --shard 0 &
+//! vdmc worker --listen 127.0.0.1:7402 --plan plan.json --shard 1 &
+//! vdmc serve --shards plan.json --tcp 127.0.0.1:7400
+//! ```
+//!
 //! ## Correctness tooling
 //!
 //! The hand-rolled concurrency core — [`engine::snapshot`] epoch
@@ -171,6 +191,8 @@
 pub mod baselines;
 #[cfg(not(loom))]
 pub mod coordinator;
+#[cfg(not(loom))]
+pub mod dist;
 pub mod engine;
 #[cfg(not(loom))]
 pub mod graph;

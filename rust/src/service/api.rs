@@ -80,6 +80,17 @@ pub enum Request {
         count: u64,
         graph: Option<String>,
     },
+    /// Liveness + identity probe: answers the crate version and (for
+    /// shard workers) the shard index this process serves. The dist
+    /// router pings every worker on connect to reject mis-versioned or
+    /// mis-wired deployments before any query is scattered.
+    Ping,
+    /// The induced edge set of the closed `radius`-hop undirected ball
+    /// around `vertex` (original ids; directed edges as-is, undirected
+    /// ones once with u < v). The dist router's delta fan-out uses this
+    /// to fetch, from a vertex's owning shard, the current-graph fringe
+    /// every other shard needs before an edge batch lands.
+    FetchBall { graph: String, vertex: u32, radius: usize },
 }
 
 impl Request {
@@ -97,6 +108,8 @@ impl Request {
             Request::Stats => "stats",
             Request::Metrics => "metrics",
             Request::InjectFault { .. } => "inject_fault",
+            Request::Ping => "ping",
+            Request::FetchBall { .. } => "fetch_ball",
         }
     }
 
@@ -124,10 +137,13 @@ impl Request {
             | Request::VertexCounts { graph, .. }
             | Request::ApplyEdges { graph, .. }
             | Request::Maintain { graph, .. }
-            | Request::Evict { graph } => Some(graph),
+            | Request::Evict { graph }
+            | Request::FetchBall { graph, .. } => Some(graph),
             // InjectFault's `graph` is a fault *scope*, not a pool
             // target — admission control and pool routing ignore it
-            Request::Stats | Request::Metrics | Request::InjectFault { .. } => None,
+            Request::Stats | Request::Metrics | Request::InjectFault { .. } | Request::Ping => {
+                None
+            }
         }
     }
 }
@@ -210,6 +226,16 @@ pub enum Response {
     Metrics { text: String },
     /// Fault armed (or cleared) by [`Request::InjectFault`].
     FaultArmed { site: String, action: String },
+    /// Liveness + identity answer to [`Request::Ping`].
+    Pong {
+        /// Crate version (`CARGO_PKG_VERSION`) of the answering process.
+        version: String,
+        /// Shard index when this process is a plan worker; `None` for a
+        /// plain single-process service.
+        shard: Option<usize>,
+    },
+    /// The induced ball edges answered to [`Request::FetchBall`].
+    BallEdges { graph: String, vertex: u32, radius: usize, edges: Vec<(u32, u32)> },
 }
 
 impl Response {
@@ -227,6 +253,8 @@ impl Response {
             Response::Stats { .. } => "stats",
             Response::Metrics { .. } => "metrics",
             Response::FaultArmed { .. } => "inject_fault",
+            Response::Pong { .. } => "ping",
+            Response::BallEdges { .. } => "fetch_ball",
         }
     }
 }

@@ -150,6 +150,12 @@ pub struct ServiceConfig {
     pub telemetry: TelemetryConfig,
     /// Admission caps (both 0 = admit everything, the default).
     pub admission: AdmissionConfig,
+    /// Shard identity when this process is a dist worker
+    /// (`vdmc worker --shard N`): answered by [`Request::Ping`] and
+    /// exported as the `vdmc_shard_index` gauge so the router and the
+    /// metrics scrape can both tell workers apart. `None` (the default)
+    /// for a plain single-process service.
+    pub shard: Option<usize>,
 }
 
 impl Default for ServiceConfig {
@@ -160,6 +166,7 @@ impl Default for ServiceConfig {
             byte_budget: 0,
             telemetry: TelemetryConfig::default(),
             admission: AdmissionConfig::default(),
+            shard: None,
         }
     }
 }
@@ -218,6 +225,13 @@ struct ServiceInner {
     /// by [`admission::AdmissionPermit`], so a panicking request
     /// releases its slot).
     gate: admission::AdmissionGate,
+    /// Shard identity of a dist worker process (see
+    /// [`ServiceConfig::shard`]).
+    shard: Option<usize>,
+    /// A mounted dist router ([`VdmcService::with_router`]): requests
+    /// against the router's plan graph scatter over the cluster instead
+    /// of touching the local pool.
+    router: Option<crate::dist::Router>,
 }
 
 /// Per-service observability state: the metrics registry every layer
@@ -372,10 +386,35 @@ fn label_value(labels: &[(&'static str, String)], key: &str) -> Option<String> {
 
 impl VdmcService {
     pub fn new(cfg: ServiceConfig) -> VdmcService {
+        VdmcService::build(cfg, None)
+    }
+
+    /// A service with a dist router mounted: requests naming the
+    /// router's plan graph are scattered over the worker cluster and
+    /// merged ([`crate::dist::Router::handle`]); every other graph id
+    /// still routes into the local pool, so one `vdmc serve --shards`
+    /// process can front a cluster *and* serve small local graphs. The
+    /// router shares the service's metrics registry, so its
+    /// `vdmc_dist_rpc_*` series land in the same scrape.
+    pub fn with_router(cfg: ServiceConfig, router: crate::dist::Router) -> VdmcService {
+        VdmcService::build(cfg, Some(router))
+    }
+
+    fn build(cfg: ServiceConfig, mut router: Option<crate::dist::Router>) -> VdmcService {
         let registry = Arc::new(MetricsRegistry::new());
         // chaos/debug builds: pick up VDMC_FAULTS so headless harnesses
         // can arm faults without speaking the wire first
         faults::arm_from_env();
+        if cfg.telemetry.enabled {
+            if let Some(shard) = cfg.shard {
+                registry
+                    .gauge("vdmc_shard_index", "Shard index this worker process serves.")
+                    .set(shard as i64);
+            }
+            if let Some(router) = router.as_mut() {
+                router.set_registry(Arc::clone(&registry));
+            }
+        }
         VdmcService {
             inner: Arc::new(ServiceInner {
                 session_cfg: cfg.session,
@@ -387,6 +426,8 @@ impl VdmcService {
                 telemetry: ServiceTelemetry::new(&cfg.telemetry, registry),
                 admission: cfg.admission,
                 gate: admission::AdmissionGate::new(),
+                shard: cfg.shard,
+                router,
             }),
         }
     }
@@ -472,6 +513,17 @@ impl VdmcService {
     }
 
     fn handle_inner(&self, req: Request, cancel: Option<&CancelToken>) -> Result<Response> {
+        // a mounted dist router owns its plan's graph id outright: the
+        // routable ops scatter over the cluster, everything else naming
+        // that id (load/evict/maintain/fetch_ball/…) gets the router's
+        // typed rejection — it must never fall through to the local
+        // pool, where the id doesn't exist (or worse, shadows the
+        // cluster with a locally loaded copy)
+        if let Some(router) = &self.inner.router {
+            if req.graph() == Some(router.graph()) {
+                return router.handle(req, cancel);
+            }
+        }
         match req {
             Request::LoadGraph { graph, source, directed } => {
                 // build the session OUTSIDE the pool lock: a slow load
@@ -650,6 +702,32 @@ impl VdmcService {
                 // release builds (the harness is compiled out)
                 faults::arm(&site, &action, delay_ms, count, graph)?;
                 Ok(Response::FaultArmed { site, action })
+            }
+            Request::Ping => Ok(Response::Pong {
+                version: env!("CARGO_PKG_VERSION").to_string(),
+                shard: self.inner.shard,
+            }),
+            Request::FetchBall { graph, vertex, radius } => {
+                let snap = self.pin(&graph)?;
+                let n = snap.n();
+                if vertex as usize >= n {
+                    bail!("vertex {vertex} out of range for graph {graph:?} (n={n})");
+                }
+                // the ball and the edges both come off the same pinned
+                // epoch (overlay included), so a concurrent ApplyEdges
+                // can't tear the answer
+                let ball = snap.neighborhood(&[vertex], radius)?; // sorted
+                let inside = |v: u32| ball.binary_search(&v).is_ok();
+                let g = snap.snapshot_graph();
+                let mut edges: Vec<(u32, u32)> = Vec::new();
+                if g.directed {
+                    edges.extend(g.out.edges().filter(|&(u, v)| inside(u) && inside(v)));
+                } else {
+                    edges.extend(
+                        g.und.edges().filter(|&(u, v)| u < v && inside(u) && inside(v)),
+                    );
+                }
+                Ok(Response::BallEdges { graph, vertex, radius, edges })
             }
         }
     }
@@ -1496,5 +1574,81 @@ mod tests {
             }
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn ping_answers_version_and_shard_identity() {
+        let svc = VdmcService::with_defaults();
+        match svc.handle(Request::Ping).unwrap() {
+            Response::Pong { version, shard } => {
+                assert_eq!(version, env!("CARGO_PKG_VERSION"));
+                assert_eq!(shard, None, "plain service has no shard identity");
+            }
+            other => panic!("{other:?}"),
+        }
+
+        let svc =
+            VdmcService::new(ServiceConfig { shard: Some(3), ..ServiceConfig::default() });
+        match svc.handle(Request::Ping).unwrap() {
+            Response::Pong { shard, .. } => assert_eq!(shard, Some(3)),
+            other => panic!("{other:?}"),
+        }
+        // the shard identity also lands in the scrape
+        assert!(
+            svc.metrics_text().contains("vdmc_shard_index 3"),
+            "shard gauge missing from exposition"
+        );
+    }
+
+    #[test]
+    fn fetch_ball_returns_induced_ball_edges_over_the_overlay() {
+        // path 0-1-2-3-4 plus a far edge 5-6: radius 1 around 2 must
+        // return exactly {1-2, 2-3}
+        let edges = vec![(0, 1), (1, 2), (2, 3), (3, 4), (5, 6)];
+        let svc = VdmcService::with_defaults();
+        svc.handle(Request::LoadGraph {
+            graph: "g".into(),
+            source: GraphSource::Edges { n: 7, edges },
+            directed: false,
+        })
+        .unwrap();
+        match svc
+            .handle(Request::FetchBall { graph: "g".into(), vertex: 2, radius: 1 })
+            .unwrap()
+        {
+            Response::BallEdges { vertex, radius, mut edges, .. } => {
+                assert_eq!((vertex, radius), (2, 1));
+                edges.sort_unstable();
+                assert_eq!(edges, vec![(1, 2), (2, 3)]);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // pending deltas are part of the answer: attach 5 to 2 and the
+        // radius-1 ball picks up both the new edge and 5's old edge to 6
+        // only at radius 2
+        svc.handle(Request::ApplyEdges {
+            graph: "g".into(),
+            deltas: vec![EdgeDelta::insert(2, 5)],
+        })
+        .unwrap();
+        match svc
+            .handle(Request::FetchBall { graph: "g".into(), vertex: 2, radius: 1 })
+            .unwrap()
+        {
+            Response::BallEdges { mut edges, .. } => {
+                edges.sort_unstable();
+                assert_eq!(edges, vec![(1, 2), (2, 3), (2, 5)]);
+            }
+            other => panic!("{other:?}"),
+        }
+
+        // out-of-range vertex and unknown graph stay per-request errors
+        assert!(svc
+            .handle(Request::FetchBall { graph: "g".into(), vertex: 99, radius: 1 })
+            .is_err());
+        assert!(svc
+            .handle(Request::FetchBall { graph: "nope".into(), vertex: 0, radius: 1 })
+            .is_err());
     }
 }

@@ -42,6 +42,13 @@
 //! `vdmc serve` runs the stdin/stdout mode as exactly the 1-client
 //! special case of [`serve_connection`].
 //!
+//! The dist roles reuse these transports unchanged: `vdmc worker` is
+//! [`serve_tcp`] over a shard-stamped service, and `vdmc serve
+//! --shards` mounts a [`crate::dist::Router`] behind the same
+//! [`VdmcService`] — clients of a sharded cluster speak the identical
+//! wire, and a scattered request's per-shard failure surfaces as the
+//! typed `"shard"` object on its failure line.
+//!
 //! Both transports feed the service's
 //! [`MetricsRegistry`](crate::telemetry::MetricsRegistry): accepted
 //! connections, queued-response depth (the inflight gauge), malformed

@@ -72,9 +72,10 @@
 //! `"process"`; `metrics` answers carry the Prometheus text under
 //! `"metrics"`.
 
-use crate::engine::{MotifQuery, Output, QueryAborted, Scope};
+use crate::engine::{MotifQuery, Output, QueryAborted, SchedulerMode, Scope};
+use crate::motifs::counter::CounterMode;
 use crate::motifs::{Direction, MotifSize};
-use crate::stream::EdgeDelta;
+use crate::stream::{DeltaOp, EdgeDelta};
 use crate::util::json::Json;
 
 use super::api::{GraphSource, Request, Response};
@@ -326,6 +327,17 @@ pub fn decode_request(
             };
             Request::InjectFault { site, action, delay_ms, count, graph }
         }
+        "ping" => Request::Ping,
+        "fetch_ball" => {
+            let vertex = j
+                .get("vertex")
+                .and_then(Json::as_u64)
+                .filter(|&v| v <= u32::MAX as u64)
+                .ok_or_else(|| "fetch_ball needs a \"vertex\" id".to_string())?
+                as u32;
+            let radius = field_u64(&j, "radius", 1)? as usize;
+            Request::FetchBall { graph: graph()?, vertex, radius }
+        }
         other => return Err(format!("unknown op {other:?}")),
     };
     Ok((req, id, trace, deadline_ms))
@@ -481,6 +493,144 @@ pub fn encode_response(
         Response::FaultArmed { site, action } => {
             j.set("site", site.as_str()).set("action", action.as_str());
         }
+        Response::Pong { version, shard } => {
+            j.set("version", version.as_str());
+            if let Some(shard) = shard {
+                j.set("shard", *shard);
+            }
+        }
+        Response::BallEdges { graph, vertex, radius, edges } => {
+            let rows: Vec<Json> = edges
+                .iter()
+                .map(|&(u, v)| Json::Arr(vec![Json::from(u as u64), Json::from(v as u64)]))
+                .collect();
+            j.set("graph", graph.as_str())
+                .set("vertex", *vertex)
+                .set("radius", *radius)
+                .set("edges", Json::Arr(rows));
+        }
+    }
+    j.to_string_compact()
+}
+
+/// Encode one typed [`Request`] as a request line (no trailing newline) —
+/// the exact spellings [`decode_request`] accepts, so
+/// `decode(encode(r)) == r` for every request. This is the client half of
+/// the codec: the dist router speaks it to scatter requests at workers,
+/// and it keeps the wire grammar from drifting between the two directions.
+pub fn encode_request(req: &Request, id: Option<u64>, deadline_ms: Option<u64>) -> String {
+    let mut j = Json::obj();
+    j.set("op", req.op());
+    if let Some(id) = id {
+        j.set("id", id);
+    }
+    if let Some(ms) = deadline_ms {
+        j.set("deadline_ms", ms);
+    }
+    let encode_scope = |j: &mut Json, scope: &Scope| match scope {
+        Scope::All => {}
+        Scope::Vertices(vs) => {
+            j.set("vertices", vs.clone());
+        }
+        Scope::Neighborhood { seeds, radius } => {
+            j.set("seeds", seeds.clone()).set("radius", *radius);
+        }
+    };
+    let encode_query = |j: &mut Json, q: &MotifQuery| {
+        j.set("k", q.size.k()).set("direction", q.direction.label());
+        j.set(
+            "scheduler",
+            match q.scheduler {
+                SchedulerMode::SharedCursor => "cursor",
+                SchedulerMode::WorkStealing => "stealing",
+                SchedulerMode::WorkStealingBatch => "stealing-batch",
+            },
+        );
+        j.set(
+            "sink",
+            match q.sink {
+                CounterMode::Atomic => "atomic",
+                CounterMode::Sharded => "sharded",
+                CounterMode::PartitionLocal => "partition",
+            },
+        );
+        encode_scope(j, &q.scope);
+    };
+    match req {
+        Request::LoadGraph { graph, source, directed } => {
+            j.set("graph", graph.as_str()).set("directed", *directed);
+            match source {
+                GraphSource::Path(p) => {
+                    j.set("path", p.display().to_string());
+                }
+                GraphSource::Edges { n, edges } => {
+                    let rows: Vec<Json> = edges
+                        .iter()
+                        .map(|&(u, v)| Json::Arr(vec![Json::from(u), Json::from(v)]))
+                        .collect();
+                    j.set("n", *n).set("edges", Json::Arr(rows));
+                }
+            }
+        }
+        Request::Count { graph, query } => {
+            j.set("graph", graph.as_str());
+            encode_query(&mut j, query);
+        }
+        Request::Instances { graph, query } => {
+            j.set("graph", graph.as_str());
+            encode_query(&mut j, query);
+            if let Output::Instances { limit } = query.output {
+                j.set("limit", limit);
+            }
+        }
+        Request::Sample { graph, query } => {
+            j.set("graph", graph.as_str());
+            encode_query(&mut j, query);
+            if let Output::Sample { per_class, seed } = query.output {
+                j.set("per_class", per_class).set("seed", seed);
+            }
+        }
+        Request::VertexCounts { graph, size, direction, scope } => {
+            j.set("graph", graph.as_str())
+                .set("k", size.k())
+                .set("direction", direction.label());
+            encode_scope(&mut j, scope);
+        }
+        Request::ApplyEdges { graph, deltas } => {
+            let rows: Vec<Json> = deltas
+                .iter()
+                .map(|d| {
+                    let op = match d.op {
+                        DeltaOp::Insert => "+",
+                        DeltaOp::Delete => "-",
+                    };
+                    Json::Arr(vec![Json::from(op), Json::from(d.u), Json::from(d.v)])
+                })
+                .collect();
+            j.set("graph", graph.as_str()).set("deltas", Json::Arr(rows));
+        }
+        Request::Maintain { graph, size, direction, output } => {
+            j.set("graph", graph.as_str())
+                .set("k", size.k())
+                .set("direction", direction.label())
+                .set("output", output.label());
+        }
+        Request::Evict { graph } => {
+            j.set("graph", graph.as_str());
+        }
+        Request::Stats | Request::Metrics | Request::Ping => {}
+        Request::InjectFault { site, action, delay_ms, count, graph } => {
+            j.set("site", site.as_str())
+                .set("action", action.as_str())
+                .set("delay_ms", *delay_ms)
+                .set("count", *count);
+            if let Some(graph) = graph {
+                j.set("graph", graph.as_str());
+            }
+        }
+        Request::FetchBall { graph, vertex, radius } => {
+            j.set("graph", graph.as_str()).set("vertex", *vertex).set("radius", *radius);
+        }
     }
     j.to_string_compact()
 }
@@ -504,11 +654,13 @@ fn error_obj(op: Option<&str>, id: Option<u64>, trace: Option<&str>, error: &str
     j
 }
 
-/// Encode a typed handler failure. Like [`encode_error`], but two
-/// lifecycle outcomes get machine-readable detail alongside the message:
-/// an aborted enumeration ([`QueryAborted`]) adds an `"aborted"` object
-/// and a shed request ([`Overloaded`]) adds an `"overloaded"` object, so
-/// clients can branch on retry-later conditions without parsing prose.
+/// Encode a typed handler failure. Like [`encode_error`], but three
+/// typed outcomes get machine-readable detail alongside the message: an
+/// aborted enumeration ([`QueryAborted`]) adds an `"aborted"` object, a
+/// shed request ([`Overloaded`]) adds an `"overloaded"` object, and a
+/// failed shard RPC behind a dist router ([`crate::dist::ShardError`])
+/// adds a `"shard"` object, so clients can branch on retry-later
+/// conditions or a sick worker without parsing prose.
 pub fn encode_failure(
     op: Option<&str>,
     id: Option<u64>,
@@ -516,7 +668,13 @@ pub fn encode_failure(
     error: &anyhow::Error,
 ) -> String {
     let mut j = error_obj(op, id, trace, &format!("{error:#}"));
-    if let Some(aborted) = error.downcast_ref::<QueryAborted>() {
+    if let Some(shard) = error.downcast_ref::<crate::dist::ShardError>() {
+        let mut s = Json::obj();
+        s.set("index", shard.shard)
+            .set("addr", shard.addr.as_str())
+            .set("kind", shard.kind.label());
+        j.set("shard", s);
+    } else if let Some(aborted) = error.downcast_ref::<QueryAborted>() {
         let mut a = Json::obj();
         a.set("reason", aborted.reason.label())
             .set("units_done", aborted.units_done)
@@ -1002,6 +1160,123 @@ mod tests {
             .and_then(Json::as_str)
             .unwrap()
             .contains("vdmc_requests_total"));
+    }
+
+    #[test]
+    fn encode_request_roundtrips_every_op() {
+        use crate::engine::MotifQuery;
+
+        // every request the dist router scatters (and the rest of the
+        // surface) must survive encode → decode unchanged — this is the
+        // single test that keeps the two codec directions in lockstep
+        let count = MotifQuery::builder()
+            .size(MotifSize::Four)
+            .direction(Direction::Undirected)
+            .scheduler(SchedulerMode::SharedCursor)
+            .sink(CounterMode::Atomic)
+            .scope(Scope::Vertices(vec![3, 9]))
+            .build()
+            .unwrap();
+        let instances = MotifQuery::builder()
+            .size(MotifSize::Three)
+            .direction(Direction::Directed)
+            .instances(500)
+            .build()
+            .unwrap();
+        let sample = MotifQuery::builder()
+            .size(MotifSize::Four)
+            .direction(Direction::Undirected)
+            .sample(16, 7)
+            .scope(Scope::Neighborhood { seeds: vec![0, 5], radius: 2 })
+            .build()
+            .unwrap();
+        let requests = vec![
+            Request::LoadGraph {
+                graph: "g".into(),
+                source: GraphSource::Path("g.tsv".into()),
+                directed: true,
+            },
+            Request::LoadGraph {
+                graph: "t".into(),
+                source: GraphSource::Edges { n: 3, edges: vec![(0, 1), (1, 2)] },
+                directed: false,
+            },
+            Request::Count { graph: "g".into(), query: count },
+            Request::Count { graph: "g".into(), query: CountQuery::default() },
+            Request::Instances { graph: "g".into(), query: instances },
+            Request::Sample { graph: "g".into(), query: sample },
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Three,
+                direction: Direction::Directed,
+                scope: Scope::Vertices(vec![0, 5]),
+            },
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: MotifSize::Four,
+                direction: Direction::Undirected,
+                scope: Scope::Neighborhood { seeds: vec![2], radius: 2 },
+            },
+            Request::ApplyEdges {
+                graph: "g".into(),
+                deltas: vec![EdgeDelta::insert(0, 5), EdgeDelta::delete(1, 2)],
+            },
+            Request::Maintain {
+                graph: "g".into(),
+                size: MotifSize::Four,
+                direction: Direction::Undirected,
+                output: Output::Counts,
+            },
+            Request::Evict { graph: "g".into() },
+            Request::Stats,
+            Request::Metrics,
+            Request::Ping,
+            Request::FetchBall { graph: "g".into(), vertex: 17, radius: 2 },
+            Request::InjectFault {
+                site: "commit".into(),
+                action: "panic".into(),
+                delay_ms: 0,
+                count: 1,
+                graph: Some("g".into()),
+            },
+        ];
+        for req in requests {
+            let line = encode_request(&req, None, None);
+            let (back, id, trace, deadline) =
+                decode_request(&line).unwrap_or_else(|e| panic!("{line}: {e}"));
+            assert_eq!(back, req, "{line}");
+            assert_eq!(id, None);
+            assert_eq!(trace, None);
+            assert_eq!(deadline, None);
+        }
+
+        // id and deadline ride along when the caller sets them
+        let line = encode_request(&Request::Ping, Some(42), Some(250));
+        let (back, id, _, deadline) = decode_request(&line).unwrap();
+        assert_eq!(back, Request::Ping);
+        assert_eq!(id, Some(42));
+        assert_eq!(deadline, Some(250));
+    }
+
+    #[test]
+    fn encode_failure_carries_typed_shard_detail() {
+        use crate::dist::{ShardError, ShardErrorKind};
+
+        let err = anyhow::Error::new(ShardError {
+            shard: 1,
+            addr: "127.0.0.1:7402".into(),
+            kind: ShardErrorKind::Connect,
+            message: "connection refused".into(),
+        });
+        let j = Json::parse(&encode_failure(Some("count"), Some(9), None, &err)).unwrap();
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(j.get("error").and_then(Json::as_str).unwrap().contains("connection refused"));
+        let s = j.get("shard").expect("typed shard detail");
+        assert_eq!(s.get("index").and_then(Json::as_u64), Some(1));
+        assert_eq!(s.get("addr").and_then(Json::as_str), Some("127.0.0.1:7402"));
+        assert_eq!(s.get("kind").and_then(Json::as_str), Some("connect"));
+        assert!(j.get("aborted").is_none());
+        assert!(j.get("overloaded").is_none());
     }
 
     #[test]

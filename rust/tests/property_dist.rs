@@ -1,0 +1,532 @@
+//! Distribution-layer acceptance: a sharded cluster must be
+//! bit-identical to one single-process session over the same graph —
+//! counts, per-vertex rows, top-k rankings — including after edge-delta
+//! batches (the ghost-fringe invariant under churn), and a dead worker
+//! must surface as a typed per-shard error without poisoning queries
+//! that only touch healthy shards.
+//!
+//! Workers here are real `serve_tcp` loops on in-process listeners; the
+//! router speaks the same JSONL wire over real sockets that `vdmc
+//! worker` serves in production.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use vdmc::dist::{worker, Router, ShardError, ShardPlan};
+use vdmc::engine::{InstanceList, MotifQuery, Output, QueryOutput, Scope, Session, SessionConfig};
+use vdmc::graph::csr::Graph;
+use vdmc::graph::generators;
+use vdmc::motifs::{Direction, MotifCounts, MotifSize};
+use vdmc::service::{
+    serve_tcp, GraphSource, Request, Response, ServeOptions, ServiceConfig, VdmcService,
+};
+use vdmc::stream::EdgeDelta;
+
+/// One live cluster: `shards` worker threads serving their induced
+/// slices over real TCP, and a connected router. Dropping it drains and
+/// joins every worker.
+struct Cluster {
+    router: Router,
+    graph: String,
+    flags: Vec<Arc<AtomicBool>>,
+    handles: Vec<Option<JoinHandle<()>>>,
+}
+
+impl Cluster {
+    /// `None` when the graph cannot sustain `shards` shards (tiny or
+    /// hub-dominated graphs clamp the plan) — callers skip that
+    /// configuration.
+    fn start(g: &Graph, graph_id: &str, k_max: usize, shards: usize) -> Option<Cluster> {
+        // bind first so the plan records real ports
+        let listeners: Vec<TcpListener> =
+            (0..shards).map(|_| TcpListener::bind("127.0.0.1:0").unwrap()).collect();
+        let addrs: Vec<String> =
+            listeners.iter().map(|l| l.local_addr().unwrap().to_string()).collect();
+        let plan = match ShardPlan::build(g, graph_id, "<mem>", k_max, &addrs, 16) {
+            Ok(plan) => plan,
+            Err(_) => return None,
+        };
+        let mut flags = Vec::new();
+        let mut handles = Vec::new();
+        for (s, listener) in listeners.into_iter().enumerate() {
+            let local = worker::induced_local(&plan, s, g).unwrap();
+            let svc = worker::worker_service(&plan, s, local, SessionConfig::default()).unwrap();
+            let flag = Arc::new(AtomicBool::new(false));
+            flags.push(Arc::clone(&flag));
+            handles.push(Some(std::thread::spawn(move || {
+                serve_tcp(&svc, listener, &ServeOptions::default(), &flag).unwrap();
+            })));
+        }
+        let router = Router::connect(plan).unwrap();
+        Some(Cluster { router, graph: graph_id.to_string(), flags, handles })
+    }
+
+    fn must_start(g: &Graph, graph_id: &str, k_max: usize, shards: usize) -> Cluster {
+        Cluster::start(g, graph_id, k_max, shards).expect("plan clamped below requested shards")
+    }
+
+    /// Shut one worker down and join it — its listener closes and its
+    /// in-flight connections drain, exactly like a process exit.
+    fn kill(&mut self, shard: usize) {
+        self.flags[shard].store(true, Ordering::SeqCst);
+        if let Some(h) = self.handles[shard].take() {
+            h.join().unwrap();
+        }
+    }
+
+    fn count(&self, query: &MotifQuery) -> MotifCounts {
+        match self
+            .router
+            .handle(Request::Count { graph: self.graph.clone(), query: query.clone() }, None)
+            .unwrap()
+        {
+            Response::Counted { counts, .. } => counts,
+            other => panic!("{other:?}"),
+        }
+    }
+}
+
+impl Drop for Cluster {
+    fn drop(&mut self) {
+        for f in &self.flags {
+            f.store(true, Ordering::SeqCst);
+        }
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// The test matrix: (graph id, graph, direction to classify under).
+fn graphs() -> Vec<(&'static str, Graph, Direction)> {
+    vec![
+        ("gnp-dir", generators::gnp_directed(60, 0.08, 7), Direction::Directed),
+        ("gnp-und", generators::gnp_undirected(60, 0.10, 3), Direction::Undirected),
+        ("star", generators::star(41), Direction::Undirected),
+        ("ba", generators::barabasi_albert(50, 3, 5), Direction::Undirected),
+    ]
+}
+
+fn query(k: usize, direction: Direction) -> MotifQuery {
+    let size = MotifSize::from_k(k).unwrap();
+    MotifQuery { size, direction, ..Default::default() }
+}
+
+/// Inline-edges [`GraphSource`] mirroring a loaded graph.
+fn edges_source(g: &Graph) -> GraphSource {
+    let edges: Vec<(u32, u32)> = if g.directed {
+        g.out.edges().collect()
+    } else {
+        g.und.edges().filter(|&(u, v)| u < v).collect()
+    };
+    GraphSource::Edges { n: g.n(), edges }
+}
+
+/// Canonical (vertex tuple, class id) view of an instance list — the
+/// shape both sides must agree on exactly.
+fn canon(l: &InstanceList) -> Vec<(Vec<u32>, u16)> {
+    let mut v: Vec<(Vec<u32>, u16)> = l
+        .instances
+        .iter()
+        .map(|i| (i.verts.clone(), l.class_ids[i.class_slot as usize]))
+        .collect();
+    v.sort();
+    v
+}
+
+/// Deterministic cross-shard delta batch: inserts span the vertex range
+/// (so ghost fan-out fires), deletes hit real and missing edges, plus a
+/// duplicate insert and an out-of-range pair for the skip counters.
+fn delta_batch(n: u32, round: u32) -> Vec<EdgeDelta> {
+    let mut deltas = Vec::new();
+    for i in 0..6u32 {
+        let a = (i * 7 + round * 13 + 1) % n;
+        let b = (n - 1 + i * 11 + round * 5) % n;
+        if a != b {
+            deltas.push(EdgeDelta::insert(a, b));
+            deltas.push(EdgeDelta::delete((a + 3) % n, (b + 1) % n));
+        }
+    }
+    if let Some(first) = deltas.first().copied() {
+        deltas.push(first); // duplicate insert → skipped_duplicate
+    }
+    deltas.push(EdgeDelta::insert(n + 5, 0)); // out of range → skipped_invalid
+    deltas
+}
+
+#[test]
+fn sharded_counts_and_topk_match_the_single_process_oracle() {
+    for (name, g, direction) in &graphs() {
+        let oracle = Session::load(g);
+        for k in [3usize, 4] {
+            for shards in [2usize, 4] {
+                let cluster = match Cluster::start(g, name, k, shards) {
+                    Some(c) => c,
+                    None => {
+                        eprintln!("{name}: skipping {shards}-shard plan (graph clamps)");
+                        continue;
+                    }
+                };
+                let q = query(k, *direction);
+                let want = oracle.count(&q).unwrap();
+                let got = cluster.count(&q);
+                assert_eq!(got.class_ids, want.class_ids, "{name} k={k} s={shards}");
+                assert_eq!(got.per_vertex, want.per_vertex, "{name} k={k} s={shards}");
+                assert_eq!(
+                    got.per_class_instances, want.per_class_instances,
+                    "{name} k={k} s={shards}"
+                );
+                assert_eq!(got.total_instances, want.total_instances, "{name} k={k} s={shards}");
+
+                // top-k rankings share the exact rows, so the identical
+                // (count desc, vertex asc) order falls out bit-identically
+                let got_top = cluster.router.top_vertices(q.size, q.direction, 5, None).unwrap();
+                let want_top = match oracle
+                    .query(&MotifQuery { output: Output::TopVertices { k: 5 }, ..q.clone() })
+                    .unwrap()
+                {
+                    QueryOutput::TopVertices(t) => t,
+                    other => panic!("{}", other.label()),
+                };
+                assert_eq!(got_top.per_class, want_top.per_class, "{name} k={k} s={shards}");
+                assert_eq!(got_top.class_ids, want_top.class_ids);
+                assert_eq!(got_top.total_instances, want_top.total_instances);
+            }
+        }
+    }
+}
+
+#[test]
+fn scoped_vertex_rows_match_and_keep_client_order() {
+    let name = "gnp-dir";
+    let g = generators::gnp_directed(60, 0.08, 7);
+    let direction = Direction::Directed;
+    let oracle = VdmcService::with_defaults();
+    oracle
+        .handle(Request::LoadGraph {
+            graph: name.into(),
+            source: edges_source(&g),
+            directed: g.directed,
+        })
+        .unwrap();
+    let cluster = Cluster::must_start(&g, name, 4, 2);
+    let size = MotifSize::Three;
+
+    // explicit vertex list: duplicates and shard-crossing order must
+    // both survive the scatter (rows come back in client order)
+    let scopes = vec![
+        Scope::Vertices(vec![59, 0, 30, 0, 17]),
+        Scope::Neighborhood { seeds: vec![5, 40], radius: 1 },
+        Scope::Neighborhood { seeds: vec![12], radius: 3 }, // fringe radius = k_max − 1
+    ];
+    for scope in scopes {
+        let req = |s: Scope| Request::VertexCounts {
+            graph: name.into(),
+            size,
+            direction,
+            scope: s,
+        };
+        let (want_rows, want_ids) = match oracle.handle(req(scope.clone())).unwrap() {
+            Response::VertexRows { rows, class_ids, .. } => (rows, class_ids),
+            other => panic!("{other:?}"),
+        };
+        match cluster.router.handle(req(scope.clone()), None).unwrap() {
+            Response::VertexRows { rows, class_ids, total_instances, .. } => {
+                assert_eq!(class_ids, want_ids, "{scope:?}");
+                assert_eq!(rows.len(), want_rows.len(), "{scope:?}");
+                for (got, want) in rows.iter().zip(&want_rows) {
+                    assert_eq!(got.vertex, want.vertex, "{scope:?}");
+                    assert_eq!(got.counts, want.counts, "{scope:?} v{}", got.vertex);
+                }
+                // the router does not maintain a global instance total on
+                // the lookup path (that would force a full gather and
+                // defeat partial-health serving): 0 is the documented
+                // sentinel — use `count` for totals
+                assert_eq!(total_instances, 0, "{scope:?}");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    // a neighborhood past the replicated fringe is a typed refusal, not
+    // a silently partial answer
+    let err = cluster
+        .router
+        .handle(
+            Request::VertexCounts {
+                graph: name.into(),
+                size,
+                direction,
+                scope: Scope::Neighborhood { seeds: vec![0], radius: 9 },
+            },
+            None,
+        )
+        .unwrap_err();
+    assert!(err.to_string().contains("fringe"), "{err:#}");
+}
+
+#[test]
+fn instance_lists_merge_loss_free_and_samples_are_deterministic() {
+    let g = generators::gnp_undirected(50, 0.10, 11);
+    let oracle = Session::load(&g);
+    let cluster = Cluster::must_start(&g, "g", 3, 2);
+    let direction = Direction::Undirected;
+    let size = MotifSize::Three;
+
+    // instances, generous limit: the merged owner-filtered union must be
+    // exactly the oracle's list (both sorted by vertex tuple)
+    let q = MotifQuery {
+        size,
+        direction,
+        output: Output::Instances { limit: 200_000 },
+        ..Default::default()
+    };
+    let want = match oracle.query(&q).unwrap() {
+        QueryOutput::Instances(l) => l,
+        other => panic!("{}", other.label()),
+    };
+    let got = match cluster
+        .router
+        .handle(Request::Instances { graph: "g".into(), query: q.clone() }, None)
+        .unwrap()
+    {
+        Response::Instances { list, .. } => list,
+        other => panic!("{other:?}"),
+    };
+    assert!(!got.truncated && !want.truncated);
+    assert_eq!(got.total_seen, want.total_seen);
+    assert_eq!(canon(&got), canon(&want));
+    // per-class tallies line up once both slot orders map to class ids
+    for (slot, &cid) in got.class_ids.iter().enumerate() {
+        let oracle_slot = want.class_ids.iter().position(|&c| c == cid).unwrap();
+        assert_eq!(got.per_class_seen[slot], want.per_class_seen[oracle_slot], "m{cid}");
+    }
+
+    // a vertex-scoped instance list merges just as loss-free
+    let scoped = MotifQuery { scope: Scope::Vertices(vec![0, 25, 49]), ..q.clone() };
+    let want_scoped = match oracle.query(&scoped).unwrap() {
+        QueryOutput::Instances(l) => l,
+        other => panic!("{}", other.label()),
+    };
+    let got_scoped = match cluster
+        .router
+        .handle(Request::Instances { graph: "g".into(), query: scoped }, None)
+        .unwrap()
+    {
+        Response::Instances { list, .. } => list,
+        other => panic!("{other:?}"),
+    };
+    assert_eq!(canon(&got_scoped), canon(&want_scoped));
+
+    // samples: per-class seen totals stay exact, every drawn instance is
+    // genuine, and a fixed seed draws the identical sample twice
+    let mut want_seen: BTreeMap<u16, u64> = BTreeMap::new();
+    for (cid, &seen) in want.class_ids.iter().zip(&want.per_class_seen) {
+        want_seen.insert(*cid, seen);
+    }
+    let all: BTreeSet<(Vec<u32>, u16)> = canon(&want).into_iter().collect();
+    let sq = MotifQuery {
+        size,
+        direction,
+        output: Output::Sample { per_class: 4, seed: 9 },
+        ..Default::default()
+    };
+    let draw = || match cluster
+        .router
+        .handle(Request::Sample { graph: "g".into(), query: sq.clone() }, None)
+        .unwrap()
+    {
+        Response::Sampled { sample, .. } => sample,
+        other => panic!("{other:?}"),
+    };
+    let s1 = draw();
+    let s2 = draw();
+    assert_eq!(s1.total_seen, want.total_seen);
+    assert_eq!(s1.classes.len(), s2.classes.len());
+    for (c1, c2) in s1.classes.iter().zip(&s2.classes) {
+        assert_eq!(c1.class_id, c2.class_id);
+        assert_eq!(c1.seen, want_seen.get(&c1.class_id).copied().unwrap_or(0), "m{}", c1.class_id);
+        assert!(c1.instances.len() <= 4, "m{} over-drew", c1.class_id);
+        assert_eq!(c1.instances.len() as u64, c1.seen.min(4), "m{}", c1.class_id);
+        for inst in &c1.instances {
+            assert!(
+                all.contains(&(inst.verts.clone(), c1.class_id)),
+                "sampled non-instance {:?} (m{})",
+                inst.verts,
+                c1.class_id
+            );
+        }
+        // determinism for a fixed seed
+        let v1: Vec<&Vec<u32>> = c1.instances.iter().map(|i| &i.verts).collect();
+        let v2: Vec<&Vec<u32>> = c2.instances.iter().map(|i| &i.verts).collect();
+        assert_eq!(v1, v2, "m{} resampled differently", c1.class_id);
+    }
+}
+
+#[test]
+fn delta_batches_keep_the_cluster_exact_across_rounds() {
+    // k_max 4 so the replicated fringe is radius 3; three sequential
+    // batches exercise the fetch-ball invariant, not just the plan-time
+    // static fringe
+    let g = generators::gnp_undirected(48, 0.09, 21);
+    let n = g.n() as u32;
+    let cluster = Cluster::must_start(&g, "g", 4, 2);
+    let mut oracle = Session::load(&g);
+    let q3 = query(3, Direction::Undirected);
+    let q4 = query(4, Direction::Undirected);
+
+    for round in 0..3u32 {
+        let deltas = delta_batch(n, round);
+        let want = oracle.apply_edges(&deltas).unwrap();
+        let got = match cluster
+            .router
+            .handle(Request::ApplyEdges { graph: "g".into(), deltas: deltas.clone() }, None)
+            .unwrap()
+        {
+            Response::Applied { report, .. } => report,
+            other => panic!("{other:?}"),
+        };
+        // the authoritative accounting matches the oracle exactly: the
+        // owner of each delta's minimal endpoint always has both
+        // endpoints' true adjacency within its fringe (per-shard
+        // touched/re-enumerated tallies are workload metrics, not
+        // merged here)
+        assert_eq!(got.inserted, want.inserted, "round {round}");
+        assert_eq!(got.deleted, want.deleted, "round {round}");
+        assert_eq!(got.skipped_duplicate, want.skipped_duplicate, "round {round}");
+        assert_eq!(got.skipped_missing, want.skipped_missing, "round {round}");
+        assert_eq!(got.skipped_invalid, want.skipped_invalid, "round {round}");
+
+        // post-batch enumeration stays bit-identical, both sizes
+        for q in [&q3, &q4] {
+            let want = oracle.count(q).unwrap();
+            let got = cluster.count(q);
+            assert_eq!(got.per_vertex, want.per_vertex, "round {round} k={}", want.k);
+            assert_eq!(got.total_instances, want.total_instances, "round {round}");
+        }
+    }
+}
+
+#[test]
+fn a_dead_worker_is_a_typed_error_and_healthy_shards_keep_serving() {
+    let g = generators::gnp_undirected(60, 0.08, 13);
+    let oracle = Session::load(&g);
+    let mut cluster = Cluster::must_start(&g, "g", 3, 2);
+    let q = query(3, Direction::Undirected);
+    let want = oracle.count(&q).unwrap();
+    assert_eq!(cluster.count(&q).per_vertex, want.per_vertex, "healthy cluster first");
+
+    let dead = 1usize;
+    let split = cluster.router.plan().shards[0].v_end;
+    cluster.kill(dead);
+
+    // a full count needs every shard: the failure is typed and names the
+    // dead shard — never a wrong or hung answer
+    let err = cluster
+        .router
+        .handle(Request::Count { graph: "g".into(), query: q.clone() }, None)
+        .unwrap_err();
+    let shard_err = err
+        .downcast_ref::<ShardError>()
+        .unwrap_or_else(|| panic!("untyped worker-loss error: {err:#}"));
+    assert_eq!(shard_err.shard, dead, "{shard_err}");
+
+    // rows owned entirely by the surviving shard still serve, exactly
+    let probe: Vec<u32> = vec![0, 1, split.saturating_sub(1)];
+    match cluster
+        .router
+        .handle(
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: q.size,
+                direction: q.direction,
+                scope: Scope::Vertices(probe.clone()),
+            },
+            None,
+        )
+        .unwrap()
+    {
+        Response::VertexRows { rows, .. } => {
+            assert_eq!(rows.len(), probe.len());
+            for r in &rows {
+                assert_eq!(r.counts, want.vertex(r.vertex), "v{}", r.vertex);
+            }
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // rows owned by the dead shard fail typed, and the failure still
+    // names it
+    let err = cluster
+        .router
+        .handle(
+            Request::VertexCounts {
+                graph: "g".into(),
+                size: q.size,
+                direction: q.direction,
+                scope: Scope::Vertices(vec![split]),
+            },
+            None,
+        )
+        .unwrap_err();
+    assert_eq!(err.downcast_ref::<ShardError>().map(|e| e.shard), Some(dead), "{err:#}");
+}
+
+#[test]
+fn a_service_mounted_router_owns_its_plan_graph_and_leaves_the_pool_alone() {
+    let g = generators::gnp_undirected(50, 0.09, 17);
+    let oracle = Session::load(&g);
+    let cluster = Cluster::must_start(&g, "web", 3, 2);
+    // second router over the same live workers, mounted behind a service
+    let router = Router::connect(cluster.router.plan().clone()).unwrap();
+    let svc = VdmcService::with_router(ServiceConfig::default(), router);
+
+    // the plan graph scatters
+    let q = query(3, Direction::Undirected);
+    match svc.handle(Request::Count { graph: "web".into(), query: q.clone() }).unwrap() {
+        Response::Counted { counts, .. } => {
+            assert_eq!(counts.per_vertex, oracle.count(&q).unwrap().per_vertex);
+        }
+        other => panic!("{other:?}"),
+    }
+
+    // non-routable ops naming the plan graph are rejected, not served
+    // from (or loaded into) the local pool
+    for req in [
+        Request::Maintain {
+            graph: "web".into(),
+            size: q.size,
+            direction: q.direction,
+            output: Output::Counts,
+        },
+        Request::Evict { graph: "web".into() },
+        Request::LoadGraph { graph: "web".into(), source: edges_source(&g), directed: false },
+    ] {
+        let op = req.op();
+        assert!(svc.handle(req).is_err(), "{op} on the plan graph must be refused");
+    }
+
+    // other graph ids still serve from the local pool, and ping stays a
+    // plain local answer
+    svc.handle(Request::LoadGraph {
+        graph: "local".into(),
+        source: edges_source(&g),
+        directed: false,
+    })
+    .unwrap();
+    match svc.handle(Request::Count { graph: "local".into(), query: q.clone() }).unwrap() {
+        Response::Counted { counts, .. } => {
+            assert_eq!(counts.total_instances, oracle.count(&q).unwrap().total_instances);
+        }
+        other => panic!("{other:?}"),
+    }
+    match svc.handle(Request::Ping).unwrap() {
+        Response::Pong { shard, .. } => assert_eq!(shard, None),
+        other => panic!("{other:?}"),
+    }
+}
